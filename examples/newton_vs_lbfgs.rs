@@ -1,0 +1,11 @@
+//! The optimizer story of §III-B: trust-region Newton vs L-BFGS on real
+//! per-source problems against the compiled artifacts.
+//!
+//!   make artifacts && cargo run --release --example newton_vs_lbfgs
+
+fn main() -> anyhow::Result<()> {
+    let quick = !std::env::args().any(|a| a == "--full");
+    let v = celeste::experiments::newton_lbfgs::run(quick)?;
+    celeste::experiments::save_result("newton_vs_lbfgs_example", &v)?;
+    Ok(())
+}

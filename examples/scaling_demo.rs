@@ -1,0 +1,17 @@
+//! Scaling demo: the simulated-cluster experiments behind Figs 3–6 —
+//! thread scaling with the serial-GC emulation, then weak and strong
+//! multi-node scaling over the modeled Aries-like fabric.
+//!
+//!   cargo run --release --example scaling_demo [-- --full]
+
+fn main() {
+    let quick = !std::env::args().any(|a| a == "--full");
+    let f3 = celeste::experiments::fig3::run(quick);
+    println!();
+    let f4 = celeste::experiments::fig45::run_weak(quick);
+    println!();
+    let f5 = celeste::experiments::fig45::run_strong(quick);
+    let _ = celeste::experiments::save_result("scaling_demo_fig3", &f3);
+    let _ = celeste::experiments::save_result("scaling_demo_fig4", &f4);
+    let _ = celeste::experiments::save_result("scaling_demo_fig5", &f5);
+}

@@ -1,0 +1,11 @@
+//! Table I reproduction at example scale: Photo vs Celeste on a synthetic
+//! Stripe 82 (30 repeated exposures, saturation injected).
+//!
+//!   make artifacts && cargo run --release --example stripe82_validation
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--full").then_some(false).unwrap_or(true);
+    let v = celeste::experiments::table1::run(quick, 1)?;
+    celeste::experiments::save_result("table1_example", &v)?;
+    Ok(())
+}

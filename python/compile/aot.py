@@ -1,0 +1,151 @@
+"""AOT lowering: jit → StableHLO → XLA HLO *text* + manifest.json.
+
+Run once by `make artifacts`; Python never appears on the inference path.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the rust `xla` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+The manifest records every artifact's signature plus the model constants,
+and the Rust side (`runtime::manifest`) validates both at startup.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+# The paper's Julia implementation computes in double precision; f32
+# artifacts put ~4-nat ELBO differences (star-vs-galaxy at 1e6 scale)
+# below the rounding floor, so we lower everything in f64.
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import constants as C
+from . import model
+from .kernels import mog_render
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is ESSENTIAL: the default elides arrays
+    # >= ~10 elements as "{...}", which xla_extension 0.5.1's text parser
+    # silently reads back as ZEROS (it cost us a day: the COLOR_COEF
+    # constant vanished and the model went color-blind).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float64)
+
+
+def artifact_defs():
+    """name -> (fn, [(arg_name, shape)], [(out_name, shape)])"""
+    B, P, D = C.N_BANDS, C.PATCH, C.DIM
+    patch = (B, P, P)
+    like_args = [
+        ("theta", (D,)),
+        ("pixels", patch),
+        ("bg", patch),
+        ("mask", patch),
+        ("psf", (B, C.K_PSF, C.PSF_PARAMS)),
+        ("gain", (B,)),
+    ]
+    vgh = [("value", ()), ("grad", (D,)), ("hess", (D, D))]
+    return {
+        C.ART_LIKE_AD: (model.like_vgh, like_args, vgh),
+        C.ART_LIKE_PALLAS: (
+            mog_render.like_pallas_vg,
+            like_args,
+            [("value", ()), ("grad", (D,))],
+        ),
+        C.ART_KL: (
+            model.kl_vgh,
+            [("theta", (D,)), ("prior", (C.PRIOR_DIM,))],
+            vgh,
+        ),
+        C.ART_RENDER: (
+            mog_render.render,
+            [("comps", (C.K_GAL, C.COMP_PARAMS))],
+            [("image", (P, P))],
+        ),
+    }
+
+
+def lower_all(out_dir: str, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format": "hlo-text",
+        "constants": {
+            "dim": C.DIM,
+            "prior_dim": C.PRIOR_DIM,
+            "n_bands": C.N_BANDS,
+            "ref_band": C.REF_BAND,
+            "patch": C.PATCH,
+            "k_psf": C.K_PSF,
+            "psf_params": C.PSF_PARAMS,
+            "k_star": C.K_STAR,
+            "k_gal": C.K_GAL,
+            "comp_params": C.COMP_PARAMS,
+            "ridge": C.RIDGE,
+            "shape_prior_pdev": list(C.SHAPE_PRIOR_PDEV),
+            "shape_prior_axis": list(C.SHAPE_PRIOR_AXIS),
+            "shape_prior_scale": list(C.SHAPE_PRIOR_SCALE),
+            "i_a": C.I_A,
+            "i_loc": C.I_LOC,
+            "i_flux_star": C.I_FLUX_STAR,
+            "i_flux_gal": C.I_FLUX_GAL,
+            "i_color_mean_star": C.I_COLOR_MEAN_STAR,
+            "i_color_mean_gal": C.I_COLOR_MEAN_GAL,
+            "i_color_var_star": C.I_COLOR_VAR_STAR,
+            "i_color_var_gal": C.I_COLOR_VAR_GAL,
+            "i_shape": C.I_SHAPE,
+            "profile_exp_amp": list(C.PROFILE_EXP_AMP),
+            "profile_exp_var": list(C.PROFILE_EXP_VAR),
+            "profile_dev_amp": list(C.PROFILE_DEV_AMP),
+            "profile_dev_var": list(C.PROFILE_DEV_VAR),
+            "color_coef": [list(r) for r in C.COLOR_COEF],
+        },
+        "artifacts": {},
+    }
+    for name, (fn, args, outs) in artifact_defs().items():
+        specs = [_spec(*shape) for _, shape in args]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [
+                {"name": n, "shape": list(s), "dtype": "f64"} for n, s in args
+            ],
+            "outputs": [
+                {"name": n, "shape": list(s), "dtype": "f64"} for n, s in outs
+            ],
+        }
+        if verbose:
+            print(f"lowered {name}: {len(text)} chars -> {fname}")
+    with open(os.path.join(out_dir, C.MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"wrote {C.MANIFEST} ({len(manifest['artifacts'])} artifacts)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args()
+    lower_all(args.out, verbose=not args.quiet)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Model constants shared by the L1 kernels, L2 model, AOT lowering, and
+(via artifacts/manifest.json) the Rust coordinator.
+
+The single source of truth for shapes and the variational-parameter layout.
+Mirrored on the Rust side by `rust/src/model/layout.rs`; `aot.py` emits
+`manifest.json` from these values and the Rust side asserts agreement at
+startup, so the two can never drift silently.
+"""
+
+# ---------------------------------------------------------------------------
+# Image geometry
+# ---------------------------------------------------------------------------
+
+#: Number of filter bands (SDSS ugriz).
+N_BANDS = 5
+
+#: Index of the reference band (SDSS r-band) for brightness.
+REF_BAND = 2
+
+#: Patch height/width in pixels. Every light source is optimized against
+#: fixed-size patches cut from each field that contains it.
+PATCH = 32
+
+# ---------------------------------------------------------------------------
+# PSF / galaxy mixture structure
+# ---------------------------------------------------------------------------
+
+#: Gaussian components in the per-band PSF model.
+K_PSF = 2
+
+#: Parameters per PSF component: (weight, dx, dy, cxx, cxy, cyy) where c* is
+#: the covariance of the component and (dx, dy) its offset from the source
+#: center (models PSF asymmetry).
+PSF_PARAMS = 6
+
+#: Gaussian components per galaxy radial profile (exponential / de Vauc.).
+K_PROFILE = 4
+
+#: Effective star components per band: the PSF itself.
+K_STAR = K_PSF
+
+#: Effective galaxy components per band: (exp 4 + deV 4) profile components,
+#: each convolved with each PSF component.
+K_GAL = 2 * K_PROFILE * K_PSF
+
+#: Parameters per *effective* (post-convolution) Gaussian component:
+#: (w, mx, my, p00, p01, p11) — weight with normalization folded in, mean,
+#: and precision-matrix entries.
+COMP_PARAMS = 6
+
+# Mixture-of-Gaussians approximations of the two canonical galaxy radial
+# profiles, as (amplitude, variance) pairs in units of the half-light
+# radius squared. Four components each (compact table in the spirit of
+# Hogg & Lang 2013). Amplitudes sum to 1.
+PROFILE_EXP_AMP = (0.30, 0.40, 0.25, 0.05)
+PROFILE_EXP_VAR = (0.12, 0.50, 1.30, 3.00)
+PROFILE_DEV_AMP = (0.35, 0.35, 0.20, 0.10)
+PROFILE_DEV_VAR = (0.03, 0.25, 1.20, 6.00)
+
+# ---------------------------------------------------------------------------
+# Variational parameter vector θ (per light source)
+# ---------------------------------------------------------------------------
+# All entries are unconstrained reals; constrained quantities go through
+# sigmoid / exp transforms inside the model. The paper uses 32 entries per
+# source; our reduced color/shape layout yields 27 with identical structure
+# (Bernoulli type, lognormal flux, MVN colors, non-random location+shape).
+
+#: logit of q(a_s = galaxy)
+I_A = 0
+#: location offset (du, dv) in pixels from the patch center
+I_LOC = 1
+#: star flux: (mean, log-variance) of q(log r | star)
+I_FLUX_STAR = 3
+#: galaxy flux: (mean, log-variance) of q(log r | galaxy)
+I_FLUX_GAL = 5
+#: star color means, 4 entries
+I_COLOR_MEAN_STAR = 7
+#: galaxy color means, 4 entries
+I_COLOR_MEAN_GAL = 11
+#: star color log-variances, 4 entries
+I_COLOR_VAR_STAR = 15
+#: galaxy color log-variances, 4 entries
+I_COLOR_VAR_GAL = 19
+#: galaxy shape: (logit deV-mixture, logit axis-ratio, angle, log scale)
+I_SHAPE = 23
+
+#: total θ dimension
+DIM = 27
+
+#: number of colors = N_BANDS - 1
+N_COLORS = 4
+
+# ---------------------------------------------------------------------------
+# Prior vector layout (21 entries), passed to the KL artifact
+# ---------------------------------------------------------------------------
+P_A = 0                # prior probability of galaxy
+P_FLUX_STAR = 1        # (mean, variance) of log r | star
+P_FLUX_GAL = 3         # (mean, variance) of log r | galaxy
+P_COLOR_MEAN_STAR = 5  # 4 entries
+P_COLOR_MEAN_GAL = 9   # 4 entries
+P_COLOR_VAR_STAR = 13  # 4 entries
+P_COLOR_VAR_GAL = 17   # 4 entries
+PRIOR_DIM = 21
+
+#: ridge regularizer applied (in the KL term) to the location and angle
+#: entries, keeping the per-source Hessian positive-definite even when q(a)
+#: collapses to "star" and the data carries no shape information.
+RIDGE = 1e-4
+
+# Gaussian (negative-log-)priors on the point-estimated galaxy shape
+# parameters, weighted by q(a = galaxy). Without these the model is
+# degenerate: a galaxy shrunk to zero scale is indistinguishable from a
+# star, so q(a) drifts arbitrarily. (Real Celeste likewise places priors
+# on galaxy shape.) Tuples are (mean, variance) in the unconstrained
+# parameterization.
+SHAPE_PRIOR_PDEV = (0.0, 4.0)     # logit of the deV mixture weight
+SHAPE_PRIOR_AXIS = (0.0, 4.0)     # logit of the axis ratio
+SHAPE_PRIOR_SCALE = (0.5, 0.25)    # log of the half-light radius (px)
+
+# ---------------------------------------------------------------------------
+# Band flux mapping: log l_b = log r + COLOR_COEF[b] . c,
+# with colors c_i = log(l_{i+1} / l_i) and reference band REF_BAND.
+# ---------------------------------------------------------------------------
+COLOR_COEF = (
+    (-1.0, -1.0, 0.0, 0.0),
+    (0.0, -1.0, 0.0, 0.0),
+    (0.0, 0.0, 0.0, 0.0),
+    (0.0, 0.0, 1.0, 0.0),
+    (0.0, 0.0, 1.0, 1.0),
+)
+
+#: Artifact names (basenames under artifacts/).
+ART_LIKE_AD = "like_ad"
+ART_LIKE_PALLAS = "like_pallas"
+ART_KL = "kl"
+ART_RENDER = "render_pallas"
+MANIFEST = "manifest.json"

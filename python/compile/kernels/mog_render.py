@@ -1,0 +1,280 @@
+"""L1: Pallas kernels for the Celeste pixel hot spot.
+
+The inner loop of Celeste evaluates a Gaussian-mixture rate image and the
+expected Poisson log-likelihood (plus its gradient) over a pixel patch.
+Following the paper, the gradient here is *manually derived* — autodiff
+cannot differentiate through `pallas_call`, and the paper itself computes
+gradients by hand for performance (§III-B).
+
+TPU mapping (DESIGN.md §5): the component table (K x 6) stays resident in
+VMEM across the whole grid while BlockSpec streams row-blocks of the patch
+HBM->VMEM; per-pixel work is VPU element-wise + small reductions. Kernels
+are lowered with interpret=True (CPU PJRT cannot execute Mosaic calls).
+
+Validated against `ref.py` by `python/tests/test_kernels.py`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import constants as C
+
+#: rows per grid step (VMEM tile height)
+TILE_H = 8
+
+
+def _tile_coords(tile_h, w, dtype):
+    """Pixel-center coordinates of the current row tile."""
+    row0 = pl.program_id(0) * tile_h
+    ys = jax.lax.broadcasted_iota(dtype, (tile_h, w), 0) + (row0 + 0.5)
+    xs = jax.lax.broadcasted_iota(dtype, (tile_h, w), 1) + 0.5
+    return xs, ys
+
+
+def _mixture(comps, xs, ys):
+    """Evaluate every component on the tile.
+
+    comps: (K, 6); returns (es (K,th,w) per-comp exp term, g (th,w) sum,
+    dx, dy (K,th,w) offsets) — the pieces the manual gradient reuses.
+    """
+    w = comps[:, 0][:, None, None]
+    dx = xs[None] - comps[:, 1][:, None, None]
+    dy = ys[None] - comps[:, 2][:, None, None]
+    q = (
+        comps[:, 3][:, None, None] * dx * dx
+        + 2.0 * comps[:, 4][:, None, None] * dx * dy
+        + comps[:, 5][:, None, None] * dy * dy
+    )
+    es = jnp.exp(-0.5 * q)
+    g = jnp.sum(w * es, axis=0)
+    return es, g, dx, dy
+
+
+# ---------------------------------------------------------------------------
+# Kernel 1: standalone MoG render (rate image)
+# ---------------------------------------------------------------------------
+
+def _render_kernel(comps_ref, out_ref):
+    xs, ys = _tile_coords(out_ref.shape[0], out_ref.shape[1], out_ref.dtype)
+    _, g, _, _ = _mixture(comps_ref[...], xs, ys)
+    out_ref[...] = g
+
+
+def render(comps, h=C.PATCH, w=C.PATCH):
+    """Render a (K, 6) effective-component mixture to an (h, w) image."""
+    k = comps.shape[0]
+    return pl.pallas_call(
+        _render_kernel,
+        grid=(h // TILE_H,),
+        in_specs=[pl.BlockSpec((k, C.COMP_PARAMS), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((TILE_H, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), comps.dtype),
+        interpret=True,
+    )(comps)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 2: fused expected-Poisson log-likelihood, value only
+# ---------------------------------------------------------------------------
+
+def _pixel_terms(gs, gg, bg, scal):
+    """ef, u, varf, elogf for a tile (mirrors ref.expected_pixel_terms)."""
+    u = scal[0] * gs + scal[1] * gg
+    ef = bg + u
+    ex2 = scal[2] * gs * gs + scal[3] * gg * gg
+    varf = jnp.maximum(ex2 - u * u, 0.0)
+    elogf = jnp.log(ef) - varf / (2.0 * ef * ef)
+    return ef, u, varf, elogf
+
+
+def _like_kernel(pix_ref, bg_ref, mask_ref, cs_ref, cg_ref, scal_ref, ll_ref):
+    xs, ys = _tile_coords(pix_ref.shape[0], pix_ref.shape[1], pix_ref.dtype)
+    _, gs, _, _ = _mixture(cs_ref[...], xs, ys)
+    _, gg, _, _ = _mixture(cg_ref[...], xs, ys)
+    scal = scal_ref[0, :]
+    ef, _, _, elogf = _pixel_terms(gs, gg, bg_ref[...], scal)
+    part = jnp.sum(mask_ref[...] * (pix_ref[...] * elogf - ef))
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        ll_ref[...] = jnp.zeros_like(ll_ref)
+
+    ll_ref[0, 0] += part
+
+
+def like_band(pixels, bg, mask, comps_s, comps_g, scal):
+    """Masked expected Poisson log-likelihood of one band (value only)."""
+    h, w = pixels.shape
+    ks, kg = comps_s.shape[0], comps_g.shape[0]
+    full = lambda i: (0, 0)
+    tile = lambda i: (i, 0)
+    out = pl.pallas_call(
+        _like_kernel,
+        grid=(h // TILE_H,),
+        in_specs=[
+            pl.BlockSpec((TILE_H, w), tile),
+            pl.BlockSpec((TILE_H, w), tile),
+            pl.BlockSpec((TILE_H, w), tile),
+            pl.BlockSpec((ks, C.COMP_PARAMS), full),
+            pl.BlockSpec((kg, C.COMP_PARAMS), full),
+            pl.BlockSpec((1, 6), full),
+        ],
+        out_specs=pl.BlockSpec((1, 1), full),
+        out_shape=jax.ShapeDtypeStruct((1, 1), pixels.dtype),
+        interpret=True,
+    )(pixels, bg, mask, comps_s, comps_g, scal.reshape(1, 6))
+    return out[0, 0]
+
+
+# ---------------------------------------------------------------------------
+# Kernel 3: fused likelihood + manual gradient
+# ---------------------------------------------------------------------------
+
+def _comp_cotangents(dg, comps, es, dx, dy):
+    """Chain a per-pixel cotangent dg = dll/dg(m) to the component params.
+
+    Returns (K, 6) cotangents for (w, mx, my, p00, p01, p11).
+    For g = sum_k w_k exp(-q_k/2), q_k = p00 dx^2 + 2 p01 dx dy + p11 dy^2:
+      dg/dw_k  = e_k
+      dg/dmx_k = w_k e_k (p00 dx + p01 dy)      (d dx/dmx = -1 cancels -1/2*2)
+      dg/dmy_k = w_k e_k (p01 dx + p11 dy)
+      dg/dp00  = -w_k e_k dx^2 / 2
+      dg/dp01  = -w_k e_k dx dy
+      dg/dp11  = -w_k e_k dy^2 / 2
+    """
+    w = comps[:, 0][:, None, None]
+    p00 = comps[:, 3][:, None, None]
+    p01 = comps[:, 4][:, None, None]
+    p11 = comps[:, 5][:, None, None]
+    dge = dg[None] * es
+    pref = dge * w
+    dw = jnp.sum(dge, axis=(1, 2))
+    dmx = jnp.sum(pref * (p00 * dx + p01 * dy), axis=(1, 2))
+    dmy = jnp.sum(pref * (p01 * dx + p11 * dy), axis=(1, 2))
+    dp00 = jnp.sum(pref * (-0.5 * dx * dx), axis=(1, 2))
+    dp01 = jnp.sum(pref * (-dx * dy), axis=(1, 2))
+    dp11 = jnp.sum(pref * (-0.5 * dy * dy), axis=(1, 2))
+    return jnp.stack([dw, dmx, dmy, dp00, dp01, dp11], axis=-1)
+
+
+def _like_grad_kernel(
+    pix_ref, bg_ref, mask_ref, cs_ref, cg_ref, scal_ref,
+    ll_ref, dcs_ref, dcg_ref, dscal_ref,
+):
+    xs, ys = _tile_coords(pix_ref.shape[0], pix_ref.shape[1], pix_ref.dtype)
+    cs, cg = cs_ref[...], cg_ref[...]
+    es_s, gs, dx_s, dy_s = _mixture(cs, xs, ys)
+    es_g, gg, dx_g, dy_g = _mixture(cg, xs, ys)
+    scal = scal_ref[0, :]
+    pix, bg, mask = pix_ref[...], bg_ref[...], mask_ref[...]
+
+    ef, u, varf, elogf = _pixel_terms(gs, gg, bg, scal)
+    ll = jnp.sum(mask * (pix * elogf - ef))
+
+    # ll = sum mask*(x*elogf - ef); elogf = log ef - varf/(2 ef^2).
+    # For a partial dxi: dll = sum c1 * def + c2 * dvarf, with
+    #   c1 = mask*x*(1/ef + varf/ef^3) - mask,  c2 = -mask*x/(2 ef^2).
+    a = mask * pix
+    inv_ef = 1.0 / ef
+    c1 = a * (inv_ef + varf * inv_ef * inv_ef * inv_ef) - mask
+    c2 = -0.5 * a * inv_ef * inv_ef
+    # ef = bg + s0 gs + s1 gg; varf = s2 gs^2 + s3 gg^2 - u^2.
+    dgs = c1 * scal[0] + c2 * (2.0 * scal[2] * gs - 2.0 * u * scal[0])
+    dgg = c1 * scal[1] + c2 * (2.0 * scal[3] * gg - 2.0 * u * scal[1])
+    c12u = c1 - 2.0 * u * c2
+    ds0 = jnp.sum(gs * c12u)
+    ds1 = jnp.sum(gg * c12u)
+    ds2 = jnp.sum(c2 * gs * gs)
+    ds3 = jnp.sum(c2 * gg * gg)
+    zero = jnp.zeros_like(ds0)
+    dscal = jnp.stack([ds0, ds1, ds2, ds3, zero, zero]).reshape(1, 6)
+
+    dcs = _comp_cotangents(dgs, cs, es_s, dx_s, dy_s)
+    dcg = _comp_cotangents(dgg, cg, es_g, dx_g, dy_g)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        ll_ref[...] = jnp.zeros_like(ll_ref)
+        dcs_ref[...] = jnp.zeros_like(dcs_ref)
+        dcg_ref[...] = jnp.zeros_like(dcg_ref)
+        dscal_ref[...] = jnp.zeros_like(dscal_ref)
+
+    ll_ref[0, 0] += ll
+    dcs_ref[...] += dcs
+    dcg_ref[...] += dcg
+    dscal_ref[...] += dscal
+
+
+def like_grad_band(pixels, bg, mask, comps_s, comps_g, scal):
+    """One band's likelihood value plus manual cotangents w.r.t. the
+    effective components and moment scalars.
+
+    Returns (ll, dcomps_s (Ks,6), dcomps_g (Kg,6), dscal (6,)).
+    """
+    h, w = pixels.shape
+    ks, kg = comps_s.shape[0], comps_g.shape[0]
+    dt = pixels.dtype
+    full = lambda i: (0, 0)
+    tile = lambda i: (i, 0)
+    ll, dcs, dcg, dscal = pl.pallas_call(
+        _like_grad_kernel,
+        grid=(h // TILE_H,),
+        in_specs=[
+            pl.BlockSpec((TILE_H, w), tile),
+            pl.BlockSpec((TILE_H, w), tile),
+            pl.BlockSpec((TILE_H, w), tile),
+            pl.BlockSpec((ks, C.COMP_PARAMS), full),
+            pl.BlockSpec((kg, C.COMP_PARAMS), full),
+            pl.BlockSpec((1, 6), full),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), full),
+            pl.BlockSpec((ks, C.COMP_PARAMS), full),
+            pl.BlockSpec((kg, C.COMP_PARAMS), full),
+            pl.BlockSpec((1, 6), full),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 1), dt),
+            jax.ShapeDtypeStruct((ks, C.COMP_PARAMS), dt),
+            jax.ShapeDtypeStruct((kg, C.COMP_PARAMS), dt),
+            jax.ShapeDtypeStruct((1, 6), dt),
+        ],
+        interpret=True,
+    )(pixels, bg, mask, comps_s, comps_g, scal.reshape(1, 6))
+    return ll[0, 0], dcs, dcg, dscal[0, :]
+
+
+# ---------------------------------------------------------------------------
+# Full manual value+gradient over theta (the like_pallas artifact body)
+# ---------------------------------------------------------------------------
+
+def like_pallas_vg(theta, pixels, bg, mask, psf, gain):
+    """(value, grad) of elbo_like with the Pallas manual-gradient path.
+
+    The theta -> (components, scalars) map is tiny, differentiable jnp; its
+    VJP chains the kernel's manual cotangents back to theta. The per-pixel
+    work — the actual hot spot — never touches autodiff.
+    """
+    from .. import model  # deferred: model imports ref, not us
+
+    prim, vjp_fn = jax.vjp(
+        lambda th: model.build_inputs(th, psf, gain), theta
+    )
+    comps_s, comps_g, scal = prim
+
+    ll = jnp.asarray(0.0, theta.dtype)
+    dcs, dcg, dscal = [], [], []
+    for b in range(C.N_BANDS):
+        llb, dcs_b, dcg_b, dscal_b = like_grad_band(
+            pixels[b], bg[b], mask[b], comps_s[b], comps_g[b], scal[b]
+        )
+        ll = ll + llb
+        dcs.append(dcs_b)
+        dcg.append(dcg_b)
+        dscal.append(dscal_b)
+
+    (grad,) = vjp_fn((jnp.stack(dcs), jnp.stack(dcg), jnp.stack(dscal)))
+    return ll, grad

@@ -1,0 +1,82 @@
+"""Pure-jnp reference implementations (the correctness oracle).
+
+Everything here is differentiable jnp code: the L2 model builds its
+autodiff artifact on these functions, and the Pallas kernels in
+`mog_render.py` are validated against them by pytest/hypothesis.
+"""
+
+import jax.numpy as jnp
+
+from .. import constants as C
+
+
+def pixel_grid(h, w, dtype=jnp.float32):
+    """Pixel-center coordinates of an h x w patch: two (h, w) arrays.
+
+    Pixel (i, j) has center (j + 0.5, i + 0.5) in (x, y) = (col, row)
+    convention, matching the Rust renderer (`imaging::render`).
+    """
+    ys = (jnp.arange(h, dtype=dtype) + 0.5)[:, None] * jnp.ones((1, w), dtype)
+    xs = (jnp.arange(w, dtype=dtype) + 0.5)[None, :] * jnp.ones((h, 1), dtype)
+    return xs, ys
+
+
+def mog_eval(comps, h=C.PATCH, w=C.PATCH):
+    """Evaluate a Gaussian mixture on a pixel grid.
+
+    comps: (K, 6) rows (w_eff, mx, my, p00, p01, p11) — weight with the
+    1/(2*pi*sqrt(det V)) normalization already folded in, mean, precision.
+    Returns (h, w) mixture density (flux per unit pixel area).
+    """
+    xs, ys = pixel_grid(h, w, comps.dtype)
+    dx = xs[None] - comps[:, 1][:, None, None]
+    dy = ys[None] - comps[:, 2][:, None, None]
+    q = (
+        comps[:, 3][:, None, None] * dx * dx
+        + 2.0 * comps[:, 4][:, None, None] * dx * dy
+        + comps[:, 5][:, None, None] * dy * dy
+    )
+    return jnp.sum(comps[:, 0][:, None, None] * jnp.exp(-0.5 * q), axis=0)
+
+
+def band_loglum_moments(flux_mean, flux_var, color_mean, color_var):
+    """Per-band first/second moments of the (lognormal) band luminosity.
+
+    log l_b = log r + COLOR_COEF[b] . c  is normal with
+      m_b = flux_mean + A_b . color_mean
+      v_b = flux_var  + |A_b| . color_var     (A entries are in {-1, 0, 1})
+    Returns (m1, m2): E[l_b] and E[l_b^2], each shape (N_BANDS,).
+    """
+    a = jnp.asarray(C.COLOR_COEF, dtype=flux_mean.dtype)
+    m = flux_mean + a @ color_mean
+    v = flux_var + jnp.abs(a) @ color_var
+    m1 = jnp.exp(m + 0.5 * v)
+    m2 = jnp.exp(2.0 * m + 2.0 * v)
+    return m1, m2
+
+
+def expected_pixel_terms(gs, gg, bg, scal):
+    """Per-pixel E[F], E[log F] under the variational distribution.
+
+    gs, gg: (h, w) star/galaxy spatial mixtures for one band.
+    bg:     (h, w) background rate (sky + fixed neighbors), > 0.
+    scal:   (6,) = (gamma_star*m1s, gamma_gal*m1g,
+                    gamma_star*m2s, gamma_gal*m2g, unused, unused)
+            premultiplied moment scalars for this band.
+    Uses the second-order delta approximation
+      E[log F] ~= log E[F] - Var[F] / (2 E[F]^2).
+    Returns (ef, elogf).
+    """
+    u = scal[0] * gs + scal[1] * gg
+    ef = bg + u
+    ex2 = scal[2] * gs * gs + scal[3] * gg * gg
+    varf = jnp.maximum(ex2 - u * u, 0.0)
+    elogf = jnp.log(ef) - varf / (2.0 * ef * ef)
+    return ef, elogf
+
+
+def poisson_elbo_band(pixels, bg, mask, gs, gg, scal):
+    """Masked Poisson expected log-likelihood for one band (constants
+    -log x! dropped; they do not depend on the parameters)."""
+    ef, elogf = expected_pixel_terms(gs, gg, bg, scal)
+    return jnp.sum(mask * (pixels * elogf - ef))

@@ -1,0 +1,280 @@
+"""L2: the Celeste model — variational ELBO over the per-source parameters.
+
+This module is pure, differentiable jnp (the Pallas fast path lives in
+`kernels/mog_render.py` and is validated against this code). It is executed
+only at build time: `aot.py` lowers the jitted value/grad/Hessian functions
+to HLO text which the Rust coordinator loads through PJRT.
+
+Model summary (paper §III-A):
+  x_nmb ~ Poisson(F_nmb),
+  F_nmb = bg_nmb + gain_b * l_b(r_s, c_s) * g_{a_s,b}(m; mu_s, phi_s),
+with a_s ~ Bernoulli (star/galaxy), log r_s ~ Normal, colors c_s ~ Normal,
+and g the PSF (star) or the PSF-convolved galaxy mixture (galaxy).
+
+Variational family (paper §III-B): q(a) Bernoulli, q(log r | a) Normal,
+q(c | a) diagonal Normal; location and shape are point-estimated. The
+resulting ELBO = E_q[log p(x|z)] - KL(q || prior) is analytic given the
+second-order delta approximation of E[log F] (see kernels/ref.py).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import constants as C
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Parameter transforms
+# ---------------------------------------------------------------------------
+
+def sigmoid(x):
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+def unpack(theta):
+    """Split the unconstrained theta vector into named constrained pieces."""
+    return {
+        "gamma_gal": sigmoid(theta[C.I_A]),
+        "loc": theta[C.I_LOC : C.I_LOC + 2],
+        "flux_star": (theta[C.I_FLUX_STAR], jnp.exp(theta[C.I_FLUX_STAR + 1])),
+        "flux_gal": (theta[C.I_FLUX_GAL], jnp.exp(theta[C.I_FLUX_GAL + 1])),
+        "color_mean_star": theta[C.I_COLOR_MEAN_STAR : C.I_COLOR_MEAN_STAR + 4],
+        "color_mean_gal": theta[C.I_COLOR_MEAN_GAL : C.I_COLOR_MEAN_GAL + 4],
+        "color_var_star": jnp.exp(theta[C.I_COLOR_VAR_STAR : C.I_COLOR_VAR_STAR + 4]),
+        "color_var_gal": jnp.exp(theta[C.I_COLOR_VAR_GAL : C.I_COLOR_VAR_GAL + 4]),
+        "p_dev": sigmoid(theta[C.I_SHAPE]),
+        "axis_ratio": sigmoid(theta[C.I_SHAPE + 1]),
+        "angle": theta[C.I_SHAPE + 2],
+        "log_scale": theta[C.I_SHAPE + 3],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Effective Gaussian components
+# ---------------------------------------------------------------------------
+
+def _fold_norm(w, cxx, cxy, cyy):
+    """Fold the bivariate-normal normalization into the weight and invert
+    the covariance. Returns (w_eff, p00, p01, p11)."""
+    det = cxx * cyy - cxy * cxy
+    w_eff = w / (2.0 * jnp.pi * jnp.sqrt(det))
+    p00 = cyy / det
+    p01 = -cxy / det
+    p11 = cxx / det
+    return w_eff, p00, p01, p11
+
+
+def star_comps_band(center, psf_b):
+    """Star components for one band: the PSF translated to the source.
+
+    psf_b: (K_PSF, 6) rows (w, dx, dy, cxx, cxy, cyy). Returns (K_STAR, 6)
+    effective rows (w_eff, mx, my, p00, p01, p11).
+    """
+    w, dx, dy = psf_b[:, 0], psf_b[:, 1], psf_b[:, 2]
+    cxx, cxy, cyy = psf_b[:, 3], psf_b[:, 4], psf_b[:, 5]
+    w_eff, p00, p01, p11 = _fold_norm(w, cxx, cxy, cyy)
+    return jnp.stack(
+        [w_eff, center[0] + dx, center[1] + dy, p00, p01, p11], axis=-1
+    )
+
+
+def galaxy_base_cov(axis_ratio, angle, scale):
+    """Unit-profile galaxy covariance: scale^2 R diag(1, q^2) R^T."""
+    c, s = jnp.cos(angle), jnp.sin(angle)
+    s1 = scale * scale
+    s2 = s1 * axis_ratio * axis_ratio
+    vxx = c * c * s1 + s * s * s2
+    vyy = s * s * s1 + c * c * s2
+    vxy = c * s * (s1 - s2)
+    return vxx, vxy, vyy
+
+
+def galaxy_comps_band(center, psf_b, p_dev, axis_ratio, angle, scale):
+    """Galaxy components for one band: each (profile comp) x (PSF comp),
+    convolved analytically. Returns (K_GAL, 6) effective rows."""
+    amp_e = jnp.asarray(C.PROFILE_EXP_AMP, psf_b.dtype) * (1.0 - p_dev)
+    amp_d = jnp.asarray(C.PROFILE_DEV_AMP, psf_b.dtype) * p_dev
+    var = jnp.concatenate(
+        [
+            jnp.asarray(C.PROFILE_EXP_VAR, psf_b.dtype),
+            jnp.asarray(C.PROFILE_DEV_VAR, psf_b.dtype),
+        ]
+    )
+    amp = jnp.concatenate([amp_e, amp_d])  # (2*K_PROFILE,)
+    vxx, vxy, vyy = galaxy_base_cov(axis_ratio, angle, scale)
+
+    # Broadcast profile (i) against PSF (j): covariance var_i*V + C_j.
+    w = amp[:, None] * psf_b[None, :, 0]
+    cxx = var[:, None] * vxx + psf_b[None, :, 3]
+    cxy = var[:, None] * vxy + psf_b[None, :, 4]
+    cyy = var[:, None] * vyy + psf_b[None, :, 5]
+    mx = center[0] + psf_b[None, :, 1] + jnp.zeros_like(w)
+    my = center[1] + psf_b[None, :, 2] + jnp.zeros_like(w)
+    w_eff, p00, p01, p11 = _fold_norm(w, cxx, cxy, cyy)
+    comps = jnp.stack([w_eff, mx, my, p00, p01, p11], axis=-1)
+    return comps.reshape(C.K_GAL, C.COMP_PARAMS)
+
+
+def build_inputs(theta, psf, gain):
+    """theta -> (comps_star (B,Ks,6), comps_gal (B,Kg,6), scal (B,6)).
+
+    scal rows are the premultiplied per-band moment scalars consumed by
+    `ref.expected_pixel_terms` / the Pallas kernel:
+      (gam_s*gain*m1s, gam_g*gain*m1g, gam_s*gain^2*m2s, gam_g*gain^2*m2g, 0, 0).
+    """
+    p = unpack(theta)
+    center = jnp.asarray([C.PATCH / 2.0, C.PATCH / 2.0], theta.dtype) + p["loc"]
+    scale = jnp.exp(p["log_scale"])
+
+    comps_s = jnp.stack(
+        [star_comps_band(center, psf[b]) for b in range(C.N_BANDS)]
+    )
+    comps_g = jnp.stack(
+        [
+            galaxy_comps_band(
+                center, psf[b], p["p_dev"], p["axis_ratio"], p["angle"], scale
+            )
+            for b in range(C.N_BANDS)
+        ]
+    )
+
+    m1s, m2s = ref.band_loglum_moments(
+        p["flux_star"][0], p["flux_star"][1],
+        p["color_mean_star"], p["color_var_star"],
+    )
+    m1g, m2g = ref.band_loglum_moments(
+        p["flux_gal"][0], p["flux_gal"][1],
+        p["color_mean_gal"], p["color_var_gal"],
+    )
+    gam_g = p["gamma_gal"]
+    gam_s = 1.0 - gam_g
+    zero = jnp.zeros_like(m1s)
+    scal = jnp.stack(
+        [
+            gam_s * gain * m1s,
+            gam_g * gain * m1g,
+            gam_s * gain * gain * m2s,
+            gam_g * gain * gain * m2g,
+            zero,
+            zero,
+        ],
+        axis=-1,
+    )
+    return comps_s, comps_g, scal
+
+
+# ---------------------------------------------------------------------------
+# ELBO pieces
+# ---------------------------------------------------------------------------
+
+def elbo_like(theta, pixels, bg, mask, psf, gain):
+    """Expected Poisson log-likelihood of one 5-band patch (one epoch).
+
+    pixels/bg/mask: (N_BANDS, PATCH, PATCH); psf: (N_BANDS, K_PSF, 6);
+    gain: (N_BANDS,). Additive across epochs — the Rust coordinator sums
+    value/grad/Hessian over every field that contains the source.
+    """
+    comps_s, comps_g, scal = build_inputs(theta, psf, gain)
+    total = jnp.asarray(0.0, theta.dtype)
+    for b in range(C.N_BANDS):
+        gs = ref.mog_eval(comps_s[b])
+        gg = ref.mog_eval(comps_g[b])
+        total = total + ref.poisson_elbo_band(
+            pixels[b], bg[b], mask[b], gs, gg, scal[b]
+        )
+    return total
+
+
+def _kl_normal(mq, vq, mp, vp):
+    """KL(N(mq, vq) || N(mp, vp)); also the lognormal KL of the exps."""
+    return 0.5 * (jnp.log(vp / vq) + (vq + (mq - mp) ** 2) / vp - 1.0)
+
+
+def elbo_kl(theta, prior):
+    """KL(q || prior) for one source, plus the ridge on location/shape.
+
+    For the factored family the joint KL decomposes exactly:
+      KL = KL_a + sum_t q(a=t) * (KL_{r|t} + KL_{c|t}).
+    """
+    p = unpack(theta)
+    gam_g = p["gamma_gal"]
+    gam_s = 1.0 - gam_g
+    pg = prior[C.P_A]
+
+    eps = jnp.asarray(1e-12, theta.dtype)
+    kl_a = gam_g * jnp.log(gam_g / pg + eps) + gam_s * jnp.log(
+        gam_s / (1.0 - pg) + eps
+    )
+
+    kl_r_star = _kl_normal(
+        p["flux_star"][0], p["flux_star"][1],
+        prior[C.P_FLUX_STAR], prior[C.P_FLUX_STAR + 1],
+    )
+    kl_r_gal = _kl_normal(
+        p["flux_gal"][0], p["flux_gal"][1],
+        prior[C.P_FLUX_GAL], prior[C.P_FLUX_GAL + 1],
+    )
+    kl_c_star = jnp.sum(
+        _kl_normal(
+            p["color_mean_star"], p["color_var_star"],
+            prior[C.P_COLOR_MEAN_STAR : C.P_COLOR_MEAN_STAR + 4],
+            prior[C.P_COLOR_VAR_STAR : C.P_COLOR_VAR_STAR + 4],
+        )
+    )
+    kl_c_gal = jnp.sum(
+        _kl_normal(
+            p["color_mean_gal"], p["color_var_gal"],
+            prior[C.P_COLOR_MEAN_GAL : C.P_COLOR_MEAN_GAL + 4],
+            prior[C.P_COLOR_VAR_GAL : C.P_COLOR_VAR_GAL + 4],
+        )
+    )
+
+    ridge_dims = jnp.concatenate(
+        [theta[C.I_LOC : C.I_LOC + 2], theta[C.I_SHAPE : C.I_SHAPE + 4]]
+    )
+    ridge = 0.5 * C.RIDGE * jnp.sum(ridge_dims**2)
+
+    # galaxy-shape prior (negative log density, constants dropped),
+    # weighted by q(a = galaxy) — see constants.SHAPE_PRIOR_*.
+    def nlp(x, mv):
+        return 0.5 * (x - mv[0]) ** 2 / mv[1]
+
+    shape_prior = gam_g * (
+        nlp(theta[C.I_SHAPE], C.SHAPE_PRIOR_PDEV)
+        + nlp(theta[C.I_SHAPE + 1], C.SHAPE_PRIOR_AXIS)
+        + nlp(theta[C.I_SHAPE + 3], C.SHAPE_PRIOR_SCALE)
+    )
+
+    return (
+        kl_a
+        + gam_s * (kl_r_star + kl_c_star)
+        + gam_g * (kl_r_gal + kl_c_gal)
+        + ridge
+        + shape_prior
+    )
+
+
+def elbo(theta, pixels, bg, mask, psf, gain, prior):
+    """Full single-epoch ELBO (used in tests; Rust composes the pieces)."""
+    return elbo_like(theta, pixels, bg, mask, psf, gain) - elbo_kl(theta, prior)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points: value + gradient + Hessian
+# ---------------------------------------------------------------------------
+
+def like_vgh(theta, pixels, bg, mask, psf, gain):
+    """(value, grad, hess) of elbo_like at theta — the autodiff artifact."""
+    f = elbo_like(theta, pixels, bg, mask, psf, gain)
+    g = jax.grad(elbo_like)(theta, pixels, bg, mask, psf, gain)
+    h = jax.hessian(elbo_like)(theta, pixels, bg, mask, psf, gain)
+    return f, g, h
+
+
+def kl_vgh(theta, prior):
+    """(value, grad, hess) of elbo_kl at theta."""
+    f = elbo_kl(theta, prior)
+    g = jax.grad(elbo_kl)(theta, prior)
+    h = jax.hessian(elbo_kl)(theta, prior)
+    return f, g, h

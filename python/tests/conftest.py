@@ -1,0 +1,78 @@
+"""Shared fixtures: synthetic patches drawn from the generative model."""
+
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile import constants as C  # noqa: E402
+
+
+def default_psf(dtype=np.float32):
+    """A plausible 2-component per-band PSF (weights sum to 1)."""
+    psf = np.zeros((C.N_BANDS, C.K_PSF, C.PSF_PARAMS), dtype)
+    for b in range(C.N_BANDS):
+        width = 1.0 + 0.1 * b  # seeing varies by band
+        psf[b, 0] = [0.7, 0.0, 0.0, width, 0.05, width]
+        psf[b, 1] = [0.3, 0.1, -0.1, 2.5 * width, -0.1, 2.5 * width]
+    return psf
+
+
+def default_prior(dtype=np.float32):
+    prior = np.zeros(C.PRIOR_DIM, dtype)
+    prior[C.P_A] = 0.3
+    prior[C.P_FLUX_STAR : C.P_FLUX_STAR + 2] = [4.0, 2.0]
+    prior[C.P_FLUX_GAL : C.P_FLUX_GAL + 2] = [4.5, 2.0]
+    prior[C.P_COLOR_MEAN_STAR : C.P_COLOR_MEAN_STAR + 4] = [0.5, 0.4, 0.2, 0.1]
+    prior[C.P_COLOR_MEAN_GAL : C.P_COLOR_MEAN_GAL + 4] = [0.8, 0.5, 0.3, 0.2]
+    prior[C.P_COLOR_VAR_STAR : C.P_COLOR_VAR_STAR + 4] = 0.04
+    prior[C.P_COLOR_VAR_GAL : C.P_COLOR_VAR_GAL + 4] = 0.04
+    return prior
+
+
+def random_theta(rng, dtype=np.float32):
+    """A θ in the plausible region of parameter space."""
+    t = np.zeros(C.DIM, dtype)
+    t[C.I_A] = rng.normal(0.0, 1.0)
+    t[C.I_LOC : C.I_LOC + 2] = rng.normal(0.0, 1.0, 2)
+    t[C.I_FLUX_STAR : C.I_FLUX_STAR + 2] = [rng.normal(4.0, 0.5), -1.0]
+    t[C.I_FLUX_GAL : C.I_FLUX_GAL + 2] = [rng.normal(4.5, 0.5), -1.0]
+    t[C.I_COLOR_MEAN_STAR : C.I_COLOR_MEAN_STAR + 4] = rng.normal(0.4, 0.2, 4)
+    t[C.I_COLOR_MEAN_GAL : C.I_COLOR_MEAN_GAL + 4] = rng.normal(0.5, 0.2, 4)
+    t[C.I_COLOR_VAR_STAR : C.I_COLOR_VAR_STAR + 4] = -2.0
+    t[C.I_COLOR_VAR_GAL : C.I_COLOR_VAR_GAL + 4] = -2.0
+    t[C.I_SHAPE : C.I_SHAPE + 4] = [
+        rng.normal(0.0, 0.5),
+        rng.normal(0.5, 0.5),
+        rng.uniform(-1.5, 1.5),
+        rng.normal(0.5, 0.3),
+    ]
+    return t
+
+
+def synthetic_patch(rng, theta=None, dtype=np.float32):
+    """Draw a (pixels, bg, mask, psf, gain) tuple from the model itself."""
+    import jax.numpy as jnp
+    from compile import model
+
+    psf = default_psf(dtype)
+    gain = np.ones(C.N_BANDS, dtype)
+    bg = np.full((C.N_BANDS, C.PATCH, C.PATCH), 60.0, dtype)
+    mask = np.ones_like(bg)
+    if theta is None:
+        theta = random_theta(rng, dtype)
+    comps_s, comps_g, scal = model.build_inputs(jnp.asarray(theta), jnp.asarray(psf), jnp.asarray(gain))
+    from compile.kernels import ref
+
+    rate = np.array(
+        [
+            bg[b]
+            + np.asarray(scal[b, 0] * ref.mog_eval(comps_s[b]))
+            + np.asarray(scal[b, 1] * ref.mog_eval(comps_g[b]))
+            for b in range(C.N_BANDS)
+        ]
+    )
+    pixels = rng.poisson(rate).astype(dtype)
+    return theta, pixels, bg, mask, psf, gain

@@ -1,0 +1,157 @@
+"""L1 kernel validation: Pallas vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps component counts, patch shapes, and parameter magnitudes;
+every property asserts allclose against ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import constants as C, model
+from compile.kernels import mog_render, ref
+from conftest import synthetic_patch, random_theta
+
+RNG = np.random.default_rng(1234)
+
+
+def make_comps(rng, k, spread=8.0):
+    """Random positive-definite effective components on the patch."""
+    comps = np.zeros((k, 6), np.float32)
+    comps[:, 0] = rng.uniform(0.01, 1.0, k)  # w_eff
+    comps[:, 1] = C.PATCH / 2 + rng.normal(0, spread, k)  # mx
+    comps[:, 2] = C.PATCH / 2 + rng.normal(0, spread, k)  # my
+    # precision = inverse of a random SPD covariance
+    for i in range(k):
+        a = rng.uniform(0.5, 4.0)
+        b = rng.uniform(0.5, 4.0)
+        c = rng.uniform(-0.5, 0.5) * np.sqrt(a * b)
+        det = a * b - c * c
+        comps[i, 3:6] = [b / det, -c / det, a / det]
+    return comps
+
+
+class TestRender:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        k=st.integers(1, 24),
+        seed=st.integers(0, 2**31 - 1),
+        hmul=st.integers(1, 4),
+    )
+    def test_matches_ref_shapes(self, k, seed, hmul):
+        rng = np.random.default_rng(seed)
+        comps = jnp.asarray(make_comps(rng, k))
+        h = mog_render.TILE_H * hmul
+        got = mog_render.render(comps, h=h, w=C.PATCH)
+        want = ref.mog_eval(comps, h=h, w=C.PATCH)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-7)
+
+    def test_zero_weight_is_zero(self):
+        comps = jnp.asarray(make_comps(RNG, 4)).at[:, 0].set(0.0)
+        assert np.all(np.asarray(mog_render.render(comps)) == 0.0)
+
+    def test_translation_equivariance(self):
+        """Shifting every mean by one pixel shifts the image one pixel."""
+        comps = make_comps(RNG, 5, spread=4.0)
+        img0 = np.asarray(mog_render.render(jnp.asarray(comps)))
+        comps2 = comps.copy()
+        comps2[:, 1] += 1.0
+        img1 = np.asarray(mog_render.render(jnp.asarray(comps2)))
+        np.testing.assert_allclose(img1[:, 1:], img0[:, :-1], rtol=1e-4, atol=1e-6)
+
+    def test_unit_mixture_integrates_to_one(self):
+        """A normalized, well-contained mixture sums to ~1 over the patch."""
+        comps = np.zeros((2, 6), np.float32)
+        for i, (w, var) in enumerate([(0.6, 1.2), (0.4, 2.0)]):
+            comps[i, 0] = w / (2 * np.pi * var)
+            comps[i, 1] = comps[i, 2] = C.PATCH / 2
+            comps[i, 3] = comps[i, 5] = 1 / var
+        total = float(np.asarray(mog_render.render(jnp.asarray(comps))).sum())
+        assert abs(total - 1.0) < 1e-3
+
+
+class TestLikeBand:
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_value_matches_ref(self, seed):
+        rng = np.random.default_rng(seed)
+        theta, pixels, bg, mask, psf, gain = synthetic_patch(rng)
+        comps_s, comps_g, scal = model.build_inputs(
+            jnp.asarray(theta), jnp.asarray(psf), jnp.asarray(gain)
+        )
+        for b in [0, C.REF_BAND, C.N_BANDS - 1]:
+            got = mog_render.like_band(
+                jnp.asarray(pixels[b]), jnp.asarray(bg[b]), jnp.asarray(mask[b]),
+                comps_s[b], comps_g[b], scal[b],
+            )
+            want = ref.poisson_elbo_band(
+                jnp.asarray(pixels[b]), jnp.asarray(bg[b]), jnp.asarray(mask[b]),
+                ref.mog_eval(comps_s[b]), ref.mog_eval(comps_g[b]), scal[b],
+            )
+            np.testing.assert_allclose(got, want, rtol=2e-5)
+
+    def test_mask_zeroes_contribution(self):
+        rng = np.random.default_rng(7)
+        theta, pixels, bg, mask, psf, gain = synthetic_patch(rng)
+        comps_s, comps_g, scal = model.build_inputs(
+            jnp.asarray(theta), jnp.asarray(psf), jnp.asarray(gain)
+        )
+        z = mog_render.like_band(
+            jnp.asarray(pixels[0]), jnp.asarray(bg[0]),
+            jnp.zeros_like(jnp.asarray(mask[0])), comps_s[0], comps_g[0], scal[0],
+        )
+        assert float(z) == 0.0
+
+
+class TestManualGradient:
+    """The kernel's hand-derived cotangents vs autodiff of the jnp oracle."""
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_cotangents_match_autodiff(self, seed):
+        import jax
+
+        rng = np.random.default_rng(seed)
+        theta, pixels, bg, mask, psf, gain = synthetic_patch(rng)
+        comps_s, comps_g, scal = model.build_inputs(
+            jnp.asarray(theta), jnp.asarray(psf), jnp.asarray(gain)
+        )
+        b = C.REF_BAND
+        px, bgb, mk = map(jnp.asarray, (pixels[b], bg[b], mask[b]))
+
+        def oracle(cs, cg, sc):
+            return ref.poisson_elbo_band(
+                px, bgb, mk, ref.mog_eval(cs), ref.mog_eval(cg), sc
+            )
+
+        ll, dcs, dcg, dscal = mog_render.like_grad_band(
+            px, bgb, mk, comps_s[b], comps_g[b], scal[b]
+        )
+        want_ll = oracle(comps_s[b], comps_g[b], scal[b])
+        gcs, gcg, gsc = jax.grad(oracle, argnums=(0, 1, 2))(
+            comps_s[b], comps_g[b], scal[b]
+        )
+        np.testing.assert_allclose(ll, want_ll, rtol=2e-5)
+        for got, want in [(dcs, gcs), (dcg, gcg), (dscal, gsc)]:
+            got, want = np.asarray(got), np.asarray(want)
+            denom = np.maximum(np.abs(want), 1e-2 * np.abs(want).max() + 1e-6)
+            np.testing.assert_allclose(got / denom, want / denom, atol=2e-3)
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_full_theta_grad_matches_ad_artifact(self, seed):
+        rng = np.random.default_rng(seed)
+        theta, pixels, bg, mask, psf, gain = map(
+            jnp.asarray, synthetic_patch(rng)
+        )
+        f_ad, g_ad, _ = model.like_vgh(theta, pixels, bg, mask, psf, gain)
+        f_pl, g_pl = mog_render.like_pallas_vg(
+            theta, pixels, bg, mask, psf, gain
+        )
+        np.testing.assert_allclose(f_pl, f_ad, rtol=3e-5)
+        scale = float(jnp.abs(g_ad).max())
+        np.testing.assert_allclose(
+            np.asarray(g_pl), np.asarray(g_ad), atol=3e-3 * scale, rtol=2e-3
+        )

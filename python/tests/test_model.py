@@ -1,0 +1,219 @@
+"""L2 model validation: transforms, moments, KL properties, derivatives."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import constants as C, model
+from compile.kernels import ref
+from conftest import default_prior, default_psf, random_theta, synthetic_patch
+
+RNG = np.random.default_rng(99)
+
+
+def prior_matching_theta(prior):
+    """θ whose variational factors equal the prior exactly."""
+    t = np.zeros(C.DIM, np.float32)
+    pg = prior[C.P_A]
+    t[C.I_A] = np.log(pg / (1 - pg))
+    t[C.I_FLUX_STAR] = prior[C.P_FLUX_STAR]
+    t[C.I_FLUX_STAR + 1] = np.log(prior[C.P_FLUX_STAR + 1])
+    t[C.I_FLUX_GAL] = prior[C.P_FLUX_GAL]
+    t[C.I_FLUX_GAL + 1] = np.log(prior[C.P_FLUX_GAL + 1])
+    t[C.I_COLOR_MEAN_STAR : C.I_COLOR_MEAN_STAR + 4] = prior[
+        C.P_COLOR_MEAN_STAR : C.P_COLOR_MEAN_STAR + 4
+    ]
+    t[C.I_COLOR_MEAN_GAL : C.I_COLOR_MEAN_GAL + 4] = prior[
+        C.P_COLOR_MEAN_GAL : C.P_COLOR_MEAN_GAL + 4
+    ]
+    t[C.I_COLOR_VAR_STAR : C.I_COLOR_VAR_STAR + 4] = np.log(
+        prior[C.P_COLOR_VAR_STAR : C.P_COLOR_VAR_STAR + 4]
+    )
+    t[C.I_COLOR_VAR_GAL : C.I_COLOR_VAR_GAL + 4] = np.log(
+        prior[C.P_COLOR_VAR_GAL : C.P_COLOR_VAR_GAL + 4]
+    )
+    # shape entries at the shape-prior means (zero penalty)
+    t[C.I_SHAPE] = C.SHAPE_PRIOR_PDEV[0]
+    t[C.I_SHAPE + 1] = C.SHAPE_PRIOR_AXIS[0]
+    t[C.I_SHAPE + 3] = C.SHAPE_PRIOR_SCALE[0]
+    return t
+
+
+class TestKL:
+    def test_nonnegative(self):
+        prior = jnp.asarray(default_prior())
+        for _ in range(20):
+            t = jnp.asarray(random_theta(RNG))
+            # subtract ridge and shape prior, which are not the KL proper
+            rd = np.concatenate(
+                [t[C.I_LOC : C.I_LOC + 2], t[C.I_SHAPE : C.I_SHAPE + 4]]
+            )
+            ridge = 0.5 * C.RIDGE * float(np.sum(rd**2))
+            gam_g = 1.0 / (1.0 + np.exp(-float(t[C.I_A])))
+            sp = gam_g * sum(
+                0.5 * (float(t[C.I_SHAPE + o]) - mv[0]) ** 2 / mv[1]
+                for o, mv in [
+                    (0, C.SHAPE_PRIOR_PDEV),
+                    (1, C.SHAPE_PRIOR_AXIS),
+                    (3, C.SHAPE_PRIOR_SCALE),
+                ]
+            )
+            assert float(model.elbo_kl(t, prior)) - ridge - sp >= -1e-6
+
+    def test_zero_at_prior(self):
+        prior = default_prior()
+        t = jnp.asarray(prior_matching_theta(prior))
+        assert float(model.elbo_kl(t, jnp.asarray(prior))) < 1e-4
+
+    def test_increases_away_from_prior(self):
+        prior = default_prior()
+        t0 = prior_matching_theta(prior)
+        k0 = float(model.elbo_kl(jnp.asarray(t0), jnp.asarray(prior)))
+        t1 = t0.copy()
+        t1[C.I_FLUX_STAR] += 2.0
+        k1 = float(model.elbo_kl(jnp.asarray(t1), jnp.asarray(prior)))
+        assert k1 > k0 + 0.1
+
+
+class TestMoments:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_band_moments_vs_monte_carlo(self, seed):
+        rng = np.random.default_rng(seed)
+        fm, fv = rng.normal(3.0, 0.5), rng.uniform(0.05, 0.5)
+        cm = rng.normal(0.3, 0.2, 4)
+        cv = rng.uniform(0.02, 0.2, 4)
+        m1, m2 = ref.band_loglum_moments(
+            jnp.float32(fm), jnp.float32(fv), jnp.asarray(cm, jnp.float32),
+            jnp.asarray(cv, jnp.float32),
+        )
+        n = 200_000
+        logr = rng.normal(fm, np.sqrt(fv), n)
+        c = rng.normal(cm, np.sqrt(cv), (n, 4))
+        a = np.asarray(C.COLOR_COEF)
+        for b in range(C.N_BANDS):
+            lb = np.exp(logr + c @ a[b])
+            np.testing.assert_allclose(m1[b], lb.mean(), rtol=0.05)
+            np.testing.assert_allclose(m2[b], (lb**2).mean(), rtol=0.25)
+
+    def test_ref_band_ignores_colors(self):
+        """In the reference band log l = log r exactly."""
+        m1a, _ = ref.band_loglum_moments(
+            jnp.float32(2.0), jnp.float32(0.1),
+            jnp.zeros(4), jnp.full((4,), 0.3),
+        )
+        m1b, _ = ref.band_loglum_moments(
+            jnp.float32(2.0), jnp.float32(0.1),
+            jnp.ones(4) * 5.0, jnp.full((4,), 0.9),
+        )
+        np.testing.assert_allclose(m1a[C.REF_BAND], m1b[C.REF_BAND], rtol=1e-6)
+
+
+class TestBuildInputs:
+    def test_star_mixture_normalized(self):
+        """Star components integrate to ~1 (PSF weights sum to 1)."""
+        t = jnp.asarray(random_theta(RNG))
+        psf, gain = jnp.asarray(default_psf()), jnp.ones(C.N_BANDS)
+        comps_s, comps_g, _ = model.build_inputs(t, psf, gain)
+        for b in range(C.N_BANDS):
+            for comps in (comps_s[b], comps_g[b]):
+                img = ref.mog_eval(comps, h=128, w=128)
+                # recenter: patch grid is 32x32; rebuild with big patch
+            # analytic integral: sum of w (normalization folded in w_eff)
+            det_terms = []
+        # analytic check instead: sum w_eff * 2*pi/sqrt(det(precision))
+        for b in range(C.N_BANDS):
+            for comps in (comps_s[b], comps_g[b]):
+                p = np.asarray(comps)
+                det = p[:, 3] * p[:, 5] - p[:, 4] ** 2
+                integral = np.sum(p[:, 0] * 2 * np.pi / np.sqrt(det))
+                np.testing.assert_allclose(integral, 1.0, rtol=1e-4)
+
+    def test_gamma_split(self):
+        """scal star/gal entries scale with (1-γ) and γ."""
+        t = random_theta(RNG)
+        psf, gain = jnp.asarray(default_psf()), jnp.ones(C.N_BANDS)
+        t[C.I_A] = 10.0  # certainly a galaxy
+        _, _, scal = model.build_inputs(jnp.asarray(t), psf, gain)
+        assert float(jnp.abs(scal[:, 0]).max()) < 1e-3 * float(
+            jnp.abs(scal[:, 1]).max()
+        )
+
+    def test_scale_grows_galaxy(self):
+        t = random_theta(RNG)
+        t[C.I_A] = 10.0
+        psf, gain = jnp.asarray(default_psf()), jnp.ones(C.N_BANDS)
+        imgs = []
+        for logs in (0.0, 1.5):
+            t[C.I_SHAPE + 3] = logs
+            _, comps_g, _ = model.build_inputs(jnp.asarray(t), psf, gain)
+            imgs.append(np.asarray(ref.mog_eval(comps_g[2])))
+        # larger scale => lower peak (same total flux)
+        assert imgs[1].max() < imgs[0].max()
+
+
+class TestDerivatives:
+    """Autodiff vs (f64) finite differences of the analytic objective."""
+
+    @pytest.fixture(autouse=True)
+    def x64(self):
+        jax.config.update("jax_enable_x64", True)
+        yield
+        jax.config.update("jax_enable_x64", False)
+
+    def test_like_grad_finite_diff(self):
+        rng = np.random.default_rng(3)
+        theta, pixels, bg, mask, psf, gain = synthetic_patch(rng)
+        args = [jnp.asarray(a, jnp.float64) for a in (pixels, bg, mask, psf, gain)]
+        t = jnp.asarray(theta, jnp.float64)
+        f = lambda th: model.elbo_like(th, *args)
+        g = jax.grad(f)(t)
+        eps = 1e-5
+        for i in range(0, C.DIM, 3):
+            e = jnp.zeros(C.DIM, jnp.float64).at[i].set(eps)
+            fd = (float(f(t + e)) - float(f(t - e))) / (2 * eps)
+            np.testing.assert_allclose(float(g[i]), fd, rtol=2e-4, atol=1e-4)
+
+    def test_kl_grad_finite_diff(self):
+        prior = jnp.asarray(default_prior(), jnp.float64)
+        t = jnp.asarray(random_theta(RNG), jnp.float64)
+        f = lambda th: model.elbo_kl(th, prior)
+        g = jax.grad(f)(t)
+        eps = 1e-6
+        for i in range(C.DIM):
+            e = jnp.zeros(C.DIM, jnp.float64).at[i].set(eps)
+            fd = (float(f(t + e)) - float(f(t - e))) / (2 * eps)
+            np.testing.assert_allclose(float(g[i]), fd, rtol=5e-4, atol=1e-6)
+
+    def test_hessian_symmetric(self):
+        rng = np.random.default_rng(5)
+        theta, pixels, bg, mask, psf, gain = synthetic_patch(rng)
+        args = [jnp.asarray(a, jnp.float64) for a in (pixels, bg, mask, psf, gain)]
+        h = jax.hessian(model.elbo_like)(jnp.asarray(theta, jnp.float64), *args)
+        np.testing.assert_allclose(h, h.T, atol=1e-8)
+
+    def test_kl_hessian_pd_at_prior(self):
+        """At the prior-matching point the KL Hessian is PSD (+ridge > 0)."""
+        prior = default_prior()
+        t = jnp.asarray(prior_matching_theta(prior), jnp.float64)
+        h = jax.hessian(model.elbo_kl)(t, jnp.asarray(prior, jnp.float64))
+        w = np.linalg.eigvalsh(np.asarray(h))
+        assert w.min() > 0
+
+
+class TestEndToEndFit:
+    def test_true_theta_beats_perturbed(self):
+        """ELBO at the generating θ exceeds ELBO at a perturbed θ (data fit)."""
+        rng = np.random.default_rng(11)
+        theta, pixels, bg, mask, psf, gain = synthetic_patch(rng)
+        prior = jnp.asarray(default_prior())
+        args = map(jnp.asarray, (pixels, bg, mask, psf, gain))
+        pixels, bg, mask, psf, gain = args
+        e_true = float(model.elbo(jnp.asarray(theta), pixels, bg, mask, psf, gain, prior))
+        bad = theta.copy()
+        bad[C.I_LOC] += 4.0  # 4-pixel location error
+        e_bad = float(model.elbo(jnp.asarray(bad), pixels, bg, mask, psf, gain, prior))
+        assert e_true > e_bad

@@ -1,0 +1,63 @@
+//! L1/L2 artifact benchmarks: PJRT execution latency of the compiled
+//! ELBO kernels — the per-Newton-iteration cost that dominates inference
+//! (DESIGN.md §Perf). Skips cleanly when artifacts are absent.
+
+use celeste::benchkit::{bench, black_box};
+use celeste::imaging::{extract_patch, render_field, Survey, SurveyConfig};
+use celeste::model::layout as L;
+use celeste::model::{theta_init, GalaxyShape, Prior, SourceParams};
+use celeste::prng::Rng;
+use celeste::runtime::{ElboEngine, Runtime};
+
+fn main() {
+    let dir = celeste::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP bench_artifacts: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::load(&dir).expect("runtime");
+    let engine = ElboEngine::new(&rt, &Prior::default());
+
+    let truth = SourceParams {
+        pos: (48.0, 48.0),
+        is_galaxy: true,
+        flux_r: 3000.0,
+        colors: [0.5, 0.3, 0.2, 0.1],
+        shape: GalaxyShape { p_dev: 0.4, axis_ratio: 0.6, angle: 0.5, scale: 2.0 },
+    };
+    let survey = Survey::layout(SurveyConfig {
+        sky_width: 96.0,
+        sky_height: 96.0,
+        field_w: 96,
+        field_h: 96,
+        n_epochs: 1,
+        jitter: 0.0,
+        ..Default::default()
+    });
+    let mut rng = Rng::new(1);
+    let field = render_field(std::slice::from_ref(&truth), &survey.fields[0], &mut rng);
+    let patch = extract_patch(&field, truth.pos, &[]).unwrap();
+    let theta = theta_init(&truth, 0.5);
+    let prior = Prior::default().to_vec();
+    let _ = prior;
+
+    println!("== L1/L2 compiled artifacts (per-execute latency) ==");
+    bench("kl value+grad+hess", 1.0, || {
+        black_box(engine.kl_vgh(&theta).unwrap());
+    });
+    bench("like_ad value+grad+hess (5x32x32)", 2.0, || {
+        black_box(engine.like_vgh(&theta, &patch).unwrap());
+    });
+    bench("like_pallas value+grad (manual)", 2.0, || {
+        black_box(engine.like_vg_pallas(&theta, &patch).unwrap());
+    });
+    let comps = [0.05f64; L::K_GAL * L::COMP_PARAMS];
+    bench("render_pallas 16comp 32x32", 1.0, || {
+        black_box(engine.render_pallas(&comps).unwrap());
+    });
+    println!(
+        "mean artifact exec: {:.1} us over {} executions",
+        rt.mean_exec_us(),
+        rt.exec_count.get()
+    );
+}

@@ -1,0 +1,120 @@
+//! Hot-path microbenchmarks (L3 profile targets, DESIGN.md §Perf):
+//! renderer, patch extraction, per-source linear algebra, scheduler,
+//! cache, fabric model, and the event-driven simulator itself.
+
+use celeste::benchkit::{bench, black_box};
+use celeste::catalog::noisy_catalog;
+use celeste::cluster::workload::{synthetic_workload, CostModel};
+use celeste::cluster::{simulate, ClusterConfig};
+use celeste::dtree::{Dtree, DtreeConfig};
+use celeste::ga::{Fabric, FabricConfig, LruCache};
+use celeste::imaging::{extract_patch, render_field, Survey, SurveyConfig};
+use celeste::linalg::{solve_spd, solve_trust_region, sym_eig, Mat};
+use celeste::model::{galaxy_comps, render_mixture, GalaxyShape, PixelRect, SourceParams};
+use celeste::prng::Rng;
+use celeste::sky::{generate, SkyConfig};
+
+fn main() {
+    println!("== L3 hot paths ==");
+
+    // --- renderer: one galaxy over a 32x32 patch (the per-iteration cost
+    // of neighbor-background construction) ---
+    let psf = [
+        [0.7, 0.0, 0.0, 1.1, 0.03, 1.0],
+        [0.3, 0.1, -0.1, 2.6, -0.1, 2.4],
+    ];
+    let shape = GalaxyShape { p_dev: 0.4, axis_ratio: 0.6, angle: 0.8, scale: 2.0 };
+    let comps = galaxy_comps((16.0, 16.0), &psf, &shape);
+    let rect = PixelRect { x0: 0.0, y0: 0.0, rows: 32, cols: 32 };
+    bench("render_mixture 16comp 32x32", 0.5, || {
+        black_box(render_mixture(&rect, &comps, 1.0));
+    });
+
+    // --- patch extraction incl. neighbor rendering ---
+    let survey = Survey::layout(SurveyConfig {
+        sky_width: 256.0,
+        sky_height: 256.0,
+        field_w: 256,
+        field_h: 256,
+        n_epochs: 1,
+        jitter: 0.0,
+        ..Default::default()
+    });
+    let sky = generate(&SkyConfig {
+        width: 256.0,
+        height: 256.0,
+        n_sources: 60,
+        seed: 3,
+        ..Default::default()
+    });
+    let mut rng = Rng::new(4);
+    let field = render_field(&sky.sources, &survey.fields[0], &mut rng);
+    let neighbors: Vec<SourceParams> = sky.sources[1..5].to_vec();
+    bench("extract_patch +4 neighbors", 0.5, || {
+        black_box(extract_patch(&field, sky.sources[0].pos, &neighbors));
+    });
+
+    // --- per-iteration linear algebra at dim 27 ---
+    let mut rng = Rng::new(5);
+    let n = 27;
+    let mut b = Mat::zeros(n, n);
+    for v in &mut b.data {
+        *v = rng.normal();
+    }
+    let mut spd = b.matmul(&b.transpose());
+    spd.add_diag(n as f64);
+    let g: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    bench("cholesky+solve 27x27", 0.3, || {
+        black_box(solve_spd(&spd, &g));
+    });
+    bench("sym_eig 27x27 (jacobi)", 0.3, || {
+        black_box(sym_eig(&spd));
+    });
+    bench("trust_region subproblem 27", 0.3, || {
+        black_box(solve_trust_region(&spd, &g, 1.0));
+    });
+
+    // --- scheduler / cache / fabric ---
+    bench("dtree drain 10k tasks 64 procs", 0.3, || {
+        let mut dt = Dtree::new(DtreeConfig::default(), 64, 10_000);
+        let mut done = false;
+        while !done {
+            done = true;
+            for p in 0..64 {
+                if dt.request(p).is_some() {
+                    done = false;
+                }
+            }
+        }
+    });
+    bench("lru insert+probe 1k entries", 0.3, || {
+        let mut c = LruCache::new(1e9);
+        for i in 0..1000u64 {
+            c.insert(i, 1e6);
+            black_box(c.contains(i / 2));
+        }
+    });
+    bench("fabric get x1000", 0.3, || {
+        let mut f = Fabric::new(FabricConfig::default(), 64);
+        for i in 0..1000 {
+            black_box(f.get(i as f64 * 1e-3, 120e6, i % 64, (i + 7) % 64));
+        }
+    });
+
+    // --- the simulator itself (events/sec; fig4-scale runs depend on it) ---
+    let w = synthetic_workload(5000, 64, 3, &CostModel::default(), 120e6, 5);
+    bench("simulate 5k tasks 16 nodes", 1.0, || {
+        let cfg = ClusterConfig { nodes: 16, ..Default::default() };
+        black_box(simulate(&cfg, &w));
+    });
+
+    // --- catalog spatial index ---
+    let cat = {
+        let u = generate(&SkyConfig { n_sources: 5000, ..Default::default() });
+        let mut r = Rng::new(6);
+        noisy_catalog(&u.sources, u.width, u.height, &mut r, 0.5, 0.2)
+    };
+    bench("neighbors_within r=20 (5k catalog)", 0.3, || {
+        black_box(cat.neighbors_within((1000.0, 600.0), 20.0, 0));
+    });
+}

@@ -1,0 +1,103 @@
+//! Tiny benchmarking harness (the offline registry has no criterion).
+//!
+//! `cargo bench` targets use `harness = false` and call [`bench`] /
+//! [`bench_n`] directly; output is one line per case with throughput.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub total_secs: f64,
+    pub ns_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1e9 / self.ns_per_iter
+    }
+}
+
+/// Run `f` repeatedly for ~`target_secs`, after a warmup, and report.
+pub fn bench<F: FnMut()>(name: &str, target_secs: f64, mut f: F) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_secs / once).ceil() as u64).clamp(1, 1_000_000);
+    let t1 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let total = t1.elapsed().as_secs_f64();
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        total_secs: total,
+        ns_per_iter: total * 1e9 / iters as f64,
+    };
+    print_result(&r);
+    r
+}
+
+/// Run `f` exactly `iters` times.
+pub fn bench_n<F: FnMut()>(name: &str, iters: u64, mut f: F) -> BenchResult {
+    let t0 = Instant::now();
+    f(); // warmup
+    let _ = t0;
+    let t1 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let total = t1.elapsed().as_secs_f64();
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        total_secs: total,
+        ns_per_iter: total * 1e9 / iters as f64,
+    };
+    print_result(&r);
+    r
+}
+
+fn print_result(r: &BenchResult) {
+    let (val, unit) = if r.ns_per_iter >= 1e9 {
+        (r.ns_per_iter / 1e9, "s")
+    } else if r.ns_per_iter >= 1e6 {
+        (r.ns_per_iter / 1e6, "ms")
+    } else if r.ns_per_iter >= 1e3 {
+        (r.ns_per_iter / 1e3, "us")
+    } else {
+        (r.ns_per_iter, "ns")
+    };
+    println!(
+        "bench {:<42} {:>10.3} {}/iter ({:>12.1} /s, {} iters)",
+        r.name,
+        val,
+        unit,
+        r.per_sec(),
+        r.iters
+    );
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench_n("noop-ish", 100, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.ns_per_iter > 0.0);
+        assert_eq!(r.iters, 100);
+    }
+}

@@ -1,0 +1,110 @@
+//! Hilbert space-filling curve for spatial task ordering.
+
+use super::CatalogEntry;
+
+/// Order of the curve used for sorting (2^16 cells per axis).
+const ORDER: u32 = 16;
+
+/// Map (x, y) on a 2^order x 2^order grid to its Hilbert-curve distance.
+pub fn hilbert_xy2d(order: u32, mut x: u32, mut y: u32) -> u64 {
+    let mut rx: u32;
+    let mut ry: u32;
+    let mut d: u64 = 0;
+    let mut s: u32 = 1 << (order - 1);
+    while s > 0 {
+        rx = u32::from((x & s) > 0);
+        ry = u32::from((y & s) > 0);
+        d += (s as u64) * (s as u64) * ((3 * rx) ^ ry) as u64;
+        // rotate quadrant
+        if ry == 0 {
+            if rx == 1 {
+                x = s.wrapping_sub(1).wrapping_sub(x) & (s.wrapping_mul(2).wrapping_sub(1));
+                y = s.wrapping_sub(1).wrapping_sub(y) & (s.wrapping_mul(2).wrapping_sub(1));
+            }
+            std::mem::swap(&mut x, &mut y);
+        }
+        s /= 2;
+    }
+    d
+}
+
+/// Inverse map: Hilbert distance to (x, y).
+pub fn hilbert_d2xy(order: u32, d: u64) -> (u32, u32) {
+    let (mut x, mut y) = (0u32, 0u32);
+    let mut t = d;
+    let mut s: u64 = 1;
+    while s < (1u64 << order) {
+        let rx = (1 & (t / 2)) as u32;
+        let ry = (1 & (t ^ rx as u64)) as u32;
+        // rotate
+        if ry == 0 {
+            if rx == 1 {
+                x = (s as u32 - 1).wrapping_sub(x);
+                y = (s as u32 - 1).wrapping_sub(y);
+            }
+            std::mem::swap(&mut x, &mut y);
+        }
+        x += (s as u32) * rx;
+        y += (s as u32) * ry;
+        t /= 4;
+        s *= 2;
+    }
+    (x, y)
+}
+
+/// Sort catalog entries along the Hilbert curve over the sky extent.
+pub fn sort_hilbert(entries: &mut [CatalogEntry], width: f64, height: f64) {
+    let n = (1u32 << ORDER) as f64;
+    let key = |e: &CatalogEntry| -> u64 {
+        let x = ((e.pos.0 / width) * n).clamp(0.0, n - 1.0) as u32;
+        let y = ((e.pos.1 / height) * n).clamp(0.0, n - 1.0) as u32;
+        hilbert_xy2d(ORDER, x, y)
+    };
+    entries.sort_by_key(key);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xy2d_d2xy_roundtrip() {
+        for order in [2u32, 4, 8] {
+            let n = 1u32 << order;
+            for x in (0..n).step_by(3) {
+                for y in (0..n).step_by(3) {
+                    let d = hilbert_xy2d(order, x, y);
+                    assert_eq!(hilbert_d2xy(order, d), (x, y), "order {order} ({x},{y})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn curve_is_bijective_order3() {
+        let order = 3;
+        let n = 1u64 << order;
+        let mut seen = vec![false; (n * n) as usize];
+        for x in 0..n as u32 {
+            for y in 0..n as u32 {
+                let d = hilbert_xy2d(order, x, y) as usize;
+                assert!(!seen[d], "duplicate d {d}");
+                seen[d] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn consecutive_d_are_adjacent_cells() {
+        let order = 5;
+        let n = 1u64 << order;
+        let mut prev = hilbert_d2xy(order, 0);
+        for d in 1..(n * n) {
+            let cur = hilbert_d2xy(order, d);
+            let dist = (cur.0 as i64 - prev.0 as i64).abs() + (cur.1 as i64 - prev.1 as i64).abs();
+            assert_eq!(dist, 1, "jump at d={d}: {prev:?} -> {cur:?}");
+            prev = cur;
+        }
+    }
+}

@@ -1,0 +1,263 @@
+//! Catalogs: entries, spatial (Hilbert-curve) ordering, and neighbor
+//! search.
+//!
+//! The paper's phase 2 loads "an existing catalog of candidate light
+//! sources ... ordered according to their spatial position, thus nearby
+//! light sources are also close together in the global array" (§III-D).
+//! The Hilbert order implemented here is exactly that: contiguous task
+//! ranges become spatially compact, so Dtree batches have high image
+//! locality.
+
+mod hilbert;
+
+pub use hilbert::{hilbert_d2xy, hilbert_xy2d};
+
+use crate::model::{GalaxyShape, SourceParams};
+use crate::prng::Rng;
+
+/// One catalog row: a point estimate of a candidate light source.
+#[derive(Clone, Debug)]
+pub struct CatalogEntry {
+    pub id: usize,
+    pub pos: (f64, f64),
+    pub p_gal: f64,
+    pub flux_r: f64,
+    pub colors: [f64; 4],
+    pub shape: GalaxyShape,
+}
+
+impl CatalogEntry {
+    pub fn to_source(&self) -> SourceParams {
+        SourceParams {
+            pos: self.pos,
+            is_galaxy: self.p_gal > 0.5,
+            flux_r: self.flux_r,
+            colors: self.colors,
+            shape: self.shape,
+        }
+    }
+}
+
+/// A catalog plus its spatial index.
+#[derive(Clone, Debug)]
+pub struct Catalog {
+    pub entries: Vec<CatalogEntry>,
+    /// sky extent (for the grid index)
+    pub width: f64,
+    pub height: f64,
+    grid: Grid,
+}
+
+#[derive(Clone, Debug)]
+struct Grid {
+    cell: f64,
+    nx: usize,
+    ny: usize,
+    cells: Vec<Vec<usize>>,
+}
+
+impl Grid {
+    fn build(entries: &[CatalogEntry], width: f64, height: f64, cell: f64) -> Grid {
+        let nx = (width / cell).ceil().max(1.0) as usize;
+        let ny = (height / cell).ceil().max(1.0) as usize;
+        let mut cells = vec![Vec::new(); nx * ny];
+        for (i, e) in entries.iter().enumerate() {
+            let cx = ((e.pos.0 / cell) as usize).min(nx - 1);
+            let cy = ((e.pos.1 / cell) as usize).min(ny - 1);
+            cells[cy * nx + cx].push(i);
+        }
+        Grid { cell, nx, ny, cells }
+    }
+}
+
+impl Catalog {
+    /// Build a catalog (indexes by a grid with `cell` pixel cells).
+    pub fn new(mut entries: Vec<CatalogEntry>, width: f64, height: f64) -> Catalog {
+        // spatial (Hilbert) ordering — paper §III-D phase 2
+        hilbert::sort_hilbert(&mut entries, width, height);
+        for (i, e) in entries.iter_mut().enumerate() {
+            e.id = i;
+        }
+        let grid = Grid::build(&entries, width, height, 64.0);
+        Catalog { entries, width, height, grid }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Indices of entries within `radius` of `pos`, excluding `exclude`.
+    pub fn neighbors_within(&self, pos: (f64, f64), radius: f64, exclude: usize) -> Vec<usize> {
+        let g = &self.grid;
+        let r_cells = (radius / g.cell).ceil() as isize + 1;
+        let cx = (pos.0 / g.cell) as isize;
+        let cy = (pos.1 / g.cell) as isize;
+        let mut out = Vec::new();
+        for dy in -r_cells..=r_cells {
+            for dx in -r_cells..=r_cells {
+                let (x, y) = (cx + dx, cy + dy);
+                if x < 0 || y < 0 || x >= g.nx as isize || y >= g.ny as isize {
+                    continue;
+                }
+                for &i in &g.cells[y as usize * g.nx + x as usize] {
+                    if i == exclude {
+                        continue;
+                    }
+                    let e = &self.entries[i];
+                    let d2 = (e.pos.0 - pos.0).powi(2) + (e.pos.1 - pos.1).powi(2);
+                    if d2 <= radius * radius {
+                        out.push(i);
+                    }
+                }
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Mean distance between consecutive entries — measures the locality
+    /// of the task ordering (lower = better scheduler batches).
+    pub fn ordering_locality(&self) -> f64 {
+        if self.entries.len() < 2 {
+            return 0.0;
+        }
+        let mut total = 0.0;
+        for w in self.entries.windows(2) {
+            total += ((w[0].pos.0 - w[1].pos.0).powi(2) + (w[0].pos.1 - w[1].pos.1).powi(2)).sqrt();
+        }
+        total / (self.entries.len() - 1) as f64
+    }
+}
+
+/// Simulate a "previous survey" catalog: the ground truth perturbed by
+/// estimation noise (the initializations the paper's phase 2 loads).
+pub fn noisy_catalog(
+    sources: &[SourceParams],
+    width: f64,
+    height: f64,
+    rng: &mut Rng,
+    pos_sd: f64,
+    flux_rel_sd: f64,
+) -> Catalog {
+    let entries = sources
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let mut colors = s.colors;
+            for c in &mut colors {
+                *c += rng.normal() * 0.15;
+            }
+            // misclassify ~15% of sources in the init
+            let p_gal = if rng.uniform() < 0.15 {
+                if s.is_galaxy { 0.3 } else { 0.7 }
+            } else if s.is_galaxy {
+                0.75
+            } else {
+                0.25
+            };
+            CatalogEntry {
+                id: i,
+                pos: (
+                    s.pos.0 + rng.normal() * pos_sd,
+                    s.pos.1 + rng.normal() * pos_sd,
+                ),
+                p_gal,
+                flux_r: (s.flux_r * (1.0 + rng.normal() * flux_rel_sd)).max(0.5),
+                colors,
+                shape: GalaxyShape {
+                    p_dev: (s.shape.p_dev + rng.normal() * 0.1).clamp(0.05, 0.95),
+                    axis_ratio: (s.shape.axis_ratio + rng.normal() * 0.1).clamp(0.1, 0.95),
+                    angle: s.shape.angle + rng.normal() * 0.2,
+                    scale: (s.shape.scale * (1.0 + rng.normal() * 0.2)).clamp(0.3, 8.0),
+                },
+            }
+        })
+        .collect();
+    Catalog::new(entries, width, height)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sky::{generate, SkyConfig};
+
+    fn demo_catalog(n: usize) -> Catalog {
+        let u = generate(&SkyConfig { n_sources: n, ..Default::default() });
+        let mut rng = Rng::new(9);
+        noisy_catalog(&u.sources, u.width, u.height, &mut rng, 0.5, 0.2)
+    }
+
+    #[test]
+    fn ids_are_sequential_after_ordering() {
+        let c = demo_catalog(200);
+        for (i, e) in c.entries.iter().enumerate() {
+            assert_eq!(e.id, i);
+        }
+    }
+
+    #[test]
+    fn neighbors_within_matches_bruteforce() {
+        let c = demo_catalog(400);
+        let radius = 40.0;
+        for probe in [0usize, 17, 399] {
+            let pos = c.entries[probe].pos;
+            let got = c.neighbors_within(pos, radius, probe);
+            let mut want: Vec<usize> = c
+                .entries
+                .iter()
+                .enumerate()
+                .filter(|(i, e)| {
+                    *i != probe
+                        && ((e.pos.0 - pos.0).powi(2) + (e.pos.1 - pos.1).powi(2))
+                            <= radius * radius
+                })
+                .map(|(i, _)| i)
+                .collect();
+            want.sort_unstable();
+            assert_eq!(got, want, "probe {probe}");
+        }
+    }
+
+    #[test]
+    fn hilbert_ordering_improves_locality() {
+        let u = generate(&SkyConfig { n_sources: 2000, ..Default::default() });
+        let mut rng = Rng::new(4);
+        let ordered = noisy_catalog(&u.sources, u.width, u.height, &mut rng, 0.5, 0.2);
+        // compare with a random-order catalog (bypass ::new's sort)
+        let mut shuffled = ordered.entries.clone();
+        rng.shuffle(&mut shuffled);
+        let mut dist = 0.0;
+        for w in shuffled.windows(2) {
+            dist +=
+                ((w[0].pos.0 - w[1].pos.0).powi(2) + (w[0].pos.1 - w[1].pos.1).powi(2)).sqrt();
+        }
+        let random_locality = dist / (shuffled.len() - 1) as f64;
+        assert!(
+            ordered.ordering_locality() < 0.25 * random_locality,
+            "hilbert {} vs random {}",
+            ordered.ordering_locality(),
+            random_locality
+        );
+    }
+
+    #[test]
+    fn noisy_catalog_is_near_truth() {
+        let u = generate(&SkyConfig { n_sources: 300, ..Default::default() });
+        let mut rng = Rng::new(2);
+        let c = noisy_catalog(&u.sources, u.width, u.height, &mut rng, 0.5, 0.2);
+        assert_eq!(c.len(), 300);
+        // every entry is within a few px of some true source
+        for e in &c.entries {
+            let dmin = u
+                .sources
+                .iter()
+                .map(|s| ((s.pos.0 - e.pos.0).powi(2) + (s.pos.1 - e.pos.1).powi(2)).sqrt())
+                .fold(f64::MAX, f64::min);
+            assert!(dmin < 5.0, "entry too far from truth: {dmin}");
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! Minimal command-line parsing (the offline registry has no clap).
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, flags (--key value / --key), args.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Cli {
+        let mut it = args.into_iter().peekable();
+        let mut cli = Cli::default();
+        if let Some(cmd) = it.next() {
+            cli.command = cmd;
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // --key=value, or --key value, or bare boolean --key
+                if let Some((k, v)) = key.split_once('=') {
+                    cli.flags.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                cli.flags.insert(key.to_string(), val);
+            } else {
+                cli.positional.push(a);
+            }
+        }
+        cli
+    }
+
+    pub fn from_env() -> Cli {
+        Cli::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn flag_bool(&self, key: &str) -> bool {
+        matches!(self.flag(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn flag_usize(&self, key: &str, default: usize) -> usize {
+        self.flag(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag_f64(&self, key: &str, default: f64) -> f64 {
+        self.flag(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag_u64(&self, key: &str, default: u64) -> u64 {
+        self.flag(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flag(key).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli(s: &str) -> Cli {
+        Cli::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_command_flags_positional() {
+        let c = cli("infer --threads 4 data.bin extra --quick");
+        assert_eq!(c.command, "infer");
+        assert_eq!(c.flag_usize("threads", 1), 4);
+        assert!(c.flag_bool("quick"));
+        assert_eq!(c.positional, vec!["data.bin", "extra"]);
+        // --key=value is unambiguous before positionals
+        let c2 = cli("infer --quick=true data.bin");
+        assert!(c2.flag_bool("quick"));
+        assert_eq!(c2.positional, vec!["data.bin"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = cli("run");
+        assert_eq!(c.flag_usize("threads", 2), 2);
+        assert_eq!(c.flag_f64("radius", 1.5), 1.5);
+        assert!(!c.flag_bool("quick"));
+        assert_eq!(c.flag_str("engine", "ad"), "ad");
+    }
+
+    #[test]
+    fn empty_args() {
+        let c = Cli::parse(std::iter::empty());
+        assert_eq!(c.command, "");
+    }
+}

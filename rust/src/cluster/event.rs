@@ -1,0 +1,96 @@
+//! Discrete-event queue keyed by simulated time.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An event: a (process, thread) becomes ready at `time`.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub time: f64,
+    pub proc: usize,
+    pub thread: usize,
+    seq: u64,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap: reverse ordering on (time, seq); ties broken by seq
+        // for determinism
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic min-heap event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, time: f64, proc: usize, thread: usize) {
+        debug_assert!(time.is_finite(), "non-finite event time");
+        self.seq += 1;
+        self.heap.push(Event { time, proc, thread, seq: self.seq });
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, 0, 0);
+        q.push(1.0, 1, 1);
+        q.push(2.0, 2, 2);
+        assert_eq!(q.pop().unwrap().proc, 1);
+        assert_eq!(q.pop().unwrap().proc, 2);
+        assert_eq!(q.pop().unwrap().proc, 0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn ties_broken_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push(1.0, 7, 0);
+        q.push(1.0, 8, 0);
+        q.push(1.0, 9, 0);
+        assert_eq!(q.pop().unwrap().proc, 7);
+        assert_eq!(q.pop().unwrap().proc, 8);
+        assert_eq!(q.pop().unwrap().proc, 9);
+    }
+}

@@ -1,0 +1,121 @@
+//! Emulation of Julia's serial stop-the-world garbage collector
+//! (paper §VI, §VIII-A).
+//!
+//! Rust has no GC; to reproduce the paper's runtime-breakdown figures —
+//! and to quantify what removing the GC buys (an ablation §VIII-A begs
+//! for) — the simulator carries an explicit allocator model: every task
+//! allocates, a process-wide collection triggers past a heap threshold,
+//! and all threads of the process must reach a safepoint (finish their
+//! current task) before the serial collector runs. That barrier is what
+//! makes GC cost grow with thread count (Amdahl, §VI-A) and with job
+//! duration (§VI-C).
+
+#[derive(Clone, Debug)]
+pub struct GcConfig {
+    /// bytes allocated per optimized source (Julia temporaries)
+    pub alloc_per_task: f64,
+    /// heap size that triggers a collection, bytes
+    pub heap_limit: f64,
+    /// fixed pause per collection, seconds
+    pub pause_base: f64,
+    /// additional pause per heap byte, seconds/byte
+    pub pause_per_byte: f64,
+    /// fraction of the heap retained (live) after collection
+    pub retained_frac: f64,
+    /// slow heap growth per collection cycle (long-job effect §VI-C):
+    /// the retained fraction grows by this much per cycle, capped at 0.8
+    pub retained_growth: f64,
+}
+
+impl Default for GcConfig {
+    fn default() -> Self {
+        // Calibrated so that a 4-thread process at ~5 s/task spends
+        // ~15-25% of runtime in GC and a 16-thread process >1/3 (Fig 3).
+        GcConfig {
+            alloc_per_task: 100e6,
+            heap_limit: 2e9,
+            pause_base: 0.3,
+            pause_per_byte: 0.6e-9,
+            retained_frac: 0.2,
+            retained_growth: 0.005,
+        }
+    }
+}
+
+/// Per-process allocator state.
+#[derive(Clone, Debug, Default)]
+pub struct HeapState {
+    pub heap: f64,
+    pub cycles: u64,
+    pub retained: f64,
+}
+
+impl HeapState {
+    pub fn new(cfg: &GcConfig) -> HeapState {
+        HeapState { heap: 0.0, cycles: 0, retained: cfg.retained_frac }
+    }
+
+    /// Record a task's allocations; returns true if GC should trigger.
+    pub fn allocate(&mut self, cfg: &GcConfig, bytes: f64) -> bool {
+        self.heap += bytes;
+        self.heap >= cfg.heap_limit
+    }
+
+    /// Perform a collection; returns the pause duration.
+    pub fn collect(&mut self, cfg: &GcConfig) -> f64 {
+        let pause = cfg.pause_base + cfg.pause_per_byte * self.heap;
+        self.heap *= self.retained;
+        self.cycles += 1;
+        // long-running jobs retain more (fragmentation/growth, §VI-C)
+        self.retained = (self.retained + cfg.retained_growth).min(0.8);
+        pause
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triggers_at_limit() {
+        let cfg = GcConfig::default();
+        let mut h = HeapState::new(&cfg);
+        let mut triggered = false;
+        for _ in 0..100 {
+            if h.allocate(&cfg, cfg.alloc_per_task) {
+                triggered = true;
+                break;
+            }
+        }
+        assert!(triggered);
+        // 2e9 / alloc_per_task tasks per cycle
+        let want = (cfg.heap_limit / cfg.alloc_per_task).ceil();
+        assert!((h.heap / cfg.alloc_per_task - want).abs() < 2.0);
+    }
+
+    #[test]
+    fn collect_shrinks_heap_and_pauses() {
+        let cfg = GcConfig::default();
+        let mut h = HeapState::new(&cfg);
+        while !h.allocate(&cfg, cfg.alloc_per_task) {}
+        let before = h.heap;
+        let pause = h.collect(&cfg);
+        assert!(h.heap < 0.5 * before);
+        assert!(pause > cfg.pause_base);
+        assert!(pause < 5.0, "pause {pause}");
+        assert_eq!(h.cycles, 1);
+    }
+
+    #[test]
+    fn retained_fraction_grows_over_cycles() {
+        let cfg = GcConfig::default();
+        let mut h = HeapState::new(&cfg);
+        let r0 = h.retained;
+        for _ in 0..20 {
+            while !h.allocate(&cfg, cfg.alloc_per_task) {}
+            h.collect(&cfg);
+        }
+        assert!(h.retained > r0);
+        assert!(h.retained <= 0.8);
+    }
+}

@@ -1,0 +1,19 @@
+//! Simulated multi-node runtime — the testbed substitute for Cori
+//! (DESIGN.md §4.2).
+//!
+//! Executes the paper's three-phase algorithm (§III-D) over a
+//! discrete-event model of nodes × processes × threads, a fabric-modeled
+//! global-array store, the Dtree scheduler, and an (optional) emulation
+//! of Julia's serial stop-the-world garbage collector (§VIII-A). Task
+//! *costs* come either from a calibrated distribution or from measured
+//! real optimizations; everything else — scheduling, caching, fetches,
+//! GC barriers — is executed, not approximated.
+
+pub mod event;
+pub mod gc;
+pub mod sim;
+pub mod workload;
+
+pub use gc::GcConfig;
+pub use sim::{simulate, ClusterConfig, RunReport};
+pub use workload::{CostModel, Task, Workload};

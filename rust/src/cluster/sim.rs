@@ -1,0 +1,415 @@
+//! The discrete-event cluster simulator: phases 1–3 of §III-D over
+//! nodes × processes × threads, with Dtree scheduling, global-array
+//! image fetches over the modeled fabric, per-process image caches, and
+//! optional serial-GC emulation.
+
+use crate::dtree::{Dtree, DtreeConfig};
+use crate::ga::{Fabric, FabricConfig, GlobalArray, LruCache};
+use crate::metrics::{Breakdown, Component, Stats};
+
+use super::event::EventQueue;
+use super::gc::{GcConfig, HeapState};
+use super::workload::Workload;
+
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub nodes: usize,
+    pub procs_per_node: usize,
+    pub threads_per_proc: usize,
+    pub fabric: FabricConfig,
+    /// None = native Rust (no GC); Some = Julia serial-GC emulation
+    pub gc: Option<GcConfig>,
+    pub dtree: DtreeConfig,
+    /// network latency per scheduler hop, seconds
+    pub sched_hop_latency: f64,
+    /// fixed local scheduler overhead per request, seconds
+    pub sched_base: f64,
+    /// per-process image cache capacity, bytes
+    pub cache_bytes: f64,
+    /// aggregate parallel-filesystem bandwidth for phase 1, B/s
+    pub disk_bw: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            nodes: 1,
+            // paper §VI-A: "A single Cori Phase I node has 32 cores; we
+            // run 8 processes per node" with 4 threads each
+            procs_per_node: 8,
+            threads_per_proc: 4,
+            fabric: FabricConfig::default(),
+            gc: Some(GcConfig::default()),
+            dtree: DtreeConfig::default(),
+            sched_hop_latency: 50e-6,
+            sched_base: 20e-6,
+            cache_bytes: 8e9,
+            disk_bw: 700e9, // Cori Lustre aggregate (§V)
+        }
+    }
+}
+
+/// Results of one simulated run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// end-to-end simulated wall time, seconds
+    pub makespan: f64,
+    /// thread-seconds per runtime component (sums to ~threads*makespan)
+    pub breakdown: Breakdown,
+    /// the paper's headline metric
+    pub sources_per_sec: f64,
+    pub n_tasks: usize,
+    pub nodes: usize,
+    pub total_threads: usize,
+    /// image-cache hit rate across all processes
+    pub cache_hit_rate: f64,
+    /// bytes moved over the fabric
+    pub fabric_bytes: f64,
+    /// GC collections across all processes
+    pub gc_cycles: u64,
+    /// distribution of per-task total latency
+    pub task_stats: Stats,
+}
+
+impl RunReport {
+    /// Paper-style one-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "nodes={} threads={} tasks={} makespan={:.1}s src/s={:.2} | {}",
+            self.nodes,
+            self.total_threads,
+            self.n_tasks,
+            self.makespan,
+            self.sources_per_sec,
+            self.breakdown.table_row()
+        )
+    }
+}
+
+struct ProcState {
+    batch: std::collections::VecDeque<usize>,
+    cache: LruCache,
+    heap: HeapState,
+    gc_pending: bool,
+    parked: Vec<(usize, f64)>,
+    active_threads: usize,
+    done_threads: usize,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_gc(
+    proc: &mut ProcState,
+    gcc: &GcConfig,
+    now: f64,
+    breakdown: &mut Breakdown,
+    queue: &mut EventQueue,
+    p: usize,
+    gc_cycles: &mut u64,
+) {
+    let pause = proc.heap.collect(gcc);
+    *gc_cycles += 1;
+    let gc_end = now + pause;
+    let parked = std::mem::take(&mut proc.parked);
+    for (th, park_t) in parked {
+        breakdown.add(Component::Gc, gc_end - park_t);
+        queue.push(gc_end, p, th);
+    }
+    proc.gc_pending = false;
+}
+
+/// Run the three-phase algorithm over the workload.
+pub fn simulate(cfg: &ClusterConfig, workload: &Workload) -> RunReport {
+    let nprocs = cfg.nodes * cfg.procs_per_node;
+    let tpp = cfg.threads_per_proc;
+    let total_threads = nprocs * tpp;
+    let node_of = |p: usize| p / cfg.procs_per_node;
+
+    let ga = GlobalArray::round_robin(workload.field_bytes.clone(), nprocs);
+    let mut fabric = Fabric::new(cfg.fabric.clone(), cfg.nodes);
+    let mut dtree = Dtree::new(cfg.dtree.clone(), nprocs, workload.tasks.len());
+    let mut breakdown = Breakdown::new();
+    let mut task_stats = Stats::new();
+
+    // ---------------- phase 1+2: load images & catalog ----------------
+    // Processes read their chunks from the parallel FS concurrently; all
+    // processes synchronize before optimization (any image may be needed
+    // anywhere). Catalog load is folded in (it is tiny).
+    let per_proc_bw = cfg.disk_bw / nprocs as f64;
+    let phase1_end = ga
+        .bytes_per_proc()
+        .iter()
+        .map(|b| 0.05 + b / per_proc_bw)
+        .fold(0.0f64, f64::max);
+    breakdown.add(Component::ImageLoad, phase1_end * total_threads as f64);
+
+    // ---------------- phase 3: optimize sources ----------------
+    let gc_cfg = cfg.gc.clone();
+    let mut procs: Vec<ProcState> = (0..nprocs)
+        .map(|_| ProcState {
+            batch: Default::default(),
+            cache: LruCache::new(cfg.cache_bytes),
+            heap: gc_cfg.as_ref().map(HeapState::new).unwrap_or_default(),
+            gc_pending: false,
+            parked: Vec::new(),
+            active_threads: tpp,
+            done_threads: 0,
+        })
+        .collect();
+
+    let mut queue = EventQueue::new();
+    for p in 0..nprocs {
+        for t in 0..tpp {
+            queue.push(phase1_end, p, t);
+        }
+    }
+
+    let mut finish_time = vec![phase1_end; total_threads];
+    let mut gc_cycles = 0u64;
+    let mut makespan = phase1_end;
+
+    while let Some(ev) = queue.pop() {
+        let now = ev.time;
+        makespan = makespan.max(now);
+        let p = ev.proc;
+
+        // GC barrier: park until every active thread reaches a safepoint
+        if procs[p].gc_pending {
+            procs[p].parked.push((ev.thread, now));
+            if procs[p].parked.len() == procs[p].active_threads {
+                run_gc(
+                    &mut procs[p],
+                    gc_cfg.as_ref().expect("gc_pending requires gc config"),
+                    now,
+                    &mut breakdown,
+                    &mut queue,
+                    p,
+                    &mut gc_cycles,
+                );
+            }
+            continue;
+        }
+
+        // acquire work
+        let mut t_clock = now;
+        if procs[p].batch.is_empty() {
+            match dtree.request(p) {
+                Some(grant) => {
+                    let delay = cfg.sched_base + grant.hops as f64 * cfg.sched_hop_latency;
+                    breakdown.add(Component::Scheduling, delay);
+                    t_clock += delay;
+                    for i in grant.range.first..grant.range.last {
+                        procs[p].batch.push_back(i);
+                    }
+                }
+                None => {
+                    // no more work anywhere: thread terminates
+                    procs[p].active_threads -= 1;
+                    procs[p].done_threads += 1;
+                    finish_time[p * tpp + ev.thread] = t_clock;
+                    // a pending GC may now be unblocked (the terminated
+                    // thread no longer has to reach a safepoint)
+                    if procs[p].gc_pending
+                        && procs[p].active_threads > 0
+                        && procs[p].parked.len() == procs[p].active_threads
+                    {
+                        run_gc(
+                            &mut procs[p],
+                            gc_cfg.as_ref().expect("gc_pending requires gc config"),
+                            t_clock,
+                            &mut breakdown,
+                            &mut queue,
+                            p,
+                            &mut gc_cycles,
+                        );
+                    }
+                    continue;
+                }
+            }
+        }
+        let task_idx = procs[p].batch.pop_front().expect("batch nonempty");
+        let task = &workload.tasks[task_idx];
+        let t_start = t_clock;
+
+        // image fetches through cache + global array
+        for &field in &task.fields {
+            if procs[p].cache.contains(field as u64) {
+                continue;
+            }
+            let bytes = ga.bytes_of(field);
+            let owner = ga.owner_of(field);
+            let done = fabric.get(t_clock, bytes, node_of(owner), node_of(p));
+            breakdown.add(Component::GaFetch, done - t_clock);
+            t_clock = done;
+            procs[p].cache.insert(field as u64, bytes);
+        }
+
+        // optimize
+        breakdown.add(Component::Optimize, task.cost);
+        t_clock += task.cost;
+        task_stats.push(t_clock - t_start);
+
+        // allocations → possible GC trigger
+        if let Some(gcc) = &gc_cfg {
+            if procs[p].heap.allocate(gcc, gcc.alloc_per_task) {
+                procs[p].gc_pending = true;
+            }
+        }
+
+        queue.push(t_clock, p, ev.thread);
+    }
+
+    // drain: any still-pending GC parks can be discarded (work is done)
+    for p in &procs {
+        debug_assert!(p.batch.is_empty());
+    }
+
+    // load imbalance: idle tail per thread
+    for &ft in &finish_time {
+        breakdown.add(Component::LoadImbalance, (makespan - ft).max(0.0));
+    }
+
+    let (mut hits, mut misses) = (0u64, 0u64);
+    for p in &procs {
+        hits += p.cache.hits;
+        misses += p.cache.misses;
+    }
+
+    RunReport {
+        makespan,
+        sources_per_sec: workload.tasks.len() as f64 / makespan.max(1e-9),
+        n_tasks: workload.tasks.len(),
+        nodes: cfg.nodes,
+        total_threads,
+        cache_hit_rate: if hits + misses == 0 { 0.0 } else { hits as f64 / (hits + misses) as f64 },
+        fabric_bytes: fabric.bytes_moved,
+        gc_cycles,
+        breakdown,
+        task_stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::workload::{synthetic_workload, CostModel};
+
+    fn wl(n_tasks: usize, n_fields: usize) -> Workload {
+        synthetic_workload(n_tasks, n_fields, 2, &CostModel::Fixed(1.0), 120e6, 1)
+    }
+
+    fn no_gc(nodes: usize, threads: usize) -> ClusterConfig {
+        ClusterConfig {
+            nodes,
+            procs_per_node: 1,
+            threads_per_proc: threads,
+            gc: None,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn single_thread_makespan_is_total_cost() {
+        let w = wl(50, 4);
+        let r = simulate(&no_gc(1, 1), &w);
+        // 50 tasks x 1s + fetches + load; fetches are few (cache) and fast
+        assert!(r.makespan >= 50.0);
+        assert!(r.makespan < 52.0, "{}", r.makespan);
+        assert_eq!(r.n_tasks, 50);
+    }
+
+    #[test]
+    fn threads_scale_throughput_without_gc() {
+        let w = wl(256, 4);
+        let r1 = simulate(&no_gc(1, 1), &w);
+        let r4 = simulate(&no_gc(1, 4), &w);
+        let speedup = r1.makespan / r4.makespan;
+        assert!(speedup > 3.5, "speedup {speedup}");
+    }
+
+    #[test]
+    fn gc_adds_overhead_and_limits_thread_scaling() {
+        // paper-scale tasks (~5 s); GC calibration targets Fig 3 shares
+        let w = synthetic_workload(512, 4, 2, &CostModel::Fixed(5.0), 120e6, 1);
+        let mk = |threads: usize, gc: bool| ClusterConfig {
+            nodes: 1,
+            procs_per_node: 1,
+            threads_per_proc: threads,
+            gc: if gc { Some(GcConfig::default()) } else { None },
+            ..Default::default()
+        };
+        let r4 = simulate(&mk(4, true), &w);
+        let r16 = simulate(&mk(16, true), &w);
+        let frac4 = r4.breakdown.fraction(Component::Gc);
+        let frac16 = r16.breakdown.fraction(Component::Gc);
+        // Fig 3 shape: noticeable at 4 threads, much worse at 16
+        assert!((0.05..0.40).contains(&frac4), "gc share at 4 threads: {frac4}");
+        assert!(frac16 > 1.3 * frac4, "gc share grows with threads: {frac4} -> {frac16}");
+        // Fig 3: 16-thread efficiency clearly below ideal
+        let r16_nogc = simulate(&mk(16, false), &w);
+        assert!(r16.makespan > 1.15 * r16_nogc.makespan);
+    }
+
+    #[test]
+    fn all_tasks_processed_exactly_once() {
+        let w = wl(333, 7);
+        let r = simulate(&no_gc(2, 3), &w);
+        assert_eq!(r.task_stats.n, 333);
+        assert_eq!(r.n_tasks, 333);
+    }
+
+    #[test]
+    fn deterministic() {
+        let w = wl(200, 5);
+        let a = simulate(&no_gc(2, 2), &w);
+        let b = simulate(&no_gc(2, 2), &w);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.breakdown, b.breakdown);
+    }
+
+    #[test]
+    fn ga_fetch_share_grows_with_node_count() {
+        // weak scaling: tasks/node fixed; fetch share must rise
+        let mk = |nodes: usize| {
+            let w = synthetic_workload(
+                nodes * 64,
+                nodes * 16,
+                3,
+                &CostModel::Fixed(2.0),
+                120e6,
+                1,
+            );
+            let c = ClusterConfig {
+                nodes,
+                procs_per_node: 4,
+                threads_per_proc: 4,
+                gc: None,
+                cache_bytes: 360e6, // small cache → fetch traffic
+                ..Default::default()
+            };
+            simulate(&c, &w)
+        };
+        let small = mk(2);
+        let large = mk(32);
+        let fs = small.breakdown.fraction(Component::GaFetch);
+        let fl = large.breakdown.fraction(Component::GaFetch);
+        assert!(fl > fs, "fetch share must grow: {fs} -> {fl}");
+    }
+
+    #[test]
+    fn imbalance_appears_with_heavy_tail() {
+        let heavy = synthetic_workload(64, 4, 1, &CostModel::default(), 120e6, 3);
+        let r = simulate(&no_gc(4, 4), &heavy);
+        assert!(r.breakdown.get(Component::LoadImbalance) > 0.0);
+    }
+
+    #[test]
+    fn cache_hits_reduce_fabric_traffic() {
+        let w = wl(256, 4);
+        let big_cache = ClusterConfig { cache_bytes: 8e9, gc: None, ..no_gc(2, 2) };
+        let no_cache = ClusterConfig { cache_bytes: 1.0, gc: None, ..no_gc(2, 2) };
+        let rb = simulate(&big_cache, &w);
+        let rn = simulate(&no_cache, &w);
+        assert!(rb.fabric_bytes < 0.25 * rn.fabric_bytes, "{} vs {}", rb.fabric_bytes, rn.fabric_bytes);
+        assert!(rb.cache_hit_rate > 0.8);
+    }
+}

@@ -1,0 +1,243 @@
+//! The real (non-simulated) inference coordinator: the paper's three
+//! phases (§III-D) executed against the compiled artifacts.
+//!
+//! 1. Load images (FITS-lite dir or in-memory fields) into the shared
+//!    image store (the single-host stand-in for the global array).
+//! 2. Load the candidate catalog (spatially ordered).
+//! 3. Optimize sources: worker threads pull contiguous batches from a
+//!    shared Dtree, render neighbors into patch backgrounds, and run
+//!    trust-region Newton per source. Each worker owns a PJRT `Runtime`
+//!    (the client is not `Send`), mirroring the paper's
+//!    process-with-threads structure.
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::catalog::Catalog;
+use crate::dtree::{Dtree, DtreeConfig};
+use crate::imaging::{extract_patch, FieldImages, Patch, Survey};
+use crate::metrics::{Breakdown, Component, Stats, Stopwatch};
+use crate::model::layout as L;
+use crate::model::{extract_estimate, theta_init, Estimate, Prior, SourceParams};
+use crate::optim::NewtonConfig;
+use crate::runtime::{optimize_source, ElboEngine, Runtime};
+
+#[derive(Clone, Debug)]
+pub struct InferenceConfig {
+    pub threads: usize,
+    pub newton: NewtonConfig,
+    /// neighbor rendering radius, px
+    pub neighbor_radius: f64,
+    /// skip patches covering less than this fraction of valid pixels
+    pub min_coverage: f64,
+    pub dtree: DtreeConfig,
+    /// artifact directory
+    pub artifact_dir: std::path::PathBuf,
+}
+
+impl Default for InferenceConfig {
+    fn default() -> Self {
+        InferenceConfig {
+            threads: 1,
+            newton: NewtonConfig::default(),
+            neighbor_radius: 20.0,
+            min_coverage: 0.3,
+            dtree: DtreeConfig::default(),
+            artifact_dir: crate::runtime::default_artifact_dir(),
+        }
+    }
+}
+
+/// One inferred catalog row, with the posterior uncertainties that
+/// distinguish Celeste from heuristic pipelines.
+#[derive(Clone, Debug)]
+pub struct InferredSource {
+    pub id: usize,
+    /// absolute fitted position
+    pub pos: (f64, f64),
+    pub est: Estimate,
+    /// posterior SD of log flux (type-marginalized)
+    pub flux_logsd: f64,
+    /// posterior SDs of the four colors
+    pub color_sd: [f64; L::N_COLORS],
+    pub elbo: f64,
+    pub iterations: usize,
+    pub converged: bool,
+    pub flipped: bool,
+    pub n_epochs: usize,
+}
+
+/// Aggregate statistics of an inference run.
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    pub wall_secs: f64,
+    pub sources: usize,
+    pub converged: usize,
+    pub iters: Stats,
+    pub evals: Stats,
+    pub sources_per_sec: f64,
+    pub breakdown: Breakdown,
+}
+
+/// Extract posterior uncertainties from θ.
+fn uncertainties(t: &[f64; L::DIM]) -> (f64, [f64; L::N_COLORS]) {
+    let g = crate::model::sigmoid(t[L::I_A]);
+    let vs = t[L::I_FLUX_STAR + 1].exp();
+    let vg = t[L::I_FLUX_GAL + 1].exp();
+    let flux_logsd = ((1.0 - g) * vs + g * vg).sqrt();
+    let mut csd = [0.0; L::N_COLORS];
+    for i in 0..L::N_COLORS {
+        let vs = t[L::I_COLOR_VAR_STAR + i].exp();
+        let vg = t[L::I_COLOR_VAR_GAL + i].exp();
+        csd[i] = ((1.0 - g) * vs + g * vg).sqrt();
+    }
+    (flux_logsd, csd)
+}
+
+/// Run inference over all catalog entries. `fields` are the survey's
+/// rendered (or loaded) exposures.
+pub fn run_inference(
+    fields: &[FieldImages],
+    catalog: &Catalog,
+    prior: &Prior,
+    cfg: &InferenceConfig,
+) -> Result<(Vec<InferredSource>, RunStats)> {
+    let sw = Stopwatch::start();
+    let n = catalog.len();
+    let dtree = Mutex::new(Dtree::new(cfg.dtree.clone(), cfg.threads.max(1), n));
+    let results: Mutex<Vec<Option<InferredSource>>> = Mutex::new(vec![None; n]);
+    let breakdown = Mutex::new(Breakdown::new());
+    let iters = Mutex::new(Stats::new());
+    let evals = Mutex::new(Stats::new());
+
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::new();
+        for worker in 0..cfg.threads.max(1) {
+            let (dtree, results, breakdown, iters, evals) =
+                (&dtree, &results, &breakdown, &iters, &evals);
+            handles.push(scope.spawn(move || -> Result<()> {
+                // each worker owns its PJRT runtime (client is not Send)
+                let rt = Runtime::load_subset(
+                    &cfg.artifact_dir,
+                    &[L::ART_LIKE_AD, L::ART_LIKE_PALLAS, L::ART_KL],
+                )?;
+                let engine = ElboEngine::new(&rt, prior);
+                loop {
+                    let grant = dtree.lock().unwrap().request(worker);
+                    let Some(grant) = grant else { break };
+                    for idx in grant.range.first..grant.range.last {
+                        let t_all = Stopwatch::start();
+                        let entry = &catalog.entries[idx];
+                        // neighbors at their catalog estimates
+                        let neighbors: Vec<SourceParams> = catalog
+                            .neighbors_within(entry.pos, cfg.neighbor_radius, idx)
+                            .into_iter()
+                            .map(|j| catalog.entries[j].to_source())
+                            .collect();
+                        // patches from every exposure containing the source
+                        let mut patches: Vec<Patch> = Vec::new();
+                        for f in fields {
+                            if let Some(p) = extract_patch(f, entry.pos, &neighbors) {
+                                if p.coverage >= cfg.min_coverage {
+                                    patches.push(p);
+                                }
+                            }
+                        }
+                        let prep_secs = t_all.elapsed_secs();
+                        breakdown
+                            .lock()
+                            .unwrap()
+                            .add(Component::GaFetch, prep_secs);
+                        if patches.is_empty() {
+                            continue;
+                        }
+                        let t_opt = Stopwatch::start();
+                        let t0 = theta_init(&entry.to_source(), entry.p_gal);
+                        let fit = optimize_source(&engine, &patches, &t0, &cfg.newton);
+                        breakdown
+                            .lock()
+                            .unwrap()
+                            .add(Component::Optimize, t_opt.elapsed_secs());
+
+                        let est = extract_estimate(&fit.theta);
+                        let (flux_logsd, color_sd) = uncertainties(&fit.theta);
+                        let pr = patches[0].rect;
+                        let pos = (
+                            pr.x0 + L::PATCH as f64 / 2.0 + est.d_pos.0,
+                            pr.y0 + L::PATCH as f64 / 2.0 + est.d_pos.1,
+                        );
+                        iters.lock().unwrap().push(fit.result.iterations as f64);
+                        evals.lock().unwrap().push(fit.total_evals as f64);
+                        results.lock().unwrap()[idx] = Some(InferredSource {
+                            id: entry.id,
+                            pos,
+                            est,
+                            flux_logsd,
+                            color_sd,
+                            elbo: -fit.result.f,
+                            iterations: fit.result.iterations,
+                            converged: fit.result.converged(),
+                            flipped: fit.flip_won,
+                            n_epochs: patches.len(),
+                        });
+                    }
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().expect("worker panicked")?;
+        }
+        Ok(())
+    })?;
+
+    let out: Vec<InferredSource> = results.into_inner().unwrap().into_iter().flatten().collect();
+    let wall = sw.elapsed_secs();
+    let stats = RunStats {
+        wall_secs: wall,
+        sources: out.len(),
+        converged: out.iter().filter(|s| s.converged).count(),
+        iters: iters.into_inner().unwrap(),
+        evals: evals.into_inner().unwrap(),
+        sources_per_sec: out.len() as f64 / wall.max(1e-9),
+        breakdown: breakdown.into_inner().unwrap(),
+    };
+    Ok((out, stats))
+}
+
+/// Load every field found in a FITS-lite directory.
+pub fn load_fields_dir(dir: &Path) -> Result<Vec<FieldImages>> {
+    let mut ids = std::collections::BTreeSet::new();
+    for entry in std::fs::read_dir(dir)? {
+        let name = entry?.file_name();
+        let name = name.to_string_lossy().to_string();
+        if let Some(rest) = name.strip_prefix("field-") {
+            if let Some(idx) = rest.split("-band-").next() {
+                if let Ok(id) = idx.parse::<usize>() {
+                    ids.insert(id);
+                }
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for id in ids {
+        out.push(crate::fits::read_field(dir, id)?);
+    }
+    Ok(out)
+}
+
+/// Render a survey in memory (the generate step without disk I/O).
+pub fn render_survey(
+    survey: &Survey,
+    sources: &[SourceParams],
+    seed: u64,
+) -> Vec<FieldImages> {
+    let mut rng = crate::prng::Rng::new(seed);
+    survey
+        .fields
+        .iter()
+        .map(|g| crate::imaging::render_field(sources, g, &mut rng))
+        .collect()
+}

@@ -1,0 +1,269 @@
+//! Dtree: distributed dynamic scheduling (Pamnany et al. [12], §III-G).
+//!
+//! "Dtree organizes processes into a short tree for task distribution;
+//! the tree fan-out is configurable ... parents in the tree distribute
+//! batches of number ranges f–l ... in response to requests from child
+//! processes. The size of each batch reduces as T is approached; this
+//! balances load."
+//!
+//! Tasks are indices into the spatially-ordered catalog global array, so
+//! contiguous batches are spatially compact (paper §III-D).
+
+/// Half-open task range [first, last).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Range {
+    pub first: usize,
+    pub last: usize,
+}
+
+impl Range {
+    pub fn len(&self) -> usize {
+        self.last - self.first
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.first >= self.last
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct DtreeConfig {
+    /// children per tree node
+    pub fanout: usize,
+    /// smallest batch a parent hands out
+    pub min_batch: usize,
+    /// fraction of a node's remaining range handed to a requesting child
+    pub child_frac: f64,
+    /// fraction of the local range a worker claims per request
+    pub work_frac: f64,
+}
+
+impl Default for DtreeConfig {
+    fn default() -> Self {
+        DtreeConfig { fanout: 8, min_batch: 1, child_frac: 0.5, work_frac: 0.25 }
+    }
+}
+
+/// One per-process node of the tree. The whole tree lives in one address
+/// space here (the simulator plays all ranks), but the protocol — who asks
+/// whom, and how many hops a request takes — matches the distributed
+/// original, and `hops` lets the cluster model charge network latency.
+///
+/// Ranges are delivered directly from the root pool to the requesting
+/// leaf (guided self-scheduling: batch ∝ remaining / nprocs, shrinking
+/// as T is approached). Intermediate tree nodes exist for *routing* —
+/// requests climb parent links, which is what the hop-latency model
+/// charges — but do not stash ranges: stashed ranges would strand work
+/// inside one subtree, which the real Dtree avoids by forwarding.
+#[derive(Clone, Debug)]
+struct Node {
+    local: Range,
+}
+
+/// The scheduler state over `nprocs` processes.
+#[derive(Clone, Debug)]
+pub struct Dtree {
+    cfg: DtreeConfig,
+    nodes: Vec<Node>,
+    /// tasks not yet assigned to any node (owned by the root)
+    root_remaining: Range,
+    total: usize,
+    issued: usize,
+}
+
+/// Result of a work request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Grant {
+    pub range: Range,
+    /// tree levels traversed to satisfy the request (0 = local hit)
+    pub hops: usize,
+}
+
+impl Dtree {
+    pub fn new(cfg: DtreeConfig, nprocs: usize, total_tasks: usize) -> Dtree {
+        assert!(nprocs > 0);
+        Dtree {
+            cfg,
+            nodes: vec![Node { local: Range { first: 0, last: 0 } }; nprocs],
+            root_remaining: Range { first: 0, last: total_tasks },
+            total: total_tasks,
+            issued: 0,
+        }
+    }
+
+    fn parent(&self, p: usize) -> Option<usize> {
+        if p == 0 {
+            None
+        } else {
+            Some((p - 1) / self.cfg.fanout)
+        }
+    }
+
+    /// Tree depth of process p (root = 0).
+    pub fn depth(&self, p: usize) -> usize {
+        let mut d = 0;
+        let mut cur = p;
+        while let Some(q) = self.parent(cur) {
+            cur = q;
+            d += 1;
+        }
+        d
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.total - self.issued
+    }
+
+    /// Take a batch from a node's local range with the shrinking policy.
+    fn take_local(&mut self, p: usize) -> Option<Range> {
+        let local = &mut self.nodes[p].local;
+        if local.is_empty() {
+            return None;
+        }
+        let want = ((local.len() as f64 * self.cfg.work_frac).ceil() as usize)
+            .max(self.cfg.min_batch)
+            .min(local.len());
+        let r = Range { first: local.first, last: local.first + want };
+        local.first += want;
+        Some(r)
+    }
+
+    /// Refill node p's local range from the root pool (request routed up
+    /// the tree; the batch is delivered directly). Returns hops used.
+    fn refill(&mut self, p: usize) -> usize {
+        if self.root_remaining.is_empty() {
+            return self.depth(p);
+        }
+        let nprocs = self.nodes.len();
+        // guided self-scheduling with the Dtree shrink: batch ∝ remaining
+        let want = ((self.root_remaining.len() as f64 * self.cfg.child_frac
+            / nprocs as f64)
+            .ceil() as usize)
+            .max(self.cfg.min_batch)
+            .min(self.root_remaining.len());
+        self.nodes[p].local = Range {
+            first: self.root_remaining.first,
+            last: self.root_remaining.first + want,
+        };
+        self.root_remaining.first += want;
+        self.depth(p).max(1)
+    }
+
+    /// Request the next batch for process p. `None` = globally done.
+    pub fn request(&mut self, p: usize) -> Option<Grant> {
+        if let Some(range) = self.take_local(p) {
+            self.issued += range.len();
+            return Some(Grant { range, hops: 0 });
+        }
+        let hops = self.refill(p);
+        if let Some(range) = self.take_local(p) {
+            self.issued += range.len();
+            return Some(Grant { range, hops });
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(cfg: DtreeConfig, nprocs: usize, total: usize) -> Vec<Vec<Range>> {
+        let mut dt = Dtree::new(cfg, nprocs, total);
+        let mut got = vec![Vec::new(); nprocs];
+        // round-robin requests until exhausted
+        let mut active = true;
+        while active {
+            active = false;
+            for p in 0..nprocs {
+                if let Some(g) = dt.request(p) {
+                    got[p].push(g.range);
+                    active = true;
+                }
+            }
+        }
+        got
+    }
+
+    #[test]
+    fn distributes_every_task_exactly_once() {
+        for (nprocs, total) in [(1, 100), (8, 1000), (64, 3333), (256, 10_000)] {
+            let got = drain(DtreeConfig::default(), nprocs, total);
+            let mut seen = vec![false; total];
+            for ranges in &got {
+                for r in ranges {
+                    for i in r.first..r.last {
+                        assert!(!seen[i], "task {i} issued twice");
+                        seen[i] = true;
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "nprocs={nprocs} total={total}");
+        }
+    }
+
+    #[test]
+    fn batches_shrink_toward_the_end() {
+        let mut dt = Dtree::new(DtreeConfig::default(), 4, 10_000);
+        let mut sizes = Vec::new();
+        while let Some(g) = dt.request(0) {
+            sizes.push(g.range.len());
+            // other procs also draining
+            for p in 1..4 {
+                let _ = dt.request(p);
+            }
+        }
+        assert!(sizes.len() > 4);
+        let early: f64 =
+            sizes[..3].iter().sum::<usize>() as f64 / 3.0;
+        let late: f64 =
+            sizes[sizes.len() - 3..].iter().sum::<usize>() as f64 / 3.0;
+        assert!(late < early, "batches must shrink: early {early} late {late}");
+        assert!(*sizes.last().unwrap() <= DtreeConfig::default().min_batch.max(4));
+    }
+
+    #[test]
+    fn hops_bounded_by_tree_depth() {
+        let cfg = DtreeConfig { fanout: 4, ..Default::default() };
+        let mut dt = Dtree::new(cfg.clone(), 64, 5000);
+        let max_depth = (0..64).map(|p| dt.depth(p)).max().unwrap();
+        assert!(max_depth >= 2); // 64 procs at fanout 4 -> depth 3
+        for p in 0..64 {
+            if let Some(g) = dt.request(p) {
+                assert!(g.hops <= max_depth, "hops {} depth {max_depth}", g.hops);
+            }
+        }
+    }
+
+    #[test]
+    fn termination_returns_none_forever() {
+        let mut dt = Dtree::new(DtreeConfig::default(), 2, 10);
+        while dt.request(0).is_some() || dt.request(1).is_some() {}
+        for _ in 0..5 {
+            assert!(dt.request(0).is_none());
+            assert!(dt.request(1).is_none());
+        }
+        assert_eq!(dt.remaining(), 0);
+    }
+
+    #[test]
+    fn single_proc_gets_everything() {
+        let got = drain(DtreeConfig::default(), 1, 57);
+        assert_eq!(got[0].iter().map(Range::len).sum::<usize>(), 57);
+    }
+
+    #[test]
+    fn ranges_are_contiguous_batches() {
+        // spatial locality: each grant is one contiguous index range
+        let got = drain(DtreeConfig::default(), 16, 2000);
+        for ranges in &got {
+            for r in ranges {
+                assert!(r.last > r.first);
+            }
+        }
+    }
+}

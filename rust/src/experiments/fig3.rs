@@ -1,0 +1,81 @@
+//! Fig 3: single-node multi-threaded strong scaling — 154 light sources
+//! over 1..16 threads, with the serial-GC emulation on. The paper's
+//! observation: "scalability drops off beyond 4 threads; this is due to
+//! serial garbage collection."
+
+use crate::cluster::{simulate, ClusterConfig, CostModel, GcConfig};
+use crate::jsonlite::Value;
+use crate::metrics::Component;
+
+use super::{arr, num, obj};
+
+pub fn run(quick: bool) -> Value {
+    let thread_counts: &[usize] = if quick { &[1, 4, 16] } else { &[1, 2, 4, 8, 16] };
+    // one process with T threads (the paper's single-node study isolates
+    // the threading behaviour of one Julia process)
+    let n_sources = 154;
+
+    println!("== Fig 3: single-node thread scaling, {n_sources} sources ==");
+    println!("{:>7} {:>9} {:>8} {:>8} {:>8} | gc-off src/s", "threads", "src/s", "gc%", "sched%", "imbal%");
+
+    let mut rows = Vec::new();
+    for &t in thread_counts {
+        let workload = crate::cluster::workload::synthetic_workload(
+            n_sources,
+            4,
+            2,
+            &CostModel::default(),
+            120e6,
+            7,
+        );
+        let mk = |gc: Option<GcConfig>| ClusterConfig {
+            nodes: 1,
+            procs_per_node: 1,
+            threads_per_proc: t,
+            gc,
+            ..Default::default()
+        };
+        let r = simulate(&mk(Some(GcConfig::default())), &workload);
+        let r_nogc = simulate(&mk(None), &workload);
+        println!(
+            "{:>7} {:>9.3} {:>7.1}% {:>7.2}% {:>7.1}% | {:.3}",
+            t,
+            r.sources_per_sec,
+            100.0 * r.breakdown.fraction(Component::Gc),
+            100.0 * r.breakdown.fraction(Component::Scheduling),
+            100.0 * r.breakdown.fraction(Component::LoadImbalance),
+            r_nogc.sources_per_sec,
+        );
+        rows.push(obj(vec![
+            ("threads", num(t as f64)),
+            ("sources_per_sec", num(r.sources_per_sec)),
+            ("gc_frac", num(r.breakdown.fraction(Component::Gc))),
+            ("imbalance_frac", num(r.breakdown.fraction(Component::LoadImbalance))),
+            ("sources_per_sec_nogc", num(r_nogc.sources_per_sec)),
+            ("makespan", num(r.makespan)),
+        ]));
+    }
+    println!(
+        "(paper shape: near-linear to 4 threads, then a GC knee — the\n\
+         gc-off column is the native-Rust ablation the paper's §VIII begs for)"
+    );
+    obj(vec![("rows", arr(rows))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_shape_holds() {
+        let v = run(true);
+        let rows = v.get("rows").unwrap().as_arr().unwrap();
+        let get = |i: usize, k: &str| rows[i].get(k).unwrap().as_f64().unwrap();
+        // throughput grows with threads
+        assert!(get(2, "sources_per_sec") > get(0, "sources_per_sec"));
+        // GC share grows with threads (the knee)
+        assert!(get(2, "gc_frac") > get(1, "gc_frac"));
+        // 16-thread GC run is clearly below the no-GC ablation
+        assert!(get(2, "sources_per_sec_nogc") > 1.1 * get(2, "sources_per_sec"));
+    }
+}

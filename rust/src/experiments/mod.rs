@@ -1,0 +1,46 @@
+//! Experiment harnesses: one per table/figure of the paper's evaluation
+//! (§VI, §VII). Each prints the same rows/series the paper reports and
+//! returns a machine-readable JSON value that the CLI can persist.
+//!
+//! DESIGN.md §6 maps each experiment to the subsystems it exercises.
+
+pub mod ablations;
+pub mod fig1;
+pub mod fig3;
+pub mod fig45;
+pub mod newton_lbfgs;
+pub mod table1;
+
+use crate::jsonlite::Value;
+use std::collections::BTreeMap;
+
+/// Convenience: build a JSON object from key/value pairs (public for the
+/// CLI and examples).
+pub fn obj_pub(pairs: Vec<(&str, Value)>) -> Value {
+    obj(pairs)
+}
+
+/// Convenience: build a JSON object from key/value pairs.
+pub(crate) fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Value::Obj(m)
+}
+
+pub(crate) fn num(x: f64) -> Value {
+    Value::Num(x)
+}
+
+pub(crate) fn arr(xs: impl IntoIterator<Item = Value>) -> Value {
+    Value::Arr(xs.into_iter().collect())
+}
+
+/// Persist an experiment result under results/.
+pub fn save_result(name: &str, v: &Value) -> std::io::Result<std::path::PathBuf> {
+    std::fs::create_dir_all("results")?;
+    let path = std::path::PathBuf::from(format!("results/{name}.json"));
+    std::fs::write(&path, crate::jsonlite::to_string(v))?;
+    Ok(path)
+}

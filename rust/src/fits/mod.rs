@@ -1,0 +1,268 @@
+//! FITS-lite: a compact, self-describing binary container for field
+//! images — the stand-in for the SDSS FITS frame files (§IV).
+//!
+//! One file per (field, band), as in SDSS ("each field has images of it
+//! stored in five different files, one per filter band"). Layout:
+//!
+//! ```text
+//! magic  "CFTS"            4 bytes
+//! version u32              little-endian (all integers are LE)
+//! header  u32 count, then count x (key: len-prefixed utf8, value: f64)
+//! pixels  u64 count, then count x f32
+//! ```
+
+use std::fs::File;
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::imaging::render::BandImage;
+use crate::imaging::survey::FieldGeom;
+use crate::imaging::FieldImages;
+use crate::model::render::PixelRect;
+use crate::model::PsfBand;
+
+const MAGIC: &[u8; 4] = b"CFTS";
+const VERSION: u32 = 1;
+
+/// A parsed FITS-lite file: numeric header plus pixel payload.
+#[derive(Clone, Debug, Default)]
+pub struct FitsLite {
+    pub header: Vec<(String, f64)>,
+    pub pixels: Vec<f32>,
+}
+
+impl FitsLite {
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.header.iter().find(|(k, _)| k == key).map(|&(_, v)| v)
+    }
+
+    pub fn require(&self, key: &str) -> io::Result<f64> {
+        self.get(key).ok_or_else(|| {
+            io::Error::new(io::ErrorKind::InvalidData, format!("missing header key {key}"))
+        })
+    }
+
+    pub fn set(&mut self, key: &str, v: f64) {
+        self.header.push((key.to_string(), v));
+    }
+}
+
+pub fn write_fits(path: &Path, f: &FitsLite) -> io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(f.header.len() as u32).to_le_bytes())?;
+    for (k, v) in &f.header {
+        let kb = k.as_bytes();
+        w.write_all(&(kb.len() as u32).to_le_bytes())?;
+        w.write_all(kb)?;
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.write_all(&(f.pixels.len() as u64).to_le_bytes())?;
+    for px in &f.pixels {
+        w.write_all(&px.to_le_bytes())?;
+    }
+    w.flush()
+}
+
+pub fn read_fits(path: &Path) -> io::Result<FitsLite> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic"));
+    }
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let version = u32::from_le_bytes(b4);
+    if version != VERSION {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("unsupported version {version}"),
+        ));
+    }
+    r.read_exact(&mut b4)?;
+    let nh = u32::from_le_bytes(b4) as usize;
+    if nh > 10_000 {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "absurd header count"));
+    }
+    let mut header = Vec::with_capacity(nh);
+    for _ in 0..nh {
+        r.read_exact(&mut b4)?;
+        let klen = u32::from_le_bytes(b4) as usize;
+        if klen > 4096 {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "absurd key length"));
+        }
+        let mut kb = vec![0u8; klen];
+        r.read_exact(&mut kb)?;
+        let key = String::from_utf8(kb)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b8)?;
+        header.push((key, f64::from_le_bytes(b8)));
+    }
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let np = u64::from_le_bytes(b8) as usize;
+    let mut pixels = vec![0f32; np];
+    let mut buf = vec![0u8; np * 4];
+    r.read_exact(&mut buf)?;
+    for (i, px) in pixels.iter_mut().enumerate() {
+        *px = f32::from_le_bytes(buf[i * 4..i * 4 + 4].try_into().unwrap());
+    }
+    Ok(FitsLite { header, pixels })
+}
+
+/// Standard filename for a (field, band) file.
+pub fn band_filename(field_id: usize, band: usize) -> String {
+    format!("field-{field_id:06}-band-{band}.cfits")
+}
+
+/// Serialize one band of a field (geometry + observing metadata + pixels).
+pub fn band_to_fits(img: &BandImage, geom: &FieldGeom) -> FitsLite {
+    let mut f = FitsLite { header: vec![], pixels: img.pixels.clone() };
+    f.set("FIELD", geom.id as f64);
+    f.set("EPOCH", geom.epoch as f64);
+    f.set("BAND", img.band as f64);
+    f.set("X0", img.rect.x0);
+    f.set("Y0", img.rect.y0);
+    f.set("ROWS", img.rect.rows as f64);
+    f.set("COLS", img.rect.cols as f64);
+    f.set("GAIN", geom.gain[img.band]);
+    f.set("SKY", geom.sky[img.band]);
+    for (k, c) in geom.psf[img.band].iter().enumerate() {
+        for (p, v) in c.iter().enumerate() {
+            f.set(&format!("PSF{k}{p}"), *v);
+        }
+    }
+    f
+}
+
+/// Write a whole field (five files) into `dir`.
+pub fn write_field(dir: &Path, field: &FieldImages) -> io::Result<Vec<PathBuf>> {
+    std::fs::create_dir_all(dir)?;
+    let mut paths = Vec::new();
+    for band in &field.bands {
+        let path = dir.join(band_filename(field.field_id, band.band));
+        write_fits(&path, &band_to_fits(band, &field.geom))?;
+        paths.push(path);
+    }
+    Ok(paths)
+}
+
+/// Read a whole field back (requires all five band files).
+pub fn read_field(dir: &Path, field_id: usize) -> io::Result<FieldImages> {
+    let mut bands = Vec::with_capacity(5);
+    let mut geom: Option<FieldGeom> = None;
+    for band in 0..5 {
+        let f = read_fits(&dir.join(band_filename(field_id, band)))?;
+        let rect = PixelRect {
+            x0: f.require("X0")?,
+            y0: f.require("Y0")?,
+            rows: f.require("ROWS")? as usize,
+            cols: f.require("COLS")? as usize,
+        };
+        let g = geom.get_or_insert_with(|| FieldGeom {
+            id: field_id,
+            epoch: 0,
+            rect,
+            psf: [[[0.0; 6]; 2]; 5],
+            gain: [0.0; 5],
+            sky: [0.0; 5],
+        });
+        g.epoch = f.require("EPOCH")? as usize;
+        g.gain[band] = f.require("GAIN")?;
+        g.sky[band] = f.require("SKY")?;
+        let mut psf: PsfBand = [[0.0; 6]; 2];
+        for (k, c) in psf.iter_mut().enumerate() {
+            for (p, v) in c.iter_mut().enumerate() {
+                *v = f.require(&format!("PSF{k}{p}"))?;
+            }
+        }
+        g.psf[band] = psf;
+        if f.pixels.len() != rect.len() {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "pixel count mismatch"));
+        }
+        bands.push(BandImage { band, rect, pixels: f.pixels });
+    }
+    let geom = geom.unwrap();
+    Ok(FieldImages { field_id, epoch: geom.epoch, geom, bands })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::imaging::render::render_field;
+    use crate::imaging::survey::{Survey, SurveyConfig};
+    use crate::prng::Rng;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("celeste-fits-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip_raw() {
+        let d = tmpdir("raw");
+        let mut f = FitsLite { header: vec![], pixels: vec![1.5, -2.0, 3.25] };
+        f.set("A", 1.0);
+        f.set("LONG_KEY_NAME", -7.5);
+        let p = d.join("x.cfits");
+        write_fits(&p, &f).unwrap();
+        let g = read_fits(&p).unwrap();
+        assert_eq!(g.pixels, f.pixels);
+        assert_eq!(g.get("A"), Some(1.0));
+        assert_eq!(g.get("LONG_KEY_NAME"), Some(-7.5));
+        assert_eq!(g.get("MISSING"), None);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn rejects_corrupt_magic() {
+        let d = tmpdir("magic");
+        let p = d.join("bad.cfits");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(read_fits(&p).is_err());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let d = tmpdir("trunc");
+        let mut f = FitsLite { header: vec![], pixels: vec![0.0; 100] };
+        f.set("X", 1.0);
+        let p = d.join("t.cfits");
+        write_fits(&p, &f).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 10]).unwrap();
+        assert!(read_fits(&p).is_err());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn field_roundtrip() {
+        let survey = Survey::layout(SurveyConfig {
+            sky_width: 96.0,
+            sky_height: 96.0,
+            field_w: 96,
+            field_h: 96,
+            n_epochs: 1,
+            ..Default::default()
+        });
+        let mut rng = Rng::new(1);
+        let field = render_field(&[], &survey.fields[0], &mut rng);
+        let d = tmpdir("field");
+        write_field(&d, &field).unwrap();
+        let back = read_field(&d, field.field_id).unwrap();
+        assert_eq!(back.field_id, field.field_id);
+        assert_eq!(back.geom.rect, field.geom.rect);
+        for b in 0..5 {
+            assert_eq!(back.bands[b].pixels, field.bands[b].pixels);
+            assert_eq!(back.geom.psf[b], field.geom.psf[b]);
+            assert!((back.geom.sky[b] - field.geom.sky[b]).abs() < 1e-12);
+        }
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

@@ -1,0 +1,135 @@
+//! Byte-capacity LRU cache — the paper's "process-level cache of images
+//! and catalog entries" (§III-D).
+
+use std::collections::HashMap;
+
+/// LRU over u64 keys with a byte-capacity bound.
+#[derive(Clone, Debug)]
+pub struct LruCache {
+    capacity_bytes: f64,
+    used_bytes: f64,
+    /// key -> (bytes, last-use tick)
+    map: HashMap<u64, (f64, u64)>,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl LruCache {
+    pub fn new(capacity_bytes: f64) -> LruCache {
+        LruCache {
+            capacity_bytes,
+            used_bytes: 0.0,
+            map: HashMap::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn used_bytes(&self) -> f64 {
+        self.used_bytes
+    }
+
+    /// Probe the cache; refreshes recency on hit.
+    pub fn contains(&mut self, key: u64) -> bool {
+        self.tick += 1;
+        if let Some(e) = self.map.get_mut(&key) {
+            e.1 = self.tick;
+            self.hits += 1;
+            true
+        } else {
+            self.misses += 1;
+            false
+        }
+    }
+
+    /// Insert a key, evicting least-recently-used entries as needed.
+    /// Objects larger than the whole capacity are admitted alone.
+    pub fn insert(&mut self, key: u64, bytes: f64) {
+        self.tick += 1;
+        if let Some(e) = self.map.get_mut(&key) {
+            e.1 = self.tick;
+            return;
+        }
+        while !self.map.is_empty() && self.used_bytes + bytes > self.capacity_bytes {
+            // evict LRU
+            let (&victim, _) = self
+                .map
+                .iter()
+                .min_by(|a, b| a.1 .1.cmp(&b.1 .1))
+                .unwrap();
+            let (vb, _) = self.map.remove(&victim).unwrap();
+            self.used_bytes -= vb;
+        }
+        self.map.insert(key, (bytes, self.tick));
+        self.used_bytes += bytes;
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_and_miss_accounting() {
+        let mut c = LruCache::new(100.0);
+        assert!(!c.contains(1));
+        c.insert(1, 10.0);
+        assert!(c.contains(1));
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn evicts_lru_on_capacity() {
+        let mut c = LruCache::new(30.0);
+        c.insert(1, 10.0);
+        c.insert(2, 10.0);
+        c.insert(3, 10.0);
+        // touch 1 so 2 becomes LRU
+        assert!(c.contains(1));
+        c.insert(4, 10.0);
+        assert!(!c.contains(2), "2 should be evicted");
+        assert!(c.contains(1));
+        assert!(c.contains(3));
+        assert!(c.contains(4));
+        assert!(c.used_bytes() <= 30.0);
+    }
+
+    #[test]
+    fn oversized_object_admitted_alone() {
+        let mut c = LruCache::new(10.0);
+        c.insert(1, 5.0);
+        c.insert(2, 100.0);
+        assert!(c.contains(2));
+        assert!(!c.contains(1));
+    }
+
+    #[test]
+    fn reinsert_refreshes_not_duplicates() {
+        let mut c = LruCache::new(20.0);
+        c.insert(1, 10.0);
+        c.insert(1, 10.0);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.used_bytes(), 10.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! The imaging substrate: survey geometry, field rendering, Poisson
+//! observation, and patch extraction — the synthetic twin of the SDSS
+//! field/"frame" pipeline the paper consumes (§IV).
+
+pub mod patch;
+pub mod render;
+pub mod survey;
+
+pub use patch::{extract_patch, Patch};
+pub use render::{render_field, render_field_saturating, BandImage, FieldImages};
+pub use survey::{FieldGeom, Survey, SurveyConfig};

@@ -1,0 +1,211 @@
+//! Patch extraction: the fixed-shape (5 x 32 x 32) inputs the AOT
+//! artifacts consume, cut around a source from one field exposure.
+
+use crate::model::layout as L;
+use crate::model::render::PixelRect;
+use crate::model::{galaxy_comps, star_comps, SourceParams};
+
+use super::render::FieldImages;
+use super::survey::FieldGeom;
+
+/// One epoch's worth of artifact inputs for one source.
+#[derive(Clone, Debug)]
+pub struct Patch {
+    /// patch rect in global coordinates (PATCH x PATCH)
+    pub rect: PixelRect,
+    /// observed counts, [band][row*PATCH+col]
+    pub pixels: Vec<f64>,
+    /// background rate: sky + fixed neighbors, same layout
+    pub bg: Vec<f64>,
+    /// 1.0 where the pixel exists in the field, else 0.0
+    pub mask: Vec<f64>,
+    /// per-band PSF, flattened [band][comp][param]
+    pub psf: Vec<f64>,
+    /// per-band gain
+    pub gain: Vec<f64>,
+    /// fraction of valid pixels
+    pub coverage: f64,
+}
+
+const P: usize = L::PATCH;
+const B: usize = L::N_BANDS;
+
+/// Cut a PATCH x PATCH x bands patch centered at `center` out of `field`.
+///
+/// `neighbors` are rendered into the background at their current catalog
+/// estimates (the paper's decoupling: neighbors stay fixed while this
+/// source is optimized). Returns None if the patch misses the field.
+pub fn extract_patch(
+    field: &FieldImages,
+    center: (f64, f64),
+    neighbors: &[SourceParams],
+) -> Option<Patch> {
+    // integer patch origin so pixel centers align with the field grid
+    let x0 = (center.0 - P as f64 / 2.0).round();
+    let y0 = (center.1 - P as f64 / 2.0).round();
+    let rect = PixelRect { x0, y0, rows: P, cols: P };
+    let frect = field.geom.rect;
+    rect.intersect(&frect)?;
+
+    let mut pixels = vec![0f64; B * P * P];
+    let mut bg = vec![0f64; B * P * P];
+    let mut mask = vec![0f64; B * P * P];
+    let mut psf = vec![0f64; B * L::K_PSF * L::PSF_PARAMS];
+    let mut gain = vec![0f64; B];
+
+    let mut valid = 0usize;
+    for b in 0..B {
+        let img = &field.bands[b];
+        // neighbor background: sky + fixed neighbor mixtures, f64 then cast
+        let mut nb = vec![field.geom.sky[b]; P * P];
+        for n in neighbors {
+            super::render::accumulate_source(&mut nb, &rect, n, &field.geom, b, 1.0);
+        }
+        for r in 0..P {
+            let gy = y0 + r as f64 + 0.5;
+            for c in 0..P {
+                let gx = x0 + c as f64 + 0.5;
+                let idx = b * P * P + r * P + c;
+                if let Some(v) = img.at_global(gx, gy) {
+                    pixels[idx] = v as f64;
+                    mask[idx] = 1.0;
+                    if b == 0 {
+                        valid += 1;
+                    }
+                }
+                bg[idx] = nb[r * P + c];
+            }
+        }
+        for k in 0..L::K_PSF {
+            for p in 0..L::PSF_PARAMS {
+                psf[(b * L::K_PSF + k) * L::PSF_PARAMS + p] =
+                    field.geom.psf[b][k][p];
+            }
+        }
+        gain[b] = field.geom.gain[b];
+    }
+
+    Some(Patch {
+        rect,
+        pixels,
+        bg,
+        mask,
+        psf,
+        gain,
+        coverage: valid as f64 / (P * P) as f64,
+    })
+}
+
+/// Expected *own-source* rate over a patch (no sky, no neighbors) — used
+/// by tests and by the Photo baseline's model-image subtraction.
+pub fn own_rate(patch_rect: &PixelRect, s: &SourceParams, geom: &FieldGeom, band: usize) -> Vec<f64> {
+    let mut buf = vec![0.0; patch_rect.len()];
+    let amp = geom.gain[band] * s.flux_in_band(band);
+    if s.is_galaxy {
+        let comps = galaxy_comps(s.pos, &geom.psf[band], &s.shape);
+        crate::model::accumulate_mixture(&mut buf, patch_rect, &comps, amp);
+    } else {
+        let comps = star_comps(s.pos, &geom.psf[band]);
+        crate::model::accumulate_mixture(&mut buf, patch_rect, &comps, amp);
+    }
+    buf
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::imaging::render::render_field;
+    use crate::imaging::survey::{Survey, SurveyConfig};
+    use crate::model::GalaxyShape;
+    use crate::prng::Rng;
+
+    fn setup() -> (Survey, FieldImages, SourceParams) {
+        let survey = Survey::layout(SurveyConfig {
+            sky_width: 256.0,
+            sky_height: 256.0,
+            field_w: 256,
+            field_h: 256,
+            n_epochs: 1,
+            jitter: 0.0,
+            ..Default::default()
+        });
+        let s = SourceParams {
+            pos: (128.0, 128.0),
+            is_galaxy: false,
+            flux_r: 20_000.0,
+            colors: [0.1; 4],
+            shape: GalaxyShape::point_like(),
+        };
+        let mut rng = Rng::new(3);
+        let f = render_field(std::slice::from_ref(&s), &survey.fields[0], &mut rng);
+        (survey, f, s)
+    }
+
+    #[test]
+    fn interior_patch_fully_covered() {
+        let (_s, f, src) = setup();
+        let p = extract_patch(&f, src.pos, &[]).unwrap();
+        assert_eq!(p.coverage, 1.0);
+        assert!(p.mask.iter().all(|&m| m == 1.0));
+        assert_eq!(p.pixels.len(), 5 * 32 * 32);
+    }
+
+    #[test]
+    fn boundary_patch_partially_masked() {
+        let (_s, f, _) = setup();
+        let p = extract_patch(&f, (4.0, 128.0), &[]).unwrap();
+        assert!(p.coverage > 0.0 && p.coverage < 1.0, "coverage {}", p.coverage);
+        // masked pixels must be zero-filled
+        for (px, m) in p.pixels.iter().zip(&p.mask) {
+            if *m == 0.0 {
+                assert_eq!(*px, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn far_patch_is_none() {
+        let (_s, f, _) = setup();
+        assert!(extract_patch(&f, (10_000.0, 10_000.0), &[]).is_none());
+    }
+
+    #[test]
+    fn neighbor_raises_background() {
+        let (_s, f, src) = setup();
+        let neighbor = SourceParams {
+            pos: (124.0, 128.0),
+            is_galaxy: false,
+            flux_r: 500.0,
+            colors: [0.0; 4],
+            shape: GalaxyShape::point_like(),
+        };
+        let p0 = extract_patch(&f, src.pos, &[]).unwrap();
+        let p1 = extract_patch(&f, src.pos, &[neighbor]).unwrap();
+        let b0: f64 = p0.bg.iter().map(|&x| x as f64).sum();
+        let b1: f64 = p1.bg.iter().map(|&x| x as f64).sum();
+        assert!(b1 > b0 + 100.0, "neighbor must contribute to bg: {b0} vs {b1}");
+    }
+
+    #[test]
+    fn patch_contains_source_flux() {
+        let (_s, f, src) = setup();
+        let p = extract_patch(&f, src.pos, &[]).unwrap();
+        // band 2: sum(pixels - bg) ~ gain * flux
+        let b = 2;
+        let mut excess = 0.0;
+        for i in 0..(32 * 32) {
+            let idx = b * 32 * 32 + i;
+            excess += (p.pixels[idx] - p.bg[idx]) as f64;
+        }
+        let want = f.geom.gain[b] * src.flux_r;
+        assert!((excess - want).abs() / want < 0.15, "excess {excess} want {want}");
+    }
+
+    #[test]
+    fn psf_gain_passthrough() {
+        let (_s, f, src) = setup();
+        let p = extract_patch(&f, src.pos, &[]).unwrap();
+        assert_eq!(p.gain[2], f.geom.gain[2]);
+        assert_eq!(p.psf[0], f.geom.psf[0][0][0]);
+    }
+}

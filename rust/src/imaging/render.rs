@@ -1,0 +1,210 @@
+//! Field rendering and Poisson observation: the forward model at survey
+//! scale, used to synthesize datasets (and by the coordinator to render
+//! fixed neighbors into patch backgrounds).
+
+use crate::model::render::PixelRect;
+use crate::model::{galaxy_comps, star_comps, SourceParams};
+use crate::prng::Rng;
+
+use super::survey::FieldGeom;
+
+/// One band of one field: expected rate and observed counts.
+#[derive(Clone, Debug)]
+pub struct BandImage {
+    pub band: usize,
+    pub rect: PixelRect,
+    /// observed Poisson counts
+    pub pixels: Vec<f32>,
+}
+
+impl BandImage {
+    /// Value at global pixel (x, y); None if outside.
+    pub fn at_global(&self, x: f64, y: f64) -> Option<f32> {
+        let c = (x - self.rect.x0).floor();
+        let r = (y - self.rect.y0).floor();
+        if c < 0.0 || r < 0.0 || c >= self.rect.cols as f64 || r >= self.rect.rows as f64 {
+            return None;
+        }
+        Some(self.pixels[r as usize * self.rect.cols + c as usize])
+    }
+}
+
+/// All five bands of one field exposure.
+#[derive(Clone, Debug)]
+pub struct FieldImages {
+    pub field_id: usize,
+    pub epoch: usize,
+    pub geom: FieldGeom,
+    pub bands: Vec<BandImage>,
+}
+
+impl FieldImages {
+    /// Total bytes of pixel payload (for the global-array store model).
+    pub fn nbytes(&self) -> usize {
+        self.bands.iter().map(|b| b.pixels.len() * 4).sum()
+    }
+}
+
+/// Extra rect margin when deciding which sources contribute to a field —
+/// bright wings can reach in from outside.
+const SOURCE_MARGIN: f64 = 24.0;
+
+/// Accumulate the expected rate image of one band (sky + all sources).
+pub fn expected_rate_band(
+    sources: &[SourceParams],
+    geom: &FieldGeom,
+    band: usize,
+) -> Vec<f64> {
+    let rect = geom.rect;
+    let mut rate = vec![geom.sky[band]; rect.len()];
+    for s in sources {
+        if s.pos.0 < rect.x0 - SOURCE_MARGIN
+            || s.pos.0 > rect.x0 + rect.cols as f64 + SOURCE_MARGIN
+            || s.pos.1 < rect.y0 - SOURCE_MARGIN
+            || s.pos.1 > rect.y0 + rect.rows as f64 + SOURCE_MARGIN
+        {
+            continue;
+        }
+        accumulate_source(&mut rate, &rect, s, geom, band, 1.0);
+    }
+    rate
+}
+
+/// Add `scale * gain * flux_b * profile` of one source into `buf` over `rect`.
+pub fn accumulate_source(
+    buf: &mut [f64],
+    rect: &PixelRect,
+    s: &SourceParams,
+    geom: &FieldGeom,
+    band: usize,
+    scale: f64,
+) {
+    let amp = scale * geom.gain[band] * s.flux_in_band(band);
+    if s.is_galaxy {
+        let comps = galaxy_comps(s.pos, &geom.psf[band], &s.shape);
+        crate::model::accumulate_mixture(buf, rect, &comps, amp);
+    } else {
+        let comps = star_comps(s.pos, &geom.psf[band]);
+        crate::model::accumulate_mixture(buf, rect, &comps, amp);
+    }
+}
+
+/// Render one field exposure: expected rates then Poisson observation.
+pub fn render_field(sources: &[SourceParams], geom: &FieldGeom, rng: &mut Rng) -> FieldImages {
+    let mut bands = Vec::with_capacity(5);
+    for band in 0..5 {
+        let rate = expected_rate_band(sources, geom, band);
+        let pixels: Vec<f32> = rate.iter().map(|&r| rng.poisson(r) as f32).collect();
+        bands.push(BandImage { band, rect: geom.rect, pixels });
+    }
+    FieldImages { field_id: geom.id, epoch: geom.epoch, geom: geom.clone(), bands }
+}
+
+/// Render a field with saturation: pixels above `limit` are clipped (and
+/// NOT flagged) — reproduces the systematic the paper blames for Photo's
+/// brightness advantage in Table I (§VII).
+pub fn render_field_saturating(
+    sources: &[SourceParams],
+    geom: &FieldGeom,
+    rng: &mut Rng,
+    limit: f64,
+) -> FieldImages {
+    let mut f = render_field(sources, geom, rng);
+    for b in &mut f.bands {
+        for p in &mut b.pixels {
+            if *p as f64 > limit {
+                *p = limit as f32;
+            }
+        }
+    }
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::imaging::survey::{Survey, SurveyConfig};
+    use crate::model::GalaxyShape;
+
+    fn tiny_survey() -> Survey {
+        Survey::layout(SurveyConfig {
+            sky_width: 128.0,
+            sky_height: 128.0,
+            field_w: 128,
+            field_h: 128,
+            n_epochs: 1,
+            jitter: 0.0,
+            ..Default::default()
+        })
+    }
+
+    fn star_at(x: f64, y: f64, flux: f64) -> SourceParams {
+        SourceParams {
+            pos: (x, y),
+            is_galaxy: false,
+            flux_r: flux,
+            colors: [0.0; 4],
+            shape: GalaxyShape::point_like(),
+        }
+    }
+
+    #[test]
+    fn rate_includes_sky_everywhere() {
+        let survey = tiny_survey();
+        let geom = &survey.fields[0];
+        let rate = expected_rate_band(&[], geom, 2);
+        for &r in &rate {
+            assert!((r - geom.sky[2]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn source_flux_lands_in_rate() {
+        let survey = tiny_survey();
+        let geom = &survey.fields[0];
+        let s = star_at(64.0, 64.0, 500.0);
+        let rate = expected_rate_band(&[s], geom, 2);
+        let total: f64 = rate.iter().sum();
+        let sky_total = geom.sky[2] * 128.0 * 128.0;
+        let excess = total - sky_total;
+        let want = geom.gain[2] * 500.0;
+        assert!((excess - want).abs() / want < 0.01, "excess {excess} want {want}");
+    }
+
+    #[test]
+    fn poisson_observation_near_rate() {
+        let survey = tiny_survey();
+        let geom = &survey.fields[0];
+        let s = star_at(64.0, 64.0, 2000.0);
+        let mut rng = Rng::new(5);
+        let f = render_field(&[s.clone()], geom, &mut rng);
+        let rate = expected_rate_band(&[s], geom, 2);
+        let obs: f64 = f.bands[2].pixels.iter().map(|&p| p as f64).sum();
+        let exp: f64 = rate.iter().sum();
+        assert!((obs - exp).abs() / exp < 0.01, "obs {obs} exp {exp}");
+    }
+
+    #[test]
+    fn saturation_clips() {
+        let survey = tiny_survey();
+        let geom = &survey.fields[0];
+        let s = star_at(64.0, 64.0, 5e6);
+        let mut rng = Rng::new(6);
+        let f = render_field_saturating(&[s], geom, &mut rng, 10_000.0);
+        let max = f.bands[2].pixels.iter().cloned().fold(0.0f32, f32::max);
+        assert!(max <= 10_000.0);
+    }
+
+    #[test]
+    fn at_global_indexing() {
+        let survey = tiny_survey();
+        let geom = &survey.fields[0];
+        let mut rng = Rng::new(7);
+        let f = render_field(&[], geom, &mut rng);
+        let b = &f.bands[0];
+        assert!(b.at_global(0.5, 0.5).is_some());
+        assert!(b.at_global(-1.0, 0.5).is_none());
+        assert!(b.at_global(0.5, 500.0).is_none());
+        assert_eq!(b.at_global(0.5, 0.5).unwrap(), b.pixels[0]);
+    }
+}

@@ -1,0 +1,233 @@
+//! Survey geometry: how fields tile (and overlap) the sky.
+//!
+//! SDSS images the sky in "fields" along drift-scan stripes; adjacent
+//! fields overlap, and separate runs re-image the same region (paper
+//! Fig 1). We reproduce that: a jittered grid of fields with configurable
+//! overlap, and `n_epochs` independent passes (each with its own seeing),
+//! so one light source generally appears in several images.
+
+use crate::model::render::PixelRect;
+use crate::model::PsfBand;
+use crate::prng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct SurveyConfig {
+    /// sky extent, pixels
+    pub sky_width: f64,
+    pub sky_height: f64,
+    /// field size, pixels (paper: 2048 x 1361; scaled down for tests)
+    pub field_w: usize,
+    pub field_h: usize,
+    /// fraction of a field shared with each neighbor (0..0.5)
+    pub overlap: f64,
+    /// number of complete imaging passes over the sky
+    pub n_epochs: usize,
+    /// random jitter of field origins, pixels
+    pub jitter: f64,
+    /// mean sky background per band (counts/pixel)
+    pub sky_level: [f64; 5],
+    /// per-band gain (counts per flux unit)
+    pub gain: [f64; 5],
+    /// seeing: PSF core width varies per field uniformly in this range
+    pub seeing: (f64, f64),
+    pub seed: u64,
+}
+
+impl Default for SurveyConfig {
+    fn default() -> Self {
+        SurveyConfig {
+            sky_width: 2048.0,
+            sky_height: 1361.0,
+            field_w: 512,
+            field_h: 341,
+            overlap: 0.12,
+            n_epochs: 1,
+            jitter: 8.0,
+            sky_level: [30.0, 60.0, 80.0, 70.0, 40.0],
+            gain: [0.6, 1.0, 1.0, 0.9, 0.7],
+            seeing: (0.9, 1.6),
+            seed: 7,
+        }
+    }
+}
+
+/// Geometry + per-band observing conditions of one field exposure.
+#[derive(Clone, Debug)]
+pub struct FieldGeom {
+    pub id: usize,
+    pub epoch: usize,
+    pub rect: PixelRect,
+    pub psf: [PsfBand; 5],
+    pub gain: [f64; 5],
+    pub sky: [f64; 5],
+}
+
+/// A fully-laid-out survey.
+#[derive(Clone, Debug)]
+pub struct Survey {
+    pub config: SurveyConfig,
+    pub fields: Vec<FieldGeom>,
+}
+
+/// A plausible 2-component PSF for a given per-band seeing width.
+pub fn make_psf(width: f64, rng: &mut Rng) -> PsfBand {
+    let w2 = width * width;
+    let e = 0.1 * w2 * (rng.uniform() - 0.5); // slight ellipticity
+    [
+        [0.8, 0.0, 0.0, w2, e, w2 * (1.0 + 0.08 * (rng.uniform() - 0.5))],
+        [
+            0.2,
+            0.15 * (rng.uniform() - 0.5),
+            0.15 * (rng.uniform() - 0.5),
+            2.8 * w2,
+            -e,
+            2.8 * w2,
+        ],
+    ]
+}
+
+impl Survey {
+    /// Lay out the survey: for each epoch, a jittered overlapping grid.
+    pub fn layout(config: SurveyConfig) -> Survey {
+        let mut rng = Rng::new(config.seed);
+        let mut fields = Vec::new();
+        let step_x = config.field_w as f64 * (1.0 - config.overlap);
+        let step_y = config.field_h as f64 * (1.0 - config.overlap);
+        let nx = (config.sky_width / step_x).ceil().max(1.0) as usize;
+        let ny = (config.sky_height / step_y).ceil().max(1.0) as usize;
+        let mut id = 0;
+        for epoch in 0..config.n_epochs {
+            for iy in 0..ny {
+                for ix in 0..nx {
+                    let jx = rng.uniform_in(-config.jitter, config.jitter);
+                    let jy = rng.uniform_in(-config.jitter, config.jitter);
+                    let x0 = (ix as f64 * step_x + jx)
+                        .clamp(0.0, (config.sky_width - config.field_w as f64).max(0.0));
+                    let y0 = (iy as f64 * step_y + jy)
+                        .clamp(0.0, (config.sky_height - config.field_h as f64).max(0.0));
+                    let rect = PixelRect {
+                        x0: x0.round(),
+                        y0: y0.round(),
+                        rows: config.field_h,
+                        cols: config.field_w,
+                    };
+                    let mut psf = [[[0.0; 6]; 2]; 5];
+                    let mut sky = [0.0; 5];
+                    let base_seeing = rng.uniform_in(config.seeing.0, config.seeing.1);
+                    for b in 0..5 {
+                        // band-dependent seeing, as in conftest.default_psf
+                        psf[b] = make_psf(base_seeing * (1.0 + 0.1 * b as f64), &mut rng);
+                        sky[b] = config.sky_level[b] * rng.uniform_in(0.85, 1.15);
+                    }
+                    fields.push(FieldGeom {
+                        id,
+                        epoch,
+                        rect,
+                        psf,
+                        gain: config.gain,
+                        sky,
+                    });
+                    id += 1;
+                }
+            }
+        }
+        Survey { config, fields }
+    }
+
+    /// All fields whose pixel rect contains the global position (with a
+    /// margin so patches stay inside).
+    pub fn fields_containing(&self, pos: (f64, f64), margin: f64) -> Vec<&FieldGeom> {
+        self.fields
+            .iter()
+            .filter(|f| {
+                pos.0 >= f.rect.x0 + margin
+                    && pos.0 < f.rect.x0 + f.rect.cols as f64 - margin
+                    && pos.1 >= f.rect.y0 + margin
+                    && pos.1 < f.rect.y0 + f.rect.rows as f64 - margin
+            })
+            .collect()
+    }
+
+    /// Count of (unordered) overlapping same-epoch field pairs — the Fig 1
+    /// statistic.
+    pub fn overlap_pairs(&self) -> usize {
+        let mut n = 0;
+        for (i, a) in self.fields.iter().enumerate() {
+            for b in &self.fields[i + 1..] {
+                if a.epoch == b.epoch && a.rect.intersect(&b.rect).is_some() {
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> SurveyConfig {
+        SurveyConfig {
+            sky_width: 600.0,
+            sky_height: 400.0,
+            field_w: 256,
+            field_h: 192,
+            n_epochs: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn covers_sky() {
+        let s = Survey::layout(small());
+        assert!(!s.fields.is_empty());
+        // every interior point is inside at least one epoch-0 field
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let p = (rng.uniform_in(5.0, 595.0), rng.uniform_in(5.0, 395.0));
+            let hit = s
+                .fields
+                .iter()
+                .filter(|f| f.epoch == 0)
+                .any(|f| {
+                    p.0 >= f.rect.x0
+                        && p.0 < f.rect.x0 + f.rect.cols as f64
+                        && p.1 >= f.rect.y0
+                        && p.1 < f.rect.y0 + f.rect.rows as f64
+                });
+            assert!(hit, "uncovered {p:?}");
+        }
+    }
+
+    #[test]
+    fn epochs_multiply_fields() {
+        let one = Survey::layout(SurveyConfig { n_epochs: 1, ..small() });
+        let two = Survey::layout(SurveyConfig { n_epochs: 2, ..small() });
+        assert_eq!(two.fields.len(), 2 * one.fields.len());
+    }
+
+    #[test]
+    fn fields_overlap() {
+        let s = Survey::layout(small());
+        assert!(s.overlap_pairs() > 0, "survey must have overlapping fields (Fig 1)");
+    }
+
+    #[test]
+    fn multiple_epochs_see_same_source() {
+        let s = Survey::layout(small());
+        let hits = s.fields_containing((300.0, 200.0), 16.0);
+        assert!(hits.len() >= 2, "a central point should be imaged in >= 2 fields");
+    }
+
+    #[test]
+    fn psf_weights_normalized() {
+        let s = Survey::layout(small());
+        for f in &s.fields {
+            for b in 0..5 {
+                let total: f64 = f.psf[b].iter().map(|c| c[0]).sum();
+                assert!((total - 1.0).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! Celeste-rs: scalable Bayesian inference for astronomical catalogs.
+//!
+//! Reproduction of "Learning an Astronomical Catalog of the Visible
+//! Universe through Scalable Bayesian Inference" (CS.DC 2016) as a
+//! three-layer Rust + JAX + Pallas system. See DESIGN.md.
+pub mod benchkit;
+pub mod catalog;
+pub mod cli;
+pub mod coordinator;
+pub mod cluster;
+pub mod dtree;
+pub mod experiments;
+pub mod fits;
+pub mod imaging;
+pub mod ga;
+pub mod jsonlite;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod prng;
+pub mod quickcheck;
+pub mod optim;
+pub mod photo;
+pub mod runtime;
+pub mod sky;

@@ -1,0 +1,115 @@
+//! Cholesky factorization and SPD solves.
+
+use super::Mat;
+
+/// Lower-triangular Cholesky factor of a symmetric positive-definite
+/// matrix. Returns `None` if the matrix is not (numerically) SPD.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 || !s.is_finite() {
+                    return None;
+                }
+                l[(i, i)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L Lᵀ x = b given the Cholesky factor `l`.
+pub fn solve_cholesky(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    // forward: L y = b
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[(i, k)] * y[k];
+        }
+        y[i] = s / l[(i, i)];
+    }
+    // backward: Lᵀ x = y
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= l[(k, i)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    x
+}
+
+/// One-shot SPD solve; `None` if `a` is not SPD.
+pub fn solve_spd(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    cholesky(a).map(|l| solve_cholesky(&l, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn random_spd(n: usize, rng: &mut Rng) -> Mat {
+        // A = B Bᵀ + n * I is SPD
+        let mut b = Mat::zeros(n, n);
+        for v in &mut b.data {
+            *v = rng.normal();
+        }
+        let mut a = b.matmul(&b.transpose());
+        a.add_diag(n as f64);
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut rng = Rng::new(1);
+        for n in [1, 2, 5, 27] {
+            let a = random_spd(n, &mut rng);
+            let l = cholesky(&a).expect("SPD");
+            let rec = l.matmul(&l.transpose());
+            for i in 0..n {
+                for j in 0..n {
+                    assert!((rec[(i, j)] - a[(i, j)]).abs() < 1e-9 * (1.0 + a.max_abs()));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn solve_residual_small() {
+        let mut rng = Rng::new(2);
+        for n in [2, 8, 27] {
+            let a = random_spd(n, &mut rng);
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let x = solve_spd(&a, &b).unwrap();
+            let r = crate::linalg::sub(&a.matvec(&x), &b);
+            assert!(crate::linalg::norm2(&r) < 1e-8 * crate::linalg::norm2(&b).max(1.0));
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn rejects_nan() {
+        let mut a = Mat::eye(3);
+        a[(1, 1)] = f64::NAN;
+        assert!(cholesky(&a).is_none());
+    }
+}

@@ -1,0 +1,177 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method.
+//!
+//! Robust and accurate for the small (≈27-dim) Hessians Celeste optimizes;
+//! O(n³) per sweep with a handful of sweeps to converge.
+
+use super::Mat;
+
+/// Eigendecomposition A = V diag(values) Vᵀ with `values` ascending and
+/// `vectors` holding eigenvectors as **columns**.
+#[derive(Clone, Debug)]
+pub struct Eig {
+    pub values: Vec<f64>,
+    pub vectors: Mat,
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+pub fn sym_eig(a: &Mat) -> Eig {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut a = a.clone();
+    a.symmetrize();
+    let mut v = Mat::eye(n);
+
+    let max_sweeps = 64;
+    for _ in 0..max_sweeps {
+        // off-diagonal Frobenius norm
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += a[(i, j)] * a[(i, j)];
+            }
+        }
+        if off.sqrt() <= 1e-14 * (1.0 + a.max_abs()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a[(p, q)];
+                // skip already-negligible elements (relative threshold) —
+                // cuts the later sweeps' work dramatically
+                let small = 1e-15 * (a[(p, p)].abs() + a[(q, q)].abs());
+                if apq.abs() <= small.max(1e-300) {
+                    continue;
+                }
+                let app = a[(p, p)];
+                let aqq = a[(q, q)];
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q of A
+                for k in 0..n {
+                    let akp = a[(k, p)];
+                    let akq = a[(k, q)];
+                    a[(k, p)] = c * akp - s * akq;
+                    a[(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[(p, k)];
+                    let aqk = a[(q, k)];
+                    a[(p, k)] = c * apk - s * aqk;
+                    a[(q, k)] = s * apk + c * aqk;
+                }
+                // accumulate rotations into V (columns are eigenvectors)
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // extract + sort ascending
+    let mut idx: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+    idx.sort_by(|&i, &j| diag[i].partial_cmp(&diag[j]).unwrap());
+    let values: Vec<f64> = idx.iter().map(|&i| diag[i]).collect();
+    let mut vectors = Mat::zeros(n, n);
+    for (newc, &oldc) in idx.iter().enumerate() {
+        for r in 0..n {
+            vectors[(r, newc)] = v[(r, oldc)];
+        }
+    }
+    Eig { values, vectors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn random_sym(n: usize, rng: &mut Rng) -> Mat {
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let x = rng.normal();
+                a[(i, j)] = x;
+                a[(j, i)] = x;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Mat::from_rows(&[&[3.0, 0.0], &[0.0, 1.0]]);
+        let e = sym_eig(&a);
+        assert!((e.values[0] - 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3
+        let a = Mat::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+        let e = sym_eig(&a);
+        assert!((e.values[0] - 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction_and_orthogonality() {
+        let mut rng = Rng::new(4);
+        for n in [3, 10, 27] {
+            let a = random_sym(n, &mut rng);
+            let e = sym_eig(&a);
+            // V Vᵀ = I
+            let vvt = e.vectors.matmul(&e.vectors.transpose());
+            for i in 0..n {
+                for j in 0..n {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((vvt[(i, j)] - want).abs() < 1e-10);
+                }
+            }
+            // V diag(w) Vᵀ = A
+            let mut d = Mat::zeros(n, n);
+            for i in 0..n {
+                d[(i, i)] = e.values[i];
+            }
+            let rec = e.vectors.matmul(&d).matmul(&e.vectors.transpose());
+            for i in 0..n {
+                for j in 0..n {
+                    assert!(
+                        (rec[(i, j)] - a[(i, j)]).abs() < 1e-9 * (1.0 + a.max_abs()),
+                        "n={n} ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn values_sorted_ascending() {
+        let mut rng = Rng::new(9);
+        let a = random_sym(12, &mut rng);
+        let e = sym_eig(&a);
+        for w in e.values.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let mut rng = Rng::new(6);
+        let a = random_sym(9, &mut rng);
+        let tr: f64 = (0..9).map(|i| a[(i, i)]).sum();
+        let e = sym_eig(&a);
+        let sum: f64 = e.values.iter().sum();
+        assert!((tr - sum).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,274 @@
+//! celeste — the launcher.
+//!
+//! Subcommands:
+//!   smoke                              PJRT + artifact sanity check
+//!   generate  --out DIR [...]          synthesize a survey to FITS-lite
+//!   infer     --data DIR [...]         run Bayesian inference (phases 1-3)
+//!   photo     --data DIR [--coadd]     run the heuristic baseline
+//!   experiment NAME [--quick] [...]    regenerate a paper table/figure
+//!       NAME ∈ fig1 | fig3 | fig4 | fig5 | fig6 | table1 | newton-vs-lbfgs | all
+
+use anyhow::{bail, Result};
+
+use celeste::catalog::noisy_catalog;
+use celeste::cli::Cli;
+use celeste::coordinator::{load_fields_dir, run_inference, InferenceConfig};
+use celeste::experiments;
+use celeste::imaging::{Survey, SurveyConfig};
+use celeste::jsonlite::Value;
+use celeste::model::Prior;
+use celeste::photo::{coadd, run_photo, PhotoConfig};
+use celeste::prng::Rng;
+use celeste::sky::{generate, SkyConfig};
+
+fn main() -> Result<()> {
+    let cli = Cli::from_env();
+    match cli.command.as_str() {
+        "smoke" => cmd_smoke(),
+        "generate" => cmd_generate(&cli),
+        "infer" => cmd_infer(&cli),
+        "photo" => cmd_photo(&cli),
+        "experiment" => cmd_experiment(&cli),
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; see `celeste help`"),
+    }
+}
+
+const HELP: &str = "\
+celeste — scalable Bayesian inference for astronomical catalogs
+
+USAGE: celeste <command> [flags]
+
+  smoke                            check PJRT and compiled artifacts
+  generate --out DIR               synthesize a survey
+           [--sources N] [--epochs E] [--seed S] [--width W] [--height H]
+  infer    --data DIR              run inference over a generated survey
+           [--threads N] [--out FILE]
+  photo    --data DIR [--coadd]    run the heuristic baseline pipeline
+  experiment NAME [--quick]        regenerate a paper table/figure:
+           fig1 fig3 fig4 fig5 fig6 ablations table1 newton-vs-lbfgs all
+";
+
+fn cmd_smoke() -> Result<()> {
+    println!("{}", celeste::runtime::pjrt_smoke()?);
+    let dir = celeste::runtime::default_artifact_dir();
+    match celeste::runtime::Manifest::load(&dir) {
+        Ok(m) => println!("manifest ok: {} artifacts in {:?}", m.artifacts.len(), dir),
+        Err(e) => println!("manifest NOT ready ({e}); run `make artifacts`"),
+    }
+    Ok(())
+}
+
+fn cmd_generate(cli: &Cli) -> Result<()> {
+    let out = std::path::PathBuf::from(cli.flag_str("out", "data"));
+    let n = cli.flag_usize("sources", 500);
+    let epochs = cli.flag_usize("epochs", 2);
+    let seed = cli.flag_u64("seed", 42);
+    let width = cli.flag_f64("width", 1024.0);
+    let height = cli.flag_f64("height", 680.0);
+
+    let sky = generate(&SkyConfig { width, height, n_sources: n, seed, ..Default::default() });
+    let survey = Survey::layout(SurveyConfig {
+        sky_width: width,
+        sky_height: height,
+        n_epochs: epochs,
+        seed: seed ^ 0xa5,
+        ..Default::default()
+    });
+    let mut rng = Rng::new(seed ^ 0x5a);
+    std::fs::create_dir_all(&out)?;
+    for geom in &survey.fields {
+        let field = celeste::imaging::render_field(&sky.sources, geom, &mut rng);
+        celeste::fits::write_field(&out, &field)?;
+    }
+    // write the truth + a noisy init catalog
+    let mut rng2 = Rng::new(seed ^ 0x77);
+    let catalog = noisy_catalog(&sky.sources, width, height, &mut rng2, 0.7, 0.25);
+    let truth_json = catalog_truth_json(&sky.sources);
+    std::fs::write(out.join("truth.json"), celeste::jsonlite::to_string(&truth_json))?;
+    let init_json = catalog_init_json(&catalog);
+    std::fs::write(out.join("catalog.json"), celeste::jsonlite::to_string(&init_json))?;
+    println!(
+        "generated {} fields x 5 bands, {} sources -> {:?}",
+        survey.fields.len(),
+        n,
+        out
+    );
+    Ok(())
+}
+
+fn catalog_truth_json(sources: &[celeste::model::SourceParams]) -> Value {
+    Value::Arr(
+        sources
+            .iter()
+            .map(|s| {
+                experiments::obj_pub(vec![
+                    ("x", Value::Num(s.pos.0)),
+                    ("y", Value::Num(s.pos.1)),
+                    ("is_galaxy", Value::Bool(s.is_galaxy)),
+                    ("flux_r", Value::Num(s.flux_r)),
+                    ("scale", Value::Num(s.shape.scale)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn catalog_init_json(catalog: &celeste::catalog::Catalog) -> Value {
+    Value::Arr(
+        catalog
+            .entries
+            .iter()
+            .map(|e| {
+                experiments::obj_pub(vec![
+                    ("id", Value::Num(e.id as f64)),
+                    ("x", Value::Num(e.pos.0)),
+                    ("y", Value::Num(e.pos.1)),
+                    ("p_gal", Value::Num(e.p_gal)),
+                    ("flux_r", Value::Num(e.flux_r)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn cmd_infer(cli: &Cli) -> Result<()> {
+    let data = std::path::PathBuf::from(cli.flag_str("data", "data"));
+    let threads = cli.flag_usize("threads", 1);
+    let out = cli.flag_str("out", "catalog_out.json");
+
+    let fields = load_fields_dir(&data)?;
+    if fields.is_empty() {
+        bail!("no fields in {data:?}; run `celeste generate` first");
+    }
+    // reconstruct the init catalog from catalog.json
+    let cat_text = std::fs::read_to_string(data.join("catalog.json"))?;
+    let cat_v = celeste::jsonlite::parse(&cat_text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let (mut width, mut height) = (0.0f64, 0.0f64);
+    for f in &fields {
+        width = width.max(f.geom.rect.x0 + f.geom.rect.cols as f64);
+        height = height.max(f.geom.rect.y0 + f.geom.rect.rows as f64);
+    }
+    let entries: Vec<celeste::catalog::CatalogEntry> = cat_v
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .enumerate()
+        .map(|(i, e)| celeste::catalog::CatalogEntry {
+            id: i,
+            pos: (
+                e.get("x").and_then(Value::as_f64).unwrap_or(0.0),
+                e.get("y").and_then(Value::as_f64).unwrap_or(0.0),
+            ),
+            p_gal: e.get("p_gal").and_then(Value::as_f64).unwrap_or(0.5),
+            flux_r: e.get("flux_r").and_then(Value::as_f64).unwrap_or(100.0),
+            colors: [0.4, 0.3, 0.2, 0.1],
+            shape: celeste::model::GalaxyShape::point_like(),
+        })
+        .collect();
+    let catalog = celeste::catalog::Catalog::new(entries, width, height);
+    let prior = Prior::default();
+    let cfg = InferenceConfig { threads, ..Default::default() };
+    println!(
+        "inferring {} sources over {} exposures with {} thread(s)...",
+        catalog.len(),
+        fields.len(),
+        threads
+    );
+    let (inferred, stats) = run_inference(&fields, &catalog, &prior, &cfg)?;
+    println!(
+        "done: {} sources, {}/{} converged, {:.2} src/s (mean {:.1} Newton iters)",
+        stats.sources,
+        stats.converged,
+        stats.sources,
+        stats.sources_per_sec,
+        stats.iters.mean()
+    );
+    let rows: Vec<Value> = inferred
+        .iter()
+        .map(|s| {
+            experiments::obj_pub(vec![
+                ("id", Value::Num(s.id as f64)),
+                ("x", Value::Num(s.pos.0)),
+                ("y", Value::Num(s.pos.1)),
+                ("p_gal", Value::Num(s.est.p_gal)),
+                ("flux_r", Value::Num(s.est.flux_r)),
+                ("flux_logsd", Value::Num(s.flux_logsd)),
+                ("scale", Value::Num(s.est.shape.scale)),
+                ("elbo", Value::Num(s.elbo)),
+                ("iterations", Value::Num(s.iterations as f64)),
+                ("converged", Value::Bool(s.converged)),
+            ])
+        })
+        .collect();
+    std::fs::write(out, celeste::jsonlite::to_string(&Value::Arr(rows)))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_photo(cli: &Cli) -> Result<()> {
+    let data = std::path::PathBuf::from(cli.flag_str("data", "data"));
+    let fields = load_fields_dir(&data)?;
+    if fields.is_empty() {
+        bail!("no fields in {data:?}");
+    }
+    let use_coadd = cli.flag_bool("coadd");
+    let mut found = Vec::new();
+    if use_coadd {
+        // coadd groups of fields with identical rects
+        let mut groups: std::collections::BTreeMap<String, Vec<&celeste::imaging::FieldImages>> =
+            Default::default();
+        for f in &fields {
+            let key = format!("{:?}", f.geom.rect);
+            groups.entry(key).or_default().push(f);
+        }
+        for fs in groups.values() {
+            let owned: Vec<celeste::imaging::FieldImages> = fs.iter().map(|f| (*f).clone()).collect();
+            found.extend(run_photo(&coadd(&owned), &PhotoConfig::default()));
+        }
+    } else {
+        for f in &fields {
+            found.extend(run_photo(f, &PhotoConfig::default()));
+        }
+    }
+    println!("photo found {} detections across {} field-exposures", found.len(), fields.len());
+    Ok(())
+}
+
+fn cmd_experiment(cli: &Cli) -> Result<()> {
+    let name = cli.positional.first().map(String::as_str).unwrap_or("all");
+    let quick = cli.flag_bool("quick");
+    let threads = cli.flag_usize("threads", 1);
+    let run_one = |n: &str| -> Result<()> {
+        let v = match n {
+            "fig1" => experiments::fig1::run(quick),
+            "fig3" => experiments::fig3::run(quick),
+            "fig4" => experiments::fig45::run_weak(quick),
+            "fig5" => experiments::fig45::run_strong(quick),
+            "fig6" => {
+                // fig 6 is the sources/sec view of figs 4+5
+                let w = experiments::fig45::run_weak(quick);
+                let s = experiments::fig45::run_strong(quick);
+                experiments::obj_pub(vec![("weak", w), ("strong", s)])
+            }
+            "table1" => experiments::table1::run(quick, threads)?,
+            "ablations" => experiments::ablations::run(quick),
+            "newton-vs-lbfgs" => experiments::newton_lbfgs::run(quick)?,
+            other => bail!("unknown experiment {other}"),
+        };
+        let path = experiments::save_result(n, &v)?;
+        println!("(saved {path:?})\n");
+        Ok(())
+    };
+    if name == "all" {
+        for n in ["fig1", "fig3", "fig4", "fig5", "ablations", "table1", "newton-vs-lbfgs"] {
+            run_one(n)?;
+        }
+        Ok(())
+    } else {
+        run_one(name)
+    }
+}

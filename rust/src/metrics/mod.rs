@@ -1,0 +1,223 @@
+//! Runtime accounting: the six components the paper partitions measured
+//! runtime into (§VI): "(a) garbage collection time, (b) image load time,
+//! (c) load imbalance, (d) the time taken in retrieving elements of the
+//! global arrays used, (e) dynamic scheduling overhead, and (f) source
+//! optimization time."
+
+use std::fmt;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Component {
+    Gc,
+    ImageLoad,
+    LoadImbalance,
+    GaFetch,
+    Scheduling,
+    Optimize,
+}
+
+pub const COMPONENTS: [Component; 6] = [
+    Component::Gc,
+    Component::ImageLoad,
+    Component::LoadImbalance,
+    Component::GaFetch,
+    Component::Scheduling,
+    Component::Optimize,
+];
+
+impl Component {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Component::Gc => "gc",
+            Component::ImageLoad => "image_load",
+            Component::LoadImbalance => "load_imbalance",
+            Component::GaFetch => "ga_fetch",
+            Component::Scheduling => "scheduling",
+            Component::Optimize => "optimize",
+        }
+    }
+
+    fn index(&self) -> usize {
+        COMPONENTS.iter().position(|c| c == self).unwrap()
+    }
+}
+
+/// Seconds attributed to each component (simulated or wall time).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Breakdown {
+    secs: [f64; 6],
+}
+
+impl Breakdown {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, c: Component, secs: f64) {
+        debug_assert!(secs >= -1e-9, "negative time for {c:?}: {secs}");
+        self.secs[c.index()] += secs.max(0.0);
+    }
+
+    pub fn get(&self, c: Component) -> f64 {
+        self.secs[c.index()]
+    }
+
+    pub fn total(&self) -> f64 {
+        self.secs.iter().sum()
+    }
+
+    pub fn merge(&mut self, other: &Breakdown) {
+        for i in 0..6 {
+            self.secs[i] += other.secs[i];
+        }
+    }
+
+    /// Scale all components (e.g. to average across nodes).
+    pub fn scaled(&self, k: f64) -> Breakdown {
+        let mut out = self.clone();
+        for s in &mut out.secs {
+            *s *= k;
+        }
+        out
+    }
+
+    /// Component share of the total, in [0, 1].
+    pub fn fraction(&self, c: Component) -> f64 {
+        let t = self.total();
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.get(c) / t
+        }
+    }
+
+    /// Render the paper-style stacked table row.
+    pub fn table_row(&self) -> String {
+        COMPONENTS
+            .iter()
+            .map(|c| format!("{}={:.1}s ({:.1}%)", c.name(), self.get(*c), 100.0 * self.fraction(*c)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    }
+}
+
+impl fmt::Display for Breakdown {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.table_row())
+    }
+}
+
+/// Wall-clock stopwatch for the real (non-simulated) execution paths.
+pub struct Stopwatch {
+    start: std::time::Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: std::time::Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Simple streaming statistics (for task-time distributions etc.).
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    pub n: u64,
+    pub sum: f64,
+    pub sum2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn new() -> Stats {
+        Stats { n: 0, sum: 0.0, sum2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.sum2 += x * x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        (self.sum2 / self.n as f64 - self.mean().powi(2)).max(0.0)
+    }
+
+    pub fn sd(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn merge(&mut self, o: &Stats) {
+        self.n += o.n;
+        self.sum += o.sum;
+        self.sum2 += o.sum2;
+        self.min = self.min.min(o.min);
+        self.max = self.max.max(o.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_accumulates() {
+        let mut b = Breakdown::new();
+        b.add(Component::Gc, 2.0);
+        b.add(Component::Gc, 1.0);
+        b.add(Component::Optimize, 7.0);
+        assert_eq!(b.get(Component::Gc), 3.0);
+        assert_eq!(b.total(), 10.0);
+        assert!((b.fraction(Component::Gc) - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_and_scale() {
+        let mut a = Breakdown::new();
+        a.add(Component::GaFetch, 4.0);
+        let mut b = Breakdown::new();
+        b.add(Component::GaFetch, 2.0);
+        b.add(Component::Scheduling, 1.0);
+        a.merge(&b);
+        assert_eq!(a.get(Component::GaFetch), 6.0);
+        let half = a.scaled(0.5);
+        assert_eq!(half.get(Component::GaFetch), 3.0);
+        assert_eq!(half.get(Component::Scheduling), 0.5);
+    }
+
+    #[test]
+    fn stats_moments() {
+        let mut s = Stats::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert_eq!(s.n, 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.var() - 1.25).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn empty_breakdown_fraction_zero() {
+        let b = Breakdown::new();
+        assert_eq!(b.fraction(Component::Gc), 0.0);
+    }
+}

@@ -1,0 +1,171 @@
+//! Effective Gaussian components — the Rust mirror of
+//! `model.build_inputs` on the Python side (validated for parity by the
+//! integration test against the `render_pallas` artifact).
+
+use super::layout as L;
+use super::params::GalaxyShape;
+
+/// One effective (post-PSF-convolution) Gaussian component:
+/// (w_eff, mx, my, p00, p01, p11) — weight with the bivariate-normal
+/// normalization folded in, mean, and precision entries.
+pub type EffComp = [f64; L::COMP_PARAMS];
+
+/// One PSF component: (w, dx, dy, cxx, cxy, cyy).
+pub type PsfComp = [f64; L::PSF_PARAMS];
+/// Per-band PSF.
+pub type PsfBand = [PsfComp; L::K_PSF];
+
+/// Fold the normalization into the weight and invert the covariance.
+fn fold_norm(w: f64, cxx: f64, cxy: f64, cyy: f64) -> (f64, f64, f64, f64) {
+    let det = cxx * cyy - cxy * cxy;
+    debug_assert!(det > 0.0, "covariance not PD: {cxx} {cxy} {cyy}");
+    let w_eff = w / (2.0 * std::f64::consts::PI * det.sqrt());
+    (w_eff, cyy / det, -cxy / det, cxx / det)
+}
+
+/// Star components: the PSF translated to `center`.
+pub fn star_comps(center: (f64, f64), psf: &PsfBand) -> [EffComp; L::K_STAR] {
+    let mut out = [[0.0; L::COMP_PARAMS]; L::K_STAR];
+    for (o, p) in out.iter_mut().zip(psf.iter()) {
+        let (w_eff, p00, p01, p11) = fold_norm(p[0], p[3], p[4], p[5]);
+        *o = [w_eff, center.0 + p[1], center.1 + p[2], p00, p01, p11];
+    }
+    out
+}
+
+/// Unit-profile galaxy covariance: scale² R diag(1, q²) Rᵀ.
+pub fn galaxy_base_cov(shape: &GalaxyShape) -> (f64, f64, f64) {
+    let (s, c) = shape.angle.sin_cos();
+    let s1 = shape.scale * shape.scale;
+    let s2 = s1 * shape.axis_ratio * shape.axis_ratio;
+    (
+        c * c * s1 + s * s * s2,
+        c * s * (s1 - s2),
+        s * s * s1 + c * c * s2,
+    )
+}
+
+/// Galaxy components: each profile component convolved with each PSF
+/// component (Gaussian ⊛ Gaussian, analytic).
+pub fn galaxy_comps(
+    center: (f64, f64),
+    psf: &PsfBand,
+    shape: &GalaxyShape,
+) -> [EffComp; L::K_GAL] {
+    let (vxx, vxy, vyy) = galaxy_base_cov(shape);
+    let mut out = [[0.0; L::COMP_PARAMS]; L::K_GAL];
+    let mut idx = 0;
+    let profiles: [(&[f64; L::K_PROFILE], &[f64; L::K_PROFILE], f64); 2] = [
+        (&L::PROFILE_EXP_AMP, &L::PROFILE_EXP_VAR, 1.0 - shape.p_dev),
+        (&L::PROFILE_DEV_AMP, &L::PROFILE_DEV_VAR, shape.p_dev),
+    ];
+    for (amps, vars, mix) in profiles {
+        for i in 0..L::K_PROFILE {
+            for p in psf.iter() {
+                let w = amps[i] * mix * p[0];
+                let cxx = vars[i] * vxx + p[3];
+                let cxy = vars[i] * vxy + p[4];
+                let cyy = vars[i] * vyy + p[5];
+                let (w_eff, p00, p01, p11) = fold_norm(w, cxx, cxy, cyy);
+                out[idx] = [w_eff, center.0 + p[1], center.1 + p[2], p00, p01, p11];
+                idx += 1;
+            }
+        }
+    }
+    debug_assert_eq!(idx, L::K_GAL);
+    out
+}
+
+/// First and second moments of the per-band luminosity under the
+/// variational lognormal/color factors (mirror of
+/// `ref.band_loglum_moments`).
+pub fn band_loglum_moments(
+    flux_mean: f64,
+    flux_var: f64,
+    color_mean: &[f64; L::N_COLORS],
+    color_var: &[f64; L::N_COLORS],
+) -> ([f64; L::N_BANDS], [f64; L::N_BANDS]) {
+    let mut m1 = [0.0; L::N_BANDS];
+    let mut m2 = [0.0; L::N_BANDS];
+    for b in 0..L::N_BANDS {
+        let mut m = flux_mean;
+        let mut v = flux_var;
+        for i in 0..L::N_COLORS {
+            m += L::COLOR_COEF[b][i] * color_mean[i];
+            v += L::COLOR_COEF[b][i].abs() * color_var[i];
+        }
+        m1[b] = (m + 0.5 * v).exp();
+        m2[b] = (2.0 * m + 2.0 * v).exp();
+    }
+    (m1, m2)
+}
+
+/// Analytic integral of an effective-component mixture over the plane.
+pub fn mixture_integral(comps: &[EffComp]) -> f64 {
+    comps
+        .iter()
+        .map(|c| {
+            let det_p = c[3] * c[5] - c[4] * c[4];
+            c[0] * 2.0 * std::f64::consts::PI / det_p.sqrt()
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_psf() -> PsfBand {
+        [
+            [0.7, 0.0, 0.0, 1.0, 0.05, 1.0],
+            [0.3, 0.1, -0.1, 2.5, -0.1, 2.5],
+        ]
+    }
+
+    #[test]
+    fn star_mixture_integrates_to_one() {
+        let comps = star_comps((16.0, 16.0), &test_psf());
+        assert!((mixture_integral(&comps) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn galaxy_mixture_integrates_to_one() {
+        let shape = GalaxyShape { p_dev: 0.4, axis_ratio: 0.6, angle: 0.9, scale: 2.3 };
+        let comps = galaxy_comps((16.0, 16.0), &test_psf(), &shape);
+        assert!((mixture_integral(&comps) - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn galaxy_cov_round_source_is_isotropic() {
+        let shape = GalaxyShape { p_dev: 0.5, axis_ratio: 1.0 - 1e-12, angle: 1.2, scale: 2.0 };
+        let (vxx, vxy, vyy) = galaxy_base_cov(&shape);
+        assert!((vxx - 4.0).abs() < 1e-6);
+        assert!((vyy - 4.0).abs() < 1e-6);
+        assert!(vxy.abs() < 1e-6);
+    }
+
+    #[test]
+    fn galaxy_cov_angle_rotates() {
+        let shape0 = GalaxyShape { p_dev: 0.5, axis_ratio: 0.5, angle: 0.0, scale: 2.0 };
+        let (vxx0, _, vyy0) = galaxy_base_cov(&shape0);
+        assert!(vxx0 > vyy0); // major axis along x at angle 0
+        let shape90 = GalaxyShape { angle: std::f64::consts::FRAC_PI_2, ..shape0 };
+        let (vxx9, _, vyy9) = galaxy_base_cov(&shape90);
+        assert!((vxx9 - vyy0).abs() < 1e-9);
+        assert!((vyy9 - vxx0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn moments_ref_band_only_flux() {
+        let (m1, _) = band_loglum_moments(2.0, 0.5, &[9.0; 4], &[3.0; 4]);
+        assert!((m1[L::REF_BAND] - (2.0f64 + 0.25).exp()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn moments_second_ge_first_squared() {
+        let (m1, m2) = band_loglum_moments(1.0, 0.3, &[0.2, -0.1, 0.4, 0.0], &[0.1; 4]);
+        for b in 0..L::N_BANDS {
+            assert!(m2[b] >= m1[b] * m1[b]); // Jensen
+        }
+    }
+}

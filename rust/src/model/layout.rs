@@ -1,0 +1,120 @@
+//! The variational-parameter layout — the Rust mirror of
+//! `python/compile/constants.py`.
+//!
+//! `runtime::manifest` checks every value here against
+//! `artifacts/manifest.json` at startup so the two sides cannot drift.
+
+/// Number of filter bands (SDSS ugriz).
+pub const N_BANDS: usize = 5;
+/// Reference band index (r-band).
+pub const REF_BAND: usize = 2;
+/// Patch height/width in pixels.
+pub const PATCH: usize = 32;
+/// PSF Gaussian components per band.
+pub const K_PSF: usize = 2;
+/// Parameters per PSF component: (w, dx, dy, cxx, cxy, cyy).
+pub const PSF_PARAMS: usize = 6;
+/// Gaussian components per galaxy radial profile.
+pub const K_PROFILE: usize = 4;
+/// Effective star components per band.
+pub const K_STAR: usize = K_PSF;
+/// Effective galaxy components per band.
+pub const K_GAL: usize = 2 * K_PROFILE * K_PSF;
+/// Parameters per effective component: (w_eff, mx, my, p00, p01, p11).
+pub const COMP_PARAMS: usize = 6;
+/// Number of colors.
+pub const N_COLORS: usize = 4;
+
+/// θ entries per light source.
+pub const DIM: usize = 27;
+/// prior vector length.
+pub const PRIOR_DIM: usize = 21;
+/// KL ridge on location/shape entries.
+pub const RIDGE: f64 = 1e-4;
+
+/// Gaussian priors on the point-estimated galaxy shape parameters
+/// (mean, variance in the unconstrained parameterization), weighted by
+/// q(a = galaxy). See python/compile/constants.py for rationale.
+pub const SHAPE_PRIOR_PDEV: (f64, f64) = (0.0, 4.0);
+pub const SHAPE_PRIOR_AXIS: (f64, f64) = (0.0, 4.0);
+pub const SHAPE_PRIOR_SCALE: (f64, f64) = (0.5, 0.25);
+
+// θ offsets
+pub const I_A: usize = 0;
+pub const I_LOC: usize = 1;
+pub const I_FLUX_STAR: usize = 3;
+pub const I_FLUX_GAL: usize = 5;
+pub const I_COLOR_MEAN_STAR: usize = 7;
+pub const I_COLOR_MEAN_GAL: usize = 11;
+pub const I_COLOR_VAR_STAR: usize = 15;
+pub const I_COLOR_VAR_GAL: usize = 19;
+pub const I_SHAPE: usize = 23;
+
+// prior offsets
+pub const P_A: usize = 0;
+pub const P_FLUX_STAR: usize = 1;
+pub const P_FLUX_GAL: usize = 3;
+pub const P_COLOR_MEAN_STAR: usize = 5;
+pub const P_COLOR_MEAN_GAL: usize = 9;
+pub const P_COLOR_VAR_STAR: usize = 13;
+pub const P_COLOR_VAR_GAL: usize = 17;
+
+/// Galaxy profile mixture tables (amplitude, variance in units of the
+/// half-light radius squared); amplitudes sum to 1 per profile.
+pub const PROFILE_EXP_AMP: [f64; K_PROFILE] = [0.30, 0.40, 0.25, 0.05];
+pub const PROFILE_EXP_VAR: [f64; K_PROFILE] = [0.12, 0.50, 1.30, 3.00];
+pub const PROFILE_DEV_AMP: [f64; K_PROFILE] = [0.35, 0.35, 0.20, 0.10];
+pub const PROFILE_DEV_VAR: [f64; K_PROFILE] = [0.03, 0.25, 1.20, 6.00];
+
+/// Band flux mapping: log l_b = log r + COLOR_COEF[b] · c.
+pub const COLOR_COEF: [[f64; N_COLORS]; N_BANDS] = [
+    [-1.0, -1.0, 0.0, 0.0],
+    [0.0, -1.0, 0.0, 0.0],
+    [0.0, 0.0, 0.0, 0.0],
+    [0.0, 0.0, 1.0, 0.0],
+    [0.0, 0.0, 1.0, 1.0],
+];
+
+/// Artifact basenames.
+pub const ART_LIKE_AD: &str = "like_ad";
+pub const ART_LIKE_PALLAS: &str = "like_pallas";
+pub const ART_KL: &str = "kl";
+pub const ART_RENDER: &str = "render_pallas";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_is_contiguous() {
+        assert_eq!(I_A, 0);
+        assert_eq!(I_LOC, I_A + 1);
+        assert_eq!(I_FLUX_STAR, I_LOC + 2);
+        assert_eq!(I_FLUX_GAL, I_FLUX_STAR + 2);
+        assert_eq!(I_COLOR_MEAN_STAR, I_FLUX_GAL + 2);
+        assert_eq!(I_COLOR_MEAN_GAL, I_COLOR_MEAN_STAR + N_COLORS);
+        assert_eq!(I_COLOR_VAR_STAR, I_COLOR_MEAN_GAL + N_COLORS);
+        assert_eq!(I_COLOR_VAR_GAL, I_COLOR_VAR_STAR + N_COLORS);
+        assert_eq!(I_SHAPE, I_COLOR_VAR_GAL + N_COLORS);
+        assert_eq!(DIM, I_SHAPE + 4);
+    }
+
+    #[test]
+    fn prior_layout_is_contiguous() {
+        assert_eq!(P_FLUX_STAR, P_A + 1);
+        assert_eq!(PRIOR_DIM, P_COLOR_VAR_GAL + N_COLORS);
+    }
+
+    #[test]
+    fn profile_amps_normalized() {
+        let se: f64 = PROFILE_EXP_AMP.iter().sum();
+        let sd: f64 = PROFILE_DEV_AMP.iter().sum();
+        assert!((se - 1.0).abs() < 1e-12);
+        assert!((sd - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ref_band_has_zero_color_coef() {
+        assert!(COLOR_COEF[REF_BAND].iter().all(|&c| c == 0.0));
+    }
+}

@@ -1,0 +1,18 @@
+//! The Celeste statistical model — Rust side.
+//!
+//! The differentiable ELBO lives in Python (`python/compile/model.py`) and
+//! reaches Rust only as compiled HLO artifacts; this module carries
+//! everything the coordinator needs natively: the parameter layout, the
+//! physical-parameter types, effective Gaussian components, and a native
+//! renderer for synthetic data and neighbor backgrounds.
+
+pub mod comps;
+pub mod layout;
+pub mod params;
+pub mod render;
+
+pub use comps::{band_loglum_moments, galaxy_comps, star_comps, EffComp, PsfBand};
+pub use params::{
+    extract_estimate, sigmoid, theta_init, Estimate, GalaxyShape, Prior, SourceParams,
+};
+pub use render::{accumulate_mixture, render_mixture, PixelRect};

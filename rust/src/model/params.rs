@@ -1,0 +1,296 @@
+//! Physical source parameters, the variational vector θ, and priors.
+
+use super::layout as L;
+
+/// Galaxy shape parameters (constrained, physical).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GalaxyShape {
+    /// de Vaucouleurs mixture weight in [0, 1] ("profile")
+    pub p_dev: f64,
+    /// minor/major axis ratio in (0, 1) ("eccentricity" in the paper's table)
+    pub axis_ratio: f64,
+    /// position angle, radians
+    pub angle: f64,
+    /// effective (half-light) radius, pixels ("scale")
+    pub scale: f64,
+}
+
+impl GalaxyShape {
+    pub fn point_like() -> Self {
+        GalaxyShape { p_dev: 0.5, axis_ratio: 0.7, angle: 0.0, scale: 1.0 }
+    }
+}
+
+/// Ground-truth physical parameters of one light source (what the sky
+/// simulator draws and what catalogs estimate).
+#[derive(Clone, Debug)]
+pub struct SourceParams {
+    /// global sky position, pixel units
+    pub pos: (f64, f64),
+    pub is_galaxy: bool,
+    /// reference-band flux (linear units)
+    pub flux_r: f64,
+    /// colors: log ratios of adjacent-band fluxes
+    pub colors: [f64; L::N_COLORS],
+    pub shape: GalaxyShape,
+}
+
+impl SourceParams {
+    /// Flux in an arbitrary band via the color mapping.
+    pub fn flux_in_band(&self, band: usize) -> f64 {
+        let mut lg = self.flux_r.ln();
+        for (i, &c) in L::COLOR_COEF[band].iter().enumerate() {
+            lg += c * self.colors[i];
+        }
+        lg.exp()
+    }
+}
+
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[inline]
+pub fn logit(p: f64) -> f64 {
+    (p / (1.0 - p)).ln()
+}
+
+/// Initial variance used for q(log r) and q(c) when initializing θ from a
+/// catalog point estimate.
+pub const INIT_FLUX_VAR: f64 = 0.25;
+pub const INIT_COLOR_VAR: f64 = 0.09;
+
+/// Build an initial θ from a (possibly noisy) catalog estimate. The patch
+/// is centered on the estimate, so the location offset starts at 0.
+pub fn theta_init(est: &SourceParams, p_gal_guess: f64) -> [f64; L::DIM] {
+    let mut t = [0.0; L::DIM];
+    t[L::I_A] = logit(p_gal_guess.clamp(1e-4, 1.0 - 1e-4));
+    // E[r] = exp(mu + var/2)  =>  mu = ln(flux) - var/2
+    let mu = est.flux_r.max(1e-3).ln() - INIT_FLUX_VAR / 2.0;
+    t[L::I_FLUX_STAR] = mu;
+    t[L::I_FLUX_STAR + 1] = INIT_FLUX_VAR.ln();
+    t[L::I_FLUX_GAL] = mu;
+    t[L::I_FLUX_GAL + 1] = INIT_FLUX_VAR.ln();
+    for i in 0..L::N_COLORS {
+        t[L::I_COLOR_MEAN_STAR + i] = est.colors[i];
+        t[L::I_COLOR_MEAN_GAL + i] = est.colors[i];
+        t[L::I_COLOR_VAR_STAR + i] = INIT_COLOR_VAR.ln();
+        t[L::I_COLOR_VAR_GAL + i] = INIT_COLOR_VAR.ln();
+    }
+    t[L::I_SHAPE] = logit(est.shape.p_dev.clamp(0.02, 0.98));
+    t[L::I_SHAPE + 1] = logit(est.shape.axis_ratio.clamp(0.02, 0.98));
+    t[L::I_SHAPE + 2] = est.shape.angle;
+    t[L::I_SHAPE + 3] = est.shape.scale.max(0.05).ln();
+    t
+}
+
+/// Posterior point estimates extracted from an optimized θ (the catalog
+/// entry Celeste reports).
+#[derive(Clone, Debug)]
+pub struct Estimate {
+    /// probability the source is a galaxy
+    pub p_gal: f64,
+    /// location offset from the patch center, pixels
+    pub d_pos: (f64, f64),
+    /// posterior mean reference-band flux (type-marginalized)
+    pub flux_r: f64,
+    /// type-marginalized posterior mean colors
+    pub colors: [f64; L::N_COLORS],
+    pub shape: GalaxyShape,
+}
+
+pub fn extract_estimate(t: &[f64; L::DIM]) -> Estimate {
+    let g = sigmoid(t[L::I_A]);
+    let flux = |mu: f64, logvar: f64| (mu + 0.5 * logvar.exp()).exp();
+    let fs = flux(t[L::I_FLUX_STAR], t[L::I_FLUX_STAR + 1]);
+    let fg = flux(t[L::I_FLUX_GAL], t[L::I_FLUX_GAL + 1]);
+    let mut colors = [0.0; L::N_COLORS];
+    for i in 0..L::N_COLORS {
+        colors[i] = (1.0 - g) * t[L::I_COLOR_MEAN_STAR + i] + g * t[L::I_COLOR_MEAN_GAL + i];
+    }
+    Estimate {
+        p_gal: g,
+        d_pos: (t[L::I_LOC], t[L::I_LOC + 1]),
+        flux_r: (1.0 - g) * fs + g * fg,
+        colors,
+        shape: GalaxyShape {
+            p_dev: sigmoid(t[L::I_SHAPE]),
+            axis_ratio: sigmoid(t[L::I_SHAPE + 1]),
+            angle: t[L::I_SHAPE + 2],
+            scale: t[L::I_SHAPE + 3].exp(),
+        },
+    }
+}
+
+/// Prior hyperparameters (paper: "learned from pre-existing catalogs").
+#[derive(Clone, Debug)]
+pub struct Prior {
+    pub p_gal: f64,
+    pub flux_star: (f64, f64),
+    pub flux_gal: (f64, f64),
+    pub color_mean_star: [f64; L::N_COLORS],
+    pub color_mean_gal: [f64; L::N_COLORS],
+    pub color_var_star: [f64; L::N_COLORS],
+    pub color_var_gal: [f64; L::N_COLORS],
+}
+
+impl Default for Prior {
+    fn default() -> Self {
+        Prior {
+            p_gal: 0.3,
+            flux_star: (4.0, 2.0),
+            flux_gal: (4.5, 2.0),
+            color_mean_star: [0.5, 0.4, 0.2, 0.1],
+            color_mean_gal: [0.8, 0.5, 0.3, 0.2],
+            color_var_star: [0.04; L::N_COLORS],
+            color_var_gal: [0.04; L::N_COLORS],
+        }
+    }
+}
+
+impl Prior {
+    /// Flatten to the artifact's prior-vector layout.
+    pub fn to_vec(&self) -> [f64; L::PRIOR_DIM] {
+        let mut v = [0.0; L::PRIOR_DIM];
+        v[L::P_A] = self.p_gal;
+        v[L::P_FLUX_STAR] = self.flux_star.0;
+        v[L::P_FLUX_STAR + 1] = self.flux_star.1;
+        v[L::P_FLUX_GAL] = self.flux_gal.0;
+        v[L::P_FLUX_GAL + 1] = self.flux_gal.1;
+        for i in 0..L::N_COLORS {
+            v[L::P_COLOR_MEAN_STAR + i] = self.color_mean_star[i];
+            v[L::P_COLOR_MEAN_GAL + i] = self.color_mean_gal[i];
+            v[L::P_COLOR_VAR_STAR + i] = self.color_var_star[i];
+            v[L::P_COLOR_VAR_GAL + i] = self.color_var_gal[i];
+        }
+        v
+    }
+
+    /// Fit priors by moment-matching a catalog of sources (the paper's
+    /// "parameters learned from pre-existing astronomical catalogs").
+    pub fn fit(sources: &[SourceParams]) -> Prior {
+        let mut p = Prior::default();
+        let (mut ns, mut ng) = (0usize, 0usize);
+        let mut acc = |v: &mut (f64, f64, usize), x: f64| {
+            v.0 += x;
+            v.1 += x * x;
+            v.2 += 1;
+        };
+        let mut fs = (0.0, 0.0, 0usize);
+        let mut fg = (0.0, 0.0, 0usize);
+        let mut cms = [(0.0, 0.0, 0usize); L::N_COLORS];
+        let mut cmg = [(0.0, 0.0, 0usize); L::N_COLORS];
+        for s in sources {
+            let lf = s.flux_r.max(1e-3).ln();
+            if s.is_galaxy {
+                ng += 1;
+                acc(&mut fg, lf);
+                for i in 0..L::N_COLORS {
+                    acc(&mut cmg[i], s.colors[i]);
+                }
+            } else {
+                ns += 1;
+                acc(&mut fs, lf);
+                for i in 0..L::N_COLORS {
+                    acc(&mut cms[i], s.colors[i]);
+                }
+            }
+        }
+        let finish = |v: (f64, f64, usize)| -> (f64, f64) {
+            if v.2 < 2 {
+                return (4.0, 2.0);
+            }
+            let m = v.0 / v.2 as f64;
+            ((m), (v.1 / v.2 as f64 - m * m).max(0.05))
+        };
+        if ns + ng > 0 {
+            p.p_gal = (ng as f64 / (ns + ng) as f64).clamp(0.02, 0.98);
+        }
+        p.flux_star = finish(fs);
+        p.flux_gal = finish(fg);
+        for i in 0..L::N_COLORS {
+            let (m, v) = finish(cms[i]);
+            p.color_mean_star[i] = m;
+            p.color_var_star[i] = v;
+            let (m, v) = finish(cmg[i]);
+            p.color_mean_gal[i] = m;
+            p.color_var_gal[i] = v;
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_logit_roundtrip() {
+        for &p in &[0.01, 0.3, 0.5, 0.9, 0.99] {
+            assert!((sigmoid(logit(p)) - p).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn flux_in_band_ref_is_flux_r() {
+        let s = SourceParams {
+            pos: (0.0, 0.0),
+            is_galaxy: false,
+            flux_r: 123.0,
+            colors: [0.5, -0.2, 0.3, 0.1],
+            shape: GalaxyShape::point_like(),
+        };
+        assert!((s.flux_in_band(L::REF_BAND) - 123.0).abs() < 1e-9);
+        // adjacent band: flux_3 = flux_r * exp(c_2)
+        assert!((s.flux_in_band(3) - 123.0 * 0.3f64.exp()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn theta_init_extract_roundtrip() {
+        let s = SourceParams {
+            pos: (10.0, 20.0),
+            is_galaxy: true,
+            flux_r: 80.0,
+            colors: [0.4, 0.1, -0.1, 0.2],
+            shape: GalaxyShape { p_dev: 0.6, axis_ratio: 0.5, angle: 0.7, scale: 2.0 },
+        };
+        let t = theta_init(&s, 0.5);
+        let e = extract_estimate(&t);
+        assert!((e.p_gal - 0.5).abs() < 1e-9);
+        assert!((e.flux_r - 80.0).abs() / 80.0 < 1e-6);
+        for i in 0..4 {
+            assert!((e.colors[i] - s.colors[i]).abs() < 1e-9);
+        }
+        assert!((e.shape.scale - 2.0).abs() < 1e-9);
+        assert!((e.shape.axis_ratio - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prior_vec_layout() {
+        let p = Prior::default();
+        let v = p.to_vec();
+        assert_eq!(v[L::P_A], 0.3);
+        assert_eq!(v[L::P_FLUX_GAL], 4.5);
+        assert_eq!(v[L::P_COLOR_VAR_GAL + 3], 0.04);
+    }
+
+    #[test]
+    fn prior_fit_moment_matching() {
+        let mk = |is_galaxy: bool, flux: f64| SourceParams {
+            pos: (0.0, 0.0),
+            is_galaxy,
+            flux_r: flux,
+            colors: [0.2; 4],
+            shape: GalaxyShape::point_like(),
+        };
+        let mut srcs = vec![];
+        for i in 0..100 {
+            srcs.push(mk(i % 4 == 0, 50.0 + i as f64));
+        }
+        let p = Prior::fit(&srcs);
+        assert!((p.p_gal - 0.25).abs() < 0.01);
+        assert!(p.flux_star.0 > 3.0 && p.flux_star.0 < 6.0);
+        assert!((p.color_mean_gal[0] - 0.2).abs() < 1e-9);
+    }
+}

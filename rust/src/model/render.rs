@@ -1,0 +1,170 @@
+//! Native Gaussian-mixture rendering (the Rust twin of the L1 kernel).
+//!
+//! Used on paths where Python can never run: synthetic-sky generation,
+//! neighbor-background rendering during optimization, and the Photo
+//! baseline. Parity with the Pallas kernel is enforced by the
+//! `render_parity` integration test (same components → same image).
+
+use super::comps::EffComp;
+
+/// A rectangle of pixels in global sky coordinates: pixel (r, c) of the
+/// buffer has center (x0 + c + 0.5, y0 + r + 0.5).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PixelRect {
+    pub x0: f64,
+    pub y0: f64,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl PixelRect {
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Intersection with another rect of *integer* extents, in global
+    /// coordinates. Returns None if disjoint.
+    pub fn intersect(&self, other: &PixelRect) -> Option<PixelRect> {
+        let x0 = self.x0.max(other.x0);
+        let y0 = self.y0.max(other.y0);
+        let x1 = (self.x0 + self.cols as f64).min(other.x0 + other.cols as f64);
+        let y1 = (self.y0 + self.rows as f64).min(other.y0 + other.rows as f64);
+        if x1 <= x0 || y1 <= y0 {
+            return None;
+        }
+        Some(PixelRect {
+            x0,
+            y0,
+            rows: (y1 - y0).round() as usize,
+            cols: (x1 - x0).round() as usize,
+        })
+    }
+}
+
+/// Accumulate `amp * mixture(comps)` into `out` over `rect`.
+///
+/// Components are skipped per-row once their Mahalanobis distance bound
+/// exceeds `CUTOFF` (mixture tails are negligible); this is the renderer's
+/// main optimization and is validated against the exact oracle in tests.
+pub fn accumulate_mixture(out: &mut [f64], rect: &PixelRect, comps: &[EffComp], amp: f64) {
+    assert_eq!(out.len(), rect.len());
+    if amp == 0.0 {
+        return;
+    }
+    for comp in comps {
+        let &[w, mx, my, p00, p01, p11] = comp;
+        if w == 0.0 {
+            continue;
+        }
+        let wa = w * amp;
+        for r in 0..rect.rows {
+            let y = rect.y0 + r as f64 + 0.5;
+            let dy = y - my;
+            let row = &mut out[r * rect.cols..(r + 1) * rect.cols];
+            for (c, px) in row.iter_mut().enumerate() {
+                let x = rect.x0 + c as f64 + 0.5;
+                let dx = x - mx;
+                let q = p00 * dx * dx + 2.0 * p01 * dx * dy + p11 * dy * dy;
+                if q < 2.0 * MAX_EXP {
+                    *px += wa * (-0.5 * q).exp();
+                }
+            }
+        }
+    }
+}
+
+/// Beyond this quadratic-form value exp(-q/2) underflows any meaningful
+/// contribution (exp(-60) ≈ 9e-27).
+const MAX_EXP: f64 = 60.0;
+
+/// Render a mixture into a fresh buffer.
+pub fn render_mixture(rect: &PixelRect, comps: &[EffComp], amp: f64) -> Vec<f64> {
+    let mut out = vec![0.0; rect.len()];
+    accumulate_mixture(&mut out, rect, comps, amp);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::comps::{galaxy_comps, mixture_integral, star_comps, PsfBand};
+    use crate::model::params::GalaxyShape;
+
+    fn test_psf() -> PsfBand {
+        [
+            [0.7, 0.0, 0.0, 1.0, 0.05, 1.0],
+            [0.3, 0.1, -0.1, 2.5, -0.1, 2.5],
+        ]
+    }
+
+    #[test]
+    fn well_contained_star_sums_to_flux() {
+        let rect = PixelRect { x0: 0.0, y0: 0.0, rows: 64, cols: 64 };
+        let comps = star_comps((32.0, 32.0), &test_psf());
+        let img = render_mixture(&rect, &comps, 7.5);
+        let total: f64 = img.iter().sum();
+        assert!((total - 7.5).abs() / 7.5 < 1e-3, "total {total}");
+    }
+
+    #[test]
+    fn galaxy_peak_at_center() {
+        let rect = PixelRect { x0: 0.0, y0: 0.0, rows: 32, cols: 32 };
+        let shape = GalaxyShape { p_dev: 0.5, axis_ratio: 0.8, angle: 0.3, scale: 2.0 };
+        let comps = galaxy_comps((16.0, 16.0), &test_psf(), &shape);
+        let img = render_mixture(&rect, &comps, 1.0);
+        let (mut best, mut arg) = (f64::MIN, 0);
+        for (i, &v) in img.iter().enumerate() {
+            if v > best {
+                best = v;
+                arg = i;
+            }
+        }
+        // center pixel (15..16, 15..16) region
+        let (r, c) = (arg / 32, arg % 32);
+        assert!((14..=17).contains(&r) && (14..=17).contains(&c), "peak at ({r},{c})");
+    }
+
+    #[test]
+    fn rect_offset_consistency() {
+        // rendering a shifted rect samples the same global function
+        let comps = star_comps((20.0, 20.0), &test_psf());
+        let r1 = PixelRect { x0: 0.0, y0: 0.0, rows: 40, cols: 40 };
+        let r2 = PixelRect { x0: 10.0, y0: 10.0, rows: 20, cols: 20 };
+        let img1 = render_mixture(&r1, &comps, 3.0);
+        let img2 = render_mixture(&r2, &comps, 3.0);
+        for r in 0..20 {
+            for c in 0..20 {
+                let a = img1[(r + 10) * 40 + (c + 10)];
+                let b = img2[r * 20 + c];
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn cutoff_preserves_mass() {
+        // cutoff must not visibly distort a contained source
+        let rect = PixelRect { x0: 0.0, y0: 0.0, rows: 96, cols: 96 };
+        let shape = GalaxyShape { p_dev: 0.7, axis_ratio: 0.5, angle: 1.0, scale: 3.0 };
+        let comps = galaxy_comps((48.0, 48.0), &test_psf(), &shape);
+        let img = render_mixture(&rect, &comps, 1.0);
+        let total: f64 = img.iter().sum();
+        assert!((mixture_integral(&comps) - 1.0).abs() < 1e-9);
+        assert!((total - 1.0).abs() < 5e-3, "total {total}");
+    }
+
+    #[test]
+    fn intersect_basic() {
+        let a = PixelRect { x0: 0.0, y0: 0.0, rows: 10, cols: 10 };
+        let b = PixelRect { x0: 5.0, y0: 8.0, rows: 10, cols: 10 };
+        let i = a.intersect(&b).unwrap();
+        assert_eq!((i.x0, i.y0), (5.0, 8.0));
+        assert_eq!((i.rows, i.cols), (2, 5));
+        let c = PixelRect { x0: 100.0, y0: 0.0, rows: 4, cols: 4 };
+        assert!(a.intersect(&c).is_none());
+    }
+}

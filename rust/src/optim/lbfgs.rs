@@ -1,0 +1,337 @@
+//! L-BFGS with strong-Wolfe line search — the baseline optimizer the
+//! paper's earlier system used ([5]) and that §III-B retires: "some light
+//! sources require thousands of L-BFGS iterations to converge".
+//!
+//! Two-loop recursion (Nocedal & Wright alg. 7.4) + line search
+//! (alg. 3.5/3.6 with cubic interpolation in zoom).
+
+use super::{GradObjective, OptimResult, StopReason};
+use crate::linalg::{axpy, dot, norm2};
+
+#[derive(Clone, Debug)]
+pub struct LbfgsConfig {
+    pub max_iter: usize,
+    pub gtol: f64,
+    pub ftol: f64,
+    /// history length
+    pub m: usize,
+    /// Wolfe constants
+    pub c1: f64,
+    pub c2: f64,
+    pub max_ls: usize,
+}
+
+impl Default for LbfgsConfig {
+    fn default() -> Self {
+        LbfgsConfig {
+            max_iter: 5000,
+            gtol: 1e-6,
+            ftol: 1e-14,
+            m: 10,
+            c1: 1e-4,
+            c2: 0.9,
+            max_ls: 30,
+        }
+    }
+}
+
+struct Pair {
+    s: Vec<f64>,
+    y: Vec<f64>,
+    rho: f64,
+}
+
+/// Strong-Wolfe line search. Returns (alpha, f, g, evals) or None.
+fn line_search<O: GradObjective>(
+    obj: &mut O,
+    x: &[f64],
+    d: &[f64],
+    f0: f64,
+    g0d: f64,
+    alpha0: f64,
+    cfg: &LbfgsConfig,
+) -> Option<(f64, f64, Vec<f64>, usize)> {
+    debug_assert!(g0d < 0.0);
+    let phi = |obj: &mut O, alpha: f64| -> Option<(f64, Vec<f64>, f64)> {
+        let mut xt = x.to_vec();
+        axpy(alpha, d, &mut xt);
+        let (f, g) = obj.value_grad(&xt)?;
+        let gd = dot(&g, d);
+        Some((f, g, gd))
+    };
+
+    let mut evals = 0usize;
+    let mut alpha_prev = 0.0;
+    let mut f_prev = f0;
+    let mut alpha = alpha0;
+    let mut result = None;
+
+    for i in 0..cfg.max_ls {
+        let Some((f, g, gd)) = phi(obj, alpha) else {
+            // evaluation failed (overflow region): treat as "too far"
+            alpha *= 0.3;
+            if alpha < 1e-16 {
+                break;
+            }
+            continue;
+        };
+        evals += 1;
+        if !f.is_finite() {
+            alpha *= 0.3;
+            continue;
+        }
+        if f > f0 + cfg.c1 * alpha * g0d || (i > 0 && f >= f_prev) {
+            result = zoom(obj, x, d, f0, g0d, alpha_prev, f_prev, alpha, cfg, &mut evals);
+            break;
+        }
+        if gd.abs() <= -cfg.c2 * g0d {
+            result = Some((alpha, f, g));
+            break;
+        }
+        if gd >= 0.0 {
+            result = zoom(obj, x, d, f0, g0d, alpha, f, alpha_prev, cfg, &mut evals);
+            break;
+        }
+        alpha_prev = alpha;
+        f_prev = f;
+        alpha *= 2.0;
+    }
+    result.map(|(a, f, g)| (a, f, g, evals))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn zoom<O: GradObjective>(
+    obj: &mut O,
+    x: &[f64],
+    d: &[f64],
+    f0: f64,
+    g0d: f64,
+    mut lo: f64,
+    mut f_lo: f64,
+    mut hi: f64,
+    cfg: &LbfgsConfig,
+    evals: &mut usize,
+) -> Option<(f64, f64, Vec<f64>)> {
+    for _ in 0..cfg.max_ls {
+        // bisection with a slight bias toward lo (robust; cubic would be
+        // marginally faster but this is the *baseline* method)
+        let alpha = 0.5 * (lo + hi);
+        let mut xt = x.to_vec();
+        axpy(alpha, d, &mut xt);
+        let (f, g) = obj.value_grad(&xt)?;
+        *evals += 1;
+        let gd = dot(&g, d);
+        if f > f0 + cfg.c1 * alpha * g0d || f >= f_lo {
+            hi = alpha;
+        } else {
+            if gd.abs() <= -cfg.c2 * g0d {
+                return Some((alpha, f, g));
+            }
+            if gd * (hi - lo) >= 0.0 {
+                hi = lo;
+            }
+            lo = alpha;
+            f_lo = f;
+        }
+        if (hi - lo).abs() < 1e-14 {
+            return Some((alpha, f, g));
+        }
+    }
+    None
+}
+
+/// Minimize `obj` from `x0` with L-BFGS.
+pub fn lbfgs<O: GradObjective>(obj: &mut O, x0: &[f64], cfg: &LbfgsConfig) -> OptimResult {
+    let n = x0.len();
+    let mut x = x0.to_vec();
+    let mut f_evals = 0usize;
+    let mut trace = Vec::new();
+
+    let (mut f, mut g) = match obj.value_grad(&x) {
+        Some(v) => v,
+        None => {
+            return OptimResult {
+                x,
+                f: f64::NAN,
+                grad_norm: f64::NAN,
+                iterations: 0,
+                f_evals: 1,
+                stop: StopReason::EvalError,
+                trace,
+            }
+        }
+    };
+    f_evals += 1;
+    trace.push(f);
+
+    let mut history: std::collections::VecDeque<Pair> = Default::default();
+
+    for iter in 0..cfg.max_iter {
+        let gnorm = norm2(&g);
+        if gnorm <= cfg.gtol {
+            return OptimResult {
+                x,
+                f,
+                grad_norm: gnorm,
+                iterations: iter,
+                f_evals,
+                stop: StopReason::Converged,
+                trace,
+            };
+        }
+
+        // two-loop recursion
+        let mut q = g.clone();
+        let mut alphas = Vec::with_capacity(history.len());
+        for p in history.iter().rev() {
+            let a = p.rho * dot(&p.s, &q);
+            axpy(-a, &p.y, &mut q);
+            alphas.push(a);
+        }
+        // initial scaling H0 = (sᵀy / yᵀy) I
+        if let Some(p) = history.back() {
+            let gamma = dot(&p.s, &p.y) / dot(&p.y, &p.y).max(1e-300);
+            for v in &mut q {
+                *v *= gamma;
+            }
+        }
+        for (p, &a) in history.iter().zip(alphas.iter().rev()) {
+            let b = p.rho * dot(&p.y, &q);
+            axpy(a - b, &p.s, &mut q);
+        }
+        let mut d: Vec<f64> = q.iter().map(|v| -v).collect();
+        let mut g0d = dot(&g, &d);
+        if g0d >= 0.0 {
+            // not a descent direction (bad curvature); reset to steepest
+            history.clear();
+            d = g.iter().map(|v| -v).collect();
+            g0d = -gnorm * gnorm;
+        }
+
+        // Nocedal & Wright: on the first (steepest-descent-scaled)
+        // iteration start with alpha ~ 1/||g|| so the step is O(1).
+        let alpha0 = if history.is_empty() {
+            (1.0 / norm2(&d).max(1e-300)).min(1.0)
+        } else {
+            1.0
+        };
+        let Some((alpha, f_new, g_new, ls_evals)) = line_search(obj, &x, &d, f, g0d, alpha0, cfg) else {
+            return OptimResult {
+                x,
+                f,
+                grad_norm: gnorm,
+                iterations: iter,
+                f_evals,
+                stop: StopReason::LineSearchFailed,
+                trace,
+            };
+        };
+        f_evals += ls_evals;
+
+        let mut s = d;
+        for v in &mut s {
+            *v *= alpha;
+        }
+        let y: Vec<f64> = g_new.iter().zip(&g).map(|(a, b)| a - b).collect();
+        let sy = dot(&s, &y);
+        if sy > 1e-10 * norm2(&s) * norm2(&y) {
+            if history.len() == cfg.m {
+                history.pop_front();
+            }
+            history.push_back(Pair { rho: 1.0 / sy, s: s.clone(), y });
+        }
+
+        let df = (f - f_new).abs();
+        for (xi, si) in x.iter_mut().zip(&s) {
+            *xi += si;
+        }
+        f = f_new;
+        g = g_new;
+        trace.push(f);
+
+        if df <= cfg.ftol * (1.0 + f.abs()) {
+            return OptimResult {
+                x,
+                f,
+                grad_norm: norm2(&g),
+                iterations: iter + 1,
+                f_evals,
+                stop: StopReason::Stalled,
+                trace,
+            };
+        }
+        let _ = n;
+    }
+
+    OptimResult {
+        x,
+        f,
+        grad_norm: norm2(&g),
+        iterations: cfg.max_iter,
+        f_evals,
+        stop: StopReason::MaxIter,
+        trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::test_objectives::{Quadratic, Rosenbrock};
+
+    #[test]
+    fn quadratic_converges() {
+        let mut q = Quadratic::ill_conditioned(8, 100.0);
+        let want = q.minimizer();
+        let res = lbfgs(&mut q, &vec![0.0; 8], &LbfgsConfig::default());
+        assert!(res.converged(), "{:?}", res.stop);
+        for (a, b) in res.x.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rosenbrock_converges() {
+        let mut r = Rosenbrock { n: 8, evals: 0 };
+        let res = lbfgs(&mut r, &vec![-1.2; 8], &LbfgsConfig::default());
+        assert!(res.converged(), "{:?}", res.stop);
+        for v in &res.x {
+            assert!((v - 1.0).abs() < 1e-4, "{v}");
+        }
+    }
+
+    #[test]
+    fn needs_more_iters_than_newton_when_ill_conditioned() {
+        // the paper's motivation for switching optimizers
+        let cfg = LbfgsConfig { gtol: 1e-8, ..Default::default() };
+        let mut q1 = Quadratic::ill_conditioned(20, 1e6);
+        let lb = lbfgs(&mut q1, &vec![0.0; 20], &cfg);
+        let mut q2 = Quadratic::ill_conditioned(20, 1e6);
+        let nt = crate::optim::newton_tr(
+            &mut q2,
+            &vec![0.0; 20],
+            &crate::optim::NewtonConfig { gtol: 1e-8, ..Default::default() },
+        );
+        assert!(lb.iterations > 4 * nt.iterations.max(1), "lbfgs {} newton {}", lb.iterations, nt.iterations);
+    }
+
+    #[test]
+    fn wolfe_conditions_hold_on_accepted_step() {
+        let mut q = Quadratic::ill_conditioned(4, 10.0);
+        let x = vec![3.0, -2.0, 1.0, 0.5];
+        let (f0, g0) = q.value_grad(&x).unwrap();
+        let d: Vec<f64> = g0.iter().map(|v| -v).collect();
+        let g0d = dot(&g0, &d);
+        let cfg = LbfgsConfig::default();
+        let (alpha, f1, g1, _) = line_search(&mut q, &x, &d, f0, g0d, 1.0, &cfg).unwrap();
+        assert!(f1 <= f0 + cfg.c1 * alpha * g0d + 1e-12, "Armijo");
+        assert!(dot(&g1, &d).abs() <= -cfg.c2 * g0d + 1e-12, "curvature");
+    }
+
+    #[test]
+    fn trace_decreases() {
+        let mut r = Rosenbrock { n: 4, evals: 0 };
+        let res = lbfgs(&mut r, &vec![0.0; 4], &LbfgsConfig::default());
+        assert!(res.trace.last().unwrap() < res.trace.first().unwrap());
+    }
+}

@@ -1,0 +1,248 @@
+//! Split-evaluation trust-region Newton (the §Perf optimization).
+//!
+//! The compiled autodiff Hessian costs ~60x a value+gradient evaluation
+//! (441 ms vs 7 ms per execute, EXPERIMENTS.md §Perf), so this variant:
+//!   * evaluates *trial* points with the cheap value+grad path only
+//!     (rejected steps never pay for a Hessian), and
+//!   * refreshes the Hessian lazily (Shamanskii scheme): a successful,
+//!     well-predicted step reuses the current Hessian for the next one.
+//!
+//! Actual reductions are always differences of the *same* cheap
+//! evaluator, so the acceptance test is unaffected by the small
+//! cross-artifact numerical offset.
+
+use super::{NewtonObjective, OptimResult, StopReason};
+use crate::linalg::{norm2, solve_trust_region, Mat};
+
+pub use super::newton_tr::NewtonConfig;
+
+#[derive(Clone, Debug)]
+pub struct SplitConfig {
+    pub base: NewtonConfig,
+    /// maximum consecutive steps reusing one Hessian
+    pub hess_reuse: usize,
+    /// rho above which a reused Hessian is considered still-good
+    pub reuse_rho: f64,
+}
+
+impl Default for SplitConfig {
+    fn default() -> Self {
+        SplitConfig { base: NewtonConfig::default(), hess_reuse: 2, reuse_rho: 0.5 }
+    }
+}
+
+/// Minimize with split evaluation. `obj.value_grad` must be the cheap
+/// path; `obj.value_grad_hess` is only called when a fresh Hessian is
+/// needed. Counts in the result: `f_evals` = cheap evals, and the number
+/// of Hessian evaluations is reported via `hess_evals`.
+pub fn newton_tr_split<O: NewtonObjective>(
+    obj: &mut O,
+    x0: &[f64],
+    cfg: &SplitConfig,
+) -> (OptimResult, usize) {
+    let b = &cfg.base;
+    let mut x = x0.to_vec();
+    let mut delta = b.delta0;
+    let mut f_evals = 0usize;
+    let mut hess_evals = 0usize;
+    let mut trace = Vec::new();
+
+    let Some((mut f, mut g)) = obj.value_grad(&x) else {
+        return (
+            OptimResult {
+                x,
+                f: f64::NAN,
+                grad_norm: f64::NAN,
+                iterations: 0,
+                f_evals: 1,
+                stop: StopReason::EvalError,
+                trace,
+            },
+            0,
+        );
+    };
+    f_evals += 1;
+    trace.push(f);
+
+    let mut h: Option<Mat> = None;
+    let mut steps_on_h = 0usize;
+    let mut stall = 0usize;
+
+    for iter in 0..b.max_iter {
+        let gnorm = norm2(&g);
+        if gnorm <= b.gtol {
+            return (
+                OptimResult {
+                    x,
+                    f,
+                    grad_norm: gnorm,
+                    iterations: iter,
+                    f_evals,
+                    stop: StopReason::Converged,
+                    trace,
+                },
+                hess_evals,
+            );
+        }
+
+        // (re)compute the Hessian when stale
+        if h.is_none() {
+            match obj.value_grad_hess(&x) {
+                Some((_, _, hh)) => {
+                    h = Some(hh);
+                    hess_evals += 1;
+                    steps_on_h = 0;
+                }
+                None => {
+                    return (
+                        OptimResult {
+                            x,
+                            f,
+                            grad_norm: gnorm,
+                            iterations: iter,
+                            f_evals,
+                            stop: StopReason::EvalError,
+                            trace,
+                        },
+                        hess_evals,
+                    );
+                }
+            }
+        }
+
+        let sol = solve_trust_region(h.as_ref().unwrap(), &g, delta);
+        let x_new: Vec<f64> = x.iter().zip(&sol.step).map(|(a, s)| a + s).collect();
+        let trial = obj.value_grad(&x_new);
+        f_evals += 1;
+        let Some((f_new, g_new)) = trial else {
+            delta *= 0.25;
+            if delta < 1e-14 {
+                return (
+                    OptimResult {
+                        x,
+                        f,
+                        grad_norm: gnorm,
+                        iterations: iter,
+                        f_evals,
+                        stop: StopReason::EvalError,
+                        trace,
+                    },
+                    hess_evals,
+                );
+            }
+            continue;
+        };
+
+        let predicted = sol.predicted_reduction.max(1e-300);
+        let rho = (f - f_new) / predicted;
+
+        if rho < 0.25 || !f_new.is_finite() {
+            delta *= 0.25;
+        } else if rho > 0.75 && sol.on_boundary {
+            delta = (2.5 * delta).min(b.delta_max);
+        }
+
+        if rho > b.eta && f_new.is_finite() {
+            let df = (f - f_new).abs();
+            x = x_new;
+            f = f_new;
+            g = g_new;
+            trace.push(f);
+            steps_on_h += 1;
+            // Shamanskii reuse: keep H while it predicts well
+            if rho < cfg.reuse_rho || steps_on_h >= cfg.hess_reuse {
+                h = None;
+            }
+            if df <= b.ftol * (1.0 + f.abs()) {
+                stall += 1;
+                if stall >= 2 {
+                    return (
+                        OptimResult {
+                            x,
+                            f,
+                            grad_norm: norm2(&g),
+                            iterations: iter + 1,
+                            f_evals,
+                            stop: StopReason::Stalled,
+                            trace,
+                        },
+                        hess_evals,
+                    );
+                }
+            } else {
+                stall = 0;
+            }
+        } else {
+            // rejected: the model was poor — refresh H next round
+            h = None;
+        }
+
+        if delta < 1e-14 {
+            return (
+                OptimResult {
+                    x,
+                    f,
+                    grad_norm: norm2(&g),
+                    iterations: iter + 1,
+                    f_evals,
+                    stop: StopReason::Stalled,
+                    trace,
+                },
+                hess_evals,
+            );
+        }
+    }
+
+    let gn = norm2(&g);
+    (
+        OptimResult {
+            x,
+            f,
+            grad_norm: gn,
+            iterations: b.max_iter,
+            f_evals,
+            stop: StopReason::MaxIter,
+            trace,
+        },
+        hess_evals,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::test_objectives::{Quadratic, Rosenbrock};
+
+    #[test]
+    fn quadratic_converges_with_few_hessians() {
+        let mut q = Quadratic::ill_conditioned(10, 100.0);
+        let (res, hess) = newton_tr_split(&mut q, &vec![0.0; 10], &SplitConfig::default());
+        assert!(res.converged(), "{:?}", res.stop);
+        assert!(hess <= res.iterations.max(1), "hessians {hess} iters {}", res.iterations);
+        let want = q.minimizer();
+        for (a, b) in res.x.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rosenbrock_converges() {
+        let mut r = Rosenbrock { n: 8, evals: 0 };
+        let (res, hess) = newton_tr_split(&mut r, &vec![0.5; 8], &SplitConfig::default());
+        assert!(res.converged(), "{:?}", res.stop);
+        for v in &res.x {
+            assert!((v - 1.0).abs() < 1e-5);
+        }
+        // Hessian reuse must actually reuse
+        assert!(hess < res.iterations, "hess {hess} vs iters {}", res.iterations);
+    }
+
+    #[test]
+    fn matches_full_newton_quality() {
+        let mut r1 = Rosenbrock { n: 6, evals: 0 };
+        let (split, _) = newton_tr_split(&mut r1, &vec![0.3; 6], &SplitConfig::default());
+        let mut r2 = Rosenbrock { n: 6, evals: 0 };
+        let full = crate::optim::newton_tr(&mut r2, &vec![0.3; 6], &NewtonConfig::default());
+        assert!((split.f - full.f).abs() < 1e-8);
+    }
+}

@@ -1,0 +1,243 @@
+//! Trust-region Newton (the paper's optimizer, §III-B).
+//!
+//! Classic TR framework (Nocedal & Wright alg. 4.1) with the subproblem
+//! solved exactly by `linalg::solve_trust_region` (Moré–Sorensen on the
+//! dense eigendecomposition — dimension is only 27).
+
+use super::{NewtonObjective, OptimResult, StopReason};
+use crate::linalg::{norm2, solve_trust_region};
+
+#[derive(Clone, Debug)]
+pub struct NewtonConfig {
+    pub max_iter: usize,
+    /// stop when ‖g‖ ≤ gtol
+    pub gtol: f64,
+    /// stop when |Δf| ≤ ftol·(1+|f|) for two consecutive accepted steps
+    pub ftol: f64,
+    pub delta0: f64,
+    pub delta_max: f64,
+    /// accept step if rho > eta
+    pub eta: f64,
+}
+
+impl Default for NewtonConfig {
+    fn default() -> Self {
+        NewtonConfig {
+            max_iter: 200,
+            gtol: 1e-6,
+            ftol: 1e-12,
+            delta0: 1.0,
+            delta_max: 100.0,
+            eta: 0.1,
+        }
+    }
+}
+
+/// Minimize `obj` from `x0` with trust-region Newton.
+pub fn newton_tr<O: NewtonObjective>(
+    obj: &mut O,
+    x0: &[f64],
+    cfg: &NewtonConfig,
+) -> OptimResult {
+    let mut x = x0.to_vec();
+    let mut delta = cfg.delta0;
+    let mut f_evals = 0usize;
+    let mut trace = Vec::new();
+
+    let (mut f, mut g, mut h) = match obj.value_grad_hess(&x) {
+        Some(v) => v,
+        None => {
+            return OptimResult {
+                x,
+                f: f64::NAN,
+                grad_norm: f64::NAN,
+                iterations: 0,
+                f_evals: 1,
+                stop: StopReason::EvalError,
+                trace,
+            }
+        }
+    };
+    f_evals += 1;
+    trace.push(f);
+    let mut stall_count = 0usize;
+
+    for iter in 0..cfg.max_iter {
+        let gnorm = norm2(&g);
+        if gnorm <= cfg.gtol {
+            return OptimResult {
+                x,
+                f,
+                grad_norm: gnorm,
+                iterations: iter,
+                f_evals,
+                stop: StopReason::Converged,
+                trace,
+            };
+        }
+
+        let sol = solve_trust_region(&h, &g, delta);
+        let x_new: Vec<f64> = x.iter().zip(&sol.step).map(|(a, b)| a + b).collect();
+
+        let eval = obj.value_grad_hess(&x_new);
+        f_evals += 1;
+        let Some((f_new, g_new, h_new)) = eval else {
+            // evaluation failure (NaN region): shrink and retry
+            delta *= 0.25;
+            if delta < 1e-12 {
+                return OptimResult {
+                    x,
+                    f,
+                    grad_norm: gnorm,
+                    iterations: iter,
+                    f_evals,
+                    stop: StopReason::EvalError,
+                    trace,
+                };
+            }
+            continue;
+        };
+
+        let actual = f - f_new;
+        let predicted = sol.predicted_reduction.max(1e-300);
+        let rho = actual / predicted;
+
+        // radius update
+        if rho < 0.25 || !f_new.is_finite() {
+            delta *= 0.25;
+        } else if rho > 0.75 && sol.on_boundary {
+            delta = (2.5 * delta).min(cfg.delta_max);
+        }
+
+        // step acceptance
+        if rho > cfg.eta && f_new.is_finite() {
+            let df = (f - f_new).abs();
+            x = x_new;
+            f = f_new;
+            g = g_new;
+            h = h_new;
+            trace.push(f);
+            if df <= cfg.ftol * (1.0 + f.abs()) {
+                stall_count += 1;
+                if stall_count >= 2 {
+                    return OptimResult {
+                        x,
+                        f,
+                        grad_norm: norm2(&g),
+                        iterations: iter + 1,
+                        f_evals,
+                        stop: StopReason::Stalled,
+                        trace,
+                    };
+                }
+            } else {
+                stall_count = 0;
+            }
+        }
+
+        if delta < 1e-14 {
+            return OptimResult {
+                x,
+                f,
+                grad_norm: norm2(&g),
+                iterations: iter + 1,
+                f_evals,
+                stop: StopReason::Stalled,
+                trace,
+            };
+        }
+    }
+
+    OptimResult {
+        x,
+        f,
+        grad_norm: norm2(&g),
+        iterations: cfg.max_iter,
+        f_evals,
+        stop: StopReason::MaxIter,
+        trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::test_objectives::{Quadratic, Rosenbrock};
+
+    #[test]
+    fn quadratic_one_newton_step() {
+        let mut q = Quadratic::ill_conditioned(8, 10.0);
+        let want = q.minimizer();
+        let res = newton_tr(&mut q, &vec![0.0; 8], &NewtonConfig::default());
+        assert_eq!(res.stop, StopReason::Converged);
+        assert!(res.iterations <= 3, "iters {}", res.iterations);
+        for (a, b) in res.x.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn ill_conditioned_quadratic_still_fast() {
+        let mut q = Quadratic::ill_conditioned(20, 1e6);
+        let res = newton_tr(&mut q, &vec![0.0; 20], &NewtonConfig::default());
+        assert!(res.converged());
+        assert!(res.iterations <= 25, "iters {}", res.iterations);
+    }
+
+    #[test]
+    fn rosenbrock_converges_within_50() {
+        // the paper's claim: Newton-TR reaches tolerance within ~50 iters
+        // (n-dim coupled Rosenbrock has a local minimum near x1 = -1;
+        // start on the global basin — optimizer quality, not globality,
+        // is what is under test)
+        let mut r = Rosenbrock { n: 10, evals: 0 };
+        let res = newton_tr(
+            &mut r,
+            &vec![0.5; 10],
+            &NewtonConfig { max_iter: 100, ..Default::default() },
+        );
+        assert!(res.converged(), "{:?}", res.stop);
+        assert!(res.iterations <= 60, "iters {}", res.iterations);
+        for v in &res.x {
+            assert!((v - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn trace_monotone_nonincreasing() {
+        let mut r = Rosenbrock { n: 6, evals: 0 };
+        let res = newton_tr(&mut r, &vec![0.5; 6], &NewtonConfig::default());
+        for w in res.trace.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "trace increased: {w:?}");
+        }
+    }
+
+    #[test]
+    fn starts_at_optimum() {
+        let mut q = Quadratic::ill_conditioned(5, 10.0);
+        let star = q.minimizer();
+        let res = newton_tr(&mut q, &star, &NewtonConfig::default());
+        assert_eq!(res.stop, StopReason::Converged);
+        assert_eq!(res.iterations, 0);
+    }
+
+    #[test]
+    fn eval_error_reported() {
+        struct Bad;
+        impl super::super::GradObjective for Bad {
+            fn dim(&self) -> usize {
+                2
+            }
+            fn value_grad(&mut self, _: &[f64]) -> Option<(f64, Vec<f64>)> {
+                None
+            }
+        }
+        impl super::super::NewtonObjective for Bad {
+            fn value_grad_hess(&mut self, _: &[f64]) -> Option<(f64, Vec<f64>, crate::linalg::Mat)> {
+                None
+            }
+        }
+        let res = newton_tr(&mut Bad, &[0.0, 0.0], &NewtonConfig::default());
+        assert_eq!(res.stop, StopReason::EvalError);
+    }
+}

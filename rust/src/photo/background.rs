@@ -1,0 +1,73 @@
+//! Sigma-clipped sky background estimation.
+
+/// Robust per-band sky statistics.
+#[derive(Clone, Copy, Debug)]
+pub struct SkyStats {
+    pub mean: f64,
+    pub sd: f64,
+}
+
+/// Iteratively sigma-clipped mean/sd (3 rounds at 3σ) — standard sky
+/// estimation in the presence of sources.
+pub fn sigma_clipped_stats(pixels: &[f32]) -> SkyStats {
+    let mut mean = 0.0f64;
+    let mut sd = f64::INFINITY;
+    let mut lo = f64::NEG_INFINITY;
+    let mut hi = f64::INFINITY;
+    for _round in 0..4 {
+        let mut n = 0u64;
+        let mut s = 0.0f64;
+        let mut s2 = 0.0f64;
+        for &p in pixels {
+            let p = p as f64;
+            if p >= lo && p <= hi {
+                n += 1;
+                s += p;
+                s2 += p * p;
+            }
+        }
+        if n < 8 {
+            break;
+        }
+        mean = s / n as f64;
+        sd = (s2 / n as f64 - mean * mean).max(0.0).sqrt();
+        lo = mean - 3.0 * sd;
+        hi = mean + 3.0 * sd;
+    }
+    SkyStats { mean, sd: sd.max(1e-6) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    #[test]
+    fn flat_poisson_sky() {
+        let mut rng = Rng::new(1);
+        let pixels: Vec<f32> = (0..65536).map(|_| rng.poisson(80.0) as f32).collect();
+        let st = sigma_clipped_stats(&pixels);
+        assert!((st.mean - 80.0).abs() < 0.5, "mean {}", st.mean);
+        assert!((st.sd - 80.0f64.sqrt()).abs() < 0.5, "sd {}", st.sd);
+    }
+
+    #[test]
+    fn robust_to_bright_contamination() {
+        let mut rng = Rng::new(2);
+        let mut pixels: Vec<f32> = (0..65536).map(|_| rng.poisson(60.0) as f32).collect();
+        // 2% of pixels contaminated by a bright source
+        for i in 0..1300 {
+            pixels[i * 50] += 5000.0;
+        }
+        let st = sigma_clipped_stats(&pixels);
+        assert!((st.mean - 60.0).abs() < 1.5, "mean {}", st.mean);
+        assert!(st.sd < 12.0, "sd {}", st.sd);
+    }
+
+    #[test]
+    fn tiny_input_does_not_panic() {
+        let st = sigma_clipped_stats(&[1.0, 2.0, 3.0]);
+        assert!(st.mean.is_finite());
+        assert!(st.sd > 0.0);
+    }
+}

@@ -1,0 +1,127 @@
+//! Detection: SNR coadd across bands + thresholded connected components.
+
+use crate::imaging::render::BandImage;
+
+use super::background::SkyStats;
+
+/// A detected pixel component.
+#[derive(Clone, Debug)]
+pub struct Component {
+    /// flat pixel indices (row * cols + col)
+    pub pixels: Vec<usize>,
+    /// peak detection-image value
+    pub peak: f64,
+    /// index of the peak pixel
+    pub peak_idx: usize,
+}
+
+/// Per-pixel detection significance: sum over bands of
+/// (pixel - sky) / sigma, normalized by sqrt(n_bands).
+pub fn detection_image(bands: &[BandImage], stats: &[SkyStats]) -> Vec<f64> {
+    let n = bands[0].pixels.len();
+    let norm = 1.0 / (bands.len() as f64).sqrt();
+    let mut det = vec![0.0; n];
+    for (band, st) in bands.iter().zip(stats) {
+        for (d, &p) in det.iter_mut().zip(&band.pixels) {
+            *d += (p as f64 - st.mean) / st.sd;
+        }
+    }
+    for d in &mut det {
+        *d *= norm;
+    }
+    det
+}
+
+/// 8-connected components of pixels above `threshold` sigmas, discarding
+/// components smaller than `min_area`.
+pub fn connected_components(
+    det: &[f64],
+    cols: usize,
+    threshold: f64,
+    min_area: usize,
+) -> Vec<Component> {
+    let rows = det.len() / cols;
+    let mut visited = vec![false; det.len()];
+    let mut out = Vec::new();
+    for start in 0..det.len() {
+        if visited[start] || det[start] < threshold {
+            continue;
+        }
+        // BFS flood fill
+        let mut pixels = Vec::new();
+        let mut stack = vec![start];
+        visited[start] = true;
+        let mut peak = f64::MIN;
+        let mut peak_idx = start;
+        while let Some(i) = stack.pop() {
+            pixels.push(i);
+            if det[i] > peak {
+                peak = det[i];
+                peak_idx = i;
+            }
+            let (r, c) = (i / cols, i % cols);
+            for dr in -1i64..=1 {
+                for dc in -1i64..=1 {
+                    if dr == 0 && dc == 0 {
+                        continue;
+                    }
+                    let (nr, nc) = (r as i64 + dr, c as i64 + dc);
+                    if nr < 0 || nc < 0 || nr >= rows as i64 || nc >= cols as i64 {
+                        continue;
+                    }
+                    let j = nr as usize * cols + nc as usize;
+                    if !visited[j] && det[j] >= threshold {
+                        visited[j] = true;
+                        stack.push(j);
+                    }
+                }
+            }
+        }
+        if pixels.len() >= min_area {
+            out.push(Component { pixels, peak, peak_idx });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn components_split_and_merge() {
+        // two blobs separated by below-threshold pixels
+        let cols = 10;
+        let mut det = vec![0.0; 100];
+        for &i in &[11, 12, 21, 22] {
+            det[i] = 10.0;
+        }
+        for &i in &[77, 78, 87, 88] {
+            det[i] = 8.0;
+        }
+        let comps = connected_components(&det, cols, 5.0, 2);
+        assert_eq!(comps.len(), 2);
+        let sizes: Vec<usize> = comps.iter().map(|c| c.pixels.len()).collect();
+        assert_eq!(sizes, vec![4, 4]);
+        assert_eq!(comps[0].peak, 10.0);
+    }
+
+    #[test]
+    fn min_area_filters_noise_spikes() {
+        let mut det = vec![0.0; 100];
+        det[55] = 100.0; // single hot pixel
+        let comps = connected_components(&det, 10, 5.0, 4);
+        assert!(comps.is_empty());
+    }
+
+    #[test]
+    fn diagonal_connectivity() {
+        let mut det = vec![0.0; 100];
+        det[11] = 9.0;
+        det[22] = 9.0; // diagonal neighbor
+        det[33] = 9.0;
+        let comps = connected_components(&det, 10, 5.0, 3);
+        assert_eq!(comps.len(), 1);
+        assert_eq!(comps[0].pixels.len(), 3);
+    }
+}

@@ -1,0 +1,177 @@
+//! Measurement: centroids, aperture photometry, moments, classification.
+
+use crate::imaging::FieldImages;
+use crate::model::layout as L;
+
+use super::background::SkyStats;
+use super::detect::Component;
+use super::PhotoConfig;
+
+/// One measured source — the heuristic pipeline's catalog row.
+#[derive(Clone, Debug)]
+pub struct PhotoSource {
+    /// global position
+    pub pos: (f64, f64),
+    /// per-band aperture fluxes (gain-corrected, background-subtracted)
+    pub fluxes: [f64; L::N_BANDS],
+    /// reference-band flux
+    pub flux_r: f64,
+    /// colors (log ratios of adjacent bands; clamped for non-detections)
+    pub colors: [f64; L::N_COLORS],
+    pub is_galaxy: bool,
+    /// deV-ness proxy from the concentration index, in [0, 1]
+    pub p_dev: f64,
+    pub axis_ratio: f64,
+    pub angle: f64,
+    /// effective radius estimate, px (PSF-deconvolved, 0 for stars)
+    pub scale: f64,
+    /// detection significance
+    pub significance: f64,
+}
+
+/// Measure one detected component. Returns None for degenerate cases.
+pub fn measure(
+    field: &FieldImages,
+    stats: &[SkyStats],
+    det: &[f64],
+    comp: &Component,
+    cfg: &PhotoConfig,
+) -> Option<PhotoSource> {
+    let rect = field.geom.rect;
+    let cols = rect.cols;
+
+    // --- flux-weighted centroid on the detection image ---
+    let (mut cx, mut cy, mut wsum) = (0.0, 0.0, 0.0);
+    for &i in &comp.pixels {
+        let w = det[i].max(0.0);
+        cx += w * (i % cols) as f64;
+        cy += w * (i / cols) as f64;
+        wsum += w;
+    }
+    if wsum <= 0.0 {
+        return None;
+    }
+    cx /= wsum;
+    cy /= wsum;
+
+    // --- second central moments over an inflated window ---
+    // (component pixels alone truncate the wings at the detection
+    // threshold, biasing sizes low; measure on the full detection image
+    // in a window around the centroid instead)
+    // adaptive scheme: Gaussian taper (suppresses the noise pedestal far
+    // from the object) plus a 1-sigma SNR floor
+    let ext = (comp.pixels.len() as f64 / std::f64::consts::PI).sqrt();
+    let sigma_w = (1.2 * ext).max(2.5);
+    let r_win = (3.0 * sigma_w).min(24.0);
+    let (mut mxx, mut mxy, mut myy, mut msum) = (0.0, 0.0, 0.0, 0.0);
+    let wr0 = (cy - r_win).floor().max(0.0) as usize;
+    let wr1 = ((cy + r_win).ceil() as usize).min(rect.rows - 1);
+    let wc0 = (cx - r_win).floor().max(0.0) as usize;
+    let wc1 = ((cx + r_win).ceil() as usize).min(rect.cols - 1);
+    for r in wr0..=wr1 {
+        for c in wc0..=wc1 {
+            let snr = det[r * cols + c];
+            if snr < 1.0 {
+                continue;
+            }
+            let dx = c as f64 - cx;
+            let dy = r as f64 - cy;
+            let w = snr * (-(dx * dx + dy * dy) / (2.0 * sigma_w * sigma_w)).exp();
+            mxx += w * dx * dx;
+            mxy += w * dx * dy;
+            myy += w * dy * dy;
+            msum += w;
+        }
+    }
+    if msum <= 0.0 {
+        return None;
+    }
+    mxx /= msum;
+    mxy /= msum;
+    myy /= msum;
+    // eigen-decomposition of the 2x2 moment matrix
+    let tr = mxx + myy;
+    let disc = (((mxx - myy) / 2.0).powi(2) + mxy * mxy).sqrt();
+    // deconvolve the Gaussian taper: 1/var = 1/var_meas - 1/sigma_w^2
+    let untaper = |l: f64| {
+        let l = l.max(1e-6);
+        if l >= 0.9 * sigma_w * sigma_w {
+            9.0 * l // window-dominated; just inflate
+        } else {
+            1.0 / (1.0 / l - 1.0 / (sigma_w * sigma_w))
+        }
+    };
+    let l1 = untaper(tr / 2.0 + disc);
+    let l2 = untaper(tr / 2.0 - disc);
+    let angle = 0.5 * (2.0 * mxy).atan2(mxx - myy);
+    let axis_ratio = (l2 / l1).sqrt().clamp(0.05, 1.0);
+
+    // --- PSF size for star/galaxy separation ---
+    // mean PSF second moment in the reference band
+    let psf = &field.geom.psf[L::REF_BAND];
+    let psf_var: f64 = psf.iter().map(|c| c[0] * 0.5 * (c[3] + c[5])).sum();
+    let obj_var = 0.5 * (l1 + l2);
+    let is_galaxy = obj_var > psf_var * (1.0 + cfg.size_margin);
+    // deconvolved size
+    let scale = if is_galaxy { (obj_var - psf_var).max(0.01).sqrt() } else { 0.0 };
+
+    // --- aperture photometry per band ---
+    let r_ap = (cfg.aperture_k * obj_var.sqrt()).max(cfg.min_aperture);
+    let r_half = r_ap / 2.0;
+    let mut fluxes = [0.0; L::N_BANDS];
+    let mut inner = [0.0; L::N_BANDS];
+    let r0 = (cy - r_ap).floor().max(0.0) as usize;
+    let r1 = ((cy + r_ap).ceil() as usize).min(rect.rows - 1);
+    let c0 = (cx - r_ap).floor().max(0.0) as usize;
+    let c1 = ((cx + r_ap).ceil() as usize).min(rect.cols - 1);
+    for (b, band) in field.bands.iter().enumerate() {
+        let sky = stats[b].mean;
+        let mut total = 0.0;
+        let mut small = 0.0;
+        for r in r0..=r1 {
+            for c in c0..=c1 {
+                let dx = c as f64 - cx;
+                let dy = r as f64 - cy;
+                let d2 = dx * dx + dy * dy;
+                if d2 <= r_ap * r_ap {
+                    let v = band.pixels[r * cols + c] as f64 - sky;
+                    total += v;
+                    if d2 <= r_half * r_half {
+                        small += v;
+                    }
+                }
+            }
+        }
+        fluxes[b] = (total / field.geom.gain[b]).max(1e-3);
+        inner[b] = small.max(0.0);
+    }
+
+    // --- concentration -> profile proxy ---
+    // deV profiles are more centrally concentrated than exponentials
+    let conc = if fluxes[L::REF_BAND] > 0.0 {
+        (inner[L::REF_BAND] / (fluxes[L::REF_BAND] * field.geom.gain[L::REF_BAND]))
+            .clamp(0.0, 1.0)
+    } else {
+        0.5
+    };
+    // map concentration ~[0.55, 0.9] to p_dev [0, 1]
+    let p_dev = ((conc - 0.55) / 0.35).clamp(0.0, 1.0);
+
+    let mut colors = [0.0; L::N_COLORS];
+    for i in 0..L::N_COLORS {
+        colors[i] = (fluxes[i + 1] / fluxes[i]).ln().clamp(-3.0, 3.0);
+    }
+
+    Some(PhotoSource {
+        pos: (rect.x0 + cx + 0.5, rect.y0 + cy + 0.5),
+        fluxes,
+        flux_r: fluxes[L::REF_BAND],
+        colors,
+        is_galaxy,
+        p_dev,
+        axis_ratio,
+        angle,
+        scale,
+        significance: comp.peak,
+    })
+}

@@ -1,0 +1,364 @@
+//! Deterministic PRNG + distribution samplers.
+//!
+//! The offline registry has no `rand` crate, and the project needs
+//! reproducible synthetic skies anyway, so this is a first-class substrate:
+//! xoshiro256++ (Blackman & Vigna) with splitmix64 seeding, plus the
+//! samplers the generative model needs (normal, Poisson, gamma).
+
+/// splitmix64 — used to expand a single `u64` seed into xoshiro state.
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second normal deviate from the polar method
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = splitmix64(&mut sm);
+        }
+        // all-zero state is invalid (cannot happen with splitmix64, but be safe)
+        if s == [0, 0, 0, 0] {
+            s[0] = 1;
+        }
+        Rng { s, spare_normal: None }
+    }
+
+    /// Derive an independent stream (for per-thread / per-task rngs).
+    pub fn split(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire's nearly-divisionless method, simplified (n << 2^64).
+        debug_assert!(n > 0);
+        let threshold = n.wrapping_neg() % n;
+        loop {
+            let r = self.next_u64();
+            let (hi, lo) = {
+                let wide = (r as u128) * (n as u128);
+                ((wide >> 64) as u64, wide as u64)
+            };
+            if lo >= threshold {
+                return hi;
+            }
+        }
+    }
+
+    /// Standard normal via the Marsaglia polar method (with caching).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.spare_normal = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+
+    /// Normal with given mean and standard deviation.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.normal()
+    }
+
+    /// Lognormal: exp(Normal(mu, sigma)).
+    #[inline]
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal_ms(mu, sigma).exp()
+    }
+
+    /// Poisson sampler. Knuth's product method for small lambda, the PTRS
+    /// transformed-rejection method (Hörmann 1993) for lambda >= 10.
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda < 10.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.uniform();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+                // numerical guard for tiny l
+                if k > 1000 {
+                    return k;
+                }
+            }
+        }
+        self.poisson_ptrs(lambda)
+    }
+
+    /// PTRS: transformed rejection with squeeze, valid for lambda >= 10.
+    fn poisson_ptrs(&mut self, lambda: f64) -> u64 {
+        let slam = lambda.sqrt();
+        let loglam = lambda.ln();
+        let b = 0.931 + 2.53 * slam;
+        let a = -0.059 + 0.02483 * b;
+        let inv_alpha = 1.1239 + 1.1328 / (b - 3.4);
+        let v_r = 0.9277 - 3.6224 / (b - 2.0);
+        loop {
+            let u = self.uniform() - 0.5;
+            let v = self.uniform();
+            let us = 0.5 - u.abs();
+            let k = ((2.0 * a / us + b) * u + lambda + 0.43).floor();
+            if us >= 0.07 && v <= v_r {
+                return k as u64;
+            }
+            if k < 0.0 || (us < 0.013 && v > us) {
+                continue;
+            }
+            if v.ln() + inv_alpha.ln() - (a / (us * us) + b).ln()
+                <= k * loglam - lambda - ln_gamma(k + 1.0)
+            {
+                return k as u64;
+            }
+        }
+    }
+
+    /// Gamma(shape, scale=1) via Marsaglia-Tsang; boost trick for shape < 1.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            let u: f64 = self.uniform().max(1e-300);
+            return self.gamma(shape + 1.0) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u: f64 = self.uniform();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v;
+            }
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Stirling-series log-gamma (sufficient accuracy for the PTRS acceptance
+/// test; |err| < 1e-9 for x >= 8, recursion lifts smaller arguments).
+pub fn ln_gamma(mut x: f64) -> f64 {
+    let mut acc = 0.0;
+    while x < 8.0 {
+        acc -= x.ln();
+        x += 1.0;
+    }
+    let inv = 1.0 / x;
+    let inv2 = inv * inv;
+    let series = inv / 12.0 * (1.0 - inv2 / 30.0 * (1.0 - inv2 * 2.0 / 7.0));
+    acc + 0.5 * ((2.0 * std::f64::consts::PI).ln() - x.ln())
+        + x * (x.ln() - 1.0)
+        + series
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        assert_ne!(Rng::new(1).next_u64(), Rng::new(2).next_u64());
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Rng::new(7);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_unbiased() {
+        let mut r = Rng::new(3);
+        let mut counts = [0u32; 7];
+        for _ in 0..70_000 {
+            counts[r.below(7) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "{c}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let (mut m, mut v) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            m += z;
+            v += z * z;
+        }
+        m /= n as f64;
+        v = v / n as f64 - m * m;
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((v - 1.0).abs() < 0.03, "var {v}");
+    }
+
+    #[test]
+    fn poisson_small_lambda_moments() {
+        let mut r = Rng::new(13);
+        for &lam in &[0.1, 1.0, 4.5, 9.0] {
+            let n = 50_000;
+            let mut s = 0.0;
+            let mut s2 = 0.0;
+            for _ in 0..n {
+                let k = r.poisson(lam) as f64;
+                s += k;
+                s2 += k * k;
+            }
+            let mean = s / n as f64;
+            let var = s2 / n as f64 - mean * mean;
+            assert!((mean - lam).abs() < 0.15 * lam.max(0.5), "lam={lam} mean={mean}");
+            assert!((var - lam).abs() < 0.2 * lam.max(0.5), "lam={lam} var={var}");
+        }
+    }
+
+    #[test]
+    fn poisson_large_lambda_moments() {
+        let mut r = Rng::new(17);
+        for &lam in &[15.0, 80.0, 1000.0] {
+            let n = 30_000;
+            let mut s = 0.0;
+            let mut s2 = 0.0;
+            for _ in 0..n {
+                let k = r.poisson(lam) as f64;
+                s += k;
+                s2 += k * k;
+            }
+            let mean = s / n as f64;
+            let var = s2 / n as f64 - mean * mean;
+            assert!((mean - lam).abs() < 0.05 * lam, "lam={lam} mean={mean}");
+            assert!((var - lam).abs() < 0.1 * lam, "lam={lam} var={var}");
+        }
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut r = Rng::new(19);
+        for &shape in &[0.5, 1.0, 3.0, 12.0] {
+            let n = 60_000;
+            let mut s = 0.0;
+            for _ in 0..n {
+                s += r.gamma(shape);
+            }
+            let mean = s / n as f64;
+            assert!((mean - shape).abs() < 0.05 * shape.max(1.0), "k={shape} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn ln_gamma_accuracy() {
+        // ln((n-1)!) for small integers
+        let facts = [0.0, 0.0, 2.0_f64.ln(), 6.0_f64.ln(), 24.0_f64.ln()];
+        for (i, want) in facts.iter().enumerate() {
+            let got = ln_gamma(i as f64 + 1.0);
+            assert!((got - want).abs() < 1e-7, "{i}: {got} vs {want}");
+        }
+        // Gamma(0.5) = sqrt(pi)
+        let half = ln_gamma(0.5);
+        assert!((half - std::f64::consts::PI.sqrt().ln()).abs() < 1e-7);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(23);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn split_streams_independent() {
+        let mut base = Rng::new(5);
+        let mut a = base.split(1);
+        let mut b = base.split(2);
+        let xa: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let xb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(xa, xb);
+    }
+}

@@ -1,0 +1,165 @@
+//! quickcheck-lite: property-based testing (the offline registry has no
+//! proptest). Deterministic generator streams + linear shrinking.
+//!
+//! ```ignore
+//! quickcheck::forall(200, seed, gen, |case| property(case))
+//! ```
+//! On failure the input is shrunk (halving toward a trivial case) and the
+//! minimal failing case reported in the panic message.
+
+use crate::prng::Rng;
+
+/// A generator of test cases plus a shrinker.
+pub trait Arbitrary: Sized + std::fmt::Debug + Clone {
+    fn generate(rng: &mut Rng) -> Self;
+    /// Candidate smaller versions of `self` (simplest first).
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Arbitrary for f64 {
+    fn generate(rng: &mut Rng) -> Self {
+        // mixture of scales, including negatives and near-zero
+        match rng.below(4) {
+            0 => rng.normal(),
+            1 => rng.normal() * 1e3,
+            2 => rng.normal() * 1e-3,
+            _ => rng.uniform_in(-10.0, 10.0),
+        }
+    }
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+        }
+        out
+    }
+}
+
+impl Arbitrary for usize {
+    fn generate(rng: &mut Rng) -> Self {
+        match rng.below(3) {
+            0 => rng.below(8) as usize,
+            1 => rng.below(256) as usize,
+            _ => rng.below(65536) as usize,
+        }
+    }
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            if *self > 1 {
+                out.push(self - 1);
+            }
+        }
+        out
+    }
+}
+
+impl<T: Arbitrary> Arbitrary for Vec<T> {
+    fn generate(rng: &mut Rng) -> Self {
+        let n = rng.below(32) as usize;
+        (0..n).map(|_| T::generate(rng)).collect()
+    }
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            out.push(Vec::new());
+            out.push(self[..self.len() / 2].to_vec());
+            let mut tail = self.clone();
+            tail.remove(0);
+            out.push(tail);
+        }
+        out
+    }
+}
+
+impl<A: Arbitrary, B: Arbitrary> Arbitrary for (A, B) {
+    fn generate(rng: &mut Rng) -> Self {
+        (A::generate(rng), B::generate(rng))
+    }
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Check `prop` over `n` generated cases; panics with the minimal
+/// (shrunk) counterexample on failure.
+pub fn forall<T: Arbitrary, P: Fn(&T) -> bool>(n: usize, seed: u64, prop: P) {
+    let mut rng = Rng::new(seed);
+    for i in 0..n {
+        let case = T::generate(&mut rng);
+        if !prop(&case) {
+            let minimal = shrink_loop(case, &prop);
+            panic!("property failed on case {i}; minimal counterexample: {minimal:?}");
+        }
+    }
+}
+
+/// Like [`forall`] but with an explicit generator function.
+pub fn forall_with<T: std::fmt::Debug, G, P>(n: usize, seed: u64, gen: G, prop: P)
+where
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> bool,
+{
+    let mut rng = Rng::new(seed);
+    for i in 0..n {
+        let case = gen(&mut rng);
+        assert!(prop(&case), "property failed on case {i}: {case:?}");
+    }
+}
+
+fn shrink_loop<T: Arbitrary, P: Fn(&T) -> bool>(mut failing: T, prop: &P) -> T {
+    for _ in 0..64 {
+        let mut advanced = false;
+        for cand in failing.shrink() {
+            if !prop(&cand) {
+                failing = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        forall::<Vec<usize>, _>(100, 1, |v| v.len() < 100_000);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn fails_and_shrinks() {
+        forall::<Vec<usize>, _>(500, 2, |v| v.iter().sum::<usize>() < 10);
+    }
+
+    #[test]
+    fn shrinking_reaches_small_case() {
+        // property: all vecs have < 3 elements — find and shrink
+        let mut failing: Option<Vec<usize>> = None;
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let v = Vec::<usize>::generate(&mut rng);
+            if v.len() >= 3 {
+                failing = Some(v);
+                break;
+            }
+        }
+        let f = failing.expect("generator should produce a long vec");
+        let minimal = shrink_loop(f, &|v: &Vec<usize>| v.len() < 3);
+        assert!(minimal.len() >= 3 && minimal.len() <= 4, "{minimal:?}");
+    }
+}

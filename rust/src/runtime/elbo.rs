@@ -1,0 +1,124 @@
+//! The ELBO engine: composes the compiled artifacts into the per-source
+//! objective the optimizer minimizes.
+//!
+//! objective(θ) = KL(θ) − Σ_epochs like(θ, patch_e)      (negated ELBO)
+//!
+//! The likelihood is additive across epochs (independent Poisson
+//! observations), so value/grad/Hessian all sum; the KL term appears once.
+
+use anyhow::Result;
+
+use crate::imaging::Patch;
+use crate::linalg::Mat;
+use crate::model::layout as L;
+use crate::model::Prior;
+
+use super::executor::Runtime;
+
+/// Which compiled likelihood path to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LikeEngine {
+    /// pure-jnp autodiff artifact: value + grad + dense Hessian
+    AutoDiff,
+    /// Pallas manual-gradient artifact: value + grad (no Hessian)
+    PallasManual,
+}
+
+/// Per-source objective evaluator backed by compiled artifacts.
+pub struct ElboEngine<'rt> {
+    pub rt: &'rt Runtime,
+    prior_vec: Vec<f64>,
+}
+
+const D: usize = L::DIM;
+
+impl<'rt> ElboEngine<'rt> {
+    pub fn new(rt: &'rt Runtime, prior: &Prior) -> Self {
+        ElboEngine { rt, prior_vec: prior.to_vec().to_vec() }
+    }
+
+    /// KL(q‖prior): (value, grad, hess).
+    pub fn kl_vgh(&self, theta: &[f64]) -> Result<(f64, Vec<f64>, Mat)> {
+        let out = self.rt.execute(L::ART_KL, &[theta, &self.prior_vec])?;
+        Ok(unpack_vgh(&out))
+    }
+
+    /// One epoch's expected log-likelihood: (value, grad, hess), autodiff.
+    pub fn like_vgh(&self, theta: &[f64], p: &Patch) -> Result<(f64, Vec<f64>, Mat)> {
+        let out = self.rt.execute(
+            L::ART_LIKE_AD,
+            &[theta, &p.pixels, &p.bg, &p.mask, &p.psf, &p.gain],
+        )?;
+        Ok(unpack_vgh(&out))
+    }
+
+    /// One epoch's expected log-likelihood: (value, grad), Pallas manual.
+    pub fn like_vg_pallas(&self, theta: &[f64], p: &Patch) -> Result<(f64, Vec<f64>)> {
+        let out = self.rt.execute(
+            L::ART_LIKE_PALLAS,
+            &[theta, &p.pixels, &p.bg, &p.mask, &p.psf, &p.gain],
+        )?;
+        let f = out[0][0];
+        let g = out[1].clone();
+        Ok((f, g))
+    }
+
+    /// Negated-ELBO value+grad+Hessian over all epochs (Newton payload).
+    pub fn neg_elbo_vgh(&self, theta: &[f64], patches: &[Patch]) -> Result<(f64, Vec<f64>, Mat)> {
+        let (kf, kg, kh) = self.kl_vgh(theta)?;
+        let mut f = kf;
+        let mut g = kg;
+        let mut h = kh;
+        for p in patches {
+            let (lf, lg, lh) = self.like_vgh(theta, p)?;
+            f -= lf;
+            for (gi, li) in g.iter_mut().zip(&lg) {
+                *gi -= li;
+            }
+            for (hi, li) in h.data.iter_mut().zip(&lh.data) {
+                *hi -= li;
+            }
+        }
+        h.symmetrize();
+        Ok((f, g, h))
+    }
+
+    /// Negated-ELBO value+grad over all epochs, selectable engine.
+    pub fn neg_elbo_vg(
+        &self,
+        theta: &[f64],
+        patches: &[Patch],
+        engine: LikeEngine,
+    ) -> Result<(f64, Vec<f64>)> {
+        let (kf, kg, _) = self.kl_vgh(theta)?;
+        let mut f = kf;
+        let mut g = kg;
+        for p in patches {
+            let (lf, lg) = match engine {
+                LikeEngine::PallasManual => self.like_vg_pallas(theta, p)?,
+                LikeEngine::AutoDiff => {
+                    let (a, b, _) = self.like_vgh(theta, p)?;
+                    (a, b)
+                }
+            };
+            f -= lf;
+            for (gi, li) in g.iter_mut().zip(&lg) {
+                *gi -= li;
+            }
+        }
+        Ok((f, g))
+    }
+
+    /// Execute the standalone Pallas renderer (parity tests, benches).
+    pub fn render_pallas(&self, comps: &[f64]) -> Result<Vec<f64>> {
+        let out = self.rt.execute(L::ART_RENDER, &[comps])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+}
+
+fn unpack_vgh(out: &[Vec<f64>]) -> (f64, Vec<f64>, Mat) {
+    let f = out[0][0];
+    let g = out[1].clone();
+    let h = Mat::from_flat(D, D, &out[2]);
+    (f, g, h)
+}

@@ -1,0 +1,174 @@
+//! PJRT executor: compile HLO-text artifacts once, execute many times.
+//!
+//! Adapted from /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`.
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so a `Runtime` is bound to one
+//! OS thread; the cluster layer creates one per worker thread via
+//! `thread_local!` (see `coordinator::worker`).
+
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{ArtifactSig, Manifest};
+
+/// A compiled artifact plus its signature.
+pub struct Loaded {
+    pub sig: ArtifactSig,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// One thread's PJRT runtime.
+pub struct Runtime {
+    pub manifest: Manifest,
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    exes: BTreeMap<String, Loaded>,
+    /// number of artifact executions (metrics)
+    pub exec_count: Cell<u64>,
+    /// accumulated execution wall time, ns (metrics)
+    pub exec_ns: Cell<u64>,
+}
+
+impl Runtime {
+    /// Compile every artifact in the manifest.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        Self::load_subset(dir, &[])
+    }
+
+    /// Compile a subset of artifacts (empty = all). Compiling `like_ad`
+    /// dominates startup, so harnesses that only need the renderer can
+    /// skip it.
+    pub fn load_subset(dir: &Path, names: &[&str]) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        let mut exes = BTreeMap::new();
+        for (name, sig) in &manifest.artifacts {
+            if !names.is_empty() && !names.contains(&name.as_str()) {
+                continue;
+            }
+            let proto = xla::HloModuleProto::from_text_file(&sig.path)
+                .map_err(|e| anyhow!("parsing {:?}: {e:?}", sig.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            exes.insert(name.clone(), Loaded { sig: sig.clone(), exe });
+        }
+        Ok(Runtime { manifest, client, exes, exec_count: Cell::new(0), exec_ns: Cell::new(0) })
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// Execute an artifact. `inputs` must match the manifest signature
+    /// (flattened row-major f64); returns one flattened vec per output.
+    pub fn execute(&self, name: &str, inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
+        let loaded = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not loaded"))?;
+        let sig = &loaded.sig;
+        if inputs.len() != sig.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                sig.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, tsig) in inputs.iter().zip(&sig.inputs) {
+            if data.len() != tsig.numel() {
+                bail!(
+                    "{name}.{}: expected {} elements ({:?}), got {}",
+                    tsig.name,
+                    tsig.numel(),
+                    tsig.shape,
+                    data.len()
+                );
+            }
+            let lit = xla::Literal::vec1(data);
+            let lit = if tsig.shape.len() == 1 {
+                lit
+            } else {
+                let dims: Vec<i64> = tsig.shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims)
+                    .map_err(|e| anyhow!("{name}.{}: reshape: {e:?}", tsig.name))?
+            };
+            literals.push(lit);
+        }
+
+        let t0 = std::time::Instant::now();
+        let result = loaded
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        self.exec_count.set(self.exec_count.get() + 1);
+        self.exec_ns
+            .set(self.exec_ns.get() + t0.elapsed().as_nanos() as u64);
+
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{name}: to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: output is always a tuple
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("{name}: to_tuple: {e:?}"))?;
+        if parts.len() != sig.outputs.len() {
+            bail!(
+                "{name}: expected {} outputs, got {}",
+                sig.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (part, tsig) in parts.into_iter().zip(&sig.outputs) {
+            let v = part
+                .to_vec::<f64>()
+                .map_err(|e| anyhow!("{name}.{}: to_vec: {e:?}", tsig.name))?;
+            if v.len() != tsig.numel() {
+                bail!(
+                    "{name}.{}: output has {} elements, signature says {}",
+                    tsig.name,
+                    v.len(),
+                    tsig.numel()
+                );
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    /// Mean execution latency in microseconds (metrics).
+    pub fn mean_exec_us(&self) -> f64 {
+        let n = self.exec_count.get();
+        if n == 0 {
+            0.0
+        } else {
+            self.exec_ns.get() as f64 / n as f64 / 1000.0
+        }
+    }
+}
+
+/// Smoke check that the PJRT CPU client initializes.
+pub fn pjrt_smoke() -> Result<String> {
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
+    Ok(format!(
+        "platform={} devices={}",
+        client.platform_name(),
+        client.device_count()
+    ))
+}
+
+/// Load the runtime from the default artifact dir with a helpful error.
+pub fn load_default() -> Result<Runtime> {
+    let dir = super::manifest::default_artifact_dir();
+    Runtime::load(&dir).with_context(|| {
+        format!("loading artifacts from {dir:?} (set CELESTE_ARTIFACTS or run `make artifacts`)")
+    })
+}

@@ -1,0 +1,219 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parsed from `artifacts/manifest.json` and validated
+//! against the compiled-in layout so the two sides cannot drift.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::jsonlite::{self, Value};
+use crate::model::layout as L;
+
+/// One tensor in an artifact signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One artifact: HLO file + typed signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSig {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// The parsed, validated manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+}
+
+fn tensor_list(v: &Value, key: &str) -> Result<Vec<TensorSig>> {
+    v.get(key)
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("missing {key}"))?
+        .iter()
+        .map(|t| {
+            let name = t
+                .get("name")
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow!("tensor missing name"))?
+                .to_string();
+            let shape = t
+                .get("shape")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| anyhow!("tensor {name} missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = t.get("dtype").and_then(Value::as_str).unwrap_or("f64");
+            if dtype != "f64" {
+                bail!("tensor {name}: only f64 supported, got {dtype}");
+            }
+            Ok(TensorSig { name, shape })
+        })
+        .collect()
+}
+
+/// Constants that must agree between Python and Rust.
+fn check_constants(c: &Value) -> Result<()> {
+    let want: &[(&str, f64)] = &[
+        ("dim", L::DIM as f64),
+        ("prior_dim", L::PRIOR_DIM as f64),
+        ("n_bands", L::N_BANDS as f64),
+        ("ref_band", L::REF_BAND as f64),
+        ("patch", L::PATCH as f64),
+        ("k_psf", L::K_PSF as f64),
+        ("psf_params", L::PSF_PARAMS as f64),
+        ("k_star", L::K_STAR as f64),
+        ("k_gal", L::K_GAL as f64),
+        ("comp_params", L::COMP_PARAMS as f64),
+        ("i_a", L::I_A as f64),
+        ("i_loc", L::I_LOC as f64),
+        ("i_flux_star", L::I_FLUX_STAR as f64),
+        ("i_flux_gal", L::I_FLUX_GAL as f64),
+        ("i_color_mean_star", L::I_COLOR_MEAN_STAR as f64),
+        ("i_color_mean_gal", L::I_COLOR_MEAN_GAL as f64),
+        ("i_color_var_star", L::I_COLOR_VAR_STAR as f64),
+        ("i_color_var_gal", L::I_COLOR_VAR_GAL as f64),
+        ("i_shape", L::I_SHAPE as f64),
+        ("ridge", L::RIDGE),
+    ];
+    // shape priors (2-tuples)
+    for (key, (m, v)) in [
+        ("shape_prior_pdev", L::SHAPE_PRIOR_PDEV),
+        ("shape_prior_axis", L::SHAPE_PRIOR_AXIS),
+        ("shape_prior_scale", L::SHAPE_PRIOR_SCALE),
+    ] {
+        let arr = c
+            .get(key)
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("manifest constants missing {key}"))?;
+        let got_m = arr.first().and_then(Value::as_f64).unwrap_or(f64::NAN);
+        let got_v = arr.get(1).and_then(Value::as_f64).unwrap_or(f64::NAN);
+        if (got_m - m).abs() > 1e-12 || (got_v - v).abs() > 1e-12 {
+            bail!("layout drift in {key}");
+        }
+    }
+    for (key, expect) in want {
+        let got = c
+            .get(key)
+            .and_then(Value::as_f64)
+            .ok_or_else(|| anyhow!("manifest constants missing {key}"))?;
+        if (got - expect).abs() > 1e-12 {
+            bail!("layout drift: {key} = {got} in manifest, {expect} in rust");
+        }
+    }
+    // profile tables
+    for (key, table) in [
+        ("profile_exp_amp", &L::PROFILE_EXP_AMP),
+        ("profile_exp_var", &L::PROFILE_EXP_VAR),
+        ("profile_dev_amp", &L::PROFILE_DEV_AMP),
+        ("profile_dev_var", &L::PROFILE_DEV_VAR),
+    ] {
+        let arr = c
+            .get(key)
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("manifest constants missing {key}"))?;
+        if arr.len() != table.len() {
+            bail!("layout drift: {key} length");
+        }
+        for (a, b) in arr.iter().zip(table.iter()) {
+            if (a.as_f64().unwrap_or(f64::NAN) - b).abs() > 1e-12 {
+                bail!("layout drift in {key}");
+            }
+        }
+    }
+    Ok(())
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = jsonlite::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        if v.get("format").and_then(Value::as_str) != Some("hlo-text") {
+            bail!("manifest format must be hlo-text");
+        }
+        check_constants(v.get("constants").ok_or_else(|| anyhow!("missing constants"))?)?;
+
+        let mut artifacts = BTreeMap::new();
+        for (name, art) in v
+            .get("artifacts")
+            .and_then(Value::as_obj)
+            .ok_or_else(|| anyhow!("missing artifacts"))?
+        {
+            let file = art
+                .get("file")
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?;
+            let path = dir.join(file);
+            if !path.exists() {
+                bail!("artifact file missing: {path:?}");
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactSig {
+                    name: name.clone(),
+                    path,
+                    inputs: tensor_list(art, "inputs")?,
+                    outputs: tensor_list(art, "outputs")?,
+                },
+            );
+        }
+        for required in [L::ART_LIKE_AD, L::ART_LIKE_PALLAS, L::ART_KL, L::ART_RENDER] {
+            if !artifacts.contains_key(required) {
+                bail!("manifest missing required artifact {required}");
+            }
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSig> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))
+    }
+}
+
+/// Locate the artifacts directory: $CELESTE_ARTIFACTS or ./artifacts.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("CELESTE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Integration coverage for the real manifest lives in
+    /// rust/tests/runtime_integration.rs (requires `make artifacts`).
+    #[test]
+    fn tensor_numel() {
+        let t = TensorSig { name: "x".into(), shape: vec![5, 32, 32] };
+        assert_eq!(t.numel(), 5 * 32 * 32);
+        let s = TensorSig { name: "scalar".into(), shape: vec![] };
+        assert_eq!(s.numel(), 1);
+    }
+
+    #[test]
+    fn rejects_drifted_constants() {
+        let json = r#"{"dim": 99}"#;
+        let v = jsonlite::parse(json).unwrap();
+        assert!(check_constants(&v).is_err());
+    }
+}

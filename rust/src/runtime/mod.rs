@@ -1,0 +1,14 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! inference path (Python never runs here).
+
+pub mod elbo;
+pub mod objective;
+pub mod optimize;
+pub mod executor;
+pub mod manifest;
+
+pub use elbo::{ElboEngine, LikeEngine};
+pub use executor::{load_default, pjrt_smoke, Runtime};
+pub use objective::SourceObjective;
+pub use optimize::{optimize_source, SourceFit};
+pub use manifest::{default_artifact_dir, ArtifactSig, Manifest, TensorSig};

@@ -1,0 +1,60 @@
+//! Adapter: the compiled negated-ELBO as an `optim` objective.
+
+use crate::imaging::Patch;
+use crate::linalg::Mat;
+use crate::model::layout as L;
+use crate::optim::{GradObjective, NewtonObjective};
+
+use super::elbo::{ElboEngine, LikeEngine};
+
+/// The per-source optimization problem: minimize KL − Σ like over θ.
+pub struct SourceObjective<'a> {
+    pub engine: &'a ElboEngine<'a>,
+    pub patches: &'a [Patch],
+    /// which likelihood artifact backs value_grad (Newton always uses
+    /// the autodiff artifact for its Hessian)
+    pub like: LikeEngine,
+    /// count of failed artifact executions (observability)
+    pub errors: usize,
+}
+
+impl<'a> SourceObjective<'a> {
+    pub fn new(engine: &'a ElboEngine<'a>, patches: &'a [Patch]) -> Self {
+        SourceObjective { engine, patches, like: LikeEngine::AutoDiff, errors: 0 }
+    }
+
+    pub fn with_engine(mut self, like: LikeEngine) -> Self {
+        self.like = like;
+        self
+    }
+}
+
+impl GradObjective for SourceObjective<'_> {
+    fn dim(&self) -> usize {
+        L::DIM
+    }
+
+    fn value_grad(&mut self, x: &[f64]) -> Option<(f64, Vec<f64>)> {
+        match self.engine.neg_elbo_vg(x, self.patches, self.like) {
+            Ok(v) if v.0.is_finite() => Some(v),
+            Ok(_) => None,
+            Err(_) => {
+                self.errors += 1;
+                None
+            }
+        }
+    }
+}
+
+impl NewtonObjective for SourceObjective<'_> {
+    fn value_grad_hess(&mut self, x: &[f64]) -> Option<(f64, Vec<f64>, Mat)> {
+        match self.engine.neg_elbo_vgh(x, self.patches) {
+            Ok(v) if v.0.is_finite() => Some(v),
+            Ok(_) => None,
+            Err(_) => {
+                self.errors += 1;
+                None
+            }
+        }
+    }
+}

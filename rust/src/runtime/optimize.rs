@@ -1,0 +1,95 @@
+//! The per-source optimization driver: trust-region Newton plus a
+//! star/galaxy type-flip refinement.
+//!
+//! q(a_s) enters the ELBO through sigmoid(θ₀); once the optimizer pushes
+//! γ to a saturated extreme, ∂L/∂θ₀ ∝ γ(1−γ) vanishes and the wrong type
+//! can be a flat local optimum even when the other type's ELBO is
+//! strictly better. The remedy (mirroring Celeste practice of comparing
+//! per-type fits) is deterministic: after convergence, re-run the fit
+//! with the indicator flipped and keep whichever final ELBO wins.
+
+use crate::model::layout as L;
+use crate::model::sigmoid;
+use crate::optim::{newton_tr_split, NewtonConfig, OptimResult, SplitConfig};
+
+use crate::imaging::Patch;
+
+use super::elbo::ElboEngine;
+use super::objective::SourceObjective;
+
+/// Saturation threshold beyond which the flip check runs.
+const GAMMA_SAT: f64 = 0.98;
+/// Logit magnitude used for the flipped restart.
+const FLIP_LOGIT: f64 = 6.0;
+
+#[derive(Clone, Debug)]
+pub struct SourceFit {
+    pub theta: [f64; L::DIM],
+    pub result: OptimResult,
+    /// whether the saturated-γ flip refinement was attempted
+    pub flip_tried: bool,
+    /// whether the flipped fit won
+    pub flip_won: bool,
+    /// total artifact-objective evaluations across both fits
+    pub total_evals: usize,
+}
+
+/// Optimize one source: split-evaluation Newton-TR (cheap Pallas
+/// value+grad for trials, autodiff Hessian on accepted points only —
+/// EXPERIMENTS.md §Perf), then the type-flip refinement.
+pub fn optimize_source(
+    engine: &ElboEngine,
+    patches: &[Patch],
+    theta0: &[f64; L::DIM],
+    cfg: &NewtonConfig,
+) -> SourceFit {
+    let split = SplitConfig { base: cfg.clone(), ..Default::default() };
+    let mut obj = SourceObjective::new(engine, patches)
+        .with_engine(crate::runtime::elbo::LikeEngine::PallasManual);
+    let (res1, h1) = newton_tr_split(&mut obj, theta0.as_slice(), &split);
+    let mut total_evals = res1.f_evals + h1;
+
+    let gamma = sigmoid(res1.x[L::I_A]);
+    let saturated = !(1.0 - GAMMA_SAT..=GAMMA_SAT).contains(&gamma);
+    if !saturated || !res1.converged() {
+        let mut theta = [0.0; L::DIM];
+        theta.copy_from_slice(&res1.x);
+        return SourceFit { theta, result: res1, flip_tried: false, flip_won: false, total_evals };
+    }
+
+    // Flipped restart: opposite type, with the *fitted* branch's
+    // flux/color factors copied into the newly-active branch. (The
+    // inactive branch drifts to the prior during the first fit — only
+    // its KL term pulls on it — so flipping the indicator alone starts
+    // the comparison from an unfit branch and γ races straight back.)
+    let split2 = SplitConfig { base: cfg.clone(), ..Default::default() };
+    let mut t2 = res1.x.clone();
+    let galaxy_won_first = gamma > 0.5;
+    t2[L::I_A] = if galaxy_won_first { -FLIP_LOGIT } else { FLIP_LOGIT };
+    let (src, dst) = if galaxy_won_first {
+        (L::I_FLUX_GAL, L::I_FLUX_STAR)
+    } else {
+        (L::I_FLUX_STAR, L::I_FLUX_GAL)
+    };
+    t2[dst] = res1.x[src];
+    t2[dst + 1] = res1.x[src + 1];
+    let (csrc, cdst, vsrc, vdst) = if galaxy_won_first {
+        (L::I_COLOR_MEAN_GAL, L::I_COLOR_MEAN_STAR, L::I_COLOR_VAR_GAL, L::I_COLOR_VAR_STAR)
+    } else {
+        (L::I_COLOR_MEAN_STAR, L::I_COLOR_MEAN_GAL, L::I_COLOR_VAR_STAR, L::I_COLOR_VAR_GAL)
+    };
+    for i in 0..L::N_COLORS {
+        t2[cdst + i] = res1.x[csrc + i];
+        t2[vdst + i] = res1.x[vsrc + i];
+    }
+    let mut obj2 = SourceObjective::new(engine, patches)
+        .with_engine(crate::runtime::elbo::LikeEngine::PallasManual);
+    let (res2, h2) = newton_tr_split(&mut obj2, &t2, &split2);
+    total_evals += res2.f_evals + h2;
+
+    let flip_won = res2.converged() && res2.f < res1.f;
+    let best = if flip_won { res2 } else { res1 };
+    let mut theta = [0.0; L::DIM];
+    theta.copy_from_slice(&best.x);
+    SourceFit { theta, result: best, flip_tried: true, flip_won, total_evals }
+}

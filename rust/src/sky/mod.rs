@@ -1,0 +1,210 @@
+//! Synthetic-universe generation.
+//!
+//! The paper's data substrate is SDSS DR12; we substitute skies drawn from
+//! the Celeste generative model itself (DESIGN.md §4.1). Source positions
+//! mix a uniform field with clusters, reproducing the spatial
+//! non-uniformity the paper §III-C observes ("some regions of the sky have
+//! many sources while other regions have few to none") — the origin of the
+//! load imbalance its scheduler exists to fix.
+
+use crate::model::{GalaxyShape, SourceParams};
+use crate::prng::Rng;
+
+/// Configuration for a synthetic sky.
+#[derive(Clone, Debug)]
+pub struct SkyConfig {
+    /// global extent, pixels
+    pub width: f64,
+    pub height: f64,
+    pub n_sources: usize,
+    /// fraction of sources that are galaxies
+    pub frac_galaxy: f64,
+    /// fraction of sources placed in clusters (vs uniform)
+    pub frac_clustered: f64,
+    /// number of clusters
+    pub n_clusters: usize,
+    /// cluster standard deviation, pixels
+    pub cluster_sd: f64,
+    /// lognormal flux prior: (mu, sigma) of log flux — stars
+    pub flux_star: (f64, f64),
+    /// lognormal flux prior — galaxies
+    pub flux_gal: (f64, f64),
+    /// color means/SDs per population
+    pub color_mean_star: [f64; 4],
+    pub color_mean_gal: [f64; 4],
+    pub color_sd: f64,
+    /// galaxy scale lognormal: (mu of log scale, sigma)
+    pub scale_lognorm: (f64, f64),
+    pub seed: u64,
+}
+
+impl Default for SkyConfig {
+    fn default() -> Self {
+        SkyConfig {
+            width: 2048.0,
+            height: 1361.0,
+            n_sources: 500,
+            frac_galaxy: 0.35,
+            frac_clustered: 0.4,
+            n_clusters: 6,
+            cluster_sd: 60.0,
+            flux_star: (4.0, 1.2),
+            flux_gal: (4.5, 1.2),
+            color_mean_star: [0.5, 0.4, 0.2, 0.1],
+            color_mean_gal: [0.8, 0.5, 0.3, 0.2],
+            color_sd: 0.2,
+            scale_lognorm: (0.5, 0.4),
+            seed: 42,
+        }
+    }
+}
+
+/// A synthetic universe: ground-truth sources plus extent.
+#[derive(Clone, Debug)]
+pub struct Universe {
+    pub width: f64,
+    pub height: f64,
+    pub sources: Vec<SourceParams>,
+}
+
+/// Draw a universe from the generative prior.
+pub fn generate(cfg: &SkyConfig) -> Universe {
+    let mut rng = Rng::new(cfg.seed);
+    // cluster centers
+    let centers: Vec<(f64, f64)> = (0..cfg.n_clusters)
+        .map(|_| {
+            (
+                rng.uniform_in(0.1 * cfg.width, 0.9 * cfg.width),
+                rng.uniform_in(0.1 * cfg.height, 0.9 * cfg.height),
+            )
+        })
+        .collect();
+
+    let margin = 4.0; // keep centers inside the sky
+    let mut sources = Vec::with_capacity(cfg.n_sources);
+    for _ in 0..cfg.n_sources {
+        let pos = if !centers.is_empty() && rng.uniform() < cfg.frac_clustered {
+            let c = centers[rng.below(centers.len() as u64) as usize];
+            (
+                (c.0 + rng.normal() * cfg.cluster_sd).clamp(margin, cfg.width - margin),
+                (c.1 + rng.normal() * cfg.cluster_sd).clamp(margin, cfg.height - margin),
+            )
+        } else {
+            (
+                rng.uniform_in(margin, cfg.width - margin),
+                rng.uniform_in(margin, cfg.height - margin),
+            )
+        };
+        let is_galaxy = rng.uniform() < cfg.frac_galaxy;
+        let (fmu, fsd) = if is_galaxy { cfg.flux_gal } else { cfg.flux_star };
+        let flux_r = rng.lognormal(fmu, fsd);
+        let cmean = if is_galaxy { cfg.color_mean_gal } else { cfg.color_mean_star };
+        let mut colors = [0.0; 4];
+        for (c, m) in colors.iter_mut().zip(cmean) {
+            *c = rng.normal_ms(m, cfg.color_sd);
+        }
+        let shape = if is_galaxy {
+            GalaxyShape {
+                p_dev: rng.uniform_in(0.05, 0.95),
+                axis_ratio: rng.uniform_in(0.15, 0.95),
+                angle: rng.uniform_in(0.0, std::f64::consts::PI),
+                scale: rng.lognormal(cfg.scale_lognorm.0, cfg.scale_lognorm.1).clamp(0.3, 8.0),
+            }
+        } else {
+            GalaxyShape::point_like()
+        };
+        sources.push(SourceParams { pos, is_galaxy, flux_r, colors, shape });
+    }
+    Universe { width: cfg.width, height: cfg.height, sources }
+}
+
+/// Per-cell source counts on a grid — quantifies spatial non-uniformity
+/// (used by the fig1/fig4 harnesses and by tests).
+pub fn density_grid(u: &Universe, cells_x: usize, cells_y: usize) -> Vec<usize> {
+    let mut grid = vec![0usize; cells_x * cells_y];
+    for s in &u.sources {
+        let cx = ((s.pos.0 / u.width) * cells_x as f64).min(cells_x as f64 - 1.0) as usize;
+        let cy = ((s.pos.1 / u.height) * cells_y as f64).min(cells_y as f64 - 1.0) as usize;
+        grid[cy * cells_x + cx] += 1;
+    }
+    grid
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_count() {
+        let u = generate(&SkyConfig { n_sources: 321, ..Default::default() });
+        assert_eq!(u.sources.len(), 321);
+    }
+
+    #[test]
+    fn positions_in_bounds() {
+        let u = generate(&SkyConfig::default());
+        for s in &u.sources {
+            assert!(s.pos.0 >= 0.0 && s.pos.0 <= u.width);
+            assert!(s.pos.1 >= 0.0 && s.pos.1 <= u.height);
+        }
+    }
+
+    #[test]
+    fn galaxy_fraction_approx() {
+        let cfg = SkyConfig { n_sources: 5000, frac_galaxy: 0.35, ..Default::default() };
+        let u = generate(&cfg);
+        let ng = u.sources.iter().filter(|s| s.is_galaxy).count();
+        let frac = ng as f64 / 5000.0;
+        assert!((frac - 0.35).abs() < 0.03, "frac {frac}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate(&SkyConfig::default());
+        let b = generate(&SkyConfig::default());
+        assert_eq!(a.sources.len(), b.sources.len());
+        for (x, y) in a.sources.iter().zip(&b.sources) {
+            assert_eq!(x.pos, y.pos);
+            assert_eq!(x.flux_r, y.flux_r);
+        }
+    }
+
+    #[test]
+    fn clustering_creates_imbalance() {
+        // clustered skies must have a markedly higher max/mean cell count
+        let flat = generate(&SkyConfig {
+            n_sources: 4000,
+            frac_clustered: 0.0,
+            seed: 1,
+            ..Default::default()
+        });
+        let lumpy = generate(&SkyConfig {
+            n_sources: 4000,
+            frac_clustered: 0.7,
+            n_clusters: 4,
+            cluster_sd: 40.0,
+            seed: 1,
+            ..Default::default()
+        });
+        let peak = |u: &Universe| {
+            let g = density_grid(u, 16, 16);
+            let mean = g.iter().sum::<usize>() as f64 / g.len() as f64;
+            g.iter().copied().max().unwrap() as f64 / mean
+        };
+        assert!(peak(&lumpy) > 2.0 * peak(&flat), "lumpy {} flat {}", peak(&lumpy), peak(&flat));
+    }
+
+    #[test]
+    fn galaxies_have_varied_shapes() {
+        let u = generate(&SkyConfig { n_sources: 2000, ..Default::default() });
+        let scales: Vec<f64> = u
+            .sources
+            .iter()
+            .filter(|s| s.is_galaxy)
+            .map(|s| s.shape.scale)
+            .collect();
+        let mean = scales.iter().sum::<f64>() / scales.len() as f64;
+        let var = scales.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / scales.len() as f64;
+        assert!(var > 0.01);
+    }
+}

@@ -1,0 +1,238 @@
+//! Property-based tests over coordinator-layer invariants (routing,
+//! batching, state) plus numeric substrates — quickcheck-lite in place of
+//! proptest (offline registry).
+
+use celeste::catalog::{Catalog, CatalogEntry};
+use celeste::cluster::workload::{synthetic_workload, CostModel};
+use celeste::cluster::{simulate, ClusterConfig};
+use celeste::dtree::{Dtree, DtreeConfig};
+use celeste::ga::LruCache;
+use celeste::jsonlite;
+use celeste::linalg::{norm2, solve_trust_region, Mat};
+use celeste::model::GalaxyShape;
+use celeste::prng::Rng;
+use celeste::quickcheck::forall_with;
+
+/// Dtree invariant: any request interleaving issues every task exactly
+/// once, and every grant is non-empty until global exhaustion.
+#[test]
+fn dtree_any_interleaving_is_exact_cover() {
+    forall_with(
+        60,
+        41,
+        |rng: &mut Rng| {
+            let nprocs = 1 + rng.below(64) as usize;
+            let total = rng.below(3000) as usize;
+            let order: Vec<usize> = (0..4 * total + 8)
+                .map(|_| rng.below(nprocs as u64) as usize)
+                .collect();
+            (nprocs, total, order)
+        },
+        |(nprocs, total, order)| {
+            let mut dt = Dtree::new(DtreeConfig::default(), *nprocs, *total);
+            let mut seen = vec![false; *total];
+            // random interleaving ...
+            for &p in order {
+                if let Some(g) = dt.request(p) {
+                    if g.range.is_empty() {
+                        return false;
+                    }
+                    for i in g.range.first..g.range.last {
+                        if seen[i] {
+                            return false; // double issue
+                        }
+                        seen[i] = true;
+                    }
+                }
+            }
+            // ... then drain deterministically
+            loop {
+                let mut any = false;
+                for p in 0..*nprocs {
+                    if let Some(g) = dt.request(p) {
+                        any = true;
+                        for i in g.range.first..g.range.last {
+                            if seen[i] {
+                                return false;
+                            }
+                            seen[i] = true;
+                        }
+                    }
+                }
+                if !any {
+                    break;
+                }
+            }
+            seen.iter().all(|&s| s) && dt.remaining() == 0
+        },
+    );
+}
+
+/// LRU invariant: used bytes never exceed capacity (given any op stream)
+/// once more than one entry exists, and hits+misses == probes.
+#[test]
+fn lru_capacity_invariant() {
+    forall_with(
+        80,
+        43,
+        |rng: &mut Rng| {
+            let cap = 10.0 + rng.uniform() * 500.0;
+            let ops: Vec<(u64, f64)> = (0..rng.below(300))
+                .map(|_| (rng.below(40), 1.0 + rng.uniform() * 80.0))
+                .collect();
+            (cap, ops)
+        },
+        |(cap, ops)| {
+            let mut c = LruCache::new(*cap);
+            let mut probes = 0;
+            for (k, b) in ops {
+                probes += 1;
+                c.contains(*k);
+                c.insert(*k, *b);
+                if c.len() > 1 && c.used_bytes() > *cap + 1e-9 {
+                    return false;
+                }
+            }
+            c.hits + c.misses == probes
+        },
+    );
+}
+
+/// Trust-region invariant: the step never exceeds the radius and always
+/// has non-negative predicted reduction, for arbitrary symmetric H.
+#[test]
+fn trust_region_step_invariants() {
+    forall_with(
+        150,
+        47,
+        |rng: &mut Rng| {
+            let n = 1 + rng.below(12) as usize;
+            let mut h = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..=i {
+                    let v = rng.normal() * 10f64.powf(rng.uniform_in(-2.0, 2.0));
+                    h[(i, j)] = v;
+                    h[(j, i)] = v;
+                }
+            }
+            let g: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let delta = 10f64.powf(rng.uniform_in(-3.0, 2.0));
+            (h, g, delta)
+        },
+        |(h, g, delta)| {
+            let sol = solve_trust_region(h, g, *delta);
+            let within = norm2(&sol.step) <= delta * (1.0 + 1e-6);
+            let descent = sol.predicted_reduction >= -1e-12;
+            let finite = sol.step.iter().all(|s| s.is_finite());
+            within && descent && finite
+        },
+    );
+}
+
+/// Catalog invariant: neighbor queries are symmetric (if a sees b within
+/// r, b sees a) and exclude self.
+#[test]
+fn catalog_neighbor_symmetry() {
+    forall_with(
+        30,
+        53,
+        |rng: &mut Rng| {
+            let n = 2 + rng.below(120) as usize;
+            let entries: Vec<CatalogEntry> = (0..n)
+                .map(|i| CatalogEntry {
+                    id: i,
+                    pos: (rng.uniform_in(0.0, 500.0), rng.uniform_in(0.0, 500.0)),
+                    p_gal: 0.5,
+                    flux_r: 100.0,
+                    colors: [0.0; 4],
+                    shape: GalaxyShape::point_like(),
+                })
+                .collect();
+            (entries, 5.0 + rng.uniform() * 60.0)
+        },
+        |(entries, radius)| {
+            let cat = Catalog::new(entries.clone(), 500.0, 500.0);
+            for i in 0..cat.len().min(40) {
+                let nb = cat.neighbors_within(cat.entries[i].pos, *radius, i);
+                if nb.contains(&i) {
+                    return false;
+                }
+                for &j in &nb {
+                    let back = cat.neighbors_within(cat.entries[j].pos, *radius, j);
+                    if !back.contains(&i) {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Simulator invariant: every task is executed exactly once and the
+/// makespan is at least the critical-path lower bound, for arbitrary
+/// topologies.
+#[test]
+fn simulator_conservation_and_bounds() {
+    forall_with(
+        25,
+        59,
+        |rng: &mut Rng| {
+            let nodes = 1 + rng.below(8) as usize;
+            let ppn = 1 + rng.below(4) as usize;
+            let tpp = 1 + rng.below(4) as usize;
+            let tasks = 1 + rng.below(400) as usize;
+            (nodes, ppn, tpp, tasks)
+        },
+        |&(nodes, ppn, tpp, tasks)| {
+            let w = synthetic_workload(tasks, 8, 2, &CostModel::Fixed(1.0), 1e6, 9);
+            let cfg = ClusterConfig {
+                nodes,
+                procs_per_node: ppn,
+                threads_per_proc: tpp,
+                gc: None,
+                ..Default::default()
+            };
+            let r = simulate(&cfg, &w);
+            let threads = (nodes * ppn * tpp) as f64;
+            let lower = w.total_cost() / threads;
+            r.task_stats.n == tasks as u64
+                && r.makespan + 1e-9 >= lower
+                && r.breakdown.get(celeste::metrics::Component::Optimize) - w.total_cost() < 1e-6
+        },
+    );
+}
+
+/// JSON round-trip: parse(to_string(v)) == v for arbitrary values built
+/// from primitives.
+#[test]
+fn json_roundtrip_property() {
+    forall_with(
+        200,
+        61,
+        |rng: &mut Rng| {
+            fn gen(rng: &mut Rng, depth: usize) -> jsonlite::Value {
+                use jsonlite::Value::*;
+                match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+                    0 => Null,
+                    1 => Bool(rng.uniform() < 0.5),
+                    2 => Num((rng.normal() * 100.0 * 8.0).round() / 8.0),
+                    3 => Str(format!("s{}-\"q\"\n", rng.below(1000))),
+                    4 => Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+                    _ => {
+                        let mut m = std::collections::BTreeMap::new();
+                        for i in 0..rng.below(5) {
+                            m.insert(format!("k{i}"), gen(rng, depth - 1));
+                        }
+                        Obj(m)
+                    }
+                }
+            }
+            gen(rng, 3)
+        },
+        |v| {
+            let s = jsonlite::to_string(v);
+            jsonlite::parse(&s).map(|w| w == *v).unwrap_or(false)
+        },
+    );
+}

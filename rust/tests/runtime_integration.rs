@@ -1,0 +1,272 @@
+//! End-to-end integration of the AOT bridge: artifacts → PJRT → ELBO →
+//! trust-region Newton inference on synthetic data.
+//!
+//! Requires `make artifacts` (tests skip with a notice otherwise).
+//! Compiling the autodiff artifact dominates wall time, so checks are
+//! grouped into a few test functions that share one `Runtime`.
+
+use celeste::imaging::{extract_patch, render_field, Patch, Survey, SurveyConfig};
+use celeste::linalg::norm2;
+use celeste::model::layout as L;
+use celeste::model::{
+    extract_estimate, galaxy_comps, render_mixture, theta_init, GalaxyShape, PixelRect, Prior,
+    SourceParams,
+};
+use celeste::optim::{lbfgs, newton_tr, LbfgsConfig, NewtonConfig, NewtonObjective};
+use celeste::prng::Rng;
+use celeste::runtime::{ElboEngine, LikeEngine, Runtime, SourceObjective};
+
+fn artifacts_ready() -> bool {
+    let dir = celeste::runtime::default_artifact_dir();
+    let ok = dir.join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: no artifacts at {dir:?}; run `make artifacts`");
+    }
+    ok
+}
+
+/// One bright source in the middle of a small two-epoch survey.
+fn scene(truth: &SourceParams, seed: u64) -> Vec<Patch> {
+    let survey = Survey::layout(SurveyConfig {
+        sky_width: 96.0,
+        sky_height: 96.0,
+        field_w: 96,
+        field_h: 96,
+        n_epochs: 2,
+        jitter: 0.0,
+        ..Default::default()
+    });
+    let mut rng = Rng::new(seed);
+    survey
+        .fields
+        .iter()
+        .map(|g| {
+            let f = render_field(std::slice::from_ref(truth), g, &mut rng);
+            extract_patch(&f, truth.pos, &[]).expect("patch")
+        })
+        .collect()
+}
+
+fn star_truth() -> SourceParams {
+    SourceParams {
+        pos: (48.3, 47.6),
+        is_galaxy: false,
+        flux_r: 4000.0,
+        colors: [0.4, 0.3, 0.15, 0.1],
+        shape: GalaxyShape::point_like(),
+    }
+}
+
+fn galaxy_truth() -> SourceParams {
+    SourceParams {
+        pos: (48.1, 48.4),
+        is_galaxy: true,
+        flux_r: 6000.0,
+        colors: [0.8, 0.5, 0.3, 0.2],
+        shape: GalaxyShape { p_dev: 0.3, axis_ratio: 0.5, angle: 0.9, scale: 2.5 },
+    }
+}
+
+/// Fast checks that only need the small artifacts (kl, render).
+#[test]
+fn manifest_kl_and_render_parity() {
+    if !artifacts_ready() {
+        return;
+    }
+    let dir = celeste::runtime::default_artifact_dir();
+    let rt = Runtime::load_subset(&dir, &[L::ART_KL, L::ART_RENDER]).expect("load subset");
+    assert!(rt.has(L::ART_KL) && rt.has(L::ART_RENDER));
+    assert!(!rt.has(L::ART_LIKE_AD));
+
+    // --- manifest signatures ---
+    let sig = rt.manifest.get(L::ART_LIKE_AD).unwrap();
+    assert_eq!(sig.inputs[0].shape, vec![L::DIM]);
+    assert_eq!(sig.outputs[2].shape, vec![L::DIM, L::DIM]);
+
+    // --- KL is ~0 at the prior-matching θ, positive away from it ---
+    let prior = Prior::default();
+    let engine = ElboEngine::new(&rt, &prior);
+    let mut t = [0.0f64; L::DIM];
+    t[L::I_A] = (prior.p_gal / (1.0 - prior.p_gal)).ln();
+    t[L::I_FLUX_STAR] = prior.flux_star.0;
+    t[L::I_FLUX_STAR + 1] = prior.flux_star.1.ln();
+    t[L::I_FLUX_GAL] = prior.flux_gal.0;
+    t[L::I_FLUX_GAL + 1] = prior.flux_gal.1.ln();
+    for i in 0..4 {
+        t[L::I_COLOR_MEAN_STAR + i] = prior.color_mean_star[i];
+        t[L::I_COLOR_MEAN_GAL + i] = prior.color_mean_gal[i];
+        t[L::I_COLOR_VAR_STAR + i] = prior.color_var_star[i].ln();
+        t[L::I_COLOR_VAR_GAL + i] = prior.color_var_gal[i].ln();
+    }
+    t[L::I_SHAPE] = L::SHAPE_PRIOR_PDEV.0;
+    t[L::I_SHAPE + 1] = L::SHAPE_PRIOR_AXIS.0;
+    t[L::I_SHAPE + 3] = L::SHAPE_PRIOR_SCALE.0;
+    let (kl0, grad, hess) = engine.kl_vgh(&t).unwrap();
+    assert!(kl0.abs() < 1e-4, "kl at prior = {kl0}");
+    assert!(grad.iter().all(|g| g.is_finite()));
+    assert!(hess.data.iter().all(|h| h.is_finite()));
+    let mut t2 = t;
+    t2[L::I_FLUX_STAR] += 1.5;
+    let (kl2, _, _) = engine.kl_vgh(&t2).unwrap();
+    assert!(kl2 > kl0 + 0.05, "kl must grow away from prior: {kl0} -> {kl2}");
+
+    // --- Rust renderer vs the Pallas kernel artifact ---
+    let psf = [
+        [0.7, 0.0, 0.0, 1.1, 0.03, 1.0],
+        [0.3, 0.1, -0.1, 2.6, -0.1, 2.4],
+    ];
+    let shape = GalaxyShape { p_dev: 0.35, axis_ratio: 0.55, angle: 0.8, scale: 2.2 };
+    let comps = galaxy_comps((16.0, 16.0), &psf, &shape);
+    let rect = PixelRect { x0: 0.0, y0: 0.0, rows: 32, cols: 32 };
+    let rust_img = render_mixture(&rect, &comps, 1.0);
+    let flat: Vec<f64> = comps.iter().flat_map(|c| c.iter().copied()).collect();
+    let pallas_img = engine.render_pallas(&flat).unwrap();
+    assert_eq!(pallas_img.len(), 32 * 32);
+    let peak = rust_img.iter().cloned().fold(0.0f64, f64::max);
+    for (i, (a, b)) in rust_img.iter().zip(&pallas_img).enumerate() {
+        assert!(
+            (a - *b as f64).abs() < 1e-4 * peak.max(1e-6),
+            "pixel {i}: rust {a} pallas {b}"
+        );
+    }
+}
+
+/// Everything that needs the likelihood artifacts, sharing one Runtime.
+#[test]
+fn elbo_bridge_and_inference() {
+    if !artifacts_ready() {
+        return;
+    }
+    let rt = celeste::runtime::load_default().expect("runtime");
+    let engine = ElboEngine::new(&rt, &Prior::default());
+
+    // ---------------------------------------------------------------
+    // 1. Gradient sanity: directional finite difference along g.
+    //    (f32 artifact at |f| ~ 1e6: only the directional signal is
+    //    above the rounding floor.)
+    // ---------------------------------------------------------------
+    let star = star_truth();
+    let patches = scene(&star, 11);
+    let t0 = theta_init(&star, 0.3);
+    let p0 = &patches[0];
+    let (_, g, _) = engine.like_vgh(&t0, p0).unwrap();
+    let gn = norm2(&g);
+    assert!(gn > 0.0 && gn.is_finite());
+    let eps = (300.0 / gn).min(0.05);
+    let dir: Vec<f64> = g.iter().map(|x| x / gn).collect();
+    let tp: Vec<f64> = t0.iter().zip(&dir).map(|(a, d)| a + eps * d).collect();
+    let tm: Vec<f64> = t0.iter().zip(&dir).map(|(a, d)| a - eps * d).collect();
+    let mut tpa = [0.0; L::DIM];
+    tpa.copy_from_slice(&tp);
+    let mut tma = [0.0; L::DIM];
+    tma.copy_from_slice(&tm);
+    let (fp, _, _) = engine.like_vgh(&tpa, p0).unwrap();
+    let (fm, _, _) = engine.like_vgh(&tma, p0).unwrap();
+    let fd = (fp - fm) / (2.0 * eps);
+    assert!(
+        (fd - gn).abs() / gn < 0.05,
+        "directional derivative {fd} vs ‖g‖ {gn}"
+    );
+
+    // ---------------------------------------------------------------
+    // 2. Pallas manual-gradient artifact agrees with autodiff artifact.
+    // ---------------------------------------------------------------
+    for p in &patches {
+        let (fa, ga, _) = engine.like_vgh(&t0, p).unwrap();
+        let (fpl, gpl) = engine.like_vg_pallas(&t0, p).unwrap();
+        assert!((fa - fpl).abs() / fa.abs().max(1.0) < 1e-4, "value {fa} vs {fpl}");
+        let gmax = ga.iter().fold(0.0f64, |m, g| m.max(g.abs()));
+        for (a, b) in ga.iter().zip(&gpl) {
+            assert!((a - b).abs() < 5e-3 * gmax.max(1.0), "grad {a} vs {b}");
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // 3. Newton recovers a star (params + classification), ≤ 50 iters.
+    // ---------------------------------------------------------------
+    let mut init = star.clone();
+    init.flux_r *= 1.6;
+    init.colors = [0.2, 0.2, 0.2, 0.2];
+    let mut t_start = theta_init(&init, 0.5);
+    t_start[L::I_LOC] = 0.8;
+    t_start[L::I_LOC + 1] = -0.6;
+
+    let fit = celeste::runtime::optimize_source(&engine, &patches, &t_start, &NewtonConfig::default());
+    assert!(fit.result.converged(), "stop: {:?}", fit.result.stop);
+    assert!(
+        fit.result.iterations <= 50,
+        "paper: Newton reaches tolerance within 50 iterations; took {}",
+        fit.result.iterations
+    );
+    let est = extract_estimate(&fit.theta);
+    assert!(est.p_gal < 0.5, "true star classified galaxy: p_gal {}", est.p_gal);
+    // fitted absolute position = patch center + offset
+    let pr = patches[0].rect;
+    let fx = pr.x0 + 16.0 + est.d_pos.0;
+    let fy = pr.y0 + 16.0 + est.d_pos.1;
+    let d = ((fx - star.pos.0).powi(2) + (fy - star.pos.1).powi(2)).sqrt();
+    assert!(d < 0.1, "position error {d} px");
+    assert!(
+        (est.flux_r - star.flux_r).abs() / star.flux_r < 0.10,
+        "flux {} vs {}",
+        est.flux_r,
+        star.flux_r
+    );
+    for (a, b) in est.colors.iter().zip(&star.colors) {
+        assert!((a - b).abs() < 0.12, "color {a} vs {b}");
+    }
+
+    // ---------------------------------------------------------------
+    // 4. Newton recovers a galaxy (classification + shape).
+    // ---------------------------------------------------------------
+    let gal = galaxy_truth();
+    let gpatches = scene(&gal, 29);
+    let mut ginit = gal.clone();
+    ginit.flux_r *= 0.7;
+    ginit.shape.scale = 1.2;
+    ginit.shape.axis_ratio = 0.8;
+    let tg0 = theta_init(&ginit, 0.5);
+    let gfit = celeste::runtime::optimize_source(&engine, &gpatches, &tg0, &NewtonConfig::default());
+    assert!(gfit.result.converged(), "stop: {:?}", gfit.result.stop);
+    let gest = extract_estimate(&gfit.theta);
+    assert!(gest.p_gal > 0.5, "true galaxy classified star: p_gal {}", gest.p_gal);
+    assert!(
+        (gest.shape.scale - gal.shape.scale).abs() / gal.shape.scale < 0.3,
+        "scale {} vs {}",
+        gest.shape.scale,
+        gal.shape.scale
+    );
+    assert!(
+        (gest.shape.axis_ratio - gal.shape.axis_ratio).abs() < 0.2,
+        "axis {} vs {}",
+        gest.shape.axis_ratio,
+        gal.shape.axis_ratio
+    );
+
+    // ---------------------------------------------------------------
+    // 5. Newton uses far fewer objective evaluations than L-BFGS.
+    // ---------------------------------------------------------------
+    let mut t_cmp = theta_init(&init, 0.5);
+    t_cmp[L::I_LOC] = 0.5;
+    let mut obj_n = SourceObjective::new(&engine, &patches);
+    let newton = newton_tr(&mut obj_n, &t_cmp, &NewtonConfig::default());
+    let mut obj_l = SourceObjective::new(&engine, &patches).with_engine(LikeEngine::PallasManual);
+    let lb = lbfgs(&mut obj_l, &t_cmp, &LbfgsConfig { max_iter: 3000, ..Default::default() });
+    assert!(newton.converged());
+    assert!(
+        lb.f_evals > newton.f_evals,
+        "lbfgs {} evals, newton {} evals",
+        lb.f_evals,
+        newton.f_evals
+    );
+
+    // ---------------------------------------------------------------
+    // 6. Absurd θ values fail cleanly, never panic.
+    // ---------------------------------------------------------------
+    let mut t_bad = [0.0f64; L::DIM];
+    t_bad[L::I_FLUX_STAR] = 200.0;
+    let mut obj_b = SourceObjective::new(&engine, &patches);
+    if let Some((f, _, _)) = obj_b.value_grad_hess(&t_bad) {
+        assert!(f.is_finite());
+    }
+}
