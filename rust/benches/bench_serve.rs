@@ -1,0 +1,85 @@
+//! Serving-path benchmarks: per-query latency of the sharded engine vs
+//! the brute-force scan, snapshot codec throughput, and closed-loop
+//! server throughput at 1 vs 4 worker threads (the acceptance check
+//! that the worker pool actually scales).
+
+use std::sync::Arc;
+
+use celeste::benchkit::{bench, black_box};
+use celeste::serve::{
+    self, run_closed_loop, LoadGen, LoadGenConfig, Query, Server, ServerConfig, SourceFilter,
+    Store,
+};
+
+fn main() {
+    println!("== serve: sharded query engine + server ==");
+    let snap = serve::snapshot::synthetic(5000, 42);
+    let (w, h) = (snap.width, snap.height);
+    let flat = snap.sources.clone();
+    let store = Arc::new(Store::build(snap.sources, w, h, 8));
+    println!("{}", store.summary());
+
+    // --- single-query latency: index vs brute force ---
+    let cone = Query::Cone { center: (w * 0.5, h * 0.5), radius: 60.0, filter: SourceFilter::Any };
+    bench("cone r=60 sharded (5k)", 0.5, || {
+        black_box(serve::execute(&store, &cone));
+    });
+    bench("cone r=60 brute-force scan", 0.5, || {
+        black_box(serve::execute_scan(&flat, &cone));
+    });
+    let boxq = Query::BoxSearch {
+        x0: w * 0.3,
+        y0: h * 0.3,
+        x1: w * 0.45,
+        y1: h * 0.45,
+        filter: SourceFilter::GalaxiesOnly,
+    };
+    bench("box 15% sharded", 0.5, || {
+        black_box(serve::execute(&store, &boxq));
+    });
+    let bright = Query::BrightestN { n: 100, filter: SourceFilter::Any };
+    bench("brightest-100 sharded", 0.5, || {
+        black_box(serve::execute(&store, &bright));
+    });
+    let xm = Query::CrossMatch { pos: (w * 0.6, h * 0.4), radius: 3.0 };
+    bench("cross-match sharded", 0.5, || {
+        black_box(serve::execute(&store, &xm));
+    });
+
+    // --- snapshot codec ---
+    let text = serve::snapshot::to_json(&flat, w, h);
+    println!("snapshot size: {} bytes for {} sources", text.len(), flat.len());
+    bench("snapshot encode 5k", 0.5, || {
+        black_box(serve::snapshot::to_json(&flat, w, h));
+    });
+    bench("snapshot decode 5k", 0.5, || {
+        black_box(serve::snapshot::from_json(&text).unwrap());
+    });
+
+    // --- closed-loop server throughput: 1 vs 4 workers ---
+    // cache off so the comparison measures execution scaling
+    let mut results = Vec::new();
+    for threads in [1usize, 4] {
+        let server = Server::start(
+            Arc::clone(&store),
+            ServerConfig { threads, cache_entries: 0, ..Default::default() },
+        );
+        let cfg = LoadGenConfig::scenario("uniform", 7).unwrap();
+        let mut gen = LoadGen::new(cfg, w, h);
+        let cl = run_closed_loop(&server, &mut gen, 8, 1.5);
+        let report = server.shutdown();
+        let all = report.latency_all();
+        println!(
+            "closed loop {threads} worker(s): {:>9.0} qps  p50={:.3}ms p99={:.3}ms",
+            cl.qps(),
+            all.p50() * 1e3,
+            all.p99() * 1e3
+        );
+        results.push(cl.qps());
+    }
+    let speedup = results[1] / results[0].max(1e-9);
+    println!(
+        "4-thread speedup over 1 thread: {speedup:.2}x {}",
+        if results[1] > results[0] { "(scales)" } else { "(NOT scaling!)" }
+    );
+}

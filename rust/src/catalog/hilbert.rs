@@ -52,15 +52,20 @@ pub fn hilbert_d2xy(order: u32, d: u64) -> (u32, u32) {
     (x, y)
 }
 
+/// Hilbert key of a sky position over a `width` x `height` extent,
+/// quantized to the ORDER-bit curve. This is the ordering key used both
+/// for catalog task ordering and for `serve::Store` shard assignment, so
+/// inference batches and serving shards share the same spatial locality.
+pub fn hilbert_sky_key(pos: (f64, f64), width: f64, height: f64) -> u64 {
+    let n = (1u32 << ORDER) as f64;
+    let x = ((pos.0 / width) * n).clamp(0.0, n - 1.0) as u32;
+    let y = ((pos.1 / height) * n).clamp(0.0, n - 1.0) as u32;
+    hilbert_xy2d(ORDER, x, y)
+}
+
 /// Sort catalog entries along the Hilbert curve over the sky extent.
 pub fn sort_hilbert(entries: &mut [CatalogEntry], width: f64, height: f64) {
-    let n = (1u32 << ORDER) as f64;
-    let key = |e: &CatalogEntry| -> u64 {
-        let x = ((e.pos.0 / width) * n).clamp(0.0, n - 1.0) as u32;
-        let y = ((e.pos.1 / height) * n).clamp(0.0, n - 1.0) as u32;
-        hilbert_xy2d(ORDER, x, y)
-    };
-    entries.sort_by_key(key);
+    entries.sort_by_key(|e| hilbert_sky_key(e.pos, width, height));
 }
 
 #[cfg(test)]

@@ -10,7 +10,7 @@
 
 mod hilbert;
 
-pub use hilbert::{hilbert_d2xy, hilbert_xy2d};
+pub use hilbert::{hilbert_d2xy, hilbert_sky_key, hilbert_xy2d};
 
 use crate::model::{GalaxyShape, SourceParams};
 use crate::prng::Rng;

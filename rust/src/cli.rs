@@ -49,19 +49,26 @@ impl Cli {
     }
 
     pub fn flag_usize(&self, key: &str, default: usize) -> usize {
-        self.flag(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+        self.flag_parse(key, default)
     }
 
     pub fn flag_f64(&self, key: &str, default: f64) -> f64 {
-        self.flag(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+        self.flag_parse(key, default)
     }
 
     pub fn flag_u64(&self, key: &str, default: u64) -> u64 {
-        self.flag(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+        self.flag_parse(key, default)
     }
 
     pub fn flag_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.flag(key).unwrap_or(default)
+    }
+
+    /// Parse a flag as any `FromStr` type (the typed helpers above are
+    /// thin wrappers over this). Unparseable values fall back to the
+    /// default, matching the pre-existing CLI behavior.
+    pub fn flag_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.flag(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 }
 
@@ -93,6 +100,15 @@ mod tests {
         assert_eq!(c.flag_f64("radius", 1.5), 1.5);
         assert!(!c.flag_bool("quick"));
         assert_eq!(c.flag_str("engine", "ad"), "ad");
+    }
+
+    #[test]
+    fn flag_parse_generic() {
+        let c = cli("serve-bench --qps 1500 --shards 8 --bad x");
+        assert_eq!(c.flag_parse("qps", 0.0f64), 1500.0);
+        assert_eq!(c.flag_parse("shards", 1u32), 8);
+        assert_eq!(c.flag_parse("bad", 7i64), 7); // unparseable -> default
+        assert_eq!(c.flag_parse("missing", 3usize), 3);
     }
 
     #[test]

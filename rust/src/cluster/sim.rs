@@ -72,15 +72,18 @@ pub struct RunReport {
 }
 
 impl RunReport {
-    /// Paper-style one-line summary.
+    /// Paper-style one-line summary (+ per-task latency quantiles).
     pub fn summary(&self) -> String {
+        let q = self.task_stats.quantiles(&[0.50, 0.99]);
         format!(
-            "nodes={} threads={} tasks={} makespan={:.1}s src/s={:.2} | {}",
+            "nodes={} threads={} tasks={} makespan={:.1}s src/s={:.2} task-p50={:.3}s task-p99={:.3}s | {}",
             self.nodes,
             self.total_threads,
             self.n_tasks,
             self.makespan,
             self.sources_per_sec,
+            q[0],
+            q[1],
             self.breakdown.table_row()
         )
     }

@@ -124,6 +124,13 @@ pub fn run_inference(
                     &[L::ART_LIKE_AD, L::ART_LIKE_PALLAS, L::ART_KL],
                 )?;
                 let engine = ElboEngine::new(&rt, prior);
+                // accumulate worker-locally; merge into the shared state
+                // once at exit (four global mutex hits per *run*, not per
+                // source — the contention fix for many-thread runs)
+                let mut local_breakdown = Breakdown::new();
+                let mut local_iters = Stats::new();
+                let mut local_evals = Stats::new();
+                let mut local_results: Vec<(usize, InferredSource)> = Vec::new();
                 loop {
                     let grant = dtree.lock().unwrap().request(worker);
                     let Some(grant) = grant else { break };
@@ -145,21 +152,14 @@ pub fn run_inference(
                                 }
                             }
                         }
-                        let prep_secs = t_all.elapsed_secs();
-                        breakdown
-                            .lock()
-                            .unwrap()
-                            .add(Component::GaFetch, prep_secs);
+                        local_breakdown.add(Component::GaFetch, t_all.elapsed_secs());
                         if patches.is_empty() {
                             continue;
                         }
                         let t_opt = Stopwatch::start();
                         let t0 = theta_init(&entry.to_source(), entry.p_gal);
                         let fit = optimize_source(&engine, &patches, &t0, &cfg.newton);
-                        breakdown
-                            .lock()
-                            .unwrap()
-                            .add(Component::Optimize, t_opt.elapsed_secs());
+                        local_breakdown.add(Component::Optimize, t_opt.elapsed_secs());
 
                         let est = extract_estimate(&fit.theta);
                         let (flux_logsd, color_sd) = uncertainties(&fit.theta);
@@ -168,20 +168,32 @@ pub fn run_inference(
                             pr.x0 + L::PATCH as f64 / 2.0 + est.d_pos.0,
                             pr.y0 + L::PATCH as f64 / 2.0 + est.d_pos.1,
                         );
-                        iters.lock().unwrap().push(fit.result.iterations as f64);
-                        evals.lock().unwrap().push(fit.total_evals as f64);
-                        results.lock().unwrap()[idx] = Some(InferredSource {
-                            id: entry.id,
-                            pos,
-                            est,
-                            flux_logsd,
-                            color_sd,
-                            elbo: -fit.result.f,
-                            iterations: fit.result.iterations,
-                            converged: fit.result.converged(),
-                            flipped: fit.flip_won,
-                            n_epochs: patches.len(),
-                        });
+                        local_iters.push(fit.result.iterations as f64);
+                        local_evals.push(fit.total_evals as f64);
+                        local_results.push((
+                            idx,
+                            InferredSource {
+                                id: entry.id,
+                                pos,
+                                est,
+                                flux_logsd,
+                                color_sd,
+                                elbo: -fit.result.f,
+                                iterations: fit.result.iterations,
+                                converged: fit.result.converged(),
+                                flipped: fit.flip_won,
+                                n_epochs: patches.len(),
+                            },
+                        ));
+                    }
+                }
+                breakdown.lock().unwrap().merge(&local_breakdown);
+                iters.lock().unwrap().merge(&local_iters);
+                evals.lock().unwrap().merge(&local_evals);
+                {
+                    let mut all = results.lock().unwrap();
+                    for (idx, src) in local_results {
+                        all[idx] = Some(src);
                     }
                 }
                 Ok(())

@@ -22,4 +22,5 @@ pub mod quickcheck;
 pub mod optim;
 pub mod photo;
 pub mod runtime;
+pub mod serve;
 pub mod sky;

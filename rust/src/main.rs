@@ -5,6 +5,7 @@
 //!   generate  --out DIR [...]          synthesize a survey to FITS-lite
 //!   infer     --data DIR [...]         run Bayesian inference (phases 1-3)
 //!   photo     --data DIR [--coadd]     run the heuristic baseline
+//!   serve-bench [...]                  benchmark the catalog serving path
 //!   experiment NAME [--quick] [...]    regenerate a paper table/figure
 //!       NAME ∈ fig1 | fig3 | fig4 | fig5 | fig6 | table1 | newton-vs-lbfgs | all
 
@@ -19,6 +20,7 @@ use celeste::jsonlite::Value;
 use celeste::model::Prior;
 use celeste::photo::{coadd, run_photo, PhotoConfig};
 use celeste::prng::Rng;
+use celeste::serve;
 use celeste::sky::{generate, SkyConfig};
 
 fn main() -> Result<()> {
@@ -28,6 +30,7 @@ fn main() -> Result<()> {
         "generate" => cmd_generate(&cli),
         "infer" => cmd_infer(&cli),
         "photo" => cmd_photo(&cli),
+        "serve-bench" => cmd_serve_bench(&cli),
         "experiment" => cmd_experiment(&cli),
         "" | "help" | "--help" => {
             print!("{}", HELP);
@@ -46,8 +49,22 @@ USAGE: celeste <command> [flags]
   generate --out DIR               synthesize a survey
            [--sources N] [--epochs E] [--seed S] [--width W] [--height H]
   infer    --data DIR              run inference over a generated survey
-           [--threads N] [--out FILE]
+           [--threads N] [--out FILE] [--snapshot FILE]
+           (--snapshot also writes a serve snapshot for serve-bench)
   photo    --data DIR [--coadd]    run the heuristic baseline pipeline
+  serve-bench                      benchmark the sharded catalog server
+           [--threads N]   server worker threads        (default 4)
+           [--shards K]    Hilbert-range shards         (default 8)
+           [--qps Q]       open-loop offered rate       (default 2000)
+           [--mix M]       uniform | hotspot | xmatch, or explicit
+                           weights 'cone=6,box=3,brightest=1,xmatch=1'
+           [--secs S]      seconds per phase            (default 3)
+           [--sources N]   synthetic catalog size       (default 5000)
+           [--snapshot F]  serve a snapshot written by `infer` instead
+           [--seed S]
+           Runs an open-loop (Poisson) phase at --qps, then closed-loop
+           throughput at 1 vs --threads workers; prints accepted/shed
+           counts and per-class p50/p99 latency.
   experiment NAME [--quick]        regenerate a paper table/figure:
            fig1 fig3 fig4 fig5 fig6 ablations table1 newton-vs-lbfgs all
 ";
@@ -206,6 +223,83 @@ fn cmd_infer(cli: &Cli) -> Result<()> {
         .collect();
     std::fs::write(out, celeste::jsonlite::to_string(&Value::Arr(rows)))?;
     println!("wrote {out}");
+    if let Some(snap_path) = cli.flag("snapshot") {
+        let served: Vec<serve::ServedSource> =
+            inferred.iter().map(serve::ServedSource::from_inferred).collect();
+        serve::snapshot::save_sources(std::path::Path::new(snap_path), &served, width, height)?;
+        println!("wrote serve snapshot {snap_path} ({} sources)", served.len());
+    }
+    Ok(())
+}
+
+fn loadgen_config(mix: &str, seed: u64) -> Result<serve::LoadGenConfig> {
+    if let Some(cfg) = serve::LoadGenConfig::scenario(mix, seed) {
+        return Ok(cfg);
+    }
+    match serve::QueryMix::parse(mix) {
+        Some(m) => Ok(serve::LoadGenConfig { mix: m, seed, ..Default::default() }),
+        None => bail!("bad --mix {mix:?}: want uniform|hotspot|xmatch or 'cone=6,box=3,...'"),
+    }
+}
+
+fn cmd_serve_bench(cli: &Cli) -> Result<()> {
+    let threads = cli.flag_usize("threads", 4).max(1);
+    let shards = cli.flag_usize("shards", 8);
+    let qps = cli.flag_parse("qps", 2000.0f64);
+    let secs = cli.flag_parse("secs", 3.0f64).max(0.1);
+    let mix = cli.flag_str("mix", "uniform");
+    let seed = cli.flag_u64("seed", 42);
+    let n_sources = cli.flag_usize("sources", 5000);
+
+    let snap = match cli.flag("snapshot") {
+        Some(path) => serve::snapshot::load(std::path::Path::new(path))?,
+        None => serve::snapshot::synthetic(n_sources, seed),
+    };
+    let (width, height) = (snap.width, snap.height);
+    let store = std::sync::Arc::new(snap.into_store(shards));
+    println!("{}", store.summary());
+    let gen_cfg = loadgen_config(mix, seed)?;
+
+    // --- phase 1: open loop (latency + admission control at --qps) ---
+    let server = serve::Server::start(
+        store.clone(),
+        serve::ServerConfig { threads, ..Default::default() },
+    );
+    let mut gen = serve::LoadGen::new(gen_cfg.clone(), width, height);
+    let ol = serve::run_open_loop(&server, &mut gen, qps, secs);
+    let report = server.shutdown();
+    println!(
+        "open loop ({mix}): offered {:.0} qps for {:.1}s",
+        ol.offered_qps(),
+        ol.wall_secs
+    );
+    println!("{}", report.summary());
+
+    // --- phase 2: closed-loop peak throughput, 1 vs --threads workers ---
+    let clients = threads * 2;
+    let mut worker_counts = vec![1];
+    if threads > 1 {
+        worker_counts.push(threads);
+    }
+    for &t in &worker_counts {
+        let server = serve::Server::start(
+            store.clone(),
+            // cache off: measure raw execution scaling, not memoization
+            serve::ServerConfig { threads: t, cache_entries: 0, ..Default::default() },
+        );
+        let mut gen = serve::LoadGen::new(gen_cfg.clone(), width, height);
+        let cl = serve::run_closed_loop(&server, &mut gen, clients, secs);
+        let report = server.shutdown();
+        let all = report.latency_all();
+        println!(
+            "closed loop {t} worker(s), {clients} clients: {:.0} qps (completed {}, shed {}, p50={:.3}ms p99={:.3}ms)",
+            cl.qps(),
+            cl.completed,
+            cl.shed,
+            all.p50() * 1e3,
+            all.p99() * 1e3
+        );
+    }
     Ok(())
 }
 

@@ -107,6 +107,21 @@ impl fmt::Display for Breakdown {
     }
 }
 
+/// Evenly-strided subsample of `take` elements (reservoirs are
+/// unordered, so a stride is an unbiased subsample; `take >= len`
+/// returns everything).
+fn subsample(src: &[f64], take: usize) -> Vec<f64> {
+    if take == 0 || src.is_empty() {
+        return Vec::new();
+    }
+    if take >= src.len() {
+        return src.to_vec();
+    }
+    (0..take)
+        .map(|i| src[i * (src.len() - 1) / (take - 1).max(1)])
+        .collect()
+}
+
 /// Wall-clock stopwatch for the real (non-simulated) execution paths.
 pub struct Stopwatch {
     start: std::time::Instant,
@@ -122,19 +137,48 @@ impl Stopwatch {
     }
 }
 
-/// Simple streaming statistics (for task-time distributions etc.).
-#[derive(Clone, Debug, Default)]
+/// Max retained samples per `Stats`; beyond this, quantiles become
+/// reservoir/stride approximations with bounded (512 KiB) memory.
+const SAMPLE_CAP: usize = 1 << 16;
+
+/// Streaming statistics (for task-time distributions etc.) with
+/// quantiles: moments are streamed; up to [`SAMPLE_CAP`] samples are
+/// retained (exact quantiles below the cap, uniform reservoir above
+/// it) and sorted at query time — use [`Stats::quantiles`] to sort
+/// once for several quantiles. Used for the serve layer's latency
+/// reporting and the cluster simulator's per-task latency
+/// distribution.
+#[derive(Clone, Debug)]
 pub struct Stats {
     pub n: u64,
     pub sum: f64,
     pub sum2: f64,
     pub min: f64,
     pub max: f64,
+    samples: Vec<f64>,
+    /// xorshift state for reservoir replacement past the cap
+    rng_state: u64,
+}
+
+// Default must agree with `new()` (INF/NEG_INF sentinels), otherwise a
+// defaulted Stats merged into a real one corrupts min/max.
+impl Default for Stats {
+    fn default() -> Stats {
+        Stats::new()
+    }
 }
 
 impl Stats {
     pub fn new() -> Stats {
-        Stats { n: 0, sum: 0.0, sum2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+        Stats {
+            n: 0,
+            sum: 0.0,
+            sum2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            samples: Vec::new(),
+            rng_state: 0x9E3779B97F4A7C15,
+        }
     }
 
     pub fn push(&mut self, x: f64) {
@@ -143,6 +187,18 @@ impl Stats {
         self.sum2 += x * x;
         self.min = self.min.min(x);
         self.max = self.max.max(x);
+        if self.samples.len() < SAMPLE_CAP {
+            self.samples.push(x);
+        } else {
+            // algorithm R: keep a uniform sample of the full stream
+            self.rng_state ^= self.rng_state << 13;
+            self.rng_state ^= self.rng_state >> 7;
+            self.rng_state ^= self.rng_state << 17;
+            let j = (self.rng_state % self.n) as usize;
+            if j < SAMPLE_CAP {
+                self.samples[j] = x;
+            }
+        }
     }
 
     pub fn mean(&self) -> f64 {
@@ -165,11 +221,64 @@ impl Stats {
     }
 
     pub fn merge(&mut self, o: &Stats) {
+        let (n_self, n_o) = (self.n, o.n);
         self.n += o.n;
         self.sum += o.sum;
         self.sum2 += o.sum2;
         self.min = self.min.min(o.min);
         self.max = self.max.max(o.max);
+        if self.samples.len() + o.samples.len() <= SAMPLE_CAP {
+            self.samples.extend_from_slice(&o.samples);
+        } else {
+            // weight each side by its *stream* length, not its reservoir
+            // length, so a capped 10^6-sample stream is not outvoted by
+            // an exact 10^3-sample one
+            let n_total = (n_self + n_o).max(1);
+            let take_self =
+                ((SAMPLE_CAP as u128 * n_self as u128 / n_total as u128) as usize).min(SAMPLE_CAP);
+            let take_o = SAMPLE_CAP - take_self;
+            let mut merged = subsample(&self.samples, take_self);
+            merged.extend(subsample(&o.samples, take_o));
+            self.samples = merged;
+        }
+    }
+
+    /// Several exact sample quantiles at once (one sort). Quantiles use
+    /// linear interpolation between order statistics; `q` in [0, 1].
+    /// Returns 0.0 per entry for an empty distribution.
+    pub fn quantiles(&self, qs: &[f64]) -> Vec<f64> {
+        if self.samples.is_empty() {
+            return vec![0.0; qs.len()];
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        qs.iter()
+            .map(|&q| {
+                let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
+                let lo = pos.floor() as usize;
+                let hi = pos.ceil() as usize;
+                let frac = pos - lo as f64;
+                s[lo] * (1.0 - frac) + s[hi] * frac
+            })
+            .collect()
+    }
+
+    /// Single exact sample quantile (sorts a copy; for several
+    /// quantiles prefer [`Stats::quantiles`]).
+    pub fn quantile(&self, q: f64) -> f64 {
+        self.quantiles(&[q])[0]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
     }
 }
 
@@ -219,5 +328,71 @@ mod tests {
     fn empty_breakdown_fraction_zero() {
         let b = Breakdown::new();
         assert_eq!(b.fraction(Component::Gc), 0.0);
+    }
+
+    #[test]
+    fn quantiles_exact_on_known_distribution() {
+        let mut s = Stats::new();
+        for x in 1..=100 {
+            s.push(x as f64);
+        }
+        assert!((s.p50() - 50.5).abs() < 1e-9, "p50 {}", s.p50());
+        assert!((s.quantile(0.0) - 1.0).abs() < 1e-12);
+        assert!((s.quantile(1.0) - 100.0).abs() < 1e-12);
+        assert!(s.p99() > 98.0 && s.p99() <= 100.0, "p99 {}", s.p99());
+        assert!(s.p95() > 94.0 && s.p95() < 97.0, "p95 {}", s.p95());
+        // order-independent: quantiles of a shuffled stream are equal
+        let mut r = crate::prng::Rng::new(8);
+        let mut xs: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        r.shuffle(&mut xs);
+        let mut s2 = Stats::new();
+        for x in xs {
+            s2.push(x);
+        }
+        assert_eq!(s.p50(), s2.p50());
+        assert_eq!(s.p99(), s2.p99());
+    }
+
+    #[test]
+    fn sample_memory_is_bounded_and_quantiles_stay_close() {
+        let mut s = Stats::new();
+        let n = 200_000u64;
+        for x in 1..=n {
+            s.push(x as f64);
+        }
+        assert_eq!(s.n, n);
+        assert!(s.samples.len() <= super::SAMPLE_CAP, "reservoir overflow");
+        // moments are exact regardless of the reservoir
+        assert!((s.mean() - (n as f64 + 1.0) / 2.0).abs() < 1e-6);
+        assert_eq!(s.max, n as f64);
+        // reservoir quantile of a uniform ramp: within a few percent
+        let p50 = s.p50();
+        assert!(
+            (p50 - n as f64 / 2.0).abs() < 0.05 * n as f64,
+            "p50 {p50} too far from {}",
+            n / 2
+        );
+        // merging two capped stats stays bounded too
+        let mut t = s.clone();
+        t.merge(&s);
+        assert!(t.samples.len() <= super::SAMPLE_CAP);
+        assert_eq!(t.n, 2 * n);
+    }
+
+    #[test]
+    fn quantiles_merge_and_empty() {
+        let empty = Stats::new();
+        assert_eq!(empty.p50(), 0.0);
+        let mut a = Stats::new();
+        let mut b = Stats::new();
+        for x in 1..=50 {
+            a.push(x as f64);
+        }
+        for x in 51..=100 {
+            b.push(x as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.n, 100);
+        assert!((a.p50() - 50.5).abs() < 1e-9);
     }
 }

@@ -1,0 +1,454 @@
+//! Load generation for the serving path.
+//!
+//! Two driver shapes, because they measure different things:
+//!
+//! * **Open loop** — Poisson arrivals at a fixed offered rate,
+//!   independent of service progress (`prng::Rng` exponential
+//!   inter-arrivals). The right shape for latency-under-load and for
+//!   exercising admission control: a slow server does not slow the
+//!   clients down, it sheds.
+//! * **Closed loop** — `k` clients that each wait for their previous
+//!   response. The right shape for peak-throughput comparisons
+//!   (e.g. 1 vs 4 worker threads).
+//!
+//! Spatial skew: a configurable fraction of spatial queries target
+//! Zipf-weighted hotspot centers (quantized so hot queries repeat and
+//! the server's result cache is exercised); the rest are uniform over
+//! the sky. Mix presets cover the scenario axes: uniform scan, hotspot,
+//! and cross-match-heavy.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::prng::Rng;
+
+use super::query::{Query, SourceFilter};
+use super::server::Server;
+
+/// Relative weights of the four query classes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QueryMix {
+    pub cone: f64,
+    pub box_search: f64,
+    pub brightest: f64,
+    pub cross_match: f64,
+}
+
+impl QueryMix {
+    /// Mostly small spatial reads, a sprinkle of heavy scans — the
+    /// "millions of users browsing the sky" default.
+    pub fn uniform() -> QueryMix {
+        QueryMix { cone: 6.0, box_search: 3.0, brightest: 0.5, cross_match: 0.5 }
+    }
+
+    /// Same shape as `uniform`; pair with a high hotspot fraction.
+    pub fn hotspot() -> QueryMix {
+        QueryMix { cone: 7.0, box_search: 2.0, brightest: 0.5, cross_match: 0.5 }
+    }
+
+    /// Cross-match dominated (catalog-validation traffic, §VII).
+    pub fn cross_match_heavy() -> QueryMix {
+        QueryMix { cone: 1.0, box_search: 0.5, brightest: 0.25, cross_match: 8.0 }
+    }
+
+    /// Parse either a preset name (`uniform` | `hotspot` | `xmatch`) or
+    /// explicit weights `cone=6,box=3,brightest=1,xmatch=1`.
+    pub fn parse(s: &str) -> Option<QueryMix> {
+        match s {
+            "uniform" => return Some(QueryMix::uniform()),
+            "hotspot" => return Some(QueryMix::hotspot()),
+            "xmatch" => return Some(QueryMix::cross_match_heavy()),
+            _ => {}
+        }
+        let mut mix = QueryMix { cone: 0.0, box_search: 0.0, brightest: 0.0, cross_match: 0.0 };
+        for part in s.split(',') {
+            let (k, v) = part.split_once('=')?;
+            let w: f64 = v.trim().parse().ok()?;
+            match k.trim() {
+                "cone" => mix.cone = w,
+                "box" => mix.box_search = w,
+                "brightest" => mix.brightest = w,
+                "xmatch" => mix.cross_match = w,
+                _ => return None,
+            }
+        }
+        let total = mix.cone + mix.box_search + mix.brightest + mix.cross_match;
+        if total > 0.0 {
+            Some(mix)
+        } else {
+            None
+        }
+    }
+}
+
+/// Scenario knobs for one generator stream.
+#[derive(Clone, Debug)]
+pub struct LoadGenConfig {
+    pub mix: QueryMix,
+    /// fraction of spatial queries aimed at a hotspot (vs uniform sky)
+    pub hotspot_fraction: f64,
+    pub n_hotspots: usize,
+    /// Zipf exponent over hotspot ranks (s=0 => uniform over hotspots)
+    pub zipf_s: f64,
+    /// cone radius range, px
+    pub radius: (f64, f64),
+    /// box edge length range, px
+    pub box_edge: (f64, f64),
+    /// brightest-N upper bound
+    pub brightest_max: usize,
+    pub seed: u64,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        LoadGenConfig {
+            mix: QueryMix::uniform(),
+            hotspot_fraction: 0.3,
+            n_hotspots: 16,
+            zipf_s: 1.1,
+            radius: (4.0, 60.0),
+            box_edge: (8.0, 120.0),
+            brightest_max: 100,
+            seed: 42,
+        }
+    }
+}
+
+impl LoadGenConfig {
+    /// Preset for a named scenario (`uniform` | `hotspot` | `xmatch`).
+    pub fn scenario(name: &str, seed: u64) -> Option<LoadGenConfig> {
+        let base = LoadGenConfig { seed, ..Default::default() };
+        match name {
+            "uniform" => Some(LoadGenConfig {
+                mix: QueryMix::uniform(),
+                hotspot_fraction: 0.0,
+                ..base
+            }),
+            "hotspot" => Some(LoadGenConfig {
+                mix: QueryMix::hotspot(),
+                hotspot_fraction: 0.9,
+                ..base
+            }),
+            "xmatch" => Some(LoadGenConfig {
+                mix: QueryMix::cross_match_heavy(),
+                hotspot_fraction: 0.2,
+                ..base
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// One deterministic query stream over a given sky extent.
+pub struct LoadGen {
+    cfg: LoadGenConfig,
+    rng: Rng,
+    width: f64,
+    height: f64,
+    hotspots: Vec<(f64, f64)>,
+    /// cumulative Zipf weights over hotspot ranks, normalized to 1
+    zipf_cdf: Vec<f64>,
+    /// cumulative class weights: cone, box, brightest, xmatch
+    mix_cdf: [f64; 4],
+}
+
+impl LoadGen {
+    pub fn new(cfg: LoadGenConfig, width: f64, height: f64) -> LoadGen {
+        // hotspot placement is seed-stable but independent of the
+        // per-query stream, so differently-seeded generators share the
+        // same hot sky regions (as real traffic would)
+        let mut hot_rng = Rng::new(0x5eed ^ cfg.n_hotspots as u64);
+        let hotspots: Vec<(f64, f64)> = (0..cfg.n_hotspots.max(1))
+            .map(|_| (hot_rng.uniform_in(0.0, width), hot_rng.uniform_in(0.0, height)))
+            .collect();
+        let mut zipf_cdf = Vec::with_capacity(hotspots.len());
+        let mut acc = 0.0;
+        for rank in 1..=hotspots.len() {
+            acc += 1.0 / (rank as f64).powf(cfg.zipf_s);
+            zipf_cdf.push(acc);
+        }
+        for v in &mut zipf_cdf {
+            *v /= acc;
+        }
+        let m = cfg.mix;
+        let total = (m.cone + m.box_search + m.brightest + m.cross_match).max(1e-12);
+        let mix_cdf = [
+            m.cone / total,
+            (m.cone + m.box_search) / total,
+            (m.cone + m.box_search + m.brightest) / total,
+            1.0,
+        ];
+        let rng = Rng::new(cfg.seed);
+        LoadGen { cfg, rng, width, height, hotspots, zipf_cdf, mix_cdf }
+    }
+
+    /// A derived stream for another client thread.
+    pub fn fork(&mut self, stream: u64) -> LoadGen {
+        let mut cfg = self.cfg.clone();
+        cfg.seed = self.rng.split(stream).next_u64();
+        LoadGen::new(cfg, self.width, self.height)
+    }
+
+    fn zipf_hotspot(&mut self) -> (f64, f64) {
+        let u = self.rng.uniform();
+        let i = self
+            .zipf_cdf
+            .iter()
+            .position(|&c| u <= c)
+            .unwrap_or(self.zipf_cdf.len() - 1);
+        self.hotspots[i]
+    }
+
+    /// A query center plus whether it targeted a hotspot. Hot centers
+    /// are quantized to a 2 px lattice so hot queries repeat exactly and
+    /// can cache-hit; cold centers are continuous.
+    fn sample_center(&mut self) -> ((f64, f64), bool) {
+        if self.rng.uniform() < self.cfg.hotspot_fraction {
+            let (hx, hy) = self.zipf_hotspot();
+            let x = hx + self.rng.normal() * 8.0;
+            let y = hy + self.rng.normal() * 8.0;
+            (((x * 0.5).round() * 2.0, (y * 0.5).round() * 2.0), true)
+        } else {
+            (
+                (
+                    self.rng.uniform_in(0.0, self.width),
+                    self.rng.uniform_in(0.0, self.height),
+                ),
+                false,
+            )
+        }
+    }
+
+    fn sample_filter(&mut self) -> SourceFilter {
+        match self.rng.below(4) {
+            0 => SourceFilter::StarsOnly,
+            1 => SourceFilter::GalaxiesOnly,
+            _ => SourceFilter::Any,
+        }
+    }
+
+    /// Draw the next query from the configured mix.
+    pub fn next_query(&mut self) -> Query {
+        let u = self.rng.uniform();
+        if u < self.mix_cdf[0] {
+            let (center, hot) = self.sample_center();
+            let radius = if hot {
+                // quantized radius => repeatable hot cone queries
+                (self.rng.uniform_in(self.cfg.radius.0, self.cfg.radius.1) / 8.0).round() * 8.0
+            } else {
+                self.rng.uniform_in(self.cfg.radius.0, self.cfg.radius.1)
+            };
+            Query::Cone { center, radius: radius.max(1.0), filter: self.sample_filter() }
+        } else if u < self.mix_cdf[1] {
+            let ((cx, cy), hot) = self.sample_center();
+            let (he, hf) = if hot {
+                let e = 0.5
+                    * ((self.rng.uniform_in(self.cfg.box_edge.0, self.cfg.box_edge.1) / 8.0)
+                        .round()
+                        * 8.0)
+                        .max(self.cfg.box_edge.0);
+                (e, e)
+            } else {
+                (
+                    0.5 * self.rng.uniform_in(self.cfg.box_edge.0, self.cfg.box_edge.1),
+                    0.5 * self.rng.uniform_in(self.cfg.box_edge.0, self.cfg.box_edge.1),
+                )
+            };
+            Query::BoxSearch {
+                x0: cx - he,
+                y0: cy - hf,
+                x1: cx + he,
+                y1: cy + hf,
+                filter: self.sample_filter(),
+            }
+        } else if u < self.mix_cdf[2] {
+            Query::BrightestN {
+                n: 1 + self.rng.below(self.cfg.brightest_max.max(1) as u64) as usize,
+                filter: self.sample_filter(),
+            }
+        } else {
+            Query::CrossMatch {
+                pos: (
+                    self.rng.uniform_in(0.0, self.width),
+                    self.rng.uniform_in(0.0, self.height),
+                ),
+                radius: self.rng.uniform_in(0.5, 4.0),
+            }
+        }
+    }
+}
+
+/// Open-loop run outcome (latency lives in the server's report).
+#[derive(Clone, Debug, Default)]
+pub struct OpenLoopReport {
+    pub offered: u64,
+    pub accepted: u64,
+    pub shed: u64,
+    pub wall_secs: f64,
+}
+
+impl OpenLoopReport {
+    pub fn offered_qps(&self) -> f64 {
+        self.offered as f64 / self.wall_secs.max(1e-9)
+    }
+}
+
+/// Drive the server open-loop: Poisson arrivals at `qps` for `secs`.
+pub fn run_open_loop(server: &Server, gen: &mut LoadGen, qps: f64, secs: f64) -> OpenLoopReport {
+    let qps = qps.max(1e-3);
+    let start = Instant::now();
+    let mut next_at = 0.0f64; // seconds since start, absolute schedule
+    let mut report = OpenLoopReport::default();
+    loop {
+        let now = start.elapsed().as_secs_f64();
+        if now >= secs {
+            break;
+        }
+        if now < next_at {
+            std::thread::sleep(Duration::from_secs_f64((next_at - now).min(0.005)));
+            continue;
+        }
+        report.offered += 1;
+        if server.try_submit(gen.next_query()) {
+            report.accepted += 1;
+        } else {
+            report.shed += 1;
+        }
+        // exponential inter-arrival on the absolute clock: late arrivals
+        // burst to catch up, as a true open-loop source does
+        let u = gen.rng.uniform().max(1e-12);
+        next_at += -u.ln() / qps;
+    }
+    report.wall_secs = start.elapsed().as_secs_f64();
+    report
+}
+
+/// Closed-loop run outcome.
+#[derive(Clone, Debug, Default)]
+pub struct ClosedLoopReport {
+    pub completed: u64,
+    pub shed: u64,
+    pub wall_secs: f64,
+}
+
+impl ClosedLoopReport {
+    pub fn qps(&self) -> f64 {
+        self.completed as f64 / self.wall_secs.max(1e-9)
+    }
+}
+
+/// Drive the server with `clients` synchronous loops for `secs`.
+pub fn run_closed_loop(
+    server: &Server,
+    gen: &mut LoadGen,
+    clients: usize,
+    secs: f64,
+) -> ClosedLoopReport {
+    let completed = AtomicU64::new(0);
+    let shed = AtomicU64::new(0);
+    let start = Instant::now();
+    let deadline = Duration::from_secs_f64(secs);
+    std::thread::scope(|scope| {
+        for c in 0..clients.max(1) {
+            let mut cgen = gen.fork(c as u64 + 1);
+            let (completed, shed) = (&completed, &shed);
+            scope.spawn(move || {
+                while start.elapsed() < deadline {
+                    let q = cgen.next_query();
+                    if server.call(q).is_some() {
+                        completed.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        shed.fetch_add(1, Ordering::Relaxed);
+                        // shed under closed loop: back off briefly
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                }
+            });
+        }
+    });
+    ClosedLoopReport {
+        completed: completed.load(Ordering::Relaxed),
+        shed: shed.load(Ordering::Relaxed),
+        wall_secs: start.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_parse_presets_and_weights() {
+        assert_eq!(QueryMix::parse("uniform"), Some(QueryMix::uniform()));
+        assert_eq!(QueryMix::parse("hotspot"), Some(QueryMix::hotspot()));
+        assert_eq!(QueryMix::parse("xmatch"), Some(QueryMix::cross_match_heavy()));
+        let m = QueryMix::parse("cone=4,box=2,brightest=1,xmatch=3").unwrap();
+        assert_eq!(m.cone, 4.0);
+        assert_eq!(m.box_search, 2.0);
+        assert_eq!(m.brightest, 1.0);
+        assert_eq!(m.cross_match, 3.0);
+        assert!(QueryMix::parse("nope").is_none());
+        assert!(QueryMix::parse("cone=0,box=0").is_none());
+    }
+
+    #[test]
+    fn generator_is_deterministic_and_mix_respected() {
+        let cfg = LoadGenConfig { seed: 7, ..Default::default() };
+        let mut a = LoadGen::new(cfg.clone(), 1000.0, 800.0);
+        let mut b = LoadGen::new(cfg, 1000.0, 800.0);
+        let mut counts = [0usize; 4];
+        for _ in 0..2000 {
+            let qa = a.next_query();
+            let qb = b.next_query();
+            assert_eq!(qa, qb);
+            counts[qa.class().index()] += 1;
+        }
+        // uniform mix: cone 60%, box 30%, brightest 5%, xmatch 5%
+        assert!(counts[0] > counts[1], "cone {} box {}", counts[0], counts[1]);
+        assert!(counts[1] > counts[2] && counts[1] > counts[3], "{counts:?}");
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+    }
+
+    #[test]
+    fn zipf_hotspots_are_skewed() {
+        let cfg = LoadGenConfig {
+            hotspot_fraction: 1.0,
+            n_hotspots: 8,
+            zipf_s: 1.2,
+            seed: 3,
+            ..Default::default()
+        };
+        let mut g = LoadGen::new(cfg, 1000.0, 1000.0);
+        let hotspots = g.hotspots.clone();
+        let mut counts = vec![0usize; hotspots.len()];
+        for _ in 0..4000 {
+            let ((x, y), _) = g.sample_center();
+            // nearest hotspot wins (scatter is small vs spacing, mostly)
+            let mut best = 0;
+            let mut bd = f64::INFINITY;
+            for (i, h) in hotspots.iter().enumerate() {
+                let d = (h.0 - x).powi(2) + (h.1 - y).powi(2);
+                if d < bd {
+                    bd = d;
+                    best = i;
+                }
+            }
+            counts[best] += 1;
+        }
+        // heavy skew: the hottest spot dwarfs the coldest (nearest-spot
+        // attribution blurs exact ranks, so compare extremes)
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(max > 3 * min.max(1), "zipf skew missing: {counts:?}");
+    }
+
+    #[test]
+    fn forked_streams_differ() {
+        let mut g = LoadGen::new(LoadGenConfig::default(), 500.0, 500.0);
+        let mut f1 = g.fork(1);
+        let mut f2 = g.fork(2);
+        let a: Vec<Query> = (0..10).map(|_| f1.next_query()).collect();
+        let b: Vec<Query> = (0..10).map(|_| f2.next_query()).collect();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,39 @@
+//! Catalog serving: the system the inference pipeline feeds.
+//!
+//! The paper stops where the catalog's life begins: posterior point
+//! estimates and uncertainties for every light source. This subsystem
+//! turns that output into a sharded, queryable, benchmarked store —
+//! the ROADMAP's "serve heavy traffic from millions of users" path:
+//!
+//! * [`store`] — immutable shard-per-Hilbert-range store with per-shard
+//!   grid indexes (same spatial key as the inference task ordering).
+//! * [`query`] — typed queries (cone, box, brightest-N, star/galaxy
+//!   filters, uncertainty-aware cross-match), answered per-shard and
+//!   merged; a brute-force reference executor pins the semantics.
+//! * [`server`] — multi-threaded executor over `Arc<Store>`: bounded
+//!   queue, worker pool, per-class LRU result cache, admission control,
+//!   per-class latency quantiles.
+//! * [`loadgen`] — open-loop (Poisson) and closed-loop load generators
+//!   with configurable query mix and Zipf-skewed sky hotspots.
+//! * [`snapshot`] — jsonlite snapshot format bridging `infer` output to
+//!   serving across process boundaries.
+//!
+//! Entry points: `celeste serve-bench` (CLI) and `benches/bench_serve`.
+
+pub mod loadgen;
+pub mod query;
+pub mod server;
+pub mod snapshot;
+pub mod store;
+
+pub use loadgen::{
+    run_closed_loop, run_open_loop, ClosedLoopReport, LoadGen, LoadGenConfig, OpenLoopReport,
+    QueryMix,
+};
+pub use query::{
+    cross_match_catalog, execute, execute_scan, MatchResult, Query, QueryClass, QueryResult,
+    SourceFilter, N_QUERY_CLASSES,
+};
+pub use server::{Server, ServerConfig, ServerReport};
+pub use snapshot::Snapshot;
+pub use store::{ServedSource, Shard, Store};

@@ -1,0 +1,468 @@
+//! Typed catalog queries, answered per-shard and merged.
+//!
+//! Every query has two executors: [`execute`] (sharded, index-backed)
+//! and [`execute_scan`] (brute-force over a flat slice). The engine's
+//! contract, enforced by tests, is that the two are *byte-identical* on
+//! the same data: results are returned in a canonical order (id order
+//! for sets, flux-descending for brightest-N) so merging is
+//! deterministic.
+
+use super::store::{ServedSource, Store};
+
+/// Star/galaxy predicate applied to set-returning queries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SourceFilter {
+    Any,
+    StarsOnly,
+    GalaxiesOnly,
+}
+
+impl SourceFilter {
+    pub fn accepts(&self, s: &ServedSource) -> bool {
+        match self {
+            SourceFilter::Any => true,
+            SourceFilter::StarsOnly => !s.is_galaxy(),
+            SourceFilter::GalaxiesOnly => s.is_galaxy(),
+        }
+    }
+
+    fn tag(&self) -> u64 {
+        match self {
+            SourceFilter::Any => 0,
+            SourceFilter::StarsOnly => 1,
+            SourceFilter::GalaxiesOnly => 2,
+        }
+    }
+}
+
+/// The query language.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Query {
+    /// All sources within `radius` of `center`.
+    Cone {
+        center: (f64, f64),
+        radius: f64,
+        filter: SourceFilter,
+    },
+    /// All sources inside the closed box `[x0, x1] x [y0, y1]`.
+    BoxSearch {
+        x0: f64,
+        y0: f64,
+        x1: f64,
+        y1: f64,
+        filter: SourceFilter,
+    },
+    /// The `n` brightest sources (reference band), whole catalog.
+    BrightestN { n: usize, filter: SourceFilter },
+    /// Best uncertainty-aware match for an external (truth) position:
+    /// a source at distance `d` matches if `d <= radius * (1 + min(1,
+    /// flux_logsd))` — poorly constrained sources get a wider
+    /// acceptance radius, mirroring how Celeste's posterior SDs are
+    /// meant to be consumed downstream.
+    CrossMatch { pos: (f64, f64), radius: f64 },
+}
+
+/// Query classes — the unit of result caching and latency accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueryClass {
+    Cone,
+    Box,
+    Brightest,
+    CrossMatch,
+}
+
+pub const N_QUERY_CLASSES: usize = 4;
+
+pub const QUERY_CLASSES: [QueryClass; N_QUERY_CLASSES] = [
+    QueryClass::Cone,
+    QueryClass::Box,
+    QueryClass::Brightest,
+    QueryClass::CrossMatch,
+];
+
+impl QueryClass {
+    pub fn index(self) -> usize {
+        match self {
+            QueryClass::Cone => 0,
+            QueryClass::Box => 1,
+            QueryClass::Brightest => 2,
+            QueryClass::CrossMatch => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QueryClass::Cone => "cone",
+            QueryClass::Box => "box",
+            QueryClass::Brightest => "brightest",
+            QueryClass::CrossMatch => "xmatch",
+        }
+    }
+}
+
+impl Query {
+    pub fn class(&self) -> QueryClass {
+        match self {
+            Query::Cone { .. } => QueryClass::Cone,
+            Query::BoxSearch { .. } => QueryClass::Box,
+            Query::BrightestN { .. } => QueryClass::Brightest,
+            Query::CrossMatch { .. } => QueryClass::CrossMatch,
+        }
+    }
+
+    /// FNV-1a hash over the exact parameter bits — equal queries (bitwise
+    /// equal parameters) get equal cache keys.
+    pub fn cache_key(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut mix = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        match self {
+            Query::Cone { center, radius, filter } => {
+                mix(1);
+                mix(center.0.to_bits());
+                mix(center.1.to_bits());
+                mix(radius.to_bits());
+                mix(filter.tag());
+            }
+            Query::BoxSearch { x0, y0, x1, y1, filter } => {
+                mix(2);
+                mix(x0.to_bits());
+                mix(y0.to_bits());
+                mix(x1.to_bits());
+                mix(y1.to_bits());
+                mix(filter.tag());
+            }
+            Query::BrightestN { n, filter } => {
+                mix(3);
+                mix(*n as u64);
+                mix(filter.tag());
+            }
+            Query::CrossMatch { pos, radius } => {
+                mix(4);
+                mix(pos.0.to_bits());
+                mix(pos.1.to_bits());
+                mix(radius.to_bits());
+            }
+        }
+        h
+    }
+}
+
+/// A cross-match hit: the matched source and its distance.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatchResult {
+    pub source: ServedSource,
+    pub dist: f64,
+}
+
+/// Result of any query, in canonical order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum QueryResult {
+    /// id-ascending for cone/box, flux-descending (tie: id) for brightest
+    Sources(Vec<ServedSource>),
+    Match(Option<MatchResult>),
+}
+
+impl QueryResult {
+    pub fn count(&self) -> usize {
+        match self {
+            QueryResult::Sources(v) => v.len(),
+            QueryResult::Match(m) => m.is_some() as usize,
+        }
+    }
+}
+
+/// Brightest-N canonical order: flux descending, ties by id ascending.
+fn brightness_order(a: &ServedSource, b: &ServedSource) -> std::cmp::Ordering {
+    b.flux_r
+        .partial_cmp(&a.flux_r)
+        .unwrap_or(std::cmp::Ordering::Equal)
+        .then(a.id.cmp(&b.id))
+}
+
+/// The widest acceptance radius any source can have under
+/// uncertainty-aware matching (used to bound the index probe).
+fn max_match_radius(radius: f64) -> f64 {
+    radius * 2.0
+}
+
+fn match_radius(radius: f64, s: &ServedSource) -> f64 {
+    radius * (1.0 + s.flux_logsd.min(1.0))
+}
+
+/// Pick the better of two cross-match candidates: smaller distance,
+/// ties by lower id.
+fn better_match(a: Option<MatchResult>, b: Option<MatchResult>) -> Option<MatchResult> {
+    match (a, b) {
+        (None, x) => x,
+        (x, None) => x,
+        (Some(x), Some(y)) => {
+            let pick_y = y.dist < x.dist || (y.dist == x.dist && y.source.id < x.source.id);
+            Some(if pick_y { y } else { x })
+        }
+    }
+}
+
+/// Execute a query against the sharded store: route to intersecting
+/// shards, answer each from its grid index, merge canonically.
+pub fn execute(store: &Store, q: &Query) -> QueryResult {
+    match q {
+        Query::Cone { center, radius, filter } => {
+            let mut out = Vec::new();
+            let (bx0, by0) = (center.0 - radius, center.1 - radius);
+            let (bx1, by1) = (center.0 + radius, center.1 + radius);
+            for sh in &store.shards {
+                if !sh.intersects_box(bx0, by0, bx1, by1) {
+                    continue;
+                }
+                let mut idx = Vec::new();
+                sh.cone(*center, *radius, &mut idx);
+                out.extend(idx.into_iter().map(|i| sh.sources[i].clone()));
+            }
+            out.retain(|s| filter.accepts(s));
+            out.sort_by_key(|s| s.id);
+            QueryResult::Sources(out)
+        }
+        Query::BoxSearch { x0, y0, x1, y1, filter } => {
+            let mut out = Vec::new();
+            for sh in &store.shards {
+                if !sh.intersects_box(*x0, *y0, *x1, *y1) {
+                    continue;
+                }
+                let mut idx = Vec::new();
+                sh.box_search(*x0, *y0, *x1, *y1, &mut idx);
+                out.extend(idx.into_iter().map(|i| sh.sources[i].clone()));
+            }
+            out.retain(|s| filter.accepts(s));
+            out.sort_by_key(|s| s.id);
+            QueryResult::Sources(out)
+        }
+        Query::BrightestN { n, filter } => {
+            // per-shard top-n (select on indices, clone only winners),
+            // then a global re-select over the union
+            let mut cand: Vec<ServedSource> = Vec::new();
+            for sh in &store.shards {
+                let mut idx: Vec<usize> = (0..sh.sources.len())
+                    .filter(|&i| filter.accepts(&sh.sources[i]))
+                    .collect();
+                idx.sort_by(|&a, &b| brightness_order(&sh.sources[a], &sh.sources[b]));
+                idx.truncate(*n);
+                cand.extend(idx.into_iter().map(|i| sh.sources[i].clone()));
+            }
+            cand.sort_by(brightness_order);
+            cand.truncate(*n);
+            QueryResult::Sources(cand)
+        }
+        Query::CrossMatch { pos, radius } => {
+            let probe = max_match_radius(*radius);
+            let (bx0, by0) = (pos.0 - probe, pos.1 - probe);
+            let (bx1, by1) = (pos.0 + probe, pos.1 + probe);
+            let mut best: Option<MatchResult> = None;
+            for sh in &store.shards {
+                if !sh.intersects_box(bx0, by0, bx1, by1) {
+                    continue;
+                }
+                let mut idx = Vec::new();
+                sh.cone(*pos, probe, &mut idx);
+                for i in idx {
+                    let s = &sh.sources[i];
+                    let d = ((s.pos.0 - pos.0).powi(2) + (s.pos.1 - pos.1).powi(2)).sqrt();
+                    if d <= match_radius(*radius, s) {
+                        best = better_match(
+                            best,
+                            Some(MatchResult { source: s.clone(), dist: d }),
+                        );
+                    }
+                }
+            }
+            QueryResult::Match(best)
+        }
+    }
+}
+
+/// Brute-force reference executor over a flat slice (id order assumed
+/// irrelevant; results are canonically ordered the same way `execute`
+/// orders them). Used by tests to pin the sharded engine's semantics and
+/// by callers that have no store built.
+pub fn execute_scan(sources: &[ServedSource], q: &Query) -> QueryResult {
+    match q {
+        Query::Cone { center, radius, filter } => {
+            let r2 = radius * radius;
+            let mut out: Vec<ServedSource> = sources
+                .iter()
+                .filter(|s| {
+                    filter.accepts(s)
+                        && (s.pos.0 - center.0).powi(2) + (s.pos.1 - center.1).powi(2) <= r2
+                })
+                .cloned()
+                .collect();
+            out.sort_by_key(|s| s.id);
+            QueryResult::Sources(out)
+        }
+        Query::BoxSearch { x0, y0, x1, y1, filter } => {
+            let mut out: Vec<ServedSource> = sources
+                .iter()
+                .filter(|s| {
+                    filter.accepts(s)
+                        && s.pos.0 >= *x0
+                        && s.pos.0 <= *x1
+                        && s.pos.1 >= *y0
+                        && s.pos.1 <= *y1
+                })
+                .cloned()
+                .collect();
+            out.sort_by_key(|s| s.id);
+            QueryResult::Sources(out)
+        }
+        Query::BrightestN { n, filter } => {
+            let mut out: Vec<ServedSource> =
+                sources.iter().filter(|s| filter.accepts(s)).cloned().collect();
+            out.sort_by(brightness_order);
+            out.truncate(*n);
+            QueryResult::Sources(out)
+        }
+        Query::CrossMatch { pos, radius } => {
+            let mut best: Option<MatchResult> = None;
+            for s in sources {
+                let d = ((s.pos.0 - pos.0).powi(2) + (s.pos.1 - pos.1).powi(2)).sqrt();
+                if d <= match_radius(*radius, s) {
+                    best = better_match(best, Some(MatchResult { source: s.clone(), dist: d }));
+                }
+            }
+            QueryResult::Match(best)
+        }
+    }
+}
+
+/// Batch cross-match of a truth catalog against the store: one
+/// uncertainty-aware match per truth entry (None where nothing is within
+/// the acceptance radius). The validation workload of §VII, as a query.
+pub fn cross_match_catalog(
+    store: &Store,
+    truth_positions: &[(f64, f64)],
+    radius: f64,
+) -> Vec<Option<MatchResult>> {
+    truth_positions
+        .iter()
+        .map(|&pos| match execute(store, &Query::CrossMatch { pos, radius }) {
+            QueryResult::Match(m) => m,
+            _ => unreachable!("CrossMatch returns Match"),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn synthetic(n: usize, w: f64, h: f64, seed: u64) -> Vec<ServedSource> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|id| ServedSource {
+                id,
+                pos: (rng.uniform_in(0.0, w), rng.uniform_in(0.0, h)),
+                p_gal: rng.uniform(),
+                flux_r: rng.lognormal(4.0, 1.2),
+                flux_logsd: rng.uniform_in(0.01, 0.8),
+                colors: [0.1, 0.2, 0.3, 0.4],
+                converged: true,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sharded_equals_scan_on_random_queries() {
+        let (w, h) = (900.0, 700.0);
+        let src = synthetic(1200, w, h, 10);
+        let store = Store::build(src.clone(), w, h, 7);
+        let flat = store.all_sources();
+        let mut rng = Rng::new(77);
+        let filters = [SourceFilter::Any, SourceFilter::StarsOnly, SourceFilter::GalaxiesOnly];
+        for i in 0..120 {
+            let filter = filters[(i % 3) as usize];
+            let q = match i % 4 {
+                0 => Query::Cone {
+                    center: (rng.uniform_in(-50.0, w + 50.0), rng.uniform_in(-50.0, h + 50.0)),
+                    radius: rng.uniform_in(1.0, 250.0),
+                    filter,
+                },
+                1 => {
+                    let ax = rng.uniform_in(0.0, w);
+                    let ay = rng.uniform_in(0.0, h);
+                    let bx = rng.uniform_in(0.0, w);
+                    let by = rng.uniform_in(0.0, h);
+                    Query::BoxSearch {
+                        x0: ax.min(bx),
+                        y0: ay.min(by),
+                        x1: ax.max(bx),
+                        y1: ay.max(by),
+                        filter,
+                    }
+                }
+                2 => Query::BrightestN { n: rng.below(40) as usize, filter },
+                _ => Query::CrossMatch {
+                    pos: (rng.uniform_in(0.0, w), rng.uniform_in(0.0, h)),
+                    radius: rng.uniform_in(0.5, 10.0),
+                },
+            };
+            assert_eq!(execute(&store, &q), execute_scan(&flat, &q), "query {q:?}");
+        }
+    }
+
+    #[test]
+    fn cache_keys_distinguish_queries() {
+        let a = Query::Cone { center: (1.0, 2.0), radius: 3.0, filter: SourceFilter::Any };
+        let b = Query::Cone { center: (1.0, 2.0), radius: 3.0, filter: SourceFilter::Any };
+        let c = Query::Cone { center: (1.0, 2.0), radius: 3.5, filter: SourceFilter::Any };
+        let d = Query::Cone { center: (1.0, 2.0), radius: 3.0, filter: SourceFilter::StarsOnly };
+        assert_eq!(a.cache_key(), b.cache_key());
+        assert_ne!(a.cache_key(), c.cache_key());
+        assert_ne!(a.cache_key(), d.cache_key());
+        let e = Query::BrightestN { n: 5, filter: SourceFilter::Any };
+        let f = Query::BrightestN { n: 6, filter: SourceFilter::Any };
+        assert_ne!(e.cache_key(), f.cache_key());
+    }
+
+    #[test]
+    fn uncertainty_widens_match_radius() {
+        let tight = ServedSource {
+            id: 0,
+            pos: (10.0, 0.0),
+            p_gal: 0.1,
+            flux_r: 100.0,
+            flux_logsd: 0.0,
+            colors: [0.0; 4],
+            converged: true,
+        };
+        let loose = ServedSource { id: 1, flux_logsd: 1.0, ..tight.clone() };
+        // at distance 10 with base radius 6: only the uncertain source
+        // (acceptance 12) matches; the certain one (acceptance 6) does not
+        let q = Query::CrossMatch { pos: (0.0, 0.0), radius: 6.0 };
+        match execute_scan(&[tight.clone()], &q) {
+            QueryResult::Match(m) => assert!(m.is_none()),
+            _ => unreachable!(),
+        }
+        match execute_scan(&[tight, loose], &q) {
+            QueryResult::Match(m) => assert_eq!(m.unwrap().source.id, 1),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn brightest_order_is_flux_descending() {
+        let src = synthetic(50, 100.0, 100.0, 5);
+        let store = Store::build(src, 100.0, 100.0, 3);
+        match execute(&store, &Query::BrightestN { n: 10, filter: SourceFilter::Any }) {
+            QueryResult::Sources(v) => {
+                assert_eq!(v.len(), 10);
+                for w in v.windows(2) {
+                    assert!(w[0].flux_r >= w[1].flux_r);
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+}

@@ -1,0 +1,436 @@
+//! Multi-threaded request executor over an `Arc<Store>`.
+//!
+//! Architecture (the request path every later scaling PR builds on):
+//!
+//! ```text
+//!   clients ──try_submit──▶ bounded queue ──▶ worker pool ──▶ shards
+//!                 │ (admission control:          │
+//!                 ▼  shed beyond depth)          ├─ per-class LRU result cache
+//!               shed                             └─ per-worker latency Stats
+//! ```
+//!
+//! Workers pull jobs from a single bounded FIFO guarded by a mutex +
+//! condvar; admission control sheds load once the queue exceeds its
+//! depth bound, so overload degrades into an explicit shed count rather
+//! than unbounded latency. All per-request accounting is worker-local
+//! and merged once at shutdown (same discipline as the inference
+//! coordinator's per-worker stats).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::metrics::Stats;
+
+use super::query::{execute, Query, QueryResult, N_QUERY_CLASSES, QUERY_CLASSES};
+use super::store::Store;
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// worker threads (0 is allowed: nothing drains, useful for
+    /// deterministic admission-control tests)
+    pub threads: usize,
+    /// queue depth bound beyond which new requests are shed
+    pub queue_depth: usize,
+    /// per-query-class LRU result cache capacity, entries (0 disables)
+    pub cache_entries: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { threads: 4, queue_depth: 1024, cache_entries: 512 }
+    }
+}
+
+struct Job {
+    query: Query,
+    enqueued: Instant,
+    reply: Option<mpsc::Sender<QueryResult>>,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+/// Entry-count LRU mapping query cache keys to cloned results. The
+/// stored query is compared on probe so a 64-bit key collision returns
+/// a miss instead of silently serving another query's result.
+struct ResultCache {
+    capacity: usize,
+    map: HashMap<u64, (Query, QueryResult, u64)>,
+    tick: u64,
+}
+
+impl ResultCache {
+    fn new(capacity: usize) -> ResultCache {
+        ResultCache { capacity, map: HashMap::new(), tick: 0 }
+    }
+
+    fn get(&mut self, key: u64, q: &Query) -> Option<QueryResult> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(&key) {
+            Some(e) if e.0 == *q => {
+                e.2 = tick;
+                Some(e.1.clone())
+            }
+            _ => None,
+        }
+    }
+
+    fn put(&mut self, key: u64, q: Query, v: QueryResult) {
+        if self.capacity == 0 {
+            return;
+        }
+        self.tick += 1;
+        if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
+            // amortized eviction: drop the least-recent ~1/8 of entries
+            // in one pass instead of an O(n) scan per insert (this runs
+            // under the class mutex on the worker hot path)
+            let mut ticks: Vec<u64> = self.map.values().map(|e| e.2).collect();
+            ticks.sort_unstable();
+            let cut = ticks[(ticks.len() / 8).min(ticks.len() - 1)];
+            self.map.retain(|_, e| e.2 > cut);
+            if self.map.len() >= self.capacity {
+                // all survivors newer than cut (degenerate tie case)
+                let victim = self.map.iter().min_by_key(|(_, e)| e.2).map(|(&k, _)| k);
+                if let Some(k) = victim {
+                    self.map.remove(&k);
+                }
+            }
+        }
+        self.map.insert(key, (q, v, self.tick));
+    }
+}
+
+struct Shared {
+    store: Arc<Store>,
+    cfg: ServerConfig,
+    state: Mutex<QueueState>,
+    not_empty: Condvar,
+    caches: Vec<Mutex<ResultCache>>,
+    accepted: AtomicU64,
+    shed: AtomicU64,
+}
+
+/// Per-worker accounting, merged at shutdown.
+#[derive(Default)]
+struct WorkerLocal {
+    latency: [Stats; N_QUERY_CLASSES],
+    executed: u64,
+    cache_hits: u64,
+}
+
+/// Final report: throughput counters plus per-class latency
+/// distributions (p50/p99 via `metrics::Stats` quantiles).
+#[derive(Clone, Debug, Default)]
+pub struct ServerReport {
+    pub accepted: u64,
+    pub shed: u64,
+    pub executed: u64,
+    pub cache_hits: u64,
+    /// queue-entry → reply latency per query class
+    pub latency: [Stats; N_QUERY_CLASSES],
+}
+
+impl ServerReport {
+    /// All-classes latency distribution.
+    pub fn latency_all(&self) -> Stats {
+        let mut all = Stats::new();
+        for s in &self.latency {
+            all.merge(s);
+        }
+        all
+    }
+
+    pub fn cache_hit_rate(&self) -> f64 {
+        if self.executed == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / self.executed as f64
+        }
+    }
+
+    /// Multi-line human summary with per-class quantiles.
+    pub fn summary(&self) -> String {
+        let all = self.latency_all();
+        let aq = all.quantiles(&[0.50, 0.99]);
+        let mut out = format!(
+            "served {} (accepted {}, shed {}), cache hit rate {:.1}%\n  all      p50={:.3}ms p99={:.3}ms max={:.3}ms",
+            self.executed,
+            self.accepted,
+            self.shed,
+            100.0 * self.cache_hit_rate(),
+            aq[0] * 1e3,
+            aq[1] * 1e3,
+            if all.n == 0 { 0.0 } else { all.max * 1e3 },
+        );
+        for c in QUERY_CLASSES {
+            let s = &self.latency[c.index()];
+            if s.n == 0 {
+                continue;
+            }
+            let q = s.quantiles(&[0.50, 0.99]);
+            out.push_str(&format!(
+                "\n  {:<8} n={} p50={:.3}ms p99={:.3}ms",
+                c.name(),
+                s.n,
+                q[0] * 1e3,
+                q[1] * 1e3
+            ));
+        }
+        out
+    }
+}
+
+/// The running server. Dropping without `shutdown()` leaks workers;
+/// always call `shutdown()` to stop and collect the report.
+pub struct Server {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<WorkerLocal>>,
+}
+
+impl Server {
+    pub fn start(store: Arc<Store>, cfg: ServerConfig) -> Server {
+        let caches = (0..N_QUERY_CLASSES)
+            .map(|_| Mutex::new(ResultCache::new(cfg.cache_entries)))
+            .collect();
+        let shared = Arc::new(Shared {
+            store,
+            cfg: cfg.clone(),
+            state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            not_empty: Condvar::new(),
+            caches,
+            accepted: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+        });
+        let handles = (0..cfg.threads)
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&sh))
+            })
+            .collect();
+        Server { shared, handles }
+    }
+
+    fn submit(&self, query: Query, reply: Option<mpsc::Sender<QueryResult>>) -> bool {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.shutdown || st.jobs.len() >= self.shared.cfg.queue_depth {
+                drop(st);
+                self.shared.shed.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+            st.jobs.push_back(Job { query, enqueued: Instant::now(), reply });
+        }
+        self.shared.accepted.fetch_add(1, Ordering::Relaxed);
+        self.shared.not_empty.notify_one();
+        true
+    }
+
+    /// Open-loop submission (fire and forget). Returns false if shed.
+    pub fn try_submit(&self, query: Query) -> bool {
+        self.submit(query, None)
+    }
+
+    /// Closed-loop call: submit and wait for the result. `None` = shed.
+    pub fn call(&self, query: Query) -> Option<QueryResult> {
+        let (tx, rx) = mpsc::channel();
+        if !self.submit(query, Some(tx)) {
+            return None;
+        }
+        rx.recv().ok()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.shared.state.lock().unwrap().jobs.len()
+    }
+
+    /// Drain remaining jobs, stop workers, merge per-worker accounting.
+    pub fn shutdown(self) -> ServerReport {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.not_empty.notify_all();
+        let mut report = ServerReport {
+            accepted: self.shared.accepted.load(Ordering::Relaxed),
+            shed: self.shared.shed.load(Ordering::Relaxed),
+            ..Default::default()
+        };
+        for h in self.handles {
+            let local = h.join().expect("server worker panicked");
+            report.executed += local.executed;
+            report.cache_hits += local.cache_hits;
+            for (dst, src) in report.latency.iter_mut().zip(&local.latency) {
+                dst.merge(src);
+            }
+        }
+        report
+    }
+}
+
+fn worker_loop(shared: &Shared) -> WorkerLocal {
+    let mut local = WorkerLocal::default();
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.jobs.pop_front() {
+                    break Some(j);
+                }
+                if st.shutdown {
+                    break None;
+                }
+                st = shared.not_empty.wait(st).unwrap();
+            }
+        };
+        let Some(job) = job else { break };
+        let class = job.query.class();
+        let key = job.query.cache_key();
+        let cached = if shared.cfg.cache_entries > 0 {
+            shared.caches[class.index()].lock().unwrap().get(key, &job.query)
+        } else {
+            None
+        };
+        let result = match cached {
+            Some(r) => {
+                local.cache_hits += 1;
+                r
+            }
+            None => {
+                let r = execute(&shared.store, &job.query);
+                if shared.cfg.cache_entries > 0 {
+                    shared.caches[class.index()]
+                        .lock()
+                        .unwrap()
+                        .put(key, job.query.clone(), r.clone());
+                }
+                r
+            }
+        };
+        local.latency[class.index()].push(job.enqueued.elapsed().as_secs_f64());
+        local.executed += 1;
+        if let Some(tx) = job.reply {
+            // receiver may have given up; that is not a server error
+            let _ = tx.send(result);
+        }
+    }
+    local
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+    use crate::serve::query::{execute_scan, SourceFilter};
+    use crate::serve::store::ServedSource;
+
+    fn small_store(n: usize) -> (Arc<Store>, Vec<ServedSource>) {
+        let mut rng = Rng::new(33);
+        let src: Vec<ServedSource> = (0..n)
+            .map(|id| ServedSource {
+                id,
+                pos: (rng.uniform_in(0.0, 300.0), rng.uniform_in(0.0, 300.0)),
+                p_gal: rng.uniform(),
+                flux_r: rng.lognormal(4.0, 1.0),
+                flux_logsd: rng.uniform_in(0.01, 0.5),
+                colors: [0.0; 4],
+                converged: true,
+            })
+            .collect();
+        let store = Store::build(src, 300.0, 300.0, 4);
+        let flat = store.all_sources();
+        (Arc::new(store), flat)
+    }
+
+    #[test]
+    fn served_results_match_bruteforce() {
+        let (store, flat) = small_store(500);
+        let server = Server::start(store, ServerConfig { threads: 2, ..Default::default() });
+        let mut rng = Rng::new(9);
+        for _ in 0..60 {
+            let q = Query::Cone {
+                center: (rng.uniform_in(0.0, 300.0), rng.uniform_in(0.0, 300.0)),
+                radius: rng.uniform_in(5.0, 80.0),
+                filter: SourceFilter::Any,
+            };
+            let got = server.call(q.clone()).expect("not shed");
+            assert_eq!(got, execute_scan(&flat, &q));
+        }
+        let report = server.shutdown();
+        assert_eq!(report.executed, 60);
+        assert_eq!(report.accepted, 60);
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.latency_all().n, 60);
+    }
+
+    #[test]
+    fn admission_control_sheds_beyond_depth() {
+        let (store, _) = small_store(50);
+        // zero workers: the queue only fills, deterministically
+        let server = Server::start(
+            store,
+            ServerConfig { threads: 0, queue_depth: 4, cache_entries: 0 },
+        );
+        let q = Query::BrightestN { n: 3, filter: SourceFilter::Any };
+        let mut ok = 0;
+        for _ in 0..10 {
+            if server.try_submit(q.clone()) {
+                ok += 1;
+            }
+        }
+        assert_eq!(ok, 4);
+        assert_eq!(server.queue_len(), 4);
+        let report = server.shutdown();
+        assert_eq!(report.accepted, 4);
+        assert_eq!(report.shed, 6);
+        assert_eq!(report.executed, 0);
+    }
+
+    #[test]
+    fn identical_queries_hit_the_cache() {
+        let (store, flat) = small_store(300);
+        // one worker => strictly sequential service => deterministic hits
+        let server = Server::start(
+            store,
+            ServerConfig { threads: 1, queue_depth: 64, cache_entries: 32 },
+        );
+        let q = Query::Cone { center: (150.0, 150.0), radius: 60.0, filter: SourceFilter::Any };
+        let want = execute_scan(&flat, &q);
+        for _ in 0..20 {
+            assert_eq!(server.call(q.clone()).unwrap(), want);
+        }
+        let report = server.shutdown();
+        assert_eq!(report.executed, 20);
+        assert_eq!(report.cache_hits, 19);
+        assert!(report.cache_hit_rate() > 0.9);
+    }
+
+    #[test]
+    fn cache_evicts_lru_beyond_capacity() {
+        let mut c = ResultCache::new(2);
+        let r = QueryResult::Sources(Vec::new());
+        let q = Query::BrightestN { n: 1, filter: SourceFilter::Any };
+        c.put(1, q.clone(), r.clone());
+        c.put(2, q.clone(), r.clone());
+        assert!(c.get(1, &q).is_some()); // refresh 1 => 2 is LRU
+        c.put(3, q.clone(), r.clone());
+        assert!(c.get(2, &q).is_none(), "2 should be evicted");
+        assert!(c.get(1, &q).is_some());
+        assert!(c.get(3, &q).is_some());
+    }
+
+    #[test]
+    fn cache_key_collision_is_a_miss_not_a_wrong_answer() {
+        let mut c = ResultCache::new(4);
+        let q1 = Query::BrightestN { n: 1, filter: SourceFilter::Any };
+        let q2 = Query::BrightestN { n: 2, filter: SourceFilter::Any };
+        // simulate a 64-bit key collision: same key, different query
+        c.put(42, q1.clone(), QueryResult::Sources(Vec::new()));
+        assert!(c.get(42, &q1).is_some());
+        assert!(c.get(42, &q2).is_none(), "colliding key must not serve q1's result for q2");
+    }
+}

@@ -1,0 +1,208 @@
+//! Compact jsonlite snapshot of a served catalog.
+//!
+//! The process boundary between `celeste infer` and `celeste
+//! serve-bench`: inference writes a snapshot, serving loads it and
+//! builds a `Store` with whatever shard count the serving tier wants.
+//! Numbers round-trip losslessly (Rust's shortest-round-trip f64
+//! formatting on write, exact `str::parse::<f64>` on read).
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::jsonlite::{self, Value};
+
+use super::store::{ServedSource, Store};
+
+pub const SNAPSHOT_FORMAT: &str = "celeste-snapshot-v1";
+
+/// A loaded snapshot: flat sources plus the sky extent the store's
+/// Hilbert keys must be computed over.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    pub width: f64,
+    pub height: f64,
+    pub sources: Vec<ServedSource>,
+}
+
+impl Snapshot {
+    pub fn into_store(self, n_shards: usize) -> Store {
+        Store::build(self.sources, self.width, self.height, n_shards)
+    }
+}
+
+fn source_to_value(s: &ServedSource) -> Value {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("id".to_string(), Value::Num(s.id as f64));
+    m.insert("x".to_string(), Value::Num(s.pos.0));
+    m.insert("y".to_string(), Value::Num(s.pos.1));
+    m.insert("p_gal".to_string(), Value::Num(s.p_gal));
+    m.insert("flux_r".to_string(), Value::Num(s.flux_r));
+    m.insert("flux_logsd".to_string(), Value::Num(s.flux_logsd));
+    m.insert(
+        "colors".to_string(),
+        Value::Arr(s.colors.iter().map(|&c| Value::Num(c)).collect()),
+    );
+    m.insert("converged".to_string(), Value::Bool(s.converged));
+    Value::Obj(m)
+}
+
+fn f64_field(v: &Value, key: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(Value::as_f64)
+        .ok_or_else(|| anyhow!("snapshot source missing numeric field {key:?}"))
+}
+
+fn source_from_value(v: &Value) -> Result<ServedSource> {
+    let colors_v = v
+        .get("colors")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("snapshot source missing colors array"))?;
+    if colors_v.len() != 4 {
+        bail!("snapshot colors must have 4 entries, got {}", colors_v.len());
+    }
+    let mut colors = [0.0f64; 4];
+    for (slot, cv) in colors.iter_mut().zip(colors_v) {
+        *slot = cv.as_f64().ok_or_else(|| anyhow!("non-numeric color"))?;
+    }
+    Ok(ServedSource {
+        id: f64_field(v, "id")? as usize,
+        pos: (f64_field(v, "x")?, f64_field(v, "y")?),
+        p_gal: f64_field(v, "p_gal")?,
+        flux_r: f64_field(v, "flux_r")?,
+        flux_logsd: f64_field(v, "flux_logsd")?,
+        colors,
+        converged: v.get("converged").and_then(Value::as_bool).unwrap_or(true),
+    })
+}
+
+/// Serialize sources + extent to the snapshot JSON text.
+pub fn to_json(sources: &[ServedSource], width: f64, height: f64) -> String {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("format".to_string(), Value::Str(SNAPSHOT_FORMAT.to_string()));
+    m.insert("width".to_string(), Value::Num(width));
+    m.insert("height".to_string(), Value::Num(height));
+    m.insert(
+        "sources".to_string(),
+        Value::Arr(sources.iter().map(source_to_value).collect()),
+    );
+    jsonlite::to_string(&Value::Obj(m))
+}
+
+/// Parse snapshot JSON text.
+pub fn from_json(text: &str) -> Result<Snapshot> {
+    let v = jsonlite::parse(text).map_err(|e| anyhow!("snapshot parse: {e}"))?;
+    match v.get("format").and_then(Value::as_str) {
+        Some(SNAPSHOT_FORMAT) => {}
+        other => bail!("unsupported snapshot format {other:?} (want {SNAPSHOT_FORMAT})"),
+    }
+    let width = f64_field(&v, "width")?;
+    let height = f64_field(&v, "height")?;
+    let sources = v
+        .get("sources")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("snapshot missing sources"))?
+        .iter()
+        .map(source_from_value)
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Snapshot { width, height, sources })
+}
+
+/// Save a flat source list (e.g. fresh `infer` output).
+pub fn save_sources(path: &Path, sources: &[ServedSource], width: f64, height: f64) -> Result<()> {
+    std::fs::write(path, to_json(sources, width, height))?;
+    Ok(())
+}
+
+/// Save a built store (canonical id-ordered flat view).
+pub fn save(path: &Path, store: &Store) -> Result<()> {
+    save_sources(path, &store.all_sources(), store.width, store.height)
+}
+
+/// Load a snapshot from disk.
+pub fn load(path: &Path) -> Result<Snapshot> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading snapshot {path:?}: {e}"))?;
+    from_json(&text)
+}
+
+/// Synthesize a serveable catalog without compiled artifacts: truth sky
+/// -> noisy "previous survey" estimates -> served rows (with synthetic
+/// posterior SDs). The one ingestion path shared by the CLI, benches,
+/// and tests, so they all serve the same catalog shape.
+pub fn synthetic(n_sources: usize, seed: u64) -> Snapshot {
+    let sky = crate::sky::generate(&crate::sky::SkyConfig {
+        n_sources,
+        seed,
+        ..Default::default()
+    });
+    let mut rng = crate::prng::Rng::new(seed ^ 0x11);
+    let cat =
+        crate::catalog::noisy_catalog(&sky.sources, sky.width, sky.height, &mut rng, 0.5, 0.2);
+    let sources = cat
+        .entries
+        .iter()
+        .map(|e| ServedSource::from_entry(e, rng.uniform_in(0.05, 0.5)))
+        .collect();
+    Snapshot { width: sky.width, height: sky.height, sources }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn awkward_sources(n: usize) -> Vec<ServedSource> {
+        // deliberately non-round values to stress lossless round-trip
+        let mut rng = Rng::new(99);
+        (0..n)
+            .map(|id| ServedSource {
+                id,
+                pos: (rng.uniform() * 1234.567, rng.uniform() * 987.654),
+                p_gal: rng.uniform(),
+                flux_r: rng.lognormal(4.0, 1.5),
+                flux_logsd: rng.uniform() * 0.3 + 1e-9,
+                colors: [rng.normal(), rng.normal() * 1e-7, rng.normal() * 1e7, 0.0],
+                converged: rng.uniform() < 0.5,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let src = awkward_sources(64);
+        let text = to_json(&src, 1234.567, 987.654);
+        let snap = from_json(&text).unwrap();
+        assert_eq!(snap.width, 1234.567);
+        assert_eq!(snap.height, 987.654);
+        assert_eq!(snap.sources, src);
+        // a second round-trip is byte-stable
+        let text2 = to_json(&snap.sources, snap.width, snap.height);
+        assert_eq!(text, text2);
+    }
+
+    #[test]
+    fn file_roundtrip_through_store() {
+        let dir = std::env::temp_dir().join("celeste-snapshot-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snap.json");
+        let src = awkward_sources(200);
+        let store = Store::build(src.clone(), 1300.0, 1000.0, 6);
+        save(&path, &store).unwrap();
+        let snap = load(&path).unwrap();
+        let mut want = src;
+        want.sort_by_key(|s| s.id);
+        assert_eq!(snap.sources, want);
+        let store2 = snap.into_store(3);
+        assert_eq!(store2.all_sources(), want);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_snapshots_are_rejected() {
+        assert!(from_json("{}").is_err());
+        assert!(from_json("not json").is_err());
+        assert!(from_json(r#"{"format":"celeste-snapshot-v1","width":1}"#).is_err());
+        assert!(from_json(r#"{"format":"other","width":1,"height":1,"sources":[]}"#).is_err());
+    }
+}

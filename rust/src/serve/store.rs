@@ -1,0 +1,406 @@
+//! The immutable catalog store: Hilbert-range shards with per-shard grid
+//! indexes.
+//!
+//! The coordinator orders sources along a Hilbert curve for inference
+//! locality (paper §III-D); the store reuses the *same* key to cut the
+//! catalog into `n_shards` contiguous, equal-count key ranges. Spatially
+//! compact shards mean (a) most queries touch one or two shards, and
+//! (b) a future distributed deployment can place shards on different
+//! hosts without re-keying anything.
+
+use crate::catalog::{hilbert_sky_key, CatalogEntry};
+use crate::coordinator::InferredSource;
+use crate::model::layout as L;
+
+/// One catalog row as served: posterior point estimate + the
+/// uncertainties that distinguish Celeste output from heuristic
+/// catalogs. `PartialEq` is exact (bitwise on floats): query results are
+/// required to be byte-identical to a brute-force scan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServedSource {
+    pub id: usize,
+    /// absolute sky position, pixels
+    pub pos: (f64, f64),
+    /// probability the source is a galaxy
+    pub p_gal: f64,
+    /// posterior mean reference-band flux
+    pub flux_r: f64,
+    /// posterior SD of log flux (drives uncertainty-aware cross-match)
+    pub flux_logsd: f64,
+    pub colors: [f64; L::N_COLORS],
+    pub converged: bool,
+}
+
+impl ServedSource {
+    pub fn is_galaxy(&self) -> bool {
+        self.p_gal > 0.5
+    }
+
+    pub fn from_inferred(s: &InferredSource) -> ServedSource {
+        ServedSource {
+            id: s.id,
+            pos: s.pos,
+            p_gal: s.est.p_gal,
+            flux_r: s.est.flux_r,
+            flux_logsd: s.flux_logsd,
+            colors: s.est.colors,
+            converged: s.converged,
+        }
+    }
+
+    /// Build from a plain catalog entry (synthetic benches / photo
+    /// baseline ingestion, where no posterior SD exists).
+    pub fn from_entry(e: &CatalogEntry, flux_logsd: f64) -> ServedSource {
+        ServedSource {
+            id: e.id,
+            pos: e.pos,
+            p_gal: e.p_gal,
+            flux_r: e.flux_r,
+            flux_logsd,
+            colors: e.colors,
+            converged: true,
+        }
+    }
+}
+
+/// Uniform-cell grid index over a shard's bounding box.
+#[derive(Clone, Debug)]
+struct ShardGrid {
+    x0: f64,
+    y0: f64,
+    cell: f64,
+    nx: usize,
+    ny: usize,
+    /// indices into the shard's `sources`
+    cells: Vec<Vec<usize>>,
+}
+
+impl ShardGrid {
+    fn build(sources: &[ServedSource], bbox: (f64, f64, f64, f64)) -> ShardGrid {
+        let (x0, y0, x1, y1) = bbox;
+        let w = (x1 - x0).max(1e-9);
+        let h = (y1 - y0).max(1e-9);
+        // target a handful of sources per cell
+        let cell = ((w * h / sources.len().max(1) as f64).sqrt() * 2.0).clamp(8.0, 512.0);
+        let nx = (w / cell).ceil().max(1.0) as usize;
+        let ny = (h / cell).ceil().max(1.0) as usize;
+        let mut cells = vec![Vec::new(); nx * ny];
+        for (i, s) in sources.iter().enumerate() {
+            let cx = (((s.pos.0 - x0) / cell) as usize).min(nx - 1);
+            let cy = (((s.pos.1 - y0) / cell) as usize).min(ny - 1);
+            cells[cy * nx + cx].push(i);
+        }
+        ShardGrid { x0, y0, cell, nx, ny, cells }
+    }
+
+    /// Visit every source index whose cell intersects the axis-aligned
+    /// box `(bx0, by0, bx1, by1)`.
+    fn visit_box(&self, bx0: f64, by0: f64, bx1: f64, by1: f64, mut f: impl FnMut(usize)) {
+        let cx0 = (((bx0 - self.x0) / self.cell).floor().max(0.0) as usize).min(self.nx - 1);
+        let cy0 = (((by0 - self.y0) / self.cell).floor().max(0.0) as usize).min(self.ny - 1);
+        let cx1 = (((bx1 - self.x0) / self.cell).floor().max(0.0) as usize).min(self.nx - 1);
+        let cy1 = (((by1 - self.y0) / self.cell).floor().max(0.0) as usize).min(self.ny - 1);
+        for cy in cy0..=cy1 {
+            for cx in cx0..=cx1 {
+                for &i in &self.cells[cy * self.nx + cx] {
+                    f(i);
+                }
+            }
+        }
+    }
+}
+
+/// One immutable shard: a contiguous Hilbert key range of the catalog,
+/// independently searchable via its own grid index.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    /// Hilbert keys covered (inclusive bounds, diagnostics / routing)
+    pub key_lo: u64,
+    pub key_hi: u64,
+    pub sources: Vec<ServedSource>,
+    /// tight bounding box (x0, y0, x1, y1) of member positions
+    pub bbox: (f64, f64, f64, f64),
+    grid: ShardGrid,
+}
+
+impl Shard {
+    fn build(sources: Vec<ServedSource>, key_lo: u64, key_hi: u64) -> Shard {
+        let mut bbox = (f64::INFINITY, f64::INFINITY, f64::NEG_INFINITY, f64::NEG_INFINITY);
+        for s in &sources {
+            bbox.0 = bbox.0.min(s.pos.0);
+            bbox.1 = bbox.1.min(s.pos.1);
+            bbox.2 = bbox.2.max(s.pos.0);
+            bbox.3 = bbox.3.max(s.pos.1);
+        }
+        if sources.is_empty() {
+            bbox = (0.0, 0.0, 0.0, 0.0);
+        }
+        let grid = ShardGrid::build(&sources, bbox);
+        Shard { key_lo, key_hi, sources, bbox, grid }
+    }
+
+    /// Does this shard's bounding box intersect the given box?
+    pub fn intersects_box(&self, x0: f64, y0: f64, x1: f64, y1: f64) -> bool {
+        !self.sources.is_empty()
+            && self.bbox.0 <= x1
+            && self.bbox.2 >= x0
+            && self.bbox.1 <= y1
+            && self.bbox.3 >= y0
+    }
+
+    /// Indices of members within `radius` of `center`.
+    pub fn cone(&self, center: (f64, f64), radius: f64, out: &mut Vec<usize>) {
+        if self.sources.is_empty() {
+            return;
+        }
+        let r2 = radius * radius;
+        self.grid.visit_box(
+            center.0 - radius,
+            center.1 - radius,
+            center.0 + radius,
+            center.1 + radius,
+            |i| {
+                let s = &self.sources[i];
+                let d2 = (s.pos.0 - center.0).powi(2) + (s.pos.1 - center.1).powi(2);
+                if d2 <= r2 {
+                    out.push(i);
+                }
+            },
+        );
+    }
+
+    /// Indices of members inside the closed box `[x0, x1] x [y0, y1]`.
+    pub fn box_search(&self, x0: f64, y0: f64, x1: f64, y1: f64, out: &mut Vec<usize>) {
+        if self.sources.is_empty() {
+            return;
+        }
+        self.grid.visit_box(x0, y0, x1, y1, |i| {
+            let s = &self.sources[i];
+            if s.pos.0 >= x0 && s.pos.0 <= x1 && s.pos.1 >= y0 && s.pos.1 <= y1 {
+                out.push(i);
+            }
+        });
+    }
+}
+
+/// The sharded, immutable catalog store.
+#[derive(Clone, Debug)]
+pub struct Store {
+    pub shards: Vec<Shard>,
+    /// sky extent the Hilbert keys were computed over
+    pub width: f64,
+    pub height: f64,
+}
+
+impl Store {
+    /// Build a store: keys sources along the Hilbert curve, splits the
+    /// sorted order into `n_shards` contiguous ~equal-count ranges, and
+    /// indexes each shard. Chunks are only ever cut at key boundaries,
+    /// so every Hilbert key maps to exactly one non-empty shard — the
+    /// invariant a future key-range router relies on. Empty trailing
+    /// shards (more shards than sources) carry a degenerate
+    /// `[prev_hi, prev_hi]` range and own no keys.
+    pub fn build(sources: Vec<ServedSource>, width: f64, height: f64, n_shards: usize) -> Store {
+        let n_shards = n_shards.max(1);
+        let mut keyed: Vec<(u64, ServedSource)> = sources
+            .into_iter()
+            .map(|s| (hilbert_sky_key(s.pos, width, height), s))
+            .collect();
+        keyed.sort_by_key(|(k, _)| *k);
+        let n = keyed.len();
+        let per = ((n + n_shards - 1) / n_shards).max(1);
+        let mut shards = Vec::with_capacity(n_shards);
+        let mut start = 0usize;
+        let mut prev_hi = 0u64;
+        for _ in 0..n_shards {
+            let mut end = (start + per).min(n);
+            // never split a run of identical keys across two shards
+            while end > start && end < n && keyed[end - 1].0 == keyed[end].0 {
+                end += 1;
+            }
+            let (key_lo, key_hi) = if end > start {
+                (keyed[start].0, keyed[end - 1].0)
+            } else {
+                (prev_hi, prev_hi)
+            };
+            prev_hi = key_hi;
+            let chunk: Vec<ServedSource> =
+                keyed[start..end].iter().map(|(_, s)| s.clone()).collect();
+            shards.push(Shard::build(chunk, key_lo, key_hi));
+            start = end;
+        }
+        Store { shards, width, height }
+    }
+
+    /// Ingest coordinator output directly.
+    pub fn from_inferred(
+        rows: &[InferredSource],
+        width: f64,
+        height: f64,
+        n_shards: usize,
+    ) -> Store {
+        let sources = rows.iter().map(ServedSource::from_inferred).collect();
+        Store::build(sources, width, height, n_shards)
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.sources.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All sources, sorted by id — the canonical flat view used by
+    /// snapshots and brute-force reference scans.
+    pub fn all_sources(&self) -> Vec<ServedSource> {
+        let mut out: Vec<ServedSource> = self
+            .shards
+            .iter()
+            .flat_map(|sh| sh.sources.iter().cloned())
+            .collect();
+        out.sort_by_key(|s| s.id);
+        out
+    }
+
+    /// One-line description for logs.
+    pub fn summary(&self) -> String {
+        let sizes: Vec<usize> = self.shards.iter().map(|s| s.sources.len()).collect();
+        format!(
+            "store: {} sources over {} shard(s) (sizes {:?}), extent {:.0}x{:.0}",
+            self.len(),
+            self.shards.len(),
+            sizes,
+            self.width,
+            self.height
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    pub fn synthetic_sources(n: usize, width: f64, height: f64, seed: u64) -> Vec<ServedSource> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|id| ServedSource {
+                id,
+                pos: (rng.uniform_in(0.0, width), rng.uniform_in(0.0, height)),
+                p_gal: rng.uniform(),
+                flux_r: rng.lognormal(4.0, 1.2),
+                flux_logsd: rng.uniform_in(0.01, 0.8),
+                colors: [rng.normal(), rng.normal(), rng.normal(), rng.normal()],
+                converged: rng.uniform() < 0.9,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn shards_partition_the_catalog() {
+        let src = synthetic_sources(1000, 800.0, 600.0, 1);
+        let store = Store::build(src.clone(), 800.0, 600.0, 8);
+        assert_eq!(store.shards.len(), 8);
+        assert_eq!(store.len(), 1000);
+        // every shard within one of another in size (equal-count split)
+        let sizes: Vec<usize> = store.shards.iter().map(|s| s.sources.len()).collect();
+        let max = *sizes.iter().max().unwrap();
+        let min = *sizes.iter().min().unwrap();
+        assert!(max - min <= 1, "sizes {sizes:?}");
+        // flat view recovers exactly the input set
+        let mut want = src;
+        want.sort_by_key(|s| s.id);
+        assert_eq!(store.all_sources(), want);
+    }
+
+    #[test]
+    fn shard_key_ranges_are_ordered_and_disjoint() {
+        let src = synthetic_sources(500, 640.0, 480.0, 2);
+        let store = Store::build(src, 640.0, 480.0, 5);
+        let nonempty: Vec<&Shard> =
+            store.shards.iter().filter(|s| !s.sources.is_empty()).collect();
+        for w in nonempty.windows(2) {
+            // strictly disjoint: a key belongs to exactly one shard
+            assert!(w[0].key_hi < w[1].key_lo, "{} >= {}", w[0].key_hi, w[1].key_lo);
+        }
+        for sh in &store.shards {
+            assert!(sh.key_lo <= sh.key_hi);
+            for s in &sh.sources {
+                let k = hilbert_sky_key(s.pos, store.width, store.height);
+                assert!(k >= sh.key_lo && k <= sh.key_hi);
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_keys_never_straddle_shards() {
+        // many sources on the same handful of positions => heavy key ties
+        let mut src = Vec::new();
+        for id in 0..90usize {
+            let p = (id % 3) as f64;
+            src.push(ServedSource {
+                id,
+                pos: (10.0 + p, 20.0 + p),
+                p_gal: 0.2,
+                flux_r: 100.0,
+                flux_logsd: 0.1,
+                colors: [0.0; 4],
+                converged: true,
+            });
+        }
+        let store = Store::build(src, 100.0, 100.0, 4);
+        assert_eq!(store.len(), 90);
+        // each of the 3 distinct keys must live in exactly one shard
+        for sh in &store.shards {
+            for other in &store.shards {
+                if std::ptr::eq(sh, other) || sh.sources.is_empty() || other.sources.is_empty() {
+                    continue;
+                }
+                assert!(
+                    sh.key_hi < other.key_lo || other.key_hi < sh.key_lo,
+                    "overlapping non-empty shards: [{},{}] vs [{},{}]",
+                    sh.key_lo,
+                    sh.key_hi,
+                    other.key_lo,
+                    other.key_hi
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn more_shards_than_sources_is_fine() {
+        let src = synthetic_sources(3, 100.0, 100.0, 3);
+        let store = Store::build(src, 100.0, 100.0, 8);
+        assert_eq!(store.len(), 3);
+        assert_eq!(store.shards.len(), 8);
+        // empty shards never match a box probe
+        let mut hits = 0;
+        for sh in &store.shards {
+            if sh.intersects_box(0.0, 0.0, 100.0, 100.0) {
+                hits += sh.sources.len();
+            }
+        }
+        assert_eq!(hits, 3);
+    }
+
+    #[test]
+    fn shard_cone_matches_scan() {
+        let src = synthetic_sources(400, 500.0, 500.0, 4);
+        let store = Store::build(src, 500.0, 500.0, 4);
+        for sh in &store.shards {
+            let mut got = Vec::new();
+            sh.cone((250.0, 250.0), 120.0, &mut got);
+            let want: Vec<usize> = (0..sh.sources.len())
+                .filter(|&i| {
+                    let p = sh.sources[i].pos;
+                    (p.0 - 250.0).powi(2) + (p.1 - 250.0).powi(2) <= 120.0 * 120.0
+                })
+                .collect();
+            let mut got_sorted = got;
+            got_sorted.sort_unstable();
+            assert_eq!(got_sorted, want);
+        }
+    }
+}

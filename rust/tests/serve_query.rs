@@ -1,0 +1,264 @@
+//! Serving-layer invariants: the sharded query engine must be
+//! byte-identical to a brute-force scan on a ~5k-source synthetic
+//! catalog, snapshots must round-trip losslessly, the server must
+//! return exactly what direct execution returns — plus property tests
+//! for the Hilbert curve the sharding is keyed on.
+
+use std::sync::Arc;
+
+use celeste::catalog::{hilbert_d2xy, hilbert_sky_key, hilbert_xy2d, noisy_catalog};
+use celeste::prng::Rng;
+use celeste::quickcheck::forall_with;
+use celeste::serve::{
+    self, cross_match_catalog, execute, execute_scan, Query, QueryResult, Server, ServerConfig,
+    ServedSource, SourceFilter, Store,
+};
+use celeste::sky::{generate, SkyConfig};
+
+/// ~5k sources with realistic clustering (the sky generator's mixture
+/// of uniform field + clusters), plus noisy per-source uncertainties —
+/// the same ingestion path `celeste serve-bench` uses.
+fn synthetic_snapshot(n: usize, seed: u64) -> serve::Snapshot {
+    serve::snapshot::synthetic(n, seed)
+}
+
+#[test]
+fn sharded_queries_match_bruteforce_on_5k_catalog() {
+    let snap = synthetic_snapshot(5000, 21);
+    let (w, h) = (snap.width, snap.height);
+    let store = Store::build(snap.sources, w, h, 16);
+    let flat = store.all_sources();
+    assert_eq!(flat.len(), 5000);
+
+    let mut rng = Rng::new(5);
+    let filters = [SourceFilter::Any, SourceFilter::StarsOnly, SourceFilter::GalaxiesOnly];
+    for i in 0..200usize {
+        let filter = filters[i % 3];
+        let q = match i % 4 {
+            0 => Query::Cone {
+                center: (rng.uniform_in(-60.0, w + 60.0), rng.uniform_in(-60.0, h + 60.0)),
+                radius: rng.uniform_in(0.5, 300.0),
+                filter,
+            },
+            1 => {
+                let ax = rng.uniform_in(-20.0, w + 20.0);
+                let ay = rng.uniform_in(-20.0, h + 20.0);
+                let bx = rng.uniform_in(-20.0, w + 20.0);
+                let by = rng.uniform_in(-20.0, h + 20.0);
+                Query::BoxSearch {
+                    x0: ax.min(bx),
+                    y0: ay.min(by),
+                    x1: ax.max(bx),
+                    y1: ay.max(by),
+                    filter,
+                }
+            }
+            2 => Query::BrightestN { n: rng.below(200) as usize, filter },
+            _ => Query::CrossMatch {
+                pos: (rng.uniform_in(0.0, w), rng.uniform_in(0.0, h)),
+                radius: rng.uniform_in(0.2, 8.0),
+            },
+        };
+        let fast = execute(&store, &q);
+        let slow = execute_scan(&flat, &q);
+        assert_eq!(fast, slow, "divergence on query {i}: {q:?}");
+    }
+}
+
+#[test]
+fn shard_count_does_not_change_results() {
+    let snap = synthetic_snapshot(1500, 3);
+    let (w, h) = (snap.width, snap.height);
+    let flat = {
+        let s = Store::build(snap.sources.clone(), w, h, 1);
+        s.all_sources()
+    };
+    let q = Query::Cone { center: (w / 2.0, h / 2.0), radius: 200.0, filter: SourceFilter::Any };
+    let want = execute_scan(&flat, &q);
+    for shards in [1usize, 2, 5, 16, 64] {
+        let store = Store::build(snap.sources.clone(), w, h, shards);
+        assert_eq!(execute(&store, &q), want, "{shards} shards");
+    }
+}
+
+#[test]
+fn cross_match_catalog_finds_most_truth_sources() {
+    // serve the noisy catalog, cross-match the truth positions against
+    // it: position noise is 0.5 px, so a 3 px base radius should match
+    // nearly everything
+    let sky = generate(&SkyConfig { n_sources: 800, seed: 13, ..Default::default() });
+    let mut rng = Rng::new(77);
+    let cat = noisy_catalog(&sky.sources, sky.width, sky.height, &mut rng, 0.5, 0.2);
+    let sources: Vec<ServedSource> = cat
+        .entries
+        .iter()
+        .map(|e| ServedSource::from_entry(e, 0.2))
+        .collect();
+    let store = Store::build(sources, sky.width, sky.height, 8);
+    let truth: Vec<(f64, f64)> = sky.sources.iter().map(|s| s.pos).collect();
+    let matches = cross_match_catalog(&store, &truth, 3.0);
+    let hit = matches.iter().filter(|m| m.is_some()).count();
+    assert!(hit as f64 > 0.95 * truth.len() as f64, "{hit}/{} matched", truth.len());
+    for m in matches.into_iter().flatten() {
+        assert!(m.dist <= 3.0 * 2.0 + 1e-12);
+    }
+}
+
+#[test]
+fn snapshot_roundtrips_through_disk_and_store() {
+    let snap = synthetic_snapshot(600, 9);
+    let dir = std::env::temp_dir().join("celeste-serve-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("roundtrip.json");
+    let store = Store::build(snap.sources.clone(), snap.width, snap.height, 4);
+    serve::snapshot::save(&path, &store).unwrap();
+    let loaded = serve::snapshot::load(&path).unwrap();
+    assert_eq!(loaded.width, snap.width);
+    assert_eq!(loaded.height, snap.height);
+    let mut want = snap.sources;
+    want.sort_by_key(|s| s.id);
+    assert_eq!(loaded.sources, want, "snapshot must round-trip losslessly");
+    // and the rebuilt store answers identically
+    let store2 = loaded.into_store(9);
+    let q = Query::BrightestN { n: 50, filter: SourceFilter::Any };
+    assert_eq!(execute(&store2, &q), execute_scan(&want, &q));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn server_returns_exactly_direct_execution_results() {
+    let snap = synthetic_snapshot(2000, 31);
+    let (w, h) = (snap.width, snap.height);
+    let store = Arc::new(Store::build(snap.sources, w, h, 8));
+    let flat = store.all_sources();
+    let server = Server::start(
+        Arc::clone(&store),
+        ServerConfig { threads: 4, queue_depth: 256, cache_entries: 64 },
+    );
+    let mut rng = Rng::new(2);
+    let mut served = 0;
+    for i in 0..150 {
+        let q = if i % 2 == 0 {
+            Query::Cone {
+                center: (rng.uniform_in(0.0, w), rng.uniform_in(0.0, h)),
+                radius: rng.uniform_in(2.0, 120.0),
+                filter: SourceFilter::Any,
+            }
+        } else {
+            Query::CrossMatch {
+                pos: (rng.uniform_in(0.0, w), rng.uniform_in(0.0, h)),
+                radius: 4.0,
+            }
+        };
+        let got = server.call(q.clone()).expect("closed-loop call must not shed");
+        assert_eq!(got, execute_scan(&flat, &q), "query {i}");
+        served += 1;
+    }
+    let report = server.shutdown();
+    assert_eq!(report.executed, served);
+    assert_eq!(report.shed, 0);
+    let all = report.latency_all();
+    assert_eq!(all.n, served);
+    assert!(all.p50() <= all.p99() + 1e-15);
+    assert!(all.p99() <= all.max + 1e-15);
+}
+
+#[test]
+fn hilbert_roundtrip_property() {
+    forall_with(
+        400,
+        71,
+        |rng: &mut Rng| {
+            let order = 1 + rng.below(16) as u32;
+            let n = 1u64 << order;
+            (order, rng.below(n) as u32, rng.below(n) as u32)
+        },
+        |&(order, x, y)| {
+            let d = hilbert_xy2d(order, x, y);
+            d < (1u64 << (2 * order)) && hilbert_d2xy(order, d) == (x, y)
+        },
+    );
+}
+
+#[test]
+fn hilbert_adjacency_property() {
+    // consecutive curve positions are Manhattan-adjacent cells, at any
+    // order and anywhere along the curve
+    forall_with(
+        300,
+        73,
+        |rng: &mut Rng| {
+            let order = 2 + rng.below(12) as u32;
+            let max_d = 1u64 << (2 * order);
+            (order, rng.below(max_d - 1))
+        },
+        |&(order, d)| {
+            let (x0, y0) = hilbert_d2xy(order, d);
+            let (x1, y1) = hilbert_d2xy(order, d + 1);
+            (x1 as i64 - x0 as i64).abs() + (y1 as i64 - y0 as i64).abs() == 1
+        },
+    );
+}
+
+#[test]
+fn hilbert_sky_key_respects_extent() {
+    forall_with(
+        300,
+        79,
+        |rng: &mut Rng| {
+            let w = rng.uniform_in(10.0, 5000.0);
+            let h = rng.uniform_in(10.0, 5000.0);
+            // include out-of-extent positions: keys must still clamp
+            let x = rng.uniform_in(-100.0, w + 100.0);
+            let y = rng.uniform_in(-100.0, h + 100.0);
+            (w, h, x, y)
+        },
+        |&(w, h, x, y)| {
+            let k = hilbert_sky_key((x, y), w, h);
+            k < (1u64 << 32)
+        },
+    );
+}
+
+#[test]
+fn query_results_are_canonically_ordered() {
+    let snap = synthetic_snapshot(1000, 17);
+    let store = Store::build(snap.sources, snap.width, snap.height, 8);
+    match execute(
+        &store,
+        &Query::Cone {
+            center: (snap_center(&store), snap_center2(&store)),
+            radius: 500.0,
+            filter: SourceFilter::Any,
+        },
+    ) {
+        QueryResult::Sources(v) => {
+            assert!(!v.is_empty());
+            for w in v.windows(2) {
+                assert!(w[0].id < w[1].id, "cone results must be id-ascending");
+            }
+        }
+        _ => unreachable!(),
+    }
+    match execute(&store, &Query::BrightestN { n: 200, filter: SourceFilter::Any }) {
+        QueryResult::Sources(v) => {
+            assert_eq!(v.len(), 200);
+            for w in v.windows(2) {
+                assert!(
+                    w[0].flux_r > w[1].flux_r
+                        || (w[0].flux_r == w[1].flux_r && w[0].id < w[1].id),
+                    "brightest results must be flux-desc, id-asc on ties"
+                );
+            }
+        }
+        _ => unreachable!(),
+    }
+}
+
+fn snap_center(store: &Store) -> f64 {
+    store.width / 2.0
+}
+
+fn snap_center2(store: &Store) -> f64 {
+    store.height / 2.0
+}
