@@ -1,15 +1,42 @@
 //! Serving-path benchmarks: per-query latency of the sharded engine vs
-//! the brute-force scan, snapshot codec throughput, and closed-loop
-//! server throughput at 1 vs 4 worker threads (the acceptance check
-//! that the worker pool actually scales).
+//! the brute-force scan, snapshot codec throughput, closed-loop server
+//! throughput at 1 vs 4 worker threads, and the distributed tier —
+//! routing-policy tail latency under the hotspot mix plus a failover
+//! drill. Results are also written to `BENCH_serve.json` so the perf
+//! trajectory accumulates across PRs.
 
 use std::sync::Arc;
 
-use celeste::benchkit::{bench, black_box};
+use celeste::benchkit::{bench, black_box, BenchResult};
+use celeste::experiments::obj_pub;
+use celeste::jsonlite::{self, Value};
+use celeste::serve::dist::{
+    run_sim_open_loop, DistReport, FailureSchedule, Router, RouterConfig, Routing,
+};
 use celeste::serve::{
     self, run_closed_loop, LoadGen, LoadGenConfig, Query, Server, ServerConfig, SourceFilter,
     Store,
 };
+
+const DIST_NODES: usize = 6;
+const DIST_REPLICAS: usize = 3;
+const DIST_QPS: f64 = 50_000.0;
+const DIST_SECS: f64 = 0.3;
+
+fn dist_router(store: &Arc<Store>, routing: Routing) -> Router {
+    Router::new(
+        Arc::clone(store),
+        DIST_NODES,
+        DIST_REPLICAS,
+        RouterConfig { routing, seed: 4242, ..Default::default() },
+    )
+}
+
+fn dist_run(mut router: Router, store: &Arc<Store>) -> DistReport {
+    let cfg = LoadGenConfig::scenario("hotspot", 4242).unwrap();
+    let mut gen = LoadGen::new(cfg, store.width, store.height);
+    run_sim_open_loop(&mut router, &mut gen, DIST_QPS, DIST_SECS)
+}
 
 fn main() {
     println!("== serve: sharded query engine + server ==");
@@ -20,13 +47,14 @@ fn main() {
     println!("{}", store.summary());
 
     // --- single-query latency: index vs brute force ---
+    let mut singles: Vec<BenchResult> = Vec::new();
     let cone = Query::Cone { center: (w * 0.5, h * 0.5), radius: 60.0, filter: SourceFilter::Any };
-    bench("cone r=60 sharded (5k)", 0.5, || {
+    singles.push(bench("cone r=60 sharded (5k)", 0.5, || {
         black_box(serve::execute(&store, &cone));
-    });
-    bench("cone r=60 brute-force scan", 0.5, || {
+    }));
+    singles.push(bench("cone r=60 brute-force scan", 0.5, || {
         black_box(serve::execute_scan(&flat, &cone));
-    });
+    }));
     let boxq = Query::BoxSearch {
         x0: w * 0.3,
         y0: h * 0.3,
@@ -34,31 +62,31 @@ fn main() {
         y1: h * 0.45,
         filter: SourceFilter::GalaxiesOnly,
     };
-    bench("box 15% sharded", 0.5, || {
+    singles.push(bench("box 15% sharded", 0.5, || {
         black_box(serve::execute(&store, &boxq));
-    });
+    }));
     let bright = Query::BrightestN { n: 100, filter: SourceFilter::Any };
-    bench("brightest-100 sharded", 0.5, || {
+    singles.push(bench("brightest-100 sharded", 0.5, || {
         black_box(serve::execute(&store, &bright));
-    });
+    }));
     let xm = Query::CrossMatch { pos: (w * 0.6, h * 0.4), radius: 3.0 };
-    bench("cross-match sharded", 0.5, || {
+    singles.push(bench("cross-match sharded", 0.5, || {
         black_box(serve::execute(&store, &xm));
-    });
+    }));
 
     // --- snapshot codec ---
     let text = serve::snapshot::to_json(&flat, w, h);
     println!("snapshot size: {} bytes for {} sources", text.len(), flat.len());
-    bench("snapshot encode 5k", 0.5, || {
+    singles.push(bench("snapshot encode 5k", 0.5, || {
         black_box(serve::snapshot::to_json(&flat, w, h));
-    });
-    bench("snapshot decode 5k", 0.5, || {
+    }));
+    singles.push(bench("snapshot decode 5k", 0.5, || {
         black_box(serve::snapshot::from_json(&text).unwrap());
-    });
+    }));
 
     // --- closed-loop server throughput: 1 vs 4 workers ---
     // cache off so the comparison measures execution scaling
-    let mut results = Vec::new();
+    let mut closed: Vec<(usize, f64)> = Vec::new();
     for threads in [1usize, 4] {
         let server = Server::start(
             Arc::clone(&store),
@@ -75,11 +103,127 @@ fn main() {
             all.p50() * 1e3,
             all.p99() * 1e3
         );
-        results.push(cl.qps());
+        closed.push((threads, cl.qps()));
     }
-    let speedup = results[1] / results[0].max(1e-9);
+    let speedup = closed[1].1 / closed[0].1.max(1e-9);
     println!(
         "4-thread speedup over 1 thread: {speedup:.2}x {}",
-        if results[1] > results[0] { "(scales)" } else { "(NOT scaling!)" }
+        if closed[1].1 > closed[0].1 { "(scales)" } else { "(NOT scaling!)" }
     );
+
+    // --- distributed tier: routing-policy tails under the hotspot mix,
+    //     same placement and same deterministic query stream ---
+    println!(
+        "== dist: {DIST_NODES} nodes x{DIST_REPLICAS} replicas, hotspot @ {:.0}k qps (simulated) ==",
+        DIST_QPS / 1e3
+    );
+    let mut dist_reports: Vec<(Routing, DistReport)> = Vec::new();
+    for routing in [Routing::Random, Routing::RoundRobin, Routing::PowerOfTwo] {
+        let rep = dist_run(dist_router(&store, routing), &store);
+        let q = rep.latency_all().quantiles(&[0.50, 0.99]);
+        println!(
+            "  {:<6} p50={:.3}ms p99={:.3}ms imbalance={:.2} fabric={:.2}MB failed={}",
+            routing.name(),
+            q[0] * 1e3,
+            q[1] * 1e3,
+            rep.imbalance(),
+            rep.bytes_moved / 1e6,
+            rep.failed
+        );
+        dist_reports.push((routing, rep));
+    }
+    let random_p99 = dist_reports[0].1.latency_all().p99();
+    let rr_p99 = dist_reports[1].1.latency_all().p99();
+    let p2c_p99 = dist_reports[2].1.latency_all().p99();
+    let p2c_wins = p2c_p99 < random_p99;
+    println!(
+        "p2c beats random on p99 at equal offered load: {} ({:.3}ms vs {:.3}ms)",
+        if p2c_wins { "YES" } else { "NO" },
+        p2c_p99 * 1e3,
+        random_p99 * 1e3
+    );
+
+    // --- failover drill: kill one replica of a 3-replica range mid-run
+    //     (a non-origin host, read from the router's own placement) ---
+    let router = dist_router(&store, Routing::PowerOfTwo);
+    let victim = *router
+        .placement
+        .replicas_of(0)
+        .iter()
+        .find(|&&n| n != 0)
+        .expect("3 distinct replicas include a non-origin node");
+    let kill_spec = format!("{victim}@{}", DIST_SECS * 0.5);
+    let router =
+        router.with_schedule(FailureSchedule::parse(&kill_spec).expect("valid kill spec"));
+    let rep_kill = dist_run(router, &store);
+    let fo_max_ms =
+        if rep_kill.failover.n == 0 { 0.0 } else { rep_kill.failover.max * 1e3 };
+    println!(
+        "failover (kill node {victim} mid-run): failed={} events={} mean={:.3}ms max={:.3}ms",
+        rep_kill.failed,
+        rep_kill.failover.n,
+        rep_kill.failover.mean() * 1e3,
+        fo_max_ms
+    );
+
+    // --- machine-readable results ---
+    let single_fields: Vec<(&str, Value)> = singles
+        .iter()
+        .map(|r| (r.name.as_str(), Value::Num(r.ns_per_iter)))
+        .collect();
+    let json = obj_pub(vec![
+        ("schema", Value::Str("celeste-bench-serve-v1".to_string())),
+        ("single_query_ns", obj_pub(single_fields)),
+        (
+            "closed_loop",
+            Value::Arr(
+                closed
+                    .iter()
+                    .map(|&(t, q)| {
+                        obj_pub(vec![
+                            ("threads", Value::Num(t as f64)),
+                            ("qps", Value::Num(q)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "dist",
+            obj_pub(vec![
+                ("nodes", Value::Num(DIST_NODES as f64)),
+                ("replicas", Value::Num(DIST_REPLICAS as f64)),
+                ("qps", Value::Num(DIST_QPS)),
+                ("sim_secs", Value::Num(DIST_SECS)),
+                ("mix", Value::Str("hotspot".to_string())),
+                ("random_p99_ms", Value::Num(random_p99 * 1e3)),
+                ("rr_p99_ms", Value::Num(rr_p99 * 1e3)),
+                ("p2c_p99_ms", Value::Num(p2c_p99 * 1e3)),
+                ("p2c_beats_random", Value::Bool(p2c_wins)),
+                (
+                    "p2c_imbalance",
+                    Value::Num(dist_reports[2].1.imbalance()),
+                ),
+                (
+                    "bytes_moved_mb",
+                    Value::Num(dist_reports[2].1.bytes_moved / 1e6),
+                ),
+            ]),
+        ),
+        (
+            "failover",
+            obj_pub(vec![
+                ("kill_spec", Value::Str(kill_spec.clone())),
+                ("failed_queries", Value::Num(rep_kill.failed as f64)),
+                ("zero_failed", Value::Bool(rep_kill.failed == 0)),
+                ("events", Value::Num(rep_kill.failover.n as f64)),
+                ("mean_ms", Value::Num(rep_kill.failover.mean() * 1e3)),
+                ("max_ms", Value::Num(fo_max_ms)),
+            ]),
+        ),
+    ]);
+    match std::fs::write("BENCH_serve.json", jsonlite::to_string(&json)) {
+        Ok(()) => println!("wrote BENCH_serve.json"),
+        Err(e) => println!("could not write BENCH_serve.json: {e}"),
+    }
 }

@@ -50,11 +50,21 @@ pub struct Fabric {
     pub bytes_moved: f64,
     /// total transfer count (metrics)
     pub transfers: u64,
+    /// bytes through each node's NIC, both directions (per-node
+    /// breakdowns; intra-node copies never touch a NIC and are excluded)
+    pub node_bytes: Vec<f64>,
 }
 
 impl Fabric {
     pub fn new(cfg: FabricConfig, nodes: usize) -> Fabric {
-        Fabric { cfg, nic_free: vec![0.0; nodes], bis_free: 0.0, bytes_moved: 0.0, transfers: 0 }
+        Fabric {
+            cfg,
+            nic_free: vec![0.0; nodes],
+            bis_free: 0.0,
+            bytes_moved: 0.0,
+            transfers: 0,
+            node_bytes: vec![0.0; nodes],
+        }
     }
 
     /// Schedule a one-sided get of `bytes` from `src_node` to `dst_node`
@@ -66,6 +76,8 @@ impl Fabric {
             // intra-node: memory copy only
             return now + self.cfg.latency + bytes / self.cfg.local_bw;
         }
+        self.node_bytes[src_node] += bytes;
+        self.node_bytes[dst_node] += bytes;
         // serialize on both NICs
         let nic_start = now.max(self.nic_free[src_node]).max(self.nic_free[dst_node]);
         let nic_time = bytes / self.cfg.nic_bw;
@@ -173,6 +185,9 @@ mod tests {
         f.get(0.0, 20.0, 0, 0);
         assert_eq!(f.bytes_moved, 30.0);
         assert_eq!(f.transfers, 2);
+        // per-NIC accounting: the remote transfer crosses both NICs, the
+        // local copy crosses neither
+        assert_eq!(f.node_bytes, vec![10.0, 10.0]);
     }
 
     #[test]

@@ -52,6 +52,8 @@ USAGE: celeste <command> [flags]
            [--threads N] [--out FILE] [--snapshot FILE]
            (--snapshot also writes a serve snapshot for serve-bench)
   photo    --data DIR [--coadd]    run the heuristic baseline pipeline
+           [--snapshot F]  also write the detections as a serve
+                           snapshot (servable via serve-bench)
   serve-bench                      benchmark the sharded catalog server
            [--threads N]   server worker threads        (default 4)
            [--shards K]    Hilbert-range shards         (default 8)
@@ -60,11 +62,21 @@ USAGE: celeste <command> [flags]
                            weights 'cone=6,box=3,brightest=1,xmatch=1'
            [--secs S]      seconds per phase            (default 3)
            [--sources N]   synthetic catalog size       (default 5000)
-           [--snapshot F]  serve a snapshot written by `infer` instead
+           [--snapshot F]  serve a snapshot written by `infer` or
+                           `photo` instead of a synthetic catalog
            [--seed S]
            Runs an open-loop (Poisson) phase at --qps, then closed-loop
            throughput at 1 vs --threads workers; prints accepted/shed
            counts and per-class p50/p99 latency.
+           Distributed tier (simulated time) when --dist-nodes is set:
+           [--dist-nodes N] place shard replicas on N modeled nodes
+           [--replicas R]   copies of each shard range   (default 2)
+           [--routing P]    random | rr | p2c            (default p2c)
+           [--kill-node S]  fault spec 'NODE@T' (kill) or 'NODE@T1:T2'
+                            (kill+revive), comma-separated, sim seconds
+           --qps/--secs then drive a simulated-time open loop through
+           the fabric-attached router; prints per-class p50/p99,
+           per-node load imbalance, bytes moved, failover record.
   experiment NAME [--quick]        regenerate a paper table/figure:
            fig1 fig3 fig4 fig5 fig6 ablations table1 newton-vs-lbfgs all
 ";
@@ -260,6 +272,11 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
     println!("{}", store.summary());
     let gen_cfg = loadgen_config(mix, seed)?;
 
+    // --- distributed tier (simulated time) when --dist-nodes is set ---
+    if cli.flag_usize("dist-nodes", 0) > 0 {
+        return cmd_serve_bench_dist(cli, store, gen_cfg, qps, secs, seed);
+    }
+
     // --- phase 1: open loop (latency + admission control at --qps) ---
     let server = serve::Server::start(
         store.clone(),
@@ -303,6 +320,49 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// The replicated multi-node serving tier, modeled in simulated time:
+/// shard replicas placed by rendezvous hashing, sub-queries riding the
+/// `ga::Fabric` cost model, replica selection per --routing, optional
+/// mid-run node kills per --kill-node.
+fn cmd_serve_bench_dist(
+    cli: &Cli,
+    store: std::sync::Arc<serve::Store>,
+    gen_cfg: serve::LoadGenConfig,
+    qps: f64,
+    secs: f64,
+    seed: u64,
+) -> Result<()> {
+    let nodes = cli.flag_usize("dist-nodes", 4).max(1);
+    let replicas = cli.flag_usize("replicas", 2).max(1);
+    let routing_s = cli.flag_str("routing", "p2c");
+    let Some(routing) = serve::dist::Routing::parse(routing_s) else {
+        bail!("bad --routing {routing_s:?}: want random|rr|p2c");
+    };
+    let mut router = serve::dist::Router::new(
+        std::sync::Arc::clone(&store),
+        nodes,
+        replicas,
+        serve::dist::RouterConfig { routing, seed, ..Default::default() },
+    );
+    if let Some(spec) = cli.flag("kill-node") {
+        let Some(schedule) = serve::dist::FailureSchedule::parse(spec) else {
+            bail!("bad --kill-node {spec:?}: want 'NODE@T' or 'NODE@T1:T2', comma-separated");
+        };
+        if let Some(max) = schedule.max_node() {
+            if max >= nodes {
+                bail!("--kill-node names node {max}, but --dist-nodes is {nodes} (ids 0..{})", nodes - 1);
+            }
+        }
+        router = router.with_schedule(schedule);
+    }
+    println!("{}", router.placement.summary());
+    let mut gen = serve::LoadGen::new(gen_cfg, store.width, store.height);
+    let report = serve::dist::run_sim_open_loop(&mut router, &mut gen, qps, secs);
+    println!("routing {}:", routing.name());
+    println!("{}", report.summary());
+    Ok(())
+}
+
 fn cmd_photo(cli: &Cli) -> Result<()> {
     let data = std::path::PathBuf::from(cli.flag_str("data", "data"));
     let fields = load_fields_dir(&data)?;
@@ -329,6 +389,24 @@ fn cmd_photo(cli: &Cli) -> Result<()> {
         }
     }
     println!("photo found {} detections across {} field-exposures", found.len(), fields.len());
+    if let Some(snap_path) = cli.flag("snapshot") {
+        // the heuristic baseline becomes servable: detections flow
+        // through ServedSource::from_entry into the same snapshot format
+        // `serve-bench --snapshot` already accepts
+        let (mut width, mut height) = (0.0f64, 0.0f64);
+        for f in &fields {
+            width = width.max(f.geom.rect.x0 + f.geom.rect.cols as f64);
+            height = height.max(f.geom.rect.y0 + f.geom.rect.rows as f64);
+        }
+        let snap = serve::snapshot::from_photo(&found, width, height);
+        serve::snapshot::save_sources(
+            std::path::Path::new(snap_path),
+            &snap.sources,
+            snap.width,
+            snap.height,
+        )?;
+        println!("wrote serve snapshot {snap_path} ({} detections)", snap.sources.len());
+    }
     Ok(())
 }
 

@@ -269,6 +269,17 @@ impl Stats {
         self.quantiles(&[q])[0]
     }
 
+    /// Quantile that distinguishes "no data": `None` when the reservoir
+    /// is empty. The plain accessors below keep returning 0.0 in that
+    /// case (never NaN), so report formatting stays total.
+    pub fn try_quantile(&self, q: f64) -> Option<f64> {
+        if self.samples.is_empty() {
+            None
+        } else {
+            Some(self.quantile(q))
+        }
+    }
+
     pub fn p50(&self) -> f64 {
         self.quantile(0.50)
     }
@@ -377,6 +388,33 @@ mod tests {
         t.merge(&s);
         assert!(t.samples.len() <= super::SAMPLE_CAP);
         assert_eq!(t.n, 2 * n);
+    }
+
+    #[test]
+    fn empty_reservoir_quantiles_are_zero_never_nan() {
+        let s = Stats::new();
+        for v in [s.p50(), s.p95(), s.p99(), s.quantile(0.0), s.quantile(1.0)] {
+            assert_eq!(v, 0.0, "empty Stats must report 0.0, got {v}");
+            assert!(!v.is_nan());
+        }
+        assert_eq!(s.try_quantile(0.5), None);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.var(), 0.0);
+    }
+
+    #[test]
+    fn single_sample_quantiles_are_that_sample() {
+        let mut s = Stats::new();
+        s.push(3.25);
+        for v in [s.p50(), s.p95(), s.p99(), s.quantile(0.0), s.quantile(1.0)] {
+            assert_eq!(v, 3.25);
+            assert!(!v.is_nan());
+        }
+        assert_eq!(s.try_quantile(0.99), Some(3.25));
+        assert_eq!(s.n, 1);
+        assert_eq!(s.min, 3.25);
+        assert_eq!(s.max, 3.25);
+        assert_eq!(s.var(), 0.0, "single sample has no spread");
     }
 
     #[test]

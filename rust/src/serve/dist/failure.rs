@@ -1,0 +1,137 @@
+//! Fault injection for the distributed serving tier: kill (and revive)
+//! shard-server nodes at scheduled simulated times.
+//!
+//! The router discovers a dead node the way a real front-end does — by
+//! timing out on it — then reroutes to surviving replicas and records
+//! the failover latency. A revive models the health-checker readmitting
+//! the node.
+
+/// One scheduled liveness transition.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FailureEvent {
+    /// simulated time, seconds
+    pub at: f64,
+    pub node: usize,
+    /// true = revive, false = kill
+    pub up: bool,
+}
+
+/// A time-ordered schedule of kill/revive events, consumed as simulated
+/// time advances.
+#[derive(Clone, Debug, Default)]
+pub struct FailureSchedule {
+    events: Vec<FailureEvent>,
+    cursor: usize,
+}
+
+impl FailureSchedule {
+    pub fn new(mut events: Vec<FailureEvent>) -> FailureSchedule {
+        events.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap_or(std::cmp::Ordering::Equal));
+        FailureSchedule { events, cursor: 0 }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Highest node id the schedule touches — callers validate it
+    /// against their node count so a typo'd `--kill-node 7@1` on a
+    /// 4-node tier errors instead of silently injecting nothing.
+    pub fn max_node(&self) -> Option<usize> {
+        self.events.iter().map(|e| e.node).max()
+    }
+
+    /// Parse a CLI spec: comma-separated `NODE@T` (kill node NODE at
+    /// simulated second T) or `NODE@T1:T2` (kill at T1, revive at T2).
+    /// Examples: `3@0.5`, `0@1.0:2.0,4@1.5`.
+    pub fn parse(spec: &str) -> Option<FailureSchedule> {
+        let mut events = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (node_s, times) = part.split_once('@')?;
+            let node: usize = node_s.trim().parse().ok()?;
+            match times.split_once(':') {
+                Some((t_kill, t_revive)) => {
+                    let kill: f64 = t_kill.trim().parse().ok()?;
+                    let revive: f64 = t_revive.trim().parse().ok()?;
+                    if revive <= kill {
+                        return None;
+                    }
+                    events.push(FailureEvent { at: kill, node, up: false });
+                    events.push(FailureEvent { at: revive, node, up: true });
+                }
+                None => {
+                    let kill: f64 = times.trim().parse().ok()?;
+                    events.push(FailureEvent { at: kill, node, up: false });
+                }
+            }
+        }
+        if events.is_empty() {
+            None
+        } else {
+            Some(FailureSchedule::new(events))
+        }
+    }
+
+    /// Apply every event due at or before `now` to the liveness vector
+    /// (nodes outside its range are ignored). Returns the events that
+    /// fired. `suspected` is the router's stale-knowledge vector: a
+    /// revive clears suspicion so traffic can return.
+    pub fn apply(&mut self, now: f64, alive: &mut [bool], suspected: &mut [bool]) -> usize {
+        let mut fired = 0;
+        while self.cursor < self.events.len() && self.events[self.cursor].at <= now {
+            let ev = self.events[self.cursor];
+            self.cursor += 1;
+            fired += 1;
+            if ev.node < alive.len() {
+                alive[ev.node] = ev.up;
+                if ev.up {
+                    suspected[ev.node] = false;
+                }
+            }
+        }
+        fired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_kill_and_kill_revive_specs() {
+        let s = FailureSchedule::parse("3@0.5").unwrap();
+        assert_eq!(s.events, vec![FailureEvent { at: 0.5, node: 3, up: false }]);
+        let s2 = FailureSchedule::parse("0@1.0:2.0,4@1.5").unwrap();
+        assert_eq!(s2.events.len(), 3);
+        // sorted by time
+        assert_eq!(s2.events[0].at, 1.0);
+        assert_eq!(s2.events[1].at, 1.5);
+        assert_eq!(s2.events[2], FailureEvent { at: 2.0, node: 0, up: true });
+        assert_eq!(s2.max_node(), Some(4));
+        assert_eq!(FailureSchedule::default().max_node(), None);
+        assert!(FailureSchedule::parse("").is_none());
+        assert!(FailureSchedule::parse("x@1").is_none());
+        assert!(FailureSchedule::parse("1@2:1").is_none(), "revive before kill");
+    }
+
+    #[test]
+    fn apply_fires_due_events_in_order() {
+        let mut s = FailureSchedule::parse("1@0.2:0.6").unwrap();
+        let mut alive = vec![true; 3];
+        let mut suspected = vec![false; 3];
+        assert_eq!(s.apply(0.1, &mut alive, &mut suspected), 0);
+        assert!(alive[1]);
+        assert_eq!(s.apply(0.3, &mut alive, &mut suspected), 1);
+        assert!(!alive[1]);
+        suspected[1] = true; // router discovered the death
+        assert_eq!(s.apply(1.0, &mut alive, &mut suspected), 1);
+        assert!(alive[1]);
+        assert!(!suspected[1], "revive must clear suspicion");
+        // schedule exhausted
+        assert_eq!(s.apply(9.0, &mut alive, &mut suspected), 0);
+    }
+}

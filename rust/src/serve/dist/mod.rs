@@ -1,0 +1,33 @@
+//! Distributed serving: the single-host store, placed across simulated
+//! nodes and served through a front-end router.
+//!
+//! PR 1 made the catalog placement-ready — contiguous Hilbert-key
+//! shards with range metadata — and this module turns that into a
+//! multi-node serving story *modeled before it is built*, the same way
+//! `cluster::sim` modeled the paper's inference scaling (§III-F) before
+//! any real interconnect existed:
+//!
+//! * [`placement`] — rendezvous-hashed range-to-node assignment with a
+//!   configurable replication factor (adding a node moves only the
+//!   ranges the new node wins).
+//! * [`remote`] — the `ShardClient` boundary: `LocalShard` for replicas
+//!   colocated with the front-end, `FabricShard` for remote ones whose
+//!   request/response bytes ride the `ga::Fabric` NIC/bisection model.
+//! * [`router`] — scatter-gather planning per query class with
+//!   random / round-robin / power-of-two-choices replica selection,
+//!   plus the simulated open-loop driver and its report.
+//! * [`failure`] — kill/revive schedules; the router times out on dead
+//!   replicas, reroutes to survivors, and records failover latency.
+//!
+//! Entry point: `celeste serve-bench --dist-nodes N --replicas R
+//! --routing {random,rr,p2c} [--kill-node K@T]`.
+
+pub mod failure;
+pub mod placement;
+pub mod remote;
+pub mod router;
+
+pub use failure::{FailureEvent, FailureSchedule};
+pub use placement::Placement;
+pub use remote::{execute_on_shard, CostModel, FabricShard, LocalShard, ShardClient, ShardReply};
+pub use router::{run_sim_open_loop, DistReport, Router, RouterConfig, Routing};

@@ -1,0 +1,170 @@
+//! Range-to-node assignment with replication.
+//!
+//! The store's Hilbert-range shards are placed on simulated nodes by
+//! rendezvous (highest-random-weight) hashing: every (shard, node) pair
+//! gets a deterministic pseudo-random score, and a shard's R replicas
+//! live on the R highest-scoring nodes. Rendezvous placement has the
+//! property a growing serving tier needs: adding a node only pulls in
+//! the ranges for which the new node now scores in the top R — every
+//! replica that moves, moves *to the new node*, and everything else
+//! stays put (no re-keying, no cascading shuffles).
+
+/// splitmix64-style avalanche over the (shard, node) pair.
+fn score(shard: u64, node: u64) -> u64 {
+    let mut x = shard
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ node.wrapping_mul(0xD1B5_4A32_D192_ED03);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    x
+}
+
+/// A replicated assignment of shards to nodes.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub n_nodes: usize,
+    /// replication factor actually used (clamped to `n_nodes`)
+    pub replicas: usize,
+    /// per shard: the replica node ids, rendezvous-score descending
+    pub shard_nodes: Vec<Vec<usize>>,
+}
+
+impl Placement {
+    /// Place `n_shards` ranges onto `n_nodes` nodes with `replicas`
+    /// copies each (clamped to at least 1 and at most `n_nodes`).
+    pub fn rendezvous(n_shards: usize, n_nodes: usize, replicas: usize) -> Placement {
+        let n_nodes = n_nodes.max(1);
+        let replicas = replicas.clamp(1, n_nodes);
+        let shard_nodes = (0..n_shards)
+            .map(|s| {
+                let mut scored: Vec<(u64, usize)> =
+                    (0..n_nodes).map(|n| (score(s as u64, n as u64), n)).collect();
+                // score ties broken by node id so placement is total
+                scored.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+                scored.truncate(replicas);
+                scored.into_iter().map(|(_, n)| n).collect()
+            })
+            .collect();
+        Placement { n_nodes, replicas, shard_nodes }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shard_nodes.len()
+    }
+
+    /// Replica node ids of one shard.
+    pub fn replicas_of(&self, shard: usize) -> &[usize] {
+        &self.shard_nodes[shard]
+    }
+
+    /// Number of shard replicas hosted by each node.
+    pub fn counts_per_node(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_nodes];
+        for nodes in &self.shard_nodes {
+            for &n in nodes {
+                counts[n] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Placement imbalance: max over mean of per-node replica counts
+    /// (1.0 = perfectly even; 0.0 for a degenerate empty placement).
+    pub fn imbalance(&self) -> f64 {
+        let counts = self.counts_per_node();
+        let max = counts.iter().copied().max().unwrap_or(0) as f64;
+        let mean =
+            counts.iter().sum::<usize>() as f64 / counts.len().max(1) as f64;
+        if mean <= 0.0 {
+            0.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// One-line description for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "placement: {} shard(s) x{} replicas over {} node(s) (per-node {:?}, imbalance {:.2})",
+            self.n_shards(),
+            self.replicas,
+            self.n_nodes,
+            self.counts_per_node(),
+            self.imbalance()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replicas_are_distinct_and_clamped() {
+        let p = Placement::rendezvous(32, 5, 3);
+        assert_eq!(p.n_shards(), 32);
+        for s in 0..32 {
+            let nodes = p.replicas_of(s);
+            assert_eq!(nodes.len(), 3);
+            for (i, &a) in nodes.iter().enumerate() {
+                assert!(a < 5);
+                for &b in &nodes[i + 1..] {
+                    assert_ne!(a, b, "duplicate replica node for shard {s}");
+                }
+            }
+        }
+        // more replicas than nodes: clamp to n_nodes
+        let p2 = Placement::rendezvous(8, 2, 5);
+        assert_eq!(p2.replicas, 2);
+        for s in 0..8 {
+            assert_eq!(p2.replicas_of(s).len(), 2);
+        }
+    }
+
+    #[test]
+    fn placement_is_deterministic() {
+        let a = Placement::rendezvous(64, 8, 3);
+        let b = Placement::rendezvous(64, 8, 3);
+        assert_eq!(a.shard_nodes, b.shard_nodes);
+    }
+
+    #[test]
+    fn adding_a_node_only_moves_ranges_to_the_new_node() {
+        // the rendezvous guarantee: growing n -> n+1 nodes, any replica
+        // that appears in the new assignment but not the old one must be
+        // the new node itself
+        let (n_shards, replicas) = (256, 3);
+        for n in [2usize, 4, 8, 15] {
+            let old = Placement::rendezvous(n_shards, n, replicas);
+            let new = Placement::rendezvous(n_shards, n + 1, replicas);
+            let mut moved = 0usize;
+            for s in 0..n_shards {
+                let old_set: Vec<usize> = old.replicas_of(s).to_vec();
+                for &node in new.replicas_of(s) {
+                    if !old_set.contains(&node) {
+                        assert_eq!(node, n, "shard {s} moved to a pre-existing node");
+                        moved += 1;
+                    }
+                }
+            }
+            // and the expected movement is roughly R/(n+1) of all slots,
+            // never a full reshuffle
+            assert!(
+                moved <= n_shards * replicas / 2,
+                "n={n}: {moved} moved slots looks like a reshuffle"
+            );
+        }
+    }
+
+    #[test]
+    fn load_spreads_over_nodes() {
+        let p = Placement::rendezvous(256, 8, 2);
+        let counts = p.counts_per_node();
+        assert_eq!(counts.iter().sum::<usize>(), 256 * 2);
+        assert!(counts.iter().all(|&c| c > 0), "an idle node: {counts:?}");
+        assert!(p.imbalance() < 2.0, "imbalance {}", p.imbalance());
+    }
+}

@@ -1,0 +1,224 @@
+//! Shard clients: per-shard sub-query execution with costs in
+//! simulated time.
+//!
+//! The distributed tier is modeled before it is built, exactly as
+//! `cluster::sim` models inference: sub-queries execute for real (so
+//! results are byte-exact), while their latency is charged to an
+//! explicit cost model — per-request service time on the owning node
+//! (nodes serve serially, so backlog queues in simulated time) plus,
+//! for [`FabricShard`], request/response transfers through the same
+//! [`ga::Fabric`](crate::ga::Fabric) NIC/bisection model the inference
+//! side uses for global-array fetches.
+
+use std::sync::Arc;
+
+use crate::ga::Fabric;
+
+use super::super::query::Query;
+use super::super::store::{Shard, Store};
+
+// The per-shard execution and reply types live in `query` — one copy of
+// the semantics shared by the single-host engine and this tier.
+pub use super::super::query::{execute_on_shard, ShardReply};
+
+/// Simulated-time costs of one shard request.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// fixed service time per sub-query at the shard, seconds
+    pub base_service: f64,
+    /// added service time per result row, seconds
+    pub per_row_service: f64,
+    /// request message size, bytes
+    pub req_bytes: f64,
+    /// response envelope size, bytes
+    pub envelope_bytes: f64,
+    /// response payload per result row, bytes (~one `ServedSource`)
+    pub row_bytes: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            base_service: 40e-6,
+            per_row_service: 150e-9,
+            req_bytes: 128.0,
+            envelope_bytes: 64.0,
+            row_bytes: 96.0,
+        }
+    }
+}
+
+impl CostModel {
+    /// Service time of a reply with `rows` result rows.
+    pub fn service_secs(&self, rows: usize) -> f64 {
+        self.base_service + self.per_row_service * rows as f64
+    }
+
+    /// Response size of a reply with `rows` result rows.
+    pub fn response_bytes(&self, rows: usize) -> f64 {
+        self.envelope_bytes + self.row_bytes * rows as f64
+    }
+}
+
+/// One replica of one shard, addressable by the router. `call` executes
+/// the sub-query and returns the reply plus its simulated arrival time
+/// back at the origin node; `node_free` is the per-node serial-service
+/// availability the replica queues on.
+pub trait ShardClient {
+    /// Node this replica lives on.
+    fn node(&self) -> usize;
+
+    /// Dispatch `q` at simulated time `now` from `origin`; transfer
+    /// costs (if any) are charged to `fabric`.
+    fn call(
+        &self,
+        now: f64,
+        origin: usize,
+        q: &Query,
+        fabric: &mut Fabric,
+        node_free: &mut [f64],
+    ) -> (ShardReply, f64);
+}
+
+/// A replica colocated with the front-end: no network hop, but service
+/// still queues on the owning node.
+pub struct LocalShard {
+    store: Arc<Store>,
+    shard_idx: usize,
+    node: usize,
+    cost: CostModel,
+}
+
+impl LocalShard {
+    pub fn new(store: Arc<Store>, shard_idx: usize, node: usize, cost: CostModel) -> LocalShard {
+        LocalShard { store, shard_idx, node, cost }
+    }
+
+    fn shard(&self) -> &Shard {
+        &self.store.shards[self.shard_idx]
+    }
+}
+
+impl ShardClient for LocalShard {
+    fn node(&self) -> usize {
+        self.node
+    }
+
+    fn call(
+        &self,
+        now: f64,
+        _origin: usize,
+        q: &Query,
+        _fabric: &mut Fabric,
+        node_free: &mut [f64],
+    ) -> (ShardReply, f64) {
+        let reply = execute_on_shard(self.shard(), q);
+        let start = now.max(node_free[self.node]);
+        let done = start + self.cost.service_secs(reply.rows());
+        node_free[self.node] = done;
+        (reply, done)
+    }
+}
+
+/// A replica on a remote node: the request crosses the fabric, queues
+/// on the remote node's serial service, and the response (sized by the
+/// result rows) crosses back — all in `ga::Fabric` simulated time.
+pub struct FabricShard {
+    inner: LocalShard,
+}
+
+impl FabricShard {
+    pub fn new(store: Arc<Store>, shard_idx: usize, node: usize, cost: CostModel) -> FabricShard {
+        FabricShard { inner: LocalShard::new(store, shard_idx, node, cost) }
+    }
+}
+
+impl ShardClient for FabricShard {
+    fn node(&self) -> usize {
+        self.inner.node
+    }
+
+    fn call(
+        &self,
+        now: f64,
+        origin: usize,
+        q: &Query,
+        fabric: &mut Fabric,
+        node_free: &mut [f64],
+    ) -> (ShardReply, f64) {
+        let node = self.inner.node;
+        let cost = &self.inner.cost;
+        let t_req = fabric.get(now, cost.req_bytes, origin, node);
+        let reply = execute_on_shard(self.inner.shard(), q);
+        let start = t_req.max(node_free[node]);
+        let svc_done = start + cost.service_secs(reply.rows());
+        node_free[node] = svc_done;
+        let done = fabric.get(svc_done, cost.response_bytes(reply.rows()), node, origin);
+        (reply, done)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ga::FabricConfig;
+    use crate::serve::query::{execute, QueryResult, SourceFilter};
+    use crate::serve::snapshot;
+
+    fn test_store() -> Arc<Store> {
+        let snap = snapshot::synthetic(600, 11);
+        Arc::new(Store::build(snap.sources, snap.width, snap.height, 4))
+    }
+
+    #[test]
+    fn per_shard_replies_merge_to_the_single_host_answer() {
+        let store = test_store();
+        let q = Query::Cone {
+            center: (store.width * 0.5, store.height * 0.5),
+            radius: 150.0,
+            filter: SourceFilter::GalaxiesOnly,
+        };
+        let mut merged = Vec::new();
+        for sh in &store.shards {
+            match execute_on_shard(sh, &q) {
+                ShardReply::Sources(v) => merged.extend(v),
+                ShardReply::Match(_) => unreachable!(),
+            }
+        }
+        merged.sort_by_key(|s| s.id);
+        assert_eq!(execute(&store, &q), QueryResult::Sources(merged));
+    }
+
+    #[test]
+    fn fabric_shard_is_slower_than_local_and_charges_bytes() {
+        let store = test_store();
+        let cost = CostModel::default();
+        let local = LocalShard::new(Arc::clone(&store), 0, 0, cost.clone());
+        let remote = FabricShard::new(Arc::clone(&store), 0, 1, cost);
+        let q = Query::BrightestN { n: 50, filter: SourceFilter::Any };
+        let mut fabric = Fabric::new(FabricConfig::default(), 2);
+        let mut free = vec![0.0f64; 2];
+        let (rl, tl) = local.call(0.0, 0, &q, &mut fabric, &mut free);
+        assert_eq!(fabric.transfers, 0, "local replica must not touch the fabric");
+        let mut free2 = vec![0.0f64; 2];
+        let (rr, tr) = remote.call(0.0, 0, &q, &mut fabric, &mut free2);
+        assert_eq!(rl, rr, "same shard, same reply");
+        assert!(tr > tl, "remote {tr} must cost more than local {tl}");
+        assert_eq!(fabric.transfers, 2, "request + response");
+        assert!(fabric.bytes_moved > 128.0);
+    }
+
+    #[test]
+    fn node_service_serializes_in_simulated_time() {
+        let store = test_store();
+        let cost = CostModel::default();
+        let a = LocalShard::new(Arc::clone(&store), 0, 0, cost.clone());
+        let b = LocalShard::new(Arc::clone(&store), 1, 0, cost);
+        let q = Query::BrightestN { n: 10, filter: SourceFilter::Any };
+        let mut fabric = Fabric::new(FabricConfig::default(), 1);
+        let mut free = vec![0.0f64; 1];
+        let (_, t1) = a.call(0.0, 0, &q, &mut fabric, &mut free);
+        let (_, t2) = b.call(0.0, 0, &q, &mut fabric, &mut free);
+        assert!(t2 > t1, "same-node requests must queue: {t1} {t2}");
+    }
+}

@@ -1,0 +1,602 @@
+//! The front-end router: scatter-gather query planning over placed
+//! shard replicas, load-balanced replica selection, and failover.
+//!
+//! Per query class the router plans the minimal shard set — cone/box
+//! probes hit only ranges whose bounding boxes intersect, brightest-N
+//! does per-replica top-k then a canonical merge, cross-match probes the
+//! widened acceptance box — and dispatches each sub-query to one replica
+//! chosen by the configured policy:
+//!
+//! * `random`  — uniform over surviving replicas,
+//! * `rr`      — per-shard round-robin,
+//! * `p2c`     — power-of-two-choices on per-replica in-flight counts
+//!               (the classic "two random choices" result: sampling two
+//!               and picking the less loaded collapses queue-length
+//!               variance, which is exactly what the p99 tail is).
+//!
+//! Everything advances *simulated* time: service queues per node, and
+//! remote request/response bytes ride the `ga::Fabric` NIC/bisection
+//! model, so a 64-node serving tier runs on one host.
+
+use std::sync::Arc;
+
+use crate::ga::{Fabric, FabricConfig};
+use crate::metrics::Stats;
+use crate::prng::Rng;
+
+use super::super::loadgen::LoadGen;
+use super::super::query::{
+    merge_replies, Query, QueryResult, N_QUERY_CLASSES, QUERY_CLASSES,
+};
+use super::super::store::Store;
+use super::failure::FailureSchedule;
+use super::placement::Placement;
+use super::remote::{CostModel, FabricShard, LocalShard, ShardClient, ShardReply};
+
+/// Replica-selection policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Routing {
+    Random,
+    RoundRobin,
+    PowerOfTwo,
+}
+
+impl Routing {
+    pub fn parse(s: &str) -> Option<Routing> {
+        match s {
+            "random" => Some(Routing::Random),
+            "rr" | "round-robin" => Some(Routing::RoundRobin),
+            "p2c" | "power-of-two" => Some(Routing::PowerOfTwo),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Routing::Random => "random",
+            Routing::RoundRobin => "rr",
+            Routing::PowerOfTwo => "p2c",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    pub routing: Routing,
+    pub fabric: FabricConfig,
+    pub cost: CostModel,
+    /// time to conclude a replica is dead before retrying elsewhere, s
+    pub timeout_detect: f64,
+    pub seed: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            routing: Routing::PowerOfTwo,
+            fabric: FabricConfig::default(),
+            cost: CostModel::default(),
+            timeout_detect: 2e-3,
+            seed: 42,
+        }
+    }
+}
+
+/// One boxed replica client per (shard, replica) slot.
+type ShardClients = Vec<Vec<Box<dyn ShardClient>>>;
+
+/// The distributed serving front-end (simulated time). Node 0 hosts the
+/// router itself, so replicas placed there are served by [`LocalShard`]
+/// and everything else by [`FabricShard`]. Killing node 0 models the
+/// *shard-server process* on that host dying — the colocated front-end
+/// process survives and reroutes, exactly like killing any other node.
+pub struct Router {
+    store: Arc<Store>,
+    pub placement: Placement,
+    cfg: RouterConfig,
+    /// [shard][replica] — parallel to `placement.shard_nodes`
+    clients: ShardClients,
+    pub fabric: Fabric,
+    rng: Rng,
+    /// per-shard round-robin cursor
+    rr: Vec<usize>,
+    /// per-node serial-service availability, simulated seconds
+    node_free: Vec<f64>,
+    /// per-node completion times of outstanding sub-requests
+    inflight: Vec<Vec<f64>>,
+    /// ground truth liveness (written by the failure schedule)
+    alive: Vec<bool>,
+    /// the router's possibly-stale knowledge of dead nodes
+    suspected: Vec<bool>,
+    schedule: FailureSchedule,
+    origin: usize,
+    // accounting
+    pub served_per_node: Vec<u64>,
+    pub busy_per_node: Vec<f64>,
+    /// extra latency of each failed-over sub-query (n = failover count)
+    pub failover: Stats,
+    /// queries lost because no replica of a needed range survived
+    pub failed: u64,
+}
+
+impl Router {
+    pub fn new(store: Arc<Store>, n_nodes: usize, replicas: usize, cfg: RouterConfig) -> Router {
+        let n_nodes = n_nodes.max(1);
+        let placement = Placement::rendezvous(store.shards.len(), n_nodes, replicas);
+        let origin = 0usize;
+        let clients: ShardClients = placement
+            .shard_nodes
+            .iter()
+            .enumerate()
+            .map(|(s, nodes)| {
+                nodes
+                    .iter()
+                    .map(|&node| -> Box<dyn ShardClient> {
+                        if node == origin {
+                            Box::new(LocalShard::new(
+                                Arc::clone(&store),
+                                s,
+                                node,
+                                cfg.cost.clone(),
+                            ))
+                        } else {
+                            Box::new(FabricShard::new(
+                                Arc::clone(&store),
+                                s,
+                                node,
+                                cfg.cost.clone(),
+                            ))
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let fabric = Fabric::new(cfg.fabric.clone(), n_nodes);
+        let rng = Rng::new(cfg.seed ^ 0xd157);
+        let n_shards = placement.n_shards();
+        Router {
+            store,
+            placement,
+            cfg,
+            clients,
+            fabric,
+            rng,
+            rr: vec![0; n_shards],
+            node_free: vec![0.0; n_nodes],
+            inflight: vec![Vec::new(); n_nodes],
+            alive: vec![true; n_nodes],
+            suspected: vec![false; n_nodes],
+            schedule: FailureSchedule::default(),
+            origin,
+            served_per_node: vec![0; n_nodes],
+            busy_per_node: vec![0.0; n_nodes],
+            failover: Stats::new(),
+            failed: 0,
+        }
+    }
+
+    /// Attach a kill/revive schedule (applied as simulated time passes).
+    pub fn with_schedule(mut self, schedule: FailureSchedule) -> Router {
+        self.schedule = schedule;
+        self
+    }
+
+    pub fn routing(&self) -> Routing {
+        self.cfg.routing
+    }
+
+    /// Shards a query must touch (indices into the store).
+    fn plan(&self, q: &Query) -> Vec<usize> {
+        let shards = &self.store.shards;
+        match q {
+            Query::Cone { center, radius, .. } => {
+                let (bx0, by0) = (center.0 - radius, center.1 - radius);
+                let (bx1, by1) = (center.0 + radius, center.1 + radius);
+                (0..shards.len())
+                    .filter(|&i| shards[i].intersects_box(bx0, by0, bx1, by1))
+                    .collect()
+            }
+            Query::BoxSearch { x0, y0, x1, y1, .. } => (0..shards.len())
+                .filter(|&i| shards[i].intersects_box(*x0, *y0, *x1, *y1))
+                .collect(),
+            Query::BrightestN { .. } => {
+                (0..shards.len()).filter(|&i| !shards[i].sources.is_empty()).collect()
+            }
+            Query::CrossMatch { pos, radius } => {
+                let probe = super::super::query::max_match_radius(*radius);
+                let (bx0, by0) = (pos.0 - probe, pos.1 - probe);
+                let (bx1, by1) = (pos.0 + probe, pos.1 + probe);
+                (0..shards.len())
+                    .filter(|&i| shards[i].intersects_box(bx0, by0, bx1, by1))
+                    .collect()
+            }
+        }
+    }
+
+    /// Pick a replica index for `shard` among unsuspected replicas.
+    fn pick_replica(&mut self, shard: usize) -> Option<usize> {
+        let nodes = &self.placement.shard_nodes[shard];
+        let cand: Vec<usize> =
+            (0..nodes.len()).filter(|&r| !self.suspected[nodes[r]]).collect();
+        match cand.len() {
+            0 => None,
+            1 => Some(cand[0]),
+            k => match self.cfg.routing {
+                Routing::Random => Some(cand[self.rng.below(k as u64) as usize]),
+                Routing::RoundRobin => {
+                    let r = cand[self.rr[shard] % k];
+                    self.rr[shard] = self.rr[shard].wrapping_add(1);
+                    Some(r)
+                }
+                Routing::PowerOfTwo => {
+                    let i = self.rng.below(k as u64) as usize;
+                    let mut j = self.rng.below(k as u64 - 1) as usize;
+                    if j >= i {
+                        j += 1;
+                    }
+                    let (a, b) = (cand[i], cand[j]);
+                    let (na, nb) = (nodes[a], nodes[b]);
+                    let (la, lb) = (self.inflight[na].len(), self.inflight[nb].len());
+                    let pick_b = lb < la
+                        || (lb == la && self.node_free[nb] < self.node_free[na]);
+                    Some(if pick_b { b } else { a })
+                }
+            },
+        }
+    }
+
+    /// Execute one query arriving at simulated time `now`. Returns the
+    /// merged result (`None` if some needed range lost all replicas) and
+    /// the simulated completion time at the front-end.
+    pub fn execute(&mut self, now: f64, q: &Query) -> (Option<QueryResult>, f64) {
+        self.schedule.apply(now, &mut self.alive, &mut self.suspected);
+        for fl in &mut self.inflight {
+            fl.retain(|&t| t > now);
+        }
+        let planned = self.plan(q);
+        let mut replies: Vec<ShardReply> = Vec::with_capacity(planned.len());
+        let mut done = now;
+        for shard in planned {
+            // scatter: dispatch this range's sub-query, failing over past
+            // replicas the router discovers to be dead
+            let mut t_send = now;
+            let dispatched = loop {
+                let Some(r) = self.pick_replica(shard) else { break None };
+                // the client is authoritative for its own node id
+                let node = self.clients[shard][r].node();
+                if !self.alive[node] {
+                    // timeout-based discovery: pay the detection delay,
+                    // remember the death, retry on a surviving replica
+                    self.suspected[node] = true;
+                    t_send += self.cfg.timeout_detect;
+                    continue;
+                }
+                let (reply, t) = self.clients[shard][r].call(
+                    t_send,
+                    self.origin,
+                    q,
+                    &mut self.fabric,
+                    &mut self.node_free,
+                );
+                self.inflight[node].push(t);
+                self.served_per_node[node] += 1;
+                self.busy_per_node[node] += self.cfg.cost.service_secs(reply.rows());
+                break Some((reply, t));
+            };
+            match dispatched {
+                Some((reply, t)) => {
+                    if t_send > now {
+                        self.failover.push(t_send - now);
+                    }
+                    done = done.max(t);
+                    replies.push(reply);
+                }
+                None => {
+                    self.failed += 1;
+                    return (None, t_send.max(done));
+                }
+            }
+        }
+        // the same merge the single-host engine is built from: the
+        // distributed answer is byte-identical by construction
+        (Some(merge_replies(q, replies)), done)
+    }
+}
+
+/// Outcome of one simulated open-loop run against a [`Router`].
+#[derive(Clone, Debug, Default)]
+pub struct DistReport {
+    pub offered: u64,
+    pub completed: u64,
+    pub failed: u64,
+    /// length of the arrival window (offered rate = offered / this)
+    pub arrival_secs: f64,
+    /// simulated horizon: last arrival or completion, whichever is later
+    pub sim_secs: f64,
+    /// front-end latency (arrival -> merged result) per query class
+    pub latency: [Stats; N_QUERY_CLASSES],
+    pub served_per_node: Vec<u64>,
+    pub busy_per_node: Vec<f64>,
+    /// fabric traffic (remote request/response bytes only)
+    pub bytes_moved: f64,
+    pub transfers: u64,
+    pub bytes_per_node: Vec<f64>,
+    pub failover: Stats,
+}
+
+impl DistReport {
+    pub fn latency_all(&self) -> Stats {
+        let mut all = Stats::new();
+        for s in &self.latency {
+            all.merge(s);
+        }
+        all
+    }
+
+    /// Per-node load imbalance: max over mean of sub-requests served
+    /// (1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        let max = self.served_per_node.iter().copied().max().unwrap_or(0) as f64;
+        let mean = self.served_per_node.iter().sum::<u64>() as f64
+            / self.served_per_node.len().max(1) as f64;
+        if mean <= 0.0 {
+            0.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Multi-line human summary: per-class quantiles, per-node load,
+    /// fabric traffic, failover record.
+    pub fn summary(&self) -> String {
+        let all = self.latency_all();
+        let aq = all.quantiles(&[0.50, 0.99]);
+        let mut out = format!(
+            "dist: {} completed / {} offered ({} failed) at {:.0} qps over {:.2}s (drained by {:.2} sim-s)\n  all      p50={:.3}ms p99={:.3}ms",
+            self.completed,
+            self.offered,
+            self.failed,
+            self.offered as f64 / self.arrival_secs.max(1e-9),
+            self.arrival_secs,
+            self.sim_secs,
+            aq[0] * 1e3,
+            aq[1] * 1e3,
+        );
+        for c in QUERY_CLASSES {
+            let s = &self.latency[c.index()];
+            if s.n == 0 {
+                continue;
+            }
+            let q = s.quantiles(&[0.50, 0.99]);
+            out.push_str(&format!(
+                "\n  {:<8} n={} p50={:.3}ms p99={:.3}ms",
+                c.name(),
+                s.n,
+                q[0] * 1e3,
+                q[1] * 1e3
+            ));
+        }
+        out.push_str(&format!(
+            "\n  per-node sub-requests {:?} (imbalance {:.2})",
+            self.served_per_node,
+            self.imbalance()
+        ));
+        out.push_str(&format!(
+            "\n  fabric: {:.2} MB in {} transfers",
+            self.bytes_moved / 1e6,
+            self.transfers
+        ));
+        if self.failover.n > 0 {
+            out.push_str(&format!(
+                "\n  failover: {} event(s), mean {:.3}ms, max {:.3}ms",
+                self.failover.n,
+                self.failover.mean() * 1e3,
+                self.failover.max * 1e3
+            ));
+        }
+        out
+    }
+}
+
+/// Drive the router open-loop in simulated time: Poisson arrivals at
+/// `qps` for `secs` simulated seconds (arrivals never wait on service —
+/// a slow tier shows up as latency, exactly like the wall-clock driver).
+///
+/// Requires a freshly constructed router: the report snapshots the
+/// router's cumulative counters and the simulated clock restarts at 0,
+/// so reuse would both corrupt the report and queue arrivals behind
+/// phantom backlog.
+pub fn run_sim_open_loop(
+    router: &mut Router,
+    gen: &mut LoadGen,
+    qps: f64,
+    secs: f64,
+) -> DistReport {
+    assert!(
+        router.served_per_node.iter().all(|&c| c == 0) && router.failed == 0,
+        "run_sim_open_loop requires a freshly constructed Router"
+    );
+    let mut report = DistReport {
+        served_per_node: vec![0; router.served_per_node.len()],
+        busy_per_node: vec![0.0; router.busy_per_node.len()],
+        ..Default::default()
+    };
+    let mut now = 0.0f64;
+    let mut horizon = 0.0f64;
+    while now < secs {
+        let q = gen.next_query();
+        report.offered += 1;
+        let class = q.class();
+        let (res, done) = router.execute(now, &q);
+        horizon = horizon.max(done).max(now);
+        match res {
+            Some(_) => {
+                report.completed += 1;
+                report.latency[class.index()].push(done - now);
+            }
+            None => report.failed += 1,
+        }
+        now += gen.next_interarrival(qps);
+    }
+    report.arrival_secs = now.min(secs);
+    report.sim_secs = horizon.max(report.arrival_secs);
+    report.served_per_node.copy_from_slice(&router.served_per_node);
+    report.busy_per_node.copy_from_slice(&router.busy_per_node);
+    report.bytes_moved = router.fabric.bytes_moved;
+    report.transfers = router.fabric.transfers;
+    report.bytes_per_node = router.fabric.node_bytes.clone();
+    report.failover = router.failover.clone();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::loadgen::LoadGenConfig;
+    use crate::serve::query::{execute, SourceFilter};
+    use crate::serve::snapshot;
+
+    fn test_store(n: usize, shards: usize, seed: u64) -> Arc<Store> {
+        let snap = snapshot::synthetic(n, seed);
+        Arc::new(Store::build(snap.sources, snap.width, snap.height, shards))
+    }
+
+    #[test]
+    fn router_matches_store_across_policies_and_placements() {
+        let store = test_store(1500, 10, 5);
+        let (w, h) = (store.width, store.height);
+        for (nodes, replicas, routing) in [
+            (1usize, 1usize, Routing::Random),
+            (4, 2, Routing::RoundRobin),
+            (6, 3, Routing::PowerOfTwo),
+            (3, 9, Routing::PowerOfTwo), // replicas clamp to 3
+        ] {
+            let mut router = Router::new(
+                Arc::clone(&store),
+                nodes,
+                replicas,
+                RouterConfig { routing, ..Default::default() },
+            );
+            let mut rng = Rng::new(17);
+            let mut now = 0.0;
+            for i in 0..60 {
+                let q = match i % 4 {
+                    0 => Query::Cone {
+                        center: (rng.uniform_in(0.0, w), rng.uniform_in(0.0, h)),
+                        radius: rng.uniform_in(2.0, 200.0),
+                        filter: SourceFilter::GalaxiesOnly,
+                    },
+                    1 => Query::BoxSearch {
+                        x0: rng.uniform_in(0.0, w * 0.5),
+                        y0: rng.uniform_in(0.0, h * 0.5),
+                        x1: rng.uniform_in(w * 0.5, w),
+                        y1: rng.uniform_in(h * 0.5, h),
+                        filter: SourceFilter::Any,
+                    },
+                    2 => Query::BrightestN {
+                        n: rng.below(80) as usize,
+                        filter: SourceFilter::StarsOnly,
+                    },
+                    _ => Query::CrossMatch {
+                        pos: (rng.uniform_in(0.0, w), rng.uniform_in(0.0, h)),
+                        radius: rng.uniform_in(0.5, 6.0),
+                    },
+                };
+                let (res, done) = router.execute(now, &q);
+                assert!(done >= now);
+                assert_eq!(
+                    res.expect("no failures scheduled"),
+                    execute(&store, &q),
+                    "{routing:?} nodes={nodes} replicas={replicas} query {i}: {q:?}"
+                );
+                now += 1e-4;
+            }
+            assert_eq!(router.failed, 0);
+            assert_eq!(router.failover.n, 0);
+        }
+    }
+
+    #[test]
+    fn remote_queries_move_bytes_local_single_node_does_not() {
+        let store = test_store(800, 8, 9);
+        let q = Query::BrightestN { n: 20, filter: SourceFilter::Any };
+        // one node: everything is colocated with the front-end
+        let mut local = Router::new(Arc::clone(&store), 1, 1, RouterConfig::default());
+        let (r, _) = local.execute(0.0, &q);
+        assert!(r.is_some());
+        assert_eq!(local.fabric.bytes_moved, 0.0);
+        // many nodes: most replicas are remote
+        let mut dist = Router::new(Arc::clone(&store), 8, 2, RouterConfig::default());
+        let (r2, _) = dist.execute(0.0, &q);
+        assert_eq!(r2, r);
+        assert!(dist.fabric.bytes_moved > 0.0);
+        assert!(dist.fabric.transfers > 0);
+    }
+
+    #[test]
+    fn failover_reroutes_and_records_latency() {
+        let store = test_store(1000, 12, 7);
+        let cfg = RouterConfig { routing: Routing::Random, ..Default::default() };
+        let mut router = Router::new(Arc::clone(&store), 6, 3, cfg);
+        // kill a shard-0 replica host that is not the front-end's node,
+        // so the drill models a plain remote-node death
+        let victim = *router
+            .placement
+            .replicas_of(0)
+            .iter()
+            .find(|&&n| n != 0)
+            .expect("3 distinct replicas include a non-origin node");
+        router = router.with_schedule(
+            FailureSchedule::parse(&format!("{victim}@0.0")).unwrap(),
+        );
+        let q = Query::BrightestN { n: 5, filter: SourceFilter::Any };
+        let want = execute(&store, &q);
+        let mut failovers_seen = 0;
+        let mut now = 1e-6; // after the kill
+        for _ in 0..200 {
+            let (res, _) = router.execute(now, &q);
+            assert_eq!(res.expect("two replicas survive"), want);
+            failovers_seen = router.failover.n;
+            now += 1e-4;
+        }
+        assert_eq!(router.failed, 0);
+        assert!(failovers_seen >= 1, "the dead replica was never discovered");
+        assert!(router.failover.mean() > 0.0);
+        // discovery happens once per dead node, not once per query
+        assert!(router.failover.n <= 6, "{} failovers", router.failover.n);
+        assert_eq!(router.served_per_node[victim], 0, "dead node served traffic");
+    }
+
+    #[test]
+    fn all_replicas_dead_fails_queries_and_revive_heals() {
+        let store = test_store(500, 4, 3);
+        let mut router = Router::new(Arc::clone(&store), 2, 2, RouterConfig::default())
+            .with_schedule(FailureSchedule::parse("0@0.0:1.0,1@0.0:1.0").unwrap());
+        let q = Query::BrightestN { n: 3, filter: SourceFilter::Any };
+        let (res, _) = router.execute(0.5, &q);
+        assert!(res.is_none(), "no surviving replica anywhere");
+        assert_eq!(router.failed, 1);
+        // after both revive, service resumes and answers are exact
+        let (res2, _) = router.execute(1.5, &q);
+        assert_eq!(res2.expect("revived"), execute(&store, &q));
+    }
+
+    #[test]
+    fn sim_open_loop_reports_latency_and_node_loads() {
+        let store = test_store(2000, 8, 13);
+        let mut router =
+            Router::new(Arc::clone(&store), 4, 2, RouterConfig::default());
+        let cfg = LoadGenConfig::scenario("uniform", 5).unwrap();
+        let mut gen = LoadGen::new(cfg, store.width, store.height);
+        let rep = run_sim_open_loop(&mut router, &mut gen, 2000.0, 0.5);
+        assert!(rep.offered > 500, "offered {}", rep.offered);
+        assert_eq!(rep.completed, rep.offered);
+        assert_eq!(rep.failed, 0);
+        assert!(rep.latency_all().n == rep.completed);
+        assert!(rep.latency_all().p50() > 0.0);
+        assert!(rep.sim_secs > 0.4);
+        assert!(rep.served_per_node.iter().sum::<u64>() >= rep.completed);
+        assert!(rep.bytes_moved > 0.0);
+        assert!(rep.imbalance() >= 1.0);
+    }
+}

@@ -227,6 +227,15 @@ impl LoadGen {
         }
     }
 
+    /// One exponential inter-arrival gap (seconds) at offered rate
+    /// `qps` — shared by the wall-clock open-loop driver and the
+    /// distributed tier's simulated-time driver, so both offer the
+    /// same Poisson arrival process.
+    pub fn next_interarrival(&mut self, qps: f64) -> f64 {
+        let u = self.rng.uniform().max(1e-12);
+        -u.ln() / qps.max(1e-3)
+    }
+
     /// Draw the next query from the configured mix.
     pub fn next_query(&mut self) -> Query {
         let u = self.rng.uniform();
@@ -295,7 +304,6 @@ impl OpenLoopReport {
 
 /// Drive the server open-loop: Poisson arrivals at `qps` for `secs`.
 pub fn run_open_loop(server: &Server, gen: &mut LoadGen, qps: f64, secs: f64) -> OpenLoopReport {
-    let qps = qps.max(1e-3);
     let start = Instant::now();
     let mut next_at = 0.0f64; // seconds since start, absolute schedule
     let mut report = OpenLoopReport::default();
@@ -316,8 +324,7 @@ pub fn run_open_loop(server: &Server, gen: &mut LoadGen, qps: f64, secs: f64) ->
         }
         // exponential inter-arrival on the absolute clock: late arrivals
         // burst to catch up, as a true open-loop source does
-        let u = gen.rng.uniform().max(1e-12);
-        next_at += -u.ln() / qps;
+        next_at += gen.next_interarrival(qps);
     }
     report.wall_secs = start.elapsed().as_secs_f64();
     report
@@ -440,6 +447,25 @@ mod tests {
         let max = *counts.iter().max().unwrap();
         let min = *counts.iter().min().unwrap();
         assert!(max > 3 * min.max(1), "zipf skew missing: {counts:?}");
+    }
+
+    #[test]
+    fn interarrival_gaps_are_positive_with_the_right_mean() {
+        let mut g = LoadGen::new(LoadGenConfig::default(), 100.0, 100.0);
+        let qps = 500.0;
+        let n = 20_000;
+        let mut total = 0.0;
+        for _ in 0..n {
+            let gap = g.next_interarrival(qps);
+            assert!(gap > 0.0);
+            total += gap;
+        }
+        let mean = total / n as f64;
+        assert!(
+            (mean - 1.0 / qps).abs() < 0.2 / qps,
+            "mean gap {mean} vs expected {}",
+            1.0 / qps
+        );
     }
 
     #[test]

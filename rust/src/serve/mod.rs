@@ -17,9 +17,13 @@
 //!   with configurable query mix and Zipf-skewed sky hotspots.
 //! * [`snapshot`] — jsonlite snapshot format bridging `infer` output to
 //!   serving across process boundaries.
+//! * [`dist`] — the multi-node tier: replicated shard placement, fabric-
+//!   backed remote shard clients, a load-balanced scatter-gather router,
+//!   and failure injection — all in simulated time.
 //!
 //! Entry points: `celeste serve-bench` (CLI) and `benches/bench_serve`.
 
+pub mod dist;
 pub mod loadgen;
 pub mod query;
 pub mod server;
@@ -31,8 +35,8 @@ pub use loadgen::{
     QueryMix,
 };
 pub use query::{
-    cross_match_catalog, execute, execute_scan, MatchResult, Query, QueryClass, QueryResult,
-    SourceFilter, N_QUERY_CLASSES,
+    cross_match_catalog, execute, execute_on_shard, execute_scan, merge_replies, MatchResult,
+    Query, QueryClass, QueryResult, ShardReply, SourceFilter, N_QUERY_CLASSES,
 };
 pub use server::{Server, ServerConfig, ServerReport};
 pub use snapshot::Snapshot;

@@ -7,7 +7,7 @@
 //! for sets, flux-descending for brightest-N) so merging is
 //! deterministic.
 
-use super::store::{ServedSource, Store};
+use super::store::{ServedSource, Shard, Store};
 
 /// Star/galaxy predicate applied to set-returning queries.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -183,8 +183,9 @@ fn brightness_order(a: &ServedSource, b: &ServedSource) -> std::cmp::Ordering {
 }
 
 /// The widest acceptance radius any source can have under
-/// uncertainty-aware matching (used to bound the index probe).
-fn max_match_radius(radius: f64) -> f64 {
+/// uncertainty-aware matching (used to bound the index probe; the
+/// distributed router uses it to plan which shards a probe touches).
+pub(crate) fn max_match_radius(radius: f64) -> f64 {
     radius * 2.0
 }
 
@@ -205,69 +206,73 @@ fn better_match(a: Option<MatchResult>, b: Option<MatchResult>) -> Option<MatchR
     }
 }
 
-/// Execute a query against the sharded store: route to intersecting
-/// shards, answer each from its grid index, merge canonically.
-pub fn execute(store: &Store, q: &Query) -> QueryResult {
+/// One shard's partial answer to a query — what a remote replica ships
+/// back over the wire, and what [`merge_replies`] combines into the
+/// final result.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ShardReply {
+    Sources(Vec<ServedSource>),
+    Match(Option<MatchResult>),
+}
+
+impl ShardReply {
+    /// Result rows carried by the reply (drives the distributed tier's
+    /// response-size and service-time cost model).
+    pub fn rows(&self) -> usize {
+        match self {
+            ShardReply::Sources(v) => v.len(),
+            ShardReply::Match(m) => m.is_some() as usize,
+        }
+    }
+}
+
+/// Execute the per-shard part of a query against one shard's grid
+/// index: cone/box prune on the shard bbox and filter shard-side (only
+/// matching rows travel), brightest-N returns the shard's top-k,
+/// cross-match returns the shard's best candidate.
+pub fn execute_on_shard(shard: &Shard, q: &Query) -> ShardReply {
     match q {
         Query::Cone { center, radius, filter } => {
-            let mut out = Vec::new();
             let (bx0, by0) = (center.0 - radius, center.1 - radius);
             let (bx1, by1) = (center.0 + radius, center.1 + radius);
-            for sh in &store.shards {
-                if !sh.intersects_box(bx0, by0, bx1, by1) {
-                    continue;
-                }
+            let mut out = Vec::new();
+            if shard.intersects_box(bx0, by0, bx1, by1) {
                 let mut idx = Vec::new();
-                sh.cone(*center, *radius, &mut idx);
-                out.extend(idx.into_iter().map(|i| sh.sources[i].clone()));
+                shard.cone(*center, *radius, &mut idx);
+                out.extend(idx.into_iter().map(|i| shard.sources[i].clone()));
+                out.retain(|s| filter.accepts(s));
             }
-            out.retain(|s| filter.accepts(s));
-            out.sort_by_key(|s| s.id);
-            QueryResult::Sources(out)
+            ShardReply::Sources(out)
         }
         Query::BoxSearch { x0, y0, x1, y1, filter } => {
             let mut out = Vec::new();
-            for sh in &store.shards {
-                if !sh.intersects_box(*x0, *y0, *x1, *y1) {
-                    continue;
-                }
+            if shard.intersects_box(*x0, *y0, *x1, *y1) {
                 let mut idx = Vec::new();
-                sh.box_search(*x0, *y0, *x1, *y1, &mut idx);
-                out.extend(idx.into_iter().map(|i| sh.sources[i].clone()));
+                shard.box_search(*x0, *y0, *x1, *y1, &mut idx);
+                out.extend(idx.into_iter().map(|i| shard.sources[i].clone()));
+                out.retain(|s| filter.accepts(s));
             }
-            out.retain(|s| filter.accepts(s));
-            out.sort_by_key(|s| s.id);
-            QueryResult::Sources(out)
+            ShardReply::Sources(out)
         }
         Query::BrightestN { n, filter } => {
-            // per-shard top-n (select on indices, clone only winners),
-            // then a global re-select over the union
-            let mut cand: Vec<ServedSource> = Vec::new();
-            for sh in &store.shards {
-                let mut idx: Vec<usize> = (0..sh.sources.len())
-                    .filter(|&i| filter.accepts(&sh.sources[i]))
-                    .collect();
-                idx.sort_by(|&a, &b| brightness_order(&sh.sources[a], &sh.sources[b]));
-                idx.truncate(*n);
-                cand.extend(idx.into_iter().map(|i| sh.sources[i].clone()));
-            }
-            cand.sort_by(brightness_order);
-            cand.truncate(*n);
-            QueryResult::Sources(cand)
+            // top-n on indices, clone only the winners
+            let mut idx: Vec<usize> = (0..shard.sources.len())
+                .filter(|&i| filter.accepts(&shard.sources[i]))
+                .collect();
+            idx.sort_by(|&a, &b| brightness_order(&shard.sources[a], &shard.sources[b]));
+            idx.truncate(*n);
+            ShardReply::Sources(idx.into_iter().map(|i| shard.sources[i].clone()).collect())
         }
         Query::CrossMatch { pos, radius } => {
             let probe = max_match_radius(*radius);
             let (bx0, by0) = (pos.0 - probe, pos.1 - probe);
             let (bx1, by1) = (pos.0 + probe, pos.1 + probe);
             let mut best: Option<MatchResult> = None;
-            for sh in &store.shards {
-                if !sh.intersects_box(bx0, by0, bx1, by1) {
-                    continue;
-                }
+            if shard.intersects_box(bx0, by0, bx1, by1) {
                 let mut idx = Vec::new();
-                sh.cone(*pos, probe, &mut idx);
+                shard.cone(*pos, probe, &mut idx);
                 for i in idx {
-                    let s = &sh.sources[i];
+                    let s = &shard.sources[i];
                     let d = ((s.pos.0 - pos.0).powi(2) + (s.pos.1 - pos.1).powi(2)).sqrt();
                     if d <= match_radius(*radius, s) {
                         best = better_match(
@@ -277,9 +282,59 @@ pub fn execute(store: &Store, q: &Query) -> QueryResult {
                     }
                 }
             }
+            ShardReply::Match(best)
+        }
+    }
+}
+
+/// Merge per-shard replies into the final result in canonical order
+/// (id-ascending for sets, flux-descending + global re-truncate for
+/// brightest-N, best-candidate fold for cross-match).
+pub fn merge_replies(q: &Query, replies: Vec<ShardReply>) -> QueryResult {
+    match q {
+        Query::Cone { .. } | Query::BoxSearch { .. } => {
+            let mut out = Vec::new();
+            for r in replies {
+                match r {
+                    ShardReply::Sources(v) => out.extend(v),
+                    ShardReply::Match(_) => unreachable!("spatial query got match reply"),
+                }
+            }
+            out.sort_by_key(|s| s.id);
+            QueryResult::Sources(out)
+        }
+        Query::BrightestN { n, .. } => {
+            let mut cand = Vec::new();
+            for r in replies {
+                match r {
+                    ShardReply::Sources(v) => cand.extend(v),
+                    ShardReply::Match(_) => unreachable!("brightest query got match reply"),
+                }
+            }
+            cand.sort_by(brightness_order);
+            cand.truncate(*n);
+            QueryResult::Sources(cand)
+        }
+        Query::CrossMatch { .. } => {
+            let mut best = None;
+            for r in replies {
+                match r {
+                    ShardReply::Match(m) => best = better_match(best, m),
+                    ShardReply::Sources(_) => unreachable!("cross-match got sources reply"),
+                }
+            }
             QueryResult::Match(best)
         }
     }
+}
+
+/// Execute a query against the sharded store. Built as the literal
+/// merge of per-shard partials, so the single-host answer and the
+/// distributed router's scatter-gather answer are byte-identical *by
+/// construction* — there is exactly one copy of the per-shard and
+/// merge semantics.
+pub fn execute(store: &Store, q: &Query) -> QueryResult {
+    merge_replies(q, store.shards.iter().map(|sh| execute_on_shard(sh, q)).collect())
 }
 
 /// Brute-force reference executor over a flat slice (id order assumed

@@ -126,6 +126,40 @@ pub fn load(path: &Path) -> Result<Snapshot> {
     from_json(&text)
 }
 
+/// Serve the heuristic baseline: photo-pipeline detections become
+/// catalog entries and then served rows through
+/// [`ServedSource::from_entry`]. Photo measures no posterior, so the
+/// star/galaxy label is hard (`p_gal` in {0, 1}) and `flux_logsd` is 0
+/// — the tightest cross-match acceptance radius, exactly the gap §II
+/// attributes to heuristic pipelines.
+pub fn from_photo(
+    detections: &[crate::photo::PhotoSource],
+    width: f64,
+    height: f64,
+) -> Snapshot {
+    let sources = detections
+        .iter()
+        .enumerate()
+        .map(|(id, d)| {
+            let entry = crate::catalog::CatalogEntry {
+                id,
+                pos: d.pos,
+                p_gal: if d.is_galaxy { 1.0 } else { 0.0 },
+                flux_r: d.flux_r,
+                colors: d.colors,
+                shape: crate::model::GalaxyShape {
+                    p_dev: d.p_dev,
+                    axis_ratio: d.axis_ratio,
+                    angle: d.angle,
+                    scale: d.scale,
+                },
+            };
+            ServedSource::from_entry(&entry, 0.0)
+        })
+        .collect();
+    Snapshot { width, height, sources }
+}
+
 /// Synthesize a serveable catalog without compiled artifacts: truth sky
 /// -> noisy "previous survey" estimates -> served rows (with synthetic
 /// posterior SDs). The one ingestion path shared by the CLI, benches,
@@ -196,6 +230,51 @@ mod tests {
         let store2 = snap.into_store(3);
         assert_eq!(store2.all_sources(), want);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn photo_detections_become_a_servable_snapshot() {
+        use crate::model::layout as L;
+        use crate::photo::PhotoSource;
+        let dets = vec![
+            PhotoSource {
+                pos: (10.0, 20.0),
+                fluxes: [100.0; L::N_BANDS],
+                flux_r: 100.0,
+                colors: [0.1, 0.2, 0.3, 0.4],
+                is_galaxy: false,
+                p_dev: 0.0,
+                axis_ratio: 1.0,
+                angle: 0.0,
+                scale: 0.0,
+                significance: 25.0,
+            },
+            PhotoSource {
+                pos: (40.0, 50.0),
+                fluxes: [900.0; L::N_BANDS],
+                flux_r: 900.0,
+                colors: [0.4, 0.3, 0.2, 0.1],
+                is_galaxy: true,
+                p_dev: 0.5,
+                axis_ratio: 0.6,
+                angle: 1.0,
+                scale: 2.5,
+                significance: 80.0,
+            },
+        ];
+        let snap = from_photo(&dets, 64.0, 64.0);
+        assert_eq!(snap.sources.len(), 2);
+        assert_eq!(snap.sources[0].id, 0);
+        assert!(!snap.sources[0].is_galaxy(), "hard star label must serve as star");
+        assert!(snap.sources[1].is_galaxy(), "hard galaxy label must serve as galaxy");
+        assert_eq!(snap.sources[1].flux_r, 900.0);
+        assert_eq!(snap.sources[0].flux_logsd, 0.0, "photo has no posterior SD");
+        // round-trips through the snapshot codec and store like any catalog
+        let text = to_json(&snap.sources, snap.width, snap.height);
+        let back = from_json(&text).unwrap();
+        assert_eq!(back.sources, snap.sources);
+        let store = back.into_store(2);
+        assert_eq!(store.len(), 2);
     }
 
     #[test]

@@ -9,9 +9,12 @@ use std::sync::Arc;
 use celeste::catalog::{hilbert_d2xy, hilbert_sky_key, hilbert_xy2d, noisy_catalog};
 use celeste::prng::Rng;
 use celeste::quickcheck::forall_with;
+use celeste::serve::dist::{
+    run_sim_open_loop, FailureSchedule, Router, RouterConfig, Routing,
+};
 use celeste::serve::{
-    self, cross_match_catalog, execute, execute_scan, Query, QueryResult, Server, ServerConfig,
-    ServedSource, SourceFilter, Store,
+    self, cross_match_catalog, execute, execute_scan, LoadGen, LoadGenConfig, Query, QueryResult,
+    Server, ServerConfig, ServedSource, SourceFilter, Store,
 };
 use celeste::sky::{generate, SkyConfig};
 
@@ -218,6 +221,144 @@ fn hilbert_sky_key_respects_extent() {
             k < (1u64 << 32)
         },
     );
+}
+
+/// Every query class through the distributed router, over any
+/// placement / replication / routing policy, must equal the single-host
+/// `Store` answer byte-for-byte (the distributed tier is a deployment
+/// choice, never a semantics change).
+#[test]
+fn dist_router_matches_single_host_store_over_any_placement() {
+    let snap = synthetic_snapshot(2500, 41);
+    let (w, h) = (snap.width, snap.height);
+    let store = Arc::new(Store::build(snap.sources, w, h, 10));
+    let filters = [SourceFilter::Any, SourceFilter::StarsOnly, SourceFilter::GalaxiesOnly];
+    for (nodes, replicas, routing) in [
+        (1usize, 1usize, Routing::Random),
+        (2, 1, Routing::RoundRobin),
+        (4, 2, Routing::PowerOfTwo),
+        (6, 3, Routing::Random),
+        (8, 3, Routing::RoundRobin),
+        (5, 9, Routing::PowerOfTwo), // replication clamps to 5
+    ] {
+        let mut router = Router::new(
+            Arc::clone(&store),
+            nodes,
+            replicas,
+            RouterConfig { routing, seed: 1000 + nodes as u64, ..Default::default() },
+        );
+        let mut rng = Rng::new(nodes as u64 * 31 + replicas as u64);
+        let mut now = 0.0f64;
+        for i in 0..48usize {
+            let filter = filters[i % 3];
+            let q = match i % 4 {
+                0 => Query::Cone {
+                    center: (rng.uniform_in(-40.0, w + 40.0), rng.uniform_in(-40.0, h + 40.0)),
+                    radius: rng.uniform_in(1.0, 260.0),
+                    filter,
+                },
+                1 => {
+                    let ax = rng.uniform_in(0.0, w);
+                    let ay = rng.uniform_in(0.0, h);
+                    let bx = rng.uniform_in(0.0, w);
+                    let by = rng.uniform_in(0.0, h);
+                    Query::BoxSearch {
+                        x0: ax.min(bx),
+                        y0: ay.min(by),
+                        x1: ax.max(bx),
+                        y1: ay.max(by),
+                        filter,
+                    }
+                }
+                2 => Query::BrightestN { n: rng.below(150) as usize, filter },
+                _ => Query::CrossMatch {
+                    pos: (rng.uniform_in(0.0, w), rng.uniform_in(0.0, h)),
+                    radius: rng.uniform_in(0.3, 9.0),
+                },
+            };
+            let (res, done) = router.execute(now, &q);
+            assert!(done >= now);
+            assert_eq!(
+                res.expect("no failures scheduled"),
+                execute(&store, &q),
+                "nodes={nodes} replicas={replicas} {routing:?} query {i}: {q:?}"
+            );
+            now += 5e-5;
+        }
+        assert_eq!(router.failed, 0);
+    }
+}
+
+/// Acceptance (a): power-of-two-choices routing beats random on p99
+/// under the hotspot mix at equal offered load. Same catalog, same
+/// placement, same deterministic query stream — only the replica
+/// selection policy differs.
+#[test]
+fn p2c_beats_random_p99_under_hotspot_load() {
+    fn run(routing: Routing) -> (f64, u64) {
+        let snap = synthetic_snapshot(3000, 99);
+        let (w, h) = (snap.width, snap.height);
+        let store = Arc::new(Store::build(snap.sources, w, h, 12));
+        let mut router = Router::new(
+            store,
+            6,
+            3,
+            RouterConfig { routing, seed: 4242, ..Default::default() },
+        );
+        let cfg = LoadGenConfig::scenario("hotspot", 4242).unwrap();
+        let mut gen = LoadGen::new(cfg, w, h);
+        let rep = run_sim_open_loop(&mut router, &mut gen, 50_000.0, 0.3);
+        assert_eq!(rep.failed, 0);
+        (rep.latency_all().p99(), rep.completed)
+    }
+    let (random_p99, n_random) = run(Routing::Random);
+    let (p2c_p99, n_p2c) = run(Routing::PowerOfTwo);
+    assert_eq!(n_random, n_p2c, "equal offered load means equal query streams");
+    assert!(n_random > 5_000, "load generator produced too few queries: {n_random}");
+    assert!(
+        p2c_p99 < random_p99,
+        "p2c p99 {:.3}ms must beat random p99 {:.3}ms at equal load",
+        p2c_p99 * 1e3,
+        random_p99 * 1e3
+    );
+}
+
+/// Acceptance (b): killing one replica of a 3-replica range mid-run
+/// completes with zero failed queries, records failover latency, and
+/// keeps answers byte-identical to the single-host store.
+#[test]
+fn killed_replica_of_three_fails_over_with_zero_failed_queries() {
+    let snap = synthetic_snapshot(2000, 55);
+    let (w, h) = (snap.width, snap.height);
+    let store = Arc::new(Store::build(snap.sources, w, h, 12));
+    let mut router = Router::new(
+        Arc::clone(&store),
+        6,
+        3,
+        RouterConfig { routing: Routing::PowerOfTwo, seed: 7, ..Default::default() },
+    );
+    // kill a node guaranteed to host replicas (and not the front-end's
+    // own node), a third of the way in
+    let victim = *router
+        .placement
+        .replicas_of(0)
+        .iter()
+        .find(|&&n| n != 0)
+        .expect("3 distinct replicas include a non-origin node");
+    router = router
+        .with_schedule(FailureSchedule::parse(&format!("{victim}@0.1")).unwrap());
+    let cfg = LoadGenConfig::scenario("hotspot", 7).unwrap();
+    let mut gen = LoadGen::new(cfg, w, h);
+    let rep = run_sim_open_loop(&mut router, &mut gen, 10_000.0, 0.3);
+    assert_eq!(rep.failed, 0, "3-way replication must absorb one node kill");
+    assert_eq!(rep.completed, rep.offered);
+    assert!(rep.failover.n >= 1, "the dead replica was never discovered");
+    assert!(rep.failover.mean() > 0.0 && !rep.failover.mean().is_nan());
+    assert!(rep.failover.max >= rep.failover.mean());
+    // parity survives the kill
+    let q = Query::BrightestN { n: 25, filter: SourceFilter::Any };
+    let (res, _) = router.execute(1.0, &q);
+    assert_eq!(res.expect("survivors answer"), execute(&store, &q));
 }
 
 #[test]
