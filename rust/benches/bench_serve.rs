@@ -1,21 +1,22 @@
 //! Serving-path benchmarks: per-query latency of the sharded engine vs
 //! the brute-force scan, snapshot codec throughput, closed-loop server
 //! throughput at 1 vs 4 worker threads, and the distributed tier —
-//! routing-policy tail latency under the hotspot mix plus a failover
-//! drill. Results are also written to `BENCH_serve.json` so the perf
-//! trajectory accumulates across PRs.
+//! routing-policy tail latency under the hotspot mix, hedged-request
+//! p999 vs p2c-alone, router-tier cache hit rate vs fabric bytes
+//! saved, and a failover drill — all driven through the unified
+//! `QueryEngine` stack. Results are also written to `BENCH_serve.json`
+//! so the perf trajectory accumulates across PRs.
 
 use std::sync::Arc;
 
 use celeste::benchkit::{bench, black_box, BenchResult};
 use celeste::experiments::obj_pub;
 use celeste::jsonlite::{self, Value};
-use celeste::serve::dist::{
-    run_sim_open_loop, DistReport, FailureSchedule, Router, RouterConfig, Routing,
-};
+use celeste::serve::dist::{DistReport, FailureSchedule, Router, RouterConfig, Routing};
 use celeste::serve::{
-    self, run_closed_loop, LoadGen, LoadGenConfig, Query, Server, ServerConfig, SourceFilter,
-    Store,
+    self, drive_closed_loop, drive_open_loop, Cached, DriveReport, Hedged, LoadGen,
+    LoadGenConfig, Query, QueryEngine, RouterEngine, Server, ServerConfig, ServerEngine,
+    SimClock, SourceFilter, Store,
 };
 
 const DIST_NODES: usize = 6;
@@ -32,10 +33,14 @@ fn dist_router(store: &Arc<Store>, routing: Routing) -> Router {
     )
 }
 
-fn dist_run(mut router: Router, store: &Arc<Store>) -> DistReport {
+/// Drive any engine open-loop on the hotspot mix in simulated time —
+/// same seed, so every comparison below sees the identical query
+/// stream at the identical offered load.
+fn dist_drive<E: QueryEngine>(engine: &E, store: &Arc<Store>) -> DriveReport {
     let cfg = LoadGenConfig::scenario("hotspot", 4242).unwrap();
     let mut gen = LoadGen::new(cfg, store.width, store.height);
-    run_sim_open_loop(&mut router, &mut gen, DIST_QPS, DIST_SECS)
+    let mut clock = SimClock::new();
+    drive_open_loop(engine, &mut clock, &mut gen, DIST_QPS, DIST_SECS)
 }
 
 fn main() {
@@ -84,19 +89,20 @@ fn main() {
         black_box(serve::snapshot::from_json(&text).unwrap());
     }));
 
-    // --- closed-loop server throughput: 1 vs 4 workers ---
-    // cache off so the comparison measures execution scaling
+    // --- closed-loop server throughput: 1 vs 4 workers (bare engine:
+    //     no cache layer, so this measures execution scaling) ---
     let mut closed: Vec<(usize, f64)> = Vec::new();
     for threads in [1usize, 4] {
-        let server = Server::start(
+        let server = Arc::new(Server::start(
             Arc::clone(&store),
-            ServerConfig { threads, cache_entries: 0, ..Default::default() },
-        );
+            ServerConfig { threads, ..Default::default() },
+        ));
+        let engine = ServerEngine::new(Arc::clone(&server));
         let cfg = LoadGenConfig::scenario("uniform", 7).unwrap();
         let mut gen = LoadGen::new(cfg, w, h);
-        let cl = run_closed_loop(&server, &mut gen, 8, 1.5);
-        let report = server.shutdown();
-        let all = report.latency_all();
+        let cl = drive_closed_loop(&engine, &mut gen, 8, 1.5);
+        let _ = server.shutdown();
+        let all = cl.latency_all();
         println!(
             "closed loop {threads} worker(s): {:>9.0} qps  p50={:.3}ms p99={:.3}ms",
             cl.qps(),
@@ -119,7 +125,9 @@ fn main() {
     );
     let mut dist_reports: Vec<(Routing, DistReport)> = Vec::new();
     for routing in [Routing::Random, Routing::RoundRobin, Routing::PowerOfTwo] {
-        let rep = dist_run(dist_router(&store, routing), &store);
+        let engine = RouterEngine::new(dist_router(&store, routing));
+        let drive = dist_drive(&engine, &store);
+        let rep = engine.dist_report(&drive);
         let q = rep.latency_all().quantiles(&[0.50, 0.99]);
         println!(
             "  {:<6} p50={:.3}ms p99={:.3}ms imbalance={:.2} fabric={:.2}MB failed={}",
@@ -143,6 +151,56 @@ fn main() {
         random_p99 * 1e3
     );
 
+    // --- hedged requests: clip the p999 tail on top of p2c. Budgets
+    //     are taken from the unhedged run's own latency quantiles (how
+    //     a real deployment tunes a hedge), best budget wins ---
+    let base_engine = RouterEngine::new(dist_router(&store, Routing::PowerOfTwo));
+    let base_drive = dist_drive(&base_engine, &store);
+    let base_p999 = base_drive.latency_all().quantile(0.999);
+    let budgets = base_drive.latency_all().quantiles(&[0.90, 0.95, 0.99]);
+    let mut best: Option<(f64, f64, u64, u64)> = None;
+    for &b in &budgets {
+        if b <= 0.0 {
+            continue;
+        }
+        let engine = Hedged::new(RouterEngine::new(dist_router(&store, Routing::PowerOfTwo)), b);
+        let drive = dist_drive(&engine, &store);
+        assert_eq!(drive.offered, base_drive.offered, "equal offered load");
+        let p999 = drive.latency_all().quantile(0.999);
+        let better = match best {
+            None => true,
+            Some((_, prev, _, _)) => p999 < prev,
+        };
+        if better {
+            best = Some((b, p999, drive.hedges, drive.hedge_wins));
+        }
+    }
+    let (hedge_budget, hedged_p999, hedges_fired, hedge_wins) =
+        best.unwrap_or((0.0, base_p999, 0, 0));
+    let hedged_improves = hedged_p999 < base_p999;
+    println!(
+        "hedged p2c (budget {:.3}ms): p999 {:.3}ms vs p2c-alone {:.3}ms ({}; {} hedges, {} wins)",
+        hedge_budget * 1e3,
+        hedged_p999 * 1e3,
+        base_p999 * 1e3,
+        if hedged_improves { "improves" } else { "no win" },
+        hedges_fired,
+        hedge_wins
+    );
+
+    // --- router-tier result cache: hit rate vs fabric bytes saved
+    //     under the hotspot mix (hot queries repeat exactly) ---
+    let cache_tier = RouterEngine::new(dist_router(&store, Routing::PowerOfTwo));
+    let cached = Cached::new(cache_tier.clone(), 512);
+    let cdrive = dist_drive(&cached, &store);
+    let crep = cache_tier.dist_report(&cdrive);
+    println!(
+        "router cache (512/class): {:.1}% hit rate, {:.2}MB fabric saved vs {:.2}MB moved",
+        cached.hit_rate() * 100.0,
+        cached.bytes_saved() / 1e6,
+        crep.bytes_moved / 1e6
+    );
+
     // --- failover drill: kill one replica of a 3-replica range mid-run
     //     (a non-origin host, read from the router's own placement) ---
     let router = dist_router(&store, Routing::PowerOfTwo);
@@ -155,7 +213,9 @@ fn main() {
     let kill_spec = format!("{victim}@{}", DIST_SECS * 0.5);
     let router =
         router.with_schedule(FailureSchedule::parse(&kill_spec).expect("valid kill spec"));
-    let rep_kill = dist_run(router, &store);
+    let kengine = RouterEngine::new(router);
+    let kdrive = dist_drive(&kengine, &store);
+    let rep_kill = kengine.dist_report(&kdrive);
     let fo_max_ms =
         if rep_kill.failover.n == 0 { 0.0 } else { rep_kill.failover.max * 1e3 };
     println!(
@@ -172,7 +232,7 @@ fn main() {
         .map(|r| (r.name.as_str(), Value::Num(r.ns_per_iter)))
         .collect();
     let json = obj_pub(vec![
-        ("schema", Value::Str("celeste-bench-serve-v1".to_string())),
+        ("schema", Value::Str("celeste-bench-serve-v2".to_string())),
         ("single_query_ns", obj_pub(single_fields)),
         (
             "closed_loop",
@@ -208,6 +268,26 @@ fn main() {
                     "bytes_moved_mb",
                     Value::Num(dist_reports[2].1.bytes_moved / 1e6),
                 ),
+            ]),
+        ),
+        (
+            "hedged",
+            obj_pub(vec![
+                ("budget_ms", Value::Num(hedge_budget * 1e3)),
+                ("p2c_p999_ms", Value::Num(base_p999 * 1e3)),
+                ("hedged_p999_ms", Value::Num(hedged_p999 * 1e3)),
+                ("improves_p999", Value::Bool(hedged_improves)),
+                ("hedges_fired", Value::Num(hedges_fired as f64)),
+                ("hedge_wins", Value::Num(hedge_wins as f64)),
+            ]),
+        ),
+        (
+            "router_cache",
+            obj_pub(vec![
+                ("entries_per_class", Value::Num(512.0)),
+                ("hit_rate", Value::Num(cached.hit_rate())),
+                ("bytes_saved_mb", Value::Num(cached.bytes_saved() / 1e6)),
+                ("bytes_moved_mb", Value::Num(crep.bytes_moved / 1e6)),
             ]),
         ),
         (

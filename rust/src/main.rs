@@ -65,10 +65,16 @@ USAGE: celeste <command> [flags]
            [--snapshot F]  serve a snapshot written by `infer` or
                            `photo` instead of a synthetic catalog
            [--seed S]
+           Engine middleware layers (echoed before the run):
+           [--cache N]     LRU entries per query class  (default 512, 0=off;
+                           hits need synchronous completions: dist tier)
+           [--hedge-ms B]  replica hedge budget, ms     (dist tier, default off)
+           [--queue-depth D] admission bound, single-host (default 1024)
            Runs an open-loop (Poisson) phase at --qps, then closed-loop
            throughput at 1 vs --threads workers; prints accepted/shed
            counts and per-class p50/p99 latency.
-           Distributed tier (simulated time) when --dist-nodes is set:
+           Distributed tier (simulated time) when --dist-nodes is set
+           (contradicts --threads: exactly one of the two):
            [--dist-nodes N] place shard replicas on N modeled nodes
            [--replicas R]   copies of each shard range   (default 2)
            [--routing P]    random | rr | p2c            (default p2c)
@@ -76,7 +82,8 @@ USAGE: celeste <command> [flags]
                             (kill+revive), comma-separated, sim seconds
            --qps/--secs then drive a simulated-time open loop through
            the fabric-attached router; prints per-class p50/p99,
-           per-node load imbalance, bytes moved, failover record.
+           per-node load imbalance, bytes moved, failover record,
+           router-cache hit rate, and hedge counts.
   experiment NAME [--quick]        regenerate a paper table/figure:
            fig1 fig3 fig4 fig5 fig6 ablations table1 newton-vs-lbfgs all
 ";
@@ -255,6 +262,30 @@ fn loadgen_config(mix: &str, seed: u64) -> Result<serve::LoadGenConfig> {
 }
 
 fn cmd_serve_bench(cli: &Cli) -> Result<()> {
+    // --threads sizes the single-host worker pool; --dist-nodes replaces
+    // that pool with the simulated multi-node tier. Naming both is a
+    // contradiction we refuse rather than guess about (--dist-nodes 0
+    // keeps its historical meaning: distributed tier off).
+    let dist = cli.flag_usize("dist-nodes", 0) > 0;
+    if dist && cli.flag("threads").is_some() {
+        bail!(
+            "--threads and --dist-nodes contradict: --threads sizes the single-host worker \
+             pool, --dist-nodes replaces it with the simulated multi-node tier. Pass exactly \
+             one of them (plain serve-bench = single-host)."
+        );
+    }
+    if !dist {
+        for key in ["replicas", "routing", "kill-node", "hedge-ms"] {
+            if cli.flag(key).is_some() {
+                bail!("--{key} only applies to the distributed tier; add --dist-nodes N");
+            }
+        }
+    } else if cli.flag("queue-depth").is_some() {
+        bail!(
+            "--queue-depth only applies to the single-host tier (the simulated tier models \
+             backlog as latency, not sheds); drop it or drop --dist-nodes"
+        );
+    }
     let threads = cli.flag_usize("threads", 4).max(1);
     let shards = cli.flag_usize("shards", 8);
     let qps = cli.flag_parse("qps", 2000.0f64);
@@ -262,6 +293,11 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
     let mix = cli.flag_str("mix", "uniform");
     let seed = cli.flag_u64("seed", 42);
     let n_sources = cli.flag_usize("sources", 5000);
+    let spec = serve::LayerSpec {
+        admit_depth: cli.flag_usize("queue-depth", 1024),
+        cache_entries: cli.flag_usize("cache", 512),
+        hedge_budget: cli.flag_parse("hedge-ms", 0.0f64).max(0.0) * 1e-3,
+    };
 
     let snap = match cli.flag("snapshot") {
         Some(path) => serve::snapshot::load(std::path::Path::new(path))?,
@@ -273,41 +309,63 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
     let gen_cfg = loadgen_config(mix, seed)?;
 
     // --- distributed tier (simulated time) when --dist-nodes is set ---
-    if cli.flag_usize("dist-nodes", 0) > 0 {
-        return cmd_serve_bench_dist(cli, store, gen_cfg, qps, secs, seed);
+    if dist {
+        return cmd_serve_bench_dist(cli, store, gen_cfg, &spec, qps, secs, seed);
     }
 
-    // --- phase 1: open loop (latency + admission control at --qps) ---
-    let server = serve::Server::start(
+    // --- phase 1: open loop (latency + admission control at --qps).
+    //     Admission is a middleware layer now; the server's own queue
+    //     bound is parked at infinity so the layer is the one shed
+    //     point, probing the real queue depth through the engine API.
+    //     Note: fire-and-forget submissions queue into the worker pool,
+    //     so their results cannot fill the Cached layer — open-loop
+    //     cache hits only appear on the simulated tier, where
+    //     completions are synchronous ---
+    let server = std::sync::Arc::new(serve::Server::start(
         store.clone(),
-        serve::ServerConfig { threads, ..Default::default() },
+        serve::ServerConfig { threads, queue_depth: usize::MAX },
+    ));
+    let engine = serve::layered(
+        Box::new(serve::ServerEngine::new(std::sync::Arc::clone(&server))),
+        &spec,
     );
+    println!("engine: {}", engine.describe());
+    if spec.cache_entries > 0 {
+        println!(
+            "note: open-loop submissions are fire-and-forget, so the cache layer cannot \
+             fill from them; hit-rate measurement lives on the simulated tier (--dist-nodes)"
+        );
+    }
     let mut gen = serve::LoadGen::new(gen_cfg.clone(), width, height);
-    let ol = serve::run_open_loop(&server, &mut gen, qps, secs);
+    let mut clock = serve::WallClock::start();
+    let ol = serve::drive_open_loop(&engine, &mut clock, &mut gen, qps, secs);
     let report = server.shutdown();
     println!(
         "open loop ({mix}): offered {:.0} qps for {:.1}s",
         ol.offered_qps(),
-        ol.wall_secs
+        ol.arrival_secs
     );
+    println!("{}", ol.summary());
     println!("{}", report.summary());
 
-    // --- phase 2: closed-loop peak throughput, 1 vs --threads workers ---
+    // --- phase 2: closed-loop peak throughput, 1 vs --threads workers
+    //     (bare tier: no cache layer, so the comparison measures
+    //     execution scaling, not memoization) ---
     let clients = threads * 2;
     let mut worker_counts = vec![1];
     if threads > 1 {
         worker_counts.push(threads);
     }
     for &t in &worker_counts {
-        let server = serve::Server::start(
+        let server = std::sync::Arc::new(serve::Server::start(
             store.clone(),
-            // cache off: measure raw execution scaling, not memoization
-            serve::ServerConfig { threads: t, cache_entries: 0, ..Default::default() },
-        );
+            serve::ServerConfig { threads: t, ..Default::default() },
+        ));
+        let engine = serve::ServerEngine::new(std::sync::Arc::clone(&server));
         let mut gen = serve::LoadGen::new(gen_cfg.clone(), width, height);
-        let cl = serve::run_closed_loop(&server, &mut gen, clients, secs);
-        let report = server.shutdown();
-        let all = report.latency_all();
+        let cl = serve::drive_closed_loop(&engine, &mut gen, clients, secs);
+        let _ = server.shutdown();
+        let all = cl.latency_all();
         println!(
             "closed loop {t} worker(s), {clients} clients: {:.0} qps (completed {}, shed {}, p50={:.3}ms p99={:.3}ms)",
             cl.qps(),
@@ -323,11 +381,13 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
 /// The replicated multi-node serving tier, modeled in simulated time:
 /// shard replicas placed by rendezvous hashing, sub-queries riding the
 /// `ga::Fabric` cost model, replica selection per --routing, optional
-/// mid-run node kills per --kill-node.
+/// mid-run node kills per --kill-node — behind the same layered engine
+/// stack as the single-host tier (router caching and hedging included).
 fn cmd_serve_bench_dist(
     cli: &Cli,
     store: std::sync::Arc<serve::Store>,
     gen_cfg: serve::LoadGenConfig,
+    spec: &serve::LayerSpec,
     qps: f64,
     secs: f64,
     seed: u64,
@@ -344,9 +404,9 @@ fn cmd_serve_bench_dist(
         replicas,
         serve::dist::RouterConfig { routing, seed, ..Default::default() },
     );
-    if let Some(spec) = cli.flag("kill-node") {
-        let Some(schedule) = serve::dist::FailureSchedule::parse(spec) else {
-            bail!("bad --kill-node {spec:?}: want 'NODE@T' or 'NODE@T1:T2', comma-separated");
+    if let Some(kill_spec) = cli.flag("kill-node") {
+        let Some(schedule) = serve::dist::FailureSchedule::parse(kill_spec) else {
+            bail!("bad --kill-node {kill_spec:?}: want 'NODE@T' or 'NODE@T1:T2', comma-separated");
         };
         if let Some(max) = schedule.max_node() {
             if max >= nodes {
@@ -356,10 +416,35 @@ fn cmd_serve_bench_dist(
         router = router.with_schedule(schedule);
     }
     println!("{}", router.placement.summary());
+    let rengine = serve::RouterEngine::new(router);
+    // the sim tier models backlog as latency; an admission layer on top
+    // would just re-shed what the queue model absorbs, so the dist
+    // stack is cache + hedge over the router
+    let dist_spec = serve::LayerSpec { admit_depth: 0, ..spec.clone() };
+    let engine = serve::layered(Box::new(rengine.clone()), &dist_spec);
+    println!("engine: {}", engine.describe());
     let mut gen = serve::LoadGen::new(gen_cfg, store.width, store.height);
-    let report = serve::dist::run_sim_open_loop(&mut router, &mut gen, qps, secs);
+    let mut clock = serve::SimClock::new();
+    let drive = serve::drive_open_loop(&engine, &mut clock, &mut gen, qps, secs);
+    let report = rengine.dist_report(&drive);
     println!("routing {}:", routing.name());
     println!("{}", report.summary());
+    if dist_spec.cache_entries > 0 {
+        let hits = serve::metric(&engine, "cache_hits").unwrap_or(0.0);
+        let misses = serve::metric(&engine, "cache_misses").unwrap_or(0.0);
+        let saved = serve::metric(&engine, "cache_bytes_saved").unwrap_or(0.0);
+        let rate = if hits + misses > 0.0 { hits / (hits + misses) } else { 0.0 };
+        println!(
+            "router cache: {:.1}% hit rate ({:.0} hits), {:.2} MB fabric bytes saved (vs {:.2} MB moved)",
+            rate * 100.0,
+            hits,
+            saved / 1e6,
+            report.bytes_moved / 1e6
+        );
+    }
+    if drive.hedges > 0 {
+        println!("hedges: {} fired, {} won", drive.hedges, drive.hedge_wins);
+    }
     Ok(())
 }
 

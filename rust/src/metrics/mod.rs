@@ -220,6 +220,19 @@ impl Stats {
         self.var().sqrt()
     }
 
+    /// Merge any number of distributions into one (the shared
+    /// "all-classes" fold used by every serving report).
+    pub fn merge_all<'a, I>(parts: I) -> Stats
+    where
+        I: IntoIterator<Item = &'a Stats>,
+    {
+        let mut all = Stats::new();
+        for s in parts {
+            all.merge(s);
+        }
+        all
+    }
+
     pub fn merge(&mut self, o: &Stats) {
         let (n_self, n_o) = (self.n, o.n);
         self.n += o.n;
@@ -415,6 +428,26 @@ mod tests {
         assert_eq!(s.min, 3.25);
         assert_eq!(s.max, 3.25);
         assert_eq!(s.var(), 0.0, "single sample has no spread");
+    }
+
+    #[test]
+    fn merge_all_folds_every_part() {
+        let mut a = Stats::new();
+        let mut b = Stats::new();
+        for x in 1..=10 {
+            a.push(x as f64);
+        }
+        for x in 11..=20 {
+            b.push(x as f64);
+        }
+        let all = Stats::merge_all([&a, &b]);
+        assert_eq!(all.n, 20);
+        assert_eq!(all.min, 1.0);
+        assert_eq!(all.max, 20.0);
+        assert!((all.mean() - 10.5).abs() < 1e-12);
+        let empty = Stats::merge_all(std::iter::empty::<&Stats>());
+        assert_eq!(empty.n, 0);
+        assert_eq!(empty.p50(), 0.0);
     }
 
     #[test]

@@ -14,10 +14,15 @@
 //!   colocated with the front-end, `FabricShard` for remote ones whose
 //!   request/response bytes ride the `ga::Fabric` NIC/bisection model.
 //! * [`router`] — scatter-gather planning per query class with
-//!   random / round-robin / power-of-two-choices replica selection,
-//!   plus the simulated open-loop driver and its report.
+//!   random / round-robin / power-of-two-choices replica selection and
+//!   per-request replica hedging.
 //! * [`failure`] — kill/revive schedules; the router times out on dead
 //!   replicas, reroutes to survivors, and records failover latency.
+//!
+//! The tier is served through the engine API: wrap a [`Router`] in
+//! [`crate::serve::engine::RouterEngine`], stack middleware on it, and
+//! drive it with [`crate::serve::engine::drive_open_loop`] on a
+//! simulated clock.
 //!
 //! Entry point: `celeste serve-bench --dist-nodes N --replicas R
 //! --routing {random,rr,p2c} [--kill-node K@T]`.
@@ -30,4 +35,4 @@ pub mod router;
 pub use failure::{FailureEvent, FailureSchedule};
 pub use placement::Placement;
 pub use remote::{execute_on_shard, CostModel, FabricShard, LocalShard, ShardClient, ShardReply};
-pub use router::{run_sim_open_loop, DistReport, Router, RouterConfig, Routing};
+pub use router::{DistReport, Router, RouterConfig, Routing};

@@ -63,8 +63,9 @@ impl CostModel {
 /// One replica of one shard, addressable by the router. `call` executes
 /// the sub-query and returns the reply plus its simulated arrival time
 /// back at the origin node; `node_free` is the per-node serial-service
-/// availability the replica queues on.
-pub trait ShardClient {
+/// availability the replica queues on. `Send` so a router full of boxed
+/// clients can sit behind the engine API's shared-state wrappers.
+pub trait ShardClient: Send {
     /// Node this replica lives on.
     fn node(&self) -> usize;
 

@@ -14,6 +14,13 @@
 //!               and picking the less loaded collapses queue-length
 //!               variance, which is exactly what the p99 tail is).
 //!
+//! On top of the balanced choice the router honors a per-request
+//! *hedge budget* ([`Router::execute_with`], stamped by the engine
+//! API's `Hedged` layer): when a replica's reply would land more than
+//! the budget past its dispatch, the same sub-query is speculatively
+//! issued to the best alternate replica and the earlier reply wins —
+//! extra replica load and fabric bytes traded for a shorter p999 tail.
+//!
 //! Everything advances *simulated* time: service queues per node, and
 //! remote request/response bytes ride the `ga::Fabric` NIC/bisection
 //! model, so a 64-node serving tier runs on one host.
@@ -23,8 +30,8 @@ use std::sync::Arc;
 use crate::ga::{Fabric, FabricConfig};
 use crate::metrics::Stats;
 use crate::prng::Rng;
+use crate::serve::engine::drive::DriveReport;
 
-use super::super::loadgen::LoadGen;
 use super::super::query::{
     merge_replies, Query, QueryResult, N_QUERY_CLASSES, QUERY_CLASSES,
 };
@@ -117,6 +124,13 @@ pub struct Router {
     pub failover: Stats,
     /// queries lost because no replica of a needed range survived
     pub failed: u64,
+    /// speculative second sub-queries issued past a hedge budget
+    pub hedges: u64,
+    /// hedges whose reply beat the primary replica's
+    pub hedge_wins: u64,
+    /// queries executed over this router's lifetime ([`Router::report`]
+    /// uses it to reject reports over a reused router)
+    pub queries: u64,
 }
 
 impl Router {
@@ -172,6 +186,9 @@ impl Router {
             busy_per_node: vec![0.0; n_nodes],
             failover: Stats::new(),
             failed: 0,
+            hedges: 0,
+            hedge_wins: 0,
+            queries: 0,
         }
     }
 
@@ -183,6 +200,11 @@ impl Router {
 
     pub fn routing(&self) -> Routing {
         self.cfg.routing
+    }
+
+    /// Simulated node count (including the front-end's node 0).
+    pub fn n_nodes(&self) -> usize {
+        self.node_free.len()
     }
 
     /// Shards a query must touch (indices into the store).
@@ -245,10 +267,105 @@ impl Router {
         }
     }
 
+    /// Best alternate replica for a hedge: the unsuspected replica (not
+    /// on `exclude_node`) with the fewest in-flight sub-requests, ties
+    /// by earliest availability. Deliberately rng-free so hedging never
+    /// perturbs the router's rng stream — random/rr primary choices
+    /// replay exactly; p2c primaries can still drift because hedge
+    /// dispatches feed the in-flight counts p2c reads.
+    fn pick_hedge_replica(&self, shard: usize, exclude_node: usize) -> Option<usize> {
+        let nodes = &self.placement.shard_nodes[shard];
+        let mut best: Option<usize> = None;
+        for (r, &n) in nodes.iter().enumerate() {
+            if n == exclude_node || self.suspected[n] {
+                continue;
+            }
+            best = match best {
+                None => Some(r),
+                Some(b) => {
+                    let nb = nodes[b];
+                    let better = self.inflight[n].len() < self.inflight[nb].len()
+                        || (self.inflight[n].len() == self.inflight[nb].len()
+                            && self.node_free[n] < self.node_free[nb]);
+                    if better {
+                        Some(r)
+                    } else {
+                        Some(b)
+                    }
+                }
+            };
+        }
+        best
+    }
+
+    /// Speculatively re-issue `shard`'s sub-query to an alternate
+    /// replica at `t_hedge` (the moment the budget expired). Both
+    /// replicas hold the same range, so the replies are identical; the
+    /// router keeps whichever lands first. Returns the observed reply
+    /// time: `min(t_primary, hedge completion)`.
+    fn hedge(
+        &mut self,
+        shard: usize,
+        primary_node: usize,
+        t_hedge: f64,
+        q: &Query,
+        t_primary: f64,
+        rows: usize,
+    ) -> f64 {
+        let mut t_send = t_hedge;
+        loop {
+            let Some(r2) = self.pick_hedge_replica(shard, primary_node) else {
+                return t_primary;
+            };
+            let node2 = self.clients[shard][r2].node();
+            if !self.alive[node2] {
+                // the hedge times out instead of replying: pay the
+                // detection delay, remember the death, and retry on the
+                // next-best alternate (each pass suspects one more dead
+                // node, so this terminates)
+                self.suspected[node2] = true;
+                t_send += self.cfg.timeout_detect;
+                continue;
+            }
+            let (reply2, t2) = self.clients[shard][r2].call(
+                t_send,
+                self.origin,
+                q,
+                &mut self.fabric,
+                &mut self.node_free,
+            );
+            debug_assert_eq!(reply2.rows(), rows, "replicas of one shard must agree");
+            self.inflight[node2].push(t2);
+            self.served_per_node[node2] += 1;
+            self.busy_per_node[node2] += self.cfg.cost.service_secs(reply2.rows());
+            self.hedges += 1;
+            return if t2 < t_primary {
+                self.hedge_wins += 1;
+                t2
+            } else {
+                t_primary
+            };
+        }
+    }
+
     /// Execute one query arriving at simulated time `now`. Returns the
     /// merged result (`None` if some needed range lost all replicas) and
     /// the simulated completion time at the front-end.
     pub fn execute(&mut self, now: f64, q: &Query) -> (Option<QueryResult>, f64) {
+        self.execute_with(now, q, None)
+    }
+
+    /// [`Router::execute`] with an optional per-request hedge budget in
+    /// seconds: sub-queries whose primary reply would land more than
+    /// the budget past dispatch are speculatively re-issued to an
+    /// alternate replica (the engine API's `Hedged` layer stamps this).
+    pub fn execute_with(
+        &mut self,
+        now: f64,
+        q: &Query,
+        hedge: Option<f64>,
+    ) -> (Option<QueryResult>, f64) {
+        self.queries += 1;
         self.schedule.apply(now, &mut self.alive, &mut self.suspected);
         for fl in &mut self.inflight {
             fl.retain(|&t| t > now);
@@ -281,7 +398,13 @@ impl Router {
                 self.inflight[node].push(t);
                 self.served_per_node[node] += 1;
                 self.busy_per_node[node] += self.cfg.cost.service_secs(reply.rows());
-                break Some((reply, t));
+                let t_reply = match hedge {
+                    Some(budget) if t - t_send > budget => {
+                        self.hedge(shard, node, t_send + budget, q, t, reply.rows())
+                    }
+                    _ => t,
+                };
+                break Some((reply, t_reply));
             };
             match dispatched {
                 Some((reply, t)) => {
@@ -326,11 +449,7 @@ pub struct DistReport {
 
 impl DistReport {
     pub fn latency_all(&self) -> Stats {
-        let mut all = Stats::new();
-        for s in &self.latency {
-            all.merge(s);
-        }
-        all
+        Stats::merge_all(&self.latency)
     }
 
     /// Per-node load imbalance: max over mean of sub-requests served
@@ -398,61 +517,47 @@ impl DistReport {
     }
 }
 
-/// Drive the router open-loop in simulated time: Poisson arrivals at
-/// `qps` for `secs` simulated seconds (arrivals never wait on service —
-/// a slow tier shows up as latency, exactly like the wall-clock driver).
-///
-/// Requires a freshly constructed router: the report snapshots the
-/// router's cumulative counters and the simulated clock restarts at 0,
-/// so reuse would both corrupt the report and queue arrivals behind
-/// phantom backlog.
-pub fn run_sim_open_loop(
-    router: &mut Router,
-    gen: &mut LoadGen,
-    qps: f64,
-    secs: f64,
-) -> DistReport {
-    assert!(
-        router.served_per_node.iter().all(|&c| c == 0) && router.failed == 0,
-        "run_sim_open_loop requires a freshly constructed Router"
-    );
-    let mut report = DistReport {
-        served_per_node: vec![0; router.served_per_node.len()],
-        busy_per_node: vec![0.0; router.busy_per_node.len()],
-        ..Default::default()
-    };
-    let mut now = 0.0f64;
-    let mut horizon = 0.0f64;
-    while now < secs {
-        let q = gen.next_query();
-        report.offered += 1;
-        let class = q.class();
-        let (res, done) = router.execute(now, &q);
-        horizon = horizon.max(done).max(now);
-        match res {
-            Some(_) => {
-                report.completed += 1;
-                report.latency[class.index()].push(done - now);
-            }
-            None => report.failed += 1,
+impl Router {
+    /// Assemble the distributed-tier report for a run driven through
+    /// the engine API (`drive_open_loop` over a `RouterEngine`): the
+    /// drive's disposition counters and latency joined with this
+    /// router's cumulative per-node load, fabric traffic, and failover
+    /// record.
+    ///
+    /// The router's counters are cumulative, so the report is only
+    /// meaningful for a router that served exactly this drive; a reused
+    /// router panics here instead of silently merging two runs.
+    pub fn report(&self, drive: &DriveReport) -> DistReport {
+        let reached_router =
+            drive.offered.saturating_sub(drive.cache_hits + drive.shed + drive.queued);
+        assert_eq!(
+            self.queries, reached_router,
+            "Router::report requires a freshly constructed router that served exactly this \
+             drive ({} queries executed vs {} in the drive)",
+            self.queries, reached_router
+        );
+        DistReport {
+            offered: drive.offered,
+            completed: drive.completed,
+            failed: drive.failed,
+            arrival_secs: drive.arrival_secs,
+            sim_secs: drive.horizon.max(drive.arrival_secs),
+            latency: drive.latency.clone(),
+            served_per_node: self.served_per_node.clone(),
+            busy_per_node: self.busy_per_node.clone(),
+            bytes_moved: self.fabric.bytes_moved,
+            transfers: self.fabric.transfers,
+            bytes_per_node: self.fabric.node_bytes.clone(),
+            failover: self.failover.clone(),
         }
-        now += gen.next_interarrival(qps);
     }
-    report.arrival_secs = now.min(secs);
-    report.sim_secs = horizon.max(report.arrival_secs);
-    report.served_per_node.copy_from_slice(&router.served_per_node);
-    report.busy_per_node.copy_from_slice(&router.busy_per_node);
-    report.bytes_moved = router.fabric.bytes_moved;
-    report.transfers = router.fabric.transfers;
-    report.bytes_per_node = router.fabric.node_bytes.clone();
-    report.failover = router.failover.clone();
-    report
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::serve::loadgen::LoadGenConfig;
+    use crate::serve::engine::{drive_open_loop, RouterEngine, SimClock};
+    use crate::serve::loadgen::{LoadGen, LoadGenConfig};
     use crate::serve::query::{execute, SourceFilter};
     use crate::serve::snapshot;
 
@@ -584,11 +689,13 @@ mod tests {
     #[test]
     fn sim_open_loop_reports_latency_and_node_loads() {
         let store = test_store(2000, 8, 13);
-        let mut router =
-            Router::new(Arc::clone(&store), 4, 2, RouterConfig::default());
+        let router = Router::new(Arc::clone(&store), 4, 2, RouterConfig::default());
+        let engine = RouterEngine::new(router);
         let cfg = LoadGenConfig::scenario("uniform", 5).unwrap();
         let mut gen = LoadGen::new(cfg, store.width, store.height);
-        let rep = run_sim_open_loop(&mut router, &mut gen, 2000.0, 0.5);
+        let mut clock = SimClock::new();
+        let drive = drive_open_loop(&engine, &mut clock, &mut gen, 2000.0, 0.5);
+        let rep = engine.dist_report(&drive);
         assert!(rep.offered > 500, "offered {}", rep.offered);
         assert_eq!(rep.completed, rep.offered);
         assert_eq!(rep.failed, 0);
@@ -598,5 +705,25 @@ mod tests {
         assert!(rep.served_per_node.iter().sum::<u64>() >= rep.completed);
         assert!(rep.bytes_moved > 0.0);
         assert!(rep.imbalance() >= 1.0);
+    }
+
+    #[test]
+    fn hedged_subqueries_preserve_results_and_are_counted() {
+        let store = test_store(1200, 8, 21);
+        let mut router = Router::new(Arc::clone(&store), 4, 2, RouterConfig::default());
+        let q = Query::BrightestN { n: 30, filter: SourceFilter::Any };
+        let want = execute(&store, &q);
+        // zero budget: every primary reply exceeds it, so a hedge fires
+        // for every shard that has an alternate replica
+        let (res, done) = router.execute_with(0.0, &q, Some(0.0));
+        assert_eq!(res.expect("no failures scheduled"), want);
+        assert!(done > 0.0);
+        assert!(router.hedges > 0, "zero budget must fire hedges");
+        assert!(router.hedge_wins <= router.hedges);
+        // without a budget nothing hedges
+        let mut plain = Router::new(Arc::clone(&store), 4, 2, RouterConfig::default());
+        let (res2, _) = plain.execute(0.0, &q);
+        assert_eq!(res2.unwrap(), want);
+        assert_eq!(plain.hedges, 0);
     }
 }

@@ -1,0 +1,116 @@
+//! Admission control as a middleware layer.
+//!
+//! The bounded-queue shed logic that used to be welded into the
+//! worker-pool `Server`, extracted so every tier degrades the same way
+//! under overload: an explicit shed count instead of unbounded latency.
+//!
+//! For engines with a real queue the layer probes
+//! [`QueryEngine::in_flight`]; for synchronous (simulated-time) engines
+//! it models the backlog itself as the set of already-issued responses
+//! whose completion time is still in the future at the new request's
+//! arrival time.
+//!
+//! The bound is exact under a single submitting thread (both drivers'
+//! open loops). Under concurrent submitters the probe and the submit
+//! are separate steps, so the depth can transiently overshoot by up to
+//! the number of racing clients — a shed signal, not a hard capacity
+//! guarantee (the worker-pool `Server` additionally enforces its own
+//! in-lock `queue_depth` when one is configured).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::{QueryEngine, Request, Response, Submitted};
+
+/// Middleware: shed requests beyond an in-flight bound.
+pub struct Admission<E> {
+    inner: E,
+    depth: usize,
+    /// completion times of synchronous responses still pending at the
+    /// engine clock (unused when the inner engine exposes a real queue)
+    outstanding: Mutex<Vec<f64>>,
+    admitted: AtomicU64,
+    shed: AtomicU64,
+}
+
+impl<E: QueryEngine> Admission<E> {
+    pub fn new(inner: E, depth: usize) -> Admission<E> {
+        Admission {
+            inner,
+            depth: depth.max(1),
+            outstanding: Mutex::new(Vec::new()),
+            admitted: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+        }
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    fn over_limit(&self, now: f64) -> bool {
+        if let Some(queued) = self.inner.in_flight() {
+            return queued >= self.depth;
+        }
+        let mut out = self.outstanding.lock().unwrap();
+        out.retain(|&done| done > now);
+        out.len() >= self.depth
+    }
+
+    fn record(&self, at: f64, resp: &Response) {
+        if self.inner.in_flight().is_none() && resp.done > at {
+            self.outstanding.lock().unwrap().push(resp.done);
+        }
+    }
+}
+
+impl<E: QueryEngine> QueryEngine for Admission<E> {
+    fn call(&self, req: Request) -> Response {
+        let at = req.at;
+        if self.over_limit(at) {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            return Response::shed(at);
+        }
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        let resp = self.inner.call(req);
+        self.record(at, &resp);
+        resp
+    }
+
+    fn submit(&self, req: Request) -> Submitted {
+        let at = req.at;
+        if self.over_limit(at) {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            return Submitted::Shed;
+        }
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        match self.inner.submit(req) {
+            Submitted::Done(resp) => {
+                self.record(at, &resp);
+                Submitted::Done(resp)
+            }
+            other => other,
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("admit({}) -> {}", self.depth, self.inner.describe())
+    }
+
+    fn in_flight(&self) -> Option<usize> {
+        self.inner.in_flight()
+    }
+
+    fn metrics(&self) -> Vec<(String, f64)> {
+        let mut m = vec![
+            ("admitted".to_string(), self.admitted() as f64),
+            ("admission_shed".to_string(), self.shed() as f64),
+        ];
+        m.extend(self.inner.metrics());
+        m
+    }
+}

@@ -1,0 +1,259 @@
+//! Result caching as a middleware layer.
+//!
+//! [`ResultCache`] is the per-class LRU that used to live inside the
+//! worker-pool `Server`; hoisting it into a [`Cached`] layer makes the
+//! same cache available to *every* tier — in particular the distributed
+//! router, where a hit also avoids fabric traffic. The layer records
+//! hit rate and the fabric bytes saved (each entry remembers what its
+//! original miss moved), the ROADMAP's "hot-range cache hit rates vs
+//! fabric bytes saved" measurement.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::serve::query::{Query, QueryResult, N_QUERY_CLASSES};
+
+use super::{Consistency, Outcome, QueryEngine, Request, Response, Submitted, Trace};
+
+struct Entry {
+    query: Query,
+    result: QueryResult,
+    /// fabric bytes the original miss moved (0 on local tiers)
+    bytes: f64,
+    tick: u64,
+}
+
+/// Entry-count LRU mapping query cache keys to cloned results. The
+/// stored query is compared on probe so a 64-bit key collision returns
+/// a miss instead of silently serving another query's result.
+pub struct ResultCache {
+    capacity: usize,
+    map: HashMap<u64, Entry>,
+    tick: u64,
+}
+
+impl ResultCache {
+    pub fn new(capacity: usize) -> ResultCache {
+        ResultCache { capacity, map: HashMap::new(), tick: 0 }
+    }
+
+    /// Probe for `q`; a hit returns the result and the fabric bytes its
+    /// original miss moved.
+    pub fn get(&mut self, key: u64, q: &Query) -> Option<(QueryResult, f64)> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(&key) {
+            Some(e) if e.query == *q => {
+                e.tick = tick;
+                Some((e.result.clone(), e.bytes))
+            }
+            _ => None,
+        }
+    }
+
+    pub fn put(&mut self, key: u64, query: Query, result: QueryResult, bytes: f64) {
+        if self.capacity == 0 {
+            return;
+        }
+        self.tick += 1;
+        if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
+            // amortized eviction: drop the least-recent ~1/8 of entries
+            // in one pass instead of an O(n) scan per insert (this runs
+            // under the class mutex on the request hot path)
+            let mut ticks: Vec<u64> = self.map.values().map(|e| e.tick).collect();
+            ticks.sort_unstable();
+            let cut = ticks[(ticks.len() / 8).min(ticks.len() - 1)];
+            self.map.retain(|_, e| e.tick > cut);
+            if self.map.len() >= self.capacity {
+                // all survivors newer than cut (degenerate tie case)
+                let victim = self.map.iter().min_by_key(|(_, e)| e.tick).map(|(&k, _)| k);
+                if let Some(k) = victim {
+                    self.map.remove(&k);
+                }
+            }
+        }
+        self.map.insert(key, Entry { query, result, bytes, tick: self.tick });
+    }
+}
+
+/// Middleware: per-query-class LRU result cache over any engine.
+///
+/// Hits answer instantly (completion = arrival on the engine's clock)
+/// and never reach the inner engine; misses pass through and fill the
+/// cache on the way back. Requests with [`Consistency::Fresh`] bypass
+/// the probe but still refresh the cache.
+pub struct Cached<E> {
+    inner: E,
+    entries_per_class: usize,
+    caches: Vec<Mutex<ResultCache>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    /// fabric bytes avoided by hits
+    saved: Mutex<f64>,
+}
+
+impl<E: QueryEngine> Cached<E> {
+    pub fn new(inner: E, entries_per_class: usize) -> Cached<E> {
+        let caches = (0..N_QUERY_CLASSES)
+            .map(|_| Mutex::new(ResultCache::new(entries_per_class)))
+            .collect();
+        Cached {
+            inner,
+            entries_per_class,
+            caches,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            saved: Mutex::new(0.0),
+        }
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of probed requests served from the cache.
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = (self.hits(), self.misses());
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
+    /// Fabric bytes hits avoided moving (per-entry record of what the
+    /// original miss cost).
+    pub fn bytes_saved(&self) -> f64 {
+        *self.saved.lock().unwrap()
+    }
+
+    fn probe(&self, req: &Request) -> Option<Response> {
+        if req.consistency != Consistency::CachedOk {
+            return None;
+        }
+        let class = req.query.class().index();
+        let key = req.query.cache_key();
+        let hit = self.caches[class].lock().unwrap().get(key, &req.query);
+        hit.map(|(result, bytes)| {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            *self.saved.lock().unwrap() += bytes;
+            Response {
+                result: Some(result),
+                done: req.at,
+                trace: Trace { cache_hit: true, ..Trace::default() },
+            }
+        })
+    }
+
+    fn fill(&self, query: &Query, resp: &Response) {
+        if resp.trace.outcome != Outcome::Served {
+            return;
+        }
+        if let Some(result) = &resp.result {
+            let class = query.class().index();
+            let key = query.cache_key();
+            self.caches[class].lock().unwrap().put(
+                key,
+                query.clone(),
+                result.clone(),
+                resp.trace.fabric_bytes,
+            );
+        }
+    }
+}
+
+impl<E: QueryEngine> QueryEngine for Cached<E> {
+    fn call(&self, req: Request) -> Response {
+        if let Some(resp) = self.probe(&req) {
+            return resp;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let query = req.query.clone();
+        let resp = self.inner.call(req);
+        self.fill(&query, &resp);
+        resp
+    }
+
+    fn submit(&self, req: Request) -> Submitted {
+        if let Some(resp) = self.probe(&req) {
+            return Submitted::Done(resp);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let query = req.query.clone();
+        match self.inner.submit(req) {
+            // synchronous completion (simulated tiers): fill on the way
+            // back, exactly like the call path
+            Submitted::Done(resp) => {
+                self.fill(&query, &resp);
+                Submitted::Done(resp)
+            }
+            // queued into an async engine: the result never flows back
+            // through this layer, so the miss cannot fill the cache —
+            // wall-clock open-loop runs only hit via the call path
+            other => other,
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("cached({}/class) -> {}", self.entries_per_class, self.inner.describe())
+    }
+
+    fn in_flight(&self) -> Option<usize> {
+        self.inner.in_flight()
+    }
+
+    fn metrics(&self) -> Vec<(String, f64)> {
+        let mut m = vec![
+            ("cache_hits".to_string(), self.hits() as f64),
+            ("cache_misses".to_string(), self.misses() as f64),
+            ("cache_bytes_saved".to_string(), self.bytes_saved()),
+        ];
+        m.extend(self.inner.metrics());
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::query::SourceFilter;
+
+    #[test]
+    fn cache_evicts_lru_beyond_capacity() {
+        let mut c = ResultCache::new(2);
+        let r = QueryResult::Sources(Vec::new());
+        let q = Query::BrightestN { n: 1, filter: SourceFilter::Any };
+        c.put(1, q.clone(), r.clone(), 0.0);
+        c.put(2, q.clone(), r.clone(), 0.0);
+        assert!(c.get(1, &q).is_some()); // refresh 1 => 2 is LRU
+        c.put(3, q.clone(), r.clone(), 0.0);
+        assert!(c.get(2, &q).is_none(), "2 should be evicted");
+        assert!(c.get(1, &q).is_some());
+        assert!(c.get(3, &q).is_some());
+    }
+
+    #[test]
+    fn cache_key_collision_is_a_miss_not_a_wrong_answer() {
+        let mut c = ResultCache::new(4);
+        let q1 = Query::BrightestN { n: 1, filter: SourceFilter::Any };
+        let q2 = Query::BrightestN { n: 2, filter: SourceFilter::Any };
+        // simulate a 64-bit key collision: same key, different query
+        c.put(42, q1.clone(), QueryResult::Sources(Vec::new()), 0.0);
+        assert!(c.get(42, &q1).is_some());
+        assert!(c.get(42, &q2).is_none(), "colliding key must not serve q1's result for q2");
+    }
+
+    #[test]
+    fn hits_record_bytes_saved() {
+        let mut c = ResultCache::new(4);
+        let q = Query::BrightestN { n: 3, filter: SourceFilter::Any };
+        c.put(7, q.clone(), QueryResult::Sources(Vec::new()), 1234.0);
+        let (_, bytes) = c.get(7, &q).unwrap();
+        assert_eq!(bytes, 1234.0);
+    }
+}

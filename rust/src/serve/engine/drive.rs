@@ -1,0 +1,372 @@
+//! One load driver for every tier.
+//!
+//! Before the engine API there were three drivers: a wall-clock
+//! open-loop, a wall-clock closed-loop (both in `loadgen`), and a
+//! simulated-time open-loop welded to the distributed router. The only
+//! real difference between the wall and simulated variants was the
+//! clock, so the clock is now a trait: [`WallClock`] sleeps to the next
+//! arrival, [`SimClock`] jumps to it. Both drivers are generic over
+//! [`QueryEngine`], so a layered stack measures the same way at every
+//! tier.
+//!
+//! * [`drive_open_loop`] — Poisson arrivals at a fixed offered rate,
+//!   independent of service progress. The right shape for latency-
+//!   under-load and admission control: a slow engine does not slow the
+//!   arrivals down, it sheds (or queues).
+//! * [`drive_closed_loop`] — `clients` synchronous loops, each waiting
+//!   for its previous response. The right shape for peak-throughput
+//!   comparisons (always wall-clock: callers block for real).
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::metrics::Stats;
+use crate::serve::loadgen::LoadGen;
+use crate::serve::query::{N_QUERY_CLASSES, QUERY_CLASSES};
+
+use super::{Outcome, QueryEngine, Request, Submitted};
+
+/// The driver's notion of time, seconds since the run began.
+pub trait Clock {
+    fn now(&mut self) -> f64;
+
+    /// Advance to (at least) time `t`: sleep on a wall clock, jump on a
+    /// simulated one. Never moves backward.
+    fn advance_to(&mut self, t: f64);
+}
+
+/// Real time since an epoch; `advance_to` sleeps.
+pub struct WallClock {
+    epoch: Instant,
+}
+
+impl WallClock {
+    pub fn start() -> WallClock {
+        WallClock { epoch: Instant::now() }
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&mut self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    fn advance_to(&mut self, t: f64) {
+        let now = self.epoch.elapsed().as_secs_f64();
+        if t > now {
+            std::thread::sleep(Duration::from_secs_f64(t - now));
+        }
+    }
+}
+
+/// Simulated time; `advance_to` jumps instantly.
+#[derive(Default)]
+pub struct SimClock {
+    now: f64,
+}
+
+impl SimClock {
+    pub fn new() -> SimClock {
+        SimClock::default()
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&mut self) -> f64 {
+        self.now
+    }
+
+    fn advance_to(&mut self, t: f64) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+}
+
+/// Outcome of one driven run: disposition counters, trace aggregates,
+/// and per-class latency for synchronously completed requests.
+#[derive(Clone, Debug, Default)]
+pub struct DriveReport {
+    pub offered: u64,
+    /// served synchronously (includes cache hits)
+    pub completed: u64,
+    /// accepted into an asynchronous queue (latency is accounted by the
+    /// engine itself, e.g. the worker-pool server's report)
+    pub queued: u64,
+    pub shed: u64,
+    pub failed: u64,
+    pub deadline_exceeded: u64,
+    pub cache_hits: u64,
+    pub hedges: u64,
+    pub hedge_wins: u64,
+    /// length of the arrival window (offered rate = offered / this)
+    pub arrival_secs: f64,
+    /// last arrival or completion, whichever is later
+    pub horizon: f64,
+    /// arrival -> completion latency per query class (synchronous
+    /// completions only)
+    pub latency: [Stats; N_QUERY_CLASSES],
+}
+
+impl DriveReport {
+    /// All-classes latency distribution.
+    pub fn latency_all(&self) -> Stats {
+        Stats::merge_all(&self.latency)
+    }
+
+    pub fn offered_qps(&self) -> f64 {
+        self.offered as f64 / self.arrival_secs.max(1e-9)
+    }
+
+    /// Completed throughput over the full horizon.
+    pub fn qps(&self) -> f64 {
+        self.completed as f64 / self.horizon.max(1e-9)
+    }
+
+    /// Fold another report in (closed-loop per-client partials).
+    pub fn merge(&mut self, o: &DriveReport) {
+        self.offered += o.offered;
+        self.completed += o.completed;
+        self.queued += o.queued;
+        self.shed += o.shed;
+        self.failed += o.failed;
+        self.deadline_exceeded += o.deadline_exceeded;
+        self.cache_hits += o.cache_hits;
+        self.hedges += o.hedges;
+        self.hedge_wins += o.hedge_wins;
+        self.arrival_secs = self.arrival_secs.max(o.arrival_secs);
+        self.horizon = self.horizon.max(o.horizon);
+        for (dst, src) in self.latency.iter_mut().zip(&o.latency) {
+            dst.merge(src);
+        }
+    }
+
+    /// Account one synchronously completed response.
+    fn absorb(&mut self, class: usize, at: f64, resp: &super::Response) {
+        self.horizon = self.horizon.max(resp.done);
+        self.cache_hits += resp.trace.cache_hit as u64;
+        self.hedges += resp.trace.hedges as u64;
+        self.hedge_wins += resp.trace.hedge_wins as u64;
+        match resp.trace.outcome {
+            Outcome::Served => {
+                self.completed += 1;
+                self.latency[class].push(resp.done - at);
+            }
+            Outcome::Shed => self.shed += 1,
+            Outcome::Failed => self.failed += 1,
+            Outcome::DeadlineExceeded => self.deadline_exceeded += 1,
+        }
+    }
+
+    /// Multi-line human summary with per-class quantiles.
+    pub fn summary(&self) -> String {
+        let mut out = format!(
+            "drive: {} offered over {:.2}s -> {} completed, {} queued, {} shed, {} failed, {} past deadline",
+            self.offered,
+            self.arrival_secs,
+            self.completed,
+            self.queued,
+            self.shed,
+            self.failed,
+            self.deadline_exceeded,
+        );
+        let all = self.latency_all();
+        if all.n > 0 {
+            let aq = all.quantiles(&[0.50, 0.99]);
+            out.push_str(&format!(
+                "\n  all      n={} p50={:.3}ms p99={:.3}ms",
+                all.n,
+                aq[0] * 1e3,
+                aq[1] * 1e3
+            ));
+        }
+        for c in QUERY_CLASSES {
+            let s = &self.latency[c.index()];
+            if s.n == 0 {
+                continue;
+            }
+            let q = s.quantiles(&[0.50, 0.99]);
+            out.push_str(&format!(
+                "\n  {:<8} n={} p50={:.3}ms p99={:.3}ms",
+                c.name(),
+                s.n,
+                q[0] * 1e3,
+                q[1] * 1e3
+            ));
+        }
+        if self.cache_hits > 0 {
+            out.push_str(&format!("\n  cache hits: {}", self.cache_hits));
+        }
+        if self.hedges > 0 {
+            out.push_str(&format!(
+                "\n  hedges: {} fired, {} won",
+                self.hedges, self.hedge_wins
+            ));
+        }
+        out
+    }
+}
+
+/// Drive an engine open-loop: Poisson arrivals at `qps` for `secs`
+/// clock seconds. Arrivals never wait on service — a slow engine shows
+/// up as latency (synchronous tiers), queue depth (async tiers), or
+/// sheds, exactly as an overloaded service would.
+pub fn drive_open_loop<E: QueryEngine + ?Sized>(
+    engine: &E,
+    clock: &mut dyn Clock,
+    gen: &mut LoadGen,
+    qps: f64,
+    secs: f64,
+) -> DriveReport {
+    let mut report = DriveReport::default();
+    let mut next_at = 0.0f64;
+    while next_at < secs {
+        clock.advance_to(next_at);
+        // a wall clock may wake late; arrivals burst to catch up, as a
+        // true open-loop source does
+        let at = clock.now().max(next_at);
+        let q = gen.next_query();
+        let class = q.class().index();
+        report.offered += 1;
+        match engine.submit(Request::new(q).arriving_at(at)) {
+            Submitted::Queued => report.queued += 1,
+            Submitted::Shed => report.shed += 1,
+            Submitted::Done(resp) => report.absorb(class, at, &resp),
+        }
+        next_at += gen.next_interarrival(qps);
+    }
+    report.arrival_secs = next_at.min(secs);
+    report.horizon = report.horizon.max(report.arrival_secs);
+    report
+}
+
+/// Drive an engine with `clients` synchronous loops for `secs` wall
+/// seconds. Shed responses back off briefly so a closed loop cannot
+/// spin on an admission-controlled engine.
+pub fn drive_closed_loop<E: QueryEngine + ?Sized>(
+    engine: &E,
+    gen: &mut LoadGen,
+    clients: usize,
+    secs: f64,
+) -> DriveReport {
+    let epoch = Instant::now();
+    let deadline = Duration::from_secs_f64(secs);
+    let partials: Mutex<Vec<DriveReport>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for c in 0..clients.max(1) {
+            let mut cgen = gen.fork(c as u64 + 1);
+            let partials = &partials;
+            scope.spawn(move || {
+                let mut local = DriveReport::default();
+                while epoch.elapsed() < deadline {
+                    let q = cgen.next_query();
+                    let class = q.class().index();
+                    let at = epoch.elapsed().as_secs_f64();
+                    local.offered += 1;
+                    let resp = engine.call(Request::new(q).arriving_at(at));
+                    let was_shed = resp.trace.outcome == Outcome::Shed;
+                    local.absorb(class, at, &resp);
+                    if was_shed {
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                }
+                partials.lock().unwrap().push(local);
+            });
+        }
+    });
+    let mut report = DriveReport::default();
+    for p in partials.lock().unwrap().iter() {
+        report.merge(p);
+    }
+    let wall = epoch.elapsed().as_secs_f64();
+    report.arrival_secs = wall;
+    report.horizon = wall;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::engine::{Response, Trace};
+    use crate::serve::loadgen::LoadGenConfig;
+    use crate::serve::query::QueryResult;
+
+    /// Synchronous stub: serves everything after a fixed service time.
+    struct FixedEngine {
+        svc: f64,
+    }
+
+    impl QueryEngine for FixedEngine {
+        fn call(&self, req: Request) -> Response {
+            Response::served(QueryResult::Sources(Vec::new()), req.at + self.svc)
+        }
+
+        fn describe(&self) -> String {
+            "fixed".to_string()
+        }
+    }
+
+    #[test]
+    fn sim_clock_only_moves_forward() {
+        let mut c = SimClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance_to(2.5);
+        assert_eq!(c.now(), 2.5);
+        c.advance_to(1.0);
+        assert_eq!(c.now(), 2.5, "clock must never move backward");
+    }
+
+    #[test]
+    fn open_loop_on_sim_clock_is_deterministic() {
+        let cfg = LoadGenConfig { seed: 11, ..Default::default() };
+        let engine = FixedEngine { svc: 1e-4 };
+        let run = || {
+            let mut gen = LoadGen::new(cfg.clone(), 500.0, 500.0);
+            let mut clock = SimClock::new();
+            drive_open_loop(&engine, &mut clock, &mut gen, 1000.0, 0.5)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.offered, b.offered);
+        assert_eq!(a.completed, b.completed);
+        assert!(a.offered > 300, "offered {}", a.offered);
+        assert_eq!(a.completed, a.offered);
+        assert_eq!(a.shed + a.failed + a.queued, 0);
+        assert_eq!(a.latency_all().n, a.completed);
+        // every latency is exactly the fixed service time
+        assert!((a.latency_all().min - 1e-4).abs() < 1e-12);
+        assert!((a.latency_all().max - 1e-4).abs() < 1e-12);
+        assert!(a.horizon >= a.arrival_secs);
+    }
+
+    #[test]
+    fn report_merge_sums_counters() {
+        let mut a = DriveReport { offered: 3, completed: 2, shed: 1, ..Default::default() };
+        a.latency[0].push(0.5);
+        let mut b = DriveReport { offered: 4, completed: 4, horizon: 9.0, ..Default::default() };
+        b.latency[0].push(1.5);
+        a.merge(&b);
+        assert_eq!(a.offered, 7);
+        assert_eq!(a.completed, 6);
+        assert_eq!(a.shed, 1);
+        assert_eq!(a.horizon, 9.0);
+        assert_eq!(a.latency[0].n, 2);
+    }
+
+    #[test]
+    fn absorb_routes_outcomes() {
+        let mut r = DriveReport::default();
+        let served = Response::served(QueryResult::Sources(Vec::new()), 1.0);
+        r.absorb(0, 0.25, &served);
+        assert_eq!(r.completed, 1);
+        assert!((r.latency[0].max - 0.75).abs() < 1e-12);
+        let mut hit = served.clone();
+        hit.trace = Trace { cache_hit: true, ..Trace::default() };
+        r.absorb(1, 1.0, &hit);
+        assert_eq!(r.cache_hits, 1);
+        r.absorb(0, 0.0, &Response::shed(0.0));
+        assert_eq!(r.shed, 1);
+        r.absorb(0, 0.0, &Response::failed(0.0));
+        assert_eq!(r.failed, 1);
+    }
+}

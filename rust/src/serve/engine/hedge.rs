@@ -1,0 +1,98 @@
+//! Speculative (hedged) requests as a middleware layer.
+//!
+//! "The Tail at Scale" recipe: when a replica sub-query exceeds a
+//! latency budget, issue the same sub-query to a second replica and
+//! take whichever reply lands first. Replies are byte-identical by
+//! construction (every replica of a range holds the same shard), so
+//! hedging trades extra replica load and fabric bytes for a shorter
+//! tail — the p999 comparison against p2c-alone lives in the serve
+//! bench and tests.
+//!
+//! The layer is policy, the tier is mechanism: [`Hedged`] stamps the
+//! budget onto the request envelope ([`Request::hedge`]) and aggregates
+//! the fired/won counters from response traces; replicated tiers (the
+//! distributed router) honor the stamp per sub-query, single-replica
+//! tiers ignore it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::{QueryEngine, Request, Response, Submitted};
+
+/// Middleware: stamp a replica hedge budget on every request.
+pub struct Hedged<E> {
+    inner: E,
+    /// hedge budget, seconds
+    budget: f64,
+    fired: AtomicU64,
+    wins: AtomicU64,
+}
+
+impl<E: QueryEngine> Hedged<E> {
+    pub fn new(inner: E, budget: f64) -> Hedged<E> {
+        Hedged {
+            inner,
+            budget: budget.max(0.0),
+            fired: AtomicU64::new(0),
+            wins: AtomicU64::new(0),
+        }
+    }
+
+    /// Hedge sub-queries issued.
+    pub fn fired(&self) -> u64 {
+        self.fired.load(Ordering::Relaxed)
+    }
+
+    /// Hedges whose reply beat the primary replica's.
+    pub fn wins(&self) -> u64 {
+        self.wins.load(Ordering::Relaxed)
+    }
+
+    fn stamp(&self, mut req: Request) -> Request {
+        req.hedge = Some(match req.hedge {
+            // an outer layer already set a tighter budget: keep the min
+            Some(existing) => existing.min(self.budget),
+            None => self.budget,
+        });
+        req
+    }
+
+    fn account(&self, resp: &Response) {
+        self.fired.fetch_add(resp.trace.hedges as u64, Ordering::Relaxed);
+        self.wins.fetch_add(resp.trace.hedge_wins as u64, Ordering::Relaxed);
+    }
+}
+
+impl<E: QueryEngine> QueryEngine for Hedged<E> {
+    fn call(&self, req: Request) -> Response {
+        let resp = self.inner.call(self.stamp(req));
+        self.account(&resp);
+        resp
+    }
+
+    fn submit(&self, req: Request) -> Submitted {
+        match self.inner.submit(self.stamp(req)) {
+            Submitted::Done(resp) => {
+                self.account(&resp);
+                Submitted::Done(resp)
+            }
+            other => other,
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("hedged({:.3}ms) -> {}", self.budget * 1e3, self.inner.describe())
+    }
+
+    fn in_flight(&self) -> Option<usize> {
+        self.inner.in_flight()
+    }
+
+    fn metrics(&self) -> Vec<(String, f64)> {
+        let mut m = vec![
+            ("hedges_fired".to_string(), self.fired() as f64),
+            ("hedge_wins".to_string(), self.wins() as f64),
+        ];
+        m.extend(self.inner.metrics());
+        m
+    }
+}

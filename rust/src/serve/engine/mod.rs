@@ -1,0 +1,295 @@
+//! The unified serving engine API: one request envelope, one trait,
+//! composable middleware.
+//!
+//! Before this module the serving stack had three incompatible entry
+//! points — `query::execute(store, q)`, `Server::call(q)`, and
+//! `Router::execute(now, q)` — so load generation, caching, and fault
+//! handling were reimplemented (or missing) per tier. Now every tier is
+//! a [`QueryEngine`]:
+//!
+//! ```text
+//!             Request { query, at, deadline, consistency, hedge }
+//!                               │
+//!   Admission ── shed beyond an in-flight bound
+//!       │
+//!    Cached ──── per-class LRU (hit rate, fabric bytes saved)
+//!       │
+//!    Hedged ──── stamps a replica hedge budget on the envelope
+//!       │
+//!   tier: ScanEngine | DirectEngine | ServerEngine | RouterEngine
+//!                               │
+//!             Response { result, done, trace }
+//! ```
+//!
+//! The clock abstraction in [`drive`] lets the wall-clock worker-pool
+//! tier and the simulated-time distributed tier share one open-loop /
+//! closed-loop driver. Results are byte-identical across tiers and
+//! middleware stacks by construction: every tier bottoms out in the
+//! same per-shard execute + canonical merge.
+
+pub mod admission;
+pub mod cache;
+pub mod drive;
+pub mod hedge;
+pub mod tiers;
+
+pub use admission::Admission;
+pub use cache::{Cached, ResultCache};
+pub use drive::{
+    drive_closed_loop, drive_open_loop, Clock, DriveReport, SimClock, WallClock,
+};
+pub use hedge::Hedged;
+pub use tiers::{DirectEngine, RouterEngine, ScanEngine, ServerEngine};
+
+use super::query::{Query, QueryResult};
+
+/// How stale a response the caller tolerates.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Consistency {
+    /// A cached result (if any layer holds one) is acceptable.
+    #[default]
+    CachedOk,
+    /// Bypass result caches and execute against the store. The fresh
+    /// result still refills caches on the way back.
+    Fresh,
+}
+
+/// The request envelope every tier and middleware layer speaks.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// the typed query to answer
+    pub query: Query,
+    /// arrival time on the engine's clock, seconds (simulated or wall)
+    pub at: f64,
+    /// latency budget, seconds; responses completing later are marked
+    /// [`Outcome::DeadlineExceeded`] and their result is dropped
+    pub deadline: Option<f64>,
+    /// cache tolerance hint, honored by [`Cached`] layers
+    pub consistency: Consistency,
+    /// replica hedge budget, seconds: replicated tiers issue a second
+    /// sub-query when the first exceeds it (stamped by [`Hedged`])
+    pub hedge: Option<f64>,
+}
+
+impl Request {
+    /// A plain request: no deadline, cached results acceptable.
+    pub fn new(query: Query) -> Request {
+        Request {
+            query,
+            at: 0.0,
+            deadline: None,
+            consistency: Consistency::CachedOk,
+            hedge: None,
+        }
+    }
+
+    /// Set the arrival time on the engine's clock.
+    pub fn arriving_at(mut self, at: f64) -> Request {
+        self.at = at;
+        self
+    }
+
+    /// Set a latency budget in seconds.
+    pub fn with_deadline(mut self, deadline: f64) -> Request {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Require a freshly executed (uncached) result.
+    pub fn fresh(mut self) -> Request {
+        self.consistency = Consistency::Fresh;
+        self
+    }
+}
+
+/// How the engine disposed of a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// answered; `result` is `Some`
+    Served,
+    /// rejected at admission (queue/backlog bound)
+    Shed,
+    /// unanswerable (e.g. every replica of a needed range is dead)
+    Failed,
+    /// answered too late for the request's deadline; result dropped
+    DeadlineExceeded,
+}
+
+/// Per-request accounting, filled in by whichever layers touched the
+/// request on its way down the stack.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub outcome: Outcome,
+    /// served from a [`Cached`] layer without reaching the tier
+    pub cache_hit: bool,
+    /// replica sub-queries dispatched (including failover + hedges)
+    pub replicas_contacted: u32,
+    /// speculative second sub-queries issued past the hedge budget
+    pub hedges: u32,
+    /// hedges whose reply beat the primary replica's
+    pub hedge_wins: u32,
+    /// fabric bytes this request moved (0 on local tiers / cache hits)
+    pub fabric_bytes: f64,
+}
+
+impl Default for Trace {
+    fn default() -> Trace {
+        Trace {
+            outcome: Outcome::Served,
+            cache_hit: false,
+            replicas_contacted: 0,
+            hedges: 0,
+            hedge_wins: 0,
+            fabric_bytes: 0.0,
+        }
+    }
+}
+
+/// What comes back: the result (if served), the completion time on the
+/// engine's clock, and the per-request trace.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub result: Option<QueryResult>,
+    /// completion time, seconds on the same clock as `Request::at`
+    pub done: f64,
+    pub trace: Trace,
+}
+
+impl Response {
+    /// A successful response completing at `done`.
+    pub fn served(result: QueryResult, done: f64) -> Response {
+        Response { result: Some(result), done, trace: Trace::default() }
+    }
+
+    /// A response shed at admission time `at`.
+    pub fn shed(at: f64) -> Response {
+        Response {
+            result: None,
+            done: at,
+            trace: Trace { outcome: Outcome::Shed, ..Trace::default() },
+        }
+    }
+
+    /// A failed response (no surviving replica for a needed range).
+    pub fn failed(done: f64) -> Response {
+        Response {
+            result: None,
+            done,
+            trace: Trace { outcome: Outcome::Failed, ..Trace::default() },
+        }
+    }
+}
+
+/// Apply a request's deadline to a tier response: served results that
+/// completed past `at + deadline` are dropped and re-marked. Tiers call
+/// this on their way out so every engine enforces deadlines uniformly.
+pub fn enforce_deadline(at: f64, deadline: Option<f64>, mut resp: Response) -> Response {
+    if let Some(d) = deadline {
+        if resp.trace.outcome == Outcome::Served && resp.done - at > d {
+            resp.trace.outcome = Outcome::DeadlineExceeded;
+            resp.result = None;
+        }
+    }
+    resp
+}
+
+/// Outcome of an open-loop (fire-and-forget) submission.
+#[derive(Clone, Debug)]
+pub enum Submitted {
+    /// accepted into an asynchronous queue; the engine accounts for the
+    /// completion internally (wall-clock worker pools)
+    Queued,
+    /// rejected at admission
+    Shed,
+    /// completed synchronously (simulated-time tiers, cache hits)
+    Done(Response),
+}
+
+/// One serving engine: a tier (scan, direct, worker-pool server,
+/// distributed router) or a middleware layer wrapping another engine.
+///
+/// Engines are shared-reference callable (`&self`) so one stack can
+/// serve many client threads; layers that keep state use interior
+/// mutability.
+pub trait QueryEngine: Send + Sync {
+    /// Answer a request synchronously (closed-loop shape).
+    fn call(&self, req: Request) -> Response;
+
+    /// Open-loop submission. Engines with an internal queue return
+    /// [`Submitted::Queued`]/[`Submitted::Shed`]; synchronous engines
+    /// default to completing the call inline.
+    fn submit(&self, req: Request) -> Submitted {
+        Submitted::Done(self.call(req))
+    }
+
+    /// Human-readable description of this engine and everything below
+    /// it, outermost layer first (echoed by `serve-bench` before a run).
+    fn describe(&self) -> String;
+
+    /// Queued-but-unserved request count for engines with a real queue
+    /// (`None` for synchronous engines). [`Admission`] layers probe this
+    /// before falling back to their own completion-time backlog model.
+    fn in_flight(&self) -> Option<usize> {
+        None
+    }
+
+    /// Cumulative counters of this engine plus every layer below it,
+    /// as `(name, value)` pairs.
+    fn metrics(&self) -> Vec<(String, f64)> {
+        Vec::new()
+    }
+}
+
+impl QueryEngine for Box<dyn QueryEngine> {
+    fn call(&self, req: Request) -> Response {
+        self.as_ref().call(req)
+    }
+
+    fn submit(&self, req: Request) -> Submitted {
+        self.as_ref().submit(req)
+    }
+
+    fn describe(&self) -> String {
+        self.as_ref().describe()
+    }
+
+    fn in_flight(&self) -> Option<usize> {
+        self.as_ref().in_flight()
+    }
+
+    fn metrics(&self) -> Vec<(String, f64)> {
+        self.as_ref().metrics()
+    }
+}
+
+/// Which middleware layers to stack on a tier (0 / 0.0 disables a
+/// layer). Order, outermost first: admission, cache, hedge.
+#[derive(Clone, Debug, Default)]
+pub struct LayerSpec {
+    /// [`Admission`] in-flight bound (0 = no admission layer)
+    pub admit_depth: usize,
+    /// [`Cached`] entries per query class (0 = no cache layer)
+    pub cache_entries: usize,
+    /// [`Hedged`] replica budget, seconds (<= 0 = no hedge layer)
+    pub hedge_budget: f64,
+}
+
+/// Build the standard layered stack over a boxed tier.
+pub fn layered(base: Box<dyn QueryEngine>, spec: &LayerSpec) -> Box<dyn QueryEngine> {
+    let mut engine = base;
+    if spec.hedge_budget > 0.0 {
+        engine = Box::new(Hedged::new(engine, spec.hedge_budget));
+    }
+    if spec.cache_entries > 0 {
+        engine = Box::new(Cached::new(engine, spec.cache_entries));
+    }
+    if spec.admit_depth > 0 {
+        engine = Box::new(Admission::new(engine, spec.admit_depth));
+    }
+    engine
+}
+
+/// Look up one cumulative counter from an engine stack by name.
+pub fn metric(engine: &dyn QueryEngine, name: &str) -> Option<f64> {
+    engine.metrics().into_iter().find(|(n, _)| n == name).map(|(_, v)| v)
+}

@@ -1,0 +1,186 @@
+//! The serving tiers, ported onto [`QueryEngine`]: brute-force scan,
+//! direct sharded execution, the wall-clock worker-pool server, and the
+//! simulated-time distributed router. Every future tier (a real RPC
+//! transport behind `ShardClient`, incremental stores) is another impl
+//! of the same trait rather than a fourth bespoke entry point.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::serve::dist::{DistReport, Router};
+use crate::serve::query::{execute, execute_scan};
+use crate::serve::server::Server;
+use crate::serve::store::{ServedSource, Store};
+
+use super::drive::DriveReport;
+use super::{enforce_deadline, Outcome, QueryEngine, Request, Response, Submitted, Trace};
+
+/// The brute-force reference tier: a linear scan over a flat catalog.
+/// Slow by design; parity tests pin every other tier against it.
+pub struct ScanEngine {
+    sources: Vec<ServedSource>,
+}
+
+impl ScanEngine {
+    pub fn new(sources: Vec<ServedSource>) -> ScanEngine {
+        ScanEngine { sources }
+    }
+}
+
+impl QueryEngine for ScanEngine {
+    fn call(&self, req: Request) -> Response {
+        let t = Instant::now();
+        let result = execute_scan(&self.sources, &req.query);
+        let resp = Response::served(result, req.at + t.elapsed().as_secs_f64());
+        enforce_deadline(req.at, req.deadline, resp)
+    }
+
+    fn describe(&self) -> String {
+        format!("scan({} sources)", self.sources.len())
+    }
+}
+
+/// The single-host sharded tier, executed inline on the caller's
+/// thread (no worker pool): `query::execute` behind the envelope.
+#[derive(Clone)]
+pub struct DirectEngine {
+    store: Arc<Store>,
+}
+
+impl DirectEngine {
+    pub fn new(store: Arc<Store>) -> DirectEngine {
+        DirectEngine { store }
+    }
+}
+
+impl QueryEngine for DirectEngine {
+    fn call(&self, req: Request) -> Response {
+        let t = Instant::now();
+        let result = execute(&self.store, &req.query);
+        let resp = Response::served(result, req.at + t.elapsed().as_secs_f64());
+        enforce_deadline(req.at, req.deadline, resp)
+    }
+
+    fn describe(&self) -> String {
+        format!("direct({} shards)", self.store.shards.len())
+    }
+}
+
+/// The wall-clock worker-pool tier: `call` blocks for the reply,
+/// `submit` is the fire-and-forget queue path. Clones share one
+/// server; keep a clone (or the `Arc<Server>`) to collect the server's
+/// own queue-latency report via `Server::shutdown` after a run.
+#[derive(Clone)]
+pub struct ServerEngine {
+    server: Arc<Server>,
+}
+
+impl ServerEngine {
+    pub fn new(server: Arc<Server>) -> ServerEngine {
+        ServerEngine { server }
+    }
+
+    pub fn server(&self) -> &Arc<Server> {
+        &self.server
+    }
+}
+
+impl QueryEngine for ServerEngine {
+    fn call(&self, req: Request) -> Response {
+        let t = Instant::now();
+        match self.server.call(req.query.clone()) {
+            Some(result) => {
+                let resp = Response::served(result, req.at + t.elapsed().as_secs_f64());
+                enforce_deadline(req.at, req.deadline, resp)
+            }
+            None => Response::shed(req.at),
+        }
+    }
+
+    fn submit(&self, req: Request) -> Submitted {
+        if self.server.try_submit(req.query) {
+            Submitted::Queued
+        } else {
+            Submitted::Shed
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("server({} workers)", self.server.threads())
+    }
+
+    fn in_flight(&self) -> Option<usize> {
+        Some(self.server.queue_len())
+    }
+}
+
+/// The distributed tier: the scatter-gather router in simulated time.
+/// Clones share one router; keep a clone to read the distributed
+/// report ([`RouterEngine::dist_report`]) after a driven run.
+#[derive(Clone)]
+pub struct RouterEngine {
+    router: Arc<Mutex<Router>>,
+    desc: String,
+}
+
+impl RouterEngine {
+    pub fn new(router: Router) -> RouterEngine {
+        let desc = format!(
+            "router({}, {} nodes x{} replicas, {} shards)",
+            router.routing().name(),
+            router.n_nodes(),
+            router.placement.replicas,
+            router.placement.n_shards()
+        );
+        RouterEngine { router: Arc::new(Mutex::new(router)), desc }
+    }
+
+    /// Read-only access to the shared router (placement, counters).
+    pub fn with_router<T>(&self, f: impl FnOnce(&Router) -> T) -> T {
+        f(&self.router.lock().unwrap())
+    }
+
+    /// Assemble the distributed-tier report: the drive's latency and
+    /// disposition counters joined with the router's per-node load,
+    /// fabric traffic, and failover record.
+    pub fn dist_report(&self, drive: &DriveReport) -> DistReport {
+        self.router.lock().unwrap().report(drive)
+    }
+}
+
+impl QueryEngine for RouterEngine {
+    fn call(&self, req: Request) -> Response {
+        let mut r = self.router.lock().unwrap();
+        let subs0: u64 = r.served_per_node.iter().sum();
+        let bytes0 = r.fabric.bytes_moved;
+        let hedges0 = r.hedges;
+        let wins0 = r.hedge_wins;
+        let (result, done) = r.execute_with(req.at, &req.query, req.hedge);
+        let subs1: u64 = r.served_per_node.iter().sum();
+        let trace = Trace {
+            outcome: if result.is_some() { Outcome::Served } else { Outcome::Failed },
+            cache_hit: false,
+            replicas_contacted: (subs1 - subs0) as u32,
+            hedges: (r.hedges - hedges0) as u32,
+            hedge_wins: (r.hedge_wins - wins0) as u32,
+            fabric_bytes: r.fabric.bytes_moved - bytes0,
+        };
+        drop(r);
+        enforce_deadline(req.at, req.deadline, Response { result, done, trace })
+    }
+
+    fn describe(&self) -> String {
+        self.desc.clone()
+    }
+
+    fn metrics(&self) -> Vec<(String, f64)> {
+        let r = self.router.lock().unwrap();
+        vec![
+            ("router_failed".to_string(), r.failed as f64),
+            ("router_failovers".to_string(), r.failover.n as f64),
+            ("router_hedges".to_string(), r.hedges as f64),
+            ("router_hedge_wins".to_string(), r.hedge_wins as f64),
+            ("router_fabric_bytes".to_string(), r.fabric.bytes_moved),
+        ]
+    }
+}

@@ -1,29 +1,20 @@
-//! Load generation for the serving path.
+//! Load generation for the serving path: deterministic query streams
+//! with configurable class mixes and Zipf-skewed sky hotspots.
 //!
-//! Two driver shapes, because they measure different things:
-//!
-//! * **Open loop** — Poisson arrivals at a fixed offered rate,
-//!   independent of service progress (`prng::Rng` exponential
-//!   inter-arrivals). The right shape for latency-under-load and for
-//!   exercising admission control: a slow server does not slow the
-//!   clients down, it sheds.
-//! * **Closed loop** — `k` clients that each wait for their previous
-//!   response. The right shape for peak-throughput comparisons
-//!   (e.g. 1 vs 4 worker threads).
+//! The drivers that consume these streams live in
+//! [`crate::serve::engine::drive`] — one open-loop and one closed-loop
+//! driver, generic over every engine tier (they used to be duplicated
+//! here and in the distributed router).
 //!
 //! Spatial skew: a configurable fraction of spatial queries target
 //! Zipf-weighted hotspot centers (quantized so hot queries repeat and
-//! the server's result cache is exercised); the rest are uniform over
-//! the sky. Mix presets cover the scenario axes: uniform scan, hotspot,
-//! and cross-match-heavy.
-
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::{Duration, Instant};
+//! result caches are exercised); the rest are uniform over the sky.
+//! Mix presets cover the scenario axes: uniform scan, hotspot, and
+//! cross-match-heavy.
 
 use crate::prng::Rng;
 
 use super::query::{Query, SourceFilter};
-use super::server::Server;
 
 /// Relative weights of the four query classes.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -284,99 +275,6 @@ impl LoadGen {
                 radius: self.rng.uniform_in(0.5, 4.0),
             }
         }
-    }
-}
-
-/// Open-loop run outcome (latency lives in the server's report).
-#[derive(Clone, Debug, Default)]
-pub struct OpenLoopReport {
-    pub offered: u64,
-    pub accepted: u64,
-    pub shed: u64,
-    pub wall_secs: f64,
-}
-
-impl OpenLoopReport {
-    pub fn offered_qps(&self) -> f64 {
-        self.offered as f64 / self.wall_secs.max(1e-9)
-    }
-}
-
-/// Drive the server open-loop: Poisson arrivals at `qps` for `secs`.
-pub fn run_open_loop(server: &Server, gen: &mut LoadGen, qps: f64, secs: f64) -> OpenLoopReport {
-    let start = Instant::now();
-    let mut next_at = 0.0f64; // seconds since start, absolute schedule
-    let mut report = OpenLoopReport::default();
-    loop {
-        let now = start.elapsed().as_secs_f64();
-        if now >= secs {
-            break;
-        }
-        if now < next_at {
-            std::thread::sleep(Duration::from_secs_f64((next_at - now).min(0.005)));
-            continue;
-        }
-        report.offered += 1;
-        if server.try_submit(gen.next_query()) {
-            report.accepted += 1;
-        } else {
-            report.shed += 1;
-        }
-        // exponential inter-arrival on the absolute clock: late arrivals
-        // burst to catch up, as a true open-loop source does
-        next_at += gen.next_interarrival(qps);
-    }
-    report.wall_secs = start.elapsed().as_secs_f64();
-    report
-}
-
-/// Closed-loop run outcome.
-#[derive(Clone, Debug, Default)]
-pub struct ClosedLoopReport {
-    pub completed: u64,
-    pub shed: u64,
-    pub wall_secs: f64,
-}
-
-impl ClosedLoopReport {
-    pub fn qps(&self) -> f64 {
-        self.completed as f64 / self.wall_secs.max(1e-9)
-    }
-}
-
-/// Drive the server with `clients` synchronous loops for `secs`.
-pub fn run_closed_loop(
-    server: &Server,
-    gen: &mut LoadGen,
-    clients: usize,
-    secs: f64,
-) -> ClosedLoopReport {
-    let completed = AtomicU64::new(0);
-    let shed = AtomicU64::new(0);
-    let start = Instant::now();
-    let deadline = Duration::from_secs_f64(secs);
-    std::thread::scope(|scope| {
-        for c in 0..clients.max(1) {
-            let mut cgen = gen.fork(c as u64 + 1);
-            let (completed, shed) = (&completed, &shed);
-            scope.spawn(move || {
-                while start.elapsed() < deadline {
-                    let q = cgen.next_query();
-                    if server.call(q).is_some() {
-                        completed.fetch_add(1, Ordering::Relaxed);
-                    } else {
-                        shed.fetch_add(1, Ordering::Relaxed);
-                        // shed under closed loop: back off briefly
-                        std::thread::sleep(Duration::from_micros(200));
-                    }
-                }
-            });
-        }
-    });
-    ClosedLoopReport {
-        completed: completed.load(Ordering::Relaxed),
-        shed: shed.load(Ordering::Relaxed),
-        wall_secs: start.elapsed().as_secs_f64(),
     }
 }
 

@@ -10,30 +10,36 @@
 //! * [`query`] — typed queries (cone, box, brightest-N, star/galaxy
 //!   filters, uncertainty-aware cross-match), answered per-shard and
 //!   merged; a brute-force reference executor pins the semantics.
-//! * [`server`] — multi-threaded executor over `Arc<Store>`: bounded
-//!   queue, worker pool, per-class LRU result cache, admission control,
-//!   per-class latency quantiles.
-//! * [`loadgen`] — open-loop (Poisson) and closed-loop load generators
-//!   with configurable query mix and Zipf-skewed sky hotspots.
+//! * [`engine`] — the unified serving API: a `Request`/`Response`
+//!   envelope, the [`QueryEngine`] trait every tier implements, the
+//!   composable `Admission`/`Cached`/`Hedged` middleware layers, and
+//!   one open/closed-loop driver over a wall or simulated clock.
+//! * [`server`] — the wall-clock tier: worker pool over `Arc<Store>`
+//!   with a bounded queue and per-class latency quantiles.
+//! * [`loadgen`] — deterministic query streams with configurable query
+//!   mix and Zipf-skewed sky hotspots.
 //! * [`snapshot`] — jsonlite snapshot format bridging `infer` output to
 //!   serving across process boundaries.
 //! * [`dist`] — the multi-node tier: replicated shard placement, fabric-
-//!   backed remote shard clients, a load-balanced scatter-gather router,
-//!   and failure injection — all in simulated time.
+//!   backed remote shard clients, a load-balanced scatter-gather router
+//!   with replica hedging, and failure injection — in simulated time.
 //!
 //! Entry points: `celeste serve-bench` (CLI) and `benches/bench_serve`.
 
 pub mod dist;
+pub mod engine;
 pub mod loadgen;
 pub mod query;
 pub mod server;
 pub mod snapshot;
 pub mod store;
 
-pub use loadgen::{
-    run_closed_loop, run_open_loop, ClosedLoopReport, LoadGen, LoadGenConfig, OpenLoopReport,
-    QueryMix,
+pub use engine::{
+    drive_closed_loop, drive_open_loop, layered, metric, Admission, Cached, Clock, Consistency,
+    DirectEngine, DriveReport, Hedged, LayerSpec, Outcome, QueryEngine, Request, Response,
+    ResultCache, RouterEngine, ScanEngine, ServerEngine, SimClock, Submitted, Trace, WallClock,
 };
+pub use loadgen::{LoadGen, LoadGenConfig, QueryMix};
 pub use query::{
     cross_match_catalog, execute, execute_on_shard, execute_scan, merge_replies, MatchResult,
     Query, QueryClass, QueryResult, ShardReply, SourceFilter, N_QUERY_CLASSES,

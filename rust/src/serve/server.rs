@@ -5,8 +5,8 @@
 //! ```text
 //!   clients ──try_submit──▶ bounded queue ──▶ worker pool ──▶ shards
 //!                 │ (admission control:          │
-//!                 ▼  shed beyond depth)          ├─ per-class LRU result cache
-//!               shed                             └─ per-worker latency Stats
+//!                 ▼  shed beyond depth)          └─ per-worker latency Stats
+//!               shed
 //! ```
 //!
 //! Workers pull jobs from a single bounded FIFO guarded by a mutex +
@@ -15,8 +15,13 @@
 //! than unbounded latency. All per-request accounting is worker-local
 //! and merged once at shutdown (same discipline as the inference
 //! coordinator's per-worker stats).
+//!
+//! Result caching used to live here too; it is now the engine API's
+//! composable [`Cached`](crate::serve::engine::Cached) layer, shared by
+//! every tier. Stack it as `Cached<ServerEngine>` to get the old
+//! behavior (and the same layer caches the distributed router).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Instant;
@@ -33,13 +38,11 @@ pub struct ServerConfig {
     pub threads: usize,
     /// queue depth bound beyond which new requests are shed
     pub queue_depth: usize,
-    /// per-query-class LRU result cache capacity, entries (0 disables)
-    pub cache_entries: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { threads: 4, queue_depth: 1024, cache_entries: 512 }
+        ServerConfig { threads: 4, queue_depth: 1024 }
     }
 }
 
@@ -54,63 +57,11 @@ struct QueueState {
     shutdown: bool,
 }
 
-/// Entry-count LRU mapping query cache keys to cloned results. The
-/// stored query is compared on probe so a 64-bit key collision returns
-/// a miss instead of silently serving another query's result.
-struct ResultCache {
-    capacity: usize,
-    map: HashMap<u64, (Query, QueryResult, u64)>,
-    tick: u64,
-}
-
-impl ResultCache {
-    fn new(capacity: usize) -> ResultCache {
-        ResultCache { capacity, map: HashMap::new(), tick: 0 }
-    }
-
-    fn get(&mut self, key: u64, q: &Query) -> Option<QueryResult> {
-        self.tick += 1;
-        let tick = self.tick;
-        match self.map.get_mut(&key) {
-            Some(e) if e.0 == *q => {
-                e.2 = tick;
-                Some(e.1.clone())
-            }
-            _ => None,
-        }
-    }
-
-    fn put(&mut self, key: u64, q: Query, v: QueryResult) {
-        if self.capacity == 0 {
-            return;
-        }
-        self.tick += 1;
-        if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
-            // amortized eviction: drop the least-recent ~1/8 of entries
-            // in one pass instead of an O(n) scan per insert (this runs
-            // under the class mutex on the worker hot path)
-            let mut ticks: Vec<u64> = self.map.values().map(|e| e.2).collect();
-            ticks.sort_unstable();
-            let cut = ticks[(ticks.len() / 8).min(ticks.len() - 1)];
-            self.map.retain(|_, e| e.2 > cut);
-            if self.map.len() >= self.capacity {
-                // all survivors newer than cut (degenerate tie case)
-                let victim = self.map.iter().min_by_key(|(_, e)| e.2).map(|(&k, _)| k);
-                if let Some(k) = victim {
-                    self.map.remove(&k);
-                }
-            }
-        }
-        self.map.insert(key, (q, v, self.tick));
-    }
-}
-
 struct Shared {
     store: Arc<Store>,
     cfg: ServerConfig,
     state: Mutex<QueueState>,
     not_empty: Condvar,
-    caches: Vec<Mutex<ResultCache>>,
     accepted: AtomicU64,
     shed: AtomicU64,
 }
@@ -120,7 +71,6 @@ struct Shared {
 struct WorkerLocal {
     latency: [Stats; N_QUERY_CLASSES],
     executed: u64,
-    cache_hits: u64,
 }
 
 /// Final report: throughput counters plus per-class latency
@@ -130,7 +80,6 @@ pub struct ServerReport {
     pub accepted: u64,
     pub shed: u64,
     pub executed: u64,
-    pub cache_hits: u64,
     /// queue-entry → reply latency per query class
     pub latency: [Stats; N_QUERY_CLASSES],
 }
@@ -138,19 +87,7 @@ pub struct ServerReport {
 impl ServerReport {
     /// All-classes latency distribution.
     pub fn latency_all(&self) -> Stats {
-        let mut all = Stats::new();
-        for s in &self.latency {
-            all.merge(s);
-        }
-        all
-    }
-
-    pub fn cache_hit_rate(&self) -> f64 {
-        if self.executed == 0 {
-            0.0
-        } else {
-            self.cache_hits as f64 / self.executed as f64
-        }
+        Stats::merge_all(&self.latency)
     }
 
     /// Multi-line human summary with per-class quantiles.
@@ -158,11 +95,10 @@ impl ServerReport {
         let all = self.latency_all();
         let aq = all.quantiles(&[0.50, 0.99]);
         let mut out = format!(
-            "served {} (accepted {}, shed {}), cache hit rate {:.1}%\n  all      p50={:.3}ms p99={:.3}ms max={:.3}ms",
+            "served {} (accepted {}, shed {})\n  all      p50={:.3}ms p99={:.3}ms max={:.3}ms",
             self.executed,
             self.accepted,
             self.shed,
-            100.0 * self.cache_hit_rate(),
             aq[0] * 1e3,
             aq[1] * 1e3,
             if all.n == 0 { 0.0 } else { all.max * 1e3 },
@@ -185,24 +121,22 @@ impl ServerReport {
     }
 }
 
-/// The running server. Dropping without `shutdown()` leaks workers;
-/// always call `shutdown()` to stop and collect the report.
+/// The running server. Call [`Server::shutdown`] to stop the workers
+/// and collect the report (shareable as `Arc<Server>`, so an engine
+/// stack and the owner can hold it at once; the first `shutdown` wins,
+/// later ones return an empty report).
 pub struct Server {
     shared: Arc<Shared>,
-    handles: Vec<std::thread::JoinHandle<WorkerLocal>>,
+    handles: Mutex<Vec<std::thread::JoinHandle<WorkerLocal>>>,
 }
 
 impl Server {
     pub fn start(store: Arc<Store>, cfg: ServerConfig) -> Server {
-        let caches = (0..N_QUERY_CLASSES)
-            .map(|_| Mutex::new(ResultCache::new(cfg.cache_entries)))
-            .collect();
         let shared = Arc::new(Shared {
             store,
             cfg: cfg.clone(),
             state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
             not_empty: Condvar::new(),
-            caches,
             accepted: AtomicU64::new(0),
             shed: AtomicU64::new(0),
         });
@@ -212,7 +146,12 @@ impl Server {
                 std::thread::spawn(move || worker_loop(&sh))
             })
             .collect();
-        Server { shared, handles }
+        Server { shared, handles: Mutex::new(handles) }
+    }
+
+    /// Configured worker-thread count.
+    pub fn threads(&self) -> usize {
+        self.shared.cfg.threads
     }
 
     fn submit(&self, query: Query, reply: Option<mpsc::Sender<QueryResult>>) -> bool {
@@ -249,21 +188,21 @@ impl Server {
     }
 
     /// Drain remaining jobs, stop workers, merge per-worker accounting.
-    pub fn shutdown(self) -> ServerReport {
+    pub fn shutdown(&self) -> ServerReport {
         {
             let mut st = self.shared.state.lock().unwrap();
             st.shutdown = true;
         }
         self.shared.not_empty.notify_all();
+        let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
         let mut report = ServerReport {
             accepted: self.shared.accepted.load(Ordering::Relaxed),
             shed: self.shared.shed.load(Ordering::Relaxed),
             ..Default::default()
         };
-        for h in self.handles {
+        for h in handles {
             let local = h.join().expect("server worker panicked");
             report.executed += local.executed;
-            report.cache_hits += local.cache_hits;
             for (dst, src) in report.latency.iter_mut().zip(&local.latency) {
                 dst.merge(src);
             }
@@ -289,28 +228,7 @@ fn worker_loop(shared: &Shared) -> WorkerLocal {
         };
         let Some(job) = job else { break };
         let class = job.query.class();
-        let key = job.query.cache_key();
-        let cached = if shared.cfg.cache_entries > 0 {
-            shared.caches[class.index()].lock().unwrap().get(key, &job.query)
-        } else {
-            None
-        };
-        let result = match cached {
-            Some(r) => {
-                local.cache_hits += 1;
-                r
-            }
-            None => {
-                let r = execute(&shared.store, &job.query);
-                if shared.cfg.cache_entries > 0 {
-                    shared.caches[class.index()]
-                        .lock()
-                        .unwrap()
-                        .put(key, job.query.clone(), r.clone());
-                }
-                r
-            }
-        };
+        let result = execute(&shared.store, &job.query);
         local.latency[class.index()].push(job.enqueued.elapsed().as_secs_f64());
         local.executed += 1;
         if let Some(tx) = job.reply {
@@ -371,10 +289,7 @@ mod tests {
     fn admission_control_sheds_beyond_depth() {
         let (store, _) = small_store(50);
         // zero workers: the queue only fills, deterministically
-        let server = Server::start(
-            store,
-            ServerConfig { threads: 0, queue_depth: 4, cache_entries: 0 },
-        );
+        let server = Server::start(store, ServerConfig { threads: 0, queue_depth: 4 });
         let q = Query::BrightestN { n: 3, filter: SourceFilter::Any };
         let mut ok = 0;
         for _ in 0..10 {
@@ -391,46 +306,15 @@ mod tests {
     }
 
     #[test]
-    fn identical_queries_hit_the_cache() {
-        let (store, flat) = small_store(300);
-        // one worker => strictly sequential service => deterministic hits
-        let server = Server::start(
-            store,
-            ServerConfig { threads: 1, queue_depth: 64, cache_entries: 32 },
-        );
-        let q = Query::Cone { center: (150.0, 150.0), radius: 60.0, filter: SourceFilter::Any };
-        let want = execute_scan(&flat, &q);
-        for _ in 0..20 {
-            assert_eq!(server.call(q.clone()).unwrap(), want);
-        }
-        let report = server.shutdown();
-        assert_eq!(report.executed, 20);
-        assert_eq!(report.cache_hits, 19);
-        assert!(report.cache_hit_rate() > 0.9);
-    }
-
-    #[test]
-    fn cache_evicts_lru_beyond_capacity() {
-        let mut c = ResultCache::new(2);
-        let r = QueryResult::Sources(Vec::new());
-        let q = Query::BrightestN { n: 1, filter: SourceFilter::Any };
-        c.put(1, q.clone(), r.clone());
-        c.put(2, q.clone(), r.clone());
-        assert!(c.get(1, &q).is_some()); // refresh 1 => 2 is LRU
-        c.put(3, q.clone(), r.clone());
-        assert!(c.get(2, &q).is_none(), "2 should be evicted");
-        assert!(c.get(1, &q).is_some());
-        assert!(c.get(3, &q).is_some());
-    }
-
-    #[test]
-    fn cache_key_collision_is_a_miss_not_a_wrong_answer() {
-        let mut c = ResultCache::new(4);
-        let q1 = Query::BrightestN { n: 1, filter: SourceFilter::Any };
-        let q2 = Query::BrightestN { n: 2, filter: SourceFilter::Any };
-        // simulate a 64-bit key collision: same key, different query
-        c.put(42, q1.clone(), QueryResult::Sources(Vec::new()));
-        assert!(c.get(42, &q1).is_some());
-        assert!(c.get(42, &q2).is_none(), "colliding key must not serve q1's result for q2");
+    fn shutdown_is_shareable_and_idempotent() {
+        let (store, _) = small_store(100);
+        let server = Arc::new(Server::start(store, ServerConfig::default()));
+        let q = Query::BrightestN { n: 2, filter: SourceFilter::Any };
+        assert!(server.call(q).is_some());
+        let first = server.shutdown();
+        assert_eq!(first.executed, 1);
+        // a second shutdown through another handle finds no workers
+        let second = server.shutdown();
+        assert_eq!(second.executed, 0);
     }
 }

@@ -1,0 +1,250 @@
+//! Engine-API invariants: any tier behind any middleware stack, in any
+//! order, returns byte-identical results to direct `query::execute`;
+//! cached responses equal uncached ones; deadlines and admission behave
+//! uniformly; and hedged requests measurably improve the p999 tail over
+//! p2c-alone under the hotspot mix at equal offered load (the ROADMAP's
+//! speculative-requests acceptance).
+
+use std::sync::Arc;
+
+use celeste::prng::Rng;
+use celeste::serve::dist::{Router, RouterConfig, Routing};
+use celeste::serve::{
+    self, drive_open_loop, execute, layered, Admission, Cached, DirectEngine, Hedged, LayerSpec,
+    LoadGen, LoadGenConfig, Outcome, Query, QueryEngine, Request, RouterEngine, ScanEngine,
+    Server, ServerConfig, ServerEngine, SimClock, SourceFilter, Store,
+};
+
+fn test_store(n: usize, shards: usize, seed: u64) -> Arc<Store> {
+    let snap = serve::snapshot::synthetic(n, seed);
+    Arc::new(Store::build(snap.sources, snap.width, snap.height, shards))
+}
+
+fn random_query(rng: &mut Rng, w: f64, h: f64, i: usize) -> Query {
+    let filters = [SourceFilter::Any, SourceFilter::StarsOnly, SourceFilter::GalaxiesOnly];
+    let filter = filters[i % 3];
+    match i % 4 {
+        0 => Query::Cone {
+            center: (rng.uniform_in(-40.0, w + 40.0), rng.uniform_in(-40.0, h + 40.0)),
+            radius: rng.uniform_in(1.0, 220.0),
+            filter,
+        },
+        1 => {
+            let ax = rng.uniform_in(0.0, w);
+            let ay = rng.uniform_in(0.0, h);
+            let bx = rng.uniform_in(0.0, w);
+            let by = rng.uniform_in(0.0, h);
+            Query::BoxSearch {
+                x0: ax.min(bx),
+                y0: ay.min(by),
+                x1: ax.max(bx),
+                y1: ay.max(by),
+                filter,
+            }
+        }
+        2 => Query::BrightestN { n: rng.below(120) as usize, filter },
+        _ => Query::CrossMatch {
+            pos: (rng.uniform_in(0.0, w), rng.uniform_in(0.0, h)),
+            radius: rng.uniform_in(0.3, 8.0),
+        },
+    }
+}
+
+/// Acceptance: for any query, the layered engine stack — any tier, any
+/// middleware order — returns byte-identical `QueryResult`s to direct
+/// `query::execute`, and the repeated (cache-served) request returns
+/// the identical result again.
+#[test]
+fn layered_stacks_match_direct_execution_across_tiers_and_orders() {
+    let store = test_store(1500, 8, 61);
+    let (w, h) = (store.width, store.height);
+    let flat = store.all_sources();
+
+    for tier_id in 0..4usize {
+        for arrangement in 0..4usize {
+            let server = Arc::new(Server::start(
+                Arc::clone(&store),
+                ServerConfig { threads: 2, ..Default::default() },
+            ));
+            let base: Box<dyn QueryEngine> = match tier_id {
+                0 => Box::new(ScanEngine::new(flat.clone())),
+                1 => Box::new(DirectEngine::new(Arc::clone(&store))),
+                2 => Box::new(ServerEngine::new(Arc::clone(&server))),
+                _ => Box::new(RouterEngine::new(Router::new(
+                    Arc::clone(&store),
+                    4,
+                    2,
+                    RouterConfig::default(),
+                ))),
+            };
+            // a 1 us hedge budget fires constantly on the router tier,
+            // so the hedge path itself is parity-tested
+            let engine: Box<dyn QueryEngine> = match arrangement {
+                0 => base,
+                1 => Box::new(Cached::new(Hedged::new(base, 1e-6), 64)),
+                2 => Box::new(Hedged::new(Cached::new(base, 64), 1e-6)),
+                _ => Box::new(Admission::new(
+                    Cached::new(Hedged::new(base, 1e-6), 64),
+                    1 << 20,
+                )),
+            };
+            let mut rng = Rng::new(7 + tier_id as u64 * 13 + arrangement as u64);
+            let mut now = 0.0f64;
+            for i in 0..40usize {
+                let q = random_query(&mut rng, w, h, i);
+                let want = execute(&store, &q);
+                for repeat in 0..2 {
+                    let resp = engine.call(Request::new(q.clone()).arriving_at(now));
+                    assert_eq!(
+                        resp.trace.outcome,
+                        Outcome::Served,
+                        "tier {tier_id} arrangement {arrangement} query {i} repeat {repeat}"
+                    );
+                    assert_eq!(
+                        resp.result.as_ref().expect("served"),
+                        &want,
+                        "tier {tier_id} arrangement {arrangement} query {i} repeat {repeat}: {q:?}"
+                    );
+                    now += 1e-4;
+                }
+            }
+            let _ = server.shutdown();
+        }
+    }
+}
+
+#[test]
+fn fresh_requests_bypass_the_cache_but_match() {
+    let store = test_store(800, 6, 17);
+    let engine = Cached::new(DirectEngine::new(Arc::clone(&store)), 32);
+    let q = Query::BrightestN { n: 12, filter: SourceFilter::Any };
+    let want = execute(&store, &q);
+    let a = engine.call(Request::new(q.clone()));
+    assert!(!a.trace.cache_hit);
+    let b = engine.call(Request::new(q.clone()));
+    assert!(b.trace.cache_hit, "second identical request must hit");
+    let c = engine.call(Request::new(q.clone()).fresh());
+    assert!(!c.trace.cache_hit, "fresh must bypass the cache probe");
+    for r in [a, b, c] {
+        assert_eq!(r.result.expect("served"), want, "cached == uncached == fresh");
+    }
+    assert_eq!(engine.hits(), 1);
+    assert_eq!(engine.misses(), 2);
+}
+
+#[test]
+fn deadlines_drop_late_results_uniformly() {
+    let store = test_store(600, 4, 23);
+    let engine =
+        RouterEngine::new(Router::new(Arc::clone(&store), 2, 1, RouterConfig::default()));
+    let q = Query::BrightestN { n: 5, filter: SourceFilter::Any };
+    // shard service takes at least the cost model's base time, so a
+    // 1 ns budget is always exceeded in simulated time
+    let late = engine.call(Request::new(q.clone()).with_deadline(1e-9));
+    assert_eq!(late.trace.outcome, Outcome::DeadlineExceeded);
+    assert!(late.result.is_none(), "late results must be dropped");
+    // a generous budget passes through untouched
+    let ok = engine.call(Request::new(q.clone()).arriving_at(1.0).with_deadline(10.0));
+    assert_eq!(ok.trace.outcome, Outcome::Served);
+    assert_eq!(ok.result.unwrap(), execute(&store, &q));
+}
+
+#[test]
+fn admission_sheds_on_simulated_backlog_and_drains() {
+    let store = test_store(500, 4, 29);
+    let tier =
+        RouterEngine::new(Router::new(Arc::clone(&store), 2, 2, RouterConfig::default()));
+    let engine = Admission::new(tier, 2);
+    let q = Query::BrightestN { n: 3, filter: SourceFilter::Any };
+    // two requests at t=0 fill the in-flight bound (their completions
+    // lie in the simulated future); the third sheds
+    let r1 = engine.call(Request::new(q.clone()));
+    let r2 = engine.call(Request::new(q.clone()));
+    assert_eq!(r1.trace.outcome, Outcome::Served);
+    assert_eq!(r2.trace.outcome, Outcome::Served);
+    let r3 = engine.call(Request::new(q.clone()));
+    assert_eq!(r3.trace.outcome, Outcome::Shed);
+    assert!(r3.result.is_none());
+    assert_eq!(engine.shed(), 1);
+    // far in the future the backlog has drained
+    let r4 = engine.call(Request::new(q.clone()).arriving_at(1e6));
+    assert_eq!(r4.trace.outcome, Outcome::Served);
+    assert_eq!(r4.result.unwrap(), execute(&store, &q));
+}
+
+#[test]
+fn describe_echoes_the_layer_stack_outermost_first() {
+    let store = test_store(300, 4, 31);
+    let spec = LayerSpec { admit_depth: 256, cache_entries: 128, hedge_budget: 2e-4 };
+    let engine = layered(Box::new(DirectEngine::new(Arc::clone(&store))), &spec);
+    let desc = engine.describe();
+    assert!(desc.starts_with("admit(256)"), "{desc}");
+    let admit_pos = desc.find("admit").unwrap();
+    let cache_pos = desc.find("cached").unwrap();
+    let hedge_pos = desc.find("hedged").unwrap();
+    let tier_pos = desc.find("direct").unwrap();
+    assert!(
+        admit_pos < cache_pos && cache_pos < hedge_pos && hedge_pos < tier_pos,
+        "layer order wrong: {desc}"
+    );
+}
+
+/// Acceptance: hedged requests measurably improve p999 over p2c-alone
+/// under the hotspot mix at equal offered load. The budget is tuned
+/// from the unhedged run's own latency quantiles, exactly how a real
+/// deployment tunes a hedge; the best candidate must beat the unhedged
+/// tail. (`bench_serve` runs the same comparison and records it in
+/// `BENCH_serve.json`.)
+#[test]
+fn hedged_improves_p999_over_p2c_alone_under_hotspot() {
+    let store = test_store(3000, 12, 99);
+    let (w, h) = (store.width, store.height);
+    let run = |budget: Option<f64>| {
+        let router = Router::new(
+            Arc::clone(&store),
+            6,
+            3,
+            RouterConfig { routing: Routing::PowerOfTwo, seed: 4242, ..Default::default() },
+        );
+        let tier = RouterEngine::new(router);
+        let cfg = LoadGenConfig::scenario("hotspot", 4242).unwrap();
+        let mut gen = LoadGen::new(cfg, w, h);
+        let mut clock = SimClock::new();
+        match budget {
+            Some(b) => {
+                let engine = Hedged::new(tier, b);
+                drive_open_loop(&engine, &mut clock, &mut gen, 50_000.0, 0.3)
+            }
+            None => drive_open_loop(&tier, &mut clock, &mut gen, 50_000.0, 0.3),
+        }
+    };
+    let base = run(None);
+    assert_eq!(base.failed, 0);
+    assert_eq!(base.hedges, 0, "no hedge layer, no hedges");
+    assert!(base.offered > 5_000, "too few queries: {}", base.offered);
+    let base_p999 = base.latency_all().quantile(0.999);
+    assert!(base_p999 > 0.0);
+    let budgets = base.latency_all().quantiles(&[0.90, 0.95, 0.99]);
+    let mut best = f64::INFINITY;
+    let mut fired_total = 0u64;
+    let mut wins_total = 0u64;
+    for &b in &budgets {
+        if b <= 0.0 {
+            continue;
+        }
+        let hedged = run(Some(b));
+        assert_eq!(hedged.offered, base.offered, "equal offered load means equal streams");
+        assert_eq!(hedged.failed, 0);
+        fired_total += hedged.hedges;
+        wins_total += hedged.hedge_wins;
+        best = best.min(hedged.latency_all().quantile(0.999));
+    }
+    assert!(fired_total > 0, "no hedges fired at any candidate budget");
+    assert!(wins_total > 0, "hedges never beat the primary replica");
+    assert!(
+        best < base_p999,
+        "hedging must clip the p999 tail: best hedged {:.3}ms vs p2c-alone {:.3}ms",
+        best * 1e3,
+        base_p999 * 1e3
+    );
+}

@@ -9,12 +9,11 @@ use std::sync::Arc;
 use celeste::catalog::{hilbert_d2xy, hilbert_sky_key, hilbert_xy2d, noisy_catalog};
 use celeste::prng::Rng;
 use celeste::quickcheck::forall_with;
-use celeste::serve::dist::{
-    run_sim_open_loop, FailureSchedule, Router, RouterConfig, Routing,
-};
+use celeste::serve::dist::{FailureSchedule, Router, RouterConfig, Routing};
 use celeste::serve::{
-    self, cross_match_catalog, execute, execute_scan, LoadGen, LoadGenConfig, Query, QueryResult,
-    Server, ServerConfig, ServedSource, SourceFilter, Store,
+    self, cross_match_catalog, drive_open_loop, execute, execute_scan, LoadGen, LoadGenConfig,
+    Query, QueryEngine, QueryResult, Request, RouterEngine, Server, ServerConfig, ServedSource,
+    SimClock, SourceFilter, Store,
 };
 use celeste::sky::{generate, SkyConfig};
 
@@ -136,7 +135,7 @@ fn server_returns_exactly_direct_execution_results() {
     let flat = store.all_sources();
     let server = Server::start(
         Arc::clone(&store),
-        ServerConfig { threads: 4, queue_depth: 256, cache_entries: 64 },
+        ServerConfig { threads: 4, queue_depth: 256 },
     );
     let mut rng = Rng::new(2);
     let mut served = 0;
@@ -299,15 +298,17 @@ fn p2c_beats_random_p99_under_hotspot_load() {
         let snap = synthetic_snapshot(3000, 99);
         let (w, h) = (snap.width, snap.height);
         let store = Arc::new(Store::build(snap.sources, w, h, 12));
-        let mut router = Router::new(
+        let router = Router::new(
             store,
             6,
             3,
             RouterConfig { routing, seed: 4242, ..Default::default() },
         );
+        let engine = RouterEngine::new(router);
         let cfg = LoadGenConfig::scenario("hotspot", 4242).unwrap();
         let mut gen = LoadGen::new(cfg, w, h);
-        let rep = run_sim_open_loop(&mut router, &mut gen, 50_000.0, 0.3);
+        let mut clock = SimClock::new();
+        let rep = drive_open_loop(&engine, &mut clock, &mut gen, 50_000.0, 0.3);
         assert_eq!(rep.failed, 0);
         (rep.latency_all().p99(), rep.completed)
     }
@@ -347,18 +348,111 @@ fn killed_replica_of_three_fails_over_with_zero_failed_queries() {
         .expect("3 distinct replicas include a non-origin node");
     router = router
         .with_schedule(FailureSchedule::parse(&format!("{victim}@0.1")).unwrap());
+    let engine = RouterEngine::new(router);
     let cfg = LoadGenConfig::scenario("hotspot", 7).unwrap();
     let mut gen = LoadGen::new(cfg, w, h);
-    let rep = run_sim_open_loop(&mut router, &mut gen, 10_000.0, 0.3);
+    let mut clock = SimClock::new();
+    let drive = drive_open_loop(&engine, &mut clock, &mut gen, 10_000.0, 0.3);
+    let rep = engine.dist_report(&drive);
     assert_eq!(rep.failed, 0, "3-way replication must absorb one node kill");
     assert_eq!(rep.completed, rep.offered);
     assert!(rep.failover.n >= 1, "the dead replica was never discovered");
     assert!(rep.failover.mean() > 0.0 && !rep.failover.mean().is_nan());
     assert!(rep.failover.max >= rep.failover.mean());
-    // parity survives the kill
+    // parity survives the kill (through the engine API)
     let q = Query::BrightestN { n: 25, filter: SourceFilter::Any };
-    let (res, _) = router.execute(1.0, &q);
-    assert_eq!(res.expect("survivors answer"), execute(&store, &q));
+    let resp = engine.call(Request::new(q.clone()).arriving_at(1.0));
+    assert_eq!(resp.result.expect("survivors answer"), execute(&store, &q));
+}
+
+/// Golden stability of `Query::cache_key`: router-tier caching makes
+/// these keys cross-node-visible, so silent algorithm drift would
+/// invalidate (or worse, cross-wire) every warm cache in a
+/// mixed-version fleet. Expected values were computed independently
+/// (FNV-1a over the exact parameter bits).
+#[test]
+fn cache_key_golden_values_are_stable() {
+    let cases: [(Query, u64); 4] = [
+        (
+            Query::Cone { center: (1.5, 2.5), radius: 3.25, filter: SourceFilter::Any },
+            0x2e7f_6cae_a7dc_7eec,
+        ),
+        (
+            Query::BoxSearch {
+                x0: 0.0,
+                y0: 0.25,
+                x1: 100.5,
+                y1: 200.75,
+                filter: SourceFilter::StarsOnly,
+            },
+            0x0384_6c60_0580_fbfc,
+        ),
+        (
+            Query::BrightestN { n: 17, filter: SourceFilter::GalaxiesOnly },
+            0xe1c3_9518_70cb_e261,
+        ),
+        (
+            Query::CrossMatch { pos: (7.5, 8.25), radius: 2.5 },
+            0x5758_465e_44f7_21b1,
+        ),
+    ];
+    for (q, want) in cases {
+        assert_eq!(q.cache_key(), want, "cache_key drifted for {q:?}");
+    }
+}
+
+/// Distinct queries must get distinct 64-bit keys across a structured
+/// parameter sweep plus a generated hotspot stream (repeats are
+/// expected there and must map to the repeated key, never a fresh one).
+#[test]
+fn cache_keys_distinct_across_a_query_sweep() {
+    use std::collections::{HashMap, HashSet};
+    let filters = [SourceFilter::Any, SourceFilter::StarsOnly, SourceFilter::GalaxiesOnly];
+    let mut queries: Vec<Query> = Vec::new();
+    for &filter in &filters {
+        for i in 0..10 {
+            for j in 0..10 {
+                let (x, y) = (i as f64 * 37.5, j as f64 * 21.25);
+                queries.push(Query::Cone {
+                    center: (x, y),
+                    radius: 1.0 + i as f64 + j as f64 * 0.5,
+                    filter,
+                });
+                queries.push(Query::BoxSearch {
+                    x0: x,
+                    y0: y,
+                    x1: x + 10.0 + i as f64,
+                    y1: y + 5.0 + j as f64,
+                    filter,
+                });
+                queries.push(Query::CrossMatch {
+                    pos: (x, y),
+                    radius: 0.5 + 0.25 * (i + 10 * j) as f64,
+                });
+            }
+        }
+        for n in 0..200 {
+            queries.push(Query::BrightestN { n, filter });
+        }
+    }
+    let mut gen =
+        LoadGen::new(LoadGenConfig::scenario("hotspot", 12).unwrap(), 800.0, 600.0);
+    for _ in 0..3000 {
+        queries.push(gen.next_query());
+    }
+    let mut by_key: HashMap<u64, Query> = HashMap::new();
+    let mut distinct: HashSet<String> = HashSet::new();
+    for q in queries {
+        distinct.insert(format!("{q:?}"));
+        let key = q.cache_key();
+        if let Some(prev) = by_key.get(&key) {
+            assert_eq!(*prev, q, "64-bit key collision between distinct queries");
+        } else {
+            by_key.insert(key, q);
+        }
+    }
+    assert_eq!(by_key.len(), distinct.len(), "distinct queries must get distinct keys");
+    assert!(by_key.len() > 1000, "sweep too small: {}", by_key.len());
 }
 
 #[test]
