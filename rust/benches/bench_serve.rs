@@ -3,9 +3,11 @@
 //! throughput at 1 vs 4 worker threads, and the distributed tier —
 //! routing-policy tail latency under the hotspot mix, hedged-request
 //! p999 vs p2c-alone, router-tier cache hit rate vs fabric bytes
-//! saved, and a failover drill — all driven through the unified
-//! `QueryEngine` stack. Results are also written to `BENCH_serve.json`
-//! so the perf trajectory accumulates across PRs.
+//! saved, a failover drill, and live ingestion (read p99 + hit rate
+//! during delta publishes vs quiesced, plus the fresh-read propagation
+//! cost) — all driven through the unified `QueryEngine` stack. Results
+//! are also written to `BENCH_serve.json` so the perf trajectory
+//! accumulates across PRs.
 
 use std::sync::Arc;
 
@@ -14,15 +16,19 @@ use celeste::experiments::obj_pub;
 use celeste::jsonlite::{self, Value};
 use celeste::serve::dist::{DistReport, FailureSchedule, Router, RouterConfig, Routing};
 use celeste::serve::{
-    self, drive_closed_loop, drive_open_loop, Cached, DriveReport, Hedged, LoadGen,
+    self, drive_closed_loop, drive_open_loop, drive_open_loop_with, Cached, Consistency,
+    Consistent, DriftConfig, DriftGen, DriveReport, Hedged, IngestDriver, Ingestor, LoadGen,
     LoadGenConfig, Query, QueryEngine, RouterEngine, Server, ServerConfig, ServerEngine,
-    SimClock, SourceFilter, Store,
+    SimClock, SourceFilter, Store, VersionedStore,
 };
 
 const DIST_NODES: usize = 6;
 const DIST_REPLICAS: usize = 3;
 const DIST_QPS: f64 = 50_000.0;
 const DIST_SECS: f64 = 0.3;
+/// ingestion section: delta publishes per simulated second / batch size
+const INGEST_RATE: f64 = 400.0;
+const INGEST_BATCH: usize = 64;
 
 fn dist_router(store: &Arc<Store>, routing: Routing) -> Router {
     Router::new(
@@ -41,6 +47,43 @@ fn dist_drive<E: QueryEngine>(engine: &E, store: &Arc<Store>) -> DriveReport {
     let mut gen = LoadGen::new(cfg, store.width, store.height);
     let mut clock = SimClock::new();
     drive_open_loop(engine, &mut clock, &mut gen, DIST_QPS, DIST_SECS)
+}
+
+/// Drive the drift (mixed read/write) scenario: the identical read
+/// stream every time, with `rate` delta publishes per simulated second
+/// ingested through copy-on-write epochs and shipped to the replica
+/// tier (`rate = 0`: quiesced baseline). Returns the drive plus the
+/// publish/row counts.
+fn drift_drive<E: QueryEngine>(
+    engine: &E,
+    store: &Arc<Store>,
+    tier: &RouterEngine,
+    rate: f64,
+) -> (DriveReport, u64, u64) {
+    let cfg = LoadGenConfig::scenario("drift", 4242).unwrap();
+    let mut gen = LoadGen::new(cfg, store.width, store.height);
+    let mut clock = SimClock::new();
+    let mut driver = if rate > 0.0 {
+        let versioned = Arc::new(VersionedStore::new(Arc::clone(store)));
+        let drift = DriftGen::new(
+            &store.all_sources(),
+            store.width,
+            store.height,
+            DriftConfig { batch: INGEST_BATCH, seed: 777, ..Default::default() },
+        );
+        Some(IngestDriver::new(Ingestor::new(versioned), drift, rate, 777))
+    } else {
+        None
+    };
+    let drive = drive_open_loop_with(engine, &mut clock, &mut gen, DIST_QPS, DIST_SECS, |at| {
+        if let Some(d) = driver.as_mut() {
+            for rep in d.tick(at) {
+                tier.publish(at, &rep);
+            }
+        }
+    });
+    let (publishes, rows) = driver.as_ref().map(|d| (d.publishes, d.rows)).unwrap_or((0, 0));
+    (drive, publishes, rows)
 }
 
 fn main() {
@@ -201,6 +244,56 @@ fn main() {
         crep.bytes_moved / 1e6
     );
 
+    // --- live ingestion: the same read stream quiesced vs with delta
+    //     publishes flowing (copy-on-write epochs shipped to replicas),
+    //     plus the fresh-read cost of waiting out propagation lag ---
+    println!(
+        "== ingest: drift mix @ {:.0}k qps reads + {INGEST_RATE:.0} publishes/s x {INGEST_BATCH} rows ==",
+        DIST_QPS / 1e3
+    );
+    let q_tier = RouterEngine::new(dist_router(&store, Routing::PowerOfTwo));
+    let q_cached = Cached::new(q_tier.clone(), 512);
+    let (q_drive, _, _) = drift_drive(&q_cached, &store, &q_tier, 0.0);
+    let quiesced_p99 = q_drive.latency_all().p99();
+    let quiesced_hit = q_cached.hit_rate();
+    println!(
+        "  quiesced : p99={:.3}ms hit={:.1}%",
+        quiesced_p99 * 1e3,
+        quiesced_hit * 100.0
+    );
+    let i_tier = RouterEngine::new(dist_router(&store, Routing::PowerOfTwo));
+    let i_cached = Cached::new(i_tier.clone(), 512);
+    let (i_drive, publishes, rows) = drift_drive(&i_cached, &store, &i_tier, INGEST_RATE);
+    let i_rep = i_tier.dist_report(&i_drive);
+    let ingest_p99 = i_drive.latency_all().p99();
+    let ingest_hit = i_cached.hit_rate();
+    println!(
+        "  ingesting: p99={:.3}ms hit={:.1}% invalidations={} ({} epochs, {:.2}MB delta)",
+        ingest_p99 * 1e3,
+        ingest_hit * 100.0,
+        i_cached.invalidations(),
+        publishes,
+        i_rep.delta_bytes / 1e6
+    );
+    assert_eq!(
+        i_drive.offered, q_drive.offered,
+        "quiesced and ingesting phases must offer the identical read stream"
+    );
+    // fresh reads during the same ingestion schedule: every read is
+    // served at the head, paying stale-replica refusals and catch-up
+    // stalls instead of staleness
+    let f_tier = RouterEngine::new(dist_router(&store, Routing::PowerOfTwo));
+    let f_engine = Consistent::new(Cached::new(f_tier.clone(), 512), Consistency::Fresh);
+    let (f_drive, _, _) = drift_drive(&f_engine, &store, &f_tier, INGEST_RATE);
+    let f_rep = f_tier.dist_report(&f_drive);
+    let fresh_p99 = f_drive.latency_all().p99();
+    println!(
+        "  fresh    : p99={:.3}ms stale refusals={} catch-up stalls={}",
+        fresh_p99 * 1e3,
+        f_rep.stale_refusals,
+        f_rep.stale_waits.n
+    );
+
     // --- failover drill: kill one replica of a 3-replica range mid-run
     //     (a non-origin host, read from the router's own placement) ---
     let router = dist_router(&store, Routing::PowerOfTwo);
@@ -232,7 +325,7 @@ fn main() {
         .map(|r| (r.name.as_str(), Value::Num(r.ns_per_iter)))
         .collect();
     let json = obj_pub(vec![
-        ("schema", Value::Str("celeste-bench-serve-v2".to_string())),
+        ("schema", Value::Str("celeste-bench-serve-v3".to_string())),
         ("single_query_ns", obj_pub(single_fields)),
         (
             "closed_loop",
@@ -288,6 +381,35 @@ fn main() {
                 ("hit_rate", Value::Num(cached.hit_rate())),
                 ("bytes_saved_mb", Value::Num(cached.bytes_saved() / 1e6)),
                 ("bytes_moved_mb", Value::Num(crep.bytes_moved / 1e6)),
+            ]),
+        ),
+        (
+            "ingest",
+            obj_pub(vec![
+                ("mix", Value::Str("drift".to_string())),
+                ("read_qps", Value::Num(DIST_QPS)),
+                ("ingest_rate", Value::Num(INGEST_RATE)),
+                ("ingest_batch", Value::Num(INGEST_BATCH as f64)),
+                ("epochs_published", Value::Num(publishes as f64)),
+                ("rows_ingested", Value::Num(rows as f64)),
+                ("delta_mb", Value::Num(i_rep.delta_bytes / 1e6)),
+                ("quiesced_p99_ms", Value::Num(quiesced_p99 * 1e3)),
+                ("ingesting_p99_ms", Value::Num(ingest_p99 * 1e3)),
+                ("quiesced_hit_rate", Value::Num(quiesced_hit)),
+                ("ingesting_hit_rate", Value::Num(ingest_hit)),
+                (
+                    "cache_invalidations",
+                    Value::Num(i_cached.invalidations() as f64),
+                ),
+                ("fresh_p99_ms", Value::Num(fresh_p99 * 1e3)),
+                (
+                    "fresh_stale_refusals",
+                    Value::Num(f_rep.stale_refusals as f64),
+                ),
+                (
+                    "fresh_catchup_stalls",
+                    Value::Num(f_rep.stale_waits.n as f64),
+                ),
             ]),
         ),
         (

@@ -58,7 +58,7 @@ USAGE: celeste <command> [flags]
            [--threads N]   server worker threads        (default 4)
            [--shards K]    Hilbert-range shards         (default 8)
            [--qps Q]       open-loop offered rate       (default 2000)
-           [--mix M]       uniform | hotspot | xmatch, or explicit
+           [--mix M]       uniform | hotspot | xmatch | drift, or explicit
                            weights 'cone=6,box=3,brightest=1,xmatch=1'
            [--secs S]      seconds per phase            (default 3)
            [--sources N]   synthetic catalog size       (default 5000)
@@ -69,21 +69,33 @@ USAGE: celeste <command> [flags]
            [--cache N]     LRU entries per query class  (default 512, 0=off;
                            hits need synchronous completions: dist tier)
            [--hedge-ms B]  replica hedge budget, ms     (dist tier, default off)
+           [--hedge-budget F] max fraction of requests hedged (default
+                            0.05 when --hedge-ms is set; 0 = uncapped)
            [--queue-depth D] admission bound, single-host (default 1024)
+           Live ingestion (mixed read/write; pairs with --mix drift):
+           [--ingest-qps R]   delta publishes per second (default 0=off);
+                              runs a quiesced phase then an ingesting
+                              phase and compares read p99 + hit rate
+           [--ingest-batch B] upserts per publish         (default 32)
+           [--consistency C]  cached | fresh | atmost:K — consistency
+                              stamped on the driven query stream
            Runs an open-loop (Poisson) phase at --qps, then closed-loop
            throughput at 1 vs --threads workers; prints accepted/shed
            counts and per-class p50/p99 latency.
            Distributed tier (simulated time) when --dist-nodes is set
            (contradicts --threads: exactly one of the two):
            [--dist-nodes N] place shard replicas on N modeled nodes
-           [--replicas R]   copies of each shard range   (default 2)
+           [--replicas R]   copies of each shard range   (default 2,
+                            must not exceed --dist-nodes)
            [--routing P]    random | rr | p2c            (default p2c)
            [--kill-node S]  fault spec 'NODE@T' (kill) or 'NODE@T1:T2'
                             (kill+revive), comma-separated, sim seconds
            --qps/--secs then drive a simulated-time open loop through
            the fabric-attached router; prints per-class p50/p99,
            per-node load imbalance, bytes moved, failover record,
-           router-cache hit rate, and hedge counts.
+           router-cache hit rate, hedge counts, and (with --ingest-qps)
+           epochs shipped, cache invalidations, and stale-replica
+           refusals.
   experiment NAME [--quick]        regenerate a paper table/figure:
            fig1 fig3 fig4 fig5 fig6 ablations table1 newton-vs-lbfgs all
 ";
@@ -257,8 +269,44 @@ fn loadgen_config(mix: &str, seed: u64) -> Result<serve::LoadGenConfig> {
     }
     match serve::QueryMix::parse(mix) {
         Some(m) => Ok(serve::LoadGenConfig { mix: m, seed, ..Default::default() }),
-        None => bail!("bad --mix {mix:?}: want uniform|hotspot|xmatch or 'cone=6,box=3,...'"),
+        None => {
+            bail!("bad --mix {mix:?}: want uniform|hotspot|xmatch|drift or 'cone=6,box=3,...'")
+        }
     }
+}
+
+/// Parse `--consistency cached|fresh|atmost:K` into the stamp applied
+/// to the driven query stream (None: leave the envelope default).
+fn parse_consistency(cli: &Cli) -> Result<Option<serve::Consistency>> {
+    let Some(s) = cli.flag("consistency") else { return Ok(None) };
+    match s {
+        "cached" => Ok(Some(serve::Consistency::CachedOk)),
+        "fresh" => Ok(Some(serve::Consistency::Fresh)),
+        other => match other.strip_prefix("atmost:").and_then(|k| k.parse::<u32>().ok()) {
+            Some(k) => Ok(Some(serve::Consistency::AtMost(k))),
+            None => bail!("bad --consistency {other:?}: want cached|fresh|atmost:K"),
+        },
+    }
+}
+
+/// Build the ingestion driver for one bench phase: a drift stream
+/// seeded from the versioned store's current catalog, publishing
+/// through it at `ingest_qps` publishes/second.
+fn make_ingest_driver(
+    versioned: &std::sync::Arc<serve::VersionedStore>,
+    ingest_qps: f64,
+    batch: usize,
+    seed: u64,
+) -> serve::IngestDriver {
+    let view = versioned.load();
+    let drift = serve::DriftGen::new(
+        &view.store.all_sources(),
+        view.store.width,
+        view.store.height,
+        serve::DriftConfig { batch, seed: seed ^ 0xd21f, ..Default::default() },
+    );
+    let ingestor = serve::Ingestor::new(std::sync::Arc::clone(versioned));
+    serve::IngestDriver::new(ingestor, drift, ingest_qps, seed)
 }
 
 fn cmd_serve_bench(cli: &Cli) -> Result<()> {
@@ -275,7 +323,7 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
         );
     }
     if !dist {
-        for key in ["replicas", "routing", "kill-node", "hedge-ms"] {
+        for key in ["replicas", "routing", "kill-node", "hedge-ms", "hedge-budget"] {
             if cli.flag(key).is_some() {
                 bail!("--{key} only applies to the distributed tier; add --dist-nodes N");
             }
@@ -285,6 +333,12 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
             "--queue-depth only applies to the single-host tier (the simulated tier models \
              backlog as latency, not sheds); drop it or drop --dist-nodes"
         );
+    }
+    if cli.flag("ingest-batch").is_some() && cli.flag("ingest-qps").is_none() {
+        bail!("--ingest-batch sizes ingestion publishes; add --ingest-qps R to enable them");
+    }
+    if cli.flag("hedge-budget").is_some() && cli.flag("hedge-ms").is_none() {
+        bail!("--hedge-budget caps the hedge layer; add --hedge-ms B to enable hedging");
     }
     let threads = cli.flag_usize("threads", 4).max(1);
     let shards = cli.flag_usize("shards", 8);
@@ -297,6 +351,7 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
         admit_depth: cli.flag_usize("queue-depth", 1024),
         cache_entries: cli.flag_usize("cache", 512),
         hedge_budget: cli.flag_parse("hedge-ms", 0.0f64).max(0.0) * 1e-3,
+        hedge_cap: cli.flag_parse("hedge-budget", 0.05f64).max(0.0),
     };
 
     let snap = match cli.flag("snapshot") {
@@ -312,6 +367,9 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
     if dist {
         return cmd_serve_bench_dist(cli, store, gen_cfg, &spec, qps, secs, seed);
     }
+    let consistency = parse_consistency(cli)?;
+    let ingest_qps = cli.flag_parse("ingest-qps", 0.0f64).max(0.0);
+    let ingest_batch = cli.flag_usize("ingest-batch", 32).max(1);
 
     // --- phase 1: open loop (latency + admission control at --qps).
     //     Admission is a middleware layer now; the server's own queue
@@ -320,33 +378,82 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
     //     Note: fire-and-forget submissions queue into the worker pool,
     //     so their results cannot fill the Cached layer — open-loop
     //     cache hits only appear on the simulated tier, where
-    //     completions are synchronous ---
-    let server = std::sync::Arc::new(serve::Server::start(
-        store.clone(),
-        serve::ServerConfig { threads, queue_depth: usize::MAX },
-    ));
-    let engine = serve::layered(
-        Box::new(serve::ServerEngine::new(std::sync::Arc::clone(&server))),
-        &spec,
-    );
-    println!("engine: {}", engine.describe());
-    if spec.cache_entries > 0 {
+    //     completions are synchronous.
+    //     With --ingest-qps the phase runs twice — quiesced, then with
+    //     live publishes flowing through a versioned store — so the
+    //     ingestion cost shows up as a p99 delta on the same load ---
+    let mut phase_p99: Vec<(String, f64)> = Vec::new();
+    for ingesting in [false, true] {
+        if ingesting && ingest_qps <= 0.0 {
+            continue;
+        }
+        let versioned = std::sync::Arc::new(serve::VersionedStore::new(store.clone()));
+        let server = std::sync::Arc::new(if ingesting {
+            serve::Server::start_live(
+                std::sync::Arc::clone(&versioned),
+                serve::ServerConfig { threads, queue_depth: usize::MAX },
+            )
+        } else {
+            serve::Server::start(
+                store.clone(),
+                serve::ServerConfig { threads, queue_depth: usize::MAX },
+            )
+        });
+        let mut engine = serve::layered(
+            Box::new(serve::ServerEngine::new(std::sync::Arc::clone(&server))),
+            &spec,
+        );
+        if let Some(c) = consistency {
+            engine = Box::new(serve::Consistent::new(engine, c));
+        }
+        if !ingesting {
+            println!("engine: {}", engine.describe());
+            if spec.cache_entries > 0 {
+                println!(
+                    "note: open-loop submissions are fire-and-forget, so the cache layer \
+                     cannot fill from them; hit-rate measurement lives on the simulated \
+                     tier (--dist-nodes)"
+                );
+            }
+        }
+        let mut driver = if ingesting {
+            Some(make_ingest_driver(&versioned, ingest_qps, ingest_batch, seed))
+        } else {
+            None
+        };
+        let mut gen = serve::LoadGen::new(gen_cfg.clone(), width, height);
+        let mut clock = serve::WallClock::start();
+        let ol = serve::drive_open_loop_with(&engine, &mut clock, &mut gen, qps, secs, |at| {
+            if let Some(d) = driver.as_mut() {
+                d.tick(at);
+            }
+        });
+        let report = server.shutdown();
+        let label = if ingesting { "ingesting" } else { "quiesced" };
         println!(
-            "note: open-loop submissions are fire-and-forget, so the cache layer cannot \
-             fill from them; hit-rate measurement lives on the simulated tier (--dist-nodes)"
+            "open loop ({mix}, {label}): offered {:.0} qps for {:.1}s",
+            ol.offered_qps(),
+            ol.arrival_secs
+        );
+        println!("{}", ol.summary());
+        println!("{}", report.summary());
+        if let Some(d) = &driver {
+            println!(
+                "ingest: {} publish(es), {} upsert row(s), head at epoch {}",
+                d.publishes,
+                d.rows,
+                d.ingestor().versioned().epoch()
+            );
+        }
+        phase_p99.push((label.to_string(), report.latency_all().p99()));
+    }
+    if phase_p99.len() == 2 {
+        println!(
+            "read p99 quiesced {:.3}ms vs ingesting {:.3}ms",
+            phase_p99[0].1 * 1e3,
+            phase_p99[1].1 * 1e3
         );
     }
-    let mut gen = serve::LoadGen::new(gen_cfg.clone(), width, height);
-    let mut clock = serve::WallClock::start();
-    let ol = serve::drive_open_loop(&engine, &mut clock, &mut gen, qps, secs);
-    let report = server.shutdown();
-    println!(
-        "open loop ({mix}): offered {:.0} qps for {:.1}s",
-        ol.offered_qps(),
-        ol.arrival_secs
-    );
-    println!("{}", ol.summary());
-    println!("{}", report.summary());
 
     // --- phase 2: closed-loop peak throughput, 1 vs --threads workers
     //     (bare tier: no cache layer, so the comparison measures
@@ -383,6 +490,9 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
 /// `ga::Fabric` cost model, replica selection per --routing, optional
 /// mid-run node kills per --kill-node — behind the same layered engine
 /// stack as the single-host tier (router caching and hedging included).
+/// With --ingest-qps the drive runs twice (quiesced, then with delta
+/// publishes shipped to the replica tier) and compares read p99 and
+/// cache behavior.
 fn cmd_serve_bench_dist(
     cli: &Cli,
     store: std::sync::Arc<serve::Store>,
@@ -394,56 +504,137 @@ fn cmd_serve_bench_dist(
 ) -> Result<()> {
     let nodes = cli.flag_usize("dist-nodes", 4).max(1);
     let replicas = cli.flag_usize("replicas", 2).max(1);
+    if replicas > nodes {
+        bail!(
+            "--replicas {replicas} exceeds --dist-nodes {nodes}: a shard cannot have more \
+             replicas than there are nodes to hold them. Lower --replicas or raise \
+             --dist-nodes."
+        );
+    }
     let routing_s = cli.flag_str("routing", "p2c");
     let Some(routing) = serve::dist::Routing::parse(routing_s) else {
         bail!("bad --routing {routing_s:?}: want random|rr|p2c");
     };
-    let mut router = serve::dist::Router::new(
-        std::sync::Arc::clone(&store),
-        nodes,
-        replicas,
-        serve::dist::RouterConfig { routing, seed, ..Default::default() },
-    );
-    if let Some(kill_spec) = cli.flag("kill-node") {
-        let Some(schedule) = serve::dist::FailureSchedule::parse(kill_spec) else {
-            bail!("bad --kill-node {kill_spec:?}: want 'NODE@T' or 'NODE@T1:T2', comma-separated");
-        };
-        if let Some(max) = schedule.max_node() {
-            if max >= nodes {
-                bail!("--kill-node names node {max}, but --dist-nodes is {nodes} (ids 0..{})", nodes - 1);
+    let schedule = match cli.flag("kill-node") {
+        Some(kill_spec) => {
+            let Some(schedule) = serve::dist::FailureSchedule::parse(kill_spec) else {
+                bail!(
+                    "bad --kill-node {kill_spec:?}: want 'NODE@T' or 'NODE@T1:T2', comma-separated"
+                );
+            };
+            if let Some(max) = schedule.max_node() {
+                if max >= nodes {
+                    bail!(
+                        "--kill-node names node {max}, but --dist-nodes is {nodes} (ids 0..{})",
+                        nodes - 1
+                    );
+                }
             }
+            Some(schedule)
         }
-        router = router.with_schedule(schedule);
-    }
-    println!("{}", router.placement.summary());
-    let rengine = serve::RouterEngine::new(router);
+        None => None,
+    };
+    let consistency = parse_consistency(cli)?;
+    let ingest_qps = cli.flag_parse("ingest-qps", 0.0f64).max(0.0);
+    let ingest_batch = cli.flag_usize("ingest-batch", 32).max(1);
     // the sim tier models backlog as latency; an admission layer on top
     // would just re-shed what the queue model absorbs, so the dist
     // stack is cache + hedge over the router
     let dist_spec = serve::LayerSpec { admit_depth: 0, ..spec.clone() };
-    let engine = serve::layered(Box::new(rengine.clone()), &dist_spec);
-    println!("engine: {}", engine.describe());
-    let mut gen = serve::LoadGen::new(gen_cfg, store.width, store.height);
-    let mut clock = serve::SimClock::new();
-    let drive = serve::drive_open_loop(&engine, &mut clock, &mut gen, qps, secs);
-    let report = rengine.dist_report(&drive);
-    println!("routing {}:", routing.name());
-    println!("{}", report.summary());
-    if dist_spec.cache_entries > 0 {
-        let hits = serve::metric(&engine, "cache_hits").unwrap_or(0.0);
-        let misses = serve::metric(&engine, "cache_misses").unwrap_or(0.0);
-        let saved = serve::metric(&engine, "cache_bytes_saved").unwrap_or(0.0);
-        let rate = if hits + misses > 0.0 { hits / (hits + misses) } else { 0.0 };
-        println!(
-            "router cache: {:.1}% hit rate ({:.0} hits), {:.2} MB fabric bytes saved (vs {:.2} MB moved)",
-            rate * 100.0,
-            hits,
-            saved / 1e6,
-            report.bytes_moved / 1e6
+
+    let mut phase_stats: Vec<(String, f64, f64)> = Vec::new();
+    for ingesting in [false, true] {
+        if ingesting && ingest_qps <= 0.0 {
+            continue;
+        }
+        let mut router = serve::dist::Router::new(
+            std::sync::Arc::clone(&store),
+            nodes,
+            replicas,
+            serve::dist::RouterConfig { routing, seed, ..Default::default() },
         );
+        if let Some(s) = &schedule {
+            router = router.with_schedule(s.clone());
+        }
+        if !ingesting {
+            println!("{}", router.placement.summary());
+        }
+        let rengine = serve::RouterEngine::new(router);
+        let mut engine = serve::layered(Box::new(rengine.clone()), &dist_spec);
+        if let Some(c) = consistency {
+            engine = Box::new(serve::Consistent::new(engine, c));
+        }
+        if !ingesting {
+            println!("engine: {}", engine.describe());
+        }
+        let mut driver = if ingesting {
+            let versioned =
+                std::sync::Arc::new(serve::VersionedStore::new(std::sync::Arc::clone(&store)));
+            Some(make_ingest_driver(&versioned, ingest_qps, ingest_batch, seed))
+        } else {
+            None
+        };
+        let publisher = rengine.clone();
+        let mut gen = serve::LoadGen::new(gen_cfg.clone(), store.width, store.height);
+        let mut clock = serve::SimClock::new();
+        let drive =
+            serve::drive_open_loop_with(&engine, &mut clock, &mut gen, qps, secs, |at| {
+                if let Some(d) = driver.as_mut() {
+                    for rep in d.tick(at) {
+                        publisher.publish(at, &rep);
+                    }
+                }
+            });
+        let report = rengine.dist_report(&drive);
+        let label = if ingesting { "ingesting" } else { "quiesced" };
+        println!("routing {} ({label}):", routing.name());
+        println!("{}", report.summary());
+        let mut hit_rate = 0.0;
+        if dist_spec.cache_entries > 0 {
+            let hits = serve::metric(&engine, "cache_hits").unwrap_or(0.0);
+            let misses = serve::metric(&engine, "cache_misses").unwrap_or(0.0);
+            let invalidations = serve::metric(&engine, "cache_invalidations").unwrap_or(0.0);
+            let saved = serve::metric(&engine, "cache_bytes_saved").unwrap_or(0.0);
+            hit_rate = if hits + misses > 0.0 { hits / (hits + misses) } else { 0.0 };
+            let inv_rate =
+                if hits + misses > 0.0 { invalidations / (hits + misses) } else { 0.0 };
+            println!(
+                "router cache: {:.1}% hit rate ({:.0} hits), {:.1}% invalidated ({:.0} entries \
+                 covering mutated ranges), {:.2} MB fabric bytes saved (vs {:.2} MB moved)",
+                hit_rate * 100.0,
+                hits,
+                inv_rate * 100.0,
+                invalidations,
+                saved / 1e6,
+                report.bytes_moved / 1e6
+            );
+        }
+        if drive.hedges > 0 {
+            println!("hedges: {} fired, {} won", drive.hedges, drive.hedge_wins);
+        }
+        if let Some(skipped) = serve::metric(&engine, "hedge_budget_skipped") {
+            if skipped > 0.0 {
+                println!("hedge budget: {skipped:.0} request(s) past the cap left unhedged");
+            }
+        }
+        if let Some(d) = &driver {
+            println!(
+                "ingest: {} publish(es), {} upsert row(s), {:.2} MB delta shipped",
+                d.publishes,
+                d.rows,
+                report.delta_bytes / 1e6
+            );
+        }
+        phase_stats.push((label.to_string(), report.latency_all().p99(), hit_rate));
     }
-    if drive.hedges > 0 {
-        println!("hedges: {} fired, {} won", drive.hedges, drive.hedge_wins);
+    if phase_stats.len() == 2 {
+        println!(
+            "read p99 quiesced {:.3}ms vs ingesting {:.3}ms; hit rate {:.1}% vs {:.1}%",
+            phase_stats[0].1 * 1e3,
+            phase_stats[1].1 * 1e3,
+            phase_stats[0].2 * 100.0,
+            phase_stats[1].2 * 100.0
+        );
     }
     Ok(())
 }

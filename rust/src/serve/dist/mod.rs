@@ -14,8 +14,11 @@
 //!   colocated with the front-end, `FabricShard` for remote ones whose
 //!   request/response bytes ride the `ga::Fabric` NIC/bisection model.
 //! * [`router`] — scatter-gather planning per query class with
-//!   random / round-robin / power-of-two-choices replica selection and
-//!   per-request replica hedging.
+//!   random / round-robin / power-of-two-choices replica selection,
+//!   per-request replica hedging, and — with live ingestion — delta
+//!   shipping to replicas, per-node applied-epoch tracking, and
+//!   consistency-bound replica selection (`Fresh` refuses lagging
+//!   replicas, `AtMost(k)` bounds the lag, `CachedOk` tolerates it).
 //! * [`failure`] — kill/revive schedules; the router times out on dead
 //!   replicas, reroutes to survivors, and records failover latency.
 //!

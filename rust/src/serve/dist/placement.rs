@@ -37,11 +37,27 @@ impl Placement {
     /// copies each (clamped to at least 1 and at most `n_nodes`).
     pub fn rendezvous(n_shards: usize, n_nodes: usize, replicas: usize) -> Placement {
         let n_nodes = n_nodes.max(1);
-        let replicas = replicas.clamp(1, n_nodes);
+        let nodes: Vec<usize> = (0..n_nodes).collect();
+        Placement::rendezvous_among(n_shards, n_nodes, &nodes, replicas)
+    }
+
+    /// Rendezvous placement over an explicit member set (node ids below
+    /// `n_nodes`). This is how a node *removal* is expressed — rerank
+    /// over the survivors — and rendezvous guarantees the mirror image
+    /// of the growth property: only ranges that lived on the removed
+    /// node move, each to the next-highest-scoring survivor.
+    pub fn rendezvous_among(
+        n_shards: usize,
+        n_nodes: usize,
+        nodes: &[usize],
+        replicas: usize,
+    ) -> Placement {
+        let n_nodes = n_nodes.max(1);
+        let replicas = replicas.clamp(1, nodes.len().max(1));
         let shard_nodes = (0..n_shards)
             .map(|s| {
                 let mut scored: Vec<(u64, usize)> =
-                    (0..n_nodes).map(|n| (score(s as u64, n as u64), n)).collect();
+                    nodes.iter().map(|&n| (score(s as u64, n as u64), n)).collect();
                 // score ties broken by node id so placement is total
                 scored.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
                 scored.truncate(replicas);
@@ -156,6 +172,43 @@ mod tests {
                 moved <= n_shards * replicas / 2,
                 "n={n}: {moved} moved slots looks like a reshuffle"
             );
+        }
+    }
+
+    #[test]
+    fn removing_a_node_only_reassigns_ranges_that_lived_on_it() {
+        // the mirror of the growth property: reranking over the
+        // survivors must leave every shard that never touched the
+        // removed node exactly where it was, and replace the removed
+        // replica (where present) with exactly one survivor
+        let (n_shards, replicas) = (256, 3);
+        for n in [3usize, 5, 8, 12] {
+            for removed in [0usize, 1, n - 1] {
+                let full = Placement::rendezvous(n_shards, n, replicas);
+                let survivors: Vec<usize> = (0..n).filter(|&x| x != removed).collect();
+                let shrunk =
+                    Placement::rendezvous_among(n_shards, n, &survivors, replicas);
+                for s in 0..n_shards {
+                    let old = full.replicas_of(s);
+                    let new = shrunk.replicas_of(s);
+                    if !old.contains(&removed) {
+                        assert_eq!(old, new, "n={n} removed={removed} shard {s} moved");
+                        continue;
+                    }
+                    // survivors keep their replicas; exactly one new
+                    // node backfills the lost copy
+                    for &node in old.iter().filter(|&&x| x != removed) {
+                        assert!(new.contains(&node), "n={n} shard {s} lost survivor {node}");
+                    }
+                    let gained: Vec<usize> = new
+                        .iter()
+                        .copied()
+                        .filter(|node| !old.contains(node))
+                        .collect();
+                    assert_eq!(gained.len(), 1, "n={n} shard {s}: gained {gained:?}");
+                    assert_ne!(gained[0], removed);
+                }
+            }
         }
     }
 

@@ -9,13 +9,17 @@
 //! for [`FabricShard`], request/response transfers through the same
 //! [`ga::Fabric`](crate::ga::Fabric) NIC/bisection model the inference
 //! side uses for global-array fetches.
-
-use std::sync::Arc;
+//!
+//! Clients carry no catalog data themselves: the router resolves which
+//! epoch of the shard a replica node has applied (delta propagation
+//! lags per node — see [`super::router`]) and hands the shard content
+//! in per call. A client is just the *where* (node) and the *cost* of
+//! asking.
 
 use crate::ga::Fabric;
 
 use super::super::query::Query;
-use super::super::store::{Shard, Store};
+use super::super::store::Shard;
 
 // The per-shard execution and reply types live in `query` — one copy of
 // the semantics shared by the single-host engine and this tier.
@@ -58,24 +62,34 @@ impl CostModel {
     pub fn response_bytes(&self, rows: usize) -> f64 {
         self.envelope_bytes + self.row_bytes * rows as f64
     }
+
+    /// Size of a delta shipment of `rows` upserts/tombstones to one
+    /// replica (same envelope + per-row framing as a response).
+    pub fn delta_bytes(&self, rows: usize) -> f64 {
+        self.envelope_bytes + self.row_bytes * rows as f64
+    }
 }
 
 /// One replica of one shard, addressable by the router. `call` executes
-/// the sub-query and returns the reply plus its simulated arrival time
-/// back at the origin node; `node_free` is the per-node serial-service
-/// availability the replica queues on. `Send` so a router full of boxed
-/// clients can sit behind the engine API's shared-state wrappers.
+/// the sub-query against the shard content the replica's node has
+/// applied (passed in by the router) and returns the reply plus its
+/// simulated arrival time back at the origin node; `node_free` is the
+/// per-node serial-service availability the replica queues on. `Send`
+/// so a router full of boxed clients can sit behind the engine API's
+/// shared-state wrappers.
 pub trait ShardClient: Send {
     /// Node this replica lives on.
     fn node(&self) -> usize;
 
-    /// Dispatch `q` at simulated time `now` from `origin`; transfer
-    /// costs (if any) are charged to `fabric`.
+    /// Dispatch `q` at simulated time `now` from `origin` against this
+    /// replica's `shard` content; transfer costs (if any) are charged
+    /// to `fabric`.
     fn call(
         &self,
         now: f64,
         origin: usize,
         q: &Query,
+        shard: &Shard,
         fabric: &mut Fabric,
         node_free: &mut [f64],
     ) -> (ShardReply, f64);
@@ -84,19 +98,13 @@ pub trait ShardClient: Send {
 /// A replica colocated with the front-end: no network hop, but service
 /// still queues on the owning node.
 pub struct LocalShard {
-    store: Arc<Store>,
-    shard_idx: usize,
     node: usize,
     cost: CostModel,
 }
 
 impl LocalShard {
-    pub fn new(store: Arc<Store>, shard_idx: usize, node: usize, cost: CostModel) -> LocalShard {
-        LocalShard { store, shard_idx, node, cost }
-    }
-
-    fn shard(&self) -> &Shard {
-        &self.store.shards[self.shard_idx]
+    pub fn new(node: usize, cost: CostModel) -> LocalShard {
+        LocalShard { node, cost }
     }
 }
 
@@ -110,10 +118,11 @@ impl ShardClient for LocalShard {
         now: f64,
         _origin: usize,
         q: &Query,
+        shard: &Shard,
         _fabric: &mut Fabric,
         node_free: &mut [f64],
     ) -> (ShardReply, f64) {
-        let reply = execute_on_shard(self.shard(), q);
+        let reply = execute_on_shard(shard, q);
         let start = now.max(node_free[self.node]);
         let done = start + self.cost.service_secs(reply.rows());
         node_free[self.node] = done;
@@ -129,8 +138,8 @@ pub struct FabricShard {
 }
 
 impl FabricShard {
-    pub fn new(store: Arc<Store>, shard_idx: usize, node: usize, cost: CostModel) -> FabricShard {
-        FabricShard { inner: LocalShard::new(store, shard_idx, node, cost) }
+    pub fn new(node: usize, cost: CostModel) -> FabricShard {
+        FabricShard { inner: LocalShard::new(node, cost) }
     }
 }
 
@@ -144,13 +153,14 @@ impl ShardClient for FabricShard {
         now: f64,
         origin: usize,
         q: &Query,
+        shard: &Shard,
         fabric: &mut Fabric,
         node_free: &mut [f64],
     ) -> (ShardReply, f64) {
         let node = self.inner.node;
         let cost = &self.inner.cost;
         let t_req = fabric.get(now, cost.req_bytes, origin, node);
-        let reply = execute_on_shard(self.inner.shard(), q);
+        let reply = execute_on_shard(shard, q);
         let start = t_req.max(node_free[node]);
         let svc_done = start + cost.service_secs(reply.rows());
         node_free[node] = svc_done;
@@ -162,9 +172,12 @@ impl ShardClient for FabricShard {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
+
     use crate::ga::FabricConfig;
     use crate::serve::query::{execute, QueryResult, SourceFilter};
     use crate::serve::snapshot;
+    use crate::serve::store::Store;
 
     fn test_store() -> Arc<Store> {
         let snap = snapshot::synthetic(600, 11);
@@ -194,15 +207,16 @@ mod tests {
     fn fabric_shard_is_slower_than_local_and_charges_bytes() {
         let store = test_store();
         let cost = CostModel::default();
-        let local = LocalShard::new(Arc::clone(&store), 0, 0, cost.clone());
-        let remote = FabricShard::new(Arc::clone(&store), 0, 1, cost);
+        let local = LocalShard::new(0, cost.clone());
+        let remote = FabricShard::new(1, cost);
         let q = Query::BrightestN { n: 50, filter: SourceFilter::Any };
+        let shard = &store.shards[0];
         let mut fabric = Fabric::new(FabricConfig::default(), 2);
         let mut free = vec![0.0f64; 2];
-        let (rl, tl) = local.call(0.0, 0, &q, &mut fabric, &mut free);
+        let (rl, tl) = local.call(0.0, 0, &q, shard, &mut fabric, &mut free);
         assert_eq!(fabric.transfers, 0, "local replica must not touch the fabric");
         let mut free2 = vec![0.0f64; 2];
-        let (rr, tr) = remote.call(0.0, 0, &q, &mut fabric, &mut free2);
+        let (rr, tr) = remote.call(0.0, 0, &q, shard, &mut fabric, &mut free2);
         assert_eq!(rl, rr, "same shard, same reply");
         assert!(tr > tl, "remote {tr} must cost more than local {tl}");
         assert_eq!(fabric.transfers, 2, "request + response");
@@ -213,13 +227,13 @@ mod tests {
     fn node_service_serializes_in_simulated_time() {
         let store = test_store();
         let cost = CostModel::default();
-        let a = LocalShard::new(Arc::clone(&store), 0, 0, cost.clone());
-        let b = LocalShard::new(Arc::clone(&store), 1, 0, cost);
+        let a = LocalShard::new(0, cost.clone());
+        let b = LocalShard::new(0, cost);
         let q = Query::BrightestN { n: 10, filter: SourceFilter::Any };
         let mut fabric = Fabric::new(FabricConfig::default(), 1);
         let mut free = vec![0.0f64; 1];
-        let (_, t1) = a.call(0.0, 0, &q, &mut fabric, &mut free);
-        let (_, t2) = b.call(0.0, 0, &q, &mut fabric, &mut free);
+        let (_, t1) = a.call(0.0, 0, &q, &store.shards[0], &mut fabric, &mut free);
+        let (_, t2) = b.call(0.0, 0, &q, &store.shards[1], &mut fabric, &mut free);
         assert!(t2 > t1, "same-node requests must queue: {t1} {t2}");
     }
 }

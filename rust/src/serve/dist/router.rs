@@ -1,5 +1,6 @@
 //! The front-end router: scatter-gather query planning over placed
-//! shard replicas, load-balanced replica selection, and failover.
+//! shard replicas, load-balanced replica selection, failover, and
+//! replica update propagation.
 //!
 //! Per query class the router plans the minimal shard set — cone/box
 //! probes hit only ranges whose bounding boxes intersect, brightest-N
@@ -21,6 +22,20 @@
 //! issued to the best alternate replica and the earlier reply wins —
 //! extra replica load and fabric bytes traded for a shorter p999 tail.
 //!
+//! With live ingestion ([`crate::serve::ingest`]) the router is also
+//! the tier's replication protocol: [`Router::publish`] ships each
+//! epoch's delta rows over the fabric to every node hosting a touched
+//! replica, and each node *applies* the epoch when its transfer lands —
+//! so replicas lag the head by real (simulated) propagation time. A
+//! sub-query executes against the shard content its chosen node has
+//! applied, and the consistency hint decides who may serve:
+//! `Fresh` reads refuse replicas that have not applied every mutation
+//! of the touched shard (read-your-writes — each refusal is a recorded
+//! violation avoided, and if no live replica qualifies the read stalls
+//! until the earliest catch-up), `AtMost(k)` additionally accepts
+//! replicas at most `k` epochs behind the head, and `CachedOk` serves
+//! from any live replica.
+//!
 //! Everything advances *simulated* time: service queues per node, and
 //! remote request/response bytes ride the `ga::Fabric` NIC/bisection
 //! model, so a 64-node serving tier runs on one host.
@@ -31,9 +46,11 @@ use crate::ga::{Fabric, FabricConfig};
 use crate::metrics::Stats;
 use crate::prng::Rng;
 use crate::serve::engine::drive::DriveReport;
+use crate::serve::engine::Consistency;
+use crate::serve::ingest::EpochStore;
 
 use super::super::query::{
-    merge_replies, Query, QueryResult, N_QUERY_CLASSES, QUERY_CLASSES,
+    merge_replies, plan_shards, Query, QueryResult, N_QUERY_CLASSES, QUERY_CLASSES,
 };
 use super::super::store::Store;
 use super::failure::FailureSchedule;
@@ -98,7 +115,6 @@ type ShardClients = Vec<Vec<Box<dyn ShardClient>>>;
 /// *shard-server process* on that host dying — the colocated front-end
 /// process survives and reroutes, exactly like killing any other node.
 pub struct Router {
-    store: Arc<Store>,
     pub placement: Placement,
     cfg: RouterConfig,
     /// [shard][replica] — parallel to `placement.shard_nodes`
@@ -117,6 +133,13 @@ pub struct Router {
     suspected: Vec<bool>,
     schedule: FailureSchedule,
     origin: usize,
+    /// epoch the router was constructed at (before any publish)
+    base_epoch: u64,
+    /// published versions still servable by a lagging replica,
+    /// ascending and epoch-contiguous (last = the head)
+    history: Vec<Arc<EpochStore>>,
+    /// per node: (apply time, epoch) of each shipped publish, ascending
+    node_applied: Vec<Vec<(f64, u64)>>,
     // accounting
     pub served_per_node: Vec<u64>,
     pub busy_per_node: Vec<f64>,
@@ -128,6 +151,19 @@ pub struct Router {
     pub hedges: u64,
     /// hedges whose reply beat the primary replica's
     pub hedge_wins: u64,
+    /// epochs shipped to the tier via [`Router::publish`]
+    pub epochs_published: u64,
+    /// delta bytes shipped to replicas (also charged to the fabric)
+    pub delta_bytes: f64,
+    /// lagging replicas refused for fresh/bounded reads — each one a
+    /// read-your-writes violation avoided
+    pub stale_refusals: u64,
+    /// sub-queries served from content older than the head's (lag-
+    /// tolerant reads; the engine layer refuses to cache such results)
+    pub lagged_subqueries: u64,
+    /// stalls where *no* live replica met the consistency bound and the
+    /// sub-query waited for the earliest catch-up (n = stall count)
+    pub stale_waits: Stats,
     /// queries executed over this router's lifetime ([`Router::report`]
     /// uses it to reject reports over a reused router)
     pub queries: u64,
@@ -141,25 +177,14 @@ impl Router {
         let clients: ShardClients = placement
             .shard_nodes
             .iter()
-            .enumerate()
-            .map(|(s, nodes)| {
+            .map(|nodes| {
                 nodes
                     .iter()
                     .map(|&node| -> Box<dyn ShardClient> {
                         if node == origin {
-                            Box::new(LocalShard::new(
-                                Arc::clone(&store),
-                                s,
-                                node,
-                                cfg.cost.clone(),
-                            ))
+                            Box::new(LocalShard::new(node, cfg.cost.clone()))
                         } else {
-                            Box::new(FabricShard::new(
-                                Arc::clone(&store),
-                                s,
-                                node,
-                                cfg.cost.clone(),
-                            ))
+                            Box::new(FabricShard::new(node, cfg.cost.clone()))
                         }
                     })
                     .collect()
@@ -168,8 +193,8 @@ impl Router {
         let fabric = Fabric::new(cfg.fabric.clone(), n_nodes);
         let rng = Rng::new(cfg.seed ^ 0xd157);
         let n_shards = placement.n_shards();
+        let head = Arc::new(EpochStore::initial(store));
         Router {
-            store,
             placement,
             cfg,
             clients,
@@ -182,12 +207,20 @@ impl Router {
             suspected: vec![false; n_nodes],
             schedule: FailureSchedule::default(),
             origin,
+            base_epoch: head.epoch,
+            history: vec![head],
+            node_applied: vec![Vec::new(); n_nodes],
             served_per_node: vec![0; n_nodes],
             busy_per_node: vec![0.0; n_nodes],
             failover: Stats::new(),
             failed: 0,
             hedges: 0,
             hedge_wins: 0,
+            epochs_published: 0,
+            delta_bytes: 0.0,
+            stale_refusals: 0,
+            lagged_subqueries: 0,
+            stale_waits: Stats::new(),
             queries: 0,
         }
     }
@@ -207,39 +240,171 @@ impl Router {
         self.node_free.len()
     }
 
-    /// Shards a query must touch (indices into the store).
-    fn plan(&self, q: &Query) -> Vec<usize> {
-        let shards = &self.store.shards;
-        match q {
-            Query::Cone { center, radius, .. } => {
-                let (bx0, by0) = (center.0 - radius, center.1 - radius);
-                let (bx1, by1) = (center.0 + radius, center.1 + radius);
-                (0..shards.len())
-                    .filter(|&i| shards[i].intersects_box(bx0, by0, bx1, by1))
-                    .collect()
+    /// The newest published version (what `Fresh` reads observe).
+    pub fn head(&self) -> Arc<EpochStore> {
+        Arc::clone(self.history.last().expect("history is never empty"))
+    }
+
+    /// Ship a freshly published epoch to the replica tier at simulated
+    /// time `now`. `touched` is the ingest report's (shard, delta rows)
+    /// list: every node hosting a touched replica receives that shard's
+    /// delta over the fabric and applies the epoch when its last
+    /// transfer lands; nodes with no touched replica apply immediately
+    /// (the epoch announcement itself is metadata-sized).
+    pub fn publish(&mut self, now: f64, next: Arc<EpochStore>, touched: &[(usize, usize)]) {
+        let head_epoch = self.history.last().unwrap().epoch;
+        assert_eq!(
+            next.epoch,
+            head_epoch + 1,
+            "epochs must be published to the router in order"
+        );
+        assert_eq!(
+            next.store.shards.len(),
+            self.placement.n_shards(),
+            "a publish must keep the shard count the placement was built over"
+        );
+        let epoch = next.epoch;
+        let mut apply_at = vec![now; self.n_nodes()];
+        for &(shard, rows) in touched {
+            let bytes = self.cfg.cost.delta_bytes(rows);
+            for &node in &self.placement.shard_nodes[shard] {
+                let t = self.fabric.get(now, bytes, self.origin, node);
+                self.delta_bytes += bytes;
+                apply_at[node] = apply_at[node].max(t);
             }
-            Query::BoxSearch { x0, y0, x1, y1, .. } => (0..shards.len())
-                .filter(|&i| shards[i].intersects_box(*x0, *y0, *x1, *y1))
-                .collect(),
-            Query::BrightestN { .. } => {
-                (0..shards.len()).filter(|&i| !shards[i].sources.is_empty()).collect()
-            }
-            Query::CrossMatch { pos, radius } => {
-                let probe = super::super::query::max_match_radius(*radius);
-                let (bx0, by0) = (pos.0 - probe, pos.1 - probe);
-                let (bx1, by1) = (pos.0 + probe, pos.1 + probe);
-                (0..shards.len())
-                    .filter(|&i| shards[i].intersects_box(bx0, by0, bx1, by1))
-                    .collect()
+        }
+        for (node, log) in self.node_applied.iter_mut().enumerate() {
+            // a node applies epochs in publication order
+            let t = match log.last() {
+                Some(&(prev, _)) => apply_at[node].max(prev),
+                None => apply_at[node],
+            };
+            log.push((t, epoch));
+        }
+        self.history.push(next);
+        self.epochs_published += 1;
+        // prune versions every node has already superseded at `now`
+        // (readers that pinned one via `head()` keep it alive anyway)
+        let min_applied = (0..self.n_nodes())
+            .map(|n| self.applied_epoch(n, now))
+            .min()
+            .unwrap_or(epoch);
+        let base = self.history[0].epoch;
+        let n_drop = (min_applied.saturating_sub(base) as usize).min(self.history.len() - 1);
+        if n_drop > 0 {
+            self.history.drain(..n_drop);
+        }
+    }
+
+    /// The newest epoch `node` has applied by simulated time `t`.
+    fn applied_epoch(&self, node: usize, t: f64) -> u64 {
+        let log = &self.node_applied[node];
+        let i = log.partition_point(|&(ta, _)| ta <= t);
+        if i == 0 {
+            self.base_epoch
+        } else {
+            log[i - 1].1
+        }
+    }
+
+    /// The published version at `epoch` (clamped to the retained
+    /// window: pruned epochs resolve to the oldest kept version).
+    fn store_at(&self, epoch: u64) -> &Arc<EpochStore> {
+        let base = self.history[0].epoch;
+        let idx = (epoch.saturating_sub(base) as usize).min(self.history.len() - 1);
+        &self.history[idx]
+    }
+
+    /// May `node`'s replica of `shard` serve a read at time `t` under
+    /// `consistency`? `Fresh` requires the shard's last mutation to
+    /// have reached the node (its content *is* the head's content);
+    /// `AtMost(k)` also accepts a node at most `k` epochs behind.
+    fn replica_acceptable(
+        &self,
+        shard: usize,
+        node: usize,
+        t: f64,
+        consistency: Consistency,
+    ) -> bool {
+        match consistency {
+            Consistency::CachedOk => true,
+            Consistency::Fresh | Consistency::AtMost(_) => {
+                let head = self.history.last().unwrap();
+                let applied = self.applied_epoch(node, t);
+                if applied >= head.shard_epochs[shard] {
+                    return true;
+                }
+                match consistency {
+                    Consistency::AtMost(k) => head.epoch - applied <= k as u64,
+                    _ => false,
+                }
             }
         }
     }
 
-    /// Pick a replica index for `shard` among unsuspected replicas.
-    fn pick_replica(&mut self, shard: usize) -> Option<usize> {
+    /// Earliest time an unsuspected replica of `shard` meets the
+    /// consistency bound (`None`: never, or nothing to wait for).
+    fn earliest_catch_up(&self, shard: usize, t: f64, consistency: Consistency) -> Option<f64> {
+        let head = self.history.last().unwrap();
+        let needed = head.shard_epochs[shard];
+        let target = match consistency {
+            Consistency::CachedOk => return None,
+            Consistency::Fresh => needed,
+            // acceptable once applied >= needed OR lag <= k, whichever
+            // epoch is reached first
+            Consistency::AtMost(k) => needed.min(head.epoch.saturating_sub(k as u64)),
+        };
+        let mut best: Option<f64> = None;
+        for &node in &self.placement.shard_nodes[shard] {
+            if self.suspected[node] {
+                continue;
+            }
+            let log = &self.node_applied[node];
+            let i = log.partition_point(|&(_, e)| e < target);
+            if i < log.len() {
+                let ready = log[i].0.max(t);
+                best = Some(match best {
+                    None => ready,
+                    Some(b) => b.min(ready),
+                });
+            }
+        }
+        best
+    }
+
+    /// Pick a replica index for `shard` among unsuspected replicas that
+    /// meet the read's consistency bound at time `t`. Lagging replicas
+    /// are counted as read-your-writes violations avoided only when
+    /// `count_refusals` is set (the first attempt of a dispatch), so
+    /// stall and dead-node retries do not recount the same replica.
+    fn pick_replica(
+        &mut self,
+        shard: usize,
+        t: f64,
+        consistency: Consistency,
+        count_refusals: bool,
+    ) -> Option<usize> {
+        let mut refused = 0u64;
+        let cand: Vec<usize> = {
+            let nodes = &self.placement.shard_nodes[shard];
+            (0..nodes.len())
+                .filter(|&r| {
+                    if self.suspected[nodes[r]] {
+                        return false;
+                    }
+                    if self.replica_acceptable(shard, nodes[r], t, consistency) {
+                        true
+                    } else {
+                        refused += 1;
+                        false
+                    }
+                })
+                .collect()
+        };
+        if count_refusals {
+            self.stale_refusals += refused;
+        }
         let nodes = &self.placement.shard_nodes[shard];
-        let cand: Vec<usize> =
-            (0..nodes.len()).filter(|&r| !self.suspected[nodes[r]]).collect();
         match cand.len() {
             0 => None,
             1 => Some(cand[0]),
@@ -272,12 +437,28 @@ impl Router {
     /// by earliest availability. Deliberately rng-free so hedging never
     /// perturbs the router's rng stream — random/rr primary choices
     /// replay exactly; p2c primaries can still drift because hedge
-    /// dispatches feed the in-flight counts p2c reads.
-    fn pick_hedge_replica(&self, shard: usize, exclude_node: usize) -> Option<usize> {
+    /// dispatches feed the in-flight counts p2c reads. Only replicas
+    /// serving the *same shard content epoch* as the primary qualify,
+    /// so the race stays outcome-neutral under replication lag.
+    fn pick_hedge_replica(
+        &self,
+        shard: usize,
+        exclude_node: usize,
+        t: f64,
+        consistency: Consistency,
+        content_epoch: u64,
+    ) -> Option<usize> {
         let nodes = &self.placement.shard_nodes[shard];
         let mut best: Option<usize> = None;
         for (r, &n) in nodes.iter().enumerate() {
             if n == exclude_node || self.suspected[n] {
+                continue;
+            }
+            if !self.replica_acceptable(shard, n, t, consistency) {
+                continue;
+            }
+            let applied = self.applied_epoch(n, t);
+            if self.store_at(applied).shard_epochs[shard] != content_epoch {
                 continue;
             }
             best = match best {
@@ -299,10 +480,11 @@ impl Router {
     }
 
     /// Speculatively re-issue `shard`'s sub-query to an alternate
-    /// replica at `t_hedge` (the moment the budget expired). Both
-    /// replicas hold the same range, so the replies are identical; the
-    /// router keeps whichever lands first. Returns the observed reply
-    /// time: `min(t_primary, hedge completion)`.
+    /// replica at `t_hedge` (the moment the budget expired). Candidates
+    /// serve the same shard content epoch as the primary, so the
+    /// replies are identical; the router keeps whichever lands first.
+    /// Returns the observed reply time: `min(t_primary, hedge)`.
+    #[allow(clippy::too_many_arguments)]
     fn hedge(
         &mut self,
         shard: usize,
@@ -311,10 +493,18 @@ impl Router {
         q: &Query,
         t_primary: f64,
         rows: usize,
+        consistency: Consistency,
+        content_epoch: u64,
     ) -> f64 {
         let mut t_send = t_hedge;
         loop {
-            let Some(r2) = self.pick_hedge_replica(shard, primary_node) else {
+            let Some(r2) = self.pick_hedge_replica(
+                shard,
+                primary_node,
+                t_send,
+                consistency,
+                content_epoch,
+            ) else {
                 return t_primary;
             };
             let node2 = self.clients[shard][r2].node();
@@ -327,14 +517,17 @@ impl Router {
                 t_send += self.cfg.timeout_detect;
                 continue;
             }
+            let applied2 = self.applied_epoch(node2, t_send);
+            let content2 = Arc::clone(self.store_at(applied2));
             let (reply2, t2) = self.clients[shard][r2].call(
                 t_send,
                 self.origin,
                 q,
+                &content2.store.shards[shard],
                 &mut self.fabric,
                 &mut self.node_free,
             );
-            debug_assert_eq!(reply2.rows(), rows, "replicas of one shard must agree");
+            debug_assert_eq!(reply2.rows(), rows, "content-matched replicas must agree");
             self.inflight[node2].push(t2);
             self.served_per_node[node2] += 1;
             self.busy_per_node[node2] += self.cfg.cost.service_secs(reply2.rows());
@@ -352,33 +545,56 @@ impl Router {
     /// merged result (`None` if some needed range lost all replicas) and
     /// the simulated completion time at the front-end.
     pub fn execute(&mut self, now: f64, q: &Query) -> (Option<QueryResult>, f64) {
-        self.execute_with(now, q, None)
+        self.execute_with(now, q, None, Consistency::CachedOk)
     }
 
     /// [`Router::execute`] with an optional per-request hedge budget in
-    /// seconds: sub-queries whose primary reply would land more than
+    /// seconds (sub-queries whose primary reply would land more than
     /// the budget past dispatch are speculatively re-issued to an
-    /// alternate replica (the engine API's `Hedged` layer stamps this).
+    /// alternate replica; the engine API's `Hedged` layer stamps this)
+    /// and the request's consistency bound (which replicas may serve —
+    /// see the module docs).
     pub fn execute_with(
         &mut self,
         now: f64,
         q: &Query,
         hedge: Option<f64>,
+        consistency: Consistency,
     ) -> (Option<QueryResult>, f64) {
         self.queries += 1;
         self.schedule.apply(now, &mut self.alive, &mut self.suspected);
         for fl in &mut self.inflight {
             fl.retain(|&t| t > now);
         }
-        let planned = self.plan(q);
+        // plan against the head: Fresh reads execute exactly this
+        // version; lag-tolerant reads may see older content per shard
+        let head = self.head();
+        let planned = plan_shards(&head.store, q);
         let mut replies: Vec<ShardReply> = Vec::with_capacity(planned.len());
         let mut done = now;
         for shard in planned {
             // scatter: dispatch this range's sub-query, failing over past
-            // replicas the router discovers to be dead
+            // replicas the router discovers to be dead and stalling past
+            // replicas too stale for the read's consistency bound
             let mut t_send = now;
+            let mut detect_delay = 0.0;
+            let mut first_attempt = true;
             let dispatched = loop {
-                let Some(r) = self.pick_replica(shard) else { break None };
+                let picked = self.pick_replica(shard, t_send, consistency, first_attempt);
+                first_attempt = false;
+                let Some(r) = picked else {
+                    // every live replica lags the bound: wait for the
+                    // earliest catch-up (replica propagation stall)
+                    match self.earliest_catch_up(shard, t_send, consistency) {
+                        Some(ready) => {
+                            let ready = ready.max(t_send + 1e-12);
+                            self.stale_waits.push(ready - t_send);
+                            t_send = ready;
+                            continue;
+                        }
+                        None => break None,
+                    }
+                };
                 // the client is authoritative for its own node id
                 let node = self.clients[shard][r].node();
                 if !self.alive[node] {
@@ -386,12 +602,22 @@ impl Router {
                     // remember the death, retry on a surviving replica
                     self.suspected[node] = true;
                     t_send += self.cfg.timeout_detect;
+                    detect_delay += self.cfg.timeout_detect;
                     continue;
+                }
+                // execute against the shard content this node has applied
+                let applied = self.applied_epoch(node, t_send);
+                let content = Arc::clone(self.store_at(applied));
+                if content.shard_epochs[shard] != head.shard_epochs[shard] {
+                    // a lag-tolerant read served from pre-head content:
+                    // flagged so the cache layer will not memoize it
+                    self.lagged_subqueries += 1;
                 }
                 let (reply, t) = self.clients[shard][r].call(
                     t_send,
                     self.origin,
                     q,
+                    &content.store.shards[shard],
                     &mut self.fabric,
                     &mut self.node_free,
                 );
@@ -399,17 +625,24 @@ impl Router {
                 self.served_per_node[node] += 1;
                 self.busy_per_node[node] += self.cfg.cost.service_secs(reply.rows());
                 let t_reply = match hedge {
-                    Some(budget) if t - t_send > budget => {
-                        self.hedge(shard, node, t_send + budget, q, t, reply.rows())
-                    }
+                    Some(budget) if t - t_send > budget => self.hedge(
+                        shard,
+                        node,
+                        t_send + budget,
+                        q,
+                        t,
+                        reply.rows(),
+                        consistency,
+                        content.shard_epochs[shard],
+                    ),
                     _ => t,
                 };
                 break Some((reply, t_reply));
             };
             match dispatched {
                 Some((reply, t)) => {
-                    if t_send > now {
-                        self.failover.push(t_send - now);
+                    if detect_delay > 0.0 {
+                        self.failover.push(detect_delay);
                     }
                     done = done.max(t);
                     replies.push(reply);
@@ -440,11 +673,19 @@ pub struct DistReport {
     pub latency: [Stats; N_QUERY_CLASSES],
     pub served_per_node: Vec<u64>,
     pub busy_per_node: Vec<f64>,
-    /// fabric traffic (remote request/response bytes only)
+    /// fabric traffic (remote request/response + delta shipping bytes)
     pub bytes_moved: f64,
     pub transfers: u64,
     pub bytes_per_node: Vec<f64>,
     pub failover: Stats,
+    /// ingestion epochs shipped during the run
+    pub epochs_published: u64,
+    /// delta bytes shipped to replicas
+    pub delta_bytes: f64,
+    /// lagging replicas refused for fresh/bounded reads
+    pub stale_refusals: u64,
+    /// catch-up stalls of fresh/bounded sub-queries
+    pub stale_waits: Stats,
 }
 
 impl DistReport {
@@ -466,7 +707,7 @@ impl DistReport {
     }
 
     /// Multi-line human summary: per-class quantiles, per-node load,
-    /// fabric traffic, failover record.
+    /// fabric traffic, failover and ingestion records.
     pub fn summary(&self) -> String {
         let all = self.latency_all();
         let aq = all.quantiles(&[0.50, 0.99]);
@@ -513,6 +754,21 @@ impl DistReport {
                 self.failover.max * 1e3
             ));
         }
+        if self.epochs_published > 0 {
+            out.push_str(&format!(
+                "\n  ingest: {} epoch(s) shipped ({:.2} MB delta), {} stale replica(s) refused",
+                self.epochs_published,
+                self.delta_bytes / 1e6,
+                self.stale_refusals
+            ));
+            if self.stale_waits.n > 0 {
+                out.push_str(&format!(
+                    ", {} catch-up stall(s) mean {:.3}ms",
+                    self.stale_waits.n,
+                    self.stale_waits.mean() * 1e3
+                ));
+            }
+        }
         out
     }
 }
@@ -521,8 +777,8 @@ impl Router {
     /// Assemble the distributed-tier report for a run driven through
     /// the engine API (`drive_open_loop` over a `RouterEngine`): the
     /// drive's disposition counters and latency joined with this
-    /// router's cumulative per-node load, fabric traffic, and failover
-    /// record.
+    /// router's cumulative per-node load, fabric traffic, failover and
+    /// replication-lag records.
     ///
     /// The router's counters are cumulative, so the report is only
     /// meaningful for a router that served exactly this drive; a reused
@@ -549,6 +805,10 @@ impl Router {
             transfers: self.fabric.transfers,
             bytes_per_node: self.fabric.node_bytes.clone(),
             failover: self.failover.clone(),
+            epochs_published: self.epochs_published,
+            delta_bytes: self.delta_bytes,
+            stale_refusals: self.stale_refusals,
+            stale_waits: self.stale_waits.clone(),
         }
     }
 }
@@ -557,9 +817,11 @@ impl Router {
 mod tests {
     use super::*;
     use crate::serve::engine::{drive_open_loop, RouterEngine, SimClock};
+    use crate::serve::ingest::{Ingestor, VersionedStore};
     use crate::serve::loadgen::{LoadGen, LoadGenConfig};
     use crate::serve::query::{execute, SourceFilter};
     use crate::serve::snapshot;
+    use crate::serve::store::ServedSource;
 
     fn test_store(n: usize, shards: usize, seed: u64) -> Arc<Store> {
         let snap = snapshot::synthetic(n, seed);
@@ -618,6 +880,7 @@ mod tests {
             }
             assert_eq!(router.failed, 0);
             assert_eq!(router.failover.n, 0);
+            assert_eq!(router.stale_refusals, 0, "no ingestion, no staleness");
         }
     }
 
@@ -715,7 +978,7 @@ mod tests {
         let want = execute(&store, &q);
         // zero budget: every primary reply exceeds it, so a hedge fires
         // for every shard that has an alternate replica
-        let (res, done) = router.execute_with(0.0, &q, Some(0.0));
+        let (res, done) = router.execute_with(0.0, &q, Some(0.0), Consistency::CachedOk);
         assert_eq!(res.expect("no failures scheduled"), want);
         assert!(done > 0.0);
         assert!(router.hedges > 0, "zero budget must fire hedges");
@@ -725,5 +988,104 @@ mod tests {
         let (res2, _) = plain.execute(0.0, &q);
         assert_eq!(res2.unwrap(), want);
         assert_eq!(plain.hedges, 0);
+    }
+
+    /// One publish through a replicated router: Fresh reads observe the
+    /// delta immediately (stalling on propagation if they must), while
+    /// lag-tolerant reads served before propagation completes still see
+    /// the pre-delta sky.
+    #[test]
+    fn fresh_reads_observe_a_publish_immediately_lagged_reads_need_not() {
+        let store = test_store(900, 6, 33);
+        let vs = Arc::new(VersionedStore::new(Arc::clone(&store)));
+        let mut ing = Ingestor::new(Arc::clone(&vs));
+        let mut router = Router::new(Arc::clone(&store), 5, 2, RouterConfig::default());
+        let q = Query::BrightestN { n: 1, filter: SourceFilter::Any };
+        let before = execute(&store, &q);
+        // a new all-sky-brightest detection lands at t = 1.0
+        let delta = ServedSource {
+            id: 777_777,
+            pos: (store.width * 0.5, store.height * 0.5),
+            p_gal: 0.0,
+            flux_r: 1e12,
+            flux_logsd: 0.05,
+            colors: [0.0; 4],
+            converged: true,
+        };
+        let rep = ing.apply(&[delta]);
+        router.publish(1.0, Arc::clone(&rep.published), &rep.touched);
+        assert_eq!(router.epochs_published, 1);
+        assert!(router.delta_bytes > 0.0, "delta shipping must be charged");
+        let after = execute(&vs.load().store, &q);
+        assert_ne!(before, after);
+        // immediately after the publish instant, a fresh read returns
+        // the new sky (read-your-writes), whatever the replica lag
+        let (fresh, t_done) =
+            router.execute_with(1.0 + 1e-9, &q, None, Consistency::Fresh);
+        assert_eq!(fresh.expect("served"), after);
+        assert!(t_done > 1.0);
+        // a generously bounded read at the same instant may be served
+        // by a lagging replica — and must then see the pre-delta sky
+        let (lagged, _) =
+            router.execute_with(1.0 + 1e-9, &q, None, Consistency::AtMost(10));
+        let lagged = lagged.expect("served");
+        assert!(
+            lagged == before || lagged == after,
+            "lag-tolerant read must be one of the two versions"
+        );
+        // once every node has applied the epoch, everyone serves the head
+        let (late, _) = router.execute_with(10.0, &q, None, Consistency::CachedOk);
+        assert_eq!(late.expect("served"), after);
+    }
+
+    /// AtMost(k) tolerates exactly k epochs of lag: with j unapplied
+    /// publishes, bounds >= j never stall and bounds < j must refuse
+    /// the lagging replicas (stalling until partial catch-up).
+    #[test]
+    fn at_most_bounds_replica_lag_exactly() {
+        let store = test_store(700, 4, 41);
+        let vs = Arc::new(VersionedStore::new(Arc::clone(&store)));
+        let mut ing = Ingestor::new(Arc::clone(&vs));
+        let mut router = Router::new(Arc::clone(&store), 4, 2, RouterConfig::default());
+        // publish j = 3 epochs back-to-back at t = 1.0; none can have
+        // been applied by 1.0 + epsilon (fabric latency is positive)
+        let mut rng = Rng::new(5);
+        for _ in 0..3 {
+            let deltas: Vec<ServedSource> = (0..20)
+                .map(|j| ServedSource {
+                    id: 888_000 + router.epochs_published as usize * 100 + j,
+                    pos: (
+                        rng.uniform_in(0.0, store.width),
+                        rng.uniform_in(0.0, store.height),
+                    ),
+                    p_gal: 0.4,
+                    flux_r: 10.0,
+                    flux_logsd: 0.2,
+                    colors: [0.0; 4],
+                    converged: true,
+                })
+                .collect();
+            let rep = ing.apply(&deltas);
+            router.publish(1.0, Arc::clone(&rep.published), &rep.touched);
+        }
+        assert_eq!(router.epochs_published, 3);
+        let q = Query::BrightestN { n: 5, filter: SourceFilter::Any };
+        let t = 1.0 + 1e-9;
+        // lag 3 tolerated: no refusals, no stalls
+        let refusals0 = router.stale_refusals;
+        let (res, _) = router.execute_with(t, &q, None, Consistency::AtMost(3));
+        assert!(res.is_some());
+        assert_eq!(router.stale_refusals, refusals0, "lag <= k must not refuse");
+        assert_eq!(router.stale_waits.n, 0);
+        // lag bound 2 < 3: lagging replicas are refused and the read
+        // stalls for (partial) catch-up, still completing correctly
+        let (res2, t2) = router.execute_with(t, &q, None, Consistency::AtMost(2));
+        assert!(res2.is_some());
+        assert!(router.stale_refusals > refusals0, "lag > k must refuse replicas");
+        assert!(router.stale_waits.n > 0, "bounded read must stall for catch-up");
+        assert!(t2 > t);
+        // and Fresh equals brute force over the head, with stalls
+        let (res3, _) = router.execute_with(t, &q, None, Consistency::Fresh);
+        assert_eq!(res3.expect("served"), execute(&vs.load().store, &q));
     }
 }

@@ -18,7 +18,9 @@
 //! in-lock `queue_depth` when one is configured).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+
+use crate::serve::ingest::EpochStore;
 
 use super::{QueryEngine, Request, Response, Submitted};
 
@@ -112,5 +114,9 @@ impl<E: QueryEngine> QueryEngine for Admission<E> {
         ];
         m.extend(self.inner.metrics());
         m
+    }
+
+    fn epoch_view(&self) -> Option<Arc<EpochStore>> {
+        self.inner.epoch_view()
     }
 }

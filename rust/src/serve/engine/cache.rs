@@ -1,20 +1,52 @@
-//! Result caching as a middleware layer.
+//! Result caching as a middleware layer, epoch-aware.
 //!
 //! [`ResultCache`] is the per-class LRU that used to live inside the
 //! worker-pool `Server`; hoisting it into a [`Cached`] layer makes the
 //! same cache available to *every* tier — in particular the distributed
 //! router, where a hit also avoids fabric traffic. The layer records
 //! hit rate and the fabric bytes saved (each entry remembers what its
-//! original miss moved), the ROADMAP's "hot-range cache hit rates vs
-//! fabric bytes saved" measurement.
+//! original miss moved).
+//!
+//! With live ingestion (see [`crate::serve::ingest`]) the cache must
+//! also not serve yesterday's sky: every entry filled over a versioned
+//! tier is stamped with its *coverage* — the `(shard, epoch)` pairs of
+//! the ranges the query planned over, read from the tier's
+//! [`epoch_view`](super::QueryEngine::epoch_view). A probe recomputes
+//! the plan against the current epoch and the entry hits only if the
+//! coverage matches exactly; a mismatch means some covered range
+//! mutated (or the plan itself changed because a shard's extent moved),
+//! so the entry is dropped and counted as an invalidation. Entries over
+//! *untouched* ranges keep hitting through any number of publishes —
+//! invalidation is per mutated range, not per epoch. Requests with
+//! [`Consistency::AtMost`] additionally accept entries filled at most
+//! `k` epochs ago even if their ranges mutated since.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
-use crate::serve::query::{Query, QueryResult, N_QUERY_CLASSES};
+use crate::serve::ingest::EpochStore;
+use crate::serve::query::{plan_shards, Query, QueryResult, N_QUERY_CLASSES};
 
 use super::{Consistency, Outcome, QueryEngine, Request, Response, Submitted, Trace};
+
+/// What a cached result was computed over: the global epoch at fill
+/// time plus the `(shard, shard-epoch)` pairs of the planned ranges.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Coverage {
+    pub fill_epoch: u64,
+    /// ascending by shard index (plans are generated in order)
+    pub plan: Vec<(u32, u64)>,
+}
+
+/// Outcome of a cache probe.
+pub enum CacheProbe {
+    /// entry valid for this request: result + fabric bytes its miss moved
+    Hit(QueryResult, f64),
+    /// entry existed but covered mutated ranges: dropped
+    Invalidated,
+    Miss,
+}
 
 struct Entry {
     query: Query,
@@ -22,6 +54,8 @@ struct Entry {
     /// fabric bytes the original miss moved (0 on local tiers)
     bytes: f64,
     tick: u64,
+    /// `None` = filled over a static (unversioned) tier
+    coverage: Option<Coverage>,
 }
 
 /// Entry-count LRU mapping query cache keys to cloned results. The
@@ -38,21 +72,55 @@ impl ResultCache {
         ResultCache { capacity, map: HashMap::new(), tick: 0 }
     }
 
-    /// Probe for `q`; a hit returns the result and the fabric bytes its
-    /// original miss moved.
-    pub fn get(&mut self, key: u64, q: &Query) -> Option<(QueryResult, f64)> {
+    /// Probe for `q`. `want` carries the query's current shard-epoch
+    /// coverage when the inner tier is versioned (`None` = static tier,
+    /// any stored entry is valid); `max_lag` is the request's tolerated
+    /// staleness in epochs (`None` = epoch-exact).
+    pub fn get(
+        &mut self,
+        key: u64,
+        q: &Query,
+        want: Option<&Coverage>,
+        max_lag: Option<u64>,
+    ) -> CacheProbe {
         self.tick += 1;
         let tick = self.tick;
-        match self.map.get_mut(&key) {
-            Some(e) if e.query == *q => {
-                e.tick = tick;
-                Some((e.result.clone(), e.bytes))
-            }
-            _ => None,
+        let valid = match self.map.get_mut(&key) {
+            Some(e) if e.query == *q => match (want, &e.coverage) {
+                // static tier: entries never go stale
+                (None, _) => true,
+                // epoch-exact: every covered range (and only those
+                // ranges) still at the epoch the entry was filled over
+                (Some(w), Some(c)) if c.plan == w.plan => true,
+                // bounded staleness: the entry is recent enough even
+                // though some covered range mutated
+                (Some(w), Some(cov)) => match max_lag {
+                    Some(k) => w.fill_epoch.saturating_sub(cov.fill_epoch) <= k,
+                    None => false,
+                },
+                // filled before the tier became versioned: treat stale
+                (Some(_), None) => false,
+            },
+            _ => return CacheProbe::Miss,
+        };
+        if valid {
+            let e = self.map.get_mut(&key).unwrap();
+            e.tick = tick;
+            CacheProbe::Hit(e.result.clone(), e.bytes)
+        } else {
+            self.map.remove(&key);
+            CacheProbe::Invalidated
         }
     }
 
-    pub fn put(&mut self, key: u64, query: Query, result: QueryResult, bytes: f64) {
+    pub fn put(
+        &mut self,
+        key: u64,
+        query: Query,
+        result: QueryResult,
+        bytes: f64,
+        coverage: Option<Coverage>,
+    ) {
         if self.capacity == 0 {
             return;
         }
@@ -73,7 +141,7 @@ impl ResultCache {
                 }
             }
         }
-        self.map.insert(key, Entry { query, result, bytes, tick: self.tick });
+        self.map.insert(key, Entry { query, result, bytes, tick: self.tick, coverage });
     }
 }
 
@@ -82,13 +150,17 @@ impl ResultCache {
 /// Hits answer instantly (completion = arrival on the engine's clock)
 /// and never reach the inner engine; misses pass through and fill the
 /// cache on the way back. Requests with [`Consistency::Fresh`] bypass
-/// the probe but still refresh the cache.
+/// the probe but still refresh the cache. Over a versioned tier,
+/// entries carry shard-epoch coverage and only entries whose covered
+/// ranges mutated are invalidated (reported next to the hit rate).
 pub struct Cached<E> {
     inner: E,
     entries_per_class: usize,
     caches: Vec<Mutex<ResultCache>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// entries dropped because a covered range mutated
+    invalidations: AtomicU64,
     /// fabric bytes avoided by hits
     saved: Mutex<f64>,
 }
@@ -104,6 +176,7 @@ impl<E: QueryEngine> Cached<E> {
             caches,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            invalidations: AtomicU64::new(0),
             saved: Mutex::new(0.0),
         }
     }
@@ -116,6 +189,12 @@ impl<E: QueryEngine> Cached<E> {
         self.misses.load(Ordering::Relaxed)
     }
 
+    /// Entries dropped because a range they covered was mutated by an
+    /// ingestion publish (a subset of [`Cached::misses`]).
+    pub fn invalidations(&self) -> u64 {
+        self.invalidations.load(Ordering::Relaxed)
+    }
+
     /// Fraction of probed requests served from the cache.
     pub fn hit_rate(&self) -> f64 {
         let (h, m) = (self.hits(), self.misses());
@@ -126,42 +205,82 @@ impl<E: QueryEngine> Cached<E> {
         }
     }
 
+    /// Fraction of probed requests that found a stale entry (dropped).
+    pub fn invalidation_rate(&self) -> f64 {
+        let probes = self.hits() + self.misses();
+        if probes == 0 {
+            0.0
+        } else {
+            self.invalidations() as f64 / probes as f64
+        }
+    }
+
     /// Fabric bytes hits avoided moving (per-entry record of what the
     /// original miss cost).
     pub fn bytes_saved(&self) -> f64 {
         *self.saved.lock().unwrap()
     }
 
-    fn probe(&self, req: &Request) -> Option<Response> {
-        if req.consistency != Consistency::CachedOk {
+    /// The query's current coverage under `view` (the epoch the inner
+    /// tier serves right now).
+    fn coverage(view: &EpochStore, q: &Query) -> Coverage {
+        let plan = plan_shards(&view.store, q);
+        Coverage { fill_epoch: view.epoch, plan: view.coverage_of(&plan) }
+    }
+
+    fn probe(&self, req: &Request, coverage: &Option<Coverage>) -> Option<Response> {
+        if req.consistency == Consistency::Fresh {
             return None;
         }
         let class = req.query.class().index();
         let key = req.query.cache_key();
-        let hit = self.caches[class].lock().unwrap().get(key, &req.query);
-        hit.map(|(result, bytes)| {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            *self.saved.lock().unwrap() += bytes;
-            Response {
-                result: Some(result),
-                done: req.at,
-                trace: Trace { cache_hit: true, ..Trace::default() },
+        let probe = self.caches[class].lock().unwrap().get(
+            key,
+            &req.query,
+            coverage.as_ref(),
+            req.consistency.max_cache_lag(),
+        );
+        match probe {
+            CacheProbe::Hit(result, bytes) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                *self.saved.lock().unwrap() += bytes;
+                Some(Response {
+                    result: Some(result),
+                    done: req.at,
+                    trace: Trace { cache_hit: true, ..Trace::default() },
+                })
             }
-        })
+            CacheProbe::Invalidated => {
+                self.invalidations.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            CacheProbe::Miss => None,
+        }
     }
 
-    fn fill(&self, query: &Query, resp: &Response) {
+    fn fill(&self, query: &Query, resp: &Response, coverage: Option<Coverage>) {
         if resp.trace.outcome != Outcome::Served {
+            return;
+        }
+        // a lag-tolerant read served from pre-head replica content must
+        // not be memoized: stamped with head coverage it would look
+        // epoch-exact forever, long after the replicas caught up
+        if resp.trace.stale_content {
             return;
         }
         if let Some(result) = &resp.result {
             let class = query.class().index();
             let key = query.cache_key();
+            // coverage was computed from the view captured *before* the
+            // inner call: if a publish raced the execution, the entry's
+            // stamps are at worst older than the data, so a later probe
+            // invalidates it — never the other way around
             self.caches[class].lock().unwrap().put(
                 key,
                 query.clone(),
                 result.clone(),
                 resp.trace.fabric_bytes,
+                coverage,
             );
         }
     }
@@ -169,18 +288,23 @@ impl<E: QueryEngine> Cached<E> {
 
 impl<E: QueryEngine> QueryEngine for Cached<E> {
     fn call(&self, req: Request) -> Response {
-        if let Some(resp) = self.probe(&req) {
+        // one coverage computation serves both the probe and the fill
+        let view = self.inner.epoch_view();
+        let coverage = view.as_ref().map(|v| Self::coverage(v, &req.query));
+        if let Some(resp) = self.probe(&req, &coverage) {
             return resp;
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let query = req.query.clone();
         let resp = self.inner.call(req);
-        self.fill(&query, &resp);
+        self.fill(&query, &resp, coverage);
         resp
     }
 
     fn submit(&self, req: Request) -> Submitted {
-        if let Some(resp) = self.probe(&req) {
+        let view = self.inner.epoch_view();
+        let coverage = view.as_ref().map(|v| Self::coverage(v, &req.query));
+        if let Some(resp) = self.probe(&req, &coverage) {
             return Submitted::Done(resp);
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
@@ -189,7 +313,7 @@ impl<E: QueryEngine> QueryEngine for Cached<E> {
             // synchronous completion (simulated tiers): fill on the way
             // back, exactly like the call path
             Submitted::Done(resp) => {
-                self.fill(&query, &resp);
+                self.fill(&query, &resp, coverage);
                 Submitted::Done(resp)
             }
             // queued into an async engine: the result never flows back
@@ -211,10 +335,15 @@ impl<E: QueryEngine> QueryEngine for Cached<E> {
         let mut m = vec![
             ("cache_hits".to_string(), self.hits() as f64),
             ("cache_misses".to_string(), self.misses() as f64),
+            ("cache_invalidations".to_string(), self.invalidations() as f64),
             ("cache_bytes_saved".to_string(), self.bytes_saved()),
         ];
         m.extend(self.inner.metrics());
         m
+    }
+
+    fn epoch_view(&self) -> Option<Arc<EpochStore>> {
+        self.inner.epoch_view()
     }
 }
 
@@ -223,18 +352,25 @@ mod tests {
     use super::*;
     use crate::serve::query::SourceFilter;
 
+    fn hit(probe: CacheProbe) -> Option<(QueryResult, f64)> {
+        match probe {
+            CacheProbe::Hit(r, b) => Some((r, b)),
+            _ => None,
+        }
+    }
+
     #[test]
     fn cache_evicts_lru_beyond_capacity() {
         let mut c = ResultCache::new(2);
         let r = QueryResult::Sources(Vec::new());
         let q = Query::BrightestN { n: 1, filter: SourceFilter::Any };
-        c.put(1, q.clone(), r.clone(), 0.0);
-        c.put(2, q.clone(), r.clone(), 0.0);
-        assert!(c.get(1, &q).is_some()); // refresh 1 => 2 is LRU
-        c.put(3, q.clone(), r.clone(), 0.0);
-        assert!(c.get(2, &q).is_none(), "2 should be evicted");
-        assert!(c.get(1, &q).is_some());
-        assert!(c.get(3, &q).is_some());
+        c.put(1, q.clone(), r.clone(), 0.0, None);
+        c.put(2, q.clone(), r.clone(), 0.0, None);
+        assert!(hit(c.get(1, &q, None, None)).is_some()); // refresh 1 => 2 is LRU
+        c.put(3, q.clone(), r.clone(), 0.0, None);
+        assert!(hit(c.get(2, &q, None, None)).is_none(), "2 should be evicted");
+        assert!(hit(c.get(1, &q, None, None)).is_some());
+        assert!(hit(c.get(3, &q, None, None)).is_some());
     }
 
     #[test]
@@ -243,17 +379,50 @@ mod tests {
         let q1 = Query::BrightestN { n: 1, filter: SourceFilter::Any };
         let q2 = Query::BrightestN { n: 2, filter: SourceFilter::Any };
         // simulate a 64-bit key collision: same key, different query
-        c.put(42, q1.clone(), QueryResult::Sources(Vec::new()), 0.0);
-        assert!(c.get(42, &q1).is_some());
-        assert!(c.get(42, &q2).is_none(), "colliding key must not serve q1's result for q2");
+        c.put(42, q1.clone(), QueryResult::Sources(Vec::new()), 0.0, None);
+        assert!(hit(c.get(42, &q1, None, None)).is_some());
+        assert!(
+            hit(c.get(42, &q2, None, None)).is_none(),
+            "colliding key must not serve q1's result for q2"
+        );
     }
 
     #[test]
     fn hits_record_bytes_saved() {
         let mut c = ResultCache::new(4);
         let q = Query::BrightestN { n: 3, filter: SourceFilter::Any };
-        c.put(7, q.clone(), QueryResult::Sources(Vec::new()), 1234.0);
-        let (_, bytes) = c.get(7, &q).unwrap();
+        c.put(7, q.clone(), QueryResult::Sources(Vec::new()), 1234.0, None);
+        let (_, bytes) = hit(c.get(7, &q, None, None)).unwrap();
         assert_eq!(bytes, 1234.0);
+    }
+
+    #[test]
+    fn coverage_mismatch_invalidates_and_match_hits() {
+        let mut c = ResultCache::new(4);
+        let q = Query::BrightestN { n: 3, filter: SourceFilter::Any };
+        let filled = Coverage { fill_epoch: 2, plan: vec![(0, 1), (1, 2)] };
+        c.put(9, q.clone(), QueryResult::Sources(Vec::new()), 0.0, Some(filled.clone()));
+        // same coverage: hit
+        assert!(hit(c.get(9, &q, Some(&filled), None)).is_some());
+        // shard 1 mutated at epoch 3: epoch-exact probe invalidates
+        let moved = Coverage { fill_epoch: 3, plan: vec![(0, 1), (1, 3)] };
+        assert!(matches!(c.get(9, &q, Some(&moved), None), CacheProbe::Invalidated));
+        // entry is gone afterwards
+        assert!(matches!(c.get(9, &q, Some(&filled), None), CacheProbe::Miss));
+    }
+
+    #[test]
+    fn bounded_staleness_tolerates_recent_mutations() {
+        let mut c = ResultCache::new(4);
+        let q = Query::BrightestN { n: 3, filter: SourceFilter::Any };
+        let filled = Coverage { fill_epoch: 5, plan: vec![(2, 5)] };
+        c.put(11, q.clone(), QueryResult::Sources(Vec::new()), 0.0, Some(filled));
+        // shard 2 mutated at epoch 6; entry is 1 epoch old
+        let current = Coverage { fill_epoch: 6, plan: vec![(2, 6)] };
+        assert!(
+            hit(c.get(11, &q, Some(&current), Some(1))).is_some(),
+            "lag 1 <= k 1 must hit"
+        );
+        assert!(matches!(c.get(11, &q, Some(&current), Some(0)), CacheProbe::Invalidated));
     }
 }

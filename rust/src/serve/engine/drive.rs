@@ -218,6 +218,23 @@ pub fn drive_open_loop<E: QueryEngine + ?Sized>(
     qps: f64,
     secs: f64,
 ) -> DriveReport {
+    drive_open_loop_with(engine, clock, gen, qps, secs, |_| {})
+}
+
+/// [`drive_open_loop`] with a per-arrival hook: `before_arrival(at)` is
+/// called with each arrival time before the request is submitted. This
+/// is how the mixed read/write scenarios interleave ingestion with the
+/// query stream — the hook applies every delta publish due at or
+/// before `at` (e.g. `IngestDriver::tick`), so reads race writes at
+/// well-defined points on the shared clock, wall or simulated.
+pub fn drive_open_loop_with<E: QueryEngine + ?Sized>(
+    engine: &E,
+    clock: &mut dyn Clock,
+    gen: &mut LoadGen,
+    qps: f64,
+    secs: f64,
+    mut before_arrival: impl FnMut(f64),
+) -> DriveReport {
     let mut report = DriveReport::default();
     let mut next_at = 0.0f64;
     while next_at < secs {
@@ -225,6 +242,7 @@ pub fn drive_open_loop<E: QueryEngine + ?Sized>(
         // a wall clock may wake late; arrivals burst to catch up, as a
         // true open-loop source does
         let at = clock.now().max(next_at);
+        before_arrival(at);
         let q = gen.next_query();
         let class = q.class().index();
         report.offered += 1;

@@ -3,35 +3,63 @@
 //! "The Tail at Scale" recipe: when a replica sub-query exceeds a
 //! latency budget, issue the same sub-query to a second replica and
 //! take whichever reply lands first. Replies are byte-identical by
-//! construction (every replica of a range holds the same shard), so
-//! hedging trades extra replica load and fabric bytes for a shorter
-//! tail — the p999 comparison against p2c-alone lives in the serve
-//! bench and tests.
+//! construction (the router only hedges to replicas serving the same
+//! shard content epoch), so hedging trades extra replica load and
+//! fabric bytes for a shorter tail — the p999 comparison against
+//! p2c-alone lives in the serve bench and tests.
 //!
 //! The layer is policy, the tier is mechanism: [`Hedged`] stamps the
 //! budget onto the request envelope ([`Request::hedge`]) and aggregates
 //! the fired/won counters from response traces; replicated tiers (the
 //! distributed router) honor the stamp per sub-query, single-replica
 //! tiers ignore it.
+//!
+//! Hedging doubles replica load for the requests it touches, so the
+//! layer also enforces a *hedge-rate budget*: at most `cap` of all
+//! requests may be hedged (default uncapped; `serve-bench` passes
+//! `--hedge-budget`, default 0.05). Requests past the budget are not
+//! stamped — skipped and counted — so a latency regression cannot
+//! snowball into a self-inflicted load doubling.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::serve::ingest::EpochStore;
 
 use super::{QueryEngine, Request, Response, Submitted};
 
-/// Middleware: stamp a replica hedge budget on every request.
+/// Middleware: stamp a replica hedge budget on every request (subject
+/// to the hedge-rate cap).
 pub struct Hedged<E> {
     inner: E,
     /// hedge budget, seconds
     budget: f64,
+    /// max fraction of requests that may be stamped (None = uncapped)
+    cap: Option<f64>,
+    /// requests seen / stamped / skipped by the rate budget
+    seen: AtomicU64,
+    stamped: AtomicU64,
+    skipped: AtomicU64,
     fired: AtomicU64,
     wins: AtomicU64,
 }
 
 impl<E: QueryEngine> Hedged<E> {
+    /// Uncapped hedging: every request carries the budget.
     pub fn new(inner: E, budget: f64) -> Hedged<E> {
+        Hedged::with_cap(inner, budget, 0.0)
+    }
+
+    /// Hedging with a rate budget: at most `cap` of requests are
+    /// stamped (`cap <= 0` or `>= 1` disables the cap).
+    pub fn with_cap(inner: E, budget: f64, cap: f64) -> Hedged<E> {
         Hedged {
             inner,
             budget: budget.max(0.0),
+            cap: if cap > 0.0 && cap < 1.0 { Some(cap) } else { None },
+            seen: AtomicU64::new(0),
+            stamped: AtomicU64::new(0),
+            skipped: AtomicU64::new(0),
             fired: AtomicU64::new(0),
             wins: AtomicU64::new(0),
         }
@@ -47,7 +75,29 @@ impl<E: QueryEngine> Hedged<E> {
         self.wins.load(Ordering::Relaxed)
     }
 
+    /// Requests left unstamped because the hedge-rate budget was spent.
+    pub fn budget_skipped(&self) -> u64 {
+        self.skipped.load(Ordering::Relaxed)
+    }
+
+    /// Requests stamped with a hedge budget.
+    pub fn stamped_requests(&self) -> u64 {
+        self.stamped.load(Ordering::Relaxed)
+    }
+
     fn stamp(&self, mut req: Request) -> Request {
+        let seen = self.seen.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some(cap) = self.cap {
+            // grant the n-th stamp only once enough requests have been
+            // seen to keep stamped/seen <= cap (deterministic under a
+            // single submitter; approximate under racing clients)
+            let stamped = self.stamped.load(Ordering::Relaxed);
+            if (stamped + 1) as f64 > cap * seen as f64 {
+                self.skipped.fetch_add(1, Ordering::Relaxed);
+                return req;
+            }
+        }
+        self.stamped.fetch_add(1, Ordering::Relaxed);
         req.hedge = Some(match req.hedge {
             // an outer layer already set a tighter budget: keep the min
             Some(existing) => existing.min(self.budget),
@@ -80,7 +130,15 @@ impl<E: QueryEngine> QueryEngine for Hedged<E> {
     }
 
     fn describe(&self) -> String {
-        format!("hedged({:.3}ms) -> {}", self.budget * 1e3, self.inner.describe())
+        match self.cap {
+            Some(cap) => format!(
+                "hedged({:.3}ms, cap {:.0}%) -> {}",
+                self.budget * 1e3,
+                cap * 100.0,
+                self.inner.describe()
+            ),
+            None => format!("hedged({:.3}ms) -> {}", self.budget * 1e3, self.inner.describe()),
+        }
     }
 
     fn in_flight(&self) -> Option<usize> {
@@ -91,8 +149,61 @@ impl<E: QueryEngine> QueryEngine for Hedged<E> {
         let mut m = vec![
             ("hedges_fired".to_string(), self.fired() as f64),
             ("hedge_wins".to_string(), self.wins() as f64),
+            ("hedge_budget_skipped".to_string(), self.budget_skipped() as f64),
         ];
         m.extend(self.inner.metrics());
         m
+    }
+
+    fn epoch_view(&self) -> Option<Arc<EpochStore>> {
+        self.inner.epoch_view()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::query::{Query, QueryResult, SourceFilter};
+
+    /// Stub that reports whether the envelope carried a hedge stamp.
+    struct Probe;
+
+    impl QueryEngine for Probe {
+        fn call(&self, req: Request) -> Response {
+            let mut resp = Response::served(QueryResult::Sources(Vec::new()), req.at);
+            // reuse the hedges counter to observe the stamp downstream
+            resp.trace.hedges = req.hedge.is_some() as u32;
+            resp
+        }
+
+        fn describe(&self) -> String {
+            "probe".to_string()
+        }
+    }
+
+    #[test]
+    fn cap_limits_the_stamped_fraction() {
+        let engine = Hedged::with_cap(Probe, 1e-3, 0.05);
+        let q = Query::BrightestN { n: 1, filter: SourceFilter::Any };
+        let mut stamped = 0u64;
+        for _ in 0..1000 {
+            let resp = engine.call(Request::new(q.clone()));
+            stamped += resp.trace.hedges as u64;
+        }
+        assert_eq!(stamped, engine.stamped_requests());
+        assert!(stamped <= 50, "cap 5% of 1000 must stamp <= 50, got {stamped}");
+        assert!(stamped >= 40, "cap must still allow ~5%: {stamped}");
+        assert_eq!(engine.budget_skipped(), 1000 - stamped);
+    }
+
+    #[test]
+    fn uncapped_stamps_everything() {
+        let engine = Hedged::new(Probe, 1e-3);
+        let q = Query::BrightestN { n: 1, filter: SourceFilter::Any };
+        for _ in 0..20 {
+            engine.call(Request::new(q.clone()));
+        }
+        assert_eq!(engine.stamped_requests(), 20);
+        assert_eq!(engine.budget_skipped(), 0);
     }
 }

@@ -34,24 +34,54 @@ pub mod hedge;
 pub mod tiers;
 
 pub use admission::Admission;
-pub use cache::{Cached, ResultCache};
+pub use cache::{Cached, Coverage, ResultCache};
 pub use drive::{
-    drive_closed_loop, drive_open_loop, Clock, DriveReport, SimClock, WallClock,
+    drive_closed_loop, drive_open_loop, drive_open_loop_with, Clock, DriveReport, SimClock,
+    WallClock,
 };
 pub use hedge::Hedged;
 pub use tiers::{DirectEngine, RouterEngine, ScanEngine, ServerEngine};
 
+use std::sync::Arc;
+
+use super::ingest::EpochStore;
 use super::query::{Query, QueryResult};
 
-/// How stale a response the caller tolerates.
+/// How stale a response the caller tolerates, in catalog epochs (see
+/// [`crate::serve::ingest`]): live ingestion publishes new epochs while
+/// queries are in flight, and this hint decides what each layer may
+/// serve — which cache entries still count and which lagging replicas
+/// the distributed router may route to.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum Consistency {
-    /// A cached result (if any layer holds one) is acceptable.
+    /// A cached result (if any layer holds one) is acceptable, and any
+    /// replica may serve regardless of how far it lags the latest
+    /// published epoch. Epoch-invalid cache entries are still dropped —
+    /// `CachedOk` tolerates replica lag, not known-stale cache data.
     #[default]
     CachedOk,
-    /// Bypass result caches and execute against the store. The fresh
-    /// result still refills caches on the way back.
+    /// Bounded staleness: accept cache entries filled at most `k`
+    /// epochs ago and replicas lagging at most `k` epochs behind the
+    /// latest publish. `AtMost(0)` is equivalent to
+    /// [`Consistency::Fresh`] replica selection (but still probes
+    /// caches for epoch-exact entries).
+    AtMost(u32),
+    /// Bypass result caches and execute against the latest epoch; the
+    /// distributed router refuses replicas that have not applied every
+    /// mutation of the shards the query touches (read-your-writes).
+    /// The fresh result still refills caches on the way back.
     Fresh,
+}
+
+impl Consistency {
+    /// Cache-entry lag tolerance in epochs: `None` = only epoch-exact
+    /// entries may serve (the entry's covered ranges are unmutated).
+    pub fn max_cache_lag(self) -> Option<u64> {
+        match self {
+            Consistency::AtMost(k) => Some(k as u64),
+            _ => None,
+        }
+    }
 }
 
 /// The request envelope every tier and middleware layer speaks.
@@ -100,6 +130,12 @@ impl Request {
         self.consistency = Consistency::Fresh;
         self
     }
+
+    /// Tolerate at most `k` epochs of staleness (cache and replicas).
+    pub fn at_most(mut self, epochs: u32) -> Request {
+        self.consistency = Consistency::AtMost(epochs);
+        self
+    }
 }
 
 /// How the engine disposed of a request.
@@ -130,6 +166,11 @@ pub struct Trace {
     pub hedge_wins: u32,
     /// fabric bytes this request moved (0 on local tiers / cache hits)
     pub fabric_bytes: f64,
+    /// some sub-query was served from replica content older than the
+    /// latest published epoch (lag-tolerant reads only). [`Cached`]
+    /// refuses to fill from such responses: a stale result stamped
+    /// with head coverage would otherwise look epoch-exact forever.
+    pub stale_content: bool,
 }
 
 impl Default for Trace {
@@ -141,6 +182,7 @@ impl Default for Trace {
             hedges: 0,
             hedge_wins: 0,
             fabric_bytes: 0.0,
+            stale_content: false,
         }
     }
 }
@@ -238,6 +280,15 @@ pub trait QueryEngine: Send + Sync {
     fn metrics(&self) -> Vec<(String, f64)> {
         Vec::new()
     }
+
+    /// The catalog epoch this engine currently serves (`None` for
+    /// engines over a fixed store). Middleware forwards it; the
+    /// [`Cached`] layer reads it to stamp entries with the shard-epoch
+    /// coverage they were computed over and to invalidate entries whose
+    /// covered ranges have since mutated.
+    fn epoch_view(&self) -> Option<Arc<EpochStore>> {
+        None
+    }
 }
 
 impl QueryEngine for Box<dyn QueryEngine> {
@@ -260,6 +311,58 @@ impl QueryEngine for Box<dyn QueryEngine> {
     fn metrics(&self) -> Vec<(String, f64)> {
         self.as_ref().metrics()
     }
+
+    fn epoch_view(&self) -> Option<Arc<EpochStore>> {
+        self.as_ref().epoch_view()
+    }
+}
+
+/// Middleware: stamp a default consistency on requests that carry the
+/// envelope default. Lets a driver or bench run a whole query stream
+/// at `Fresh` or `AtMost(k)` without touching the load generator;
+/// explicitly non-default requests pass through untouched.
+pub struct Consistent<E> {
+    inner: E,
+    level: Consistency,
+}
+
+impl<E: QueryEngine> Consistent<E> {
+    pub fn new(inner: E, level: Consistency) -> Consistent<E> {
+        Consistent { inner, level }
+    }
+
+    fn stamp(&self, mut req: Request) -> Request {
+        if req.consistency == Consistency::default() {
+            req.consistency = self.level;
+        }
+        req
+    }
+}
+
+impl<E: QueryEngine> QueryEngine for Consistent<E> {
+    fn call(&self, req: Request) -> Response {
+        self.inner.call(self.stamp(req))
+    }
+
+    fn submit(&self, req: Request) -> Submitted {
+        self.inner.submit(self.stamp(req))
+    }
+
+    fn describe(&self) -> String {
+        format!("consistency({:?}) -> {}", self.level, self.inner.describe())
+    }
+
+    fn in_flight(&self) -> Option<usize> {
+        self.inner.in_flight()
+    }
+
+    fn metrics(&self) -> Vec<(String, f64)> {
+        self.inner.metrics()
+    }
+
+    fn epoch_view(&self) -> Option<Arc<EpochStore>> {
+        self.inner.epoch_view()
+    }
 }
 
 /// Which middleware layers to stack on a tier (0 / 0.0 disables a
@@ -272,13 +375,16 @@ pub struct LayerSpec {
     pub cache_entries: usize,
     /// [`Hedged`] replica budget, seconds (<= 0 = no hedge layer)
     pub hedge_budget: f64,
+    /// max fraction of requests the hedge layer may hedge (<= 0 =
+    /// uncapped): hedges past the budget are skipped and counted
+    pub hedge_cap: f64,
 }
 
 /// Build the standard layered stack over a boxed tier.
 pub fn layered(base: Box<dyn QueryEngine>, spec: &LayerSpec) -> Box<dyn QueryEngine> {
     let mut engine = base;
     if spec.hedge_budget > 0.0 {
-        engine = Box::new(Hedged::new(engine, spec.hedge_budget));
+        engine = Box::new(Hedged::with_cap(engine, spec.hedge_budget, spec.hedge_cap));
     }
     if spec.cache_entries > 0 {
         engine = Box::new(Cached::new(engine, spec.cache_entries));

@@ -3,11 +3,16 @@
 //! simulated-time distributed router. Every future tier (a real RPC
 //! transport behind `ShardClient`, incremental stores) is another impl
 //! of the same trait rather than a fourth bespoke entry point.
+//!
+//! Tiers over a [`VersionedStore`] expose their current epoch through
+//! [`QueryEngine::epoch_view`], which is what lets the `Cached` layer
+//! invalidate precisely and the drivers measure reads during ingestion.
 
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::serve::dist::{DistReport, Router};
+use crate::serve::ingest::{EpochStore, IngestReport, StoreSource, VersionedStore};
 use crate::serve::query::{execute, execute_scan};
 use crate::serve::server::Server;
 use crate::serve::store::{ServedSource, Store};
@@ -42,27 +47,48 @@ impl QueryEngine for ScanEngine {
 
 /// The single-host sharded tier, executed inline on the caller's
 /// thread (no worker pool): `query::execute` behind the envelope.
+/// Serves either a fixed store or the live head of a versioned one
+/// (loaded per request, so publishes are picked up immediately).
 #[derive(Clone)]
 pub struct DirectEngine {
-    store: Arc<Store>,
+    source: StoreSource,
 }
 
 impl DirectEngine {
     pub fn new(store: Arc<Store>) -> DirectEngine {
-        DirectEngine { store }
+        DirectEngine { source: StoreSource::Fixed(store) }
+    }
+
+    /// Serve the live head of a versioned store.
+    pub fn live(versioned: Arc<VersionedStore>) -> DirectEngine {
+        DirectEngine { source: StoreSource::Live(versioned) }
     }
 }
 
 impl QueryEngine for DirectEngine {
     fn call(&self, req: Request) -> Response {
         let t = Instant::now();
-        let result = execute(&self.store, &req.query);
+        let result = execute(&self.source.current(), &req.query);
         let resp = Response::served(result, req.at + t.elapsed().as_secs_f64());
         enforce_deadline(req.at, req.deadline, resp)
     }
 
     fn describe(&self) -> String {
-        format!("direct({} shards)", self.store.shards.len())
+        match &self.source {
+            StoreSource::Fixed(s) => format!("direct({} shards)", s.shards.len()),
+            StoreSource::Live(v) => {
+                let view = v.load();
+                format!(
+                    "direct(live, {} shards @ epoch {})",
+                    view.store.shards.len(),
+                    view.epoch
+                )
+            }
+        }
+    }
+
+    fn epoch_view(&self) -> Option<Arc<EpochStore>> {
+        self.source.view()
     }
 }
 
@@ -112,11 +138,16 @@ impl QueryEngine for ServerEngine {
     fn in_flight(&self) -> Option<usize> {
         Some(self.server.queue_len())
     }
+
+    fn epoch_view(&self) -> Option<Arc<EpochStore>> {
+        self.server.epoch_view()
+    }
 }
 
 /// The distributed tier: the scatter-gather router in simulated time.
 /// Clones share one router; keep a clone to read the distributed
-/// report ([`RouterEngine::dist_report`]) after a driven run.
+/// report ([`RouterEngine::dist_report`]) after a driven run, and to
+/// ship ingestion publishes into the tier ([`RouterEngine::publish`]).
 #[derive(Clone)]
 pub struct RouterEngine {
     router: Arc<Mutex<Router>>,
@@ -140,9 +171,20 @@ impl RouterEngine {
         f(&self.router.lock().unwrap())
     }
 
+    /// Ship an ingestion publish to the replica tier at simulated time
+    /// `now`: delta rows ride the fabric to every touched replica and
+    /// each node applies the epoch when its transfer lands.
+    pub fn publish(&self, now: f64, report: &IngestReport) {
+        self.router.lock().unwrap().publish(
+            now,
+            Arc::clone(&report.published),
+            &report.touched,
+        );
+    }
+
     /// Assemble the distributed-tier report: the drive's latency and
     /// disposition counters joined with the router's per-node load,
-    /// fabric traffic, and failover record.
+    /// fabric traffic, failover and replication-lag records.
     pub fn dist_report(&self, drive: &DriveReport) -> DistReport {
         self.router.lock().unwrap().report(drive)
     }
@@ -155,7 +197,9 @@ impl QueryEngine for RouterEngine {
         let bytes0 = r.fabric.bytes_moved;
         let hedges0 = r.hedges;
         let wins0 = r.hedge_wins;
-        let (result, done) = r.execute_with(req.at, &req.query, req.hedge);
+        let lagged0 = r.lagged_subqueries;
+        let (result, done) =
+            r.execute_with(req.at, &req.query, req.hedge, req.consistency);
         let subs1: u64 = r.served_per_node.iter().sum();
         let trace = Trace {
             outcome: if result.is_some() { Outcome::Served } else { Outcome::Failed },
@@ -164,6 +208,7 @@ impl QueryEngine for RouterEngine {
             hedges: (r.hedges - hedges0) as u32,
             hedge_wins: (r.hedge_wins - wins0) as u32,
             fabric_bytes: r.fabric.bytes_moved - bytes0,
+            stale_content: r.lagged_subqueries > lagged0,
         };
         drop(r);
         enforce_deadline(req.at, req.deadline, Response { result, done, trace })
@@ -181,6 +226,17 @@ impl QueryEngine for RouterEngine {
             ("router_hedges".to_string(), r.hedges as f64),
             ("router_hedge_wins".to_string(), r.hedge_wins as f64),
             ("router_fabric_bytes".to_string(), r.fabric.bytes_moved),
+            ("router_epochs_published".to_string(), r.epochs_published as f64),
+            ("router_delta_bytes".to_string(), r.delta_bytes),
+            ("router_stale_refusals".to_string(), r.stale_refusals as f64),
+            ("router_stale_waits".to_string(), r.stale_waits.n as f64),
+            ("router_lagged_subqueries".to_string(), r.lagged_subqueries as f64),
         ]
+    }
+
+    fn epoch_view(&self) -> Option<Arc<EpochStore>> {
+        // the router's head is its version truth: replicas lag it, the
+        // cache invalidates against it
+        Some(self.router.lock().unwrap().head())
     }
 }

@@ -1,0 +1,262 @@
+//! Synthetic catalog drift: the write-side load generator.
+//!
+//! As a survey keeps imaging, the catalog drifts — fresh detections
+//! appear and known sources get re-estimated (position/flux posterior
+//! updates). [`DriftGen`] produces deterministic delta batches with
+//! that shape, and maintains a flat last-write-wins mirror of every
+//! row it ever emitted: the brute-force reference the parity tests
+//! compare the ingested store against. [`IngestDriver`] turns the
+//! stream into Poisson-timed publishes through an [`Ingestor`], for
+//! the mixed read/write scenarios of `serve-bench --ingest-qps` and
+//! `bench_serve`.
+
+use std::collections::HashMap;
+
+use crate::prng::Rng;
+use crate::serve::store::ServedSource;
+
+use super::ingestor::{IngestReport, Ingestor};
+
+/// Shape of one drift stream.
+#[derive(Clone, Debug)]
+pub struct DriftConfig {
+    /// upserts per batch
+    pub batch: usize,
+    /// fraction of upserts that re-estimate an existing source (the
+    /// rest are fresh detections)
+    pub update_fraction: f64,
+    /// position jitter SD applied by a re-estimate, px
+    pub pos_jitter: f64,
+    /// relative flux jitter SD applied by a re-estimate
+    pub flux_jitter: f64,
+    pub seed: u64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig {
+            batch: 32,
+            update_fraction: 0.5,
+            pos_jitter: 1.5,
+            flux_jitter: 0.05,
+            seed: 42,
+        }
+    }
+}
+
+/// Deterministic delta-batch stream over a sky extent.
+pub struct DriftGen {
+    cfg: DriftConfig,
+    rng: Rng,
+    width: f64,
+    height: f64,
+    /// flat last-write-wins view of the catalog (seed + every delta)
+    mirror: Vec<ServedSource>,
+    index: HashMap<usize, usize>,
+    next_id: usize,
+}
+
+impl DriftGen {
+    /// Start drifting from a seed catalog (the flat view of the store
+    /// being served). Fresh detections get ids above every seed id.
+    pub fn new(
+        seed_sources: &[ServedSource],
+        width: f64,
+        height: f64,
+        cfg: DriftConfig,
+    ) -> DriftGen {
+        let mirror: Vec<ServedSource> = seed_sources.to_vec();
+        let index = mirror.iter().enumerate().map(|(i, s)| (s.id, i)).collect();
+        let next_id = mirror.iter().map(|s| s.id + 1).max().unwrap_or(0);
+        let rng = Rng::new(cfg.seed ^ 0xd21f7);
+        DriftGen { cfg, rng, width, height, mirror, index, next_id }
+    }
+
+    /// The flat catalog after every batch emitted so far — the
+    /// brute-force reference for ingestion parity tests.
+    pub fn mirror(&self) -> &[ServedSource] {
+        &self.mirror
+    }
+
+    /// The mirror in canonical id order.
+    pub fn mirror_sorted(&self) -> Vec<ServedSource> {
+        let mut out = self.mirror.clone();
+        out.sort_by_key(|s| s.id);
+        out
+    }
+
+    fn fresh_detection(&mut self) -> ServedSource {
+        let id = self.next_id;
+        self.next_id += 1;
+        ServedSource {
+            id,
+            pos: (
+                self.rng.uniform_in(0.0, self.width),
+                self.rng.uniform_in(0.0, self.height),
+            ),
+            p_gal: self.rng.uniform(),
+            flux_r: self.rng.lognormal(4.0, 1.2),
+            flux_logsd: self.rng.uniform_in(0.05, 0.5),
+            colors: [
+                self.rng.normal(),
+                self.rng.normal(),
+                self.rng.normal(),
+                self.rng.normal(),
+            ],
+            converged: self.rng.uniform() < 0.9,
+        }
+    }
+
+    fn re_estimate(&mut self) -> ServedSource {
+        let k = self.rng.below(self.mirror.len() as u64) as usize;
+        let mut s = self.mirror[k].clone();
+        s.pos.0 = (s.pos.0 + self.rng.normal() * self.cfg.pos_jitter).clamp(0.0, self.width);
+        s.pos.1 = (s.pos.1 + self.rng.normal() * self.cfg.pos_jitter).clamp(0.0, self.height);
+        s.flux_r = (s.flux_r * (1.0 + self.rng.normal() * self.cfg.flux_jitter)).max(1e-6);
+        // later epochs tighten the posterior, as more exposures would
+        s.flux_logsd = (s.flux_logsd * 0.98).max(1e-3);
+        s
+    }
+
+    /// Emit the next delta batch and fold it into the mirror.
+    pub fn next_batch(&mut self) -> Vec<ServedSource> {
+        let mut out = Vec::with_capacity(self.cfg.batch);
+        for _ in 0..self.cfg.batch.max(1) {
+            let update = !self.mirror.is_empty()
+                && self.rng.uniform() < self.cfg.update_fraction;
+            let s = if update { self.re_estimate() } else { self.fresh_detection() };
+            match self.index.get(&s.id) {
+                Some(&i) => self.mirror[i] = s.clone(),
+                None => {
+                    self.index.insert(s.id, self.mirror.len());
+                    self.mirror.push(s.clone());
+                }
+            }
+            out.push(s);
+        }
+        out
+    }
+}
+
+/// Poisson-timed ingestion: drift batches applied through an
+/// [`Ingestor`] at an offered publish rate, consumed by the mixed
+/// read/write drivers (`drive_open_loop_with` ticks it with every
+/// arrival time).
+pub struct IngestDriver {
+    ingestor: Ingestor,
+    drift: DriftGen,
+    rng: Rng,
+    rate: f64,
+    next_at: f64,
+    /// publishes applied so far
+    pub publishes: u64,
+    /// upsert rows applied so far
+    pub rows: u64,
+}
+
+impl IngestDriver {
+    /// `rate` is publishes per second on the driving clock (simulated
+    /// or wall); the first publish arrives after one exponential gap.
+    pub fn new(ingestor: Ingestor, drift: DriftGen, rate: f64, seed: u64) -> IngestDriver {
+        let mut rng = Rng::new(seed ^ 0x1276e57);
+        let rate = rate.max(1e-9);
+        let first = -rng.uniform().max(1e-12).ln() / rate;
+        IngestDriver {
+            ingestor,
+            drift,
+            rng,
+            rate,
+            next_at: first,
+            publishes: 0,
+            rows: 0,
+        }
+    }
+
+    /// Apply every publish due at or before `now`; returns their
+    /// reports (callers forward them to replicated tiers).
+    pub fn tick(&mut self, now: f64) -> Vec<IngestReport> {
+        let mut out = Vec::new();
+        while self.next_at <= now {
+            let batch = self.drift.next_batch();
+            let rep = self.ingestor.apply(&batch);
+            self.publishes += 1;
+            self.rows += rep.upserts as u64;
+            out.push(rep);
+            self.next_at += -self.rng.uniform().max(1e-12).ln() / self.rate;
+        }
+        out
+    }
+
+    /// The drift stream's flat reference catalog, id-ordered.
+    pub fn mirror_sorted(&self) -> Vec<ServedSource> {
+        self.drift.mirror_sorted()
+    }
+
+    pub fn ingestor(&self) -> &Ingestor {
+        &self.ingestor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    use crate::serve::ingest::VersionedStore;
+    use crate::serve::query::{execute, execute_scan, Query, SourceFilter};
+    use crate::serve::store::Store;
+
+    #[test]
+    fn drift_batches_are_deterministic_and_mix_updates_with_inserts() {
+        let snap = crate::serve::snapshot::synthetic(300, 5);
+        let mk = || {
+            DriftGen::new(
+                &snap.sources,
+                snap.width,
+                snap.height,
+                DriftConfig { batch: 50, seed: 9, ..Default::default() },
+            )
+        };
+        let (mut a, mut b) = (mk(), mk());
+        let (mut updates, mut inserts) = (0usize, 0usize);
+        for _ in 0..10 {
+            let ba = a.next_batch();
+            assert_eq!(ba, b.next_batch(), "same seed, same stream");
+            for s in &ba {
+                if s.id < 300 {
+                    updates += 1;
+                } else {
+                    inserts += 1;
+                }
+            }
+        }
+        assert!(updates > 50, "updates {updates}");
+        assert!(inserts > 50, "inserts {inserts}");
+        assert_eq!(a.mirror().len(), 300 + inserts);
+    }
+
+    #[test]
+    fn driver_applies_due_batches_and_store_tracks_mirror() {
+        let snap = crate::serve::snapshot::synthetic(400, 11);
+        let (w, h) = (snap.width, snap.height);
+        let store = Arc::new(Store::build(snap.sources.clone(), w, h, 6));
+        let vs = Arc::new(VersionedStore::new(store));
+        let drift_cfg = DriftConfig { batch: 25, seed: 3, ..Default::default() };
+        let drift = DriftGen::new(&snap.sources, w, h, drift_cfg);
+        let mut driver = IngestDriver::new(Ingestor::new(Arc::clone(&vs)), drift, 100.0, 3);
+        assert!(driver.tick(0.0).is_empty() || driver.publishes > 0);
+        let mut t = 0.0;
+        while t < 0.5 {
+            driver.tick(t);
+            t += 0.01;
+        }
+        assert!(driver.publishes > 20, "publishes {}", driver.publishes);
+        assert_eq!(driver.rows, driver.publishes * 25);
+        let mirror = driver.mirror_sorted();
+        let fin = vs.load();
+        assert_eq!(fin.epoch, driver.publishes);
+        assert_eq!(fin.store.all_sources(), mirror);
+        let q = Query::BrightestN { n: 30, filter: SourceFilter::Any };
+        assert_eq!(execute(&fin.store, &q), execute_scan(&mirror, &q));
+    }
+}

@@ -1,0 +1,283 @@
+//! The write path: delta batches become copy-on-write epoch publishes.
+//!
+//! An [`Ingestor`] accepts batches of [`ServedSource`] upserts (fresh
+//! detections as imaging proceeds, or re-estimates of known sources —
+//! last write wins within a batch), routes each row to the shard owning
+//! its Hilbert key, rebuilds *only* the touched shards (sources plus
+//! grid index), and publishes the result as the next epoch through the
+//! [`VersionedStore`]. Untouched shards are shared with the prior epoch
+//! by `Arc`, so publish cost scales with the delta, not the catalog.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+use crate::serve::store::{ServedSource, Shard, Store};
+
+use super::versioned::{EpochStore, VersionedStore};
+
+/// What one [`Ingestor::apply`] publish did — the router's delta
+/// shipping and the bench's accounting both read it.
+#[derive(Clone, Debug)]
+pub struct IngestReport {
+    /// the epoch this batch published
+    pub epoch: u64,
+    /// touched shards with the delta rows each must ship to its
+    /// replicas (upserts landing in the shard + tombstones leaving it)
+    pub touched: Vec<(usize, usize)>,
+    /// rows in the batch after intra-batch dedup
+    pub upserts: usize,
+    pub inserted: usize,
+    pub updated: usize,
+    /// updates whose new position moved them to a different shard
+    pub moved: usize,
+    /// the published version (hand this to `RouterEngine::publish` to
+    /// ship the delta to a replicated tier)
+    pub published: Arc<EpochStore>,
+}
+
+/// The single-writer ingestion front-end over a [`VersionedStore`].
+pub struct Ingestor {
+    versioned: Arc<VersionedStore>,
+    /// id -> owning shard at the current epoch (kept incrementally so
+    /// moves know which shard to tombstone)
+    id_to_shard: HashMap<usize, usize>,
+}
+
+impl Ingestor {
+    pub fn new(versioned: Arc<VersionedStore>) -> Ingestor {
+        let cur = versioned.load();
+        let mut id_to_shard = HashMap::new();
+        for (i, sh) in cur.store.shards.iter().enumerate() {
+            for s in &sh.sources {
+                id_to_shard.insert(s.id, i);
+            }
+        }
+        Ingestor { versioned, id_to_shard }
+    }
+
+    /// Shared access to the store this ingestor publishes into.
+    pub fn versioned(&self) -> &Arc<VersionedStore> {
+        &self.versioned
+    }
+
+    /// Apply one delta batch and publish it as the next epoch. Returns
+    /// the report; readers pick the new epoch up on their next load.
+    pub fn apply(&mut self, deltas: &[ServedSource]) -> IngestReport {
+        let cur = self.versioned.load();
+        let store = &cur.store;
+        // last write wins within a batch
+        let mut batch: BTreeMap<usize, ServedSource> = BTreeMap::new();
+        for d in deltas {
+            batch.insert(d.id, d.clone());
+        }
+        let mut inserts: BTreeMap<usize, Vec<ServedSource>> = BTreeMap::new();
+        let mut tombstones: BTreeMap<usize, usize> = BTreeMap::new();
+        let (mut inserted, mut updated, mut moved) = (0usize, 0usize, 0usize);
+        for (id, d) in &batch {
+            let key = store.sky_key(d.pos);
+            // an all-empty seed store owns no keys yet: open shard 0
+            let target = store.shard_for_key(key).unwrap_or(0);
+            match self.id_to_shard.get(id).copied() {
+                Some(old) if old == target => updated += 1,
+                Some(old) => {
+                    moved += 1;
+                    *tombstones.entry(old).or_insert(0) += 1;
+                }
+                None => inserted += 1,
+            }
+            inserts.entry(target).or_default().push(d.clone());
+            self.id_to_shard.insert(*id, target);
+        }
+        let mut touched: BTreeMap<usize, usize> = BTreeMap::new();
+        for (&s, rows) in &inserts {
+            *touched.entry(s).or_insert(0) += rows.len();
+        }
+        for (&s, &rows) in &tombstones {
+            *touched.entry(s).or_insert(0) += rows;
+        }
+
+        let epoch = cur.epoch + 1;
+        let shards: Vec<Arc<Shard>> = store
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, sh)| {
+                if !touched.contains_key(&i) {
+                    // copy-on-write: the untouched shard (sources and
+                    // grid index) is shared with the prior epoch
+                    return Arc::clone(sh);
+                }
+                // drop every old row the batch re-wrote or moved away,
+                // then append the rows that land here
+                let mut sources: Vec<ServedSource> = sh
+                    .sources
+                    .iter()
+                    .filter(|s| !batch.contains_key(&s.id))
+                    .cloned()
+                    .collect();
+                if let Some(rows) = inserts.get(&i) {
+                    sources.extend(rows.iter().cloned());
+                }
+                sources.sort_by_cached_key(|s| (store.sky_key(s.pos), s.id));
+                let (key_lo, key_hi) = if sources.is_empty() {
+                    // emptied shard: keep its old (now unowned) range
+                    (sh.key_lo, sh.key_hi)
+                } else {
+                    (
+                        store.sky_key(sources[0].pos),
+                        store.sky_key(sources[sources.len() - 1].pos),
+                    )
+                };
+                Arc::new(Shard::build(sources, key_lo, key_hi))
+            })
+            .collect();
+        let mut shard_epochs = cur.shard_epochs.clone();
+        for &s in touched.keys() {
+            shard_epochs[s] = epoch;
+        }
+        let published = Arc::new(EpochStore {
+            epoch,
+            shard_epochs,
+            store: Arc::new(Store { shards, width: store.width, height: store.height }),
+        });
+        self.versioned.publish(Arc::clone(&published));
+        IngestReport {
+            epoch,
+            touched: touched.into_iter().collect(),
+            upserts: batch.len(),
+            inserted,
+            updated,
+            moved,
+            published,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::query::{execute, execute_scan, Query, SourceFilter};
+
+    fn seed(n: usize, shards: usize) -> (Arc<VersionedStore>, Vec<ServedSource>) {
+        let snap = crate::serve::snapshot::synthetic(n, 31);
+        let flat = snap.sources.clone();
+        let store = Arc::new(Store::build(snap.sources, snap.width, snap.height, shards));
+        (Arc::new(VersionedStore::new(store)), flat)
+    }
+
+    #[test]
+    fn publish_rebuilds_only_touched_shards() {
+        let (vs, flat) = seed(800, 8);
+        let before = vs.load();
+        let mut ing = Ingestor::new(Arc::clone(&vs));
+        // update one existing source in place (same position => same shard)
+        let delta = vec![ServedSource { flux_r: flat[0].flux_r * 2.0, ..flat[0].clone() }];
+        let rep = ing.apply(&delta);
+        assert_eq!(rep.epoch, 1);
+        assert_eq!(rep.upserts, 1);
+        assert_eq!(rep.updated, 1);
+        assert_eq!(rep.touched.len(), 1);
+        let after = vs.load();
+        let touched = rep.touched[0].0;
+        for i in 0..8 {
+            let shared = Arc::ptr_eq(&before.store.shards[i], &after.store.shards[i]);
+            assert_eq!(shared, i != touched, "shard {i}");
+            assert_eq!(after.shard_epochs[i], if i == touched { 1 } else { 0 });
+        }
+        assert_eq!(after.store.len(), 800, "an update must not change the count");
+    }
+
+    #[test]
+    fn inserts_updates_and_moves_match_a_flat_mirror() {
+        let (vs, mut mirror) = seed(500, 6);
+        let (w, h) = {
+            let s = vs.load();
+            (s.store.width, s.store.height)
+        };
+        let mut ing = Ingestor::new(Arc::clone(&vs));
+        let mut rng = crate::prng::Rng::new(91);
+        for round in 0..10 {
+            let mut deltas = Vec::new();
+            for j in 0..40 {
+                if j % 3 == 0 || mirror.is_empty() {
+                    // fresh detection
+                    deltas.push(ServedSource {
+                        id: 100_000 + round * 100 + j,
+                        pos: (rng.uniform_in(0.0, w), rng.uniform_in(0.0, h)),
+                        p_gal: rng.uniform(),
+                        flux_r: rng.lognormal(4.0, 1.0),
+                        flux_logsd: rng.uniform_in(0.01, 0.6),
+                        colors: [0.1, 0.2, 0.3, 0.4],
+                        converged: true,
+                    });
+                } else {
+                    // re-estimate of a known source, possibly moving it
+                    let k = rng.below(mirror.len() as u64) as usize;
+                    let mut s = mirror[k].clone();
+                    s.pos = (rng.uniform_in(0.0, w), rng.uniform_in(0.0, h));
+                    s.flux_r *= 1.0 + 0.1 * rng.normal();
+                    deltas.push(s);
+                }
+            }
+            // mirror applies the same last-write-wins upserts
+            for d in &deltas {
+                match mirror.iter_mut().find(|s| s.id == d.id) {
+                    Some(slot) => *slot = d.clone(),
+                    None => mirror.push(d.clone()),
+                }
+            }
+            let rep = ing.apply(&deltas);
+            assert_eq!(rep.epoch, round as u64 + 1);
+            assert!(rep.inserted + rep.updated + rep.moved >= 1);
+        }
+        mirror.sort_by_key(|s| s.id);
+        let fin = vs.load();
+        assert_eq!(fin.store.all_sources(), mirror, "store must equal the mirror");
+        // and queries over the ingested store equal brute force
+        let q =
+            Query::Cone { center: (w * 0.5, h * 0.5), radius: 150.0, filter: SourceFilter::Any };
+        assert_eq!(execute(&fin.store, &q), execute_scan(&mirror, &q));
+        let q2 = Query::BrightestN { n: 40, filter: SourceFilter::Any };
+        assert_eq!(execute(&fin.store, &q2), execute_scan(&mirror, &q2));
+    }
+
+    #[test]
+    fn shard_ranges_stay_disjoint_across_epochs() {
+        let (vs, _) = seed(400, 5);
+        let (w, h) = {
+            let s = vs.load();
+            (s.store.width, s.store.height)
+        };
+        let mut ing = Ingestor::new(Arc::clone(&vs));
+        let mut rng = crate::prng::Rng::new(13);
+        for round in 0..6 {
+            let deltas: Vec<ServedSource> = (0..30)
+                .map(|j| ServedSource {
+                    id: 50_000 + round * 50 + j,
+                    pos: (rng.uniform_in(0.0, w), rng.uniform_in(0.0, h)),
+                    p_gal: 0.3,
+                    flux_r: 50.0,
+                    flux_logsd: 0.1,
+                    colors: [0.0; 4],
+                    converged: true,
+                })
+                .collect();
+            ing.apply(&deltas);
+            let store = vs.load().store.clone();
+            let nonempty: Vec<usize> = (0..store.shards.len())
+                .filter(|&i| !store.shards[i].sources.is_empty())
+                .collect();
+            for w2 in nonempty.windows(2) {
+                let (a, b) = (&store.shards[w2[0]], &store.shards[w2[1]]);
+                assert!(a.key_hi < b.key_lo, "ranges overlap after round {round}");
+            }
+            for &i in &nonempty {
+                let sh = &store.shards[i];
+                for s in &sh.sources {
+                    let k = store.sky_key(s.pos);
+                    assert!(k >= sh.key_lo && k <= sh.key_hi);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! Live catalog ingestion: the write path for the serving stack.
+//!
+//! The paper's pipeline ends at a static catalog, but the survey it
+//! serves keeps producing detections as imaging proceeds — a
+//! production tier must absorb deltas while queries are in flight.
+//! This module makes the read-only store writable without ever making
+//! it mutable:
+//!
+//! * [`versioned`] — [`EpochStore`] (an epoch-stamped immutable store
+//!   version with per-shard mutation stamps) behind a [`VersionedStore`]
+//!   pointer flip: readers pin an epoch with one `Arc` clone, writers
+//!   publish strictly newer epochs, old epochs stay valid until their
+//!   last reader drains.
+//! * [`ingestor`] — [`Ingestor`] turns delta batches into copy-on-write
+//!   publishes: only the shards owning touched Hilbert ranges are
+//!   rebuilt (rows + grid index); everything else is shared by `Arc`.
+//! * [`drift`] — [`DriftGen`] synthesizes survey drift (fresh
+//!   detections + posterior re-estimates) and keeps the flat
+//!   last-write-wins mirror the parity tests compare against;
+//!   [`IngestDriver`] paces publishes Poisson-style for the mixed
+//!   read/write bench scenarios.
+//!
+//! Version awareness threads through the rest of the serving stack:
+//! `Cached` keys entries by shard-epoch coverage and invalidates only
+//! mutated ranges, `Consistency::AtMost(k)` bounds staleness, and the
+//! distributed router ships deltas over the fabric and refuses
+//! replicas that lag a fresh/bounded read (see `serve::dist`).
+
+pub mod drift;
+pub mod ingestor;
+pub mod versioned;
+
+pub use drift::{DriftConfig, DriftGen, IngestDriver};
+pub use ingestor::{IngestReport, Ingestor};
+pub use versioned::{EpochStore, StoreSource, VersionedStore};

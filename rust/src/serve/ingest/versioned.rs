@@ -1,0 +1,148 @@
+//! Epoch-stamped store versions behind an arc-swap-style pointer flip.
+//!
+//! The write path never mutates a published [`Store`]: each publish
+//! installs a fresh [`EpochStore`] whose untouched shards are shared
+//! (`Arc`) with the prior epoch. Readers pin an epoch by cloning the
+//! current `Arc` — a lock held only for the pointer copy, never across
+//! a query — and an old epoch stays fully valid until its last reader
+//! drops the `Arc` (no reader ever observes a half-applied batch).
+
+use std::sync::{Arc, Mutex};
+
+use super::super::store::Store;
+
+/// One immutable published version of the catalog.
+#[derive(Clone, Debug)]
+pub struct EpochStore {
+    /// global publication number (0 = the seed store)
+    pub epoch: u64,
+    /// per shard: the epoch that last mutated it (0 = seed content).
+    /// The result cache and the replica router compare these stamps to
+    /// decide which cached entries / lagging replicas are still exact.
+    pub shard_epochs: Vec<u64>,
+    pub store: Arc<Store>,
+}
+
+impl EpochStore {
+    /// Wrap a freshly built store as epoch 0.
+    pub fn initial(store: Arc<Store>) -> EpochStore {
+        let n = store.shards.len();
+        EpochStore { epoch: 0, shard_epochs: vec![0; n], store }
+    }
+
+    /// Epoch stamps of a subset of shards, ascending by shard index —
+    /// the coverage vector cache entries are keyed by.
+    pub fn coverage_of(&self, shards: &[usize]) -> Vec<(u32, u64)> {
+        shards.iter().map(|&s| (s as u32, self.shard_epochs[s])).collect()
+    }
+}
+
+/// The mutable head pointer over immutable [`EpochStore`] versions.
+///
+/// `load` is the whole read-side protocol: clone the current `Arc` and
+/// query it for as long as you like. `publish` is the whole write-side
+/// protocol: flip the pointer to a strictly newer epoch.
+pub struct VersionedStore {
+    current: Mutex<Arc<EpochStore>>,
+}
+
+impl VersionedStore {
+    pub fn new(store: Arc<Store>) -> VersionedStore {
+        VersionedStore { current: Mutex::new(Arc::new(EpochStore::initial(store))) }
+    }
+
+    /// Pin the current epoch (cheap: one lock for one pointer clone).
+    pub fn load(&self) -> Arc<EpochStore> {
+        Arc::clone(&self.current.lock().unwrap())
+    }
+
+    /// Atomically install a newer epoch. Concurrent readers keep the
+    /// epochs they already pinned; new loads see `next`.
+    pub fn publish(&self, next: Arc<EpochStore>) {
+        let mut cur = self.current.lock().unwrap();
+        assert!(
+            next.epoch > cur.epoch,
+            "publish must advance the epoch ({} -> {})",
+            cur.epoch,
+            next.epoch
+        );
+        *cur = next;
+    }
+
+    /// The current global epoch.
+    pub fn epoch(&self) -> u64 {
+        self.current.lock().unwrap().epoch
+    }
+}
+
+/// Where an engine tier reads its catalog from: a fixed store (the
+/// pre-ingestion world, still the default everywhere) or the live head
+/// of a [`VersionedStore`] — loaded per request, so concurrent readers
+/// pick up a publish at their next query without coordination.
+#[derive(Clone)]
+pub enum StoreSource {
+    Fixed(Arc<Store>),
+    Live(Arc<VersionedStore>),
+}
+
+impl StoreSource {
+    /// The store to execute the next query against.
+    pub fn current(&self) -> Arc<Store> {
+        match self {
+            StoreSource::Fixed(s) => Arc::clone(s),
+            StoreSource::Live(v) => Arc::clone(&v.load().store),
+        }
+    }
+
+    /// The current epoch view (`None` for a fixed store: static tiers
+    /// have no version to be stale against).
+    pub fn view(&self) -> Option<Arc<EpochStore>> {
+        match self {
+            StoreSource::Fixed(_) => None,
+            StoreSource::Live(v) => Some(v.load()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_store() -> Arc<Store> {
+        let snap = crate::serve::snapshot::synthetic(50, 7);
+        Arc::new(Store::build(snap.sources, snap.width, snap.height, 4))
+    }
+
+    #[test]
+    fn load_pins_and_publish_flips() {
+        let vs = VersionedStore::new(tiny_store());
+        let pinned = vs.load();
+        assert_eq!(pinned.epoch, 0);
+        let mut next = (*pinned).clone();
+        next.epoch = 1;
+        next.shard_epochs[2] = 1;
+        vs.publish(Arc::new(next));
+        assert_eq!(vs.epoch(), 1);
+        assert_eq!(vs.load().shard_epochs[2], 1);
+        // the pinned reader still sees epoch 0 exactly
+        assert_eq!(pinned.epoch, 0);
+        assert_eq!(pinned.shard_epochs[2], 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "advance the epoch")]
+    fn publish_must_be_monotonic() {
+        let vs = VersionedStore::new(tiny_store());
+        let same = vs.load();
+        vs.publish(same);
+    }
+
+    #[test]
+    fn coverage_reads_the_requested_shards() {
+        let vs = VersionedStore::new(tiny_store());
+        let mut e = (*vs.load()).clone();
+        e.epoch = 3;
+        e.shard_epochs = vec![0, 3, 1, 0];
+        assert_eq!(e.coverage_of(&[1, 3]), vec![(1, 3), (3, 0)]);
+    }
+}

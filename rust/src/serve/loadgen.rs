@@ -106,7 +106,8 @@ impl Default for LoadGenConfig {
 }
 
 impl LoadGenConfig {
-    /// Preset for a named scenario (`uniform` | `hotspot` | `xmatch`).
+    /// Preset for a named scenario
+    /// (`uniform` | `hotspot` | `xmatch` | `drift`).
     pub fn scenario(name: &str, seed: u64) -> Option<LoadGenConfig> {
         let base = LoadGenConfig { seed, ..Default::default() };
         match name {
@@ -123,6 +124,15 @@ impl LoadGenConfig {
             "xmatch" => Some(LoadGenConfig {
                 mix: QueryMix::cross_match_heavy(),
                 hotspot_fraction: 0.2,
+                ..base
+            }),
+            // the read side of the mixed read/write scenario: hot
+            // enough that result caches fill (so ingestion-driven
+            // invalidation is visible), with a uniform tail that keeps
+            // touching freshly mutated ranges. Pair with --ingest-qps.
+            "drift" => Some(LoadGenConfig {
+                mix: QueryMix::uniform(),
+                hotspot_fraction: 0.7,
                 ..base
             }),
             _ => None,

@@ -7,6 +7,10 @@
 //!
 //! * [`store`] — immutable shard-per-Hilbert-range store with per-shard
 //!   grid indexes (same spatial key as the inference task ordering).
+//! * [`ingest`] — the write path: epoch-stamped shard-level
+//!   copy-on-write publishes ([`VersionedStore`]), batch delta
+//!   ingestion rebuilding only touched ranges ([`Ingestor`]), and the
+//!   synthetic drift generator feeding the mixed read/write scenarios.
 //! * [`query`] — typed queries (cone, box, brightest-N, star/galaxy
 //!   filters, uncertainty-aware cross-match), answered per-shard and
 //!   merged; a brute-force reference executor pins the semantics.
@@ -28,6 +32,7 @@
 
 pub mod dist;
 pub mod engine;
+pub mod ingest;
 pub mod loadgen;
 pub mod query;
 pub mod server;
@@ -35,14 +40,19 @@ pub mod snapshot;
 pub mod store;
 
 pub use engine::{
-    drive_closed_loop, drive_open_loop, layered, metric, Admission, Cached, Clock, Consistency,
-    DirectEngine, DriveReport, Hedged, LayerSpec, Outcome, QueryEngine, Request, Response,
-    ResultCache, RouterEngine, ScanEngine, ServerEngine, SimClock, Submitted, Trace, WallClock,
+    drive_closed_loop, drive_open_loop, drive_open_loop_with, layered, metric, Admission, Cached,
+    Clock, Consistency, Consistent, DirectEngine, DriveReport, Hedged, LayerSpec, Outcome,
+    QueryEngine, Request, Response, ResultCache, RouterEngine, ScanEngine, ServerEngine, SimClock,
+    Submitted, Trace, WallClock,
+};
+pub use ingest::{
+    DriftConfig, DriftGen, EpochStore, IngestDriver, IngestReport, Ingestor, StoreSource,
+    VersionedStore,
 };
 pub use loadgen::{LoadGen, LoadGenConfig, QueryMix};
 pub use query::{
-    cross_match_catalog, execute, execute_on_shard, execute_scan, merge_replies, MatchResult,
-    Query, QueryClass, QueryResult, ShardReply, SourceFilter, N_QUERY_CLASSES,
+    cross_match_catalog, execute, execute_on_shard, execute_scan, merge_replies, plan_shards,
+    MatchResult, Query, QueryClass, QueryResult, ShardReply, SourceFilter, N_QUERY_CLASSES,
 };
 pub use server::{Server, ServerConfig, ServerReport};
 pub use snapshot::Snapshot;

@@ -328,6 +328,39 @@ pub fn merge_replies(q: &Query, replies: Vec<ShardReply>) -> QueryResult {
     }
 }
 
+/// Indices of the shards a query must touch: bbox pruning for spatial
+/// probes (cone/box/cross-match), every non-empty shard for
+/// brightest-N. One copy of the planning semantics shared by the
+/// distributed router's scatter planner and the epoch-aware result
+/// cache's coverage stamps — the two must agree on what a query
+/// covers, or invalidation would miss mutated ranges.
+pub fn plan_shards(store: &Store, q: &Query) -> Vec<usize> {
+    let shards = &store.shards;
+    match q {
+        Query::Cone { center, radius, .. } => {
+            let (bx0, by0) = (center.0 - radius, center.1 - radius);
+            let (bx1, by1) = (center.0 + radius, center.1 + radius);
+            (0..shards.len())
+                .filter(|&i| shards[i].intersects_box(bx0, by0, bx1, by1))
+                .collect()
+        }
+        Query::BoxSearch { x0, y0, x1, y1, .. } => (0..shards.len())
+            .filter(|&i| shards[i].intersects_box(*x0, *y0, *x1, *y1))
+            .collect(),
+        Query::BrightestN { .. } => {
+            (0..shards.len()).filter(|&i| !shards[i].sources.is_empty()).collect()
+        }
+        Query::CrossMatch { pos, radius } => {
+            let probe = max_match_radius(*radius);
+            let (bx0, by0) = (pos.0 - probe, pos.1 - probe);
+            let (bx1, by1) = (pos.0 + probe, pos.1 + probe);
+            (0..shards.len())
+                .filter(|&i| shards[i].intersects_box(bx0, by0, bx1, by1))
+                .collect()
+        }
+    }
+}
+
 /// Execute a query against the sharded store. Built as the literal
 /// merge of per-shard partials, so the single-host answer and the
 /// distributed router's scatter-gather answer are byte-identical *by

@@ -28,6 +28,7 @@ use std::time::Instant;
 
 use crate::metrics::Stats;
 
+use super::ingest::{EpochStore, StoreSource, VersionedStore};
 use super::query::{execute, Query, QueryResult, N_QUERY_CLASSES, QUERY_CLASSES};
 use super::store::Store;
 
@@ -58,7 +59,7 @@ struct QueueState {
 }
 
 struct Shared {
-    store: Arc<Store>,
+    source: StoreSource,
     cfg: ServerConfig,
     state: Mutex<QueueState>,
     not_empty: Condvar,
@@ -131,9 +132,21 @@ pub struct Server {
 }
 
 impl Server {
+    /// Serve a fixed (pre-ingestion) store.
     pub fn start(store: Arc<Store>, cfg: ServerConfig) -> Server {
+        Server::start_from(StoreSource::Fixed(store), cfg)
+    }
+
+    /// Serve the live head of a versioned store: each worker loads the
+    /// current epoch per request, so a publish is picked up by every
+    /// in-flight worker at its next job — no pause, no coordination.
+    pub fn start_live(versioned: Arc<VersionedStore>, cfg: ServerConfig) -> Server {
+        Server::start_from(StoreSource::Live(versioned), cfg)
+    }
+
+    fn start_from(source: StoreSource, cfg: ServerConfig) -> Server {
         let shared = Arc::new(Shared {
-            store,
+            source,
             cfg: cfg.clone(),
             state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
             not_empty: Condvar::new(),
@@ -152,6 +165,11 @@ impl Server {
     /// Configured worker-thread count.
     pub fn threads(&self) -> usize {
         self.shared.cfg.threads
+    }
+
+    /// The catalog epoch currently served (`None` over a fixed store).
+    pub fn epoch_view(&self) -> Option<Arc<EpochStore>> {
+        self.shared.source.view()
     }
 
     fn submit(&self, query: Query, reply: Option<mpsc::Sender<QueryResult>>) -> bool {
@@ -228,7 +246,8 @@ fn worker_loop(shared: &Shared) -> WorkerLocal {
         };
         let Some(job) = job else { break };
         let class = job.query.class();
-        let result = execute(&shared.store, &job.query);
+        // live stores flip epochs between jobs: load the current one
+        let result = execute(&shared.source.current(), &job.query);
         local.latency[class.index()].push(job.enqueued.elapsed().as_secs_f64());
         local.executed += 1;
         if let Some(tx) = job.reply {
@@ -303,6 +322,37 @@ mod tests {
         assert_eq!(report.accepted, 4);
         assert_eq!(report.shed, 6);
         assert_eq!(report.executed, 0);
+    }
+
+    #[test]
+    fn live_server_picks_up_published_epochs() {
+        let (store, _) = small_store(200);
+        let vs = Arc::new(VersionedStore::new(store));
+        let server =
+            Server::start_live(Arc::clone(&vs), ServerConfig { threads: 2, ..Default::default() });
+        assert_eq!(server.epoch_view().expect("live").epoch, 0);
+        let q = Query::BrightestN { n: 1, filter: SourceFilter::Any };
+        let before = server.call(q.clone()).expect("not shed");
+        // publish an outshining detection; in-flight workers must see it
+        let mut ing = crate::serve::ingest::Ingestor::new(Arc::clone(&vs));
+        let delta = ServedSource {
+            id: 999_999,
+            pos: (10.0, 10.0),
+            p_gal: 0.0,
+            flux_r: 1e12,
+            flux_logsd: 0.1,
+            colors: [0.0; 4],
+            converged: true,
+        };
+        ing.apply(&[delta]);
+        let after = server.call(q).expect("not shed");
+        assert_ne!(before, after, "publish must be visible to the worker pool");
+        match after {
+            QueryResult::Sources(v) => assert_eq!(v[0].id, 999_999),
+            _ => unreachable!(),
+        }
+        assert_eq!(server.epoch_view().expect("live").epoch, 1);
+        let _ = server.shutdown();
     }
 
     #[test]

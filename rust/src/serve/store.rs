@@ -8,6 +8,8 @@
 //! (b) a future distributed deployment can place shards on different
 //! hosts without re-keying anything.
 
+use std::sync::Arc;
+
 use crate::catalog::{hilbert_sky_key, CatalogEntry};
 use crate::coordinator::InferredSource;
 use crate::model::layout as L;
@@ -124,7 +126,9 @@ pub struct Shard {
 }
 
 impl Shard {
-    fn build(sources: Vec<ServedSource>, key_lo: u64, key_hi: u64) -> Shard {
+    /// Build a shard from its member rows and key range. `pub(crate)` so
+    /// the ingest path can rebuild individual shards copy-on-write.
+    pub(crate) fn build(sources: Vec<ServedSource>, key_lo: u64, key_hi: u64) -> Shard {
         let mut bbox = (f64::INFINITY, f64::INFINITY, f64::NEG_INFINITY, f64::NEG_INFINITY);
         for s in &sources {
             bbox.0 = bbox.0.min(s.pos.0);
@@ -183,10 +187,12 @@ impl Shard {
     }
 }
 
-/// The sharded, immutable catalog store.
+/// The sharded, immutable catalog store. Shards are held behind `Arc`
+/// so a copy-on-write publish (see [`crate::serve::ingest`]) rebuilds
+/// only the touched shards and shares the rest with the prior epoch.
 #[derive(Clone, Debug)]
 pub struct Store {
-    pub shards: Vec<Shard>,
+    pub shards: Vec<Arc<Shard>>,
     /// sky extent the Hilbert keys were computed over
     pub width: f64,
     pub height: f64,
@@ -226,7 +232,7 @@ impl Store {
             prev_hi = key_hi;
             let chunk: Vec<ServedSource> =
                 keyed[start..end].iter().map(|(_, s)| s.clone()).collect();
-            shards.push(Shard::build(chunk, key_lo, key_hi));
+            shards.push(Arc::new(Shard::build(chunk, key_lo, key_hi)));
             start = end;
         }
         Store { shards, width, height }
@@ -249,6 +255,32 @@ impl Store {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// The Hilbert key of a sky position under this store's extent.
+    pub fn sky_key(&self, pos: (f64, f64)) -> u64 {
+        hilbert_sky_key(pos, self.width, self.height)
+    }
+
+    /// The shard a Hilbert key is (or would be) stored in: the first
+    /// non-empty shard whose range reaches `key`, else the last
+    /// non-empty shard (keys past every range extend it). Empty shards
+    /// own no keys and are skipped, so delta ingestion only ever widens
+    /// a shard's range into the gap left by its lower neighbor — ranges
+    /// of non-empty shards stay disjoint across epochs. `None` only for
+    /// a fully empty store.
+    pub fn shard_for_key(&self, key: u64) -> Option<usize> {
+        let mut last_nonempty = None;
+        for (i, sh) in self.shards.iter().enumerate() {
+            if sh.sources.is_empty() {
+                continue;
+            }
+            if key <= sh.key_hi {
+                return Some(i);
+            }
+            last_nonempty = Some(i);
+        }
+        last_nonempty
     }
 
     /// All sources, sorted by id — the canonical flat view used by
@@ -318,7 +350,7 @@ mod tests {
     fn shard_key_ranges_are_ordered_and_disjoint() {
         let src = synthetic_sources(500, 640.0, 480.0, 2);
         let store = Store::build(src, 640.0, 480.0, 5);
-        let nonempty: Vec<&Shard> =
+        let nonempty: Vec<&Arc<Shard>> =
             store.shards.iter().filter(|s| !s.sources.is_empty()).collect();
         for w in nonempty.windows(2) {
             // strictly disjoint: a key belongs to exactly one shard
@@ -367,6 +399,23 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn shard_for_key_covers_every_key() {
+        let src = synthetic_sources(300, 400.0, 400.0, 8);
+        let store = Store::build(src, 400.0, 400.0, 6);
+        // every member's key maps back to the shard holding it
+        for (i, sh) in store.shards.iter().enumerate() {
+            for s in &sh.sources {
+                assert_eq!(store.shard_for_key(store.sky_key(s.pos)), Some(i));
+            }
+        }
+        // keys past every range extend the last non-empty shard
+        assert_eq!(store.shard_for_key(u64::MAX), Some(5));
+        // an empty store owns nothing
+        let empty = Store::build(Vec::new(), 100.0, 100.0, 4);
+        assert_eq!(empty.shard_for_key(0), None);
     }
 
     #[test]

@@ -10,9 +10,9 @@ use std::sync::Arc;
 use celeste::prng::Rng;
 use celeste::serve::dist::{Router, RouterConfig, Routing};
 use celeste::serve::{
-    self, drive_open_loop, execute, layered, Admission, Cached, DirectEngine, Hedged, LayerSpec,
-    LoadGen, LoadGenConfig, Outcome, Query, QueryEngine, Request, RouterEngine, ScanEngine,
-    Server, ServerConfig, ServerEngine, SimClock, SourceFilter, Store,
+    self, drive_open_loop, execute, layered, metric, Admission, Cached, DirectEngine, Hedged,
+    LayerSpec, LoadGen, LoadGenConfig, Outcome, Query, QueryEngine, Request, RouterEngine,
+    ScanEngine, Server, ServerConfig, ServerEngine, SimClock, SourceFilter, Store,
 };
 
 fn test_store(n: usize, shards: usize, seed: u64) -> Arc<Store> {
@@ -175,7 +175,12 @@ fn admission_sheds_on_simulated_backlog_and_drains() {
 #[test]
 fn describe_echoes_the_layer_stack_outermost_first() {
     let store = test_store(300, 4, 31);
-    let spec = LayerSpec { admit_depth: 256, cache_entries: 128, hedge_budget: 2e-4 };
+    let spec = LayerSpec {
+        admit_depth: 256,
+        cache_entries: 128,
+        hedge_budget: 2e-4,
+        ..Default::default()
+    };
     let engine = layered(Box::new(DirectEngine::new(Arc::clone(&store))), &spec);
     let desc = engine.describe();
     assert!(desc.starts_with("admit(256)"), "{desc}");
@@ -187,6 +192,64 @@ fn describe_echoes_the_layer_stack_outermost_first() {
         admit_pos < cache_pos && cache_pos < hedge_pos && hedge_pos < tier_pos,
         "layer order wrong: {desc}"
     );
+}
+
+/// Satellite acceptance: the hedge-rate budget caps the fraction of
+/// requests that may hedge. With a zero-latency budget every stamped
+/// request hedges, so the stamped count is the hedged-request count:
+/// uncapped stamps everything, a 5% cap stamps at most 5% (+1 for the
+/// grant rounding) and counts every skip.
+#[test]
+fn hedge_budget_caps_the_hedged_fraction() {
+    let store = test_store(2000, 10, 77);
+    let (w, h) = (store.width, store.height);
+    let run = |cap: f64| {
+        let router = Router::new(
+            Arc::clone(&store),
+            6,
+            3,
+            RouterConfig { routing: Routing::PowerOfTwo, seed: 4242, ..Default::default() },
+        );
+        // zero budget: every stamped request fires hedges
+        let engine = Hedged::with_cap(RouterEngine::new(router), 0.0, cap);
+        let cfg = LoadGenConfig::scenario("hotspot", 4242).unwrap();
+        let mut gen = LoadGen::new(cfg, w, h);
+        let mut clock = SimClock::new();
+        let drive = drive_open_loop(&engine, &mut clock, &mut gen, 20_000.0, 0.2);
+        (drive, engine)
+    };
+    let (base_drive, base_engine) = run(0.0); // cap <= 0 disables the cap
+    assert!(base_drive.offered > 1_000, "offered {}", base_drive.offered);
+    assert_eq!(base_engine.budget_skipped(), 0, "uncapped must never skip");
+    assert_eq!(base_engine.stamped_requests(), base_drive.offered);
+    assert!(base_drive.hedges > 0);
+
+    let (cap_drive, cap_engine) = run(0.05);
+    assert_eq!(cap_drive.offered, base_drive.offered, "equal offered load");
+    let stamped = cap_engine.stamped_requests();
+    assert!(
+        stamped as f64 <= 0.05 * cap_drive.offered as f64 + 1.0,
+        "cap 5%: stamped {stamped} of {}",
+        cap_drive.offered
+    );
+    assert!(stamped > 0, "the cap must still grant some hedges");
+    assert_eq!(
+        cap_engine.budget_skipped(),
+        cap_drive.offered - stamped,
+        "every unstamped request is a counted skip"
+    );
+    assert!(
+        cap_drive.hedges < base_drive.hedges,
+        "capped hedges {} must be fewer than uncapped {}",
+        cap_drive.hedges,
+        base_drive.hedges
+    );
+    assert_eq!(
+        metric(&cap_engine, "hedge_budget_skipped"),
+        Some(cap_engine.budget_skipped() as f64),
+        "the skip count must surface through the metrics API"
+    );
+    assert!(cap_engine.describe().contains("cap 5%"), "{}", cap_engine.describe());
 }
 
 /// Acceptance: hedged requests measurably improve p999 over p2c-alone

@@ -1,0 +1,292 @@
+//! Live-ingestion invariants (the acceptance criteria of the ingest
+//! subsystem): after any ingestion schedule every tier and middleware
+//! stack answers byte-identically to brute force over the final
+//! epoch's catalog; a reader pinned to an old epoch sees that epoch's
+//! answers exactly; fresh reads observe a publish immediately
+//! (read-your-writes) while bounded reads tolerate exactly their lag
+//! budget; and cache invalidation drops only entries covering mutated
+//! shard ranges — untouched-range entries keep hitting.
+
+use std::sync::Arc;
+
+use celeste::prng::Rng;
+use celeste::serve::dist::{Router, RouterConfig, Routing};
+use celeste::serve::{
+    self, execute, execute_scan, plan_shards, Admission, Cached, DirectEngine, DriftConfig,
+    DriftGen, Hedged, IngestDriver, Ingestor, Outcome, Query, QueryEngine, Request, RouterEngine,
+    ScanEngine, ServedSource, Server, ServerConfig, ServerEngine, SourceFilter, Store,
+    VersionedStore,
+};
+
+fn seed_store(n: usize, shards: usize, seed: u64) -> Arc<Store> {
+    let snap = serve::snapshot::synthetic(n, seed);
+    Arc::new(Store::build(snap.sources, snap.width, snap.height, shards))
+}
+
+fn random_query(rng: &mut Rng, w: f64, h: f64, i: usize) -> Query {
+    let filters = [SourceFilter::Any, SourceFilter::StarsOnly, SourceFilter::GalaxiesOnly];
+    let filter = filters[i % 3];
+    match i % 4 {
+        0 => Query::Cone {
+            center: (rng.uniform_in(-40.0, w + 40.0), rng.uniform_in(-40.0, h + 40.0)),
+            radius: rng.uniform_in(1.0, 220.0),
+            filter,
+        },
+        1 => {
+            let ax = rng.uniform_in(0.0, w);
+            let ay = rng.uniform_in(0.0, h);
+            let bx = rng.uniform_in(0.0, w);
+            let by = rng.uniform_in(0.0, h);
+            Query::BoxSearch {
+                x0: ax.min(bx),
+                y0: ay.min(by),
+                x1: ax.max(bx),
+                y1: ay.max(by),
+                filter,
+            }
+        }
+        2 => Query::BrightestN { n: rng.below(120) as usize, filter },
+        _ => Query::CrossMatch {
+            pos: (rng.uniform_in(0.0, w), rng.uniform_in(0.0, h)),
+            radius: rng.uniform_in(0.3, 8.0),
+        },
+    }
+}
+
+/// Acceptance: run a drift ingestion schedule, then check that every
+/// tier — live direct, live worker pool, and the replicated router
+/// with all publishes shipped — behind several middleware stacks
+/// answers byte-identically to a brute-force scan of the drift
+/// generator's flat mirror (the independent reference for what the
+/// final epoch's catalog must contain).
+#[test]
+fn every_tier_matches_bruteforce_over_the_final_epoch() {
+    let store = seed_store(1200, 8, 71);
+    let (w, h) = (store.width, store.height);
+    let versioned = Arc::new(VersionedStore::new(Arc::clone(&store)));
+    let drift = DriftGen::new(
+        &store.all_sources(),
+        w,
+        h,
+        DriftConfig { batch: 40, seed: 7, ..Default::default() },
+    );
+    let mut driver = IngestDriver::new(Ingestor::new(Arc::clone(&versioned)), drift, 100.0, 7);
+    // the router is told about every publish so replicas converge
+    let rengine = RouterEngine::new(Router::new(
+        Arc::clone(&store),
+        4,
+        2,
+        RouterConfig { routing: Routing::PowerOfTwo, ..Default::default() },
+    ));
+    let mut t = 0.0;
+    while t < 0.2 {
+        for rep in driver.tick(t) {
+            rengine.publish(t, &rep);
+        }
+        t += 0.005;
+    }
+    let epochs = driver.publishes;
+    assert!(epochs >= 5, "schedule too short: {epochs} publishes");
+    let mirror = driver.mirror_sorted();
+    let head = versioned.load();
+    assert_eq!(head.epoch, epochs);
+    assert_eq!(head.store.all_sources(), mirror, "store must track the mirror");
+
+    let server = Arc::new(Server::start_live(
+        Arc::clone(&versioned),
+        ServerConfig { threads: 2, ..Default::default() },
+    ));
+    // query far past every delta shipment: all replicas caught up
+    let t_query = 1000.0;
+    for tier_id in 0..4usize {
+        for arrangement in 0..3usize {
+            let base: Box<dyn QueryEngine> = match tier_id {
+                0 => Box::new(ScanEngine::new(mirror.clone())),
+                1 => Box::new(DirectEngine::live(Arc::clone(&versioned))),
+                2 => Box::new(ServerEngine::new(Arc::clone(&server))),
+                _ => Box::new(rengine.clone()),
+            };
+            let engine: Box<dyn QueryEngine> = match arrangement {
+                0 => base,
+                1 => Box::new(Cached::new(Hedged::new(base, 1e-6), 64)),
+                _ => Box::new(Admission::new(Cached::new(base, 64), 1 << 20)),
+            };
+            let mut rng = Rng::new(3 + tier_id as u64 * 11 + arrangement as u64);
+            let mut now = t_query;
+            for i in 0..30usize {
+                let q = random_query(&mut rng, w, h, i);
+                let want = execute_scan(&mirror, &q);
+                for repeat in 0..2 {
+                    let resp = engine.call(Request::new(q.clone()).arriving_at(now));
+                    assert_eq!(
+                        resp.trace.outcome,
+                        Outcome::Served,
+                        "tier {tier_id} arrangement {arrangement} query {i} repeat {repeat}"
+                    );
+                    assert_eq!(
+                        resp.result.as_ref().expect("served"),
+                        &want,
+                        "tier {tier_id} arrangement {arrangement} query {i} repeat {repeat}: {q:?}"
+                    );
+                    now += 1e-4;
+                }
+            }
+        }
+    }
+    let _ = server.shutdown();
+}
+
+/// Acceptance: a reader pinned to an old epoch keeps seeing exactly
+/// that epoch's answers, no matter how much is published after it.
+#[test]
+fn pinned_reader_sees_its_epoch_exactly() {
+    let store = seed_store(800, 6, 23);
+    let (w, h) = (store.width, store.height);
+    let versioned = Arc::new(VersionedStore::new(Arc::clone(&store)));
+    let mut ing = Ingestor::new(Arc::clone(&versioned));
+    let drift_cfg = DriftConfig { batch: 30, seed: 19, ..Default::default() };
+    let mut drift = DriftGen::new(&store.all_sources(), w, h, drift_cfg);
+    // advance two epochs, pin, advance five more
+    ing.apply(&drift.next_batch());
+    ing.apply(&drift.next_batch());
+    let pinned = versioned.load();
+    let frozen = pinned.store.all_sources();
+    assert_eq!(pinned.epoch, 2);
+    for _ in 0..5 {
+        ing.apply(&drift.next_batch());
+    }
+    assert_eq!(versioned.epoch(), 7);
+    let mut rng = Rng::new(4);
+    for i in 0..40usize {
+        let q = random_query(&mut rng, w, h, i);
+        assert_eq!(
+            execute(&pinned.store, &q),
+            execute_scan(&frozen, &q),
+            "pinned epoch drifted on query {i}: {q:?}"
+        );
+    }
+    // and the head serves the drift mirror, not the pinned view
+    let head = versioned.load();
+    assert_eq!(head.store.all_sources(), drift.mirror_sorted());
+}
+
+/// Acceptance: invalidation is per mutated range. An entry whose plan
+/// covers the mutated shard is dropped (and re-executes against the
+/// new epoch); an entry over untouched ranges keeps hitting across the
+/// publish. Bounded-staleness requests may still ride the old entry.
+#[test]
+fn cache_invalidation_drops_only_entries_covering_mutated_ranges() {
+    let store = seed_store(1000, 8, 37);
+    let versioned = Arc::new(VersionedStore::new(Arc::clone(&store)));
+    let engine = Cached::new(DirectEngine::live(Arc::clone(&versioned)), 64);
+
+    // q_a: a tight cone around a shard-0 source (plan = {0}); the delta
+    // will re-estimate that very source in place. q_b: a tight cone in
+    // some other shard whose plan avoids shard 0 entirely.
+    let victim = store.shards[0].sources[0].clone();
+    let q_a = Query::Cone { center: victim.pos, radius: 1.5, filter: SourceFilter::Any };
+    let plan_a = plan_shards(&store, &q_a);
+    assert!(plan_a.contains(&0), "probe around a shard-0 member must plan shard 0");
+    let q_b = (1..store.shards.len())
+        .rev()
+        .filter(|&i| !store.shards[i].sources.is_empty())
+        .find_map(|i| {
+            let s = &store.shards[i].sources[0];
+            let q = Query::Cone { center: s.pos, radius: 1.5, filter: SourceFilter::Any };
+            let plan = plan_shards(&store, &q);
+            if plan.iter().all(|p| !plan_a.contains(p)) {
+                Some(q)
+            } else {
+                None
+            }
+        })
+        .expect("some shard plans disjointly from q_a");
+
+    // fill both entries
+    let a0 = engine.call(Request::new(q_a.clone()));
+    let b0 = engine.call(Request::new(q_b.clone()));
+    assert!(!a0.trace.cache_hit && !b0.trace.cache_hit);
+    assert!(engine.call(Request::new(q_a.clone())).trace.cache_hit);
+    assert_eq!(engine.hits(), 1);
+
+    // publish an in-place re-estimate of the victim (same position =>
+    // same shard, shard 0 is the only touched range)
+    let mut ing = Ingestor::new(Arc::clone(&versioned));
+    let delta = ServedSource { flux_r: victim.flux_r * 3.0 + 1.0, ..victim.clone() };
+    let rep = ing.apply(&[delta]);
+    assert_eq!(rep.touched.iter().map(|&(s, _)| s).collect::<Vec<_>>(), vec![0]);
+
+    // bounded staleness first: the old entry may still serve a reader
+    // tolerating one epoch of lag
+    let stale_ok = engine.call(Request::new(q_a.clone()).at_most(1));
+    assert!(stale_ok.trace.cache_hit, "AtMost(1) must accept the 1-epoch-old entry");
+    assert_eq!(stale_ok.result.as_ref().unwrap(), a0.result.as_ref().unwrap());
+
+    // epoch-exact probe: the mutated-range entry is invalidated and the
+    // re-execution reflects the new epoch
+    let inv0 = engine.invalidations();
+    let a1 = engine.call(Request::new(q_a.clone()));
+    assert!(!a1.trace.cache_hit, "mutated-range entry must not hit");
+    assert_eq!(engine.invalidations(), inv0 + 1, "exactly one entry invalidated");
+    let head = versioned.load();
+    assert_eq!(a1.result.as_ref().unwrap(), &execute(&head.store, &q_a));
+    assert_ne!(
+        a1.result.as_ref().unwrap(),
+        a0.result.as_ref().unwrap(),
+        "the re-estimate must be visible"
+    );
+
+    // the untouched-range entry still hits across the publish
+    let b1 = engine.call(Request::new(q_b.clone()));
+    assert!(b1.trace.cache_hit, "untouched-range entry must keep hitting");
+    assert_eq!(b1.result.as_ref().unwrap(), b0.result.as_ref().unwrap());
+    // and the refilled q_a entry hits again at the new epoch
+    assert!(engine.call(Request::new(q_a)).trace.cache_hit);
+}
+
+/// Read-your-writes through the full engine stack: a Fresh request
+/// issued immediately after a publish observes the delta even though
+/// no replica has applied it yet, while the cache still serves the
+/// bounded-staleness reader its (valid) old entry.
+#[test]
+fn fresh_reads_through_the_stack_observe_the_publish() {
+    let store = seed_store(900, 6, 53);
+    let versioned = Arc::new(VersionedStore::new(Arc::clone(&store)));
+    let rengine = RouterEngine::new(Router::new(
+        Arc::clone(&store),
+        4,
+        2,
+        RouterConfig::default(),
+    ));
+    let engine = Cached::new(rengine.clone(), 64);
+    let q = Query::BrightestN { n: 1, filter: SourceFilter::Any };
+    let before = engine.call(Request::new(q.clone()).arriving_at(0.5));
+    assert_eq!(before.trace.outcome, Outcome::Served);
+
+    // a new all-sky-brightest source publishes at t = 1.0
+    let mut ing = Ingestor::new(Arc::clone(&versioned));
+    let delta = ServedSource {
+        id: 555_555,
+        pos: (store.width * 0.25, store.height * 0.25),
+        p_gal: 0.0,
+        flux_r: 1e12,
+        flux_logsd: 0.02,
+        colors: [0.0; 4],
+        converged: true,
+    };
+    let rep = ing.apply(&[delta]);
+    rengine.publish(1.0, &rep);
+
+    let head = versioned.load();
+    let want = execute(&head.store, &q);
+    // fresh read just after the publish: must contain the new source
+    let fresh = engine.call(Request::new(q.clone()).fresh().arriving_at(1.0 + 1e-9));
+    assert!(!fresh.trace.cache_hit);
+    assert_eq!(fresh.result.as_ref().expect("served"), &want);
+    // brightest-N plans every shard, so the old entry covers the
+    // mutated range: a default read right after re-executes (and a
+    // replica may still lag) — but far in the future it must equal the
+    // head exactly
+    let late = engine.call(Request::new(q).arriving_at(100.0));
+    assert_eq!(late.result.as_ref().expect("served"), &want);
+}
