@@ -1,6 +1,8 @@
 //! Serving-path benchmarks: per-query latency of the sharded engine vs
 //! the brute-force scan, snapshot codec throughput, closed-loop server
-//! throughput at 1 vs 4 worker threads, and the distributed tier —
+//! throughput at 1 vs 4 worker threads, the request-scheduler matrix
+//! (condvar vs work-stealing with batched draining, p50/p99 at 1/4/8
+//! workers under a bursty hotspot open loop), and the distributed tier —
 //! routing-policy tail latency under the hotspot mix, hedged-request
 //! p999 vs p2c-alone, router-tier cache hit rate vs fabric bytes
 //! saved, a failover drill, and live ingestion (read p99 + hit rate
@@ -18,8 +20,8 @@ use celeste::serve::dist::{DistReport, FailureSchedule, Router, RouterConfig, Ro
 use celeste::serve::{
     self, drive_closed_loop, drive_open_loop, drive_open_loop_with, Cached, Consistency,
     Consistent, DriftConfig, DriftGen, DriveReport, Hedged, IngestDriver, Ingestor, LoadGen,
-    LoadGenConfig, Query, QueryEngine, RouterEngine, Server, ServerConfig, ServerEngine,
-    SimClock, SourceFilter, Store, VersionedStore,
+    LoadGenConfig, Query, QueryEngine, RouterEngine, SchedConfig, SchedKind, Server,
+    ServerConfig, ServerEngine, SimClock, SourceFilter, Store, VersionedStore, WallClock,
 };
 
 const DIST_NODES: usize = 6;
@@ -158,6 +160,80 @@ fn main() {
     println!(
         "4-thread speedup over 1 thread: {speedup:.2}x {}",
         if closed[1].1 > closed[0].1 { "(scales)" } else { "(NOT scaling!)" }
+    );
+
+    // --- scheduler: condvar vs work-stealing (batch 16) under a bursty
+    //     hotspot open loop at 1/4/8 workers. The offered rate is
+    //     calibrated off the measured 4-worker closed-loop capacity so
+    //     queues actually form and draining efficiency is what the tail
+    //     measures; both schedulers see the identical arrival stream.
+    //     Latency here is the server's own queue-entry -> reply
+    //     accounting; steal/local/batch counters ride the same report.
+    const SCHED_WORKERS: [usize; 3] = [1, 4, 8];
+    const SCHED_BATCH: usize = 16;
+    const SCHED_BURST: usize = 8;
+    let sched_qps = (closed[1].1 * 1.1).max(2_000.0);
+    let sched_secs = 0.6;
+    println!(
+        "== sched: condvar vs steal(batch {SCHED_BATCH}), hotspot burst {SCHED_BURST} @ {:.0} qps open-loop ==",
+        sched_qps
+    );
+    let mut sched_rows: Vec<Value> = Vec::new();
+    let mut sched_p99_8w = (0.0f64, 0.0f64); // (condvar, steal), seconds
+    for &workers in &SCHED_WORKERS {
+        let mut per: Vec<(f64, f64, serve::ServerReport)> = Vec::new();
+        for kind in [SchedKind::Condvar, SchedKind::Steal] {
+            let batch = if kind == SchedKind::Steal { SCHED_BATCH } else { 1 };
+            let server = Arc::new(Server::start(
+                Arc::clone(&store),
+                ServerConfig {
+                    threads: workers,
+                    queue_depth: usize::MAX,
+                    sched: SchedConfig { kind, batch },
+                },
+            ));
+            let engine = ServerEngine::new(Arc::clone(&server));
+            let cfg = LoadGenConfig {
+                burst: SCHED_BURST,
+                ..LoadGenConfig::scenario("hotspot", 4242).unwrap()
+            };
+            let mut gen = LoadGen::new(cfg, w, h);
+            let mut clock = WallClock::start();
+            let _ = drive_open_loop(&engine, &mut clock, &mut gen, sched_qps, sched_secs);
+            let report = server.shutdown();
+            let q = report.latency_all().quantiles(&[0.50, 0.99]);
+            println!(
+                "  {workers} worker(s) {:<7}: p50={:>8.3}ms p99={:>8.3}ms ({} local, {} stolen, mean batch {:.2})",
+                kind.name(),
+                q[0] * 1e3,
+                q[1] * 1e3,
+                report.local_hits,
+                report.steals,
+                report.batch_size.mean()
+            );
+            per.push((q[0], q[1], report));
+        }
+        if workers == 8 {
+            sched_p99_8w = (per[0].1, per[1].1);
+        }
+        sched_rows.push(obj_pub(vec![
+            ("workers", Value::Num(workers as f64)),
+            ("condvar_p50_ms", Value::Num(per[0].0 * 1e3)),
+            ("condvar_p99_ms", Value::Num(per[0].1 * 1e3)),
+            ("steal_p50_ms", Value::Num(per[1].0 * 1e3)),
+            ("steal_p99_ms", Value::Num(per[1].1 * 1e3)),
+            ("steal_local_hits", Value::Num(per[1].2.local_hits as f64)),
+            ("steal_steals", Value::Num(per[1].2.steals as f64)),
+            ("steal_fraction", Value::Num(per[1].2.steal_fraction())),
+            ("steal_mean_batch", Value::Num(per[1].2.batch_size.mean())),
+        ]));
+    }
+    let steal_wins_8w = sched_p99_8w.1 <= sched_p99_8w.0;
+    println!(
+        "steal p99 <= condvar p99 at 8 workers: {} ({:.3}ms vs {:.3}ms)",
+        if steal_wins_8w { "YES" } else { "NO" },
+        sched_p99_8w.1 * 1e3,
+        sched_p99_8w.0 * 1e3
     );
 
     // --- distributed tier: routing-policy tails under the hotspot mix,
@@ -325,8 +401,20 @@ fn main() {
         .map(|r| (r.name.as_str(), Value::Num(r.ns_per_iter)))
         .collect();
     let json = obj_pub(vec![
-        ("schema", Value::Str("celeste-bench-serve-v3".to_string())),
+        ("schema", Value::Str("celeste-bench-serve-v4".to_string())),
         ("single_query_ns", obj_pub(single_fields)),
+        (
+            "scheduler",
+            obj_pub(vec![
+                ("mix", Value::Str("hotspot".to_string())),
+                ("burst", Value::Num(SCHED_BURST as f64)),
+                ("batch", Value::Num(SCHED_BATCH as f64)),
+                ("qps", Value::Num(sched_qps)),
+                ("secs", Value::Num(sched_secs)),
+                ("per_workers", Value::Arr(sched_rows)),
+                ("steal_beats_condvar_p99_8w", Value::Bool(steal_wins_8w)),
+            ]),
+        ),
         (
             "closed_loop",
             Value::Arr(

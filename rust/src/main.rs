@@ -56,6 +56,14 @@ USAGE: celeste <command> [flags]
                            snapshot (servable via serve-bench)
   serve-bench                      benchmark the sharded catalog server
            [--threads N]   server worker threads        (default 4)
+           [--sched S]     request scheduler: condvar | steal
+                           (default condvar; steal = per-worker FIFO
+                           deques + randomized oldest-first stealing)
+           [--batch N]     jobs a worker drains and executes per
+                           wake-up (default 1); same-shard queries in a
+                           batch share one pass over the shard list
+           [--burst B]     open-loop arrivals per burst (default 1 =
+                           plain Poisson; rate is unchanged)
            [--shards K]    Hilbert-range shards         (default 8)
            [--qps Q]       open-loop offered rate       (default 2000)
            [--mix M]       uniform | hotspot | xmatch | drift, or explicit
@@ -328,11 +336,21 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
                 bail!("--{key} only applies to the distributed tier; add --dist-nodes N");
             }
         }
-    } else if cli.flag("queue-depth").is_some() {
-        bail!(
-            "--queue-depth only applies to the single-host tier (the simulated tier models \
-             backlog as latency, not sheds); drop it or drop --dist-nodes"
-        );
+    } else {
+        if cli.flag("queue-depth").is_some() {
+            bail!(
+                "--queue-depth only applies to the single-host tier (the simulated tier models \
+                 backlog as latency, not sheds); drop it or drop --dist-nodes"
+            );
+        }
+        for key in ["sched", "batch"] {
+            if cli.flag(key).is_some() {
+                bail!(
+                    "--{key} configures the single-host worker pool's request scheduler; \
+                     the simulated tier has no worker pool. Drop it or drop --dist-nodes."
+                );
+            }
+        }
     }
     if cli.flag("ingest-batch").is_some() && cli.flag("ingest-qps").is_none() {
         bail!("--ingest-batch sizes ingestion publishes; add --ingest-qps R to enable them");
@@ -347,6 +365,12 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
     let mix = cli.flag_str("mix", "uniform");
     let seed = cli.flag_u64("seed", 42);
     let n_sources = cli.flag_usize("sources", 5000);
+    let sched_s = cli.flag_str("sched", "condvar");
+    let Some(sched_kind) = serve::SchedKind::parse(sched_s) else {
+        bail!("bad --sched {sched_s:?}: want condvar|steal");
+    };
+    let sched = serve::SchedConfig { kind: sched_kind, batch: cli.flag_usize("batch", 1).max(1) };
+    let burst = cli.flag_usize("burst", 1).max(1);
     let spec = serve::LayerSpec {
         admit_depth: cli.flag_usize("queue-depth", 1024),
         cache_entries: cli.flag_usize("cache", 512),
@@ -361,7 +385,7 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
     let (width, height) = (snap.width, snap.height);
     let store = std::sync::Arc::new(snap.into_store(shards));
     println!("{}", store.summary());
-    let gen_cfg = loadgen_config(mix, seed)?;
+    let gen_cfg = serve::LoadGenConfig { burst, ..loadgen_config(mix, seed)? };
 
     // --- distributed tier (simulated time) when --dist-nodes is set ---
     if dist {
@@ -391,12 +415,12 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
         let server = std::sync::Arc::new(if ingesting {
             serve::Server::start_live(
                 std::sync::Arc::clone(&versioned),
-                serve::ServerConfig { threads, queue_depth: usize::MAX },
+                serve::ServerConfig { threads, queue_depth: usize::MAX, sched },
             )
         } else {
             serve::Server::start(
                 store.clone(),
-                serve::ServerConfig { threads, queue_depth: usize::MAX },
+                serve::ServerConfig { threads, queue_depth: usize::MAX, sched },
             )
         });
         let mut engine = serve::layered(
@@ -423,12 +447,13 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
         };
         let mut gen = serve::LoadGen::new(gen_cfg.clone(), width, height);
         let mut clock = serve::WallClock::start();
-        let ol = serve::drive_open_loop_with(&engine, &mut clock, &mut gen, qps, secs, |at| {
+        let mut ol = serve::drive_open_loop_with(&engine, &mut clock, &mut gen, qps, secs, |at| {
             if let Some(d) = driver.as_mut() {
                 d.tick(at);
             }
         });
         let report = server.shutdown();
+        ol.absorb_server(&report);
         let label = if ingesting { "ingesting" } else { "quiesced" };
         println!(
             "open loop ({mix}, {label}): offered {:.0} qps for {:.1}s",
@@ -466,7 +491,7 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
     for &t in &worker_counts {
         let server = std::sync::Arc::new(serve::Server::start(
             store.clone(),
-            serve::ServerConfig { threads: t, ..Default::default() },
+            serve::ServerConfig { threads: t, sched, ..Default::default() },
         ));
         let engine = serve::ServerEngine::new(std::sync::Arc::clone(&server));
         let mut gen = serve::LoadGen::new(gen_cfg.clone(), width, height);

@@ -221,15 +221,53 @@ impl Stats {
     }
 
     /// Merge any number of distributions into one (the shared
-    /// "all-classes" fold used by every serving report).
+    /// "all-classes" and per-worker fold used by every serving report).
+    ///
+    /// Deterministic by construction: samples are sorted before any
+    /// thinning, so the result depends only on each part's retained
+    /// sample multiset and stream length — not on the order the parts
+    /// are folded in. While the union fits [`SAMPLE_CAP`] (the usual
+    /// per-worker case) the merged quantiles are exact and also
+    /// independent of how samples were partitioned across parts (e.g.
+    /// which server worker happened to execute which request). Past the
+    /// cap, each part contributes evenly-strided order statistics in
+    /// proportion to its *stream* length — the same weighting pairwise
+    /// [`Stats::merge`] applies, so a capped million-sample stream is
+    /// not outvoted by an exact thousand-sample one. `merge` remains
+    /// the cheap streaming fold; use this one wherever reproducible
+    /// quantiles matter.
     pub fn merge_all<'a, I>(parts: I) -> Stats
     where
         I: IntoIterator<Item = &'a Stats>,
     {
         let mut all = Stats::new();
+        let mut part_samples: Vec<(u64, &[f64])> = Vec::new();
         for s in parts {
-            all.merge(s);
+            all.n += s.n;
+            all.sum += s.sum;
+            all.sum2 += s.sum2;
+            all.min = all.min.min(s.min);
+            all.max = all.max.max(s.max);
+            part_samples.push((s.n, s.samples.as_slice()));
         }
+        let retained: usize = part_samples.iter().map(|(_, s)| s.len()).sum();
+        let mut samples: Vec<f64> = Vec::with_capacity(retained.min(SAMPLE_CAP));
+        if retained <= SAMPLE_CAP {
+            for (_, s) in &part_samples {
+                samples.extend_from_slice(s);
+            }
+        } else {
+            let n_total = all.n.max(1);
+            for (n_part, s) in &part_samples {
+                let take = ((SAMPLE_CAP as u128 * *n_part as u128 / n_total as u128) as usize)
+                    .min(s.len());
+                let mut sorted = s.to_vec();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+                samples.extend(subsample(&sorted, take));
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        all.samples = samples;
         all
     }
 
@@ -448,6 +486,67 @@ mod tests {
         let empty = Stats::merge_all(std::iter::empty::<&Stats>());
         assert_eq!(empty.n, 0);
         assert_eq!(empty.p50(), 0.0);
+    }
+
+    #[test]
+    fn merge_all_is_order_and_partition_independent() {
+        // a fixed multiset of "latencies", deterministically scrambled
+        let xs: Vec<f64> = (0..5000u64)
+            .map(|i| ((i.wrapping_mul(2654435761) % 10_000) as f64) * 1e-4)
+            .collect();
+        // partition A: round-robin over 4 "workers"
+        let mut a: Vec<Stats> = (0..4).map(|_| Stats::new()).collect();
+        for (i, &x) in xs.iter().enumerate() {
+            a[i % 4].push(x);
+        }
+        // partition B: contiguous chunks over 7 "workers"
+        let mut b: Vec<Stats> = (0..7).map(|_| Stats::new()).collect();
+        for (i, &x) in xs.iter().enumerate() {
+            b[i * 7 / xs.len()].push(x);
+        }
+        let merged_a = Stats::merge_all(&a);
+        let merged_b = Stats::merge_all(&b);
+        // fold order must not matter either
+        let mut a_rev: Vec<&Stats> = a.iter().collect();
+        a_rev.reverse();
+        let merged_a_rev = Stats::merge_all(a_rev);
+        for q in [0.0, 0.25, 0.5, 0.95, 0.99, 1.0] {
+            let qa = merged_a.quantile(q);
+            assert_eq!(qa, merged_b.quantile(q), "partition changed q{q}");
+            assert_eq!(qa, merged_a_rev.quantile(q), "fold order changed q{q}");
+        }
+        assert_eq!(merged_a.n, xs.len() as u64);
+        assert_eq!(merged_b.n, xs.len() as u64);
+        // and below the cap the merge is exact: equal to one big Stats
+        let mut whole = Stats::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        assert_eq!(merged_a.p50(), whole.p50());
+        assert_eq!(merged_a.p99(), whole.p99());
+    }
+
+    #[test]
+    fn merge_all_past_the_cap_is_bounded_and_deterministic() {
+        // two parts whose union exceeds SAMPLE_CAP (each part exact)
+        let make = |lo: u64, hi: u64| {
+            let mut s = Stats::new();
+            for x in lo..hi {
+                s.push(x as f64);
+            }
+            s
+        };
+        let a = make(0, super::SAMPLE_CAP as u64);
+        let b = make(super::SAMPLE_CAP as u64, 2 * super::SAMPLE_CAP as u64);
+        let ab = Stats::merge_all([&a, &b]);
+        let ba = Stats::merge_all([&b, &a]);
+        assert!(ab.samples.len() <= super::SAMPLE_CAP);
+        assert_eq!(ab.n, 2 * super::SAMPLE_CAP as u64);
+        assert_eq!(ab.p50(), ba.p50(), "cap thinning must be order-independent");
+        assert_eq!(ab.p99(), ba.p99());
+        // the strided order statistics stay close to the true quantiles
+        let true_p50 = super::SAMPLE_CAP as f64;
+        assert!((ab.p50() - true_p50).abs() < 0.02 * true_p50, "p50 {}", ab.p50());
     }
 
     #[test]

@@ -8,7 +8,10 @@
 //! [`QueryEngine::in_flight`]; for synchronous (simulated-time) engines
 //! it models the backlog itself as the set of already-issued responses
 //! whose completion time is still in the future at the new request's
-//! arrival time.
+//! arrival time. The worker-pool server's probe is batch-aware: a
+//! drained-but-unexecuted batch still counts against the bound (see
+//! [`crate::serve::sched`]), so switching schedulers or batch sizes
+//! does not quietly widen the effective admission depth.
 //!
 //! The bound is exact under a single submitting thread (both drivers'
 //! open loops). Under concurrent submitters the probe and the submit

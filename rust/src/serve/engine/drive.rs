@@ -23,6 +23,7 @@ use std::time::{Duration, Instant};
 use crate::metrics::Stats;
 use crate::serve::loadgen::LoadGen;
 use crate::serve::query::{N_QUERY_CLASSES, QUERY_CLASSES};
+use crate::serve::server::ServerReport;
 
 use super::{Outcome, QueryEngine, Request, Submitted};
 
@@ -106,6 +107,15 @@ pub struct DriveReport {
     /// arrival -> completion latency per query class (synchronous
     /// completions only)
     pub latency: [Stats; N_QUERY_CLASSES],
+    /// scheduler accounting folded in from the worker-pool server's
+    /// report (see [`DriveReport::absorb_server`]): jobs executed from
+    /// the owning worker's queue vs stolen from another worker's deque,
+    /// and the drained-batch size distribution. All zero for
+    /// synchronous tiers.
+    pub local_hits: u64,
+    pub steals: u64,
+    pub batches: u64,
+    pub batch_size: Stats,
 }
 
 impl DriveReport {
@@ -136,9 +146,25 @@ impl DriveReport {
         self.hedge_wins += o.hedge_wins;
         self.arrival_secs = self.arrival_secs.max(o.arrival_secs);
         self.horizon = self.horizon.max(o.horizon);
+        self.local_hits += o.local_hits;
+        self.steals += o.steals;
+        self.batches += o.batches;
+        self.batch_size.merge(&o.batch_size);
         for (dst, src) in self.latency.iter_mut().zip(&o.latency) {
             dst.merge(src);
         }
+    }
+
+    /// Fold the worker-pool server's scheduler accounting (local hits,
+    /// steals, batch sizes) into this report, so one artifact carries
+    /// both the driver's disposition counters and the scheduler's view
+    /// of the same run. Call it with `Server::shutdown`'s report after
+    /// a driven run over a `ServerEngine`.
+    pub fn absorb_server(&mut self, s: &ServerReport) {
+        self.local_hits += s.local_hits;
+        self.steals += s.steals;
+        self.batches += s.batches;
+        self.batch_size.merge(&s.batch_size);
     }
 
     /// Account one synchronously completed response.
@@ -201,6 +227,16 @@ impl DriveReport {
             out.push_str(&format!(
                 "\n  hedges: {} fired, {} won",
                 self.hedges, self.hedge_wins
+            ));
+        }
+        if self.batches > 0 {
+            let total = (self.local_hits + self.steals).max(1);
+            out.push_str(&format!(
+                "\n  sched: {} local, {} stolen ({:.1}%), mean batch {:.2}",
+                self.local_hits,
+                self.steals,
+                100.0 * self.steals as f64 / total as f64,
+                self.batch_size.mean()
             ));
         }
         out

@@ -95,7 +95,11 @@ impl QueryEngine for DirectEngine {
 /// The wall-clock worker-pool tier: `call` blocks for the reply,
 /// `submit` is the fire-and-forget queue path. Clones share one
 /// server; keep a clone (or the `Arc<Server>`) to collect the server's
-/// own queue-latency report via `Server::shutdown` after a run.
+/// own queue-latency + scheduler report via `Server::shutdown` after a
+/// run (fold it into the drive via `DriveReport::absorb_server`). The
+/// scheduler underneath (condvar FIFO or work-stealing deques, batched
+/// or not) is invisible at this seam: any middleware stack above and
+/// both drivers inherit it unchanged.
 #[derive(Clone)]
 pub struct ServerEngine {
     server: Arc<Server>,
@@ -132,7 +136,7 @@ impl QueryEngine for ServerEngine {
     }
 
     fn describe(&self) -> String {
-        format!("server({} workers)", self.server.threads())
+        format!("server({} workers, {})", self.server.threads(), self.server.sched().describe())
     }
 
     fn in_flight(&self) -> Option<usize> {

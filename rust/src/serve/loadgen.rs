@@ -87,6 +87,12 @@ pub struct LoadGenConfig {
     pub box_edge: (f64, f64),
     /// brightest-N upper bound
     pub brightest_max: usize,
+    /// arrivals per burst for the open-loop drivers (1 = plain Poisson).
+    /// With `burst > 1`, arrivals come in back-to-back groups of
+    /// `burst` separated by exponential gaps scaled to keep the offered
+    /// rate unchanged — the arrival shape under which batched request
+    /// scheduling earns its keep.
+    pub burst: usize,
     pub seed: u64,
 }
 
@@ -100,6 +106,7 @@ impl Default for LoadGenConfig {
             radius: (4.0, 60.0),
             box_edge: (8.0, 120.0),
             brightest_max: 100,
+            burst: 1,
             seed: 42,
         }
     }
@@ -151,6 +158,8 @@ pub struct LoadGen {
     zipf_cdf: Vec<f64>,
     /// cumulative class weights: cone, box, brightest, xmatch
     mix_cdf: [f64; 4],
+    /// arrivals remaining in the current burst (see `LoadGenConfig::burst`)
+    burst_left: usize,
 }
 
 impl LoadGen {
@@ -180,7 +189,7 @@ impl LoadGen {
             1.0,
         ];
         let rng = Rng::new(cfg.seed);
-        LoadGen { cfg, rng, width, height, hotspots, zipf_cdf, mix_cdf }
+        LoadGen { cfg, rng, width, height, hotspots, zipf_cdf, mix_cdf, burst_left: 0 }
     }
 
     /// A derived stream for another client thread.
@@ -228,13 +237,25 @@ impl LoadGen {
         }
     }
 
-    /// One exponential inter-arrival gap (seconds) at offered rate
-    /// `qps` — shared by the wall-clock open-loop driver and the
-    /// distributed tier's simulated-time driver, so both offer the
-    /// same Poisson arrival process.
+    /// One inter-arrival gap (seconds) at offered rate `qps` — shared
+    /// by the wall-clock open-loop driver and the distributed tier's
+    /// simulated-time driver, so both offer the same arrival process.
+    /// With the default `burst == 1` this is a plain Poisson process
+    /// (one exponential gap per arrival, draw-for-draw identical to the
+    /// pre-burst generator); with `burst > 1`, `burst` arrivals land
+    /// back to back and the gap between bursts is scaled by `burst` so
+    /// the offered rate is unchanged.
     pub fn next_interarrival(&mut self, qps: f64) -> f64 {
+        let burst = self.cfg.burst.max(1);
+        if burst > 1 {
+            if self.burst_left > 0 {
+                self.burst_left -= 1;
+                return 0.0;
+            }
+            self.burst_left = burst - 1;
+        }
         let u = self.rng.uniform().max(1e-12);
-        -u.ln() / qps.max(1e-3)
+        -u.ln() * burst as f64 / qps.max(1e-3)
     }
 
     /// Draw the next query from the configured mix.
@@ -285,6 +306,42 @@ impl LoadGen {
                 radius: self.rng.uniform_in(0.5, 4.0),
             }
         }
+    }
+}
+
+/// Deterministic "any corner of the query space" generator for parity
+/// tests and benches: cycles class by `i` (cone, box, brightest,
+/// cross-match) and filter by `i % 3`, with off-sky centers, near-
+/// degenerate radii, and whole-sky boxes included. One copy shared by
+/// every suite, so a new query variant gets fuzz coverage everywhere
+/// by being added here once.
+pub fn fuzz_query(rng: &mut Rng, width: f64, height: f64, i: usize) -> Query {
+    let filters = [SourceFilter::Any, SourceFilter::StarsOnly, SourceFilter::GalaxiesOnly];
+    let filter = filters[i % 3];
+    match i % 4 {
+        0 => Query::Cone {
+            center: (rng.uniform_in(-40.0, width + 40.0), rng.uniform_in(-40.0, height + 40.0)),
+            radius: rng.uniform_in(1.0, 220.0),
+            filter,
+        },
+        1 => {
+            let ax = rng.uniform_in(0.0, width);
+            let ay = rng.uniform_in(0.0, height);
+            let bx = rng.uniform_in(0.0, width);
+            let by = rng.uniform_in(0.0, height);
+            Query::BoxSearch {
+                x0: ax.min(bx),
+                y0: ay.min(by),
+                x1: ax.max(bx),
+                y1: ay.max(by),
+                filter,
+            }
+        }
+        2 => Query::BrightestN { n: rng.below(120) as usize, filter },
+        _ => Query::CrossMatch {
+            pos: (rng.uniform_in(0.0, width), rng.uniform_in(0.0, height)),
+            radius: rng.uniform_in(0.3, 8.0),
+        },
     }
 }
 
@@ -371,6 +428,32 @@ mod tests {
         let mean = total / n as f64;
         assert!(
             (mean - 1.0 / qps).abs() < 0.2 / qps,
+            "mean gap {mean} vs expected {}",
+            1.0 / qps
+        );
+    }
+
+    #[test]
+    fn bursty_arrivals_keep_the_offered_rate() {
+        let cfg = LoadGenConfig { burst: 8, ..Default::default() };
+        let mut g = LoadGen::new(cfg, 100.0, 100.0);
+        let qps = 400.0;
+        let n = 16_000;
+        let (mut total, mut zeros) = (0.0, 0usize);
+        for _ in 0..n {
+            let gap = g.next_interarrival(qps);
+            assert!(gap >= 0.0);
+            if gap == 0.0 {
+                zeros += 1;
+            }
+            total += gap;
+        }
+        // 7 of every 8 gaps are zero (inside a burst)...
+        assert_eq!(zeros, n * 7 / 8, "burst shape wrong: {zeros} zero gaps");
+        // ...and the mean gap still matches the offered rate
+        let mean = total / n as f64;
+        assert!(
+            (mean - 1.0 / qps).abs() < 0.25 / qps,
             "mean gap {mean} vs expected {}",
             1.0 / qps
         );

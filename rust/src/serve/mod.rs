@@ -20,6 +20,9 @@
 //!   one open/closed-loop driver over a wall or simulated clock.
 //! * [`server`] — the wall-clock tier: worker pool over `Arc<Store>`
 //!   with a bounded queue and per-class latency quantiles.
+//! * [`sched`] — the request schedulers under that pool: the original
+//!   mutex+condvar FIFO or a work-stealing pool of per-worker deques,
+//!   both with batched draining and same-shard batched execution.
 //! * [`loadgen`] — deterministic query streams with configurable query
 //!   mix and Zipf-skewed sky hotspots.
 //! * [`snapshot`] — jsonlite snapshot format bridging `infer` output to
@@ -35,6 +38,7 @@ pub mod engine;
 pub mod ingest;
 pub mod loadgen;
 pub mod query;
+pub mod sched;
 pub mod server;
 pub mod snapshot;
 pub mod store;
@@ -49,11 +53,12 @@ pub use ingest::{
     DriftConfig, DriftGen, EpochStore, IngestDriver, IngestReport, Ingestor, StoreSource,
     VersionedStore,
 };
-pub use loadgen::{LoadGen, LoadGenConfig, QueryMix};
+pub use loadgen::{fuzz_query, LoadGen, LoadGenConfig, QueryMix};
 pub use query::{
     cross_match_catalog, execute, execute_on_shard, execute_scan, merge_replies, plan_shards,
     MatchResult, Query, QueryClass, QueryResult, ShardReply, SourceFilter, N_QUERY_CLASSES,
 };
+pub use sched::{execute_batch, SchedConfig, SchedKind};
 pub use server::{Server, ServerConfig, ServerReport};
 pub use snapshot::Snapshot;
 pub use store::{ServedSource, Shard, Store};

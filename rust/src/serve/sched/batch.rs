@@ -1,0 +1,118 @@
+//! Batched query execution: answer a whole drained batch in one pass
+//! over the shard list.
+//!
+//! Per-query execution visits the shard list once per request; a batch
+//! of B requests visits it B times and, on a live store, pins the
+//! current epoch B times. [`execute_batch`] turns that inside out:
+//! plan every query's shard set up front, then walk the shard list
+//! *once*, answering every query that touches each shard while it is
+//! hot, and merge per query at the end. Same-shard queries (the common
+//! case under a hotspot mix) thus share one shard dispatch.
+//!
+//! Byte parity with [`execute`] is by construction: each query's
+//! replies are produced by the same [`execute_on_shard`] in the same
+//! ascending-shard order and folded by the same [`merge_replies`];
+//! shards outside a query's plan contribute exactly the empty replies
+//! the unbatched path would have produced and discarded.
+
+use std::borrow::Borrow;
+
+use crate::serve::query::{
+    execute, execute_on_shard, merge_replies, plan_shards, Query, QueryResult, ShardReply,
+};
+use crate::serve::store::Store;
+
+/// Execute `queries` against the store, grouping per-shard work so the
+/// shard list is walked once per batch. Results are returned in input
+/// order and are byte-identical to per-query [`execute`]. Generic over
+/// `Borrow<Query>` so the worker loop can pass borrowed queries
+/// (`&[&Query]`) without cloning on the hot path.
+pub fn execute_batch<Q: Borrow<Query>>(store: &Store, queries: &[Q]) -> Vec<QueryResult> {
+    if queries.len() <= 1 {
+        return queries.iter().map(|q| execute(store, q.borrow())).collect();
+    }
+    let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); store.shards.len()];
+    let mut replies: Vec<Vec<ShardReply>> = Vec::with_capacity(queries.len());
+    for (qi, q) in queries.iter().enumerate() {
+        let plan = plan_shards(store, q.borrow());
+        replies.push(Vec::with_capacity(plan.len()));
+        for s in plan {
+            by_shard[s].push(qi);
+        }
+    }
+    // one pass over the shards: each shard answers every query that
+    // planned it, in ascending shard order (the merge's canonical order)
+    for (s, qis) in by_shard.iter().enumerate() {
+        if qis.is_empty() {
+            continue;
+        }
+        let shard = &store.shards[s];
+        for &qi in qis {
+            let reply = execute_on_shard(shard, queries[qi].borrow());
+            replies[qi].push(reply);
+        }
+    }
+    queries
+        .iter()
+        .zip(replies)
+        .map(|(q, r)| merge_replies(q.borrow(), r))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+    use crate::serve::loadgen::fuzz_query;
+    use crate::serve::query::SourceFilter;
+
+    fn test_store(n: usize, shards: usize, seed: u64) -> Store {
+        let snap = crate::serve::snapshot::synthetic(n, seed);
+        Store::build(snap.sources, snap.width, snap.height, shards)
+    }
+
+    #[test]
+    fn batched_execution_matches_per_query_execution() {
+        let store = test_store(1200, 9, 51);
+        let (w, h) = (store.width, store.height);
+        let mut rng = Rng::new(23);
+        for batch_size in [2usize, 3, 16, 40] {
+            let queries: Vec<Query> =
+                (0..batch_size).map(|i| fuzz_query(&mut rng, w, h, i)).collect();
+            let got = execute_batch(&store, &queries);
+            assert_eq!(got.len(), queries.len());
+            for (q, g) in queries.iter().zip(&got) {
+                assert_eq!(g, &execute(&store, q), "batch {batch_size}: {q:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_queries_in_one_batch_agree() {
+        let store = test_store(400, 4, 9);
+        let q = Query::Cone {
+            center: (store.width * 0.4, store.height * 0.6),
+            radius: 55.0,
+            filter: SourceFilter::Any,
+        };
+        let queries = [q.clone(), q.clone(), q.clone()];
+        let got = execute_batch(&store, &queries);
+        let want = execute(&store, &q);
+        for g in &got {
+            assert_eq!(g, &want);
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_batches() {
+        let store = test_store(100, 3, 2);
+        let empty: [Query; 0] = [];
+        assert!(execute_batch(&store, &empty).is_empty());
+        let q = Query::BrightestN { n: 5, filter: SourceFilter::Any };
+        let got = execute_batch(&store, std::slice::from_ref(&q));
+        assert_eq!(got, vec![execute(&store, &q)]);
+        // borrowed-query form answers identically (the worker's path)
+        let refs = [&q];
+        assert_eq!(execute_batch(&store, &refs), got);
+    }
+}

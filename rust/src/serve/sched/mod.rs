@@ -1,0 +1,541 @@
+//! Request scheduling for the worker-pool server: the queue between
+//! admission and execution.
+//!
+//! Two schedulers share one interface:
+//!
+//! * **condvar** — the original single bounded FIFO guarded by a mutex
+//!   + condvar. Every submit and every pop crosses the same lock, which
+//!   makes it the contention ceiling of the whole single-host tier once
+//!   worker counts grow (the paper's petascale follow-up attributes its
+//!   8k-core scaling to moving off exactly this shape of queue).
+//! * **steal** — per-worker deques. Submissions are sprayed round-robin
+//!   across the deques; each worker drains its own deque oldest-first
+//!   and, when empty, steals the oldest jobs from a randomized victim,
+//!   so no worker idles while any deque holds work and stragglers'
+//!   backlogs are drained by the fleet. Service is oldest-first on
+//!   every path — under sustained overload no request is starved the
+//!   way a newest-first (LIFO) pop would starve the queue head.
+//!
+//! On top of either queue, workers drain up to `batch` jobs per wake-up
+//! and execute them through [`execute_batch`], which answers same-shard
+//! queries in one pass over the shard list (one store/epoch load and one
+//! shard dispatch per batch instead of per request).
+//!
+//! **Batch-aware admission**: the shed bound counts every accepted job
+//! until the moment its batch *begins executing* — drained-but-unrun
+//! jobs still occupy admission slots, so turning batching on cannot
+//! quietly widen the effective queue depth. With `batch == 1` the
+//! accounting is the original pop-time accounting.
+//!
+//! **Shutdown drains**: both schedulers guarantee that every accepted
+//! job is executed before the workers exit — shutdown stops *intake*,
+//! never work in flight. The steal scheduler re-confirms emptiness
+//! under every deque lock before a worker may exit, which closes the
+//! race with a submitter that passed the shutdown check just before the
+//! flag was set.
+
+pub mod batch;
+
+pub use batch::execute_batch;
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::prng::Rng;
+
+use super::query::{Query, QueryResult};
+
+/// Which request scheduler the worker pool runs on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedKind {
+    /// single mutex+condvar FIFO (the original queue)
+    #[default]
+    Condvar,
+    /// per-worker FIFO deques + randomized oldest-first stealing
+    Steal,
+}
+
+impl SchedKind {
+    /// Parse a `--sched` flag value (`condvar` | `steal`).
+    pub fn parse(s: &str) -> Option<SchedKind> {
+        match s {
+            "condvar" => Some(SchedKind::Condvar),
+            "steal" => Some(SchedKind::Steal),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedKind::Condvar => "condvar",
+            SchedKind::Steal => "steal",
+        }
+    }
+}
+
+/// Scheduler + batching knobs. The default (`condvar`, batch 1) is the
+/// original single-queue behavior, bit for bit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SchedConfig {
+    pub kind: SchedKind,
+    /// max jobs a worker drains (and executes) per wake-up
+    pub batch: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig { kind: SchedKind::Condvar, batch: 1 }
+    }
+}
+
+impl SchedConfig {
+    /// Short human label, e.g. `steal x16` (echoed by engine describes).
+    pub fn describe(&self) -> String {
+        if self.batch.max(1) > 1 {
+            format!("{} x{}", self.kind.name(), self.batch)
+        } else {
+            self.kind.name().to_string()
+        }
+    }
+}
+
+/// One queued request: the query, its enqueue time (queue-entry → reply
+/// latency accounting), and the optional closed-loop reply channel.
+pub(crate) struct Job {
+    pub query: Query,
+    pub enqueued: Instant,
+    pub reply: Option<mpsc::Sender<QueryResult>>,
+}
+
+/// The queue between admission and the worker pool, in either flavor.
+pub(crate) enum SchedQueue {
+    Condvar(CondvarQueue),
+    Steal(StealQueue),
+}
+
+impl SchedQueue {
+    /// Build the queue for `workers` worker threads with an admission
+    /// bound of `depth` accepted-but-unexecuted jobs.
+    pub fn new(kind: SchedKind, workers: usize, depth: usize) -> SchedQueue {
+        match kind {
+            SchedKind::Condvar => SchedQueue::Condvar(CondvarQueue {
+                state: Mutex::new(CondvarState { jobs: VecDeque::new(), shutdown: false }),
+                not_empty: Condvar::new(),
+                pending: AtomicUsize::new(0),
+                accepted: AtomicU64::new(0),
+                depth,
+            }),
+            SchedKind::Steal => SchedQueue::Steal(StealQueue {
+                queues: (0..workers.max(1)).map(|_| Mutex::new(VecDeque::new())).collect(),
+                pending: AtomicUsize::new(0),
+                queued: AtomicUsize::new(0),
+                accepted: AtomicU64::new(0),
+                depth,
+                shutdown: AtomicBool::new(false),
+                sleepers: AtomicUsize::new(0),
+                sleep: Mutex::new(()),
+                wake: Condvar::new(),
+                next: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    /// Admit one job, or refuse it (shutdown, or the pending bound is
+    /// reached). Acceptance is counted here, under the queue lock; the
+    /// caller counts sheds.
+    pub fn try_push(&self, job: Job) -> bool {
+        match self {
+            SchedQueue::Condvar(q) => q.try_push(job),
+            SchedQueue::Steal(q) => q.try_push(job),
+        }
+    }
+
+    /// Accepted jobs that have not yet begun executing — the admission
+    /// bound's measure, and what `QueryEngine::in_flight` reports.
+    pub fn pending(&self) -> usize {
+        match self {
+            SchedQueue::Condvar(q) => q.pending.load(Ordering::SeqCst),
+            SchedQueue::Steal(q) => q.pending.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Total jobs ever accepted. Counted under the same lock that makes
+    /// the job visible to workers, so after the workers have joined,
+    /// `accepted` and the executed total agree exactly even when
+    /// shutdown raced concurrent submitters (the drain guarantee is
+    /// checkable, not just true).
+    pub fn accepted(&self) -> u64 {
+        match self {
+            SchedQueue::Condvar(q) => q.accepted.load(Ordering::SeqCst),
+            SchedQueue::Steal(q) => q.accepted.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Release `k` admission slots: the drained batch is now executing.
+    pub fn begin_execute(&self, k: usize) {
+        let pending = match self {
+            SchedQueue::Condvar(q) => &q.pending,
+            SchedQueue::Steal(q) => &q.pending,
+        };
+        pending.fetch_sub(k, Ordering::SeqCst);
+    }
+
+    /// Stop intake and wake every worker; queued jobs still drain.
+    pub fn shutdown(&self) {
+        match self {
+            SchedQueue::Condvar(q) => {
+                q.state.lock().unwrap().shutdown = true;
+                q.not_empty.notify_all();
+            }
+            SchedQueue::Steal(q) => {
+                q.shutdown.store(true, Ordering::SeqCst);
+                let _g = q.sleep.lock().unwrap();
+                q.wake.notify_all();
+            }
+        }
+    }
+
+    /// Block until up to `batch` jobs are available and move them into
+    /// `out` (which must arrive empty). Returns whether the jobs were
+    /// stolen from another worker's deque, or `None` once shutdown is
+    /// flagged and every queue has drained (the worker exits).
+    pub fn next_batch(
+        &self,
+        worker: usize,
+        batch: usize,
+        rng: &mut Rng,
+        out: &mut Vec<Job>,
+    ) -> Option<bool> {
+        match self {
+            SchedQueue::Condvar(q) => q.next_batch(batch, out),
+            SchedQueue::Steal(q) => q.next_batch(worker, batch, rng, out),
+        }
+    }
+}
+
+struct CondvarState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+/// The original scheduler: one bounded FIFO, one lock, one condvar.
+pub(crate) struct CondvarQueue {
+    state: Mutex<CondvarState>,
+    not_empty: Condvar,
+    /// accepted jobs not yet executing (== queue length while batch=1)
+    pending: AtomicUsize,
+    /// total ever accepted (incremented under the state lock)
+    accepted: AtomicU64,
+    depth: usize,
+}
+
+impl CondvarQueue {
+    fn try_push(&self, job: Job) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.shutdown || self.pending.load(Ordering::SeqCst) >= self.depth {
+            return false;
+        }
+        st.jobs.push_back(job);
+        self.pending.fetch_add(1, Ordering::SeqCst);
+        self.accepted.fetch_add(1, Ordering::SeqCst);
+        drop(st);
+        self.not_empty.notify_one();
+        true
+    }
+
+    fn next_batch(&self, batch: usize, out: &mut Vec<Job>) -> Option<bool> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.jobs.is_empty() {
+                let k = st.jobs.len().min(batch.max(1));
+                out.extend(st.jobs.drain(..k));
+                return Some(false);
+            }
+            if st.shutdown {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+}
+
+/// The work-stealing scheduler: one deque per worker.
+pub(crate) struct StealQueue {
+    queues: Vec<Mutex<VecDeque<Job>>>,
+    /// accepted jobs not yet executing (admission bound)
+    pending: AtomicUsize,
+    /// jobs physically sitting in deques (park / exit decisions only;
+    /// the authoritative exit check re-reads the deques under lock)
+    queued: AtomicUsize,
+    /// total ever accepted (incremented under the target deque's lock)
+    accepted: AtomicU64,
+    depth: usize,
+    shutdown: AtomicBool,
+    /// workers currently parked (or about to park) — submitters skip
+    /// the parking lot entirely while this is zero, keeping the global
+    /// `sleep` lock off the submit fast path
+    sleepers: AtomicUsize,
+    /// parking lot: notifies are sent while holding `sleep`, so a
+    /// worker that just observed `queued == 0` cannot miss its wakeup
+    sleep: Mutex<()>,
+    wake: Condvar,
+    /// round-robin spray counter for submissions
+    next: AtomicUsize,
+}
+
+impl StealQueue {
+    fn try_push(&self, job: Job) -> bool {
+        if self.shutdown.load(Ordering::SeqCst) {
+            return false;
+        }
+        // reserve an admission slot without overshoot
+        let mut cur = self.pending.load(Ordering::SeqCst);
+        loop {
+            if cur >= self.depth {
+                return false;
+            }
+            match self.pending.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => break,
+                Err(now) => cur = now,
+            }
+        }
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.queues.len();
+        let mut q = self.queues[i].lock().unwrap();
+        // re-check under the deque lock: a shutdown that lands after
+        // this check cannot sneak past the workers' final locked sweep
+        if self.shutdown.load(Ordering::SeqCst) {
+            drop(q);
+            self.pending.fetch_sub(1, Ordering::SeqCst);
+            return false;
+        }
+        q.push_back(job);
+        self.queued.fetch_add(1, Ordering::SeqCst);
+        self.accepted.fetch_add(1, Ordering::SeqCst);
+        drop(q);
+        // wake a parked worker only if one advertised itself: the
+        // common saturated case never touches the global sleep lock.
+        // (SeqCst pairing with park(): if this load misses a worker's
+        // sleepers increment, that worker's post-increment re-check of
+        // `queued` is ordered after our push and sees the job.)
+        if self.sleepers.load(Ordering::SeqCst) > 0 {
+            let _g = self.sleep.lock().unwrap();
+            self.wake.notify_one();
+        }
+        true
+    }
+
+    /// Pop up to `batch` jobs from this worker's own deque, oldest
+    /// first — per-deque FIFO, so a continuously-refilled deque still
+    /// serves its head and no request waits unboundedly.
+    fn drain_local(&self, worker: usize, batch: usize, out: &mut Vec<Job>) -> usize {
+        let mut q = self.queues[worker].lock().unwrap();
+        let k = q.len().min(batch);
+        out.extend(q.drain(..k));
+        drop(q);
+        if k > 0 {
+            self.queued.fetch_sub(k, Ordering::SeqCst);
+        }
+        k
+    }
+
+    /// Steal from a randomized victim: up to half the victim's backlog
+    /// (capped at `batch`), oldest first, so a straggler's queue head
+    /// is exactly what the fleet drains for it.
+    fn steal(&self, worker: usize, batch: usize, rng: &mut Rng, out: &mut Vec<Job>) -> usize {
+        let n = self.queues.len();
+        if n <= 1 {
+            return 0;
+        }
+        let start = rng.below(n as u64) as usize;
+        for off in 0..n {
+            let v = (start + off) % n;
+            if v == worker {
+                continue;
+            }
+            let mut q = self.queues[v].lock().unwrap();
+            let k = q.len().div_ceil(2).min(batch);
+            for _ in 0..k {
+                out.push(q.pop_front().expect("len-checked steal"));
+            }
+            drop(q);
+            if k > 0 {
+                self.queued.fetch_sub(k, Ordering::SeqCst);
+                return k;
+            }
+        }
+        0
+    }
+
+    /// Sleep unless work arrived (or shutdown) since the caller's last
+    /// scan. Lost-wakeup safety: the worker advertises itself in
+    /// `sleepers` and *then* re-checks `queued` — a submitter that read
+    /// `sleepers == 0` (and so skipped the notify) must have pushed
+    /// before the advertisement, so the re-check sees its job. The
+    /// timeout is belt and braces only.
+    fn park(&self) {
+        let g = self.sleep.lock().unwrap();
+        if self.queued.load(Ordering::SeqCst) > 0 || self.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        self.sleepers.fetch_add(1, Ordering::SeqCst);
+        if self.queued.load(Ordering::SeqCst) == 0 && !self.shutdown.load(Ordering::SeqCst) {
+            // the long timeout is belt and braces only — wakeups are
+            // already reliable — and keeps an idle pool nearly silent
+            let _ = self.wake.wait_timeout(g, Duration::from_millis(100)).unwrap();
+        }
+        self.sleepers.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    fn next_batch(
+        &self,
+        worker: usize,
+        batch: usize,
+        rng: &mut Rng,
+        out: &mut Vec<Job>,
+    ) -> Option<bool> {
+        let batch = batch.max(1);
+        loop {
+            if self.drain_local(worker, batch, out) > 0 {
+                return Some(false);
+            }
+            if self.steal(worker, batch, rng, out) > 0 {
+                return Some(true);
+            }
+            if self.shutdown.load(Ordering::SeqCst) {
+                // authoritative drain check: confirm emptiness under
+                // every deque lock. An in-flight submit that passed the
+                // shutdown check holds one of these locks until its job
+                // is visible, so "all empty here" means "all drained".
+                if self.queues.iter().all(|q| q.lock().unwrap().is_empty()) {
+                    return None;
+                }
+                continue;
+            }
+            self.park();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::query::SourceFilter;
+
+    fn job(n: usize) -> Job {
+        Job {
+            query: Query::BrightestN { n, filter: SourceFilter::Any },
+            enqueued: Instant::now(),
+            reply: None,
+        }
+    }
+
+    #[test]
+    fn sched_kind_parses() {
+        assert_eq!(SchedKind::parse("condvar"), Some(SchedKind::Condvar));
+        assert_eq!(SchedKind::parse("steal"), Some(SchedKind::Steal));
+        assert_eq!(SchedKind::parse("lifo"), None);
+        assert_eq!(SchedKind::default(), SchedKind::Condvar);
+        assert_eq!(SchedConfig::default().describe(), "condvar");
+        assert_eq!(SchedConfig { kind: SchedKind::Steal, batch: 16 }.describe(), "steal x16");
+    }
+
+    #[test]
+    fn both_queues_enforce_the_admission_bound_identically() {
+        for kind in [SchedKind::Condvar, SchedKind::Steal] {
+            let q = SchedQueue::new(kind, 3, 4);
+            let mut ok = 0;
+            for i in 0..10 {
+                if q.try_push(job(i)) {
+                    ok += 1;
+                }
+            }
+            assert_eq!(ok, 4, "{kind:?}");
+            assert_eq!(q.pending(), 4, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn shutdown_refuses_new_jobs_but_drains_old_ones() {
+        for kind in [SchedKind::Condvar, SchedKind::Steal] {
+            let q = SchedQueue::new(kind, 2, 1024);
+            assert!(q.try_push(job(1)));
+            assert!(q.try_push(job(2)));
+            q.shutdown();
+            assert!(!q.try_push(job(3)), "{kind:?}: intake must stop");
+            // both queued jobs drain before workers are told to exit
+            let mut rng = Rng::new(1);
+            let mut out = Vec::new();
+            let mut drained = 0;
+            for w in 0..2 {
+                while let Some(_stolen) = q.next_batch(w, 8, &mut rng, &mut out) {
+                    drained += out.len();
+                    q.begin_execute(out.len());
+                    out.clear();
+                    if drained >= 2 {
+                        break;
+                    }
+                }
+            }
+            assert_eq!(drained, 2, "{kind:?}");
+            assert_eq!(q.pending(), 0, "{kind:?}");
+            // and the drained queue reports exit to every worker
+            assert!(q.next_batch(0, 8, &mut rng, &mut out).is_none());
+        }
+    }
+
+    #[test]
+    fn local_drain_and_steal_are_both_oldest_first() {
+        let q = SchedQueue::new(SchedKind::Steal, 2, 1024);
+        // round-robin spray: jobs 0, 2 land on deque 0; 1, 3 on deque 1
+        for i in 0..4 {
+            assert!(q.try_push(job(i)));
+        }
+        let mut rng = Rng::new(7);
+        let mut out = Vec::new();
+        // worker 0 drains its own deque oldest-first (per-deque FIFO)
+        let stolen = q.next_batch(0, 8, &mut rng, &mut out).unwrap();
+        assert!(!stolen);
+        let ns: Vec<usize> = out
+            .iter()
+            .map(|j| match j.query {
+                Query::BrightestN { n, .. } => n,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(ns, vec![0, 2], "local drain is FIFO");
+        q.begin_execute(out.len());
+        out.clear();
+        // worker 0 again: own deque empty, steals oldest from deque 1
+        let stolen = q.next_batch(0, 1, &mut rng, &mut out).unwrap();
+        assert!(stolen);
+        match out[0].query {
+            Query::BrightestN { n, .. } => assert_eq!(n, 1, "steal is FIFO"),
+            _ => unreachable!(),
+        }
+        q.begin_execute(out.len());
+    }
+
+    #[test]
+    fn batch_caps_the_drain() {
+        let q = SchedQueue::new(SchedKind::Condvar, 1, 1024);
+        for i in 0..10 {
+            assert!(q.try_push(job(i)));
+        }
+        let mut rng = Rng::new(3);
+        let mut out = Vec::new();
+        q.next_batch(0, 4, &mut rng, &mut out).unwrap();
+        assert_eq!(out.len(), 4);
+        // batch-aware accounting: drained-but-unexecuted jobs still
+        // hold their admission slots until begin_execute
+        assert_eq!(q.pending(), 10);
+        q.begin_execute(out.len());
+        assert_eq!(q.pending(), 6);
+    }
+}

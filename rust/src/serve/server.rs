@@ -3,33 +3,45 @@
 //! Architecture (the request path every later scaling PR builds on):
 //!
 //! ```text
-//!   clients ──try_submit──▶ bounded queue ──▶ worker pool ──▶ shards
-//!                 │ (admission control:          │
-//!                 ▼  shed beyond depth)          └─ per-worker latency Stats
-//!               shed
+//!   clients ──try_submit──▶ scheduler ──▶ worker pool ──▶ shards
+//!                 │     (condvar: one FIFO │
+//!                 ▼      steal: per-worker └─ per-worker latency Stats
+//!               shed     deques + stealing)
 //! ```
 //!
-//! Workers pull jobs from a single bounded FIFO guarded by a mutex +
-//! condvar; admission control sheds load once the queue exceeds its
-//! depth bound, so overload degrades into an explicit shed count rather
-//! than unbounded latency. All per-request accounting is worker-local
-//! and merged once at shutdown (same discipline as the inference
-//! coordinator's per-worker stats).
+//! The queue between admission and the workers is pluggable (see
+//! [`crate::serve::sched`]): the original single mutex+condvar FIFO, or
+//! a work-stealing pool of per-worker FIFO deques with randomized
+//! stealing. Workers drain up to [`SchedConfig::batch`] jobs
+//! per wake-up and execute them through
+//! [`execute_batch`](crate::serve::sched::execute_batch), which answers
+//! same-shard queries in one pass over the shard list and pins a live
+//! store's epoch once per batch instead of once per request.
+//!
+//! Admission control sheds load once the count of accepted-but-
+//! unexecuted jobs exceeds the depth bound, so overload degrades into
+//! an explicit shed count rather than unbounded latency; the accounting
+//! is batch-aware (a drained batch keeps its slots until it begins
+//! executing). All per-request accounting is worker-local and merged
+//! once at shutdown (same discipline as the inference coordinator's
+//! per-worker stats); the merged quantiles are deterministic in the
+//! worker fold order (see [`Stats::merge_all`]).
 //!
 //! Result caching used to live here too; it is now the engine API's
 //! composable [`Cached`](crate::serve::engine::Cached) layer, shared by
 //! every tier. Stack it as `Cached<ServerEngine>` to get the old
 //! behavior (and the same layer caches the distributed router).
 
-use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
 use crate::metrics::Stats;
+use crate::prng::Rng;
 
 use super::ingest::{EpochStore, StoreSource, VersionedStore};
-use super::query::{execute, Query, QueryResult, N_QUERY_CLASSES, QUERY_CLASSES};
+use super::query::{Query, QueryResult, N_QUERY_CLASSES, QUERY_CLASSES};
+use super::sched::{execute_batch, Job, SchedConfig, SchedQueue};
 use super::store::Store;
 
 #[derive(Clone, Debug)]
@@ -37,33 +49,24 @@ pub struct ServerConfig {
     /// worker threads (0 is allowed: nothing drains, useful for
     /// deterministic admission-control tests)
     pub threads: usize,
-    /// queue depth bound beyond which new requests are shed
+    /// bound on accepted-but-unexecuted jobs beyond which new requests
+    /// are shed
     pub queue_depth: usize,
+    /// request scheduler + batching knobs; the default (condvar,
+    /// batch 1) is the original single-queue behavior
+    pub sched: SchedConfig,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { threads: 4, queue_depth: 1024 }
+        ServerConfig { threads: 4, queue_depth: 1024, sched: SchedConfig::default() }
     }
-}
-
-struct Job {
-    query: Query,
-    enqueued: Instant,
-    reply: Option<mpsc::Sender<QueryResult>>,
-}
-
-struct QueueState {
-    jobs: VecDeque<Job>,
-    shutdown: bool,
 }
 
 struct Shared {
     source: StoreSource,
     cfg: ServerConfig,
-    state: Mutex<QueueState>,
-    not_empty: Condvar,
-    accepted: AtomicU64,
+    queue: SchedQueue,
     shed: AtomicU64,
 }
 
@@ -72,15 +75,33 @@ struct Shared {
 struct WorkerLocal {
     latency: [Stats; N_QUERY_CLASSES],
     executed: u64,
+    /// jobs popped from the worker's own deque (or the shared FIFO)
+    local_hits: u64,
+    /// jobs taken from another worker's deque
+    steals: u64,
+    /// wake-ups that found work (drained batches)
+    batches: u64,
+    /// jobs per drained batch
+    batch_size: Stats,
 }
 
-/// Final report: throughput counters plus per-class latency
-/// distributions (p50/p99 via `metrics::Stats` quantiles).
+/// Final report: throughput counters, scheduler counters, plus
+/// per-class latency distributions (p50/p99 via `metrics::Stats`
+/// quantiles).
 #[derive(Clone, Debug, Default)]
 pub struct ServerReport {
     pub accepted: u64,
     pub shed: u64,
     pub executed: u64,
+    /// jobs executed from the owning worker's own queue
+    pub local_hits: u64,
+    /// jobs executed after being stolen from another worker's deque
+    /// (always 0 on the condvar scheduler)
+    pub steals: u64,
+    /// drained batches across all workers
+    pub batches: u64,
+    /// jobs per drained batch across all workers
+    pub batch_size: Stats,
     /// queue-entry → reply latency per query class
     pub latency: [Stats; N_QUERY_CLASSES],
 }
@@ -89,6 +110,16 @@ impl ServerReport {
     /// All-classes latency distribution.
     pub fn latency_all(&self) -> Stats {
         Stats::merge_all(&self.latency)
+    }
+
+    /// Fraction of executed jobs that arrived by stealing.
+    pub fn steal_fraction(&self) -> f64 {
+        let total = self.local_hits + self.steals;
+        if total == 0 {
+            0.0
+        } else {
+            self.steals as f64 / total as f64
+        }
     }
 
     /// Multi-line human summary with per-class quantiles.
@@ -118,6 +149,16 @@ impl ServerReport {
                 q[1] * 1e3
             ));
         }
+        if self.batches > 0 {
+            out.push_str(&format!(
+                "\n  sched: {} local, {} stolen ({:.1}%), mean batch {:.2} (max {:.0})",
+                self.local_hits,
+                self.steals,
+                self.steal_fraction() * 100.0,
+                self.batch_size.mean(),
+                self.batch_size.max
+            ));
+        }
         out
     }
 }
@@ -138,8 +179,9 @@ impl Server {
     }
 
     /// Serve the live head of a versioned store: each worker loads the
-    /// current epoch per request, so a publish is picked up by every
-    /// in-flight worker at its next job — no pause, no coordination.
+    /// current epoch per drained batch, so a publish is picked up by
+    /// every in-flight worker at its next batch — no pause, no
+    /// coordination.
     pub fn start_live(versioned: Arc<VersionedStore>, cfg: ServerConfig) -> Server {
         Server::start_from(StoreSource::Live(versioned), cfg)
     }
@@ -147,16 +189,14 @@ impl Server {
     fn start_from(source: StoreSource, cfg: ServerConfig) -> Server {
         let shared = Arc::new(Shared {
             source,
+            queue: SchedQueue::new(cfg.sched.kind, cfg.threads, cfg.queue_depth),
             cfg: cfg.clone(),
-            state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
-            not_empty: Condvar::new(),
-            accepted: AtomicU64::new(0),
             shed: AtomicU64::new(0),
         });
         let handles = (0..cfg.threads)
-            .map(|_| {
+            .map(|w| {
                 let sh = Arc::clone(&shared);
-                std::thread::spawn(move || worker_loop(&sh))
+                std::thread::spawn(move || worker_loop(&sh, w))
             })
             .collect();
         Server { shared, handles: Mutex::new(handles) }
@@ -167,24 +207,27 @@ impl Server {
         self.shared.cfg.threads
     }
 
+    /// The scheduler + batching configuration this server runs on.
+    pub fn sched(&self) -> SchedConfig {
+        self.shared.cfg.sched
+    }
+
     /// The catalog epoch currently served (`None` over a fixed store).
     pub fn epoch_view(&self) -> Option<Arc<EpochStore>> {
         self.shared.source.view()
     }
 
     fn submit(&self, query: Query, reply: Option<mpsc::Sender<QueryResult>>) -> bool {
-        {
-            let mut st = self.shared.state.lock().unwrap();
-            if st.shutdown || st.jobs.len() >= self.shared.cfg.queue_depth {
-                drop(st);
-                self.shared.shed.fetch_add(1, Ordering::Relaxed);
-                return false;
-            }
-            st.jobs.push_back(Job { query, enqueued: Instant::now(), reply });
+        let job = Job { query, enqueued: Instant::now(), reply };
+        // acceptance is counted by the queue itself, under the same
+        // lock that makes the job visible to workers (so a racing
+        // shutdown's report can never under-count accepted work)
+        if self.shared.queue.try_push(job) {
+            true
+        } else {
+            self.shared.shed.fetch_add(1, Ordering::Relaxed);
+            false
         }
-        self.shared.accepted.fetch_add(1, Ordering::Relaxed);
-        self.shared.not_empty.notify_one();
-        true
     }
 
     /// Open-loop submission (fire and forget). Returns false if shed.
@@ -201,58 +244,71 @@ impl Server {
         rx.recv().ok()
     }
 
+    /// Accepted jobs not yet executing (the admission bound's measure).
     pub fn queue_len(&self) -> usize {
-        self.shared.state.lock().unwrap().jobs.len()
+        self.shared.queue.pending()
     }
 
     /// Drain remaining jobs, stop workers, merge per-worker accounting.
     pub fn shutdown(&self) -> ServerReport {
-        {
-            let mut st = self.shared.state.lock().unwrap();
-            st.shutdown = true;
-        }
-        self.shared.not_empty.notify_all();
+        self.shared.queue.shutdown();
         let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
+        let mut locals = Vec::with_capacity(handles.len());
+        for h in handles {
+            locals.push(h.join().expect("server worker panicked"));
+        }
+        // counters read after the join: every accepted job has executed
         let mut report = ServerReport {
-            accepted: self.shared.accepted.load(Ordering::Relaxed),
-            shed: self.shared.shed.load(Ordering::Relaxed),
+            accepted: self.shared.queue.accepted(),
+            shed: self.shared.shed.load(Ordering::SeqCst),
             ..Default::default()
         };
-        for h in handles {
-            let local = h.join().expect("server worker panicked");
+        // worker-index fold order: together with the deterministic
+        // `Stats::merge_all`, repeated runs over the same per-worker
+        // sample multisets report identical quantiles
+        for local in &locals {
             report.executed += local.executed;
-            for (dst, src) in report.latency.iter_mut().zip(&local.latency) {
-                dst.merge(src);
-            }
+            report.local_hits += local.local_hits;
+            report.steals += local.steals;
+            report.batches += local.batches;
+            report.batch_size.merge(&local.batch_size);
+        }
+        for c in 0..N_QUERY_CLASSES {
+            report.latency[c] = Stats::merge_all(locals.iter().map(|l| &l.latency[c]));
         }
         report
     }
 }
 
-fn worker_loop(shared: &Shared) -> WorkerLocal {
+fn worker_loop(shared: &Shared, worker: usize) -> WorkerLocal {
     let mut local = WorkerLocal::default();
-    loop {
-        let job = {
-            let mut st = shared.state.lock().unwrap();
-            loop {
-                if let Some(j) = st.jobs.pop_front() {
-                    break Some(j);
-                }
-                if st.shutdown {
-                    break None;
-                }
-                st = shared.not_empty.wait(st).unwrap();
+    // per-worker steal-victim stream, independent of the query streams
+    let mut rng = Rng::new(0x57ea1 ^ (worker as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    let batch = shared.cfg.sched.batch.max(1);
+    let mut jobs: Vec<Job> = Vec::with_capacity(batch);
+    while let Some(stolen) = shared.queue.next_batch(worker, batch, &mut rng, &mut jobs) {
+        if stolen {
+            local.steals += jobs.len() as u64;
+        } else {
+            local.local_hits += jobs.len() as u64;
+        }
+        local.batches += 1;
+        local.batch_size.push(jobs.len() as f64);
+        // live stores flip epochs between batches: one head load serves
+        // the whole batch (amortized epoch pin)
+        let store = shared.source.current();
+        // batch-aware admission: slots free only once execution begins
+        shared.queue.begin_execute(jobs.len());
+        let queries: Vec<&Query> = jobs.iter().map(|j| &j.query).collect();
+        let results = execute_batch(&store, &queries);
+        for (job, result) in jobs.drain(..).zip(results) {
+            let class = job.query.class();
+            local.latency[class.index()].push(job.enqueued.elapsed().as_secs_f64());
+            local.executed += 1;
+            if let Some(tx) = job.reply {
+                // receiver may have given up; that is not a server error
+                let _ = tx.send(result);
             }
-        };
-        let Some(job) = job else { break };
-        let class = job.query.class();
-        // live stores flip epochs between jobs: load the current one
-        let result = execute(&shared.source.current(), &job.query);
-        local.latency[class.index()].push(job.enqueued.elapsed().as_secs_f64());
-        local.executed += 1;
-        if let Some(tx) = job.reply {
-            // receiver may have given up; that is not a server error
-            let _ = tx.send(result);
         }
     }
     local
@@ -263,6 +319,7 @@ mod tests {
     use super::*;
     use crate::prng::Rng;
     use crate::serve::query::{execute_scan, SourceFilter};
+    use crate::serve::sched::SchedKind;
     use crate::serve::store::ServedSource;
 
     fn small_store(n: usize) -> (Arc<Store>, Vec<ServedSource>) {
@@ -281,6 +338,14 @@ mod tests {
         let store = Store::build(src, 300.0, 300.0, 4);
         let flat = store.all_sources();
         (Arc::new(store), flat)
+    }
+
+    fn steal_cfg(threads: usize, batch: usize) -> ServerConfig {
+        ServerConfig {
+            threads,
+            sched: SchedConfig { kind: SchedKind::Steal, batch },
+            ..Default::default()
+        }
     }
 
     #[test]
@@ -302,34 +367,66 @@ mod tests {
         assert_eq!(report.accepted, 60);
         assert_eq!(report.shed, 0);
         assert_eq!(report.latency_all().n, 60);
+        assert_eq!(report.steals, 0, "condvar scheduler never steals");
+        assert_eq!(report.local_hits, 60);
+    }
+
+    #[test]
+    fn steal_scheduler_matches_bruteforce_too() {
+        let (store, flat) = small_store(500);
+        let server = Server::start(store, steal_cfg(3, 4));
+        let mut rng = Rng::new(10);
+        for i in 0..60usize {
+            let q = match i % 2 {
+                0 => Query::Cone {
+                    center: (rng.uniform_in(0.0, 300.0), rng.uniform_in(0.0, 300.0)),
+                    radius: rng.uniform_in(5.0, 80.0),
+                    filter: SourceFilter::Any,
+                },
+                _ => Query::BrightestN { n: 1 + i, filter: SourceFilter::GalaxiesOnly },
+            };
+            let got = server.call(q.clone()).expect("not shed");
+            assert_eq!(got, execute_scan(&flat, &q));
+        }
+        let report = server.shutdown();
+        assert_eq!(report.executed, 60);
+        assert_eq!(report.local_hits + report.steals, 60);
+        assert!(report.batches > 0);
+        assert_eq!(report.batch_size.n, report.batches);
     }
 
     #[test]
     fn admission_control_sheds_beyond_depth() {
-        let (store, _) = small_store(50);
-        // zero workers: the queue only fills, deterministically
-        let server = Server::start(store, ServerConfig { threads: 0, queue_depth: 4 });
-        let q = Query::BrightestN { n: 3, filter: SourceFilter::Any };
-        let mut ok = 0;
-        for _ in 0..10 {
-            if server.try_submit(q.clone()) {
-                ok += 1;
+        for kind in [SchedKind::Condvar, SchedKind::Steal] {
+            let (store, _) = small_store(50);
+            // zero workers: the queue only fills, deterministically
+            let cfg = ServerConfig {
+                threads: 0,
+                queue_depth: 4,
+                sched: SchedConfig { kind, batch: 1 },
+            };
+            let server = Server::start(store, cfg);
+            let q = Query::BrightestN { n: 3, filter: SourceFilter::Any };
+            let mut ok = 0;
+            for _ in 0..10 {
+                if server.try_submit(q.clone()) {
+                    ok += 1;
+                }
             }
+            assert_eq!(ok, 4, "{kind:?}");
+            assert_eq!(server.queue_len(), 4, "{kind:?}");
+            let report = server.shutdown();
+            assert_eq!(report.accepted, 4, "{kind:?}");
+            assert_eq!(report.shed, 6, "{kind:?}");
+            assert_eq!(report.executed, 0, "{kind:?}");
         }
-        assert_eq!(ok, 4);
-        assert_eq!(server.queue_len(), 4);
-        let report = server.shutdown();
-        assert_eq!(report.accepted, 4);
-        assert_eq!(report.shed, 6);
-        assert_eq!(report.executed, 0);
     }
 
     #[test]
     fn live_server_picks_up_published_epochs() {
         let (store, _) = small_store(200);
         let vs = Arc::new(VersionedStore::new(store));
-        let server =
-            Server::start_live(Arc::clone(&vs), ServerConfig { threads: 2, ..Default::default() });
+        let server = Server::start_live(Arc::clone(&vs), steal_cfg(2, 4));
         assert_eq!(server.epoch_view().expect("live").epoch, 0);
         let q = Query::BrightestN { n: 1, filter: SourceFilter::Any };
         let before = server.call(q.clone()).expect("not shed");

@@ -10,44 +10,15 @@ use std::sync::Arc;
 use celeste::prng::Rng;
 use celeste::serve::dist::{Router, RouterConfig, Routing};
 use celeste::serve::{
-    self, drive_open_loop, execute, layered, metric, Admission, Cached, DirectEngine, Hedged,
-    LayerSpec, LoadGen, LoadGenConfig, Outcome, Query, QueryEngine, Request, RouterEngine,
-    ScanEngine, Server, ServerConfig, ServerEngine, SimClock, SourceFilter, Store,
+    self, drive_open_loop, execute, fuzz_query, layered, metric, Admission, Cached, DirectEngine,
+    Hedged, LayerSpec, LoadGen, LoadGenConfig, Outcome, Query, QueryEngine, Request,
+    RouterEngine, ScanEngine, SchedConfig, SchedKind, Server, ServerConfig, ServerEngine,
+    SimClock, SourceFilter, Store,
 };
 
 fn test_store(n: usize, shards: usize, seed: u64) -> Arc<Store> {
     let snap = serve::snapshot::synthetic(n, seed);
     Arc::new(Store::build(snap.sources, snap.width, snap.height, shards))
-}
-
-fn random_query(rng: &mut Rng, w: f64, h: f64, i: usize) -> Query {
-    let filters = [SourceFilter::Any, SourceFilter::StarsOnly, SourceFilter::GalaxiesOnly];
-    let filter = filters[i % 3];
-    match i % 4 {
-        0 => Query::Cone {
-            center: (rng.uniform_in(-40.0, w + 40.0), rng.uniform_in(-40.0, h + 40.0)),
-            radius: rng.uniform_in(1.0, 220.0),
-            filter,
-        },
-        1 => {
-            let ax = rng.uniform_in(0.0, w);
-            let ay = rng.uniform_in(0.0, h);
-            let bx = rng.uniform_in(0.0, w);
-            let by = rng.uniform_in(0.0, h);
-            Query::BoxSearch {
-                x0: ax.min(bx),
-                y0: ay.min(by),
-                x1: ax.max(bx),
-                y1: ay.max(by),
-                filter,
-            }
-        }
-        2 => Query::BrightestN { n: rng.below(120) as usize, filter },
-        _ => Query::CrossMatch {
-            pos: (rng.uniform_in(0.0, w), rng.uniform_in(0.0, h)),
-            radius: rng.uniform_in(0.3, 8.0),
-        },
-    }
 }
 
 /// Acceptance: for any query, the layered engine stack — any tier, any
@@ -62,9 +33,17 @@ fn layered_stacks_match_direct_execution_across_tiers_and_orders() {
 
     for tier_id in 0..4usize {
         for arrangement in 0..4usize {
+            // arrangements alternate the server's request scheduler so
+            // the middleware matrix also covers the work-stealing
+            // batched pool behind the same engine seam
+            let sched = if arrangement % 2 == 0 {
+                SchedConfig::default()
+            } else {
+                SchedConfig { kind: SchedKind::Steal, batch: 4 }
+            };
             let server = Arc::new(Server::start(
                 Arc::clone(&store),
-                ServerConfig { threads: 2, ..Default::default() },
+                ServerConfig { threads: 2, sched, ..Default::default() },
             ));
             let base: Box<dyn QueryEngine> = match tier_id {
                 0 => Box::new(ScanEngine::new(flat.clone())),
@@ -91,7 +70,7 @@ fn layered_stacks_match_direct_execution_across_tiers_and_orders() {
             let mut rng = Rng::new(7 + tier_id as u64 * 13 + arrangement as u64);
             let mut now = 0.0f64;
             for i in 0..40usize {
-                let q = random_query(&mut rng, w, h, i);
+                let q = fuzz_query(&mut rng, w, h, i);
                 let want = execute(&store, &q);
                 for repeat in 0..2 {
                     let resp = engine.call(Request::new(q.clone()).arriving_at(now));

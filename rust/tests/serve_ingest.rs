@@ -12,45 +12,15 @@ use std::sync::Arc;
 use celeste::prng::Rng;
 use celeste::serve::dist::{Router, RouterConfig, Routing};
 use celeste::serve::{
-    self, execute, execute_scan, plan_shards, Admission, Cached, DirectEngine, DriftConfig,
-    DriftGen, Hedged, IngestDriver, Ingestor, Outcome, Query, QueryEngine, Request, RouterEngine,
-    ScanEngine, ServedSource, Server, ServerConfig, ServerEngine, SourceFilter, Store,
-    VersionedStore,
+    self, execute, execute_scan, fuzz_query, plan_shards, Admission, Cached, DirectEngine,
+    DriftConfig, DriftGen, Hedged, IngestDriver, Ingestor, Outcome, Query, QueryEngine, Request,
+    RouterEngine, ScanEngine, ServedSource, Server, ServerConfig, ServerEngine, SourceFilter,
+    Store, VersionedStore,
 };
 
 fn seed_store(n: usize, shards: usize, seed: u64) -> Arc<Store> {
     let snap = serve::snapshot::synthetic(n, seed);
     Arc::new(Store::build(snap.sources, snap.width, snap.height, shards))
-}
-
-fn random_query(rng: &mut Rng, w: f64, h: f64, i: usize) -> Query {
-    let filters = [SourceFilter::Any, SourceFilter::StarsOnly, SourceFilter::GalaxiesOnly];
-    let filter = filters[i % 3];
-    match i % 4 {
-        0 => Query::Cone {
-            center: (rng.uniform_in(-40.0, w + 40.0), rng.uniform_in(-40.0, h + 40.0)),
-            radius: rng.uniform_in(1.0, 220.0),
-            filter,
-        },
-        1 => {
-            let ax = rng.uniform_in(0.0, w);
-            let ay = rng.uniform_in(0.0, h);
-            let bx = rng.uniform_in(0.0, w);
-            let by = rng.uniform_in(0.0, h);
-            Query::BoxSearch {
-                x0: ax.min(bx),
-                y0: ay.min(by),
-                x1: ax.max(bx),
-                y1: ay.max(by),
-                filter,
-            }
-        }
-        2 => Query::BrightestN { n: rng.below(120) as usize, filter },
-        _ => Query::CrossMatch {
-            pos: (rng.uniform_in(0.0, w), rng.uniform_in(0.0, h)),
-            radius: rng.uniform_in(0.3, 8.0),
-        },
-    }
 }
 
 /// Acceptance: run a drift ingestion schedule, then check that every
@@ -114,7 +84,7 @@ fn every_tier_matches_bruteforce_over_the_final_epoch() {
             let mut rng = Rng::new(3 + tier_id as u64 * 11 + arrangement as u64);
             let mut now = t_query;
             for i in 0..30usize {
-                let q = random_query(&mut rng, w, h, i);
+                let q = fuzz_query(&mut rng, w, h, i);
                 let want = execute_scan(&mirror, &q);
                 for repeat in 0..2 {
                     let resp = engine.call(Request::new(q.clone()).arriving_at(now));
@@ -158,7 +128,7 @@ fn pinned_reader_sees_its_epoch_exactly() {
     assert_eq!(versioned.epoch(), 7);
     let mut rng = Rng::new(4);
     for i in 0..40usize {
-        let q = random_query(&mut rng, w, h, i);
+        let q = fuzz_query(&mut rng, w, h, i);
         assert_eq!(
             execute(&pinned.store, &q),
             execute_scan(&frozen, &q),

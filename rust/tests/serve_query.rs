@@ -135,7 +135,7 @@ fn server_returns_exactly_direct_execution_results() {
     let flat = store.all_sources();
     let server = Server::start(
         Arc::clone(&store),
-        ServerConfig { threads: 4, queue_depth: 256 },
+        ServerConfig { threads: 4, queue_depth: 256, ..Default::default() },
     );
     let mut rng = Rng::new(2);
     let mut served = 0;

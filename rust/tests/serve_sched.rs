@@ -1,0 +1,263 @@
+//! Scheduler invariants, pinned across the whole matrix:
+//!
+//! * any scheduler (condvar | steal) × any batch size × any middleware
+//!   order over `ServerEngine` returns byte-identical results to direct
+//!   `query::execute` — including while ingestion publishes epochs
+//!   under the pool (the `--mix drift` shape);
+//! * shutdown in steal mode under concurrent load *drains*: every
+//!   accepted request executes, no worker deadlocks (a watchdog aborts
+//!   the process if shutdown wedges — the Condvar-era bug class this
+//!   refactor must not reintroduce);
+//! * batch-aware admission sheds identically across schedulers;
+//! * the drive/server reports carry coherent scheduler counters.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use celeste::prng::Rng;
+use celeste::serve::{
+    self, execute, fuzz_query, Admission, Cached, DriftConfig, DriftGen, Hedged, Ingestor,
+    LoadGen, LoadGenConfig, Outcome, Query, QueryEngine, Request, SchedConfig, SchedKind, Server,
+    ServerConfig, ServerEngine, SourceFilter, Store, VersionedStore,
+};
+
+fn test_store(n: usize, shards: usize, seed: u64) -> Arc<Store> {
+    let snap = serve::snapshot::synthetic(n, seed);
+    Arc::new(Store::build(snap.sources, snap.width, snap.height, shards))
+}
+
+/// Acceptance: scheduler × batch × middleware order is byte-identical
+/// to `query::execute` (the serve-path contract the whole stack pins).
+#[test]
+fn sched_matrix_matches_direct_execution_across_middleware_orders() {
+    let store = test_store(1500, 8, 71);
+    let (w, h) = (store.width, store.height);
+    let kinds = [SchedKind::Condvar, SchedKind::Steal];
+    for (ki, &kind) in kinds.iter().enumerate() {
+        for batch in [1usize, 7] {
+            for arrangement in 0..3usize {
+                let server = Arc::new(Server::start(
+                    Arc::clone(&store),
+                    ServerConfig {
+                        threads: 3,
+                        sched: SchedConfig { kind, batch },
+                        ..Default::default()
+                    },
+                ));
+                let base: Box<dyn QueryEngine> = Box::new(ServerEngine::new(Arc::clone(&server)));
+                let engine: Box<dyn QueryEngine> = match arrangement {
+                    0 => base,
+                    1 => Box::new(Cached::new(Hedged::new(base, 1e-6), 64)),
+                    _ => Box::new(Admission::new(
+                        Hedged::new(Cached::new(base, 64), 1e-6),
+                        1 << 20,
+                    )),
+                };
+                let mut rng = Rng::new(5 + ki as u64 * 31 + batch as u64 + arrangement as u64);
+                for i in 0..32usize {
+                    let q = fuzz_query(&mut rng, w, h, i);
+                    let want = execute(&store, &q);
+                    for repeat in 0..2 {
+                        let resp = engine.call(Request::new(q.clone()));
+                        assert_eq!(
+                            resp.trace.outcome,
+                            Outcome::Served,
+                            "{kind:?} batch {batch} arrangement {arrangement} query {i} repeat {repeat}"
+                        );
+                        assert_eq!(
+                            resp.result.as_ref().expect("served"),
+                            &want,
+                            "{kind:?} batch {batch} arrangement {arrangement} query {i}: {q:?}"
+                        );
+                    }
+                }
+                let report = server.shutdown();
+                assert_eq!(report.executed, report.accepted, "{kind:?}: drain on shutdown");
+                assert_eq!(report.local_hits + report.steals, report.executed);
+                if kind == SchedKind::Condvar {
+                    assert_eq!(report.steals, 0, "condvar never steals");
+                }
+            }
+        }
+    }
+}
+
+/// Acceptance: steal-mode batched parity holds *during ingestion* — a
+/// live versioned store publishing drift epochs between calls (the
+/// `--mix drift` shape) still answers byte-identically to a direct
+/// execute over the epoch current at submit time.
+#[test]
+fn steal_parity_holds_under_ingestion() {
+    let store = test_store(1000, 6, 83);
+    let (w, h) = (store.width, store.height);
+    let vs = Arc::new(VersionedStore::new(Arc::clone(&store)));
+    let server = Arc::new(Server::start_live(
+        Arc::clone(&vs),
+        ServerConfig {
+            threads: 2,
+            sched: SchedConfig { kind: SchedKind::Steal, batch: 5 },
+            ..Default::default()
+        },
+    ));
+    let engine = ServerEngine::new(Arc::clone(&server));
+    let mut drift = DriftGen::new(
+        &store.all_sources(),
+        w,
+        h,
+        DriftConfig { batch: 24, seed: 99, ..Default::default() },
+    );
+    let mut ingestor = Ingestor::new(Arc::clone(&vs));
+    let mut rng = Rng::new(17);
+    for round in 0..12usize {
+        // publish a drift epoch, then read against the new head
+        let rep = ingestor.apply(&drift.next_batch());
+        assert_eq!(rep.epoch, round as u64 + 1);
+        let head = vs.load();
+        for i in 0..6usize {
+            let q = fuzz_query(&mut rng, w, h, round * 6 + i);
+            let want = execute(&head.store, &q);
+            let resp = engine.call(Request::new(q.clone()));
+            assert_eq!(resp.trace.outcome, Outcome::Served, "round {round} query {i}");
+            assert_eq!(resp.result.expect("served"), want, "round {round} query {i}: {q:?}");
+        }
+    }
+    let report = server.shutdown();
+    assert_eq!(report.executed, 72);
+    assert_eq!(report.executed, report.accepted);
+}
+
+/// Satellite acceptance: dropping the server mid-load in steal mode
+/// loses nothing — every accepted request is executed (drained, not
+/// discarded) and every in-flight closed-loop caller gets an answer.
+/// A watchdog aborts the process if shutdown wedges, so a deadlock is
+/// a loud CI failure instead of a hung job.
+#[test]
+fn steal_shutdown_mid_load_drains_accepted_requests() {
+    let store = test_store(2000, 8, 123);
+    let (w, h) = (store.width, store.height);
+    let server = Arc::new(Server::start(
+        Arc::clone(&store),
+        ServerConfig {
+            threads: 4,
+            // bounded: the post-shutdown drain is at most one queue's
+            // worth of work, so the test stays fast on slow runners
+            queue_depth: 1 << 16,
+            sched: SchedConfig { kind: SchedKind::Steal, batch: 8 },
+        },
+    ));
+    let done = Arc::new(AtomicBool::new(false));
+    {
+        let done = Arc::clone(&done);
+        std::thread::spawn(move || {
+            for _ in 0..600 {
+                std::thread::sleep(Duration::from_millis(100));
+                if done.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            eprintln!("steal_shutdown_mid_load: shutdown deadlocked, aborting");
+            std::process::abort();
+        });
+    }
+    let stop = AtomicBool::new(false);
+    let report = std::thread::scope(|scope| {
+        // open-loop submitters hammering try_submit
+        for c in 0..3u64 {
+            let server = &server;
+            let stop = &stop;
+            scope.spawn(move || {
+                let cfg = LoadGenConfig::scenario("hotspot", 1000 + c).unwrap();
+                let mut gen = LoadGen::new(cfg, w, h);
+                while !stop.load(Ordering::Relaxed) {
+                    let _ = server.try_submit(gen.next_query());
+                }
+            });
+        }
+        // closed-loop callers that must never hang
+        for c in 0..2u64 {
+            let server = &server;
+            let stop = &stop;
+            scope.spawn(move || {
+                let cfg = LoadGenConfig::scenario("uniform", 2000 + c).unwrap();
+                let mut gen = LoadGen::new(cfg, w, h);
+                while !stop.load(Ordering::Relaxed) {
+                    // accepted => a result must arrive; shed => None
+                    let _ = server.call(gen.next_query());
+                }
+            });
+        }
+        std::thread::sleep(Duration::from_millis(40));
+        // shutdown races the submitters on purpose: mid-load drop
+        let report = server.shutdown();
+        stop.store(true, Ordering::SeqCst);
+        report
+    });
+    done.store(true, Ordering::SeqCst);
+    assert!(report.accepted > 0, "load never reached the server");
+    assert_eq!(
+        report.executed, report.accepted,
+        "shutdown must drain every accepted request (shed {})",
+        report.shed
+    );
+    assert_eq!(report.local_hits + report.steals, report.executed);
+}
+
+/// Satellite acceptance: admission accounting is scheduler-independent
+/// — with no workers draining, both schedulers shed exactly the same
+/// requests at the same depth, and batching cannot widen the bound.
+#[test]
+fn admission_sheds_identically_across_schedulers_and_batches() {
+    for kind in [SchedKind::Condvar, SchedKind::Steal] {
+        for batch in [1usize, 16] {
+            let store = test_store(60, 3, 5);
+            let cfg = ServerConfig {
+                threads: 0,
+                queue_depth: 6,
+                sched: SchedConfig { kind, batch },
+            };
+            let server = Server::start(store, cfg);
+            let q = Query::BrightestN { n: 2, filter: SourceFilter::Any };
+            let mut ok = 0;
+            for _ in 0..15 {
+                if server.try_submit(q.clone()) {
+                    ok += 1;
+                }
+            }
+            assert_eq!(ok, 6, "{kind:?} batch {batch}");
+            assert_eq!(server.queue_len(), 6, "{kind:?} batch {batch}");
+            let report = server.shutdown();
+            assert_eq!(report.accepted, 6, "{kind:?} batch {batch}");
+            assert_eq!(report.shed, 9, "{kind:?} batch {batch}");
+        }
+    }
+}
+
+/// The drive report surfaces the scheduler counters after a driven run
+/// (the same numbers `serve-bench` prints and `bench_serve` records).
+#[test]
+fn drive_report_carries_scheduler_counters() {
+    let store = test_store(800, 6, 42);
+    let (w, h) = (store.width, store.height);
+    let server = Arc::new(Server::start(
+        Arc::clone(&store),
+        ServerConfig {
+            threads: 2,
+            sched: SchedConfig { kind: SchedKind::Steal, batch: 4 },
+            ..Default::default()
+        },
+    ));
+    let engine = ServerEngine::new(Arc::clone(&server));
+    let cfg = LoadGenConfig { burst: 4, ..LoadGenConfig::scenario("hotspot", 7).unwrap() };
+    let mut gen = LoadGen::new(cfg, w, h);
+    let mut drive = serve::drive_closed_loop(&engine, &mut gen, 4, 0.3);
+    let report = server.shutdown();
+    drive.absorb_server(&report);
+    assert!(drive.completed > 0);
+    assert_eq!(drive.local_hits + drive.steals, report.executed);
+    assert_eq!(drive.batches, report.batches);
+    assert!(drive.batches > 0);
+    assert_eq!(drive.batch_size.n, report.batches);
+    let summary = drive.summary();
+    assert!(summary.contains("sched:"), "{summary}");
+}
