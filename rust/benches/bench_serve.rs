@@ -18,10 +18,11 @@ use celeste::experiments::obj_pub;
 use celeste::jsonlite::{self, Value};
 use celeste::serve::dist::{DistReport, FailureSchedule, Router, RouterConfig, Routing};
 use celeste::serve::{
-    self, drive_closed_loop, drive_open_loop, drive_open_loop_with, Cached, Consistency,
-    Consistent, DriftConfig, DriftGen, DriveReport, Hedged, IngestDriver, Ingestor, LoadGen,
-    LoadGenConfig, Query, QueryEngine, RouterEngine, SchedConfig, SchedKind, Server,
-    ServerConfig, ServerEngine, SimClock, SourceFilter, Store, VersionedStore, WallClock,
+    self, drive_closed_loop, drive_open_loop, drive_open_loop_with, metric, Cached, Consistency,
+    Consistent, DirectEngine, DriftConfig, DriftGen, DriveReport, Hedged, IngestDriver, Ingestor,
+    LoadGen, LoadGenConfig, NetRouterEngine, Query, QueryEngine, Request, RouterEngine,
+    SchedConfig, SchedKind, Server, ServerConfig, ServerEngine, ShardServer, SimClock,
+    SourceFilter, Store, VersionedStore, WallClock,
 };
 
 const DIST_NODES: usize = 6;
@@ -86,6 +87,15 @@ fn drift_drive<E: QueryEngine>(
     });
     let (publishes, rows) = driver.as_ref().map(|d| (d.publishes, d.rows)).unwrap_or((0, 0));
     (drive, publishes, rows)
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice.
+fn pctl(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let i = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[i]
 }
 
 fn main() {
@@ -395,13 +405,78 @@ fn main() {
         fo_max_ms
     );
 
+    // --- real-socket transport: the identical hotspot query stream
+    //     through in-process planning (sim) vs framed TCP to local
+    //     shard-server threads, at 1/4/8 servers, wall clock; parity
+    //     is asserted per query, codec cost comes from the client's
+    //     own encode/decode counters ---
+    println!("== transport: sim vs tcp, localhost shard servers (wall clock) ==");
+    const NET_QUERIES: usize = 600;
+    let mut transport_rows: Vec<Value> = Vec::new();
+    let mut transport_parity = true;
+    for n_servers in [1usize, 4, 8] {
+        let mut handles = Vec::new();
+        let mut addrs = Vec::new();
+        for _ in 0..n_servers {
+            let s =
+                ShardServer::bind(Arc::clone(&store), "127.0.0.1:0").expect("bind shard server");
+            addrs.push(s.local_addr().to_string());
+            handles.push(s.spawn());
+        }
+        let replicas = 2.min(n_servers);
+        let net = NetRouterEngine::connect(Arc::clone(&store), &addrs, replicas)
+            .expect("connect to shard servers");
+        let direct = DirectEngine::new(Arc::clone(&store));
+        let cfg = LoadGenConfig::scenario("hotspot", 4242).unwrap();
+        let mut gen = LoadGen::new(cfg, w, h);
+        let queries: Vec<Query> = (0..NET_QUERIES).map(|_| gen.next_query()).collect();
+        let mut sim_lat = Vec::with_capacity(NET_QUERIES);
+        let mut tcp_lat = Vec::with_capacity(NET_QUERIES);
+        for q in &queries {
+            let t = std::time::Instant::now();
+            let sim = direct.call(Request::new(q.clone()));
+            sim_lat.push(t.elapsed().as_secs_f64());
+            let t = std::time::Instant::now();
+            let tcp = net.call(Request::new(q.clone()));
+            tcp_lat.push(t.elapsed().as_secs_f64());
+            transport_parity &= tcp.result.is_some() && sim.result == tcp.result;
+        }
+        sim_lat.sort_by(|a, b| a.total_cmp(b));
+        tcp_lat.sort_by(|a, b| a.total_cmp(b));
+        let enc_us = metric(&net, "net_encode_us_per_frame").unwrap_or(0.0);
+        let dec_us = metric(&net, "net_decode_us_per_frame").unwrap_or(0.0);
+        println!(
+            "  {n_servers} server(s) x{replicas}: sim p50={:>7.3}ms p99={:>7.3}ms | tcp p50={:>7.3}ms p99={:>7.3}ms | enc={:.1}us dec={:.1}us/frame",
+            pctl(&sim_lat, 0.50) * 1e3,
+            pctl(&sim_lat, 0.99) * 1e3,
+            pctl(&tcp_lat, 0.50) * 1e3,
+            pctl(&tcp_lat, 0.99) * 1e3,
+            enc_us,
+            dec_us
+        );
+        transport_rows.push(obj_pub(vec![
+            ("servers", Value::Num(n_servers as f64)),
+            ("replicas", Value::Num(replicas as f64)),
+            ("sim_p50_ms", Value::Num(pctl(&sim_lat, 0.50) * 1e3)),
+            ("sim_p99_ms", Value::Num(pctl(&sim_lat, 0.99) * 1e3)),
+            ("tcp_p50_ms", Value::Num(pctl(&tcp_lat, 0.50) * 1e3)),
+            ("tcp_p99_ms", Value::Num(pctl(&tcp_lat, 0.99) * 1e3)),
+            ("encode_us_per_req", Value::Num(enc_us)),
+            ("decode_us_per_req", Value::Num(dec_us)),
+        ]));
+    }
+    println!(
+        "tcp answers byte-identical to in-process execution: {}",
+        if transport_parity { "YES" } else { "NO" }
+    );
+
     // --- machine-readable results ---
     let single_fields: Vec<(&str, Value)> = singles
         .iter()
         .map(|r| (r.name.as_str(), Value::Num(r.ns_per_iter)))
         .collect();
     let json = obj_pub(vec![
-        ("schema", Value::Str("celeste-bench-serve-v4".to_string())),
+        ("schema", Value::Str("celeste-bench-serve-v5".to_string())),
         ("single_query_ns", obj_pub(single_fields)),
         (
             "scheduler",
@@ -498,6 +573,15 @@ fn main() {
                     "fresh_catchup_stalls",
                     Value::Num(f_rep.stale_waits.n as f64),
                 ),
+            ]),
+        ),
+        (
+            "transport",
+            obj_pub(vec![
+                ("mix", Value::Str("hotspot".to_string())),
+                ("queries_per_point", Value::Num(NET_QUERIES as f64)),
+                ("per_servers", Value::Arr(transport_rows)),
+                ("parity", Value::Bool(transport_parity)),
             ]),
         ),
         (

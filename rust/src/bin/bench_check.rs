@@ -50,9 +50,10 @@ const GATES: [Gate; 8] = [
 ];
 
 /// Acceptance booleans that must be true in the fresh run.
-const REQUIRED_TRUE: [(&str, &str); 2] = [
+const REQUIRED_TRUE: [(&str, &str); 3] = [
     ("dist.p2c_beats_random", "p2c beats random routing on hotspot p99"),
     ("failover.zero_failed", "zero failed queries through a replica kill"),
+    ("transport.parity", "tcp transport byte-identical to in-process execution"),
 ];
 
 /// Reported (never gated) booleans — wall-clock, runner-dependent.
@@ -105,6 +106,63 @@ fn check_scheduler_8w(fresh: &Value, slack_pct: f64, md: &mut String, failures: 
         _ => {
             failures.push("scheduler 8-worker p99 values missing or non-numeric".to_string());
             md.push_str("| steal vs condvar p99, 8 workers | — | **missing** | — | ❌ |\n");
+        }
+    }
+}
+
+/// Per-frame codec budget, microseconds. Encode/decode cost is wall
+/// clock, so it is not baselined; this absolute bound is deliberately
+/// enormous (a millisecond to frame one request) — it passes any
+/// runner weather and fails only a pathologically regressed codec
+/// (accidental quadratic copy, per-field allocation storm).
+const CODEC_BUDGET_US: f64 = 1000.0;
+
+/// The transport section must cover every server count the bench
+/// promises (1/4/8) with numeric sim/tcp tails and codec costs, and
+/// the codec must fit [`CODEC_BUDGET_US`]. Tails themselves are
+/// wall-clock and therefore reported, never gated.
+fn check_transport(fresh: &Value, md: &mut String, failures: &mut Vec<String>) {
+    let rows = lookup(fresh, "transport.per_servers").and_then(Value::as_arr);
+    let Some(rows) = rows else {
+        failures.push("transport.per_servers missing from the fresh bench output".to_string());
+        md.push_str("| transport sim vs tcp | — | **missing** | — | ❌ |\n");
+        return;
+    };
+    for want in [1.0, 4.0, 8.0] {
+        let row = rows
+            .iter()
+            .find(|r| r.get("servers").and_then(Value::as_f64) == Some(want));
+        let Some(row) = row else {
+            failures.push(format!("transport.per_servers has no {want}-server row"));
+            md.push_str(&format!(
+                "| transport @ {want} server(s) | — | **missing** | — | ❌ |\n"
+            ));
+            continue;
+        };
+        let get = |k: &str| row.get(k).and_then(Value::as_f64);
+        match (get("sim_p99_ms"), get("tcp_p99_ms"), get("encode_us_per_req"), get("decode_us_per_req")) {
+            (Some(sim), Some(tcp), Some(enc), Some(dec)) => {
+                let codec_ok = enc <= CODEC_BUDGET_US && dec <= CODEC_BUDGET_US;
+                if !codec_ok {
+                    failures.push(format!(
+                        "transport codec cost at {want} server(s) blew the {CODEC_BUDGET_US:.0}us \
+                         budget (encode {enc:.1}us, decode {dec:.1}us)"
+                    ));
+                }
+                md.push_str(&format!(
+                    "| transport p99 @ {want} server(s), sim vs tcp | {sim:.3} ms | {tcp:.3} ms | \
+                     enc {enc:.1}us dec {dec:.1}us | {} |\n",
+                    if codec_ok { "✅ (tails informational)" } else { "❌ codec budget" }
+                ));
+            }
+            _ => {
+                failures.push(format!(
+                    "transport row at {want} server(s) is missing numeric tails or codec costs"
+                ));
+                md.push_str(&format!(
+                    "| transport @ {want} server(s) | — | **incomplete** | — | ❌ |\n"
+                ));
+            }
         }
     }
 }
@@ -211,6 +269,7 @@ fn main() -> Result<()> {
         }
     }
     check_scheduler_8w(&fresh, SCHED_8W_SLACK_PCT, &mut md, &mut failures);
+    check_transport(&fresh, &mut md, &mut failures);
     for (path, label) in &INFORMATIONAL {
         let got = lookup(&fresh, path).and_then(Value::as_bool);
         md.push_str(&format!(

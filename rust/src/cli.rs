@@ -70,6 +70,26 @@ impl Cli {
     pub fn flag_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
         self.flag(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
+
+    /// Parse a count-valued flag with validation: absent uses
+    /// `default`; present must parse as an integer and be at least
+    /// `min`. Unlike [`flag_parse`](Cli::flag_parse) — whose silent
+    /// fall-back-to-default turns `--threads -3` or `--shards x` into
+    /// a quietly different run — degenerate values (zero where a
+    /// positive count is required, negative, or non-numeric) are a
+    /// clear error naming the flag.
+    pub fn flag_count(&self, key: &str, default: usize, min: usize) -> Result<usize, String> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(raw) => match raw.parse::<usize>() {
+                Ok(v) if v >= min => Ok(v),
+                Ok(v) => Err(format!("--{key} must be at least {min}, got {v}")),
+                Err(_) => Err(format!(
+                    "--{key} must be a non-negative integer, got {raw:?}"
+                )),
+            },
+        }
+    }
 }
 
 #[cfg(test)]
@@ -115,5 +135,30 @@ mod tests {
     fn empty_args() {
         let c = Cli::parse(std::iter::empty());
         assert_eq!(c.command, "");
+    }
+
+    #[test]
+    fn flag_count_accepts_valid_and_absent() {
+        let c = cli("serve-bench --threads 4 --dist-nodes 0");
+        assert_eq!(c.flag_count("threads", 1, 1), Ok(4));
+        assert_eq!(c.flag_count("missing", 8, 1), Ok(8));
+        // zero is legal when the floor allows it (--dist-nodes 0 = tier off)
+        assert_eq!(c.flag_count("dist-nodes", 0, 0), Ok(0));
+    }
+
+    #[test]
+    fn flag_count_rejects_degenerate_values_with_a_clear_error() {
+        // note: "-3" is consumed as the flag's value by the parser, and
+        // flag_parse would silently fall back to the default — exactly
+        // the quiet misconfiguration flag_count exists to reject
+        let c = cli("serve-bench --threads -3 --shards 0 --replicas x --burst 1.5");
+        let err = c.flag_count("threads", 4, 1).unwrap_err();
+        assert!(err.contains("--threads") && err.contains("-3"), "{err}");
+        let err = c.flag_count("shards", 8, 1).unwrap_err();
+        assert!(err.contains("--shards") && err.contains("at least 1"), "{err}");
+        let err = c.flag_count("replicas", 1, 1).unwrap_err();
+        assert!(err.contains("--replicas"), "{err}");
+        let err = c.flag_count("burst", 1, 1).unwrap_err();
+        assert!(err.contains("--burst"), "{err}");
     }
 }

@@ -6,6 +6,7 @@
 //!   infer     --data DIR [...]         run Bayesian inference (phases 1-3)
 //!   photo     --data DIR [--coadd]     run the heuristic baseline
 //!   serve-bench [...]                  benchmark the catalog serving path
+//!   shard-server --snapshot F [...]    serve one catalog partition over TCP
 //!   experiment NAME [--quick] [...]    regenerate a paper table/figure
 //!       NAME ∈ fig1 | fig3 | fig4 | fig5 | fig6 | table1 | newton-vs-lbfgs | all
 
@@ -31,6 +32,7 @@ fn main() -> Result<()> {
         "infer" => cmd_infer(&cli),
         "photo" => cmd_photo(&cli),
         "serve-bench" => cmd_serve_bench(&cli),
+        "shard-server" => cmd_shard_server(&cli),
         "experiment" => cmd_experiment(&cli),
         "" | "help" | "--help" => {
             print!("{}", HELP);
@@ -104,6 +106,22 @@ USAGE: celeste <command> [flags]
            router-cache hit rate, hedge counts, and (with --ingest-qps)
            epochs shipped, cache invalidations, and stale-replica
            refusals.
+           Real-socket transport (multi-process, wall clock):
+           [--transport T] sim | tcp (default sim). tcp spawns
+                           --dist-nodes local shard-server child
+                           processes and serves the same query stream
+                           over the length-prefixed binary wire
+                           protocol (docs/WIRE.md); --routing and
+                           --hedge-ms/--hedge-budget stay sim-only,
+                           --kill-node kills the real child process
+                           (revive specs are rejected), and ingest
+                           publishes ship over the wire to every
+                           server before the front-end epoch advances
+  shard-server --snapshot F        serve one catalog partition over TCP
+           [--shards K]    shard count (default 8; must match the
+                           front-end's --shards)
+           [--listen A]    bind address (default 127.0.0.1:0); prints
+                           'shard-server listening on ADDR' when ready
   experiment NAME [--quick]        regenerate a paper table/figure:
            fig1 fig3 fig4 fig5 fig6 ablations table1 newton-vs-lbfgs all
 ";
@@ -322,7 +340,28 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
     // that pool with the simulated multi-node tier. Naming both is a
     // contradiction we refuse rather than guess about (--dist-nodes 0
     // keeps its historical meaning: distributed tier off).
-    let dist = cli.flag_usize("dist-nodes", 0) > 0;
+    let transport = cli.flag_str("transport", "sim");
+    if !matches!(transport, "sim" | "tcp") {
+        bail!("bad --transport {transport:?}: want sim|tcp");
+    }
+    let tcp = transport == "tcp";
+    let dist = cli.flag_count("dist-nodes", 0, 0).map_err(|e| anyhow::anyhow!(e))? > 0;
+    if tcp && !dist {
+        bail!(
+            "--transport tcp spawns real shard-server processes; say how many with \
+             --dist-nodes N (N >= 1)"
+        );
+    }
+    if tcp {
+        for key in ["routing", "hedge-ms", "hedge-budget"] {
+            if cli.flag(key).is_some() {
+                bail!(
+                    "--{key} configures the simulated fabric tier; the tcp transport \
+                     measures real sockets and does not take it"
+                );
+            }
+        }
+    }
     if dist && cli.flag("threads").is_some() {
         bail!(
             "--threads and --dist-nodes contradict: --threads sizes the single-host worker \
@@ -358,19 +397,23 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
     if cli.flag("hedge-budget").is_some() && cli.flag("hedge-ms").is_none() {
         bail!("--hedge-budget caps the hedge layer; add --hedge-ms B to enable hedging");
     }
-    let threads = cli.flag_usize("threads", 4).max(1);
-    let shards = cli.flag_usize("shards", 8);
+    // counts are validated, not silently clamped: `--threads 0` (or a
+    // negative / non-numeric value the old parser defaulted away) is a
+    // misconfiguration the user should hear about
+    let count = |key, default, min| cli.flag_count(key, default, min).map_err(anyhow::Error::msg);
+    let threads = count("threads", 4, 1)?;
+    let shards = count("shards", 8, 1)?;
     let qps = cli.flag_parse("qps", 2000.0f64);
     let secs = cli.flag_parse("secs", 3.0f64).max(0.1);
     let mix = cli.flag_str("mix", "uniform");
     let seed = cli.flag_u64("seed", 42);
-    let n_sources = cli.flag_usize("sources", 5000);
+    let n_sources = count("sources", 5000, 1)?;
     let sched_s = cli.flag_str("sched", "condvar");
     let Some(sched_kind) = serve::SchedKind::parse(sched_s) else {
         bail!("bad --sched {sched_s:?}: want condvar|steal");
     };
-    let sched = serve::SchedConfig { kind: sched_kind, batch: cli.flag_usize("batch", 1).max(1) };
-    let burst = cli.flag_usize("burst", 1).max(1);
+    let sched = serve::SchedConfig { kind: sched_kind, batch: count("batch", 1, 1)? };
+    let burst = count("burst", 1, 1)?;
     let spec = serve::LayerSpec {
         admit_depth: cli.flag_usize("queue-depth", 1024),
         cache_entries: cli.flag_usize("cache", 512),
@@ -387,13 +430,18 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
     println!("{}", store.summary());
     let gen_cfg = serve::LoadGenConfig { burst, ..loadgen_config(mix, seed)? };
 
-    // --- distributed tier (simulated time) when --dist-nodes is set ---
+    // --- distributed tier when --dist-nodes is set: simulated fabric
+    //     by default, real shard-server processes with --transport tcp ---
     if dist {
-        return cmd_serve_bench_dist(cli, store, gen_cfg, &spec, qps, secs, seed);
+        return if tcp {
+            cmd_serve_bench_tcp(cli, store, gen_cfg, &spec, shards, qps, secs, seed)
+        } else {
+            cmd_serve_bench_dist(cli, store, gen_cfg, &spec, qps, secs, seed)
+        };
     }
     let consistency = parse_consistency(cli)?;
     let ingest_qps = cli.flag_parse("ingest-qps", 0.0f64).max(0.0);
-    let ingest_batch = cli.flag_usize("ingest-batch", 32).max(1);
+    let ingest_batch = count("ingest-batch", 32, 1)?;
 
     // --- phase 1: open loop (latency + admission control at --qps).
     //     Admission is a middleware layer now; the server's own queue
@@ -527,8 +575,8 @@ fn cmd_serve_bench_dist(
     secs: f64,
     seed: u64,
 ) -> Result<()> {
-    let nodes = cli.flag_usize("dist-nodes", 4).max(1);
-    let replicas = cli.flag_usize("replicas", 2).max(1);
+    let nodes = cli.flag_count("dist-nodes", 4, 1).map_err(anyhow::Error::msg)?;
+    let replicas = cli.flag_count("replicas", 2, 1).map_err(anyhow::Error::msg)?;
     if replicas > nodes {
         bail!(
             "--replicas {replicas} exceeds --dist-nodes {nodes}: a shard cannot have more \
@@ -561,7 +609,7 @@ fn cmd_serve_bench_dist(
     };
     let consistency = parse_consistency(cli)?;
     let ingest_qps = cli.flag_parse("ingest-qps", 0.0f64).max(0.0);
-    let ingest_batch = cli.flag_usize("ingest-batch", 32).max(1);
+    let ingest_batch = cli.flag_count("ingest-batch", 32, 1).map_err(anyhow::Error::msg)?;
     // the sim tier models backlog as latency; an admission layer on top
     // would just re-shed what the queue model absorbs, so the dist
     // stack is cache + hedge over the router
@@ -661,6 +709,209 @@ fn cmd_serve_bench_dist(
             phase_stats[1].2 * 100.0
         );
     }
+    Ok(())
+}
+
+/// The tcp transport: the same replicated scatter-gather story as the
+/// simulated tier, but measured instead of modeled — real shard-server
+/// child processes, real sockets, real serialization, driven on the
+/// wall clock. `--kill-node` kills the actual child process mid-run;
+/// with replication R the run absorbs up to R-1 deaths with zero
+/// failed queries. This wrapper owns the child processes and the
+/// snapshot temp file so every exit path (including errors mid-spawn)
+/// reaps and removes them.
+fn cmd_serve_bench_tcp(
+    cli: &Cli,
+    store: std::sync::Arc<serve::Store>,
+    gen_cfg: serve::LoadGenConfig,
+    spec: &serve::LayerSpec,
+    shards: usize,
+    qps: f64,
+    secs: f64,
+    seed: u64,
+) -> Result<()> {
+    let snap_path =
+        std::env::temp_dir().join(format!("celeste-serve-{}.json", std::process::id()));
+    serve::snapshot::save(&snap_path, &store)?;
+    let mut children: Vec<std::process::Child> = Vec::new();
+    let result =
+        drive_serve_tcp(cli, store, gen_cfg, spec, shards, qps, secs, seed, &snap_path, &mut children);
+    // --kill-node may have killed some already; reap everything either way
+    for child in &mut children {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+    std::fs::remove_file(&snap_path).ok();
+    result
+}
+
+#[allow(clippy::too_many_arguments)]
+fn drive_serve_tcp(
+    cli: &Cli,
+    store: std::sync::Arc<serve::Store>,
+    gen_cfg: serve::LoadGenConfig,
+    spec: &serve::LayerSpec,
+    shards: usize,
+    qps: f64,
+    secs: f64,
+    seed: u64,
+    snap_path: &std::path::Path,
+    children: &mut Vec<std::process::Child>,
+) -> Result<()> {
+    use std::io::BufRead;
+
+    let nodes = cli.flag_count("dist-nodes", 1, 1).map_err(anyhow::Error::msg)?;
+    let replicas = cli.flag_count("replicas", 2, 1).map_err(anyhow::Error::msg)?;
+    if replicas > nodes {
+        bail!(
+            "--replicas {replicas} exceeds --dist-nodes {nodes}: a shard cannot have more \
+             replicas than there are shard servers to hold them. Lower --replicas or raise \
+             --dist-nodes."
+        );
+    }
+    let schedule = match cli.flag("kill-node") {
+        Some(kill_spec) => {
+            let Some(schedule) = serve::dist::FailureSchedule::parse(kill_spec) else {
+                bail!("bad --kill-node {kill_spec:?}: want 'NODE@T', comma-separated");
+            };
+            if schedule.has_revive() {
+                bail!(
+                    "--kill-node revive specs (NODE@T1:T2) only apply to the simulated tier: \
+                     a killed shard-server process cannot be restarted mid-run"
+                );
+            }
+            if let Some(max) = schedule.max_node() {
+                if max >= nodes {
+                    bail!(
+                        "--kill-node names node {max}, but --dist-nodes is {nodes} (ids 0..{})",
+                        nodes - 1
+                    );
+                }
+            }
+            Some(schedule)
+        }
+        None => None,
+    };
+    let consistency = parse_consistency(cli)?;
+    let ingest_qps = cli.flag_parse("ingest-qps", 0.0f64).max(0.0);
+    let ingest_batch = cli.flag_count("ingest-batch", 32, 1).map_err(anyhow::Error::msg)?;
+    // same stack shape as the sim tier: cache + hedge-free layers over
+    // the router, no admission bound (the sockets backpressure instead)
+    let dist_spec = serve::LayerSpec { admit_depth: 0, ..spec.clone() };
+
+    // every shard server loads the snapshot and builds an identical
+    // store, so shard indices agree across the process boundary
+    let exe = std::env::current_exe()?;
+    let mut addrs: Vec<String> = Vec::new();
+    for _ in 0..nodes {
+        let mut child = std::process::Command::new(&exe)
+            .arg("shard-server")
+            .arg("--snapshot")
+            .arg(snap_path)
+            .args(["--shards", &shards.to_string(), "--listen", "127.0.0.1:0"])
+            .stdout(std::process::Stdio::piped())
+            .spawn()?;
+        let stdout = child.stdout.take().expect("stdout is piped");
+        children.push(child);
+        let mut line = String::new();
+        std::io::BufReader::new(stdout).read_line(&mut line)?;
+        let addr = line
+            .trim()
+            .rsplit(' ')
+            .next()
+            .filter(|a| a.contains(':'))
+            .ok_or_else(|| anyhow::anyhow!("shard-server announced no address (got {line:?})"))?;
+        addrs.push(addr.to_string());
+    }
+
+    let net = serve::NetRouterEngine::connect(std::sync::Arc::clone(&store), &addrs, replicas)?;
+    println!("{}", net.placement().summary());
+    let mut engine = serve::layered(Box::new(net.clone()), &dist_spec);
+    if let Some(c) = consistency {
+        engine = Box::new(serve::Consistent::new(engine, c));
+    }
+    println!("engine: {}", engine.describe());
+    println!("spawned {nodes} shard-server process(es), {shards} shards x{replicas} replicas");
+
+    let mut driver = if ingest_qps > 0.0 {
+        let versioned =
+            std::sync::Arc::new(serve::VersionedStore::new(std::sync::Arc::clone(&store)));
+        Some(make_ingest_driver(&versioned, ingest_qps, ingest_batch, seed))
+    } else {
+        None
+    };
+    let events: Vec<serve::dist::FailureEvent> =
+        schedule.map(|s| s.events().to_vec()).unwrap_or_default();
+    let mut next_event = 0;
+    let publisher = net.clone();
+    let mut gen = serve::LoadGen::new(gen_cfg, store.width, store.height);
+    let mut clock = serve::WallClock::start();
+    let drive = serve::drive_open_loop_with(&engine, &mut clock, &mut gen, qps, secs, |at| {
+        while next_event < events.len() && events[next_event].at <= at {
+            let ev = events[next_event];
+            next_event += 1;
+            if let Some(child) = children.get_mut(ev.node) {
+                let _ = child.kill();
+                println!("killed shard-server {} at t={:.2}s", ev.node, at);
+            }
+        }
+        if let Some(d) = driver.as_mut() {
+            for rep in d.tick(at) {
+                publisher.publish(&rep);
+            }
+        }
+    });
+
+    println!(
+        "tcp transport: offered {:.0} qps for {:.1}s over {nodes} server(s)",
+        drive.offered_qps(),
+        drive.arrival_secs
+    );
+    println!("{}", drive.summary());
+    let m: std::collections::BTreeMap<String, f64> = net.metrics().into_iter().collect();
+    println!(
+        "wire: {:.0} frame(s), {:.3} MB sent, {:.3} MB recv, {:.0} reconnect(s), \
+         {:.0} failover(s), encode {:.1}us decode {:.1}us per frame",
+        m["net_frames"],
+        m["net_bytes_sent"] / 1e6,
+        m["net_bytes_recv"] / 1e6,
+        m["net_reconnects"],
+        m["net_failovers"],
+        m["net_encode_us_per_frame"],
+        m["net_decode_us_per_frame"]
+    );
+    if let Some(d) = &driver {
+        println!(
+            "ingest: {} publish(es) shipped to every live server, head at epoch {}",
+            d.publishes,
+            d.ingestor().versioned().epoch()
+        );
+    }
+    // the CI smoke greps this exact line: replication must absorb the
+    // scheduled kills with nothing lost
+    println!("failed_queries={}", m["net_failed"] as u64);
+    Ok(())
+}
+
+/// The shard-server child process: load a snapshot, build the store,
+/// and answer wire-protocol frames until killed. The parent parses the
+/// announced-address line to learn the kernel-chosen port.
+fn cmd_shard_server(cli: &Cli) -> Result<()> {
+    let Some(snap_path) = cli.flag("snapshot") else {
+        bail!(
+            "shard-server needs --snapshot FILE (written by `infer --snapshot`, \
+             `photo --snapshot`, or the serve-bench tcp driver)"
+        );
+    };
+    let shards = cli.flag_count("shards", 8, 1).map_err(anyhow::Error::msg)?;
+    let listen = cli.flag_str("listen", "127.0.0.1:0");
+    let snap = serve::snapshot::load(std::path::Path::new(snap_path))?;
+    let store = std::sync::Arc::new(snap.into_store(shards));
+    let server = serve::ShardServer::bind(store, listen)?;
+    println!("shard-server listening on {}", server.local_addr());
+    use std::io::Write;
+    std::io::stdout().flush().ok();
+    server.run();
     Ok(())
 }
 

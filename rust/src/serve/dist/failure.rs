@@ -41,6 +41,19 @@ impl FailureSchedule {
         self.events.iter().map(|e| e.node).max()
     }
 
+    /// The time-ordered events. The tcp transport drives *real* child
+    /// process kills from the same parsed schedule the simulated tier
+    /// consumes through [`apply`](FailureSchedule::apply).
+    pub fn events(&self) -> &[FailureEvent] {
+        &self.events
+    }
+
+    /// True if any event is a revive — the tcp transport can kill a
+    /// child process but not restart one, so it rejects these up front.
+    pub fn has_revive(&self) -> bool {
+        self.events.iter().any(|e| e.up)
+    }
+
     /// Parse a CLI spec: comma-separated `NODE@T` (kill node NODE at
     /// simulated second T) or `NODE@T1:T2` (kill at T1, revive at T2).
     /// Examples: `3@0.5`, `0@1.0:2.0,4@1.5`.

@@ -27,6 +27,13 @@
 //! drive it with [`crate::serve::engine::drive_open_loop`] on a
 //! simulated clock.
 //!
+//! The model now has a measured counterpart: `crate::serve::net`
+//! implements the same placement/scatter/failover shape over real
+//! sockets (its `NetShardClient` implements [`ShardClient`], and
+//! `serve-bench --transport tcp` swaps the tiers), so every cost the
+//! fabric model assumes — serialization, kernel round trips, reconnect
+//! — is benchmarked against the simulation that predicted it.
+//!
 //! Entry point: `celeste serve-bench --dist-nodes N --replicas R
 //! --routing {random,rr,p2c} [--kill-node K@T]`.
 

@@ -1,8 +1,10 @@
 //! The serving tiers, ported onto [`QueryEngine`]: brute-force scan,
 //! direct sharded execution, the wall-clock worker-pool server, and the
-//! simulated-time distributed router. Every future tier (a real RPC
-//! transport behind `ShardClient`, incremental stores) is another impl
-//! of the same trait rather than a fourth bespoke entry point.
+//! simulated-time distributed router. The promise this trait made —
+//! that a real RPC transport behind `ShardClient` would be just another
+//! impl rather than a fifth bespoke entry point — is now kept by
+//! [`crate::serve::net::NetRouterEngine`], the TCP tier living in
+//! `serve/net/` and selected with `serve-bench --transport tcp`.
 //!
 //! Tiers over a [`VersionedStore`] expose their current epoch through
 //! [`QueryEngine::epoch_view`], which is what lets the `Cached` layer

@@ -33,6 +33,10 @@ pub struct IngestReport {
     /// the published version (hand this to `RouterEngine::publish` to
     /// ship the delta to a replicated tier)
     pub published: Arc<EpochStore>,
+    /// the batch after intra-batch dedup, id-ascending — exactly the
+    /// rows a remote replica must `apply` to reproduce this epoch
+    /// byte-identically (the net tier ships these over the wire)
+    pub deltas: Vec<ServedSource>,
 }
 
 /// The single-writer ingestion front-end over a [`VersionedStore`].
@@ -149,6 +153,7 @@ impl Ingestor {
             updated,
             moved,
             published,
+            deltas: batch.into_values().collect(),
         }
     }
 }

@@ -30,6 +30,10 @@
 //! * [`dist`] — the multi-node tier: replicated shard placement, fabric-
 //!   backed remote shard clients, a load-balanced scatter-gather router
 //!   with replica hedging, and failure injection — in simulated time.
+//! * [`net`] — the same tier over real sockets: a length-prefixed
+//!   binary wire protocol, multi-process shard servers, a pipelined
+//!   framed client with reconnect/backoff, and a front-end router
+//!   engine with cross-process epoch publishes (`--transport tcp`).
 //!
 //! Entry points: `celeste serve-bench` (CLI) and `benches/bench_serve`.
 
@@ -37,6 +41,7 @@ pub mod dist;
 pub mod engine;
 pub mod ingest;
 pub mod loadgen;
+pub mod net;
 pub mod query;
 pub mod sched;
 pub mod server;
@@ -54,11 +59,12 @@ pub use ingest::{
     VersionedStore,
 };
 pub use loadgen::{fuzz_query, LoadGen, LoadGenConfig, QueryMix};
+pub use net::{NetRouterEngine, NetShardClient, ShardServer};
 pub use query::{
     cross_match_catalog, execute, execute_on_shard, execute_scan, merge_replies, plan_shards,
     MatchResult, Query, QueryClass, QueryResult, ShardReply, SourceFilter, N_QUERY_CLASSES,
 };
-pub use sched::{execute_batch, SchedConfig, SchedKind};
+pub use sched::{execute_batch, plan_batch, SchedConfig, SchedKind};
 pub use server::{Server, ServerConfig, ServerReport};
 pub use snapshot::Snapshot;
 pub use store::{ServedSource, Shard, Store};

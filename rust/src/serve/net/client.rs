@@ -1,0 +1,284 @@
+//! Client side of the shard-serving protocol: one framed, pipelined
+//! TCP connection per shard server, plus the [`ShardClient`]-trait
+//! adapter that lets a real socket stand where the simulated
+//! `LocalShard`/`FabricShard` replicas do.
+//!
+//! [`NetConn`] owns the socket and everything per-connection: the
+//! Hello/HelloAck handshake, request-id allocation, deadline-derived
+//! read timeouts, reconnect-with-backoff, and the counters the bench
+//! and failure-injection paths read (reconnects, I/O errors, timeouts,
+//! frames, bytes, encode/decode nanoseconds). All requests to one
+//! server share the connection — that is what turns a whole scheduler
+//! batch into a single framed request.
+
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::ga::Fabric;
+use crate::serve::query::{Query, ShardReply};
+use crate::serve::store::{ServedSource, Shard};
+
+use super::super::dist::ShardClient;
+use super::wire::{self, read_frame, ErrorCode, Msg, WireError, VERSION};
+
+/// Read timeout when a request carries no deadline.
+const DEFAULT_TIMEOUT: Duration = Duration::from_secs(5);
+/// Reconnect backoff: `BACKOFF_BASE << attempt`, capped at
+/// [`BACKOFF_CAP`], for [`CONNECT_ATTEMPTS`] attempts.
+const BACKOFF_BASE: Duration = Duration::from_millis(10);
+const BACKOFF_CAP: Duration = Duration::from_millis(200);
+const CONNECT_ATTEMPTS: u32 = 5;
+
+/// One framed connection to one shard server. Cheap to share
+/// (`Arc<NetConn>`): the socket is behind a mutex, the counters are
+/// atomics.
+pub struct NetConn {
+    addr: String,
+    stream: Mutex<Option<TcpStream>>,
+    next_req: AtomicU64,
+    had_session: AtomicU64,
+    /// first successful connects (0 or 1)
+    pub connects: AtomicU64,
+    /// successful re-establishments after a drop
+    pub reconnects: AtomicU64,
+    /// round trips that died on an I/O or protocol error
+    pub io_errors: AtomicU64,
+    /// round trips that died on the deadline-derived read timeout
+    pub timeouts: AtomicU64,
+    /// request frames sent (the coalescing assertion counts these)
+    pub frames: AtomicU64,
+    pub bytes_sent: AtomicU64,
+    pub bytes_recv: AtomicU64,
+    pub encode_ns: AtomicU64,
+    pub decode_ns: AtomicU64,
+}
+
+impl NetConn {
+    pub fn new(addr: String) -> NetConn {
+        NetConn {
+            addr,
+            stream: Mutex::new(None),
+            next_req: AtomicU64::new(1),
+            had_session: AtomicU64::new(0),
+            connects: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
+            io_errors: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
+            frames: AtomicU64::new(0),
+            bytes_sent: AtomicU64::new(0),
+            bytes_recv: AtomicU64::new(0),
+            encode_ns: AtomicU64::new(0),
+            decode_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Connect + handshake with exponential backoff. Called with the
+    /// stream lock held (via `ensure`).
+    fn dial(&self) -> Result<TcpStream, WireError> {
+        let mut last = WireError::Io(std::io::ErrorKind::NotConnected);
+        for attempt in 0..CONNECT_ATTEMPTS {
+            if attempt > 0 {
+                let backoff = BACKOFF_BASE
+                    .checked_mul(1 << (attempt - 1))
+                    .unwrap_or(BACKOFF_CAP)
+                    .min(BACKOFF_CAP);
+                std::thread::sleep(backoff);
+            }
+            let mut stream = match TcpStream::connect(&self.addr) {
+                Ok(s) => s,
+                Err(e) => {
+                    last = WireError::Io(e.kind());
+                    continue;
+                }
+            };
+            stream.set_nodelay(true).ok();
+            stream.set_read_timeout(Some(DEFAULT_TIMEOUT)).ok();
+            match handshake(&mut stream) {
+                Ok(()) => {
+                    if self.had_session.swap(1, Ordering::SeqCst) == 0 {
+                        self.connects.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        self.reconnects.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return Ok(stream);
+                }
+                Err(e) => last = e,
+            }
+        }
+        Err(last)
+    }
+
+    /// One framed round trip: encode, send, read the correlated reply.
+    /// On any failure the connection is dropped so the next round trip
+    /// redials (reconnect-with-backoff); the caller decides whether to
+    /// fail over.
+    fn round_trip(&self, msg: &Msg, deadline: Option<Duration>) -> Result<Msg, WireError> {
+        let mut guard = self.stream.lock().expect("conn lock");
+        if guard.is_none() {
+            *guard = Some(self.dial()?);
+        }
+        let stream = guard.as_mut().expect("just ensured");
+        stream.set_read_timeout(Some(deadline.unwrap_or(DEFAULT_TIMEOUT).max(Duration::from_millis(1)))).ok();
+        let result = (|| {
+            let t0 = Instant::now();
+            let frame = wire::encode_frame(msg);
+            self.encode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            use std::io::Write;
+            stream.write_all(&frame).map_err(|e| WireError::Io(e.kind()))?;
+            self.frames.fetch_add(1, Ordering::Relaxed);
+            self.bytes_sent.fetch_add(frame.len() as u64, Ordering::Relaxed);
+            let t1 = Instant::now();
+            let reply = read_frame(stream)?;
+            self.decode_ns.fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            self.bytes_recv
+                .fetch_add((wire::HEADER_LEN + frame_payload_hint(&reply)) as u64, Ordering::Relaxed);
+            Ok(reply)
+        })();
+        match result {
+            Ok(Msg::Error { code, .. }) => {
+                // typed remote refusal: the connection itself is fine
+                Err(WireError::Remote(code))
+            }
+            Ok(reply) => Ok(reply),
+            Err(e) => {
+                if wire::is_timeout(&e) {
+                    self.timeouts.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.io_errors.fetch_add(1, Ordering::Relaxed);
+                }
+                *guard = None;
+                Err(e)
+            }
+        }
+    }
+
+    /// Execute a coalesced per-shard batch on this server. Returns the
+    /// per-entry replies, parallel to `entries`.
+    pub fn execute(
+        &self,
+        entries: Vec<(u32, Vec<Query>)>,
+        min_epoch: u64,
+        deadline: Option<Duration>,
+    ) -> Result<Vec<Vec<ShardReply>>, WireError> {
+        let req_id = self.next_req.fetch_add(1, Ordering::Relaxed);
+        let n = entries.len();
+        let reply = self.round_trip(&Msg::Execute { req_id, min_epoch, entries }, deadline)?;
+        match reply {
+            Msg::Reply { req_id: rid, entries } if rid == req_id && entries.len() == n => {
+                Ok(entries)
+            }
+            _ => {
+                self.io_errors.fetch_add(1, Ordering::Relaxed);
+                *self.stream.lock().expect("conn lock") = None;
+                Err(WireError::Malformed)
+            }
+        }
+    }
+
+    /// Ship one epoch publish and await its ack.
+    pub fn publish(
+        &self,
+        epoch: u64,
+        rows: &[ServedSource],
+        deadline: Option<Duration>,
+    ) -> Result<(), WireError> {
+        let req_id = self.next_req.fetch_add(1, Ordering::Relaxed);
+        let msg = Msg::Publish { req_id, epoch, rows: rows.to_vec() };
+        match self.round_trip(&msg, deadline)? {
+            Msg::PublishAck { req_id: rid, epoch: e } if rid == req_id && e == epoch => Ok(()),
+            _ => {
+                self.io_errors.fetch_add(1, Ordering::Relaxed);
+                *self.stream.lock().expect("conn lock") = None;
+                Err(WireError::Malformed)
+            }
+        }
+    }
+}
+
+/// Rough payload size of a decoded reply, for the bytes_recv counter
+/// (exact sizes would mean re-encoding; the header is exact, the body
+/// is the dominant sources term).
+fn frame_payload_hint(msg: &Msg) -> usize {
+    match msg {
+        Msg::Reply { entries, .. } => {
+            12 + entries
+                .iter()
+                .flat_map(|v| v.iter())
+                .map(|r| 5 + r.rows() * 81)
+                .sum::<usize>()
+        }
+        Msg::Publish { rows, .. } => 20 + rows.len() * 81,
+        Msg::Error { detail, .. } => 13 + detail.len(),
+        _ => 16,
+    }
+}
+
+fn handshake(stream: &mut TcpStream) -> Result<(), WireError> {
+    wire::write_frame(stream, &Msg::Hello { version: VERSION })?;
+    match read_frame(stream)? {
+        Msg::HelloAck { version: v, .. } if v == VERSION => Ok(()),
+        Msg::Error { code: ErrorCode::BadVersion, .. } => {
+            Err(WireError::Remote(ErrorCode::BadVersion))
+        }
+        _ => Err(WireError::Malformed),
+    }
+}
+
+/// [`ShardClient`] over a real socket: one replica slot (a fixed shard
+/// on a fixed node) backed by a shared [`NetConn`] to that node's
+/// server. The simulated-time parameters are ignored — the returned
+/// completion time is `now` plus the measured wall-clock round trip,
+/// so the dist router's accounting keeps working with real latencies
+/// in place of modeled ones.
+pub struct NetShardClient {
+    conn: std::sync::Arc<NetConn>,
+    node: usize,
+    shard: u32,
+}
+
+impl NetShardClient {
+    pub fn new(conn: std::sync::Arc<NetConn>, node: usize, shard: u32) -> NetShardClient {
+        NetShardClient { conn, node, shard }
+    }
+
+    pub fn conn(&self) -> &NetConn {
+        &self.conn
+    }
+}
+
+impl ShardClient for NetShardClient {
+    fn node(&self) -> usize {
+        self.node
+    }
+
+    fn call(
+        &self,
+        now: f64,
+        _origin: usize,
+        q: &Query,
+        shard: &Shard,
+        _fabric: &mut Fabric,
+        _node_free: &mut [f64],
+    ) -> (ShardReply, f64) {
+        let t0 = Instant::now();
+        match self.conn.execute(vec![(self.shard, vec![q.clone()])], 0, None) {
+            Ok(mut entries) if entries.len() == 1 && entries[0].len() == 1 => {
+                let reply = entries.pop().expect("checked").pop().expect("checked");
+                (reply, now + t0.elapsed().as_secs_f64())
+            }
+            // the trait has no failure channel: answer from the
+            // front-end's own copy of the shard so correctness holds,
+            // with the error already counted on the conn
+            _ => (
+                crate::serve::query::execute_on_shard(shard, q),
+                now + t0.elapsed().as_secs_f64(),
+            ),
+        }
+    }
+}

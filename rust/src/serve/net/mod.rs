@@ -1,0 +1,37 @@
+//! The real RPC transport: multi-process shard serving over a
+//! length-prefixed binary wire protocol.
+//!
+//! Everything "distributed" below `serve/dist/` runs in simulated time
+//! inside one process — [`FabricShard`](crate::serve::dist::FabricShard)
+//! charges bytes to the fabric model but never serializes a byte. This
+//! module is the same tier over real sockets:
+//!
+//! * [`wire`] — the framed binary codec (versioned header, typed
+//!   errors, bit-exact `f64`s, allocation-bounded decoding);
+//! * [`ShardServer`] — a process (or thread) owning a
+//!   [`VersionedStore`](crate::serve::ingest::VersionedStore) replica,
+//!   answering shard sub-queries and applying epoch publishes over TCP;
+//! * [`NetConn`] / [`NetShardClient`] — the pipelined per-server
+//!   connection and the [`ShardClient`](crate::serve::dist::ShardClient)
+//!   trait adapter over it;
+//! * [`NetRouterEngine`] — the front-end
+//!   [`QueryEngine`](crate::serve::engine::QueryEngine) tier that plans
+//!   on a local mirror, coalesces same-shard sub-queries into one frame
+//!   per server, fails over on server death, and ships ingest epochs to
+//!   every replica before its mirror advances.
+//!
+//! `serve-bench --transport tcp` spawns local `celeste shard-server`
+//! child processes and drives this tier wall-clock; `--transport sim`
+//! (the default) keeps the simulated fabric. See `docs/WIRE.md` for the
+//! wire layout and `README.md` for the flag matrix.
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+mod router;
+
+pub use client::{NetConn, NetShardClient};
+pub use router::NetRouterEngine;
+pub use server::{ShardServer, ShardServerHandle};
+pub use wire::{ErrorCode, Msg, WireError};

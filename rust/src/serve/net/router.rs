@@ -1,0 +1,346 @@
+//! `NetRouterEngine`: the front-end tier that plans queries over its
+//! own catalog mirror and scatters the per-shard sub-queries to real
+//! shard-server processes over TCP.
+//!
+//! Placement is the same rendezvous hash the simulated dist tier uses
+//! ([`Placement::rendezvous`]), planning is the same
+//! [`plan_shards`]/[`plan_batch`], execution on the far side is the
+//! same `execute_on_shard`, and the fold is the same
+//! [`merge_replies`] — so byte-parity with the in-process store is by
+//! construction, not by luck. What this tier adds is everything the
+//! fabric model abstracted away: one framed request per contacted
+//! server (a whole scheduler batch's same-shard sub-queries coalesce
+//! into a single frame), real encode/decode cost, real kernel round
+//! trips, reconnect-with-backoff, and failover to the next replica
+//! when a server dies mid-run.
+//!
+//! Epoch publishes are shipped to **every** server and acked before
+//! the front-end mirror advances, so a query planned against the new
+//! head can never reach a server that has not applied it — that
+//! in-order pipe is what makes `Fresh`/`AtMost(k)` hold across the
+//! process boundary at full byte parity, live ingestion included.
+//!
+//! A server that fails a round trip is marked suspected and never
+//! retried (kill-style failure injection; revival is not modeled over
+//! TCP). With replication R, up to R-1 server deaths are absorbed
+//! with zero failed queries.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::serve::dist::Placement;
+use crate::serve::engine::{enforce_deadline, Consistency, QueryEngine, Request, Response};
+use crate::serve::ingest::{EpochStore, IngestReport, VersionedStore};
+use crate::serve::query::{merge_replies, plan_shards, Query, QueryResult, ShardReply};
+use crate::serve::sched::plan_batch;
+use crate::serve::store::Store;
+
+use super::client::NetConn;
+use super::wire::WireError;
+
+struct Inner {
+    /// front-end planning mirror; advanced only after every server acks
+    mirror: Arc<VersionedStore>,
+    placement: Placement,
+    conns: Vec<Arc<NetConn>>,
+    /// replica rotation cursor (round-robin over live replicas)
+    rr: AtomicUsize,
+    /// sticky per-server death marks fed by failed round trips
+    suspected: Vec<AtomicBool>,
+    failovers: AtomicU64,
+    failed: AtomicU64,
+    epochs_published: AtomicU64,
+    /// serializes publishes (the mirror asserts strictly advancing epochs)
+    publish_lock: Mutex<()>,
+}
+
+/// The TCP serving tier as one more [`QueryEngine`]: admission,
+/// caching, hedging, consistency stamping, and both drivers compose
+/// over it unchanged. Clones share the connections and counters —
+/// keep one to publish ingest epochs and read wire metrics after the
+/// engine is boxed into a middleware stack.
+#[derive(Clone)]
+pub struct NetRouterEngine {
+    inner: Arc<Inner>,
+    desc: String,
+}
+
+impl NetRouterEngine {
+    /// Connect to one shard server per address and verify each with an
+    /// empty round trip. `store` must be built from the same snapshot
+    /// (and shard count) the servers loaded — shard indices must agree.
+    pub fn connect(
+        store: Arc<Store>,
+        addrs: &[String],
+        replicas: usize,
+    ) -> Result<NetRouterEngine, WireError> {
+        let n_servers = addrs.len().max(1);
+        let placement = Placement::rendezvous(store.shards.len(), n_servers, replicas);
+        let conns: Vec<Arc<NetConn>> =
+            addrs.iter().map(|a| Arc::new(NetConn::new(a.clone()))).collect();
+        for conn in &conns {
+            // handshake + empty execute: fail fast if a server is down
+            conn.execute(Vec::new(), 0, Some(Duration::from_secs(5)))?;
+        }
+        let desc = format!(
+            "net-router(tcp, {} server(s) x{} replicas, {} shards)",
+            n_servers,
+            placement.replicas,
+            store.shards.len()
+        );
+        let mirror = Arc::new(VersionedStore::new(store));
+        Ok(NetRouterEngine {
+            inner: Arc::new(Inner {
+                mirror,
+                placement,
+                conns,
+                rr: AtomicUsize::new(0),
+                suspected: (0..n_servers).map(|_| AtomicBool::new(false)).collect(),
+                failovers: AtomicU64::new(0),
+                failed: AtomicU64::new(0),
+                epochs_published: AtomicU64::new(0),
+                publish_lock: Mutex::new(()),
+            }),
+            desc,
+        })
+    }
+
+    pub fn placement(&self) -> &Placement {
+        &self.inner.placement
+    }
+
+    pub fn n_servers(&self) -> usize {
+        self.inner.conns.len()
+    }
+
+    /// Total request frames sent across every server connection — the
+    /// coalescing contract's observable (one frame per contacted
+    /// server per batch).
+    pub fn frames_sent(&self) -> u64 {
+        self.inner.conns.iter().map(|c| c.frames.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Servers currently marked dead by failed round trips.
+    pub fn suspected(&self) -> Vec<bool> {
+        self.inner.suspected.iter().map(|s| s.load(Ordering::SeqCst)).collect()
+    }
+
+    /// Ship one ingest epoch to every shard server (acked before the
+    /// planning mirror advances). Mirrors `RouterEngine::publish`.
+    pub fn publish(&self, report: &IngestReport) {
+        let inner = &*self.inner;
+        let _g = inner.publish_lock.lock().expect("publish lock");
+        let epoch = report.epoch;
+        let rows = &report.deltas;
+        std::thread::scope(|s| {
+            for (i, conn) in inner.conns.iter().enumerate() {
+                s.spawn(move || {
+                    if inner.suspected[i].load(Ordering::SeqCst) {
+                        return;
+                    }
+                    // one retry: the first failure drops the socket, the
+                    // second attempt redials with backoff (covers a
+                    // server restartless blip); then give up and mark
+                    let ok = conn.publish(epoch, rows, None).is_ok()
+                        || conn.publish(epoch, rows, None).is_ok();
+                    if !ok {
+                        inner.suspected[i].store(true, Ordering::SeqCst);
+                    }
+                });
+            }
+        });
+        inner.mirror.publish(Arc::clone(&report.published));
+        inner.epochs_published.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Execute a whole batch with per-server coalescing: all
+    /// sub-queries of one batch bound for one server travel in one
+    /// frame. Results are in input order, byte-identical to per-query
+    /// [`crate::serve::query::execute`]; `None` marks a query whose
+    /// shards lost every replica.
+    pub fn call_batch(&self, queries: &[Query]) -> Vec<Option<QueryResult>> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        let head = self.inner.mirror.load();
+        let by_shard = plan_batch(&head.store, queries);
+        let groups: Vec<(u32, Vec<Query>)> = by_shard
+            .iter()
+            .enumerate()
+            .filter(|(_, qis)| !qis.is_empty())
+            .map(|(s, qis)| (s as u32, qis.iter().map(|&qi| queries[qi].clone()).collect()))
+            .collect();
+        match self.execute_grouped(groups, 0, None) {
+            Ok(mut by_shard_replies) => {
+                let mut replies: Vec<Vec<ShardReply>> =
+                    (0..queries.len()).map(|_| Vec::new()).collect();
+                // ascending shard order — the canonical merge order the
+                // in-process batch path uses
+                for (s, qis) in by_shard.iter().enumerate() {
+                    if qis.is_empty() {
+                        continue;
+                    }
+                    let reps = by_shard_replies.remove(&(s as u32)).expect("every shard answered");
+                    debug_assert_eq!(reps.len(), qis.len());
+                    for (&qi, rep) in qis.iter().zip(reps) {
+                        replies[qi].push(rep);
+                    }
+                }
+                queries
+                    .iter()
+                    .zip(replies)
+                    .map(|(q, r)| Some(merge_replies(q, r)))
+                    .collect()
+            }
+            Err(()) => {
+                self.inner.failed.fetch_add(queries.len() as u64, Ordering::Relaxed);
+                queries.iter().map(|_| None).collect()
+            }
+        }
+    }
+
+    /// Core scatter: assign each shard group to a live replica, send
+    /// one frame per contacted server, fail servers over on error.
+    /// Returns shard -> replies (parallel to that shard's queries), or
+    /// `Err(())` once some shard has no live replica left.
+    fn execute_grouped(
+        &self,
+        groups: Vec<(u32, Vec<Query>)>,
+        min_epoch: u64,
+        deadline: Option<Duration>,
+    ) -> Result<BTreeMap<u32, Vec<ShardReply>>, ()> {
+        let inner = &*self.inner;
+        let mut results: BTreeMap<u32, Vec<ShardReply>> = BTreeMap::new();
+        let mut remaining = groups;
+        while !remaining.is_empty() {
+            // pick a live replica per shard, rotating the start slot
+            let mut per_server: BTreeMap<usize, Vec<(u32, Vec<Query>)>> = BTreeMap::new();
+            for (shard, queries) in remaining.drain(..) {
+                let reps = inner.placement.replicas_of(shard as usize);
+                let offset = inner.rr.fetch_add(1, Ordering::Relaxed);
+                let pick = (0..reps.len())
+                    .map(|i| reps[(offset + i) % reps.len()])
+                    .find(|&n| !inner.suspected[n].load(Ordering::SeqCst));
+                match pick {
+                    Some(server) => per_server.entry(server).or_default().push((shard, queries)),
+                    None => return Err(()),
+                }
+            }
+            // one frame per server; scatter concurrently when >1
+            let plan: Vec<(usize, Vec<(u32, Vec<Query>)>)> = per_server.into_iter().collect();
+            let outcomes: Vec<Result<Vec<Vec<ShardReply>>, WireError>> =
+                if plan.len() == 1 {
+                    vec![inner.conns[plan[0].0].execute(plan[0].1.clone(), min_epoch, deadline)]
+                } else {
+                    std::thread::scope(|s| {
+                        let handles: Vec<_> = plan
+                            .iter()
+                            .map(|(server, entries)| {
+                                let conn = Arc::clone(&inner.conns[*server]);
+                                let entries = entries.clone();
+                                s.spawn(move || conn.execute(entries, min_epoch, deadline))
+                            })
+                            .collect();
+                        handles
+                            .into_iter()
+                            .map(|h| h.join().unwrap_or(Err(WireError::Malformed)))
+                            .collect()
+                    })
+                };
+            for ((server, entries), outcome) in plan.into_iter().zip(outcomes) {
+                match outcome {
+                    Ok(replies) => {
+                        for ((shard, _), reps) in entries.into_iter().zip(replies) {
+                            results.insert(shard, reps);
+                        }
+                    }
+                    Err(_) => {
+                        // the conn already counted the error and dropped
+                        // the socket; mark the server and re-queue its
+                        // shard groups for the next replica
+                        inner.suspected[server].store(true, Ordering::SeqCst);
+                        inner.failovers.fetch_add(1, Ordering::Relaxed);
+                        remaining.extend(entries);
+                    }
+                }
+            }
+        }
+        Ok(results)
+    }
+}
+
+impl QueryEngine for NetRouterEngine {
+    fn call(&self, req: Request) -> Response {
+        let t = Instant::now();
+        let head = self.inner.mirror.load();
+        // publishes are acked by every live server before the mirror
+        // advances, so the head epoch is a bound every server meets;
+        // min_epoch makes the server enforce it rather than trust it
+        let min_epoch = match req.consistency {
+            Consistency::Fresh => head.epoch,
+            Consistency::AtMost(k) => head.epoch.saturating_sub(k as u64),
+            Consistency::CachedOk => 0,
+        };
+        let deadline = req.deadline.map(Duration::from_secs_f64);
+        let plan = plan_shards(&head.store, &req.query);
+        let groups: Vec<(u32, Vec<Query>)> =
+            plan.iter().map(|&s| (s as u32, vec![req.query.clone()])).collect();
+        let frames0 = self.frames_sent();
+        match self.execute_grouped(groups, min_epoch, deadline) {
+            Ok(mut by_shard) => {
+                let replies: Vec<ShardReply> = plan
+                    .iter()
+                    .map(|&s| {
+                        let mut reps = by_shard.remove(&(s as u32)).expect("every shard answered");
+                        reps.pop().expect("one query per shard")
+                    })
+                    .collect();
+                let result = merge_replies(&req.query, replies);
+                let mut resp = Response::served(result, req.at + t.elapsed().as_secs_f64());
+                resp.trace.replicas_contacted = (self.frames_sent() - frames0) as u32;
+                enforce_deadline(req.at, req.deadline, resp)
+            }
+            Err(()) => {
+                self.inner.failed.fetch_add(1, Ordering::Relaxed);
+                Response::failed(req.at + t.elapsed().as_secs_f64())
+            }
+        }
+    }
+
+    fn describe(&self) -> String {
+        self.desc.clone()
+    }
+
+    fn metrics(&self) -> Vec<(String, f64)> {
+        let inner = &*self.inner;
+        let sum = |f: fn(&NetConn) -> &AtomicU64| -> f64 {
+            inner.conns.iter().map(|c| f(c.as_ref()).load(Ordering::Relaxed)).sum::<u64>() as f64
+        };
+        let frames = sum(|c| &c.frames).max(1.0);
+        vec![
+            ("net_frames".to_string(), sum(|c| &c.frames)),
+            ("net_bytes_sent".to_string(), sum(|c| &c.bytes_sent)),
+            ("net_bytes_recv".to_string(), sum(|c| &c.bytes_recv)),
+            ("net_reconnects".to_string(), sum(|c| &c.reconnects)),
+            ("net_io_errors".to_string(), sum(|c| &c.io_errors)),
+            ("net_timeouts".to_string(), sum(|c| &c.timeouts)),
+            ("net_encode_us_per_frame".to_string(), sum(|c| &c.encode_ns) * 1e-3 / frames),
+            ("net_decode_us_per_frame".to_string(), sum(|c| &c.decode_ns) * 1e-3 / frames),
+            (
+                "net_failovers".to_string(),
+                inner.failovers.load(Ordering::Relaxed) as f64,
+            ),
+            ("net_failed".to_string(), inner.failed.load(Ordering::Relaxed) as f64),
+            (
+                "net_epochs_published".to_string(),
+                inner.epochs_published.load(Ordering::Relaxed) as f64,
+            ),
+        ]
+    }
+
+    fn epoch_view(&self) -> Option<Arc<EpochStore>> {
+        Some(self.inner.mirror.load())
+    }
+}

@@ -1,0 +1,259 @@
+//! `ShardServer`: one process (or thread) owning a versioned catalog
+//! partition and answering shard sub-queries over TCP.
+//!
+//! Each server loads the same snapshot the front-end planned over and
+//! builds an identical [`Store`], so shard indices agree across the
+//! process boundary by construction. Epoch publishes arrive as
+//! [`Msg::Publish`] frames carrying the deduped delta rows of exactly
+//! the next epoch; the server applies them through its own
+//! [`Ingestor`], whose rebuild is deterministic — every replica (and
+//! the front-end mirror) converges on byte-identical shards, which is
+//! what lets `Fresh`/`AtMost(k)` consistency and byte-parity hold
+//! cross-process.
+//!
+//! A connection is a strict in-order frame pipe: the client's publishes
+//! and queries are processed in arrival order, so a query sent after a
+//! publish ack can never observe the older epoch. Decode failures are
+//! answered with a typed [`Msg::Error`] and a close — a hostile peer
+//! can end its own connection, never the server.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::serve::ingest::{Ingestor, VersionedStore};
+use crate::serve::query::execute_on_shard;
+use crate::serve::store::Store;
+
+use super::wire::{read_frame, write_frame, ErrorCode, Msg, WireError, VERSION};
+
+/// Idle-connection read timeout: a peer that goes silent this long is
+/// dropped so its handler thread can exit.
+const IDLE_TIMEOUT: Duration = Duration::from_secs(120);
+
+pub struct ShardServer {
+    listener: TcpListener,
+    versioned: Arc<VersionedStore>,
+    ingest: Arc<Mutex<Ingestor>>,
+    stop: Arc<AtomicBool>,
+}
+
+/// Test/bench handle for an in-process server: lets the owner stop the
+/// accept loop and join it.
+pub struct ShardServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ShardServer {
+    /// Bind a listener and wrap `store` in a fresh epoch-0
+    /// [`VersionedStore`]. `addr` is usually `127.0.0.1:0` (kernel
+    /// picks the port; read it back with [`local_addr`]).
+    ///
+    /// [`local_addr`]: ShardServer::local_addr
+    pub fn bind(store: Arc<Store>, addr: &str) -> std::io::Result<ShardServer> {
+        let listener = TcpListener::bind(addr)?;
+        let versioned = Arc::new(VersionedStore::new(store));
+        let ingest = Arc::new(Mutex::new(Ingestor::new(Arc::clone(&versioned))));
+        Ok(ShardServer { listener, versioned, ingest, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("bound listener has an address")
+    }
+
+    /// Accept loop; runs until the process exits (the child-process
+    /// entry point) or [`ShardServerHandle::stop`] fires.
+    pub fn run(self) {
+        for conn in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let versioned = Arc::clone(&self.versioned);
+            let ingest = Arc::clone(&self.ingest);
+            std::thread::spawn(move || {
+                // per-connection failures only ever end that connection
+                let _ = serve_conn(stream, &versioned, &ingest);
+            });
+        }
+    }
+
+    /// Run the accept loop on a background thread (tests, benches).
+    pub fn spawn(self) -> ShardServerHandle {
+        let addr = self.local_addr();
+        let stop = Arc::clone(&self.stop);
+        let join = std::thread::spawn(move || self.run());
+        ShardServerHandle { addr, stop, join: Some(join) }
+    }
+}
+
+impl ShardServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the accept loop and join it. Already-open connections keep
+    /// draining on their own threads until their peers hang up.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the blocking accept with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for ShardServerHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn send_error(stream: &mut TcpStream, req_id: u64, code: ErrorCode, detail: String) {
+    let _ = write_frame(stream, &Msg::Error { req_id, code, detail });
+}
+
+/// Drive one connection to completion. Returns `Ok(())` on a clean
+/// peer close; any other exit closed the connection deliberately.
+fn serve_conn(
+    mut stream: TcpStream,
+    versioned: &Arc<VersionedStore>,
+    ingest: &Arc<Mutex<Ingestor>>,
+) -> Result<(), WireError> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(IDLE_TIMEOUT)).ok();
+
+    // version negotiation: first frame must be a Hello we can speak
+    match read_frame(&mut stream) {
+        Ok(Msg::Hello { version }) if version == VERSION => {
+            let head = versioned.load();
+            write_frame(
+                &mut stream,
+                &Msg::HelloAck {
+                    version: VERSION,
+                    epoch: head.epoch,
+                    n_shards: head.store.shards.len() as u32,
+                },
+            )?;
+        }
+        Ok(Msg::Hello { version }) => {
+            send_error(
+                &mut stream,
+                0,
+                ErrorCode::BadVersion,
+                format!("server speaks version {VERSION}, client sent {version}"),
+            );
+            return Err(WireError::Version(version));
+        }
+        Ok(_) => {
+            send_error(&mut stream, 0, ErrorCode::Malformed, "expected Hello".to_string());
+            return Err(WireError::Malformed);
+        }
+        Err(e) => {
+            // a frame-level decode error still gets a typed answer if
+            // the socket survives (e.g. bad magic on a live peer)
+            if !matches!(e, WireError::Closed | WireError::Truncated | WireError::Io(_)) {
+                let code = match e {
+                    WireError::Version(_) => ErrorCode::BadVersion,
+                    _ => ErrorCode::Malformed,
+                };
+                send_error(&mut stream, 0, code, e.to_string());
+            }
+            return Err(e);
+        }
+    }
+
+    loop {
+        let msg = match read_frame(&mut stream) {
+            Ok(m) => m,
+            Err(WireError::Closed) => return Ok(()),
+            Err(e @ (WireError::Truncated | WireError::Io(_))) => return Err(e),
+            Err(e) => {
+                send_error(&mut stream, 0, ErrorCode::Malformed, e.to_string());
+                return Err(e);
+            }
+        };
+        match msg {
+            Msg::Execute { req_id, min_epoch, entries } => {
+                let head = versioned.load();
+                if head.epoch < min_epoch {
+                    send_error(
+                        &mut stream,
+                        req_id,
+                        ErrorCode::Stale,
+                        format!("applied epoch {} < bound {min_epoch}", head.epoch),
+                    );
+                    continue;
+                }
+                let n_shards = head.store.shards.len();
+                let mut out = Vec::with_capacity(entries.len());
+                let mut bad_shard = None;
+                for (shard, queries) in &entries {
+                    let Some(shard_ref) = head.store.shards.get(*shard as usize) else {
+                        bad_shard = Some(*shard);
+                        break;
+                    };
+                    out.push(
+                        queries.iter().map(|q| execute_on_shard(shard_ref, q)).collect::<Vec<_>>(),
+                    );
+                }
+                match bad_shard {
+                    Some(shard) => send_error(
+                        &mut stream,
+                        req_id,
+                        ErrorCode::Malformed,
+                        format!("shard {shard} out of range ({n_shards} shards)"),
+                    ),
+                    None => {
+                        write_frame(&mut stream, &Msg::Reply { req_id, entries: out })?;
+                    }
+                }
+            }
+            Msg::Publish { req_id, epoch, rows } => {
+                // the ingest lock spans the epoch check so two racing
+                // publishes cannot both see "current + 1"
+                let mut ing = ingest.lock().expect("ingest lock");
+                let cur = versioned.epoch();
+                if epoch <= cur {
+                    // duplicate delivery (e.g. after a reconnect): the
+                    // epoch is already applied, ack idempotently
+                    drop(ing);
+                    write_frame(&mut stream, &Msg::PublishAck { req_id, epoch })?;
+                } else if epoch == cur + 1 {
+                    let rep = ing.apply(&rows);
+                    debug_assert_eq!(rep.epoch, epoch);
+                    drop(ing);
+                    write_frame(&mut stream, &Msg::PublishAck { req_id, epoch })?;
+                } else {
+                    drop(ing);
+                    send_error(
+                        &mut stream,
+                        req_id,
+                        ErrorCode::EpochGap,
+                        format!("publish skips from epoch {cur} to {epoch}"),
+                    );
+                }
+            }
+            Msg::Hello { .. } => {
+                send_error(&mut stream, 0, ErrorCode::Malformed, "duplicate Hello".to_string());
+                return Err(WireError::Malformed);
+            }
+            _ => {
+                send_error(
+                    &mut stream,
+                    0,
+                    ErrorCode::Malformed,
+                    "unexpected client frame (server-only message)".to_string(),
+                );
+                return Err(WireError::Malformed);
+            }
+        }
+    }
+}

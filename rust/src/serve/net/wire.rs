@@ -1,0 +1,820 @@
+//! The length-prefixed binary wire format of the real RPC transport.
+//!
+//! Every frame is an 8-byte header followed by a message payload:
+//!
+//! ```text
+//! offset  size  field
+//!      0     2  magic 0xCE57, little-endian
+//!      2     1  protocol version (currently 1)
+//!      3     1  message tag (see below)
+//!      4     4  payload length, little-endian u32
+//! ```
+//!
+//! The header is validated *before* the payload is touched: a bad
+//! magic, unknown version, unknown tag, or a length past
+//! [`MAX_PAYLOAD`] is rejected without allocating a payload buffer, so
+//! a hostile or corrupted peer cannot make the server reserve gigabytes
+//! off a four-byte length field. Element counts inside a payload are
+//! bounded the same way (a count must fit in the bytes that remain).
+//!
+//! Numbers are little-endian; `f64` travels as its IEEE-754 bit
+//! pattern (`to_bits`/`from_bits`), so catalog rows round-trip
+//! bit-exactly — the byte-parity contract the whole serving stack pins
+//! extends across the process boundary unchanged.
+//!
+//! Decoding never panics: every failure is a typed [`WireError`], and a
+//! clean peer close at a frame boundary ([`WireError::Closed`]) is
+//! distinguished from a disconnect mid-frame ([`WireError::Truncated`]).
+
+use std::io::{Read, Write};
+
+use crate::serve::query::{MatchResult, Query, ShardReply, SourceFilter};
+use crate::serve::store::ServedSource;
+
+/// Frame magic (little-endian on the wire).
+pub const MAGIC: u16 = 0xCE57;
+/// Protocol version spoken by this build.
+pub const VERSION: u8 = 1;
+/// Header size in bytes.
+pub const HEADER_LEN: usize = 8;
+/// Largest payload a peer may announce (checked before allocation).
+pub const MAX_PAYLOAD: u32 = 64 << 20;
+
+/// Error codes carried by [`Msg::Error`] frames.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// the peer speaks an unsupported protocol version
+    BadVersion,
+    /// the request could not be decoded or referenced an unknown shard
+    Malformed,
+    /// the server's applied epoch is older than the request's bound
+    Stale,
+    /// a publish skipped an epoch (the server would diverge)
+    EpochGap,
+    /// the server failed internally
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn to_u8(self) -> u8 {
+        match self {
+            ErrorCode::BadVersion => 1,
+            ErrorCode::Malformed => 2,
+            ErrorCode::Stale => 3,
+            ErrorCode::EpochGap => 4,
+            ErrorCode::Internal => 5,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<ErrorCode> {
+        match v {
+            1 => Some(ErrorCode::BadVersion),
+            2 => Some(ErrorCode::Malformed),
+            3 => Some(ErrorCode::Stale),
+            4 => Some(ErrorCode::EpochGap),
+            5 => Some(ErrorCode::Internal),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorCode::BadVersion => "bad-version",
+            ErrorCode::Malformed => "malformed",
+            ErrorCode::Stale => "stale",
+            ErrorCode::EpochGap => "epoch-gap",
+            ErrorCode::Internal => "internal",
+        }
+    }
+}
+
+/// Everything that can go wrong on the wire, typed. Decoding and
+/// framing never panic; they return one of these.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// OS-level I/O failure (connect refused, reset, timeout, ...)
+    Io(std::io::ErrorKind),
+    /// the peer closed cleanly at a frame boundary
+    Closed,
+    /// the peer disconnected mid-frame
+    Truncated,
+    /// the frame header's magic bytes are wrong
+    BadMagic(u16),
+    /// the frame announces an unsupported protocol version
+    Version(u8),
+    /// the frame announces an unknown message tag
+    BadTag(u8),
+    /// the frame announces a payload larger than [`MAX_PAYLOAD`]
+    Oversized(u32),
+    /// the payload does not decode as its tag's message
+    Malformed,
+    /// the peer answered with an [`Msg::Error`] frame
+    Remote(ErrorCode),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(kind) => write!(f, "wire i/o error: {kind:?}"),
+            WireError::Closed => write!(f, "peer closed the connection"),
+            WireError::Truncated => write!(f, "peer disconnected mid-frame"),
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:#06x}"),
+            WireError::Version(v) => write!(f, "unsupported wire version {v}"),
+            WireError::BadTag(t) => write!(f, "unknown message tag {t}"),
+            WireError::Oversized(n) => {
+                write!(f, "payload length {n} exceeds the {MAX_PAYLOAD}-byte cap")
+            }
+            WireError::Malformed => write!(f, "malformed payload"),
+            WireError::Remote(c) => write!(f, "remote error: {}", c.name()),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// True when the error is an OS read timeout (the deadline-derived
+/// read timeout firing, not the peer misbehaving).
+pub fn is_timeout(e: &WireError) -> bool {
+    matches!(
+        e,
+        WireError::Io(std::io::ErrorKind::WouldBlock) | WireError::Io(std::io::ErrorKind::TimedOut)
+    )
+}
+
+/// The messages of the shard-serving protocol. One frame carries one
+/// message; request/response pairs are correlated by `req_id`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// client -> server, first frame on a connection
+    Hello { version: u8 },
+    /// server -> client: negotiated version plus the served snapshot's
+    /// current epoch and shard count
+    HelloAck { version: u8, epoch: u64, n_shards: u32 },
+    /// one framed request: every sub-query this client owes this
+    /// server, grouped per shard (a whole scheduler batch coalesces
+    /// into one of these). `min_epoch` is the consistency bound: the
+    /// server refuses to answer from an older applied epoch.
+    Execute { req_id: u64, min_epoch: u64, entries: Vec<(u32, Vec<Query>)> },
+    /// the per-shard replies, parallel to the request's entries
+    Reply { req_id: u64, entries: Vec<Vec<ShardReply>> },
+    /// an epoch publish: the deduped delta rows of exactly the next
+    /// epoch, shipped so `Fresh`/`AtMost(k)` reads hold cross-process
+    Publish { req_id: u64, epoch: u64, rows: Vec<ServedSource> },
+    PublishAck { req_id: u64, epoch: u64 },
+    /// typed failure; `req_id` echoes the offending request (0 when
+    /// the failure is not attributable to one)
+    Error { req_id: u64, code: ErrorCode, detail: String },
+}
+
+impl Msg {
+    fn tag(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => 1,
+            Msg::HelloAck { .. } => 2,
+            Msg::Execute { .. } => 3,
+            Msg::Reply { .. } => 4,
+            Msg::Publish { .. } => 5,
+            Msg::PublishAck { .. } => 6,
+            Msg::Error { .. } => 7,
+        }
+    }
+}
+
+// ---------------------------------------------------------------- codec
+
+/// Append-only payload writer (little-endian).
+struct W(Vec<u8>);
+
+impl W {
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.0.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+/// Cursor-based payload reader; every overrun is [`WireError::Malformed`].
+struct R<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> R<'a> {
+    fn new(b: &'a [u8]) -> R<'a> {
+        R { b, p: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.p
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Malformed);
+        }
+        let s = &self.b[self.p..self.p + n];
+        self.p += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Read an element count and bound it by the bytes that remain
+    /// (`min_elem` = smallest possible element encoding), so a hostile
+    /// count cannot drive a huge `Vec` allocation.
+    fn count(&mut self, min_elem: usize) -> Result<usize, WireError> {
+        let n = self.u32()? as usize;
+        if min_elem > 0 && n > self.remaining() / min_elem {
+            return Err(WireError::Malformed);
+        }
+        Ok(n)
+    }
+
+    /// Every payload byte must be consumed; trailing garbage means the
+    /// peer and we disagree on the encoding.
+    fn done(&self) -> Result<(), WireError> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(WireError::Malformed)
+        }
+    }
+}
+
+// smallest possible encodings, used to bound counts before allocation
+const MIN_SOURCE: usize = 8 + 9 * 8 + 1; // 81
+const MIN_QUERY: usize = 10; // BrightestN: tag + u64 + filter
+const MIN_REPLY: usize = 2; // Match(None): tag + present byte
+const MIN_ENTRY: usize = 8; // shard u32 + query count u32
+
+fn put_filter(w: &mut W, f: SourceFilter) {
+    w.u8(match f {
+        SourceFilter::Any => 0,
+        SourceFilter::StarsOnly => 1,
+        SourceFilter::GalaxiesOnly => 2,
+    });
+}
+
+fn get_filter(r: &mut R) -> Result<SourceFilter, WireError> {
+    match r.u8()? {
+        0 => Ok(SourceFilter::Any),
+        1 => Ok(SourceFilter::StarsOnly),
+        2 => Ok(SourceFilter::GalaxiesOnly),
+        _ => Err(WireError::Malformed),
+    }
+}
+
+fn put_query(w: &mut W, q: &Query) {
+    match q {
+        Query::Cone { center, radius, filter } => {
+            w.u8(1);
+            w.f64(center.0);
+            w.f64(center.1);
+            w.f64(*radius);
+            put_filter(w, *filter);
+        }
+        Query::BoxSearch { x0, y0, x1, y1, filter } => {
+            w.u8(2);
+            w.f64(*x0);
+            w.f64(*y0);
+            w.f64(*x1);
+            w.f64(*y1);
+            put_filter(w, *filter);
+        }
+        Query::BrightestN { n, filter } => {
+            w.u8(3);
+            w.u64(*n as u64);
+            put_filter(w, *filter);
+        }
+        Query::CrossMatch { pos, radius } => {
+            w.u8(4);
+            w.f64(pos.0);
+            w.f64(pos.1);
+            w.f64(*radius);
+        }
+    }
+}
+
+fn get_query(r: &mut R) -> Result<Query, WireError> {
+    match r.u8()? {
+        1 => Ok(Query::Cone {
+            center: (r.f64()?, r.f64()?),
+            radius: r.f64()?,
+            filter: get_filter(r)?,
+        }),
+        2 => Ok(Query::BoxSearch {
+            x0: r.f64()?,
+            y0: r.f64()?,
+            x1: r.f64()?,
+            y1: r.f64()?,
+            filter: get_filter(r)?,
+        }),
+        3 => Ok(Query::BrightestN { n: r.u64()? as usize, filter: get_filter(r)? }),
+        4 => Ok(Query::CrossMatch { pos: (r.f64()?, r.f64()?), radius: r.f64()? }),
+        _ => Err(WireError::Malformed),
+    }
+}
+
+fn put_source(w: &mut W, s: &ServedSource) {
+    w.u64(s.id as u64);
+    w.f64(s.pos.0);
+    w.f64(s.pos.1);
+    w.f64(s.p_gal);
+    w.f64(s.flux_r);
+    w.f64(s.flux_logsd);
+    for c in &s.colors {
+        w.f64(*c);
+    }
+    w.u8(s.converged as u8);
+}
+
+fn get_source(r: &mut R) -> Result<ServedSource, WireError> {
+    let id = r.u64()? as usize;
+    let pos = (r.f64()?, r.f64()?);
+    let p_gal = r.f64()?;
+    let flux_r = r.f64()?;
+    let flux_logsd = r.f64()?;
+    let mut colors = [0.0f64; 4];
+    for c in &mut colors {
+        *c = r.f64()?;
+    }
+    let converged = match r.u8()? {
+        0 => false,
+        1 => true,
+        _ => return Err(WireError::Malformed),
+    };
+    Ok(ServedSource { id, pos, p_gal, flux_r, flux_logsd, colors, converged })
+}
+
+fn put_sources(w: &mut W, v: &[ServedSource]) {
+    w.u32(v.len() as u32);
+    for s in v {
+        put_source(w, s);
+    }
+}
+
+fn get_sources(r: &mut R) -> Result<Vec<ServedSource>, WireError> {
+    let n = r.count(MIN_SOURCE)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(get_source(r)?);
+    }
+    Ok(out)
+}
+
+fn put_reply(w: &mut W, reply: &ShardReply) {
+    match reply {
+        ShardReply::Sources(v) => {
+            w.u8(1);
+            put_sources(w, v);
+        }
+        ShardReply::Match(m) => {
+            w.u8(2);
+            match m {
+                None => w.u8(0),
+                Some(mr) => {
+                    w.u8(1);
+                    put_source(w, &mr.source);
+                    w.f64(mr.dist);
+                }
+            }
+        }
+    }
+}
+
+fn get_reply(r: &mut R) -> Result<ShardReply, WireError> {
+    match r.u8()? {
+        1 => Ok(ShardReply::Sources(get_sources(r)?)),
+        2 => match r.u8()? {
+            0 => Ok(ShardReply::Match(None)),
+            1 => {
+                let source = get_source(r)?;
+                let dist = r.f64()?;
+                Ok(ShardReply::Match(Some(MatchResult { source, dist })))
+            }
+            _ => Err(WireError::Malformed),
+        },
+        _ => Err(WireError::Malformed),
+    }
+}
+
+fn encode_payload(msg: &Msg) -> Vec<u8> {
+    let mut w = W(Vec::new());
+    match msg {
+        Msg::Hello { version } => w.u8(*version),
+        Msg::HelloAck { version, epoch, n_shards } => {
+            w.u8(*version);
+            w.u64(*epoch);
+            w.u32(*n_shards);
+        }
+        Msg::Execute { req_id, min_epoch, entries } => {
+            w.u64(*req_id);
+            w.u64(*min_epoch);
+            w.u32(entries.len() as u32);
+            for (shard, queries) in entries {
+                w.u32(*shard);
+                w.u32(queries.len() as u32);
+                for q in queries {
+                    put_query(&mut w, q);
+                }
+            }
+        }
+        Msg::Reply { req_id, entries } => {
+            w.u64(*req_id);
+            w.u32(entries.len() as u32);
+            for replies in entries {
+                w.u32(replies.len() as u32);
+                for rep in replies {
+                    put_reply(&mut w, rep);
+                }
+            }
+        }
+        Msg::Publish { req_id, epoch, rows } => {
+            w.u64(*req_id);
+            w.u64(*epoch);
+            put_sources(&mut w, rows);
+        }
+        Msg::PublishAck { req_id, epoch } => {
+            w.u64(*req_id);
+            w.u64(*epoch);
+        }
+        Msg::Error { req_id, code, detail } => {
+            w.u64(*req_id);
+            w.u8(code.to_u8());
+            let bytes = detail.as_bytes();
+            w.u32(bytes.len() as u32);
+            w.0.extend_from_slice(bytes);
+        }
+    }
+    w.0
+}
+
+fn decode_payload(tag: u8, payload: &[u8]) -> Result<Msg, WireError> {
+    let mut r = R::new(payload);
+    let msg = match tag {
+        1 => Msg::Hello { version: r.u8()? },
+        2 => Msg::HelloAck { version: r.u8()?, epoch: r.u64()?, n_shards: r.u32()? },
+        3 => {
+            let req_id = r.u64()?;
+            let min_epoch = r.u64()?;
+            let n = r.count(MIN_ENTRY)?;
+            let mut entries = Vec::with_capacity(n);
+            for _ in 0..n {
+                let shard = r.u32()?;
+                let nq = r.count(MIN_QUERY)?;
+                let mut queries = Vec::with_capacity(nq);
+                for _ in 0..nq {
+                    queries.push(get_query(&mut r)?);
+                }
+                entries.push((shard, queries));
+            }
+            Msg::Execute { req_id, min_epoch, entries }
+        }
+        4 => {
+            let req_id = r.u64()?;
+            let n = r.count(4)?;
+            let mut entries = Vec::with_capacity(n);
+            for _ in 0..n {
+                let nr = r.count(MIN_REPLY)?;
+                let mut replies = Vec::with_capacity(nr);
+                for _ in 0..nr {
+                    replies.push(get_reply(&mut r)?);
+                }
+                entries.push(replies);
+            }
+            Msg::Reply { req_id, entries }
+        }
+        5 => Msg::Publish { req_id: r.u64()?, epoch: r.u64()?, rows: get_sources(&mut r)? },
+        6 => Msg::PublishAck { req_id: r.u64()?, epoch: r.u64()? },
+        7 => {
+            let req_id = r.u64()?;
+            let code = ErrorCode::from_u8(r.u8()?).ok_or(WireError::Malformed)?;
+            let n = r.count(1)?;
+            let detail =
+                String::from_utf8(r.take(n)?.to_vec()).map_err(|_| WireError::Malformed)?;
+            Msg::Error { req_id, code, detail }
+        }
+        t => return Err(WireError::BadTag(t)),
+    };
+    r.done()?;
+    Ok(msg)
+}
+
+// -------------------------------------------------------------- framing
+
+/// Encode `msg` as one complete frame (header + payload).
+pub fn encode_frame(msg: &Msg) -> Vec<u8> {
+    let payload = encode_payload(msg);
+    let mut frame = Vec::with_capacity(HEADER_LEN + payload.len());
+    frame.extend_from_slice(&MAGIC.to_le_bytes());
+    frame.push(VERSION);
+    frame.push(msg.tag());
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&payload);
+    frame
+}
+
+/// Write one frame; returns the bytes written.
+pub fn write_frame(w: &mut impl Write, msg: &Msg) -> Result<usize, WireError> {
+    let frame = encode_frame(msg);
+    w.write_all(&frame).map_err(|e| WireError::Io(e.kind()))?;
+    w.flush().map_err(|e| WireError::Io(e.kind()))?;
+    Ok(frame.len())
+}
+
+/// Read one frame. A clean close before any header byte is
+/// [`WireError::Closed`]; a close anywhere after the first byte is
+/// [`WireError::Truncated`]. The header is fully validated (magic,
+/// version, tag, length cap) before any payload buffer is allocated.
+pub fn read_frame(r: &mut impl Read) -> Result<Msg, WireError> {
+    let mut header = [0u8; HEADER_LEN];
+    let mut got = 0;
+    while got < HEADER_LEN {
+        match r.read(&mut header[got..]) {
+            Ok(0) => {
+                return Err(if got == 0 { WireError::Closed } else { WireError::Truncated })
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e.kind())),
+        }
+    }
+    let magic = u16::from_le_bytes([header[0], header[1]]);
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let version = header[2];
+    if version != VERSION {
+        return Err(WireError::Version(version));
+    }
+    let tag = header[3];
+    if !(1..=7).contains(&tag) {
+        return Err(WireError::BadTag(tag));
+    }
+    let len = u32::from_le_bytes([header[4], header[5], header[6], header[7]]);
+    if len > MAX_PAYLOAD {
+        return Err(WireError::Oversized(len));
+    }
+    let mut payload = vec![0u8; len as usize];
+    let mut got = 0;
+    while got < payload.len() {
+        match r.read(&mut payload[got..]) {
+            Ok(0) => return Err(WireError::Truncated),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e.kind())),
+        }
+    }
+    decode_payload(tag, &payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn awkward_source(rng: &mut Rng, id: usize) -> ServedSource {
+        ServedSource {
+            id,
+            pos: (rng.uniform() * 1e4, rng.uniform() * -1e-7),
+            p_gal: rng.uniform(),
+            flux_r: rng.lognormal(4.0, 2.0),
+            flux_logsd: rng.uniform() * 0.7 + 1e-12,
+            colors: [rng.normal(), rng.normal() * 1e9, rng.normal() * 1e-9, -0.0],
+            converged: rng.uniform() < 0.5,
+        }
+    }
+
+    fn sample_msgs() -> Vec<Msg> {
+        let mut rng = Rng::new(404);
+        let rows: Vec<ServedSource> = (0..17).map(|i| awkward_source(&mut rng, i)).collect();
+        vec![
+            Msg::Hello { version: VERSION },
+            Msg::HelloAck { version: VERSION, epoch: 42, n_shards: 8 },
+            Msg::Execute {
+                req_id: 7,
+                min_epoch: 3,
+                entries: vec![
+                    (
+                        0,
+                        vec![
+                            Query::Cone {
+                                center: (1.5, -2.25),
+                                radius: 1e-3,
+                                filter: SourceFilter::GalaxiesOnly,
+                            },
+                            Query::BrightestN { n: 0, filter: SourceFilter::StarsOnly },
+                        ],
+                    ),
+                    (
+                        5,
+                        vec![Query::BoxSearch {
+                            x0: -1.0,
+                            y0: 0.0,
+                            x1: f64::MAX,
+                            y1: 1e300,
+                            filter: SourceFilter::Any,
+                        }],
+                    ),
+                    (9, vec![Query::CrossMatch { pos: (0.0, -0.0), radius: 2.5 }]),
+                ],
+            },
+            Msg::Reply {
+                req_id: 7,
+                entries: vec![
+                    vec![ShardReply::Sources(rows[..5].to_vec()), ShardReply::Sources(vec![])],
+                    vec![ShardReply::Match(None)],
+                    vec![ShardReply::Match(Some(MatchResult {
+                        source: rows[6].clone(),
+                        dist: 0.125,
+                    }))],
+                ],
+            },
+            Msg::Publish { req_id: 9, epoch: 11, rows },
+            Msg::PublishAck { req_id: 9, epoch: 11 },
+            Msg::Error {
+                req_id: 3,
+                code: ErrorCode::Stale,
+                detail: "applied epoch 2 < bound 5".to_string(),
+            },
+        ]
+    }
+
+    #[test]
+    fn every_message_roundtrips_bit_exactly() {
+        for msg in sample_msgs() {
+            let frame = encode_frame(&msg);
+            let mut cursor = &frame[..];
+            let back = read_frame(&mut cursor).unwrap();
+            assert_eq!(back, msg);
+            assert!(cursor.is_empty(), "frame must consume exactly its bytes");
+            // a second encode is byte-stable
+            assert_eq!(encode_frame(&back), frame);
+        }
+    }
+
+    #[test]
+    fn frames_concatenate_on_one_stream() {
+        let msgs = sample_msgs();
+        let mut stream = Vec::new();
+        for m in &msgs {
+            stream.extend_from_slice(&encode_frame(m));
+        }
+        let mut cursor = &stream[..];
+        for m in &msgs {
+            assert_eq!(&read_frame(&mut cursor).unwrap(), m);
+        }
+        assert_eq!(read_frame(&mut cursor), Err(WireError::Closed));
+    }
+
+    #[test]
+    fn empty_stream_is_a_clean_close_partial_header_is_truncated() {
+        assert_eq!(read_frame(&mut &[][..]), Err(WireError::Closed));
+        let frame = encode_frame(&Msg::Hello { version: VERSION });
+        for cut in 1..HEADER_LEN {
+            assert_eq!(
+                read_frame(&mut &frame[..cut]),
+                Err(WireError::Truncated),
+                "cut at {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn mid_payload_disconnect_is_truncated() {
+        let frame = encode_frame(&Msg::PublishAck { req_id: 1, epoch: 2 });
+        for cut in HEADER_LEN..frame.len() {
+            assert_eq!(
+                read_frame(&mut &frame[..cut]),
+                Err(WireError::Truncated),
+                "cut at {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_version_and_tag_are_typed_errors() {
+        let good = encode_frame(&Msg::Hello { version: VERSION });
+        let mut bad = good.clone();
+        bad[0] = 0x00;
+        assert!(matches!(read_frame(&mut &bad[..]), Err(WireError::BadMagic(_))));
+        let mut bad = good.clone();
+        bad[2] = 99;
+        assert_eq!(read_frame(&mut &bad[..]), Err(WireError::Version(99)));
+        let mut bad = good.clone();
+        bad[3] = 0;
+        assert_eq!(read_frame(&mut &bad[..]), Err(WireError::BadTag(0)));
+        let mut bad = good;
+        bad[3] = 200;
+        assert_eq!(read_frame(&mut &bad[..]), Err(WireError::BadTag(200)));
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocation() {
+        // a header announcing a u32::MAX payload with no payload behind
+        // it: the reject must come from the length check, not from an
+        // allocation or a read failure
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&MAGIC.to_le_bytes());
+        frame.push(VERSION);
+        frame.push(1);
+        frame.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(read_frame(&mut &frame[..]), Err(WireError::Oversized(u32::MAX)));
+        // just over the cap is equally rejected...
+        let mut frame2 = frame.clone();
+        frame2[4..8].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert_eq!(
+            read_frame(&mut &frame2[..]),
+            Err(WireError::Oversized(MAX_PAYLOAD + 1))
+        );
+        // ...while a frame at the cap fails only on the missing payload
+        let mut frame3 = frame;
+        frame3[4..8].copy_from_slice(&MAX_PAYLOAD.to_le_bytes());
+        assert_eq!(read_frame(&mut &frame3[..]), Err(WireError::Truncated));
+    }
+
+    #[test]
+    fn hostile_element_counts_inside_a_payload_are_malformed() {
+        // a Publish frame whose row count claims far more rows than the
+        // payload holds: the count bound rejects it without allocating
+        let mut w = W(Vec::new());
+        w.u64(1); // req_id
+        w.u64(1); // epoch
+        w.u32(u32::MAX); // row count with no rows behind it
+        let payload = w.0;
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&MAGIC.to_le_bytes());
+        frame.push(VERSION);
+        frame.push(5);
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        assert_eq!(read_frame(&mut &frame[..]), Err(WireError::Malformed));
+    }
+
+    #[test]
+    fn trailing_garbage_and_bad_enums_are_malformed() {
+        let mut frame = encode_frame(&Msg::Hello { version: VERSION });
+        // grow the payload by one byte and fix up the length prefix
+        frame.push(0xAB);
+        let len = (frame.len() - HEADER_LEN) as u32;
+        frame[4..8].copy_from_slice(&len.to_le_bytes());
+        assert_eq!(read_frame(&mut &frame[..]), Err(WireError::Malformed));
+        // an Execute whose query tag is unknown
+        let mut w = W(Vec::new());
+        w.u64(1);
+        w.u64(0);
+        w.u32(1); // one entry
+        w.u32(0); // shard
+        w.u32(1); // one query
+        w.u8(9); // unknown query tag
+        w.u64(0);
+        w.u8(0);
+        let payload = w.0;
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&MAGIC.to_le_bytes());
+        frame.push(VERSION);
+        frame.push(3);
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        assert_eq!(read_frame(&mut &frame[..]), Err(WireError::Malformed));
+    }
+
+    #[test]
+    fn error_codes_roundtrip() {
+        for code in [
+            ErrorCode::BadVersion,
+            ErrorCode::Malformed,
+            ErrorCode::Stale,
+            ErrorCode::EpochGap,
+            ErrorCode::Internal,
+        ] {
+            assert_eq!(ErrorCode::from_u8(code.to_u8()), Some(code));
+        }
+        assert_eq!(ErrorCode::from_u8(0), None);
+        assert_eq!(ErrorCode::from_u8(6), None);
+    }
+}

@@ -22,6 +22,23 @@ use crate::serve::query::{
 };
 use crate::serve::store::Store;
 
+/// Plan a whole batch at once: for each shard, the input indices of
+/// the queries whose plan includes it (input order within a shard,
+/// ascending shards by position). This is the single copy of batch
+/// planning — the in-process [`execute_batch`] below and the net
+/// tier's request coalescing (same-shard sub-queries from one batch
+/// become one framed request) both group work through it, which is
+/// what makes their answer order, and therefore their bytes, agree.
+pub fn plan_batch<Q: Borrow<Query>>(store: &Store, queries: &[Q]) -> Vec<Vec<usize>> {
+    let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); store.shards.len()];
+    for (qi, q) in queries.iter().enumerate() {
+        for s in plan_shards(store, q.borrow()) {
+            by_shard[s].push(qi);
+        }
+    }
+    by_shard
+}
+
 /// Execute `queries` against the store, grouping per-shard work so the
 /// shard list is walked once per batch. Results are returned in input
 /// order and are byte-identical to per-query [`execute`]. Generic over
@@ -31,15 +48,9 @@ pub fn execute_batch<Q: Borrow<Query>>(store: &Store, queries: &[Q]) -> Vec<Quer
     if queries.len() <= 1 {
         return queries.iter().map(|q| execute(store, q.borrow())).collect();
     }
-    let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); store.shards.len()];
-    let mut replies: Vec<Vec<ShardReply>> = Vec::with_capacity(queries.len());
-    for (qi, q) in queries.iter().enumerate() {
-        let plan = plan_shards(store, q.borrow());
-        replies.push(Vec::with_capacity(plan.len()));
-        for s in plan {
-            by_shard[s].push(qi);
-        }
-    }
+    let by_shard = plan_batch(store, queries);
+    let mut replies: Vec<Vec<ShardReply>> =
+        (0..queries.len()).map(|_| Vec::new()).collect();
     // one pass over the shards: each shard answers every query that
     // planned it, in ascending shard order (the merge's canonical order)
     for (s, qis) in by_shard.iter().enumerate() {

@@ -36,7 +36,7 @@
 
 pub mod batch;
 
-pub use batch::execute_batch;
+pub use batch::{execute_batch, plan_batch};
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};

@@ -1,0 +1,382 @@
+//! Acceptance tests for the real RPC transport (`serve::net`):
+//!
+//! * byte parity with the in-process store across the middleware ×
+//!   consistency matrix (`--transport tcp` must answer exactly what
+//!   `query::execute` answers);
+//! * live-ingestion parity: epoch publishes ship over the wire to
+//!   every server before the front-end mirror advances, so `Fresh`
+//!   reads hold cross-process;
+//! * a shard-server *process* killed mid-run is absorbed by
+//!   replication 2 with zero failed queries (the CI smoke's contract);
+//! * hostile peers get typed errors and can only ever end their own
+//!   connection, never the server;
+//! * the `ShardClient` trait adapter serves real replies through the
+//!   simulated router's seam.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use celeste::ga::{Fabric, FabricConfig};
+use celeste::prng::Rng;
+use celeste::serve::dist::ShardClient;
+use celeste::serve::net::wire::{self, ErrorCode, Msg, WireError};
+use celeste::serve::net::{NetConn, NetShardClient, ShardServerHandle};
+use celeste::serve::{
+    self, execute, execute_on_shard, fuzz_query, Admission, Cached, Consistency, Consistent,
+    DriftConfig, DriftGen, Hedged, Ingestor, NetRouterEngine, Outcome, Query, QueryEngine,
+    Request, ShardServer, SourceFilter, Store, VersionedStore,
+};
+
+fn test_store(n: usize, shards: usize, seed: u64) -> Arc<Store> {
+    let snap = serve::snapshot::synthetic(n, seed);
+    Arc::new(Store::build(snap.sources, snap.width, snap.height, shards))
+}
+
+fn spawn_servers(store: &Arc<Store>, n: usize) -> (Vec<ShardServerHandle>, Vec<String>) {
+    let mut handles = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..n {
+        let server = ShardServer::bind(Arc::clone(store), "127.0.0.1:0").expect("bind");
+        let handle = server.spawn();
+        addrs.push(handle.addr().to_string());
+        handles.push(handle);
+    }
+    (handles, addrs)
+}
+
+/// Acceptance: `--transport tcp` is byte-identical to the in-process
+/// store for the full tier × middleware × consistency matrix.
+#[test]
+fn tcp_parity_across_middleware_and_consistency() {
+    let store = test_store(1200, 8, 311);
+    let (w, h) = (store.width, store.height);
+    let (_handles, addrs) = spawn_servers(&store, 2);
+    let levels = [Consistency::CachedOk, Consistency::Fresh, Consistency::AtMost(1)];
+    for arrangement in 0..3usize {
+        for (ci, &level) in levels.iter().enumerate() {
+            let net = NetRouterEngine::connect(Arc::clone(&store), &addrs, 2).expect("connect");
+            let base: Box<dyn QueryEngine> = Box::new(net);
+            let engine: Box<dyn QueryEngine> = match arrangement {
+                0 => base,
+                1 => Box::new(Cached::new(Hedged::new(base, 1e-6), 64)),
+                _ => Box::new(Admission::new(
+                    Hedged::new(Cached::new(base, 64), 1e-6),
+                    1 << 20,
+                )),
+            };
+            let engine = Consistent::new(engine, level);
+            let mut rng = Rng::new(7 + arrangement as u64 * 13 + ci as u64);
+            for i in 0..24usize {
+                let q = fuzz_query(&mut rng, w, h, i);
+                let want = execute(&store, &q);
+                // the repeat probes the cache path on arrangement > 0
+                for repeat in 0..2 {
+                    let resp = engine.call(Request::new(q.clone()));
+                    assert_eq!(
+                        resp.trace.outcome,
+                        Outcome::Served,
+                        "arrangement {arrangement} level {level:?} query {i} repeat {repeat}"
+                    );
+                    assert_eq!(
+                        resp.result.as_ref().expect("served"),
+                        &want,
+                        "arrangement {arrangement} level {level:?} query {i}: {q:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Acceptance: parity holds under live ingestion with publishes
+/// shipped over the wire — every server acks the epoch before the
+/// front-end mirror advances, so a `Fresh` read planned against the
+/// new head is answered from it on every server.
+#[test]
+fn tcp_fresh_reads_hold_under_live_ingestion_with_wire_publishes() {
+    let store = test_store(900, 6, 47);
+    let (w, h) = (store.width, store.height);
+    let (_handles, addrs) = spawn_servers(&store, 3);
+    let net = NetRouterEngine::connect(Arc::clone(&store), &addrs, 2).expect("connect");
+    let vs = Arc::new(VersionedStore::new(Arc::clone(&store)));
+    let mut ingestor = Ingestor::new(Arc::clone(&vs));
+    let mut drift = DriftGen::new(
+        &store.all_sources(),
+        w,
+        h,
+        DriftConfig { batch: 16, seed: 5, ..Default::default() },
+    );
+    let mut rng = Rng::new(23);
+    for round in 0..8u64 {
+        let rep = ingestor.apply(&drift.next_batch());
+        assert_eq!(rep.epoch, round + 1);
+        net.publish(&rep);
+        let head = net.epoch_view().expect("mirror");
+        assert_eq!(head.epoch, round + 1, "mirror advances with the publish");
+        for i in 0..5usize {
+            let q = fuzz_query(&mut rng, w, h, round as usize * 5 + i);
+            let want = execute(&head.store, &q);
+            let resp = net.call(Request::new(q.clone()).fresh());
+            assert_eq!(resp.trace.outcome, Outcome::Served, "round {round} query {i}");
+            assert_eq!(
+                resp.result.expect("served"),
+                want,
+                "round {round} query {i}: {q:?}"
+            );
+        }
+    }
+    assert_eq!(net.suspected(), vec![false; 3], "no server fell behind or failed");
+}
+
+/// A server that speaks just enough protocol to pass the connect-time
+/// ping, then dies: handshake, one empty Execute, gone. The canonical
+/// mid-run death as seen from the client side.
+fn spawn_flaky_server() -> std::net::SocketAddr {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    std::thread::spawn(move || {
+        if let Ok((mut s, _)) = listener.accept() {
+            let _ = wire::read_frame(&mut s); // Hello
+            let _ = wire::write_frame(
+                &mut s,
+                &Msg::HelloAck { version: wire::VERSION, epoch: 0, n_shards: 6 },
+            );
+            if let Ok(Msg::Execute { req_id, entries, .. }) = wire::read_frame(&mut s) {
+                // the connect-time ping carries no entries; echo the shape
+                let replies: Vec<Vec<celeste::serve::ShardReply>> =
+                    entries.iter().map(|_| Vec::new()).collect();
+                let _ = wire::write_frame(&mut s, &Msg::Reply { req_id, entries: replies });
+            }
+        }
+        // listener and connection drop here: further dials are refused
+    });
+    addr
+}
+
+/// Acceptance: a server dying mid-run is failed over — every query is
+/// still served byte-identically from surviving replicas, the dead
+/// server is suspected, and nothing is recorded as failed.
+#[test]
+fn dead_server_fails_over_with_zero_failed_queries() {
+    let store = test_store(700, 6, 99);
+    let (w, h) = (store.width, store.height);
+    let (_handles, mut addrs) = spawn_servers(&store, 2);
+    addrs.push(spawn_flaky_server().to_string()); // server 2 dies after the ping
+    let net = NetRouterEngine::connect(Arc::clone(&store), &addrs, 2).expect("connect");
+    let owns: Vec<usize> = (0..store.shards.len())
+        .filter(|&s| net.placement().replicas_of(s).contains(&2))
+        .collect();
+    assert!(!owns.is_empty(), "rendezvous gave the flaky server no replica slot");
+    let mut rng = Rng::new(3);
+    for i in 0..40usize {
+        let q = fuzz_query(&mut rng, w, h, i);
+        let want = execute(&store, &q);
+        let resp = net.call(Request::new(q.clone()));
+        assert_eq!(resp.trace.outcome, Outcome::Served, "query {i} must fail over, not fail");
+        assert_eq!(resp.result.expect("served"), want, "query {i}: {q:?}");
+    }
+    let m: std::collections::BTreeMap<String, f64> = net.metrics().into_iter().collect();
+    assert_eq!(m["net_failed"], 0.0, "replication must absorb the death");
+    assert!(net.suspected()[2], "the dead server must be suspected");
+    assert!(m["net_failovers"] >= 1.0, "the death must be recorded as a failover");
+}
+
+/// Kills children on drop so a failing test cannot leak shard-server
+/// processes past the test run.
+struct Reap(Vec<std::process::Child>);
+
+impl Drop for Reap {
+    fn drop(&mut self) {
+        for c in &mut self.0 {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// Acceptance (the CI smoke's contract, in-tree): three real
+/// shard-server *processes*, one killed mid-run, zero failed queries
+/// at replication 2 and full byte parity throughout.
+#[test]
+fn child_process_kill_mid_run_is_absorbed_at_replication_two() {
+    let store = test_store(800, 8, 2024);
+    let (w, h) = (store.width, store.height);
+    let snap_path =
+        std::env::temp_dir().join(format!("celeste-net-test-{}.json", std::process::id()));
+    serve::snapshot::save(&snap_path, &store).expect("write snapshot");
+    let exe = env!("CARGO_BIN_EXE_celeste");
+    let mut reap = Reap(Vec::new());
+    let mut addrs = Vec::new();
+    for _ in 0..3 {
+        let mut child = std::process::Command::new(exe)
+            .arg("shard-server")
+            .arg("--snapshot")
+            .arg(&snap_path)
+            .args(["--shards", "8", "--listen", "127.0.0.1:0"])
+            .stdout(std::process::Stdio::piped())
+            .spawn()
+            .expect("spawn shard-server");
+        let stdout = child.stdout.take().expect("piped");
+        reap.0.push(child);
+        let mut line = String::new();
+        std::io::BufRead::read_line(&mut std::io::BufReader::new(stdout), &mut line)
+            .expect("read announce line");
+        let addr = line.trim().rsplit(' ').next().unwrap_or_default().to_string();
+        assert!(addr.contains(':'), "bad announce line: {line:?}");
+        addrs.push(addr);
+    }
+    let net = NetRouterEngine::connect(Arc::clone(&store), &addrs, 2).expect("connect");
+    let mut rng = Rng::new(8);
+    for i in 0..30usize {
+        let q = fuzz_query(&mut rng, w, h, i);
+        let want = execute(&store, &q);
+        let resp = net.call(Request::new(q.clone()));
+        assert_eq!(resp.trace.outcome, Outcome::Served, "warm query {i}");
+        assert_eq!(resp.result.expect("served"), want, "warm query {i}");
+    }
+    // kill one server process for real: its sockets die with it
+    reap.0[1].kill().expect("kill shard-server 1");
+    let _ = reap.0[1].wait();
+    for i in 30..130usize {
+        let q = fuzz_query(&mut rng, w, h, i);
+        let want = execute(&store, &q);
+        let resp = net.call(Request::new(q.clone()));
+        assert_eq!(resp.trace.outcome, Outcome::Served, "post-kill query {i} must be served");
+        assert_eq!(resp.result.expect("served"), want, "post-kill query {i}");
+    }
+    let m: std::collections::BTreeMap<String, f64> = net.metrics().into_iter().collect();
+    assert_eq!(m["net_failed"], 0.0, "zero failed queries at replication 2");
+    assert!(net.suspected()[1], "the killed process must be suspected");
+    assert!(m["net_failovers"] >= 1.0);
+    std::fs::remove_file(&snap_path).ok();
+}
+
+/// Satellite acceptance: a hostile peer gets a typed error and only
+/// ever ends its own connection — a well-behaved client is served
+/// normally after every kind of abuse.
+#[test]
+fn hostile_peers_get_typed_errors_and_cannot_kill_the_server() {
+    let store = test_store(300, 4, 7);
+    let server = ShardServer::bind(Arc::clone(&store), "127.0.0.1:0").expect("bind");
+    let addr = server.local_addr();
+    let _handle = server.spawn();
+
+    // garbage bytes: answered with a typed Malformed error
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(b"GET / HTTP/1.1\r\n\r\n").expect("write");
+    match wire::read_frame(&mut s) {
+        Ok(Msg::Error { code, .. }) => assert_eq!(code, ErrorCode::Malformed),
+        other => panic!("want a typed Malformed error, got {other:?}"),
+    }
+
+    // a partial frame followed by a disconnect: the handler exits quietly
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let frame = wire::encode_frame(&Msg::Hello { version: wire::VERSION });
+    s.write_all(&frame[..5]).expect("write partial");
+    drop(s);
+
+    // an unsupported version byte in the header: typed BadVersion
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let mut bad = frame.clone();
+    bad[2] = 9;
+    s.write_all(&bad).expect("write");
+    match wire::read_frame(&mut s) {
+        Ok(Msg::Error { code, .. }) => assert_eq!(code, ErrorCode::BadVersion),
+        other => panic!("want a typed BadVersion error, got {other:?}"),
+    }
+
+    // a Hello negotiating a version the server does not speak
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(&wire::encode_frame(&Msg::Hello { version: 2 })).expect("write");
+    match wire::read_frame(&mut s) {
+        Ok(Msg::Error { code, .. }) => assert_eq!(code, ErrorCode::BadVersion),
+        other => panic!("want a typed BadVersion error, got {other:?}"),
+    }
+
+    // after all that abuse a well-behaved client is served normally
+    let conn = NetConn::new(addr.to_string());
+    let q = Query::BrightestN { n: 5, filter: SourceFilter::Any };
+    let replies = conn
+        .execute(vec![(0, vec![q.clone()])], 0, Some(Duration::from_secs(5)))
+        .expect("server must survive hostile peers");
+    assert_eq!(replies.len(), 1);
+    assert_eq!(replies[0][0], execute_on_shard(&store.shards[0], &q));
+}
+
+/// Satellite acceptance: the epoch machinery refuses what it must —
+/// unmet freshness bounds are `Stale`, skipped epochs are `EpochGap`,
+/// duplicate publishes are acked idempotently — all without ending
+/// the connection.
+#[test]
+fn epoch_bounds_and_gaps_are_typed_refusals() {
+    let store = test_store(200, 4, 11);
+    let server = ShardServer::bind(Arc::clone(&store), "127.0.0.1:0").expect("bind");
+    let addr = server.local_addr();
+    let _handle = server.spawn();
+    let conn = NetConn::new(addr.to_string());
+    let q = Query::BrightestN { n: 1, filter: SourceFilter::Any };
+
+    // the server is at epoch 0: a freshness bound of 999 is Stale
+    assert_eq!(
+        conn.execute(vec![(0, vec![q.clone()])], 999, None),
+        Err(WireError::Remote(ErrorCode::Stale))
+    );
+    // a shard index past the store is Malformed, not a crash
+    assert_eq!(
+        conn.execute(vec![(40, vec![q.clone()])], 0, None),
+        Err(WireError::Remote(ErrorCode::Malformed))
+    );
+    // skipping epochs is refused: the replica would diverge
+    let rows = store.all_sources()[..3].to_vec();
+    assert_eq!(conn.publish(5, &rows, None), Err(WireError::Remote(ErrorCode::EpochGap)));
+    // the next epoch applies; a duplicate is acked idempotently
+    conn.publish(1, &rows, None).expect("epoch 1 applies");
+    conn.publish(1, &rows, None).expect("duplicate publish acks idempotently");
+    // the same connection survived every refusal and the bound now holds
+    let replies = conn.execute(vec![(0, vec![q])], 1, None).expect("bound met");
+    assert_eq!(replies.len(), 1);
+}
+
+/// Connecting to a dead address is a typed error after the backoff
+/// budget, not a hang or a panic.
+#[test]
+fn connect_to_dead_address_errors_after_backoff() {
+    let store = test_store(50, 2, 1);
+    // bind-then-drop guarantees the port is closed
+    let addr = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+        l.local_addr().expect("addr").to_string()
+    };
+    let err = NetRouterEngine::connect(store, &[addr], 1).expect_err("must refuse");
+    assert!(matches!(err, WireError::Io(_)), "got {err:?}");
+}
+
+/// The `ShardClient` trait adapter: a real socket standing where the
+/// simulated `LocalShard`/`FabricShard` replicas do, returning the
+/// same replies `execute_on_shard` computes.
+#[test]
+fn net_shard_client_serves_through_the_trait_seam() {
+    let store = test_store(400, 4, 17);
+    let (w, h) = (store.width, store.height);
+    let server = ShardServer::bind(Arc::clone(&store), "127.0.0.1:0").expect("bind");
+    let addr = server.local_addr();
+    let _handle = server.spawn();
+    let conn = Arc::new(NetConn::new(addr.to_string()));
+    let mut fabric = Fabric::new(FabricConfig::default(), 2);
+    let mut node_free = vec![0.0f64; 2];
+    let mut rng = Rng::new(29);
+    for shard in 0..store.shards.len() {
+        let client = NetShardClient::new(Arc::clone(&conn), 1, shard as u32);
+        assert_eq!(client.node(), 1);
+        for i in 0..4usize {
+            let q = fuzz_query(&mut rng, w, h, shard * 4 + i);
+            let want = execute_on_shard(&store.shards[shard], &q);
+            let (reply, done) =
+                client.call(1.0, 0, &q, &store.shards[shard], &mut fabric, &mut node_free);
+            assert_eq!(reply, want, "shard {shard} query {i}: {q:?}");
+            assert!(done >= 1.0, "completion time advances from now");
+        }
+    }
+}

@@ -17,9 +17,10 @@ use std::time::Duration;
 
 use celeste::prng::Rng;
 use celeste::serve::{
-    self, execute, fuzz_query, Admission, Cached, DriftConfig, DriftGen, Hedged, Ingestor,
-    LoadGen, LoadGenConfig, Outcome, Query, QueryEngine, Request, SchedConfig, SchedKind, Server,
-    ServerConfig, ServerEngine, SourceFilter, Store, VersionedStore,
+    self, execute, fuzz_query, plan_shards, Admission, Cached, DriftConfig, DriftGen, Hedged,
+    Ingestor, LoadGen, LoadGenConfig, NetRouterEngine, Outcome, Query, QueryEngine, Request,
+    SchedConfig, SchedKind, Server, ServerConfig, ServerEngine, ShardServer, SourceFilter, Store,
+    VersionedStore,
 };
 
 fn test_store(n: usize, shards: usize, seed: u64) -> Arc<Store> {
@@ -229,6 +230,71 @@ fn admission_sheds_identically_across_schedulers_and_batches() {
             let report = server.shutdown();
             assert_eq!(report.accepted, 6, "{kind:?} batch {batch}");
             assert_eq!(report.shed, 9, "{kind:?} batch {batch}");
+        }
+    }
+}
+
+/// Satellite acceptance: the scheduler's shard grouping coalesces on
+/// the wire — all same-shard (and, transitively, same-server)
+/// sub-queries from one batch travel as ONE framed request per
+/// contacted server, and the coalesced answers stay byte-identical to
+/// direct execution.
+#[test]
+fn batched_subqueries_coalesce_into_one_frame_per_server() {
+    let store = test_store(1100, 8, 57);
+    let (w, h) = (store.width, store.height);
+
+    // one server owning everything: any batch must cost exactly 1 frame
+    let single = ShardServer::bind(Arc::clone(&store), "127.0.0.1:0").expect("bind");
+    let addr = single.local_addr().to_string();
+    let _h1 = single.spawn();
+    let net = NetRouterEngine::connect(Arc::clone(&store), &[addr], 1).expect("connect");
+    let mut rng = Rng::new(41);
+    for round in 0..6usize {
+        let batch: Vec<Query> = (0..5).map(|i| fuzz_query(&mut rng, w, h, round * 5 + i)).collect();
+        let before = net.frames_sent();
+        let got = net.call_batch(&batch);
+        assert_eq!(
+            net.frames_sent() - before,
+            1,
+            "round {round}: a whole batch to one server is one frame"
+        );
+        for (q, r) in batch.iter().zip(&got) {
+            assert_eq!(r.as_ref().expect("served"), &execute(&store, q), "{q:?}");
+        }
+    }
+
+    // three servers, replicas=1: frames == distinct servers the plan
+    // touches, never the number of sub-queries
+    let mut handles = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..3 {
+        let s = ShardServer::bind(Arc::clone(&store), "127.0.0.1:0").expect("bind");
+        addrs.push(s.local_addr().to_string());
+        handles.push(s.spawn());
+    }
+    let net = NetRouterEngine::connect(Arc::clone(&store), &addrs, 1).expect("connect");
+    for round in 0..6usize {
+        let batch: Vec<Query> = (0..5).map(|i| fuzz_query(&mut rng, w, h, round * 5 + i)).collect();
+        let mut servers = std::collections::BTreeSet::new();
+        let mut subqueries = 0usize;
+        for q in &batch {
+            for shard in plan_shards(&store, q) {
+                subqueries += 1;
+                servers.insert(net.placement().replicas_of(shard)[0]);
+            }
+        }
+        let before = net.frames_sent();
+        let got = net.call_batch(&batch);
+        let frames = (net.frames_sent() - before) as usize;
+        assert_eq!(
+            frames,
+            servers.len(),
+            "round {round}: one frame per contacted server ({subqueries} sub-queries planned)"
+        );
+        assert!(frames <= subqueries, "coalescing can only shrink the wire cost");
+        for (q, r) in batch.iter().zip(&got) {
+            assert_eq!(r.as_ref().expect("served"), &execute(&store, q), "{q:?}");
         }
     }
 }
