@@ -286,6 +286,36 @@ fn main() {
     let base_engine = RouterEngine::new(dist_router(&store, Routing::PowerOfTwo));
     let base_drive = dist_drive(&base_engine, &store);
     let base_p999 = base_drive.latency_all().quantile(0.999);
+
+    // --- per-stage latency breakdown of the p2c run: every request's
+    //     simulated time partitioned into queue wait (stalls + failure
+    //     detection), shard execution, and the fabric residual by the
+    //     router's span attribution; p50/p99 per stage land in the JSON
+    //     (schema v6) and are gated by bench_check ---
+    let stage_snap = base_engine.registry().snapshot();
+    let mut stage_fields: Vec<(&str, Value)> = Vec::new();
+    let mut stage_line = String::new();
+    for stage in serve::obs::STAGES {
+        // every stage lands in the JSON even when it never fired
+        // (n = 0, zero quantiles): the gate reads fixed paths, and an
+        // idle stage reporting 0.000 must not read as a missing metric
+        let (n, p50, p99) = match stage_snap.histograms.get(&format!("stage_{}", stage.name())) {
+            Some(s) if s.n > 0 => (s.n, s.p50(), s.p99()),
+            _ => (0, 0.0, 0.0),
+        };
+        stage_fields.push((
+            stage.name(),
+            obj_pub(vec![
+                ("n", Value::Num(n as f64)),
+                ("p50_ms", Value::Num(p50 * 1e3)),
+                ("p99_ms", Value::Num(p99 * 1e3)),
+            ]),
+        ));
+        if n > 0 {
+            stage_line.push_str(&format!(" {}={:.3}ms", stage.name(), p99 * 1e3));
+        }
+    }
+    println!("stage p99 (p2c, simulated):{stage_line}");
     let budgets = base_drive.latency_all().quantiles(&[0.90, 0.95, 0.99]);
     let mut best: Option<(f64, f64, u64, u64)> = None;
     for &b in &budgets {
@@ -476,7 +506,7 @@ fn main() {
         .map(|r| (r.name.as_str(), Value::Num(r.ns_per_iter)))
         .collect();
     let json = obj_pub(vec![
-        ("schema", Value::Str("celeste-bench-serve-v5".to_string())),
+        ("schema", Value::Str("celeste-bench-serve-v6".to_string())),
         ("single_query_ns", obj_pub(single_fields)),
         (
             "scheduler",
@@ -524,6 +554,13 @@ fn main() {
                     "bytes_moved_mb",
                     Value::Num(dist_reports[2].1.bytes_moved / 1e6),
                 ),
+            ]),
+        ),
+        (
+            "stages",
+            obj_pub(vec![
+                ("tier", Value::Str("dist-sim-p2c".to_string())),
+                ("per_stage", obj_pub(stage_fields)),
             ]),
         ),
         (

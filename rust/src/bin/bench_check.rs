@@ -38,7 +38,7 @@ struct Gate {
     label: &'static str,
 }
 
-const GATES: [Gate; 8] = [
+const GATES: [Gate; 11] = [
     Gate { path: "dist.random_p99_ms", label: "dist hotspot p99 (random routing)" },
     Gate { path: "dist.rr_p99_ms", label: "dist hotspot p99 (round-robin)" },
     Gate { path: "dist.p2c_p99_ms", label: "dist hotspot p99 (p2c)" },
@@ -47,6 +47,15 @@ const GATES: [Gate; 8] = [
     Gate { path: "ingest.quiesced_p99_ms", label: "drift read p99, quiesced" },
     Gate { path: "ingest.ingesting_p99_ms", label: "drift read p99, ingesting" },
     Gate { path: "ingest.fresh_p99_ms", label: "drift read p99, fresh consistency" },
+    // Per-stage breakdown of the same simulated p2c run (schema v6):
+    // gating each stage, not just the end-to-end tail, localizes a
+    // regression to queueing, shard service, or the fabric residual.
+    Gate { path: "stages.per_stage.queue_wait.p99_ms", label: "stage p99: queue wait (sim p2c)" },
+    Gate {
+        path: "stages.per_stage.shard_execute.p99_ms",
+        label: "stage p99: shard execute (sim p2c)",
+    },
+    Gate { path: "stages.per_stage.net_rtt.p99_ms", label: "stage p99: net rtt (sim p2c)" },
 ];
 
 /// Acceptance booleans that must be true in the fresh run.

@@ -1,0 +1,220 @@
+//! obs_check — the CI gate over a `serve-bench --obs-dump` file.
+//!
+//! Parses the jsonlite dump (`docs/OBSERVABILITY.md` documents the
+//! schema) and asserts the telemetry pipeline actually worked end to
+//! end, rather than silently degrading to empty metrics:
+//!
+//! * the schema tag is the one this build writes;
+//! * with `--expect-net`, real frames crossed the wire
+//!   (`net_frames > 0`) and at least one per-server snapshot was
+//!   scraped;
+//! * with `--expect-stale`, the deliberate stale-epoch probe was
+//!   refused and counted on *both* sides of the connection
+//!   (`net_stale_refusals` client-side, `stale_refusals` on a server);
+//! * with `--min-traces N`, at least `N` sampled traces survived, at
+//!   least one of them a *complete cross-process span tree*: client
+//!   spans carrying encode + decode, server spans carrying
+//!   shard_execute, joined by a non-zero trace id;
+//! * every trace's client spans sum to its end-to-end latency within
+//!   5% — the partition-by-construction invariant the unit tests pin,
+//!   re-checked here on a real multi-process run.
+//!
+//! Exit 0 when every asserted condition holds, 1 otherwise (each
+//! failure on stderr).
+
+use anyhow::{bail, Result};
+
+use celeste::jsonlite::{self, Value};
+
+/// The dump schema this checker understands (must match
+/// `serve::obs::write_dump`).
+const SCHEMA: &str = "celeste-obs-dump-v1";
+
+/// Client span sums must reproduce end-to-end latency within this
+/// fraction (the acceptance-criteria tolerance).
+const SPAN_SUM_TOL: f64 = 0.05;
+
+/// Sub-millisecond requests are dominated by clock granularity; skip
+/// the span-sum check below this total rather than fail on noise.
+const SPAN_SUM_MIN_MS: f64 = 0.05;
+
+fn counter(snapshot: &Value, name: &str) -> f64 {
+    snapshot
+        .get("counters")
+        .and_then(|c| c.get(name))
+        .and_then(Value::as_f64)
+        .unwrap_or(0.0)
+}
+
+fn span_sum_ms(spans: &Value) -> f64 {
+    spans
+        .as_obj()
+        .map(|m| m.values().filter_map(Value::as_f64).sum())
+        .unwrap_or(0.0)
+}
+
+fn has_span(spans: &Value, stage: &str) -> bool {
+    spans.get(stage).and_then(Value::as_f64).is_some_and(|v| v > 0.0)
+}
+
+/// A complete cross-process span tree: the client side attributed wire
+/// encode and decode, the server side attributed shard execution, and
+/// the two halves are joined by a real (non-zero) trace id.
+fn is_complete_tree(trace: &Value) -> bool {
+    let id_ok = trace.get("trace_id").and_then(Value::as_f64).is_some_and(|id| id > 0.0);
+    let client = trace.get("client_spans_ms");
+    let server = trace.get("server_spans_ms");
+    match (client, server) {
+        (Some(c), Some(s)) => {
+            id_ok
+                && has_span(c, "encode")
+                && has_span(c, "decode")
+                && has_span(s, "shard_execute")
+        }
+        _ => false,
+    }
+}
+
+fn check_traces(dump: &Value, min_traces: usize, failures: &mut Vec<String>) {
+    let traces = match dump.get("traces").and_then(Value::as_arr) {
+        Some(t) => t,
+        None => {
+            failures.push("dump has no `traces` array".to_string());
+            return;
+        }
+    };
+    if traces.len() < min_traces {
+        failures.push(format!(
+            "wanted at least {min_traces} sampled trace(s), dump has {}",
+            traces.len()
+        ));
+    }
+    if min_traces > 0 && !traces.iter().any(is_complete_tree) {
+        failures.push(
+            "no complete cross-process span tree: want one trace with client \
+             encode+decode spans, server shard_execute spans, and a non-zero \
+             trace id"
+                .to_string(),
+        );
+    }
+    for trace in traces {
+        let id = trace.get("trace_id").and_then(Value::as_f64).unwrap_or(0.0);
+        let total_ms = trace.get("total_ms").and_then(Value::as_f64).unwrap_or(0.0);
+        if total_ms < SPAN_SUM_MIN_MS {
+            continue;
+        }
+        let sum_ms = trace.get("client_spans_ms").map(span_sum_ms).unwrap_or(0.0);
+        let err = (sum_ms - total_ms).abs() / total_ms;
+        if err > SPAN_SUM_TOL {
+            failures.push(format!(
+                "trace {id:.0}: client spans sum to {sum_ms:.3}ms but end-to-end \
+                 latency is {total_ms:.3}ms ({:.1}% apart, tolerance {:.0}%)",
+                err * 100.0,
+                SPAN_SUM_TOL * 100.0
+            ));
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let mut dump_path: Option<String> = None;
+    let mut expect_net = false;
+    let mut expect_stale = false;
+    let mut min_traces = 0usize;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--dump" => match args.next() {
+                Some(v) => dump_path = Some(v),
+                None => bail!("--dump needs a file path"),
+            },
+            "--expect-net" => expect_net = true,
+            "--expect-stale" => expect_stale = true,
+            "--min-traces" => match args.next().map(|v| v.parse::<usize>()) {
+                Some(Ok(n)) => min_traces = n,
+                _ => bail!("--min-traces needs a non-negative integer"),
+            },
+            other => bail!(
+                "unknown argument {other:?} \
+                 (want --dump FILE [--expect-net] [--expect-stale] [--min-traces N])"
+            ),
+        }
+    }
+    let Some(dump_path) = dump_path else {
+        bail!("usage: obs_check --dump FILE [--expect-net] [--expect-stale] [--min-traces N]");
+    };
+
+    let text = match std::fs::read_to_string(&dump_path) {
+        Ok(t) => t,
+        Err(e) => bail!("cannot read {dump_path}: {e}"),
+    };
+    let dump = match jsonlite::parse(&text) {
+        Ok(v) => v,
+        Err(e) => bail!("cannot parse {dump_path}: {e}"),
+    };
+
+    let mut failures: Vec<String> = Vec::new();
+
+    match dump.get("schema").and_then(Value::as_str) {
+        Some(SCHEMA) => {}
+        got => failures.push(format!("dump schema is {got:?}, want {SCHEMA:?}")),
+    }
+
+    let metrics = dump.get("metrics");
+    let Some(metrics) = metrics else {
+        for f in &failures {
+            eprintln!("obs_check FAIL: {f}");
+        }
+        bail!("dump has no `metrics` object");
+    };
+    let servers = dump.get("servers").and_then(Value::as_arr).unwrap_or(&[]);
+
+    if expect_net {
+        let frames = counter(metrics, "net_frames");
+        if frames <= 0.0 {
+            failures.push(format!(
+                "net_frames is {frames:.0}; a tcp run must move at least one frame"
+            ));
+        }
+        if servers.is_empty() {
+            failures.push("no scraped server snapshots in a tcp dump".to_string());
+        }
+    }
+    if expect_stale {
+        let client_side = counter(metrics, "net_stale_refusals");
+        if client_side <= 0.0 {
+            failures.push(
+                "net_stale_refusals is 0 client-side; the stale probe did not register"
+                    .to_string(),
+            );
+        }
+        if !servers.iter().any(|s| counter(s, "stale_refusals") > 0.0) {
+            failures.push(
+                "no server snapshot counted a stale_refusal; the probe's refusal \
+                 was not attributed server-side"
+                    .to_string(),
+            );
+        }
+    }
+    check_traces(&dump, min_traces, &mut failures);
+
+    let n_traces = dump.get("traces").and_then(Value::as_arr).map_or(0, <[Value]>::len);
+    println!(
+        "obs_check: {dump_path}: {} server snapshot(s), {} trace(s), \
+         net_frames={:.0}, stale_refusals={:.0}",
+        servers.len(),
+        n_traces,
+        counter(metrics, "net_frames"),
+        counter(metrics, "net_stale_refusals"),
+    );
+
+    if failures.is_empty() {
+        println!("obs_check: OK");
+        Ok(())
+    } else {
+        for f in &failures {
+            eprintln!("obs_check FAIL: {f}");
+        }
+        bail!("{} obs gate failure(s)", failures.len());
+    }
+}

@@ -117,6 +117,20 @@ USAGE: celeste <command> [flags]
                            (revive specs are rejected), and ingest
                            publishes ship over the wire to every
                            server before the front-end epoch advances
+           Observability (docs/OBSERVABILITY.md):
+           [--obs-dump F]  write a jsonlite metrics + trace dump at
+                           exit (schema celeste-obs-dump-v1). On the
+                           tcp transport this also scrapes every live
+                           shard server's registry over the wire
+                           (StatsReq) and runs a stale-consistency
+                           probe whose refusal must round-trip
+           [--trace-sample N] keep every Nth request's per-stage span
+                           breakdown (distributed tiers; requires
+                           --dist-nodes)
+           [--slow-ms T]   slow-query log: keep and print every request
+                           slower than T ms with its span breakdown
+                           (distributed tiers; sim tier thresholds are
+                           in simulated milliseconds)
   shard-server --snapshot F        serve one catalog partition over TCP
            [--shards K]    shard count (default 8; must match the
                            front-end's --shards)
@@ -335,6 +349,50 @@ fn make_ingest_driver(
     serve::IngestDriver::new(ingestor, drift, ingest_qps, seed)
 }
 
+/// The observability knobs shared by every serve-bench tier.
+struct ObsOpts {
+    /// `--obs-dump FILE`: jsonlite metrics + trace dump path
+    dump: Option<String>,
+    /// `--trace-sample N`: keep every Nth request's spans (0 = off)
+    trace_every: u64,
+    /// `--slow-ms T` converted to seconds (0 = off)
+    slow_s: f64,
+}
+
+fn parse_obs(cli: &Cli) -> Result<ObsOpts> {
+    let trace_every = cli.flag_count("trace-sample", 0, 1).map_err(anyhow::Error::msg)? as u64;
+    let slow_ms = cli.flag_parse("slow-ms", 0.0f64);
+    if cli.flag("slow-ms").is_some() && slow_ms <= 0.0 {
+        bail!(
+            "--slow-ms must be a positive number of milliseconds, got {:?}",
+            cli.flag("slow-ms").unwrap()
+        );
+    }
+    Ok(ObsOpts {
+        dump: cli.flag("obs-dump").map(str::to_string),
+        trace_every,
+        slow_s: slow_ms * 1e-3,
+    })
+}
+
+/// One-line per-stage p99 breakdown from a registry snapshot's
+/// `stage_*` histograms, omitting stages that never fired.
+fn stage_p99_line(snap: &serve::obs::Snapshot) -> Option<String> {
+    let mut parts = Vec::new();
+    for stage in serve::obs::STAGES {
+        if let Some(s) = snap.histograms.get(&format!("stage_{}", stage.name())) {
+            if s.n > 0 {
+                parts.push(format!("{}={:.3}ms", stage.name(), s.p99() * 1e3));
+            }
+        }
+    }
+    if parts.is_empty() {
+        None
+    } else {
+        Some(format!("stage p99: {}", parts.join(" ")))
+    }
+}
+
 fn cmd_serve_bench(cli: &Cli) -> Result<()> {
     // --threads sizes the single-host worker pool; --dist-nodes replaces
     // that pool with the simulated multi-node tier. Naming both is a
@@ -373,6 +431,14 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
         for key in ["replicas", "routing", "kill-node", "hedge-ms", "hedge-budget"] {
             if cli.flag(key).is_some() {
                 bail!("--{key} only applies to the distributed tier; add --dist-nodes N");
+            }
+        }
+        for key in ["trace-sample", "slow-ms"] {
+            if cli.flag(key).is_some() {
+                bail!(
+                    "--{key} samples per-request span traces, which live on the distributed \
+                     tiers; add --dist-nodes N (the single-host tier still supports --obs-dump)"
+                );
             }
         }
     } else {
@@ -440,8 +506,12 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
         };
     }
     let consistency = parse_consistency(cli)?;
+    let obs = parse_obs(cli)?;
     let ingest_qps = cli.flag_parse("ingest-qps", 0.0f64).max(0.0);
     let ingest_batch = count("ingest-batch", 32, 1)?;
+    // the single-host tier's unified metrics view: drive + worker-pool
+    // reports absorbed per phase, dumped at exit with --obs-dump
+    let obs_reg = serve::Registry::new();
 
     // --- phase 1: open loop (latency + admission control at --qps).
     //     Admission is a middleware layer now; the server's own queue
@@ -502,6 +572,8 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
         });
         let report = server.shutdown();
         ol.absorb_server(&report);
+        obs_reg.absorb_drive(&ol);
+        obs_reg.absorb_server(&report);
         let label = if ingesting { "ingesting" } else { "quiesced" };
         println!(
             "open loop ({mix}, {label}): offered {:.0} qps for {:.1}s",
@@ -544,7 +616,9 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
         let engine = serve::ServerEngine::new(std::sync::Arc::clone(&server));
         let mut gen = serve::LoadGen::new(gen_cfg.clone(), width, height);
         let cl = serve::drive_closed_loop(&engine, &mut gen, clients, secs);
-        let _ = server.shutdown();
+        let report = server.shutdown();
+        obs_reg.absorb_drive(&cl);
+        obs_reg.absorb_server(&report);
         let all = cl.latency_all();
         println!(
             "closed loop {t} worker(s), {clients} clients: {:.0} qps (completed {}, shed {}, p50={:.3}ms p99={:.3}ms)",
@@ -554,6 +628,14 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
             all.p50() * 1e3,
             all.p99() * 1e3
         );
+    }
+    let snap = obs_reg.snapshot();
+    if let Some(line) = stage_p99_line(&snap) {
+        println!("{line}");
+    }
+    if let Some(path) = &obs.dump {
+        serve::obs::write_dump(path, &snap, &[], &[])?;
+        println!("wrote obs dump {path}");
     }
     Ok(())
 }
@@ -608,6 +690,7 @@ fn cmd_serve_bench_dist(
         None => None,
     };
     let consistency = parse_consistency(cli)?;
+    let obs = parse_obs(cli)?;
     let ingest_qps = cli.flag_parse("ingest-qps", 0.0f64).max(0.0);
     let ingest_batch = cli.flag_count("ingest-batch", 32, 1).map_err(anyhow::Error::msg)?;
     // the sim tier models backlog as latency; an admission layer on top
@@ -616,6 +699,9 @@ fn cmd_serve_bench_dist(
     let dist_spec = serve::LayerSpec { admit_depth: 0, ..spec.clone() };
 
     let mut phase_stats: Vec<(String, f64, f64)> = Vec::new();
+    let mut obs_snaps: Vec<serve::obs::Snapshot> = Vec::new();
+    let mut obs_traces: Vec<serve::TraceRecord> = Vec::new();
+    let mut obs_seen = 0u64;
     for ingesting in [false, true] {
         if ingesting && ingest_qps <= 0.0 {
             continue;
@@ -633,6 +719,7 @@ fn cmd_serve_bench_dist(
             println!("{}", router.placement.summary());
         }
         let rengine = serve::RouterEngine::new(router);
+        rengine.sampler().configure(obs.trace_every, obs.slow_s);
         let mut engine = serve::layered(Box::new(rengine.clone()), &dist_spec);
         if let Some(c) = consistency {
             engine = Box::new(serve::Consistent::new(engine, c));
@@ -699,6 +786,20 @@ fn cmd_serve_bench_dist(
             );
         }
         phase_stats.push((label.to_string(), report.latency_all().p99(), hit_rate));
+        // fold this phase's drive + engine-stack accounting into the
+        // tier's registry and keep the snapshot for the merged dump
+        rengine.registry().absorb_drive(&drive);
+        rengine.registry().absorb_metrics(&engine.metrics());
+        let snap = rengine.registry().snapshot();
+        if let Some(line) = stage_p99_line(&snap) {
+            println!("{line} (simulated)");
+        }
+        for line in rengine.sampler().slow_log() {
+            println!("{line}");
+        }
+        obs_snaps.push(snap);
+        obs_traces.extend(rengine.sampler().records());
+        obs_seen += rengine.sampler().seen();
     }
     if phase_stats.len() == 2 {
         println!(
@@ -708,6 +809,14 @@ fn cmd_serve_bench_dist(
             phase_stats[0].2 * 100.0,
             phase_stats[1].2 * 100.0
         );
+    }
+    if obs.trace_every > 0 {
+        println!("trace sample: kept {} of {} request(s)", obs_traces.len(), obs_seen);
+    }
+    if let Some(path) = &obs.dump {
+        let merged = serve::obs::Snapshot::merge_all(&obs_snaps);
+        serve::obs::write_dump(path, &merged, &[], &obs_traces)?;
+        println!("wrote obs dump {path} ({} trace(s))", obs_traces.len());
     }
     Ok(())
 }
@@ -825,6 +934,8 @@ fn drive_serve_tcp(
     }
 
     let net = serve::NetRouterEngine::connect(std::sync::Arc::clone(&store), &addrs, replicas)?;
+    let obs = parse_obs(cli)?;
+    net.configure_tracing(obs.trace_every, obs.slow_s);
     println!("{}", net.placement().summary());
     let mut engine = serve::layered(Box::new(net.clone()), &dist_spec);
     if let Some(c) = consistency {
@@ -871,20 +982,54 @@ fn drive_serve_tcp(
     let m: std::collections::BTreeMap<String, f64> = net.metrics().into_iter().collect();
     println!(
         "wire: {:.0} frame(s), {:.3} MB sent, {:.3} MB recv, {:.0} reconnect(s), \
-         {:.0} failover(s), encode {:.1}us decode {:.1}us per frame",
+         {:.0} timeout(s), {:.0} io error(s), {:.0} failover(s), {:.0} stale refusal(s), \
+         encode {:.1}us decode {:.1}us per frame",
         m["net_frames"],
         m["net_bytes_sent"] / 1e6,
         m["net_bytes_recv"] / 1e6,
         m["net_reconnects"],
+        m["net_timeouts"],
+        m["net_io_errors"],
         m["net_failovers"],
+        m["net_stale_refusals"],
         m["net_encode_us_per_frame"],
         m["net_decode_us_per_frame"]
     );
+    if let Some(line) = stage_p99_line(&net.registry().snapshot()) {
+        println!("{line}");
+    }
     if let Some(d) = &driver {
         println!(
             "ingest: {} publish(es) shipped to every live server, head at epoch {}",
             d.publishes,
             d.ingestor().versioned().epoch()
+        );
+    }
+    if obs.trace_every > 0 {
+        println!(
+            "trace sample: kept {} of {} request(s)",
+            net.sampler().records().len(),
+            net.sampler().seen()
+        );
+    }
+    for line in net.sampler().slow_log() {
+        println!("{line}");
+    }
+    if let Some(path) = &obs.dump {
+        // the probe proves the stale-refusal path end to end: the
+        // server must refuse a bound one past the head, incrementing
+        // its counter and ours, both of which land in the dump below
+        let refused = net.probe_stale();
+        println!("stale probe: refused={refused}");
+        net.registry().absorb_drive(&drive);
+        let metrics = net.obs_snapshot();
+        let servers = net.scrape();
+        let traces = net.sampler().records();
+        serve::obs::write_dump(path, &metrics, &servers, &traces)?;
+        println!(
+            "wrote obs dump {path} ({} server snapshot(s), {} trace(s))",
+            servers.len(),
+            traces.len()
         );
     }
     // the CI smoke greps this exact line: replication must absorb the

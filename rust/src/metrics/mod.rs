@@ -148,7 +148,7 @@ const SAMPLE_CAP: usize = 1 << 16;
 /// once for several quantiles. Used for the serve layer's latency
 /// reporting and the cluster simulator's per-task latency
 /// distribution.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Stats {
     pub n: u64,
     pub sum: f64,
@@ -329,6 +329,24 @@ impl Stats {
         } else {
             Some(self.quantile(q))
         }
+    }
+
+    /// Read access to the retained reservoir (unordered). The
+    /// observability wire export ships these so merged quantiles stay
+    /// deterministic across a process boundary.
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Rebuild a `Stats` from exported parts (the inverse of reading
+    /// the public moments plus [`Stats::samples`]); used by the wire
+    /// codec to reconstruct a remote registry's histograms. The
+    /// reservoir is truncated to the cap, so a hostile peer cannot make
+    /// the receiver retain unbounded samples.
+    pub fn from_parts(n: u64, sum: f64, sum2: f64, min: f64, max: f64, samples: Vec<f64>) -> Stats {
+        let mut samples = samples;
+        samples.truncate(SAMPLE_CAP);
+        Stats { n, sum, sum2, min, max, samples, rng_state: 0x9E3779B97F4A7C15 }
     }
 
     pub fn p50(&self) -> f64 {

@@ -48,6 +48,7 @@ use crate::prng::Rng;
 use crate::serve::engine::drive::DriveReport;
 use crate::serve::engine::Consistency;
 use crate::serve::ingest::EpochStore;
+use crate::serve::obs::{SpanSet, Stage};
 
 use super::super::query::{
     merge_replies, plan_shards, Query, QueryResult, N_QUERY_CLASSES, QUERY_CLASSES,
@@ -561,6 +562,24 @@ impl Router {
         hedge: Option<f64>,
         consistency: Consistency,
     ) -> (Option<QueryResult>, f64) {
+        let (res, done, _) = self.execute_traced(now, q, hedge, consistency);
+        (res, done)
+    }
+
+    /// [`Router::execute_with`] plus the per-stage span breakdown of
+    /// the *critical branch* — the sub-query whose reply lands last and
+    /// therefore defines the front-end completion time. Its stall/
+    /// detection delay is `QueueWait`, its replica service time is
+    /// `ShardExecute`, and the remaining fabric transfer time is
+    /// `NetRtt`, so the spans sum to exactly `done - now` (simulated
+    /// seconds).
+    pub fn execute_traced(
+        &mut self,
+        now: f64,
+        q: &Query,
+        hedge: Option<f64>,
+        consistency: Consistency,
+    ) -> (Option<QueryResult>, f64, SpanSet) {
         self.queries += 1;
         self.schedule.apply(now, &mut self.alive, &mut self.suspected);
         for fl in &mut self.inflight {
@@ -572,6 +591,9 @@ impl Router {
         let planned = plan_shards(&head.store, q);
         let mut replies: Vec<ShardReply> = Vec::with_capacity(planned.len());
         let mut done = now;
+        // (reply time, stall+detect wait, replica service) of the
+        // slowest branch — the one whose timings explain `done`
+        let mut crit = (now, 0.0f64, 0.0f64);
         for shard in planned {
             // scatter: dispatch this range's sub-query, failing over past
             // replicas the router discovers to be dead and stalling past
@@ -623,7 +645,8 @@ impl Router {
                 );
                 self.inflight[node].push(t);
                 self.served_per_node[node] += 1;
-                self.busy_per_node[node] += self.cfg.cost.service_secs(reply.rows());
+                let service = self.cfg.cost.service_secs(reply.rows());
+                self.busy_per_node[node] += service;
                 let t_reply = match hedge {
                     Some(budget) if t - t_send > budget => self.hedge(
                         shard,
@@ -637,25 +660,43 @@ impl Router {
                     ),
                     _ => t,
                 };
-                break Some((reply, t_reply));
+                break Some((reply, t_reply, t_send - now, service));
             };
             match dispatched {
-                Some((reply, t)) => {
+                Some((reply, t, wait, service)) => {
                     if detect_delay > 0.0 {
                         self.failover.push(detect_delay);
+                    }
+                    if t >= done {
+                        crit = (t, wait, service);
                     }
                     done = done.max(t);
                     replies.push(reply);
                 }
                 None => {
                     self.failed += 1;
-                    return (None, t_send.max(done));
+                    let end = t_send.max(done);
+                    // a lost query spent its whole life waiting for a
+                    // replica that never qualified
+                    let mut spans = SpanSet::new();
+                    spans.add(Stage::QueueWait, end - now);
+                    return (None, end, spans);
                 }
             }
         }
+        let mut spans = SpanSet::new();
+        if done > now {
+            let (t, wait, service) = crit;
+            let total = t - now;
+            let wait = wait.min(total);
+            let service = service.min(total - wait);
+            spans.add(Stage::QueueWait, wait);
+            spans.add(Stage::ShardExecute, service);
+            spans.add(Stage::NetRtt, total - wait - service);
+        }
         // the same merge the single-host engine is built from: the
         // distributed answer is byte-identical by construction
-        (Some(merge_replies(q, replies)), done)
+        (Some(merge_replies(q, replies)), done, spans)
     }
 }
 

@@ -99,6 +99,10 @@ pub struct Request {
     /// replica hedge budget, seconds: replicated tiers issue a second
     /// sub-query when the first exceeds it (stamped by [`Hedged`])
     pub hedge: Option<f64>,
+    /// process-unique trace id, stamped at construction and carried
+    /// across the wire in `Execute`/`Reply` frames so client- and
+    /// server-side spans of one request join into one span tree
+    pub trace_id: u64,
 }
 
 impl Request {
@@ -110,6 +114,7 @@ impl Request {
             deadline: None,
             consistency: Consistency::CachedOk,
             hedge: None,
+            trace_id: super::obs::next_trace_id(),
         }
     }
 
@@ -171,6 +176,16 @@ pub struct Trace {
     /// refuses to fill from such responses: a stale result stamped
     /// with head coverage would otherwise look epoch-exact forever.
     pub stale_content: bool,
+    /// the request's trace id, echoed back so asynchronous observers
+    /// can join this response to its request (0 = untraced path)
+    pub trace_id: u64,
+    /// per-stage client-side (front-end) span timings; the stages
+    /// partition `done - at` for tiers that fill them (see
+    /// [`crate::serve::obs`])
+    pub spans: super::obs::SpanSet,
+    /// server-side stage timings returned in tcp `Reply` frames,
+    /// summed over contacted servers (empty on single-process tiers)
+    pub server_spans: super::obs::SpanSet,
 }
 
 impl Default for Trace {
@@ -183,6 +198,9 @@ impl Default for Trace {
             hedge_wins: 0,
             fabric_bytes: 0.0,
             stale_content: false,
+            trace_id: 0,
+            spans: super::obs::SpanSet::new(),
+            server_spans: super::obs::SpanSet::new(),
         }
     }
 }

@@ -15,6 +15,7 @@ use std::time::Instant;
 
 use crate::serve::dist::{DistReport, Router};
 use crate::serve::ingest::{EpochStore, IngestReport, StoreSource, VersionedStore};
+use crate::serve::obs::{Registry, TraceRecord, TraceSampler};
 use crate::serve::query::{execute, execute_scan};
 use crate::serve::server::Server;
 use crate::serve::store::{ServedSource, Store};
@@ -157,6 +158,8 @@ impl QueryEngine for ServerEngine {
 #[derive(Clone)]
 pub struct RouterEngine {
     router: Arc<Mutex<Router>>,
+    registry: Arc<Registry>,
+    sampler: Arc<TraceSampler>,
     desc: String,
 }
 
@@ -169,7 +172,23 @@ impl RouterEngine {
             router.placement.replicas,
             router.placement.n_shards()
         );
-        RouterEngine { router: Arc::new(Mutex::new(router)), desc }
+        RouterEngine {
+            router: Arc::new(Mutex::new(router)),
+            registry: Arc::new(Registry::new()),
+            sampler: Arc::new(TraceSampler::new()),
+            desc,
+        }
+    }
+
+    /// The tier's metrics registry (per-stage `stage_*` histograms in
+    /// simulated seconds, counters folded in by the bench harness).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// The tier's trace sampler (`--trace-sample` / `--slow-ms`).
+    pub fn sampler(&self) -> &Arc<TraceSampler> {
+        &self.sampler
     }
 
     /// Read-only access to the shared router (placement, counters).
@@ -204,8 +223,8 @@ impl QueryEngine for RouterEngine {
         let hedges0 = r.hedges;
         let wins0 = r.hedge_wins;
         let lagged0 = r.lagged_subqueries;
-        let (result, done) =
-            r.execute_with(req.at, &req.query, req.hedge, req.consistency);
+        let (result, done, spans) =
+            r.execute_traced(req.at, &req.query, req.hedge, req.consistency);
         let subs1: u64 = r.served_per_node.iter().sum();
         let trace = Trace {
             outcome: if result.is_some() { Outcome::Served } else { Outcome::Failed },
@@ -215,8 +234,21 @@ impl QueryEngine for RouterEngine {
             hedge_wins: (r.hedge_wins - wins0) as u32,
             fabric_bytes: r.fabric.bytes_moved - bytes0,
             stale_content: r.lagged_subqueries > lagged0,
+            trace_id: req.trace_id,
+            spans,
+            server_spans: Default::default(),
         };
         drop(r);
+        self.registry.record_spans(&spans);
+        if self.sampler.enabled() {
+            self.sampler.observe(TraceRecord {
+                trace_id: req.trace_id,
+                total_s: done - req.at,
+                spans,
+                server_spans: Default::default(),
+                slow: false,
+            });
+        }
         enforce_deadline(req.at, req.deadline, Response { result, done, trace })
     }
 

@@ -34,6 +34,10 @@
 //!   binary wire protocol, multi-process shard servers, a pipelined
 //!   framed client with reconnect/backoff, and a front-end router
 //!   engine with cross-process epoch publishes (`--transport tcp`).
+//! * [`obs`] — unified observability: the metrics registry every tier's
+//!   counters fold into, per-stage request spans propagated across the
+//!   wire by trace id, and the sampled trace/slow-query log behind
+//!   `serve-bench --obs-dump`.
 //!
 //! Entry points: `celeste serve-bench` (CLI) and `benches/bench_serve`.
 
@@ -42,6 +46,7 @@ pub mod engine;
 pub mod ingest;
 pub mod loadgen;
 pub mod net;
+pub mod obs;
 pub mod query;
 pub mod sched;
 pub mod server;
@@ -60,6 +65,7 @@ pub use ingest::{
 };
 pub use loadgen::{fuzz_query, LoadGen, LoadGenConfig, QueryMix};
 pub use net::{NetRouterEngine, NetShardClient, ShardServer};
+pub use obs::{Registry, SpanSet, Stage, TraceRecord, TraceSampler};
 pub use query::{
     cross_match_catalog, execute, execute_on_shard, execute_scan, merge_replies, plan_shards,
     MatchResult, Query, QueryClass, QueryResult, ShardReply, SourceFilter, N_QUERY_CLASSES,

@@ -17,11 +17,12 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::ga::Fabric;
+use crate::serve::obs::{self, SpanSet};
 use crate::serve::query::{Query, ShardReply};
 use crate::serve::store::{ServedSource, Shard};
 
 use super::super::dist::ShardClient;
-use super::wire::{self, read_frame, ErrorCode, Msg, WireError, VERSION};
+use super::wire::{self, read_frame, read_frame_timed, ErrorCode, Msg, WireError, VERSION};
 
 /// Read timeout when a request carries no deadline.
 const DEFAULT_TIMEOUT: Duration = Duration::from_secs(5);
@@ -53,6 +54,25 @@ pub struct NetConn {
     pub bytes_recv: AtomicU64,
     pub encode_ns: AtomicU64,
     pub decode_ns: AtomicU64,
+    /// typed `Stale` refusals from the server (the consistency bound
+    /// was not met by its applied epoch)
+    pub stale_refusals: AtomicU64,
+}
+
+/// Wall-clock stage timing of one traced round trip, measured on the
+/// client: encode and decode are direct measurements, `rtt_s` is the
+/// residual (write syscall + network + server time + read syscalls),
+/// so the three sum to the call's wall time by construction.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WireTimes {
+    /// request-frame encode time, seconds
+    pub encode_s: f64,
+    /// reply-frame decode time, seconds
+    pub decode_s: f64,
+    /// residual wire wait (everything between encode and decode)
+    pub rtt_s: f64,
+    /// whole round trip (`encode_s + rtt_s + decode_s`)
+    pub total_s: f64,
 }
 
 impl NetConn {
@@ -71,6 +91,7 @@ impl NetConn {
             bytes_recv: AtomicU64::new(0),
             encode_ns: AtomicU64::new(0),
             decode_ns: AtomicU64::new(0),
+            stale_refusals: AtomicU64::new(0),
         }
     }
 
@@ -108,6 +129,8 @@ impl NetConn {
                     }
                     return Ok(stream);
                 }
+                // a version mismatch will not heal with backoff
+                Err(e @ WireError::PeerVersion { .. }) => return Err(e),
                 Err(e) => last = e,
             }
         }
@@ -118,31 +141,42 @@ impl NetConn {
     /// On any failure the connection is dropped so the next round trip
     /// redials (reconnect-with-backoff); the caller decides whether to
     /// fail over.
-    fn round_trip(&self, msg: &Msg, deadline: Option<Duration>) -> Result<Msg, WireError> {
+    fn round_trip(
+        &self,
+        msg: &Msg,
+        deadline: Option<Duration>,
+    ) -> Result<(Msg, WireTimes), WireError> {
         let mut guard = self.stream.lock().expect("conn lock");
         if guard.is_none() {
             *guard = Some(self.dial()?);
         }
         let stream = guard.as_mut().expect("just ensured");
-        stream.set_read_timeout(Some(deadline.unwrap_or(DEFAULT_TIMEOUT).max(Duration::from_millis(1)))).ok();
+        let timeout = deadline.unwrap_or(DEFAULT_TIMEOUT).max(Duration::from_millis(1));
+        stream.set_read_timeout(Some(timeout)).ok();
         let result = (|| {
-            let t0 = Instant::now();
+            let t_start = Instant::now();
             let frame = wire::encode_frame(msg);
-            self.encode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            let encode_s = t_start.elapsed().as_secs_f64();
+            self.encode_ns.fetch_add((encode_s * 1e9) as u64, Ordering::Relaxed);
             use std::io::Write;
             stream.write_all(&frame).map_err(|e| WireError::Io(e.kind()))?;
             self.frames.fetch_add(1, Ordering::Relaxed);
             self.bytes_sent.fetch_add(frame.len() as u64, Ordering::Relaxed);
             let t1 = Instant::now();
-            let reply = read_frame(stream)?;
+            let (reply, decode_s) = read_frame_timed(stream)?;
             self.decode_ns.fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
-            self.bytes_recv
-                .fetch_add((wire::HEADER_LEN + frame_payload_hint(&reply)) as u64, Ordering::Relaxed);
-            Ok(reply)
+            let recv = (wire::HEADER_LEN + frame_payload_hint(&reply)) as u64;
+            self.bytes_recv.fetch_add(recv, Ordering::Relaxed);
+            let total_s = t_start.elapsed().as_secs_f64();
+            let rtt_s = (total_s - encode_s - decode_s).max(0.0);
+            Ok((reply, WireTimes { encode_s, decode_s, rtt_s, total_s }))
         })();
         match result {
-            Ok(Msg::Error { code, .. }) => {
+            Ok((Msg::Error { code, .. }, _)) => {
                 // typed remote refusal: the connection itself is fine
+                if code == ErrorCode::Stale {
+                    self.stale_refusals.fetch_add(1, Ordering::Relaxed);
+                }
                 Err(WireError::Remote(code))
             }
             Ok(reply) => Ok(reply),
@@ -166,12 +200,48 @@ impl NetConn {
         min_epoch: u64,
         deadline: Option<Duration>,
     ) -> Result<Vec<Vec<ShardReply>>, WireError> {
+        Ok(self.execute_traced(entries, min_epoch, 0, deadline)?.0)
+    }
+
+    /// [`NetConn::execute`] carrying a trace id, returning the replies
+    /// plus the round trip's stage timing and the server-side spans the
+    /// `Reply` frame carried back.
+    pub fn execute_traced(
+        &self,
+        entries: Vec<(u32, Vec<Query>)>,
+        min_epoch: u64,
+        trace_id: u64,
+        deadline: Option<Duration>,
+    ) -> Result<(Vec<Vec<ShardReply>>, WireTimes, SpanSet), WireError> {
         let req_id = self.next_req.fetch_add(1, Ordering::Relaxed);
         let n = entries.len();
-        let reply = self.round_trip(&Msg::Execute { req_id, min_epoch, entries }, deadline)?;
+        let (reply, times) =
+            self.round_trip(&Msg::Execute { req_id, min_epoch, trace_id, entries }, deadline)?;
         match reply {
-            Msg::Reply { req_id: rid, entries } if rid == req_id && entries.len() == n => {
-                Ok(entries)
+            Msg::Reply { req_id: rid, trace_id: tid, server_spans, entries }
+                if rid == req_id && tid == trace_id && entries.len() == n =>
+            {
+                Ok((entries, times, SpanSet::from_entries(&server_spans)))
+            }
+            _ => {
+                self.io_errors.fetch_add(1, Ordering::Relaxed);
+                *self.stream.lock().expect("conn lock") = None;
+                Err(WireError::Malformed)
+            }
+        }
+    }
+
+    /// Scrape the server's metrics-registry snapshot (`StatsReq`).
+    pub fn scrape(&self, deadline: Option<Duration>) -> Result<obs::Snapshot, WireError> {
+        let req_id = self.next_req.fetch_add(1, Ordering::Relaxed);
+        let (reply, _) = self.round_trip(&Msg::StatsReq { req_id }, deadline)?;
+        match reply {
+            Msg::StatsReply { req_id: rid, counters, gauges, histograms } if rid == req_id => {
+                let mut snap = obs::Snapshot::default();
+                snap.counters.extend(counters);
+                snap.gauges.extend(gauges);
+                snap.histograms.extend(histograms);
+                Ok(snap)
             }
             _ => {
                 self.io_errors.fetch_add(1, Ordering::Relaxed);
@@ -190,7 +260,7 @@ impl NetConn {
     ) -> Result<(), WireError> {
         let req_id = self.next_req.fetch_add(1, Ordering::Relaxed);
         let msg = Msg::Publish { req_id, epoch, rows: rows.to_vec() };
-        match self.round_trip(&msg, deadline)? {
+        match self.round_trip(&msg, deadline)?.0 {
             Msg::PublishAck { req_id: rid, epoch: e } if rid == req_id && e == epoch => Ok(()),
             _ => {
                 self.io_errors.fetch_add(1, Ordering::Relaxed);
@@ -221,12 +291,20 @@ fn frame_payload_hint(msg: &Msg) -> usize {
 
 fn handshake(stream: &mut TcpStream) -> Result<(), WireError> {
     wire::write_frame(stream, &Msg::Hello { version: VERSION })?;
-    match read_frame(stream)? {
-        Msg::HelloAck { version: v, .. } if v == VERSION => Ok(()),
-        Msg::Error { code: ErrorCode::BadVersion, .. } => {
-            Err(WireError::Remote(ErrorCode::BadVersion))
+    match read_frame(stream) {
+        Ok(Msg::HelloAck { version: v, .. }) if v == VERSION => Ok(()),
+        Ok(Msg::HelloAck { version: v, .. }) => {
+            Err(WireError::PeerVersion { ours: VERSION, theirs: v })
         }
-        _ => Err(WireError::Malformed),
+        Ok(Msg::Error { code: ErrorCode::BadVersion, .. }) => {
+            // the server rejected our version without revealing its own
+            Err(WireError::PeerVersion { ours: VERSION, theirs: 0 })
+        }
+        Ok(_) => Err(WireError::Malformed),
+        // an old server answers with an old-version header: surface the
+        // mismatch as the actionable error, not a generic decode failure
+        Err(WireError::Version(v)) => Err(WireError::PeerVersion { ours: VERSION, theirs: v }),
+        Err(e) => Err(e),
     }
 }
 

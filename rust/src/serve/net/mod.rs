@@ -31,7 +31,7 @@ pub mod wire;
 
 mod router;
 
-pub use client::{NetConn, NetShardClient};
+pub use client::{NetConn, NetShardClient, WireTimes};
 pub use router::NetRouterEngine;
 pub use server::{ShardServer, ShardServerHandle};
 pub use wire::{ErrorCode, Msg, WireError};

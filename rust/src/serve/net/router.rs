@@ -33,11 +33,12 @@ use std::time::{Duration, Instant};
 use crate::serve::dist::Placement;
 use crate::serve::engine::{enforce_deadline, Consistency, QueryEngine, Request, Response};
 use crate::serve::ingest::{EpochStore, IngestReport, VersionedStore};
+use crate::serve::obs::{self, Registry, SpanSet, Stage, TraceRecord, TraceSampler};
 use crate::serve::query::{merge_replies, plan_shards, Query, QueryResult, ShardReply};
 use crate::serve::sched::plan_batch;
 use crate::serve::store::Store;
 
-use super::client::NetConn;
+use super::client::{NetConn, WireTimes};
 use super::wire::WireError;
 
 struct Inner {
@@ -54,6 +55,10 @@ struct Inner {
     epochs_published: AtomicU64,
     /// serializes publishes (the mirror asserts strictly advancing epochs)
     publish_lock: Mutex<()>,
+    /// the front end's metrics registry (`stage_*` histograms)
+    registry: Arc<Registry>,
+    /// `--trace-sample` / `--slow-ms` sampler
+    sampler: Arc<TraceSampler>,
 }
 
 /// The TCP serving tier as one more [`QueryEngine`]: admission,
@@ -102,9 +107,75 @@ impl NetRouterEngine {
                 failed: AtomicU64::new(0),
                 epochs_published: AtomicU64::new(0),
                 publish_lock: Mutex::new(()),
+                registry: Arc::new(Registry::new()),
+                sampler: Arc::new(TraceSampler::new()),
             }),
             desc,
         })
+    }
+
+    /// The front end's metrics registry (per-stage `stage_*` wall-clock
+    /// histograms; counters folded in by [`NetRouterEngine::obs_snapshot`]).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.inner.registry
+    }
+
+    /// The front end's trace sampler.
+    pub fn sampler(&self) -> &Arc<TraceSampler> {
+        &self.inner.sampler
+    }
+
+    /// Arm trace sampling: keep every `every`th request (0 = off) and
+    /// everything slower than `slow_s` seconds (<= 0 = off).
+    pub fn configure_tracing(&self, every: u64, slow_s: f64) {
+        self.inner.sampler.configure(every, slow_s);
+    }
+
+    /// The front end's registry snapshot with the per-connection wire
+    /// counters folded in (same names and values as
+    /// [`QueryEngine::metrics`], plus `net_stale_refusals`).
+    pub fn obs_snapshot(&self) -> obs::Snapshot {
+        let inner = &*self.inner;
+        self.inner.registry.absorb_metrics(&self.metrics());
+        let stale: u64 =
+            inner.conns.iter().map(|c| c.stale_refusals.load(Ordering::Relaxed)).sum();
+        let mut snap = self.inner.registry.snapshot();
+        snap.counters.insert("net_stale_refusals".to_string(), stale);
+        snap.counters
+            .insert("net_frames".to_string(), self.frames_sent());
+        snap
+    }
+
+    /// Scrape each live shard server's registry snapshot (`StatsReq`).
+    /// Dead servers are skipped.
+    pub fn scrape(&self) -> Vec<obs::Snapshot> {
+        let inner = &*self.inner;
+        inner
+            .conns
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !inner.suspected[*i].load(Ordering::SeqCst))
+            .filter_map(|(_, c)| c.scrape(Some(Duration::from_secs(5))).ok())
+            .collect()
+    }
+
+    /// Send one deliberately-too-fresh execute (consistency bound one
+    /// past the mirror's head) to the first live server. The server
+    /// must refuse it as `Stale`, which increments both its
+    /// `stale_refusals` counter and this side's `net_stale_refusals` —
+    /// the CI probe that proves the refusal path is live end to end.
+    /// Returns true when the refusal round-tripped as expected.
+    pub fn probe_stale(&self) -> bool {
+        let inner = &*self.inner;
+        let too_fresh = inner.mirror.load().epoch + 1;
+        for (i, conn) in inner.conns.iter().enumerate() {
+            if inner.suspected[i].load(Ordering::SeqCst) {
+                continue;
+            }
+            let got = conn.execute(Vec::new(), too_fresh, Some(Duration::from_secs(5)));
+            return matches!(got, Err(WireError::Remote(super::wire::ErrorCode::Stale)));
+        }
+        false
     }
 
     pub fn placement(&self) -> &Placement {
@@ -172,8 +243,8 @@ impl NetRouterEngine {
             .filter(|(_, qis)| !qis.is_empty())
             .map(|(s, qis)| (s as u32, qis.iter().map(|&qi| queries[qi].clone()).collect()))
             .collect();
-        match self.execute_grouped(groups, 0, None) {
-            Ok(mut by_shard_replies) => {
+        match self.execute_grouped(groups, 0, 0, None) {
+            Ok((mut by_shard_replies, _, _)) => {
                 let mut replies: Vec<Vec<ShardReply>> =
                     (0..queries.len()).map(|_| Vec::new()).collect();
                 // ascending shard order — the canonical merge order the
@@ -203,16 +274,21 @@ impl NetRouterEngine {
 
     /// Core scatter: assign each shard group to a live replica, send
     /// one frame per contacted server, fail servers over on error.
-    /// Returns shard -> replies (parallel to that shard's queries), or
-    /// `Err(())` once some shard has no live replica left.
+    /// Returns shard -> replies (parallel to that shard's queries) plus
+    /// the critical round trip's stage timing and server-side spans
+    /// (the slowest call — the one that explains the scatter's wall
+    /// time), or `Err(())` once some shard has no live replica left.
     fn execute_grouped(
         &self,
         groups: Vec<(u32, Vec<Query>)>,
         min_epoch: u64,
+        trace_id: u64,
         deadline: Option<Duration>,
-    ) -> Result<BTreeMap<u32, Vec<ShardReply>>, ()> {
+    ) -> Result<(BTreeMap<u32, Vec<ShardReply>>, WireTimes, SpanSet), ()> {
         let inner = &*self.inner;
         let mut results: BTreeMap<u32, Vec<ShardReply>> = BTreeMap::new();
+        let mut crit = WireTimes::default();
+        let mut crit_spans = SpanSet::new();
         let mut remaining = groups;
         while !remaining.is_empty() {
             // pick a live replica per shard, rotating the start slot
@@ -230,28 +306,39 @@ impl NetRouterEngine {
             }
             // one frame per server; scatter concurrently when >1
             let plan: Vec<(usize, Vec<(u32, Vec<Query>)>)> = per_server.into_iter().collect();
-            let outcomes: Vec<Result<Vec<Vec<ShardReply>>, WireError>> =
-                if plan.len() == 1 {
-                    vec![inner.conns[plan[0].0].execute(plan[0].1.clone(), min_epoch, deadline)]
-                } else {
-                    std::thread::scope(|s| {
-                        let handles: Vec<_> = plan
-                            .iter()
-                            .map(|(server, entries)| {
-                                let conn = Arc::clone(&inner.conns[*server]);
-                                let entries = entries.clone();
-                                s.spawn(move || conn.execute(entries, min_epoch, deadline))
+            type TracedOutcome = Result<(Vec<Vec<ShardReply>>, WireTimes, SpanSet), WireError>;
+            let outcomes: Vec<TracedOutcome> = if plan.len() == 1 {
+                vec![inner.conns[plan[0].0].execute_traced(
+                    plan[0].1.clone(),
+                    min_epoch,
+                    trace_id,
+                    deadline,
+                )]
+            } else {
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = plan
+                        .iter()
+                        .map(|(server, entries)| {
+                            let conn = Arc::clone(&inner.conns[*server]);
+                            let entries = entries.clone();
+                            s.spawn(move || {
+                                conn.execute_traced(entries, min_epoch, trace_id, deadline)
                             })
-                            .collect();
-                        handles
-                            .into_iter()
-                            .map(|h| h.join().unwrap_or(Err(WireError::Malformed)))
-                            .collect()
-                    })
-                };
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().unwrap_or(Err(WireError::Malformed)))
+                        .collect()
+                })
+            };
             for ((server, entries), outcome) in plan.into_iter().zip(outcomes) {
                 match outcome {
-                    Ok(replies) => {
+                    Ok((replies, times, server_spans)) => {
+                        if times.total_s >= crit.total_s {
+                            crit = times;
+                            crit_spans = server_spans;
+                        }
                         for ((shard, _), reps) in entries.into_iter().zip(replies) {
                             results.insert(shard, reps);
                         }
@@ -267,7 +354,7 @@ impl NetRouterEngine {
                 }
             }
         }
-        Ok(results)
+        Ok((results, crit, crit_spans))
     }
 }
 
@@ -288,8 +375,10 @@ impl QueryEngine for NetRouterEngine {
         let groups: Vec<(u32, Vec<Query>)> =
             plan.iter().map(|&s| (s as u32, vec![req.query.clone()])).collect();
         let frames0 = self.frames_sent();
-        match self.execute_grouped(groups, min_epoch, deadline) {
-            Ok(mut by_shard) => {
+        let assemble_s = t.elapsed().as_secs_f64();
+        match self.execute_grouped(groups, min_epoch, req.trace_id, deadline) {
+            Ok((mut by_shard, times, server_spans)) => {
+                let scatter_end_s = t.elapsed().as_secs_f64();
                 let replies: Vec<ShardReply> = plan
                     .iter()
                     .map(|&s| {
@@ -298,8 +387,34 @@ impl QueryEngine for NetRouterEngine {
                     })
                     .collect();
                 let result = merge_replies(&req.query, replies);
-                let mut resp = Response::served(result, req.at + t.elapsed().as_secs_f64());
+                let total_s = t.elapsed().as_secs_f64();
+                // the stages partition [0, total_s]: plan+group, then
+                // the scatter segment split into the critical round
+                // trip's encode/decode and the residual wire wait, then
+                // the merge — so the spans sum to the measured
+                // end-to-end latency by construction
+                let seg = scatter_end_s - assemble_s;
+                let mut spans = SpanSet::new();
+                spans.add(Stage::BatchAssembly, assemble_s);
+                spans.add(Stage::Encode, times.encode_s.min(seg));
+                spans.add(Stage::Decode, times.decode_s.min(seg - times.encode_s));
+                spans.add(Stage::NetRtt, seg - spans.get(Stage::Encode) - spans.get(Stage::Decode));
+                spans.add(Stage::Merge, total_s - scatter_end_s);
+                self.inner.registry.record_spans(&spans);
+                if self.inner.sampler.enabled() {
+                    self.inner.sampler.observe(TraceRecord {
+                        trace_id: req.trace_id,
+                        total_s,
+                        spans,
+                        server_spans,
+                        slow: false,
+                    });
+                }
+                let mut resp = Response::served(result, req.at + total_s);
                 resp.trace.replicas_contacted = (self.frames_sent() - frames0) as u32;
+                resp.trace.trace_id = req.trace_id;
+                resp.trace.spans = spans;
+                resp.trace.server_spans = server_spans;
                 enforce_deadline(req.at, req.deadline, resp)
             }
             Err(()) => {
@@ -326,6 +441,7 @@ impl QueryEngine for NetRouterEngine {
             ("net_reconnects".to_string(), sum(|c| &c.reconnects)),
             ("net_io_errors".to_string(), sum(|c| &c.io_errors)),
             ("net_timeouts".to_string(), sum(|c| &c.timeouts)),
+            ("net_stale_refusals".to_string(), sum(|c| &c.stale_refusals)),
             ("net_encode_us_per_frame".to_string(), sum(|c| &c.encode_ns) * 1e-3 / frames),
             ("net_decode_us_per_frame".to_string(), sum(|c| &c.decode_ns) * 1e-3 / frames),
             (

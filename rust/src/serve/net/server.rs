@@ -20,13 +20,14 @@
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::serve::ingest::{Ingestor, VersionedStore};
+use crate::serve::obs::{Registry, SpanSet, Stage};
 use crate::serve::query::execute_on_shard;
 use crate::serve::store::Store;
 
-use super::wire::{read_frame, write_frame, ErrorCode, Msg, WireError, VERSION};
+use super::wire::{read_frame, read_frame_timed, write_frame, ErrorCode, Msg, WireError, VERSION};
 
 /// Idle-connection read timeout: a peer that goes silent this long is
 /// dropped so its handler thread can exit.
@@ -36,6 +37,7 @@ pub struct ShardServer {
     listener: TcpListener,
     versioned: Arc<VersionedStore>,
     ingest: Arc<Mutex<Ingestor>>,
+    registry: Arc<Registry>,
     stop: Arc<AtomicBool>,
 }
 
@@ -57,11 +59,24 @@ impl ShardServer {
         let listener = TcpListener::bind(addr)?;
         let versioned = Arc::new(VersionedStore::new(store));
         let ingest = Arc::new(Mutex::new(Ingestor::new(Arc::clone(&versioned))));
-        Ok(ShardServer { listener, versioned, ingest, stop: Arc::new(AtomicBool::new(false)) })
+        Ok(ShardServer {
+            listener,
+            versioned,
+            ingest,
+            registry: Arc::new(Registry::new()),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
     }
 
     pub fn local_addr(&self) -> SocketAddr {
         self.listener.local_addr().expect("bound listener has an address")
+    }
+
+    /// The server's metrics registry: per-stage `stage_*` histograms,
+    /// frame/refusal counters, the applied-epoch gauge. Scraped over
+    /// the wire via `StatsReq`.
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
     }
 
     /// Accept loop; runs until the process exits (the child-process
@@ -77,9 +92,10 @@ impl ShardServer {
             };
             let versioned = Arc::clone(&self.versioned);
             let ingest = Arc::clone(&self.ingest);
+            let registry = Arc::clone(&self.registry);
             std::thread::spawn(move || {
                 // per-connection failures only ever end that connection
-                let _ = serve_conn(stream, &versioned, &ingest);
+                let _ = serve_conn(stream, &versioned, &ingest, &registry);
             });
         }
     }
@@ -126,6 +142,7 @@ fn serve_conn(
     mut stream: TcpStream,
     versioned: &Arc<VersionedStore>,
     ingest: &Arc<Mutex<Ingestor>>,
+    registry: &Arc<Registry>,
 ) -> Result<(), WireError> {
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(Some(IDLE_TIMEOUT)).ok();
@@ -170,8 +187,14 @@ fn serve_conn(
         }
     }
 
+    let frames = registry.counter("net_frames");
+    let stale = registry.counter("stale_refusals");
+    let h_decode = registry.histogram("stage_decode");
+    let h_execute = registry.histogram("stage_shard_execute");
+    let h_encode = registry.histogram("stage_encode");
+
     loop {
-        let msg = match read_frame(&mut stream) {
+        let (msg, decode_s) = match read_frame_timed(&mut stream) {
             Ok(m) => m,
             Err(WireError::Closed) => return Ok(()),
             Err(e @ (WireError::Truncated | WireError::Io(_))) => return Err(e),
@@ -180,10 +203,14 @@ fn serve_conn(
                 return Err(e);
             }
         };
+        frames.inc();
         match msg {
-            Msg::Execute { req_id, min_epoch, entries } => {
+            Msg::Execute { req_id, min_epoch, trace_id, entries } => {
+                h_decode.record(decode_s);
                 let head = versioned.load();
+                registry.gauge_set("applied_epoch", head.epoch as f64);
                 if head.epoch < min_epoch {
+                    stale.inc();
                     send_error(
                         &mut stream,
                         req_id,
@@ -193,6 +220,7 @@ fn serve_conn(
                     continue;
                 }
                 let n_shards = head.store.shards.len();
+                let t_exec = Instant::now();
                 let mut out = Vec::with_capacity(entries.len());
                 let mut bad_shard = None;
                 for (shard, queries) in &entries {
@@ -204,6 +232,7 @@ fn serve_conn(
                         queries.iter().map(|q| execute_on_shard(shard_ref, q)).collect::<Vec<_>>(),
                     );
                 }
+                let execute_s = t_exec.elapsed().as_secs_f64();
                 match bad_shard {
                     Some(shard) => send_error(
                         &mut stream,
@@ -212,9 +241,39 @@ fn serve_conn(
                         format!("shard {shard} out of range ({n_shards} shards)"),
                     ),
                     None => {
-                        write_frame(&mut stream, &Msg::Reply { req_id, entries: out })?;
+                        h_execute.record(execute_s);
+                        // the server-side breakdown of this request:
+                        // request decode + shard execute (the reply's
+                        // own encode cannot time itself; it lands in
+                        // the stage_encode histogram one reply late)
+                        let mut spans = SpanSet::new();
+                        spans.add(Stage::Decode, decode_s);
+                        spans.add(Stage::ShardExecute, execute_s);
+                        let t_enc = Instant::now();
+                        write_frame(
+                            &mut stream,
+                            &Msg::Reply {
+                                req_id,
+                                trace_id,
+                                server_spans: spans.entries(),
+                                entries: out,
+                            },
+                        )?;
+                        h_encode.record(t_enc.elapsed().as_secs_f64());
                     }
                 }
+            }
+            Msg::StatsReq { req_id } => {
+                let snap = registry.snapshot();
+                write_frame(
+                    &mut stream,
+                    &Msg::StatsReply {
+                        req_id,
+                        counters: snap.counters.into_iter().collect(),
+                        gauges: snap.gauges.into_iter().collect(),
+                        histograms: snap.histograms.into_iter().collect(),
+                    },
+                )?;
             }
             Msg::Publish { req_id, epoch, rows } => {
                 // the ingest lock spans the epoch check so two racing

@@ -5,10 +5,18 @@
 //! ```text
 //! offset  size  field
 //!      0     2  magic 0xCE57, little-endian
-//!      2     1  protocol version (currently 1)
+//!      2     1  protocol version (currently 2)
 //!      3     1  message tag (see below)
 //!      4     4  payload length, little-endian u32
 //! ```
+//!
+//! Version 2 (this build) extends version 1 with request telemetry:
+//! `Execute` carries the originating trace id, `Reply` echoes it back
+//! alongside the server-side per-stage span timings, and the
+//! `StatsReq`/`StatsReply` pair (tags 8/9) lets a front end scrape a
+//! shard server's metrics-registry snapshot. v1 and v2 peers do not
+//! interoperate; the mismatch surfaces as the actionable
+//! [`WireError::PeerVersion`] rather than a generic decode failure.
 //!
 //! The header is validated *before* the payload is touched: a bad
 //! magic, unknown version, unknown tag, or a length past
@@ -28,13 +36,14 @@
 
 use std::io::{Read, Write};
 
+use crate::metrics::Stats;
 use crate::serve::query::{MatchResult, Query, ShardReply, SourceFilter};
 use crate::serve::store::ServedSource;
 
 /// Frame magic (little-endian on the wire).
 pub const MAGIC: u16 = 0xCE57;
 /// Protocol version spoken by this build.
-pub const VERSION: u8 = 1;
+pub const VERSION: u8 = 2;
 /// Header size in bytes.
 pub const HEADER_LEN: usize = 8;
 /// Largest payload a peer may announce (checked before allocation).
@@ -102,6 +111,15 @@ pub enum WireError {
     BadMagic(u16),
     /// the frame announces an unsupported protocol version
     Version(u8),
+    /// the handshake found a peer speaking a different protocol
+    /// version (`theirs == 0` when the peer reported the mismatch
+    /// without revealing its own version)
+    PeerVersion {
+        /// the version this build speaks
+        ours: u8,
+        /// the version the peer speaks (0 = unknown)
+        theirs: u8,
+    },
     /// the frame announces an unknown message tag
     BadTag(u8),
     /// the frame announces a payload larger than [`MAX_PAYLOAD`]
@@ -120,6 +138,23 @@ impl std::fmt::Display for WireError {
             WireError::Truncated => write!(f, "peer disconnected mid-frame"),
             WireError::BadMagic(m) => write!(f, "bad frame magic {m:#06x}"),
             WireError::Version(v) => write!(f, "unsupported wire version {v}"),
+            WireError::PeerVersion { ours, theirs } => {
+                if *theirs == 0 {
+                    write!(
+                        f,
+                        "wire version mismatch: this build speaks v{ours} but the peer \
+                         rejected the handshake as bad-version; upgrade the older side \
+                         so both speak the same protocol (see docs/WIRE.md)"
+                    )
+                } else {
+                    write!(
+                        f,
+                        "wire version mismatch: this build speaks v{ours}, the peer \
+                         speaks v{theirs}; upgrade the older side so both speak the \
+                         same protocol (see docs/WIRE.md)"
+                    )
+                }
+            }
             WireError::BadTag(t) => write!(f, "unknown message tag {t}"),
             WireError::Oversized(n) => {
                 write!(f, "payload length {n} exceeds the {MAX_PAYLOAD}-byte cap")
@@ -154,9 +189,24 @@ pub enum Msg {
     /// server, grouped per shard (a whole scheduler batch coalesces
     /// into one of these). `min_epoch` is the consistency bound: the
     /// server refuses to answer from an older applied epoch.
-    Execute { req_id: u64, min_epoch: u64, entries: Vec<(u32, Vec<Query>)> },
-    /// the per-shard replies, parallel to the request's entries
-    Reply { req_id: u64, entries: Vec<Vec<ShardReply>> },
+    /// `trace_id` identifies the originating request's trace (0 =
+    /// untraced) and is echoed back in the matching [`Msg::Reply`].
+    Execute { req_id: u64, min_epoch: u64, trace_id: u64, entries: Vec<(u32, Vec<Query>)> },
+    /// the per-shard replies, parallel to the request's entries.
+    /// `server_spans` is the server-side per-stage timing breakdown as
+    /// `(stage tag, seconds)` pairs (see [`crate::serve::obs::Stage`]),
+    /// so the front end can join client and server spans into one
+    /// cross-process trace.
+    Reply {
+        /// echoes the [`Msg::Execute`]
+        req_id: u64,
+        /// echoes the request's trace id (0 = untraced)
+        trace_id: u64,
+        /// server-side per-stage timings as `(stage tag, secs)` pairs
+        server_spans: Vec<(u8, f64)>,
+        /// per-shard replies, parallel to the request's entries
+        entries: Vec<Vec<ShardReply>>,
+    },
     /// an epoch publish: the deduped delta rows of exactly the next
     /// epoch, shipped so `Fresh`/`AtMost(k)` reads hold cross-process
     Publish { req_id: u64, epoch: u64, rows: Vec<ServedSource> },
@@ -164,6 +214,22 @@ pub enum Msg {
     /// typed failure; `req_id` echoes the offending request (0 when
     /// the failure is not attributable to one)
     Error { req_id: u64, code: ErrorCode, detail: String },
+    /// client -> server: request a snapshot of the server's metrics
+    /// registry (wire v2)
+    StatsReq { req_id: u64 },
+    /// server -> client: the registry snapshot. Histograms travel as
+    /// their full [`Stats`] state (moments + bounded reservoir) so the
+    /// scraper's merged quantiles stay deterministic.
+    StatsReply {
+        /// echoes the [`Msg::StatsReq`]
+        req_id: u64,
+        /// named counters
+        counters: Vec<(String, u64)>,
+        /// named gauges
+        gauges: Vec<(String, f64)>,
+        /// named histograms as full reservoir state
+        histograms: Vec<(String, Stats)>,
+    },
 }
 
 impl Msg {
@@ -176,6 +242,8 @@ impl Msg {
             Msg::Publish { .. } => 5,
             Msg::PublishAck { .. } => 6,
             Msg::Error { .. } => 7,
+            Msg::StatsReq { .. } => 8,
+            Msg::StatsReply { .. } => 9,
         }
     }
 }
@@ -270,6 +338,47 @@ const MIN_SOURCE: usize = 8 + 9 * 8 + 1; // 81
 const MIN_QUERY: usize = 10; // BrightestN: tag + u64 + filter
 const MIN_REPLY: usize = 2; // Match(None): tag + present byte
 const MIN_ENTRY: usize = 8; // shard u32 + query count u32
+
+fn put_str(w: &mut W, s: &str) {
+    let bytes = s.as_bytes();
+    w.u32(bytes.len() as u32);
+    w.0.extend_from_slice(bytes);
+}
+
+fn get_str(r: &mut R) -> Result<String, WireError> {
+    let n = r.count(1)?;
+    String::from_utf8(r.take(n)?.to_vec()).map_err(|_| WireError::Malformed)
+}
+
+/// Encode a histogram as its full `Stats` state: moments, extremes,
+/// and the bounded sample reservoir (so merged quantiles on the
+/// scraping side stay deterministic).
+fn put_stats(w: &mut W, s: &Stats) {
+    w.u64(s.n);
+    w.f64(s.sum);
+    w.f64(s.sum2);
+    w.f64(s.min);
+    w.f64(s.max);
+    let samples = s.samples();
+    w.u32(samples.len() as u32);
+    for x in samples {
+        w.f64(*x);
+    }
+}
+
+fn get_stats(r: &mut R) -> Result<Stats, WireError> {
+    let n = r.u64()?;
+    let sum = r.f64()?;
+    let sum2 = r.f64()?;
+    let min = r.f64()?;
+    let max = r.f64()?;
+    let ns = r.count(8)?;
+    let mut samples = Vec::with_capacity(ns);
+    for _ in 0..ns {
+        samples.push(r.f64()?);
+    }
+    Ok(Stats::from_parts(n, sum, sum2, min, max, samples))
+}
 
 fn put_filter(w: &mut W, f: SourceFilter) {
     w.u8(match f {
@@ -431,9 +540,10 @@ fn encode_payload(msg: &Msg) -> Vec<u8> {
             w.u64(*epoch);
             w.u32(*n_shards);
         }
-        Msg::Execute { req_id, min_epoch, entries } => {
+        Msg::Execute { req_id, min_epoch, trace_id, entries } => {
             w.u64(*req_id);
             w.u64(*min_epoch);
+            w.u64(*trace_id);
             w.u32(entries.len() as u32);
             for (shard, queries) in entries {
                 w.u32(*shard);
@@ -443,8 +553,14 @@ fn encode_payload(msg: &Msg) -> Vec<u8> {
                 }
             }
         }
-        Msg::Reply { req_id, entries } => {
+        Msg::Reply { req_id, trace_id, server_spans, entries } => {
             w.u64(*req_id);
+            w.u64(*trace_id);
+            w.u32(server_spans.len() as u32);
+            for (stage, secs) in server_spans {
+                w.u8(*stage);
+                w.f64(*secs);
+            }
             w.u32(entries.len() as u32);
             for replies in entries {
                 w.u32(replies.len() as u32);
@@ -465,9 +581,26 @@ fn encode_payload(msg: &Msg) -> Vec<u8> {
         Msg::Error { req_id, code, detail } => {
             w.u64(*req_id);
             w.u8(code.to_u8());
-            let bytes = detail.as_bytes();
-            w.u32(bytes.len() as u32);
-            w.0.extend_from_slice(bytes);
+            put_str(&mut w, detail);
+        }
+        Msg::StatsReq { req_id } => w.u64(*req_id),
+        Msg::StatsReply { req_id, counters, gauges, histograms } => {
+            w.u64(*req_id);
+            w.u32(counters.len() as u32);
+            for (name, v) in counters {
+                put_str(&mut w, name);
+                w.u64(*v);
+            }
+            w.u32(gauges.len() as u32);
+            for (name, v) in gauges {
+                put_str(&mut w, name);
+                w.f64(*v);
+            }
+            w.u32(histograms.len() as u32);
+            for (name, s) in histograms {
+                put_str(&mut w, name);
+                put_stats(&mut w, s);
+            }
         }
     }
     w.0
@@ -481,6 +614,7 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<Msg, WireError> {
         3 => {
             let req_id = r.u64()?;
             let min_epoch = r.u64()?;
+            let trace_id = r.u64()?;
             let n = r.count(MIN_ENTRY)?;
             let mut entries = Vec::with_capacity(n);
             for _ in 0..n {
@@ -492,10 +626,18 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<Msg, WireError> {
                 }
                 entries.push((shard, queries));
             }
-            Msg::Execute { req_id, min_epoch, entries }
+            Msg::Execute { req_id, min_epoch, trace_id, entries }
         }
         4 => {
             let req_id = r.u64()?;
+            let trace_id = r.u64()?;
+            let ns = r.count(9)?; // stage u8 + f64
+            let mut server_spans = Vec::with_capacity(ns);
+            for _ in 0..ns {
+                let stage = r.u8()?;
+                let secs = r.f64()?;
+                server_spans.push((stage, secs));
+            }
             let n = r.count(4)?;
             let mut entries = Vec::with_capacity(n);
             for _ in 0..n {
@@ -506,17 +648,38 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<Msg, WireError> {
                 }
                 entries.push(replies);
             }
-            Msg::Reply { req_id, entries }
+            Msg::Reply { req_id, trace_id, server_spans, entries }
         }
         5 => Msg::Publish { req_id: r.u64()?, epoch: r.u64()?, rows: get_sources(&mut r)? },
         6 => Msg::PublishAck { req_id: r.u64()?, epoch: r.u64()? },
         7 => {
             let req_id = r.u64()?;
             let code = ErrorCode::from_u8(r.u8()?).ok_or(WireError::Malformed)?;
-            let n = r.count(1)?;
-            let detail =
-                String::from_utf8(r.take(n)?.to_vec()).map_err(|_| WireError::Malformed)?;
+            let detail = get_str(&mut r)?;
             Msg::Error { req_id, code, detail }
+        }
+        8 => Msg::StatsReq { req_id: r.u64()? },
+        9 => {
+            let req_id = r.u64()?;
+            let nc = r.count(12)?; // name len + at least u64
+            let mut counters = Vec::with_capacity(nc);
+            for _ in 0..nc {
+                let name = get_str(&mut r)?;
+                counters.push((name, r.u64()?));
+            }
+            let ng = r.count(12)?;
+            let mut gauges = Vec::with_capacity(ng);
+            for _ in 0..ng {
+                let name = get_str(&mut r)?;
+                gauges.push((name, r.f64()?));
+            }
+            let nh = r.count(44)?; // name len + moments + sample count
+            let mut histograms = Vec::with_capacity(nh);
+            for _ in 0..nh {
+                let name = get_str(&mut r)?;
+                histograms.push((name, get_stats(&mut r)?));
+            }
+            Msg::StatsReply { req_id, counters, gauges, histograms }
         }
         t => return Err(WireError::BadTag(t)),
     };
@@ -551,6 +714,13 @@ pub fn write_frame(w: &mut impl Write, msg: &Msg) -> Result<usize, WireError> {
 /// [`WireError::Truncated`]. The header is fully validated (magic,
 /// version, tag, length cap) before any payload buffer is allocated.
 pub fn read_frame(r: &mut impl Read) -> Result<Msg, WireError> {
+    Ok(read_frame_timed(r)?.0)
+}
+
+/// [`read_frame`] plus the time spent *decoding* the payload (header
+/// validation and socket reads excluded), in seconds — the codec cost
+/// attributed to the `decode` trace stage.
+pub fn read_frame_timed(r: &mut impl Read) -> Result<(Msg, f64), WireError> {
     let mut header = [0u8; HEADER_LEN];
     let mut got = 0;
     while got < HEADER_LEN {
@@ -572,7 +742,7 @@ pub fn read_frame(r: &mut impl Read) -> Result<Msg, WireError> {
         return Err(WireError::Version(version));
     }
     let tag = header[3];
-    if !(1..=7).contains(&tag) {
+    if !(1..=9).contains(&tag) {
         return Err(WireError::BadTag(tag));
     }
     let len = u32::from_le_bytes([header[4], header[5], header[6], header[7]]);
@@ -589,7 +759,9 @@ pub fn read_frame(r: &mut impl Read) -> Result<Msg, WireError> {
             Err(e) => return Err(WireError::Io(e.kind())),
         }
     }
-    decode_payload(tag, &payload)
+    let t0 = std::time::Instant::now();
+    let msg = decode_payload(tag, &payload)?;
+    Ok((msg, t0.elapsed().as_secs_f64()))
 }
 
 #[cfg(test)]
@@ -618,6 +790,7 @@ mod tests {
             Msg::Execute {
                 req_id: 7,
                 min_epoch: 3,
+                trace_id: 0xDEAD_BEEF,
                 entries: vec![
                     (
                         0,
@@ -645,6 +818,8 @@ mod tests {
             },
             Msg::Reply {
                 req_id: 7,
+                trace_id: 0xDEAD_BEEF,
+                server_spans: vec![(3, 1.25e-4), (4, 0.0), (5, 7.5e-7)],
                 entries: vec![
                     vec![ShardReply::Sources(rows[..5].to_vec()), ShardReply::Sources(vec![])],
                     vec![ShardReply::Match(None)],
@@ -660,6 +835,22 @@ mod tests {
                 req_id: 3,
                 code: ErrorCode::Stale,
                 detail: "applied epoch 2 < bound 5".to_string(),
+            },
+            Msg::StatsReq { req_id: 21 },
+            Msg::StatsReply {
+                req_id: 21,
+                counters: vec![
+                    ("net_frames".to_string(), 1234),
+                    ("stale_refusals".to_string(), 0),
+                ],
+                gauges: vec![("applied_epoch".to_string(), 42.0)],
+                histograms: vec![("stage_shard_execute".to_string(), {
+                    let mut s = Stats::new();
+                    for i in 0..9 {
+                        s.push(1e-4 * (i as f64 + 0.5));
+                    }
+                    s
+                })],
             },
         ]
     }
@@ -801,6 +992,28 @@ mod tests {
         frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
         frame.extend_from_slice(&payload);
         assert_eq!(read_frame(&mut &frame[..]), Err(WireError::Malformed));
+    }
+
+    #[test]
+    fn peer_version_error_is_actionable() {
+        let e = WireError::PeerVersion { ours: VERSION, theirs: 1 };
+        let msg = e.to_string();
+        assert!(msg.contains("version mismatch"), "{msg}");
+        assert!(msg.contains(&format!("v{VERSION}")), "{msg}");
+        assert!(msg.contains("v1"), "{msg}");
+        assert!(msg.contains("docs/WIRE.md"), "{msg}");
+        let e = WireError::PeerVersion { ours: VERSION, theirs: 0 };
+        let msg = e.to_string();
+        assert!(msg.contains("bad-version"), "{msg}");
+        assert!(msg.contains("docs/WIRE.md"), "{msg}");
+    }
+
+    #[test]
+    fn decode_timing_is_reported() {
+        let frame = encode_frame(&Msg::StatsReq { req_id: 1 });
+        let (msg, decode_s) = read_frame_timed(&mut &frame[..]).unwrap();
+        assert_eq!(msg, Msg::StatsReq { req_id: 1 });
+        assert!(decode_s >= 0.0 && decode_s.is_finite());
     }
 
     #[test]

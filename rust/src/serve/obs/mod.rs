@@ -1,0 +1,793 @@
+//! Unified observability: a metrics registry, per-stage request spans,
+//! and a sampled trace log — the measurement foundation the serving
+//! stack's perf work stands on.
+//!
+//! Three pieces:
+//!
+//! * **[`Registry`]** — named counters, gauges, and histograms behind
+//!   cheap cloneable handles. It absorbs the stack's formerly scattered
+//!   accounting (drive/server reports, engine-stack `metrics()` pairs,
+//!   net counters) into one snapshottable view. Histograms are
+//!   [`metrics::Stats`](crate::metrics::Stats), so quantiles stay
+//!   deterministic under [`Snapshot::merge_all`] — the same sorted-
+//!   union guarantee `Stats::merge_all` gives per-worker latency folds.
+//! * **[`Stage`] / [`SpanSet`]** — the per-request stage vocabulary
+//!   (queue wait, batch assembly, shard execute, encode, decode,
+//!   network RTT, merge). Each request's `Trace` carries a client-side
+//!   `SpanSet` plus the server-side `SpanSet` returned in `Reply`
+//!   frames, joined by the request's trace id, so a tcp request yields
+//!   a complete cross-process span tree.
+//! * **[`TraceSampler`]** — keeps every `N`th request's spans plus
+//!   every request slower than a threshold (the slow-query log), bounded
+//!   in memory; [`write_dump`] exports registry + samples as jsonlite
+//!   (`serve-bench --obs-dump FILE`).
+//!
+//! Stage-attribution semantics (also in `docs/OBSERVABILITY.md`): on
+//! every tier the stages of one request partition its end-to-end
+//! latency — the residual interval not covered by a directly measured
+//! stage is attributed to `NetRtt` (tcp: the wire wait between encode
+//! and decode; sim: fabric transfer plus remote node queueing). That
+//! makes "stage sums equal end-to-end latency" hold by construction,
+//! which the acceptance tests pin to within 5%.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::jsonlite::Value;
+use crate::metrics::Stats;
+use crate::serve::query::QUERY_CLASSES;
+
+use super::engine::drive::DriveReport;
+use super::server::ServerReport;
+
+/// The per-request pipeline stages a span can be attributed to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// time between enqueue and a worker draining the job (worker-pool
+    /// tier), or consistency catch-up stalls + dead-replica detection
+    /// delay (distributed tiers)
+    QueueWait,
+    /// shard planning and per-server request grouping
+    BatchAssembly,
+    /// executing sub-queries against shard content
+    ShardExecute,
+    /// wire encoding (client request frames; server reply frames)
+    Encode,
+    /// wire decoding (client reply frames; server request frames)
+    Decode,
+    /// the residual wire/fabric wait: everything between a request
+    /// leaving the encoder and its reply reaching the decoder that is
+    /// not attributed to a server-side stage
+    NetRtt,
+    /// canonical reply merge + response assembly
+    Merge,
+}
+
+/// Number of [`Stage`] variants (the fixed width of a [`SpanSet`]).
+pub const N_STAGES: usize = 7;
+
+/// Every stage, in wire/display order.
+pub const STAGES: [Stage; N_STAGES] = [
+    Stage::QueueWait,
+    Stage::BatchAssembly,
+    Stage::ShardExecute,
+    Stage::Encode,
+    Stage::Decode,
+    Stage::NetRtt,
+    Stage::Merge,
+];
+
+impl Stage {
+    /// Stable metric/JSON name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchAssembly => "batch_assembly",
+            Stage::ShardExecute => "shard_execute",
+            Stage::Encode => "encode",
+            Stage::Decode => "decode",
+            Stage::NetRtt => "net_rtt",
+            Stage::Merge => "merge",
+        }
+    }
+
+    /// Wire tag (index into [`STAGES`]).
+    pub fn as_u8(self) -> u8 {
+        STAGES.iter().position(|s| *s == self).unwrap() as u8
+    }
+
+    /// Inverse of [`Stage::as_u8`]; `None` for unknown tags (a newer
+    /// peer may speak stages this build does not know — skip them).
+    pub fn from_u8(b: u8) -> Option<Stage> {
+        STAGES.get(b as usize).copied()
+    }
+}
+
+/// Seconds attributed to each [`Stage`] for one request. Additive:
+/// repeated `add`s and `merge`s accumulate.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SpanSet {
+    secs: [f64; N_STAGES],
+}
+
+impl SpanSet {
+    pub fn new() -> SpanSet {
+        SpanSet::default()
+    }
+
+    /// Attribute `secs` (clamped at 0) to `stage`.
+    pub fn add(&mut self, stage: Stage, secs: f64) {
+        self.secs[stage.as_u8() as usize] += secs.max(0.0);
+    }
+
+    pub fn get(&self, stage: Stage) -> f64 {
+        self.secs[stage.as_u8() as usize]
+    }
+
+    /// Sum over all stages.
+    pub fn total(&self) -> f64 {
+        self.secs.iter().sum()
+    }
+
+    /// True if no stage has any time attributed.
+    pub fn is_empty(&self) -> bool {
+        self.secs.iter().all(|&s| s == 0.0)
+    }
+
+    /// Accumulate another span set stage-wise.
+    pub fn merge(&mut self, o: &SpanSet) {
+        for (dst, src) in self.secs.iter_mut().zip(&o.secs) {
+            *dst += src;
+        }
+    }
+
+    /// The non-zero `(stage, secs)` pairs, wire order (what `Reply`
+    /// frames carry).
+    pub fn entries(&self) -> Vec<(u8, f64)> {
+        STAGES
+            .iter()
+            .filter(|s| self.get(**s) > 0.0)
+            .map(|s| (s.as_u8(), self.get(*s)))
+            .collect()
+    }
+
+    /// Rebuild from wire `(stage, secs)` pairs; unknown stages are
+    /// skipped, negative times clamped (hostile peers).
+    pub fn from_entries(entries: &[(u8, f64)]) -> SpanSet {
+        let mut out = SpanSet::new();
+        for &(tag, secs) in entries {
+            if let Some(stage) = Stage::from_u8(tag) {
+                if secs.is_finite() {
+                    out.add(stage, secs);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Process-global trace-id source: unique, monotone, never 0 (0 on the
+/// wire means "untraced").
+static NEXT_TRACE_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Allocate a fresh trace id (stamped on every `Request`).
+pub fn next_trace_id() -> u64 {
+    NEXT_TRACE_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// A cloneable counter handle: one atomic, no lock on the hot path.
+#[derive(Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A cloneable histogram handle over a shared [`Stats`] reservoir.
+#[derive(Clone, Default)]
+pub struct Histogram(Arc<Mutex<Stats>>);
+
+impl Histogram {
+    /// Record one observation (seconds, bytes, whatever the metric is).
+    pub fn record(&self, x: f64) {
+        self.0.lock().unwrap().push(x);
+    }
+
+    /// A copy of the underlying distribution.
+    pub fn stats(&self) -> Stats {
+        self.0.lock().unwrap().clone()
+    }
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    counters: BTreeMap<String, Counter>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+/// The unified metrics registry: named counters/gauges/histograms.
+/// Handle lookup takes the registry lock once; the returned handles are
+/// lock-free (counters) or per-metric locked (histograms), so hot paths
+/// hold handles instead of names. Shareable as `Arc<Registry>`.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<RegistryInner>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get or create the named counter.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut g = self.inner.lock().unwrap();
+        g.counters.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get or create the named histogram.
+    pub fn histogram(&self, name: &str) -> Histogram {
+        let mut g = self.inner.lock().unwrap();
+        g.histograms.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Set the named gauge to its latest value.
+    pub fn gauge_set(&self, name: &str, v: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.gauges.insert(name.to_string(), v);
+    }
+
+    /// Per-stage histogram handles (`stage_<name>` seconds), so engines
+    /// record a whole [`SpanSet`] with one registry lock acquisition.
+    pub fn stage_histograms(&self) -> Vec<(Stage, Histogram)> {
+        let mut g = self.inner.lock().unwrap();
+        STAGES
+            .iter()
+            .map(|s| {
+                let h = g
+                    .histograms
+                    .entry(format!("stage_{}", s.name()))
+                    .or_default()
+                    .clone();
+                (*s, h)
+            })
+            .collect()
+    }
+
+    /// Record every non-zero stage of one request's spans into the
+    /// `stage_*` histograms.
+    pub fn record_spans(&self, spans: &SpanSet) {
+        for (stage, h) in self.stage_histograms() {
+            let s = spans.get(stage);
+            if s > 0.0 {
+                h.record(s);
+            }
+        }
+    }
+
+    /// Absorb an engine stack's `metrics()` pairs as gauges, names
+    /// unchanged — the reported values are exactly the stack's own.
+    pub fn absorb_metrics(&self, pairs: &[(String, f64)]) {
+        let mut g = self.inner.lock().unwrap();
+        for (name, v) in pairs {
+            g.gauges.insert(name.clone(), *v);
+        }
+    }
+
+    /// Absorb a drive report's disposition counters and latency
+    /// distributions, values unchanged (`drive_*` metrics; per-class
+    /// latency histograms `drive_latency_<class>` plus the merged
+    /// `drive_latency`).
+    pub fn absorb_drive(&self, rep: &DriveReport) {
+        for (name, v) in [
+            ("drive_offered", rep.offered),
+            ("drive_completed", rep.completed),
+            ("drive_queued", rep.queued),
+            ("drive_shed", rep.shed),
+            ("drive_failed", rep.failed),
+            ("drive_deadline_exceeded", rep.deadline_exceeded),
+            ("drive_cache_hits", rep.cache_hits),
+            ("drive_hedges", rep.hedges),
+            ("drive_hedge_wins", rep.hedge_wins),
+            ("drive_local_hits", rep.local_hits),
+            ("drive_steals", rep.steals),
+            ("drive_batches", rep.batches),
+        ] {
+            self.counter(name).add(v);
+        }
+        let mut g = self.inner.lock().unwrap();
+        for c in QUERY_CLASSES {
+            let h = g
+                .histograms
+                .entry(format!("drive_latency_{}", c.name()))
+                .or_default()
+                .clone();
+            let mut s = h.0.lock().unwrap();
+            s.merge(&rep.latency[c.index()]);
+        }
+        let all = g.histograms.entry("drive_latency".to_string()).or_default().clone();
+        drop(g);
+        all.0.lock().unwrap().merge(&rep.latency_all());
+    }
+
+    /// Absorb a worker-pool server report (`server_*` metrics), values
+    /// unchanged.
+    pub fn absorb_server(&self, rep: &ServerReport) {
+        for (name, v) in [
+            ("server_accepted", rep.accepted),
+            ("server_shed", rep.shed),
+            ("server_executed", rep.executed),
+            ("server_local_hits", rep.local_hits),
+            ("server_steals", rep.steals),
+            ("server_batches", rep.batches),
+        ] {
+            self.counter(name).add(v);
+        }
+        let batch = self.histogram("server_batch_size");
+        batch.0.lock().unwrap().merge(&rep.batch_size);
+        let lat = self.histogram("server_latency");
+        lat.0.lock().unwrap().merge(&rep.latency_all());
+        // the worker-pool tier's stage breakdown, measured inside the
+        // pool itself (enqueue -> drain; per-batch shard execution)
+        let qw = self.histogram(&format!("stage_{}", Stage::QueueWait.name()));
+        qw.0.lock().unwrap().merge(&rep.queue_wait);
+        let ex = self.histogram(&format!("stage_{}", Stage::ShardExecute.name()));
+        ex.0.lock().unwrap().merge(&rep.execute);
+    }
+
+    /// A point-in-time copy of every metric.
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        Snapshot {
+            counters: g.counters.iter().map(|(k, c)| (k.clone(), c.get())).collect(),
+            gauges: g.gauges.clone(),
+            histograms: g
+                .histograms
+                .iter()
+                .map(|(k, h)| (k.clone(), h.stats()))
+                .collect(),
+        }
+    }
+}
+
+/// An immutable point-in-time view of a [`Registry`] — what travels in
+/// `StatsReply` frames and what [`write_dump`] serializes.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub histograms: BTreeMap<String, Stats>,
+}
+
+impl Snapshot {
+    /// Counter value by name (0 if absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Merge snapshots from several processes/registries into one view:
+    /// counters sum, gauges sum, histograms fold through the
+    /// deterministic [`Stats::merge_all`] — so the merged quantiles do
+    /// not depend on the order snapshots arrive in.
+    pub fn merge_all<'a, I>(parts: I) -> Snapshot
+    where
+        I: IntoIterator<Item = &'a Snapshot>,
+    {
+        let parts: Vec<&Snapshot> = parts.into_iter().collect();
+        let mut out = Snapshot::default();
+        for p in &parts {
+            for (k, v) in &p.counters {
+                *out.counters.entry(k.clone()).or_insert(0) += v;
+            }
+            for (k, v) in &p.gauges {
+                *out.gauges.entry(k.clone()).or_insert(0.0) += v;
+            }
+        }
+        let mut names: Vec<&String> = Vec::new();
+        for p in &parts {
+            for k in p.histograms.keys() {
+                if !names.contains(&k) {
+                    names.push(k);
+                }
+            }
+        }
+        for name in names {
+            let hs: Vec<&Stats> =
+                parts.iter().filter_map(|p| p.histograms.get(name)).collect();
+            out.histograms.insert(name.clone(), Stats::merge_all(hs));
+        }
+        out
+    }
+
+    /// Render as a jsonlite object: counters and gauges verbatim,
+    /// histograms summarized (n/mean/p50/p99/max in milliseconds-free
+    /// raw units).
+    pub fn to_json(&self) -> Value {
+        let mut counters = BTreeMap::new();
+        for (k, v) in &self.counters {
+            counters.insert(k.clone(), Value::Num(*v as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (k, v) in &self.gauges {
+            gauges.insert(k.clone(), Value::Num(*v));
+        }
+        let mut hists = BTreeMap::new();
+        for (k, s) in &self.histograms {
+            let q = s.quantiles(&[0.50, 0.99]);
+            let mut h = BTreeMap::new();
+            h.insert("n".to_string(), Value::Num(s.n as f64));
+            h.insert("mean".to_string(), Value::Num(s.mean()));
+            h.insert("p50".to_string(), Value::Num(q[0]));
+            h.insert("p99".to_string(), Value::Num(q[1]));
+            h.insert("max".to_string(), Value::Num(if s.n == 0 { 0.0 } else { s.max }));
+            hists.insert(k.clone(), Value::Obj(h));
+        }
+        let mut obj = BTreeMap::new();
+        obj.insert("counters".to_string(), Value::Obj(counters));
+        obj.insert("gauges".to_string(), Value::Obj(gauges));
+        obj.insert("histograms".to_string(), Value::Obj(hists));
+        Value::Obj(obj)
+    }
+}
+
+/// One sampled request: its trace id, end-to-end latency, and the
+/// client/server span sets joined by that id.
+#[derive(Clone, Debug)]
+pub struct TraceRecord {
+    pub trace_id: u64,
+    /// end-to-end latency, seconds on the engine's clock
+    pub total_s: f64,
+    /// client-side (front-end) stage spans
+    pub spans: SpanSet,
+    /// server-side stage spans returned in `Reply` frames (empty on
+    /// single-process tiers)
+    pub server_spans: SpanSet,
+    /// admitted because it exceeded the slow threshold (the slow-query
+    /// log), not (only) by the 1-in-N sampler
+    pub slow: bool,
+}
+
+impl TraceRecord {
+    fn to_json(&self) -> Value {
+        let spans_obj = |s: &SpanSet| {
+            let mut m = BTreeMap::new();
+            for stage in STAGES {
+                let v = s.get(stage);
+                if v > 0.0 {
+                    m.insert(stage.name().to_string(), Value::Num(v * 1e3));
+                }
+            }
+            Value::Obj(m)
+        };
+        let mut m = BTreeMap::new();
+        m.insert("trace_id".to_string(), Value::Num(self.trace_id as f64));
+        m.insert("total_ms".to_string(), Value::Num(self.total_s * 1e3));
+        m.insert("slow".to_string(), Value::Bool(self.slow));
+        m.insert("client_spans_ms".to_string(), spans_obj(&self.spans));
+        m.insert("server_spans_ms".to_string(), spans_obj(&self.server_spans));
+        Value::Obj(m)
+    }
+}
+
+/// Retained trace records are bounded so a long run cannot grow the
+/// sampler without limit (oldest non-slow records are evicted first).
+const TRACE_CAP: usize = 4096;
+
+/// 1-in-N request sampler plus slow-query log. Disabled until
+/// [`TraceSampler::configure`] sets a sampling period or threshold.
+#[derive(Default)]
+pub struct TraceSampler {
+    /// keep every Nth request (0 = sampling off)
+    every: AtomicU64,
+    /// slow threshold in nanoseconds-free f64 bits (0-bits = off)
+    slow_bits: AtomicU64,
+    seen: AtomicU64,
+    records: Mutex<Vec<TraceRecord>>,
+}
+
+impl TraceSampler {
+    pub fn new() -> TraceSampler {
+        TraceSampler::default()
+    }
+
+    /// Enable sampling: keep every `every`th request (0 = off) and all
+    /// requests slower than `slow_s` seconds (<= 0 = off).
+    pub fn configure(&self, every: u64, slow_s: f64) {
+        self.every.store(every, Ordering::Relaxed);
+        self.slow_bits
+            .store(if slow_s > 0.0 { slow_s.to_bits() } else { 0 }, Ordering::Relaxed);
+    }
+
+    /// True if either the sampler or the slow log is armed.
+    pub fn enabled(&self) -> bool {
+        self.every.load(Ordering::Relaxed) > 0 || self.slow_bits.load(Ordering::Relaxed) != 0
+    }
+
+    fn slow_threshold(&self) -> Option<f64> {
+        match self.slow_bits.load(Ordering::Relaxed) {
+            0 => None,
+            bits => Some(f64::from_bits(bits)),
+        }
+    }
+
+    /// Offer one completed request; the sampler decides whether to keep
+    /// it. Cheap when disabled (two relaxed loads).
+    pub fn observe(&self, mut rec: TraceRecord) {
+        let every = self.every.load(Ordering::Relaxed);
+        let slow = self.slow_threshold().is_some_and(|t| rec.total_s > t);
+        let seen = self.seen.fetch_add(1, Ordering::Relaxed) + 1;
+        let sampled = every > 0 && seen % every == 0;
+        if !sampled && !slow {
+            return;
+        }
+        rec.slow = slow;
+        let mut recs = self.records.lock().unwrap();
+        if recs.len() >= TRACE_CAP {
+            // evict the oldest non-slow record; if everything retained
+            // is slow, drop the oldest outright
+            let victim = recs.iter().position(|r| !r.slow).unwrap_or(0);
+            recs.remove(victim);
+        }
+        recs.push(rec);
+    }
+
+    /// The retained records, oldest first.
+    pub fn records(&self) -> Vec<TraceRecord> {
+        self.records.lock().unwrap().clone()
+    }
+
+    /// Requests offered to the sampler so far.
+    pub fn seen(&self) -> u64 {
+        self.seen.load(Ordering::Relaxed)
+    }
+
+    /// Human lines for the slow-query log (empty when nothing crossed
+    /// the threshold).
+    pub fn slow_log(&self) -> Vec<String> {
+        self.records
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|r| r.slow)
+            .map(|r| {
+                let mut stages: Vec<String> = STAGES
+                    .iter()
+                    .filter(|s| r.spans.get(**s) > 0.0)
+                    .map(|s| format!("{}={:.3}ms", s.name(), r.spans.get(*s) * 1e3))
+                    .collect();
+                for s in STAGES {
+                    let v = r.server_spans.get(s);
+                    if v > 0.0 {
+                        stages.push(format!("srv_{}={:.3}ms", s.name(), v * 1e3));
+                    }
+                }
+                format!(
+                    "slow: trace={} total={:.3}ms {}",
+                    r.trace_id,
+                    r.total_s * 1e3,
+                    stages.join(" ")
+                )
+            })
+            .collect()
+    }
+}
+
+/// Write the observability dump `serve-bench --obs-dump` produces: the
+/// front end's merged metrics snapshot, each shard server's scraped
+/// snapshot, and the sampled trace records.
+pub fn write_dump(
+    path: &str,
+    metrics: &Snapshot,
+    servers: &[Snapshot],
+    traces: &[TraceRecord],
+) -> std::io::Result<()> {
+    let mut obj = BTreeMap::new();
+    obj.insert("schema".to_string(), Value::Str("celeste-obs-dump-v1".to_string()));
+    obj.insert("metrics".to_string(), metrics.to_json());
+    obj.insert(
+        "servers".to_string(),
+        Value::Arr(servers.iter().map(|s| s.to_json()).collect()),
+    );
+    obj.insert(
+        "traces".to_string(),
+        Value::Arr(traces.iter().map(|t| t.to_json()).collect()),
+    );
+    std::fs::write(path, crate::jsonlite::to_string(&Value::Obj(obj)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_tags_roundtrip() {
+        for s in STAGES {
+            assert_eq!(Stage::from_u8(s.as_u8()), Some(s));
+        }
+        assert_eq!(Stage::from_u8(N_STAGES as u8), None);
+        assert_eq!(Stage::from_u8(255), None);
+    }
+
+    #[test]
+    fn span_set_accumulates_and_roundtrips_entries() {
+        let mut s = SpanSet::new();
+        assert!(s.is_empty());
+        s.add(Stage::Encode, 1e-3);
+        s.add(Stage::Encode, 2e-3);
+        s.add(Stage::NetRtt, 5e-3);
+        s.add(Stage::Merge, -1.0); // clamped
+        assert!((s.get(Stage::Encode) - 3e-3).abs() < 1e-15);
+        assert_eq!(s.get(Stage::Merge), 0.0);
+        assert!((s.total() - 8e-3).abs() < 1e-15);
+        let back = SpanSet::from_entries(&s.entries());
+        assert_eq!(back, s);
+        // unknown stages and non-finite times from a hostile peer are
+        // dropped, never panicking
+        let hostile = SpanSet::from_entries(&[(200, 1.0), (0, f64::NAN), (1, 2.0)]);
+        assert_eq!(hostile.get(Stage::BatchAssembly), 2.0);
+        assert_eq!(hostile.total(), 2.0);
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_nonzero() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert_ne!(a, 0);
+        assert_ne!(b, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn counter_handles_share_state() {
+        let reg = Registry::new();
+        let a = reg.counter("x");
+        let b = reg.counter("x");
+        a.inc();
+        b.add(2);
+        assert_eq!(reg.snapshot().counter("x"), 3);
+        assert_eq!(a.get(), 3);
+    }
+
+    #[test]
+    fn snapshot_is_deterministic_across_interleavings() {
+        // the same multiset of events recorded in two different
+        // interleavings must produce identical snapshots, including
+        // histogram quantiles (the registry extension of the
+        // `Stats::merge_all` guarantee)
+        let events: Vec<f64> = (0..3000u64)
+            .map(|i| ((i.wrapping_mul(2654435761) % 10_000) as f64) * 1e-5)
+            .collect();
+        let build = |order: &[usize]| {
+            let reg = Registry::new();
+            let c = reg.counter("events");
+            let h = reg.histogram("lat");
+            for &i in order {
+                c.inc();
+                h.record(events[i]);
+            }
+            reg.gauge_set("g", 4.5);
+            reg.snapshot()
+        };
+        let fwd: Vec<usize> = (0..events.len()).collect();
+        let mut rev = fwd.clone();
+        rev.reverse();
+        let a = build(&fwd);
+        let b = build(&rev);
+        assert_eq!(a.counter("events"), b.counter("events"));
+        assert_eq!(a.gauges, b.gauges);
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(
+                a.histograms["lat"].quantile(q),
+                b.histograms["lat"].quantile(q),
+                "q{q} differs across interleavings"
+            );
+        }
+    }
+
+    #[test]
+    fn snapshot_merge_is_order_independent() {
+        let mk = |lo: u64, hi: u64| {
+            let reg = Registry::new();
+            reg.counter("n").add(hi - lo);
+            let h = reg.histogram("lat");
+            for x in lo..hi {
+                h.record(x as f64);
+            }
+            reg.gauge_set("g", 1.0);
+            reg.snapshot()
+        };
+        let a = mk(0, 500);
+        let b = mk(500, 900);
+        let ab = Snapshot::merge_all([&a, &b]);
+        let ba = Snapshot::merge_all([&b, &a]);
+        assert_eq!(ab.counter("n"), 900);
+        assert_eq!(ab.counter("n"), ba.counter("n"));
+        assert_eq!(ab.gauges["g"], 2.0);
+        for q in [0.5, 0.99] {
+            assert_eq!(ab.histograms["lat"].quantile(q), ba.histograms["lat"].quantile(q));
+        }
+        assert_eq!(ab.histograms["lat"].n, 900);
+    }
+
+    #[test]
+    fn sampler_keeps_every_nth_and_slow_requests() {
+        let s = TraceSampler::new();
+        assert!(!s.enabled());
+        s.configure(10, 1e-3);
+        assert!(s.enabled());
+        for i in 0..100u64 {
+            s.observe(TraceRecord {
+                trace_id: i + 1,
+                total_s: if i == 3 { 5e-3 } else { 1e-5 },
+                spans: SpanSet::new(),
+                server_spans: SpanSet::new(),
+                slow: false,
+            });
+        }
+        let recs = s.records();
+        // 10 sampled + 1 slow (trace 4 is not a 10th request)
+        assert_eq!(recs.len(), 11);
+        assert_eq!(recs.iter().filter(|r| r.slow).count(), 1);
+        assert_eq!(recs.iter().find(|r| r.slow).unwrap().trace_id, 4);
+        assert_eq!(s.seen(), 100);
+        assert_eq!(s.slow_log().len(), 1);
+        assert!(s.slow_log()[0].contains("trace=4"));
+    }
+
+    #[test]
+    fn sampler_memory_is_bounded() {
+        let s = TraceSampler::new();
+        s.configure(1, 0.0);
+        for i in 0..(TRACE_CAP as u64 + 500) {
+            s.observe(TraceRecord {
+                trace_id: i + 1,
+                total_s: 1e-5,
+                spans: SpanSet::new(),
+                server_spans: SpanSet::new(),
+                slow: false,
+            });
+        }
+        let recs = s.records();
+        assert_eq!(recs.len(), TRACE_CAP);
+        // oldest evicted first
+        assert_eq!(recs[0].trace_id, 501);
+    }
+
+    #[test]
+    fn absorb_preserves_reported_values() {
+        let mut rep = DriveReport {
+            offered: 10,
+            completed: 8,
+            shed: 1,
+            failed: 1,
+            cache_hits: 3,
+            ..Default::default()
+        };
+        rep.latency[0].push(0.5);
+        rep.latency[0].push(1.5);
+        let reg = Registry::new();
+        reg.absorb_drive(&rep);
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("drive_offered"), 10);
+        assert_eq!(snap.counter("drive_completed"), 8);
+        assert_eq!(snap.counter("drive_shed"), 1);
+        assert_eq!(snap.counter("drive_cache_hits"), 3);
+        assert_eq!(snap.histograms["drive_latency"].n, 2);
+        assert_eq!(
+            snap.histograms["drive_latency"].p50(),
+            rep.latency_all().p50()
+        );
+    }
+}

@@ -83,6 +83,10 @@ struct WorkerLocal {
     batches: u64,
     /// jobs per drained batch
     batch_size: Stats,
+    /// per-job enqueue -> drain wait, seconds
+    queue_wait: Stats,
+    /// per-batch shard-execution time, seconds
+    execute: Stats,
 }
 
 /// Final report: throughput counters, scheduler counters, plus
@@ -102,6 +106,11 @@ pub struct ServerReport {
     pub batches: u64,
     /// jobs per drained batch across all workers
     pub batch_size: Stats,
+    /// per-job enqueue → worker-drain wait (the `queue_wait` stage of
+    /// the worker-pool tier; feeds `Registry::absorb_server`)
+    pub queue_wait: Stats,
+    /// per-batch shard-execution time (the `shard_execute` stage)
+    pub execute: Stats,
     /// queue-entry → reply latency per query class
     pub latency: [Stats; N_QUERY_CLASSES],
 }
@@ -157,6 +166,17 @@ impl ServerReport {
                 self.steal_fraction() * 100.0,
                 self.batch_size.mean(),
                 self.batch_size.max
+            ));
+        }
+        if self.queue_wait.n > 0 {
+            let wq = self.queue_wait.quantiles(&[0.50, 0.99]);
+            let eq = self.execute.quantiles(&[0.50, 0.99]);
+            out.push_str(&format!(
+                "\n  stages: queue_wait p50={:.3}ms p99={:.3}ms, execute/batch p50={:.3}ms p99={:.3}ms",
+                wq[0] * 1e3,
+                wq[1] * 1e3,
+                eq[0] * 1e3,
+                eq[1] * 1e3
             ));
         }
         out
@@ -271,8 +291,10 @@ impl Server {
             report.local_hits += local.local_hits;
             report.steals += local.steals;
             report.batches += local.batches;
-            report.batch_size.merge(&local.batch_size);
         }
+        report.batch_size = Stats::merge_all(locals.iter().map(|l| &l.batch_size));
+        report.queue_wait = Stats::merge_all(locals.iter().map(|l| &l.queue_wait));
+        report.execute = Stats::merge_all(locals.iter().map(|l| &l.execute));
         for c in 0..N_QUERY_CLASSES {
             report.latency[c] = Stats::merge_all(locals.iter().map(|l| &l.latency[c]));
         }
@@ -294,13 +316,19 @@ fn worker_loop(shared: &Shared, worker: usize) -> WorkerLocal {
         }
         local.batches += 1;
         local.batch_size.push(jobs.len() as f64);
+        // the queue_wait stage: enqueue -> this drain, per job
+        for job in &jobs {
+            local.queue_wait.push(job.enqueued.elapsed().as_secs_f64());
+        }
         // live stores flip epochs between batches: one head load serves
         // the whole batch (amortized epoch pin)
         let store = shared.source.current();
         // batch-aware admission: slots free only once execution begins
         shared.queue.begin_execute(jobs.len());
         let queries: Vec<&Query> = jobs.iter().map(|j| &j.query).collect();
+        let t_exec = Instant::now();
         let results = execute_batch(&store, &queries);
+        local.execute.push(t_exec.elapsed().as_secs_f64());
         for (job, result) in jobs.drain(..).zip(results) {
             let class = job.query.class();
             local.latency[class.index()].push(job.enqueued.elapsed().as_secs_f64());
@@ -393,6 +421,9 @@ mod tests {
         assert_eq!(report.local_hits + report.steals, 60);
         assert!(report.batches > 0);
         assert_eq!(report.batch_size.n, report.batches);
+        // stage timings cover every job / every batch
+        assert_eq!(report.queue_wait.n, 60);
+        assert_eq!(report.execute.n, report.batches);
     }
 
     #[test]

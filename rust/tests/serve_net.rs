@@ -26,7 +26,7 @@ use celeste::serve::net::{NetConn, NetShardClient, ShardServerHandle};
 use celeste::serve::{
     self, execute, execute_on_shard, fuzz_query, Admission, Cached, Consistency, Consistent,
     DriftConfig, DriftGen, Hedged, Ingestor, NetRouterEngine, Outcome, Query, QueryEngine,
-    Request, ShardServer, SourceFilter, Store, VersionedStore,
+    Request, ShardServer, SourceFilter, Stage, Store, VersionedStore,
 };
 
 fn test_store(n: usize, shards: usize, seed: u64) -> Arc<Store> {
@@ -143,11 +143,14 @@ fn spawn_flaky_server() -> std::net::SocketAddr {
                 &mut s,
                 &Msg::HelloAck { version: wire::VERSION, epoch: 0, n_shards: 6 },
             );
-            if let Ok(Msg::Execute { req_id, entries, .. }) = wire::read_frame(&mut s) {
+            if let Ok(Msg::Execute { req_id, trace_id, entries, .. }) = wire::read_frame(&mut s) {
                 // the connect-time ping carries no entries; echo the shape
                 let replies: Vec<Vec<celeste::serve::ShardReply>> =
                     entries.iter().map(|_| Vec::new()).collect();
-                let _ = wire::write_frame(&mut s, &Msg::Reply { req_id, entries: replies });
+                let _ = wire::write_frame(
+                    &mut s,
+                    &Msg::Reply { req_id, trace_id, server_spans: Vec::new(), entries: replies },
+                );
             }
         }
         // listener and connection drop here: further dials are refused
@@ -289,7 +292,7 @@ fn hostile_peers_get_typed_errors_and_cannot_kill_the_server() {
 
     // a Hello negotiating a version the server does not speak
     let mut s = TcpStream::connect(addr).expect("connect");
-    s.write_all(&wire::encode_frame(&Msg::Hello { version: 2 })).expect("write");
+    s.write_all(&wire::encode_frame(&Msg::Hello { version: 99 })).expect("write");
     match wire::read_frame(&mut s) {
         Ok(Msg::Error { code, .. }) => assert_eq!(code, ErrorCode::BadVersion),
         other => panic!("want a typed BadVersion error, got {other:?}"),
@@ -351,6 +354,127 @@ fn connect_to_dead_address_errors_after_backoff() {
     };
     let err = NetRouterEngine::connect(store, &[addr], 1).expect_err("must refuse");
     assert!(matches!(err, WireError::Io(_)), "got {err:?}");
+}
+
+/// Tentpole acceptance: over tcp, every sampled request yields a
+/// complete cross-process span tree — the client's encode/decode and
+/// the server's shard execution individually attributed, joined by one
+/// trace id — and the client spans sum to the end-to-end latency
+/// within 5%.
+#[test]
+fn tcp_traces_join_client_and_server_spans_and_sum_to_latency() {
+    let store = test_store(900, 6, 71);
+    let (w, h) = (store.width, store.height);
+    let (_handles, addrs) = spawn_servers(&store, 2);
+    let net = NetRouterEngine::connect(Arc::clone(&store), &addrs, 2).expect("connect");
+    net.configure_tracing(1, 0.0); // keep every request
+    let mut rng = Rng::new(41);
+    let mut ids = Vec::new();
+    for i in 0..25usize {
+        let q = fuzz_query(&mut rng, w, h, i);
+        let resp = net.call(Request::new(q));
+        assert_eq!(resp.trace.outcome, Outcome::Served, "query {i}");
+        assert_ne!(resp.trace.trace_id, 0, "every request carries a trace id");
+        assert!(!resp.trace.spans.is_empty(), "query {i} got no client spans");
+        ids.push(resp.trace.trace_id);
+    }
+    let records = net.sampler().records();
+    assert_eq!(records.len(), 25, "sampling every request keeps every request");
+    for rec in &records {
+        assert!(ids.contains(&rec.trace_id), "sampled id {} from no real request", rec.trace_id);
+        assert!(rec.total_s > 0.0);
+        let sum = rec.spans.total();
+        assert!(
+            (sum - rec.total_s).abs() <= 0.05 * rec.total_s,
+            "trace {}: client spans sum to {:.6}s but e2e latency is {:.6}s (>5% apart)",
+            rec.trace_id,
+            sum,
+            rec.total_s
+        );
+        // the cross-process join: wire codec cost attributed client-side,
+        // shard execution attributed server-side, same trace id
+        assert!(rec.spans.get(Stage::Encode) > 0.0, "trace {} missing encode", rec.trace_id);
+        assert!(rec.spans.get(Stage::Decode) > 0.0, "trace {} missing decode", rec.trace_id);
+        assert!(
+            rec.server_spans.get(Stage::ShardExecute) > 0.0,
+            "trace {} has no server-side shard_execute span",
+            rec.trace_id
+        );
+    }
+    // the registry's stage histograms saw the same 25 requests
+    let snap = net.registry().snapshot();
+    assert_eq!(snap.histograms["stage_batch_assembly"].n, 25);
+    assert_eq!(snap.histograms["stage_merge"].n, 25);
+}
+
+/// Satellite acceptance: a peer speaking an older wire version
+/// surfaces as the distinct, actionable version-mismatch error — not a
+/// generic decode failure — and the client gives up immediately
+/// instead of burning reconnect backoff on a mismatch that cannot
+/// heal.
+#[test]
+fn old_version_peer_is_a_distinct_actionable_error() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    std::thread::spawn(move || {
+        if let Ok((mut s, _)) = listener.accept() {
+            // a v1-era server: reads the client's Hello, answers with a
+            // hand-rolled frame whose header carries version 1
+            let _ = wire::read_frame(&mut s);
+            let mut frame = Vec::new();
+            frame.extend_from_slice(&wire::MAGIC.to_le_bytes());
+            frame.push(1); // old protocol version
+            frame.push(2); // HelloAck tag
+            frame.extend_from_slice(&1u32.to_le_bytes());
+            frame.push(1); // v1 payload: just the version byte
+            let _ = s.write_all(&frame);
+            // keep the socket open long enough for the client to read
+            std::thread::sleep(Duration::from_millis(200));
+        }
+    });
+    let conn = NetConn::new(addr.to_string());
+    let err = conn.execute(Vec::new(), 0, None).expect_err("handshake must fail");
+    assert_eq!(err, WireError::PeerVersion { ours: wire::VERSION, theirs: 1 });
+    let msg = err.to_string();
+    assert!(msg.contains("v1"), "mismatch names the peer's version: {msg}");
+    assert!(msg.contains(&format!("v{}", wire::VERSION)), "and ours: {msg}");
+    assert!(msg.contains("docs/WIRE.md"), "and points at the fix: {msg}");
+}
+
+/// Satellite acceptance: `StatsReq` scrapes a live server's own
+/// registry — frame counts, per-stage timings, the applied-epoch gauge
+/// — and a refused stale read is counted on both ends of the
+/// connection.
+#[test]
+fn stats_scrape_reports_server_side_counters_and_stages() {
+    let store = test_store(300, 4, 13);
+    let server = ShardServer::bind(Arc::clone(&store), "127.0.0.1:0").expect("bind");
+    let addr = server.local_addr();
+    let _handle = server.spawn();
+    let conn = NetConn::new(addr.to_string());
+    let q = Query::BrightestN { n: 3, filter: SourceFilter::Any };
+    for i in 0..4 {
+        conn.execute(vec![(0, vec![q.clone()])], 0, None)
+            .unwrap_or_else(|e| panic!("execute {i}: {e}"));
+    }
+    // a bound the epoch-0 server cannot meet: refused as Stale and
+    // counted on both sides, without dropping the connection
+    assert_eq!(
+        conn.execute(vec![(1, vec![q.clone()])], 7, None),
+        Err(WireError::Remote(ErrorCode::Stale))
+    );
+    assert_eq!(conn.stale_refusals.load(std::sync::atomic::Ordering::Relaxed), 1);
+    let snap = conn.scrape(None).expect("scrape over the same connection");
+    // one in-order connection makes the server's accounting exact:
+    // 5 Execute frames + the StatsReq itself
+    assert_eq!(snap.counter("net_frames"), 6);
+    assert_eq!(snap.counter("stale_refusals"), 1);
+    assert_eq!(snap.histograms["stage_decode"].n, 5, "every Execute decode is timed");
+    let exec = &snap.histograms["stage_shard_execute"];
+    assert_eq!(exec.n, 4, "only executed batches are timed");
+    assert!(exec.max > 0.0);
+    assert_eq!(snap.histograms["stage_encode"].n, 4, "every Reply encode is timed");
+    assert_eq!(snap.gauges.get("applied_epoch"), Some(&0.0));
 }
 
 /// The `ShardClient` trait adapter: a real socket standing where the

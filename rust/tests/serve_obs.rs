@@ -1,0 +1,133 @@
+//! Acceptance tests for the observability layer (`serve::obs`):
+//!
+//! * the unified registry absorbs the stack's existing accounting —
+//!   drive reports, worker-pool server reports — without changing a
+//!   single reported value (counters equal the report's fields,
+//!   histogram quantiles equal the report's distributions);
+//! * on the simulated distributed tier the per-stage spans of every
+//!   sampled request sum to its end-to-end latency within 5% (they
+//!   partition it by construction), with shard service always
+//!   individually attributed.
+
+use std::sync::Arc;
+
+use celeste::prng::Rng;
+use celeste::serve::dist::{Router, RouterConfig};
+use celeste::serve::{
+    self, drive_open_loop, fuzz_query, LoadGen, LoadGenConfig, Outcome, Registry, Request,
+    RouterEngine, SchedConfig, SchedKind, Server, ServerConfig, SimClock, Stage, Store,
+};
+
+fn test_store(n: usize, shards: usize, seed: u64) -> Arc<Store> {
+    let snap = serve::snapshot::synthetic(n, seed);
+    Arc::new(Store::build(snap.sources, snap.width, snap.height, shards))
+}
+
+/// Acceptance: absorbing the worker pool's server report and a drive
+/// report into the registry changes no reported value.
+#[test]
+fn registry_absorbs_reports_without_changing_reported_values() {
+    let store = test_store(800, 6, 53);
+    let (w, h) = (store.width, store.height);
+
+    // a real worker-pool run: 60 closed-loop requests through the
+    // work-stealing batched scheduler, then shut down for the report
+    let server = Server::start(
+        Arc::clone(&store),
+        ServerConfig {
+            threads: 2,
+            sched: SchedConfig { kind: SchedKind::Steal, batch: 4 },
+            ..Default::default()
+        },
+    );
+    let mut rng = Rng::new(9);
+    for i in 0..60usize {
+        let q = fuzz_query(&mut rng, w, h, i);
+        assert!(server.call(q).is_some(), "query {i} must be served");
+    }
+    let report = server.shutdown();
+    assert_eq!(report.executed, 60);
+
+    // a real driven run on the simulated dist tier
+    let rengine =
+        RouterEngine::new(Router::new(Arc::clone(&store), 4, 2, RouterConfig::default()));
+    let cfg = LoadGenConfig::scenario("uniform", 77).expect("known scenario");
+    let mut gen = LoadGen::new(cfg, w, h);
+    let mut clock = SimClock::new();
+    let drive = drive_open_loop(&rengine, &mut clock, &mut gen, 5_000.0, 0.2);
+    assert!(drive.completed > 100, "completed {}", drive.completed);
+
+    let reg = Registry::new();
+    reg.absorb_server(&report);
+    reg.absorb_drive(&drive);
+    let snap = reg.snapshot();
+
+    // worker-pool values, unchanged
+    assert_eq!(snap.counter("server_accepted"), report.accepted);
+    assert_eq!(snap.counter("server_executed"), report.executed);
+    assert_eq!(snap.counter("server_shed"), report.shed);
+    assert_eq!(snap.counter("server_batches"), report.batches);
+    let lat = &snap.histograms["server_latency"];
+    assert_eq!(lat.n, report.latency_all().n);
+    assert_eq!(lat.p50(), report.latency_all().p50());
+    assert_eq!(lat.p99(), report.latency_all().p99());
+    // the pool's own stage breakdown rides along: one queue wait per
+    // job, one execute per drained batch
+    assert_eq!(snap.histograms["stage_queue_wait"].n, 60);
+    assert_eq!(snap.histograms["stage_shard_execute"].n, report.batches);
+
+    // drive values, unchanged
+    assert_eq!(snap.counter("drive_offered"), drive.offered);
+    assert_eq!(snap.counter("drive_completed"), drive.completed);
+    assert_eq!(snap.counter("drive_shed"), drive.shed);
+    let dlat = &snap.histograms["drive_latency"];
+    assert_eq!(dlat.n, drive.latency_all().n);
+    assert_eq!(dlat.p50(), drive.latency_all().p50());
+    assert_eq!(dlat.p99(), drive.latency_all().p99());
+}
+
+/// Acceptance: on the simulated dist tier the spans of every sampled
+/// request sum to its end-to-end simulated latency within 5%.
+#[test]
+fn sim_tier_spans_partition_end_to_end_latency() {
+    let store = test_store(600, 6, 31);
+    let (w, h) = (store.width, store.height);
+    let rengine =
+        RouterEngine::new(Router::new(Arc::clone(&store), 4, 2, RouterConfig::default()));
+    rengine.sampler().configure(1, 0.0); // keep every request
+    let mut rng = Rng::new(19);
+    let mut now = 0.0f64;
+    for i in 0..30usize {
+        let q = fuzz_query(&mut rng, w, h, i);
+        let resp = rengine.call(Request::new(q).arriving_at(now));
+        assert_eq!(resp.trace.outcome, Outcome::Served, "query {i}");
+        assert_ne!(resp.trace.trace_id, 0);
+        now += 1e-3;
+    }
+    let records = rengine.sampler().records();
+    assert_eq!(records.len(), 30, "sampling every request keeps every request");
+    for rec in &records {
+        assert!(rec.total_s > 0.0);
+        let sum = rec.spans.total();
+        assert!(
+            (sum - rec.total_s).abs() <= 0.05 * rec.total_s,
+            "trace {}: spans sum to {:.9}s but e2e simulated latency is {:.9}s (>5% apart)",
+            rec.trace_id,
+            sum,
+            rec.total_s
+        );
+        assert!(
+            rec.spans.get(Stage::ShardExecute) > 0.0,
+            "trace {} has no shard service attributed",
+            rec.trace_id
+        );
+    }
+    // the fabric transfer residual shows up on at least the remote
+    // critical branches
+    assert!(
+        records.iter().any(|r| r.spans.get(Stage::NetRtt) > 0.0),
+        "no request attributed any fabric time"
+    );
+    let snap = rengine.registry().snapshot();
+    assert_eq!(snap.histograms["stage_shard_execute"].n, 30);
+}
