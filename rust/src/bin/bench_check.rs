@@ -195,6 +195,10 @@ fn load(path: &str) -> Result<Value> {
     }
 }
 
+/// Title line of the markdown summary; the unarmed-gate warning is
+/// inserted immediately after it so it leads the rendered report.
+const MD_TITLE: &str = "## Bench regression gate\n\n";
+
 fn main() -> Result<()> {
     let mut fresh_path = "BENCH_serve.json".to_string();
     let mut baseline_path = "BENCH_baseline.json".to_string();
@@ -223,7 +227,7 @@ fn main() -> Result<()> {
     let baseline = load(&baseline_path)?;
 
     let mut md = String::new();
-    md.push_str("## Bench regression gate\n\n");
+    md.push_str(MD_TITLE);
     md.push_str(&format!(
         "`{fresh_path}` vs committed `{baseline_path}` (tolerance {max_regress_pct:.0}%, \
          simulated-time metrics only)\n\n"
@@ -290,10 +294,21 @@ fn main() -> Result<()> {
         ));
     }
     if seeded > 0 {
-        md.push_str(&format!(
-            "\n{seeded} metric(s) have no committed baseline yet; to arm them run the bench \
-             and commit the output: `cp BENCH_serve.json BENCH_baseline.json`.\n"
-        ));
+        // an unarmed gate is easy to mistake for a passing one: lead
+        // the job summary with the warning, not a footnote, and echo
+        // it to stderr so it shows in the raw log too
+        let warning = format!(
+            "> ⚠️ **UNARMED GATE:** `{baseline_path}` is still null-seeded for {seeded} of \
+             {} gated metric(s) — a regression in any of them passes silently. Arm the gate \
+             by committing a measured baseline:\n> `cargo bench --bench bench_serve && cp \
+             BENCH_serve.json BENCH_baseline.json`\n\n",
+            GATES.len()
+        );
+        md.insert_str(MD_TITLE.len(), &warning);
+        eprintln!(
+            "bench_check WARNING: {seeded} gated metric(s) have no committed baseline \
+             (null-seeded {baseline_path}); the regression gate is NOT armed for them"
+        );
     }
     md.push('\n');
 

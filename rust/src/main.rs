@@ -6,6 +6,7 @@
 //!   infer     --data DIR [...]         run Bayesian inference (phases 1-3)
 //!   photo     --data DIR [--coadd]     run the heuristic baseline
 //!   serve-bench [...]                  benchmark the catalog serving path
+//!   recover-bench [...]                measure WAL crash-recovery time (RTO)
 //!   shard-server --snapshot F [...]    serve one catalog partition over TCP
 //!   experiment NAME [--quick] [...]    regenerate a paper table/figure
 //!       NAME ∈ fig1 | fig3 | fig4 | fig5 | fig6 | table1 | newton-vs-lbfgs | all
@@ -32,6 +33,7 @@ fn main() -> Result<()> {
         "infer" => cmd_infer(&cli),
         "photo" => cmd_photo(&cli),
         "serve-bench" => cmd_serve_bench(&cli),
+        "recover-bench" => cmd_recover_bench(&cli),
         "shard-server" => cmd_shard_server(&cli),
         "experiment" => cmd_experiment(&cli),
         "" | "help" | "--help" => {
@@ -89,6 +91,24 @@ USAGE: celeste <command> [flags]
            [--ingest-batch B] upserts per publish         (default 32)
            [--consistency C]  cached | fresh | atmost:K — consistency
                               stamped on the driven query stream
+           Durability (docs/DURABILITY.md; requires --ingest-qps):
+           [--wal-dir D]      append+fsync every publish to a durable
+                              log in D before its epoch becomes
+                              visible; D must be empty. On the tcp
+                              transport each server gets D/node-i and
+                              acks only after its local fsync; a node
+                              killed by --kill-node is restarted from
+                              its WAL and checked for byte parity
+                              ('recovered_epoch=E parity=ok')
+           [--checkpoint-every N] snapshot checkpoint cadence, epochs
+                              (default 8; 0 = never; only shards the
+                              window touched are rewritten)
+           [--compact-threshold T] single-host tier: when max/mean
+                              shard-row skew stays above T (> 1.0) for
+                              3 consecutive publishes, re-split hot
+                              Hilbert ranges and merge cold ones
+                              (logged + replayable as a WAL record);
+                              skews the drift stream onto a hotspot
            Runs an open-loop (Poisson) phase at --qps, then closed-loop
            throughput at 1 vs --threads workers; prints accepted/shed
            counts and per-class p50/p99 latency.
@@ -117,6 +137,10 @@ USAGE: celeste <command> [flags]
                            (revive specs are rejected), and ingest
                            publishes ship over the wire to every
                            server before the front-end epoch advances
+           [--pipeline N]  tcp only: Execute frames each connection
+                           keeps in flight (default 1 = lockstep);
+                           replies are matched by req_id, so depth > 1
+                           overlaps request transmit with server work
            Observability (docs/OBSERVABILITY.md):
            [--obs-dump F]  write a jsonlite metrics + trace dump at
                            exit (schema celeste-obs-dump-v1). On the
@@ -131,11 +155,31 @@ USAGE: celeste <command> [flags]
                            slower than T ms with its span breakdown
                            (distributed tiers; sim tier thresholds are
                            in simulated milliseconds)
+  recover-bench                    measure WAL recovery time (RTO)
+           [--publishes P] epochs to ingest before the simulated crash
+                           (default 200)
+           [--sources N] [--shards K] [--ingest-batch B] [--seed S]
+           [--checkpoint-every N] checkpoint cadence      (default 32)
+           [--compact-threshold T] also exercise compaction records
+           [--wal-dir D]   log under D (default: a temp dir, removed
+                           on success); must be empty
+           Ingests P epochs through a durable log, drops the store,
+           recovers from disk, and prints the RTO split into
+           checkpoint-load vs tail-replay plus 'parity: ok' when the
+           recovered catalog hashes identically to the write-side
+           mirror.
   shard-server --snapshot F        serve one catalog partition over TCP
            [--shards K]    shard count (default 8; must match the
                            front-end's --shards)
            [--listen A]    bind address (default 127.0.0.1:0); prints
                            'shard-server listening on ADDR' when ready
+           [--wal-dir D]   fsync every accepted publish to a WAL in D
+                           before acking. If D already holds a
+                           checkpoint the server recovers from it
+                           (no --snapshot needed) and prints
+                           'shard-server recovered epoch=E ...' before
+                           the listening line
+           [--checkpoint-every N] checkpoint cadence      (default 8)
   experiment NAME [--quick]        regenerate a paper table/figure:
            fig1 fig3 fig4 fig5 fig6 ablations table1 newton-vs-lbfgs all
 ";
@@ -331,19 +375,21 @@ fn parse_consistency(cli: &Cli) -> Result<Option<serve::Consistency>> {
 
 /// Build the ingestion driver for one bench phase: a drift stream
 /// seeded from the versioned store's current catalog, publishing
-/// through it at `ingest_qps` publishes/second.
+/// through it at `ingest_qps` publishes/second. `hotspot` > 0 skews
+/// fresh detections onto one blob (the compaction trigger's diet).
 fn make_ingest_driver(
     versioned: &std::sync::Arc<serve::VersionedStore>,
     ingest_qps: f64,
     batch: usize,
     seed: u64,
+    hotspot: f64,
 ) -> serve::IngestDriver {
     let view = versioned.load();
     let drift = serve::DriftGen::new(
         &view.store.all_sources(),
         view.store.width,
         view.store.height,
-        serve::DriftConfig { batch, seed: seed ^ 0xd21f, ..Default::default() },
+        serve::DriftConfig { batch, hotspot, seed: seed ^ 0xd21f, ..Default::default() },
     );
     let ingestor = serve::Ingestor::new(std::sync::Arc::clone(versioned));
     serve::IngestDriver::new(ingestor, drift, ingest_qps, seed)
@@ -463,6 +509,39 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
     if cli.flag("hedge-budget").is_some() && cli.flag("hedge-ms").is_none() {
         bail!("--hedge-budget caps the hedge layer; add --hedge-ms B to enable hedging");
     }
+    // durability flag matrix: the WAL logs ingestion publishes, so it
+    // needs an ingest stream; the simulated tier has nothing real to
+    // fsync; compaction rides the single-host ingest loop for now
+    if cli.flag("wal-dir").is_some() && cli.flag("ingest-qps").is_none() {
+        bail!("--wal-dir logs ingestion publishes; add --ingest-qps R to generate them");
+    }
+    if cli.flag("wal-dir").is_some() && dist && !tcp {
+        bail!(
+            "--wal-dir appends and fsyncs a real on-disk log; the simulated fabric tier \
+             has nothing durable to protect. Use the single-host tier or --transport tcp."
+        );
+    }
+    if cli.flag("checkpoint-every").is_some() && cli.flag("wal-dir").is_none() {
+        bail!("--checkpoint-every sets the WAL checkpoint cadence; add --wal-dir DIR");
+    }
+    if cli.flag("compact-threshold").is_some() && dist {
+        bail!(
+            "--compact-threshold runs the single-host Hilbert-range compactor; \
+             distributed compaction is not wired yet. Drop --dist-nodes."
+        );
+    }
+    if cli.flag("compact-threshold").is_some() && cli.flag("ingest-qps").is_none() {
+        bail!(
+            "--compact-threshold watches shard skew produced by live ingestion; \
+             add --ingest-qps R"
+        );
+    }
+    if cli.flag("pipeline").is_some() && !tcp {
+        bail!(
+            "--pipeline sets per-connection request pipelining on real sockets; \
+             add --transport tcp"
+        );
+    }
     // counts are validated, not silently clamped: `--threads 0` (or a
     // negative / non-numeric value the old parser defaulted away) is a
     // misconfiguration the user should hear about
@@ -509,6 +588,27 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
     let obs = parse_obs(cli)?;
     let ingest_qps = cli.flag_parse("ingest-qps", 0.0f64).max(0.0);
     let ingest_batch = count("ingest-batch", 32, 1)?;
+    let wal_dir = cli.flag("wal-dir").map(std::path::PathBuf::from);
+    if let Some(dir) = &wal_dir {
+        if serve::DurableLog::exists(dir) {
+            bail!(
+                "--wal-dir {} already holds a checkpoint; point serve-bench at an empty \
+                 directory (recover the old log with shard-server or recover-bench)",
+                dir.display()
+            );
+        }
+    }
+    let checkpoint_every = cli.flag_u64("checkpoint-every", 8);
+    let compact_threshold = cli.flag_parse("compact-threshold", 0.0f64);
+    if cli.flag("compact-threshold").is_some() && compact_threshold <= 1.0 {
+        bail!(
+            "--compact-threshold is a max/mean shard-row skew ratio and must exceed 1.0, \
+             got {compact_threshold}"
+        );
+    }
+    // the ingesting phase's WAL registry (fsync latencies, appends,
+    // checkpoints), merged into the --obs-dump at exit
+    let mut wal_snapshot: Option<serve::obs::Snapshot> = None;
     // the single-host tier's unified metrics view: drive + worker-pool
     // reports absorbed per phase, dumped at exit with --obs-dump
     let obs_reg = serve::Registry::new();
@@ -558,16 +658,45 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
                 );
             }
         }
+        // durable ingestion: create the log over the seed catalog and
+        // attach it so every publish is fsynced before becoming visible
+        let wal_log = match (&wal_dir, ingesting) {
+            (Some(dir), true) => {
+                let log = std::sync::Arc::new(serve::DurableLog::create(
+                    dir,
+                    checkpoint_every,
+                    &versioned.load(),
+                )?);
+                versioned.attach_wal(std::sync::Arc::clone(&log));
+                Some(log)
+            }
+            _ => None,
+        };
+        // compaction wants skew to react to: point the drift hotspot
+        // at one blob so sustained ingestion piles onto a few shards
+        let hotspot = if ingesting && compact_threshold > 0.0 { 0.8 } else { 0.0 };
         let mut driver = if ingesting {
-            Some(make_ingest_driver(&versioned, ingest_qps, ingest_batch, seed))
+            Some(make_ingest_driver(&versioned, ingest_qps, ingest_batch, seed, hotspot))
         } else {
             None
         };
+        let mut compactor = (ingesting && compact_threshold > 0.0)
+            .then(|| serve::Compactor::new(compact_threshold, 3));
+        let mut compactions = 0u64;
+        let mut compacted_rows = 0u64;
         let mut gen = serve::LoadGen::new(gen_cfg.clone(), width, height);
         let mut clock = serve::WallClock::start();
         let mut ol = serve::drive_open_loop_with(&engine, &mut clock, &mut gen, qps, secs, |at| {
             if let Some(d) = driver.as_mut() {
-                d.tick(at);
+                let published = !d.tick(at).is_empty();
+                if let Some(c) = compactor.as_mut() {
+                    if published && c.observe(&d.ingestor().versioned().load().store) {
+                        if let Some(rep) = d.ingestor_mut().compact(compact_threshold) {
+                            compactions += 1;
+                            compacted_rows += rep.rows_resharded as u64;
+                        }
+                    }
+                }
             }
         });
         let report = server.shutdown();
@@ -589,6 +718,28 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
                 d.rows,
                 d.ingestor().versioned().epoch()
             );
+        }
+        if compactions > 0 {
+            obs_reg.counter("compactions").add(compactions);
+            obs_reg.counter("compaction_moves").add(compacted_rows);
+            println!("compaction: {compactions} re-split(s), {compacted_rows} row(s) resharded");
+        }
+        if let Some(log) = &wal_log {
+            let ws = log.obs().snapshot();
+            let appends = ws.counters.get("wal_appends").copied().unwrap_or(0);
+            let bytes = ws.counters.get("wal_bytes").copied().unwrap_or(0);
+            let checkpoints = ws.counters.get("wal_checkpoints").copied().unwrap_or(0);
+            match ws.histograms.get("wal_fsync_s") {
+                Some(f) if f.n > 0 => println!(
+                    "wal: {appends} append(s), {checkpoints} checkpoint(s), {:.2} MB logged, \
+                     fsync p50={:.3}ms p99={:.3}ms",
+                    bytes as f64 / (1024.0 * 1024.0),
+                    f.p50() * 1e3,
+                    f.p99() * 1e3
+                ),
+                _ => println!("wal: {appends} append(s), {checkpoints} checkpoint(s)"),
+            }
+            wal_snapshot = Some(ws);
         }
         phase_p99.push((label.to_string(), report.latency_all().p99()));
     }
@@ -629,7 +780,10 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
             all.p99() * 1e3
         );
     }
-    let snap = obs_reg.snapshot();
+    let snap = match &wal_snapshot {
+        Some(ws) => serve::obs::Snapshot::merge_all([&obs_reg.snapshot(), ws]),
+        None => obs_reg.snapshot(),
+    };
     if let Some(line) = stage_p99_line(&snap) {
         println!("{line}");
     }
@@ -730,7 +884,7 @@ fn cmd_serve_bench_dist(
         let mut driver = if ingesting {
             let versioned =
                 std::sync::Arc::new(serve::VersionedStore::new(std::sync::Arc::clone(&store)));
-            Some(make_ingest_driver(&versioned, ingest_qps, ingest_batch, seed))
+            Some(make_ingest_driver(&versioned, ingest_qps, ingest_batch, seed, 0.0))
         } else {
             None
         };
@@ -867,8 +1021,6 @@ fn drive_serve_tcp(
     snap_path: &std::path::Path,
     children: &mut Vec<std::process::Child>,
 ) -> Result<()> {
-    use std::io::BufRead;
-
     let nodes = cli.flag_count("dist-nodes", 1, 1).map_err(anyhow::Error::msg)?;
     let replicas = cli.flag_count("replicas", 2, 1).map_err(anyhow::Error::msg)?;
     if replicas > nodes {
@@ -904,36 +1056,54 @@ fn drive_serve_tcp(
     let consistency = parse_consistency(cli)?;
     let ingest_qps = cli.flag_parse("ingest-qps", 0.0f64).max(0.0);
     let ingest_batch = cli.flag_count("ingest-batch", 32, 1).map_err(anyhow::Error::msg)?;
+    let pipeline = cli.flag_count("pipeline", 1, 1).map_err(anyhow::Error::msg)?;
+    let wal_dir = cli.flag("wal-dir").map(std::path::PathBuf::from);
+    if let Some(dir) = &wal_dir {
+        for node in 0..nodes {
+            let node_dir = dir.join(format!("node-{node}"));
+            if serve::DurableLog::exists(&node_dir) {
+                bail!(
+                    "--wal-dir {} already holds a checkpoint under {}; point the bench at \
+                     an empty directory",
+                    dir.display(),
+                    node_dir.display()
+                );
+            }
+        }
+    }
+    let checkpoint_every = cli.flag_u64("checkpoint-every", 8);
     // same stack shape as the sim tier: cache + hedge-free layers over
     // the router, no admission bound (the sockets backpressure instead)
     let dist_spec = serve::LayerSpec { admit_depth: 0, ..spec.clone() };
 
     // every shard server loads the snapshot and builds an identical
-    // store, so shard indices agree across the process boundary
+    // store, so shard indices agree across the process boundary; with
+    // --wal-dir each server fsyncs its publishes under its own node dir
     let exe = std::env::current_exe()?;
     let mut addrs: Vec<String> = Vec::new();
-    for _ in 0..nodes {
-        let mut child = std::process::Command::new(&exe)
-            .arg("shard-server")
+    for node in 0..nodes {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("shard-server")
             .arg("--snapshot")
             .arg(snap_path)
-            .args(["--shards", &shards.to_string(), "--listen", "127.0.0.1:0"])
-            .stdout(std::process::Stdio::piped())
-            .spawn()?;
+            .args(["--shards", &shards.to_string(), "--listen", "127.0.0.1:0"]);
+        if let Some(dir) = &wal_dir {
+            cmd.arg("--wal-dir").arg(dir.join(format!("node-{node}")));
+            cmd.args(["--checkpoint-every", &checkpoint_every.to_string()]);
+        }
+        let mut child = cmd.stdout(std::process::Stdio::piped()).spawn()?;
         let stdout = child.stdout.take().expect("stdout is piped");
         children.push(child);
-        let mut line = String::new();
-        std::io::BufReader::new(stdout).read_line(&mut line)?;
-        let addr = line
-            .trim()
-            .rsplit(' ')
-            .next()
-            .filter(|a| a.contains(':'))
-            .ok_or_else(|| anyhow::anyhow!("shard-server announced no address (got {line:?})"))?;
-        addrs.push(addr.to_string());
+        let (addr, _) = read_shard_server_announce(stdout)?;
+        addrs.push(addr);
     }
 
-    let net = serve::NetRouterEngine::connect(std::sync::Arc::clone(&store), &addrs, replicas)?;
+    let net = serve::NetRouterEngine::connect_pipelined(
+        std::sync::Arc::clone(&store),
+        &addrs,
+        replicas,
+        pipeline,
+    )?;
     let obs = parse_obs(cli)?;
     net.configure_tracing(obs.trace_every, obs.slow_s);
     println!("{}", net.placement().summary());
@@ -947,7 +1117,14 @@ fn drive_serve_tcp(
     let mut driver = if ingest_qps > 0.0 {
         let versioned =
             std::sync::Arc::new(serve::VersionedStore::new(std::sync::Arc::clone(&store)));
-        Some(make_ingest_driver(&versioned, ingest_qps, ingest_batch, seed))
+        let mut d = make_ingest_driver(&versioned, ingest_qps, ingest_batch, seed, 0.0);
+        if wal_dir.is_some() {
+            // remember the mirror's checksum at every epoch so the
+            // crash-recovery drill can verify parity at *whatever*
+            // epoch the killed server durably reached
+            d.track_checksums();
+        }
+        Some(d)
     } else {
         None
     };
@@ -1032,31 +1209,275 @@ fn drive_serve_tcp(
             traces.len()
         );
     }
+    // crash-recovery drill: when the run was durable and --kill-node
+    // took a server down mid-publish, restart it from its WAL alone
+    // (no --snapshot) and check byte parity at whatever epoch it
+    // durably acked. The CI smoke greps 'recovered_epoch=.* parity=ok'.
+    if let (Some(dir), Some(ev)) = (&wal_dir, events.first()) {
+        let node_dir = dir.join(format!("node-{}", ev.node));
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("shard-server")
+            .args(["--shards", &shards.to_string(), "--listen", "127.0.0.1:0"])
+            .arg("--wal-dir")
+            .arg(&node_dir);
+        let mut child = cmd.stdout(std::process::Stdio::piped()).spawn()?;
+        let stdout = child.stdout.take().expect("stdout is piped");
+        children.push(child);
+        let (_, recovered) = read_shard_server_announce(stdout)?;
+        let line = recovered.ok_or_else(|| {
+            anyhow::anyhow!("restarted shard-server did not report a WAL recovery")
+        })?;
+        println!("{line}");
+        let field = |key: &str| {
+            line.split_whitespace()
+                .find_map(|w| w.strip_prefix(&format!("{key}=")).map(str::to_string))
+                .ok_or_else(|| anyhow::anyhow!("recovery line missing {key}= (got {line:?})"))
+        };
+        let epoch: u64 = field("epoch")?.parse()?;
+        let checksum = u64::from_str_radix(&field("checksum")?, 16)?;
+        let want = driver.as_ref().and_then(|d| d.checksum_at(epoch));
+        if want == Some(checksum) {
+            println!("recovered_epoch={epoch} parity=ok");
+        } else {
+            println!("recovered_epoch={epoch} parity=MISMATCH");
+            bail!(
+                "crash recovery parity failed: server hashed {checksum:016x} at epoch \
+                 {epoch}, write-side mirror has {:?}",
+                want.map(|w| format!("{w:016x}"))
+            );
+        }
+    }
     // the CI smoke greps this exact line: replication must absorb the
     // scheduled kills with nothing lost
     println!("failed_queries={}", m["net_failed"] as u64);
     Ok(())
 }
 
-/// The shard-server child process: load a snapshot, build the store,
-/// and answer wire-protocol frames until killed. The parent parses the
-/// announced-address line to learn the kernel-chosen port.
+/// Read a freshly spawned shard-server's announce lines: an optional
+/// 'shard-server recovered ...' report, then
+/// 'shard-server listening on ADDR'. Returns the address and the
+/// recovery line, if one was printed.
+fn read_shard_server_announce(
+    stdout: std::process::ChildStdout,
+) -> Result<(String, Option<String>)> {
+    use std::io::BufRead;
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut recovered = None;
+    for _ in 0..16 {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            break;
+        }
+        let line = line.trim();
+        if line.contains("listening on") {
+            let addr = line.rsplit(' ').next().filter(|a| a.contains(':')).ok_or_else(|| {
+                anyhow::anyhow!("shard-server announced no address (got {line:?})")
+            })?;
+            return Ok((addr.to_string(), recovered));
+        }
+        if line.starts_with("shard-server recovered") {
+            recovered = Some(line.to_string());
+        }
+    }
+    bail!("shard-server exited before announcing a listening address")
+}
+
+/// The shard-server child process: load a snapshot (or recover a
+/// durable log), build the store, and answer wire-protocol frames
+/// until killed. The parent parses the announced-address line to learn
+/// the kernel-chosen port; with a recoverable --wal-dir an extra
+/// 'shard-server recovered ...' line precedes it.
 fn cmd_shard_server(cli: &Cli) -> Result<()> {
-    let Some(snap_path) = cli.flag("snapshot") else {
-        bail!(
-            "shard-server needs --snapshot FILE (written by `infer --snapshot`, \
-             `photo --snapshot`, or the serve-bench tcp driver)"
-        );
-    };
     let shards = cli.flag_count("shards", 8, 1).map_err(anyhow::Error::msg)?;
     let listen = cli.flag_str("listen", "127.0.0.1:0");
-    let snap = serve::snapshot::load(std::path::Path::new(snap_path))?;
-    let store = std::sync::Arc::new(snap.into_store(shards));
-    let server = serve::ShardServer::bind(store, listen)?;
+    let checkpoint_every = cli.flag_u64("checkpoint-every", 8);
+    let wal_dir = cli.flag("wal-dir").map(std::path::PathBuf::from);
+
+    let load_snapshot = |missing: &str| -> Result<std::sync::Arc<serve::Store>> {
+        let Some(snap_path) = cli.flag("snapshot") else { bail!("{missing}") };
+        let snap = serve::snapshot::load(std::path::Path::new(snap_path))?;
+        Ok(std::sync::Arc::new(snap.into_store(shards)))
+    };
+    let server = match &wal_dir {
+        Some(dir) if serve::DurableLog::exists(dir) => {
+            // the log alone rebuilds the store: checkpoint load, then
+            // tail replay; --snapshot is not needed on this path
+            let rec = serve::DurableLog::recover(dir, checkpoint_every)?;
+            let r = &rec.report;
+            println!(
+                "shard-server recovered epoch={} sources={} checksum={:016x} \
+                 checkpoint_ms={:.1} replay_ms={:.1} records={}",
+                r.recovered_epoch,
+                r.rows,
+                r.checksum,
+                r.checkpoint_load_s * 1e3,
+                r.replay_s * 1e3,
+                r.records_replayed
+            );
+            serve::ShardServer::bind_durable(rec.versioned, Some(rec.log), listen)?
+        }
+        Some(dir) => {
+            let store = load_snapshot(&format!(
+                "--wal-dir {} holds no checkpoint to recover; seed it with --snapshot FILE",
+                dir.display()
+            ))?;
+            let versioned = std::sync::Arc::new(serve::VersionedStore::new(store));
+            let log = std::sync::Arc::new(serve::DurableLog::create(
+                dir,
+                checkpoint_every,
+                &versioned.load(),
+            )?);
+            versioned.attach_wal(std::sync::Arc::clone(&log));
+            serve::ShardServer::bind_durable(versioned, Some(log), listen)?
+        }
+        None => {
+            let store = load_snapshot(
+                "shard-server needs --snapshot FILE (written by `infer --snapshot`, \
+                 `photo --snapshot`, or the serve-bench tcp driver) or a recoverable \
+                 --wal-dir",
+            )?;
+            serve::ShardServer::bind(store, listen)?
+        }
+    };
     println!("shard-server listening on {}", server.local_addr());
     use std::io::Write;
     std::io::stdout().flush().ok();
     server.run();
+    Ok(())
+}
+
+/// Measure the recovery time objective end to end: ingest --publishes
+/// epochs through a durable log, drop every in-memory structure (the
+/// simulated crash), recover from disk alone, and verify the recovered
+/// catalog hashes identically to the write-side mirror.
+fn cmd_recover_bench(cli: &Cli) -> Result<()> {
+    let count = |key, default, min| cli.flag_count(key, default, min).map_err(anyhow::Error::msg);
+    let n_sources = count("sources", 5000, 1)?;
+    let shards = count("shards", 8, 1)?;
+    let publishes = count("publishes", 200, 1)?;
+    let batch = count("ingest-batch", 32, 1)?;
+    let checkpoint_every = cli.flag_u64("checkpoint-every", 32);
+    let compact_threshold = cli.flag_parse("compact-threshold", 0.0f64);
+    if cli.flag("compact-threshold").is_some() && compact_threshold <= 1.0 {
+        bail!(
+            "--compact-threshold is a max/mean shard-row skew ratio and must exceed 1.0, \
+             got {compact_threshold}"
+        );
+    }
+    let seed = cli.flag_u64("seed", 42);
+    let (wal_dir, ephemeral) = match cli.flag("wal-dir") {
+        Some(dir) => (std::path::PathBuf::from(dir), false),
+        None => (
+            std::env::temp_dir().join(format!("celeste-recover-bench-{}", std::process::id())),
+            true,
+        ),
+    };
+    if serve::DurableLog::exists(&wal_dir) {
+        bail!(
+            "--wal-dir {} already holds a checkpoint; point recover-bench at an empty \
+             directory (it measures a fresh log's recovery)",
+            wal_dir.display()
+        );
+    }
+
+    // write side: durable ingestion of `publishes` drift epochs
+    let snap = serve::snapshot::synthetic(n_sources, seed);
+    let (width, height) = (snap.width, snap.height);
+    let store = std::sync::Arc::new(snap.into_store(shards));
+    println!("{}", store.summary());
+    let versioned = std::sync::Arc::new(serve::VersionedStore::new(store));
+    let log = std::sync::Arc::new(serve::DurableLog::create(
+        &wal_dir,
+        checkpoint_every,
+        &versioned.load(),
+    )?);
+    versioned.attach_wal(std::sync::Arc::clone(&log));
+    let hotspot = if compact_threshold > 0.0 { 0.8 } else { 0.0 };
+    let mut drift = serve::DriftGen::new(
+        &versioned.load().store.all_sources(),
+        width,
+        height,
+        serve::DriftConfig { batch, hotspot, seed: seed ^ 0xd21f, ..Default::default() },
+    );
+    let mut ing = serve::Ingestor::new(std::sync::Arc::clone(&versioned));
+    let mut compactor =
+        (compact_threshold > 0.0).then(|| serve::Compactor::new(compact_threshold, 3));
+    let (mut compactions, mut compacted_rows) = (0u64, 0u64);
+    let sw = celeste::metrics::Stopwatch::start();
+    for _ in 0..publishes {
+        let rows = drift.next_batch();
+        ing.apply(&rows);
+        if let Some(c) = compactor.as_mut() {
+            if c.observe(&versioned.load().store) {
+                if let Some(rep) = ing.compact(compact_threshold) {
+                    compactions += 1;
+                    compacted_rows += rep.rows_resharded as u64;
+                    println!(
+                        "compaction at epoch {}: {} split(s) {} merge(s), {} row(s) \
+                         resharded, skew {:.2} -> {:.2}",
+                        rep.epoch,
+                        rep.splits,
+                        rep.merges,
+                        rep.rows_resharded,
+                        rep.skew_before,
+                        rep.skew_after
+                    );
+                }
+            }
+        }
+    }
+    let ingest_s = sw.elapsed_secs();
+    let final_epoch = versioned.epoch();
+    let want = serve::catalog_checksum(drift.mirror());
+    let ws = log.obs().snapshot();
+    let appends = ws.counters.get("wal_appends").copied().unwrap_or(0);
+    let bytes = ws.counters.get("wal_bytes").copied().unwrap_or(0);
+    let checkpoints = ws.counters.get("wal_checkpoints").copied().unwrap_or(0);
+    print!(
+        "ingested {publishes} publish(es) to epoch {final_epoch} in {:.1} ms: {appends} WAL \
+         append(s), {checkpoints} checkpoint(s), {:.2} MB logged",
+        ingest_s * 1e3,
+        bytes as f64 / (1024.0 * 1024.0)
+    );
+    match ws.histograms.get("wal_fsync_s") {
+        Some(f) if f.n > 0 => {
+            println!(", fsync p50={:.3}ms p99={:.3}ms", f.p50() * 1e3, f.p99() * 1e3)
+        }
+        _ => println!(),
+    }
+    if compactions > 0 {
+        println!("compaction: {compactions} re-split(s), {compacted_rows} row(s) resharded");
+    }
+
+    // the crash: drop every in-memory structure, then recover from
+    // disk alone and split the RTO into its two phases
+    drop((ing, compactor, drift, versioned, log));
+    let rec = serve::DurableLog::recover(&wal_dir, checkpoint_every)?;
+    let r = &rec.report;
+    println!(
+        "recovery: epoch={} ({} source(s)) in {:.1} ms (checkpoint-load {:.1} ms from epoch \
+         {} + tail-replay {:.1} ms), {} record(s) replayed, {} torn byte(s) truncated",
+        r.recovered_epoch,
+        r.rows,
+        (r.checkpoint_load_s + r.replay_s) * 1e3,
+        r.checkpoint_load_s * 1e3,
+        r.checkpoint_epoch,
+        r.replay_s * 1e3,
+        r.records_replayed,
+        r.truncated_bytes
+    );
+    let ok = r.recovered_epoch == final_epoch && r.checksum == want;
+    println!("parity: {}", if ok { "ok" } else { "MISMATCH" });
+    if ephemeral {
+        std::fs::remove_dir_all(&wal_dir).ok();
+    }
+    if !ok {
+        bail!(
+            "recovery diverged: epoch {} vs {final_epoch}, checksum {:016x} vs {want:016x}",
+            r.recovered_epoch,
+            r.checksum
+        );
+    }
     Ok(())
 }
 

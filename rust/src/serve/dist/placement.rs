@@ -67,6 +67,36 @@ impl Placement {
         Placement { n_nodes, replicas, shard_nodes }
     }
 
+    /// Rendezvous placement scored by an explicit *key* per range
+    /// instead of the range's index. `keys = [0, 1, .., n)` reproduces
+    /// [`Placement::rendezvous_among`] exactly.
+    ///
+    /// This is what makes compaction's rebalancing minimal: a range is
+    /// identified by its `key_lo` (stable across re-splits — a split's
+    /// lower half and a merge's surviving range keep theirs), so only
+    /// ranges whose key changed get rescored. An index-keyed placement
+    /// would reshuffle every range downstream of a split.
+    pub fn rendezvous_keyed(
+        keys: &[u64],
+        n_nodes: usize,
+        nodes: &[usize],
+        replicas: usize,
+    ) -> Placement {
+        let n_nodes = n_nodes.max(1);
+        let replicas = replicas.clamp(1, nodes.len().max(1));
+        let shard_nodes = keys
+            .iter()
+            .map(|&k| {
+                let mut scored: Vec<(u64, usize)> =
+                    nodes.iter().map(|&n| (score(k, n as u64), n)).collect();
+                scored.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+                scored.truncate(replicas);
+                scored.into_iter().map(|(_, n)| n).collect()
+            })
+            .collect();
+        Placement { n_nodes, replicas, shard_nodes }
+    }
+
     pub fn n_shards(&self) -> usize {
         self.shard_nodes.len()
     }
@@ -208,6 +238,33 @@ mod tests {
                     assert_eq!(gained.len(), 1, "n={n} shard {s}: gained {gained:?}");
                     assert_ne!(gained[0], removed);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn keyed_rendezvous_generalizes_indexed_rendezvous() {
+        let nodes: Vec<usize> = (0..6).collect();
+        let keys: Vec<u64> = (0..48).collect();
+        let by_index = Placement::rendezvous_among(48, 6, &nodes, 2);
+        let by_key = Placement::rendezvous_keyed(&keys, 6, &nodes, 2);
+        assert_eq!(by_index.shard_nodes, by_key.shard_nodes);
+    }
+
+    #[test]
+    fn keyed_rendezvous_moves_only_rekeyed_ranges() {
+        // the compaction contract: ranges keeping their key keep their
+        // replica set, regardless of how neighbors split or merge
+        let nodes: Vec<usize> = (0..5).collect();
+        let before: Vec<u64> = vec![10, 200, 3000, 40_000, 500_000, 6_000_000];
+        // "split" range 1 (new upper half keyed 900) and "merge" 4+5
+        // (survivor keeps 500_000): indices shift, three keys survive
+        let after: Vec<u64> = vec![10, 200, 900, 3000, 40_000, 500_000];
+        let pa = Placement::rendezvous_keyed(&before, 5, &nodes, 2);
+        let pb = Placement::rendezvous_keyed(&after, 5, &nodes, 2);
+        for (&k, sa) in before.iter().zip(&pa.shard_nodes) {
+            if let Some(j) = after.iter().position(|&x| x == k) {
+                assert_eq!(sa, &pb.shard_nodes[j], "range keyed {k} moved without re-keying");
             }
         }
     }

@@ -1,0 +1,296 @@
+//! Checkpoints: a manifest plus one jsonlite snapshot file per shard,
+//! so a checkpoint after a publish rewrites only the Hilbert ranges
+//! that publish touched.
+//!
+//! Directory layout (all inside the `--wal-dir`):
+//!
+//! ```text
+//! MANIFEST.json            epoch, extent, per-shard file + range + stamp
+//! shard-0003-e00012.json   shard 3 as of the epoch that last mutated it
+//! wal-e000000000012.log    records after the manifest's epoch
+//! ```
+//!
+//! Shard files are named by `(index, shard_epoch)` — a shard untouched
+//! since the previous checkpoint keeps its file byte-for-byte, and the
+//! old manifest stays valid while a new checkpoint is in flight. The
+//! manifest itself is replaced atomically (tmp + fsync + rename +
+//! directory sync), so a crash at any point leaves either the old or
+//! the new checkpoint fully intact, never a mix.
+//!
+//! All u64s that can exceed 2^53 (epochs, Hilbert keys) are stored as
+//! decimal strings: jsonlite numbers are f64 and would round them.
+
+use std::collections::BTreeSet;
+use std::fs::{self, File};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::jsonlite::{self, Value};
+
+use super::super::ingest::EpochStore;
+use super::super::snapshot;
+use super::super::store::{Shard, Store};
+
+pub(crate) const MANIFEST_FORMAT: &str = "celeste-wal-manifest-v1";
+pub(crate) const MANIFEST_FILE: &str = "MANIFEST.json";
+
+#[derive(Clone, Debug, PartialEq)]
+pub(crate) struct ManifestShard {
+    pub file: String,
+    pub key_lo: u64,
+    pub key_hi: u64,
+    /// the epoch that last mutated this shard (its cache stamp)
+    pub epoch: u64,
+    pub rows: usize,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub(crate) struct Manifest {
+    pub epoch: u64,
+    pub width: f64,
+    pub height: f64,
+    pub shards: Vec<ManifestShard>,
+    /// catalog checksum at `epoch` (FNV-1a over the wire encoding of
+    /// the id-sorted rows) — verified on load
+    pub checksum: u64,
+}
+
+impl Manifest {
+    /// Name of the WAL segment holding records after this checkpoint.
+    pub fn wal_file(&self) -> String {
+        wal_file_for(self.epoch)
+    }
+}
+
+pub(crate) fn wal_file_for(epoch: u64) -> String {
+    format!("wal-e{epoch:012}.log")
+}
+
+fn shard_file_for(idx: usize, stamp: u64) -> String {
+    format!("shard-{idx:04}-e{stamp:05}.json")
+}
+
+fn u64_str_field(v: &Value, key: &str) -> Result<u64> {
+    v.get(key)
+        .and_then(Value::as_str)
+        .ok_or_else(|| anyhow!("manifest missing string field {key:?}"))?
+        .parse::<u64>()
+        .map_err(|e| anyhow!("manifest field {key:?}: {e}"))
+}
+
+fn f64_field(v: &Value, key: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(Value::as_f64)
+        .ok_or_else(|| anyhow!("manifest missing numeric field {key:?}"))
+}
+
+fn manifest_to_json(m: &Manifest) -> String {
+    let shards: Vec<Value> = m
+        .shards
+        .iter()
+        .map(|s| {
+            let mut o = std::collections::BTreeMap::new();
+            o.insert("file".to_string(), Value::Str(s.file.clone()));
+            o.insert("key_lo".to_string(), Value::Str(s.key_lo.to_string()));
+            o.insert("key_hi".to_string(), Value::Str(s.key_hi.to_string()));
+            o.insert("epoch".to_string(), Value::Str(s.epoch.to_string()));
+            o.insert("rows".to_string(), Value::Num(s.rows as f64));
+            Value::Obj(o)
+        })
+        .collect();
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("format".to_string(), Value::Str(MANIFEST_FORMAT.to_string()));
+    o.insert("epoch".to_string(), Value::Str(m.epoch.to_string()));
+    o.insert("width".to_string(), Value::Num(m.width));
+    o.insert("height".to_string(), Value::Num(m.height));
+    o.insert("shards".to_string(), Value::Arr(shards));
+    o.insert("checksum".to_string(), Value::Str(format!("{:016x}", m.checksum)));
+    jsonlite::to_string(&Value::Obj(o))
+}
+
+fn manifest_from_json(text: &str) -> Result<Manifest> {
+    let v = jsonlite::parse(text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+    match v.get("format").and_then(Value::as_str) {
+        Some(MANIFEST_FORMAT) => {}
+        other => bail!("unsupported manifest format {other:?} (want {MANIFEST_FORMAT})"),
+    }
+    let shards = v
+        .get("shards")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("manifest missing shards"))?
+        .iter()
+        .map(|s| {
+            Ok(ManifestShard {
+                file: s
+                    .get("file")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| anyhow!("manifest shard missing file"))?
+                    .to_string(),
+                key_lo: u64_str_field(s, "key_lo")?,
+                key_hi: u64_str_field(s, "key_hi")?,
+                epoch: u64_str_field(s, "epoch")?,
+                rows: f64_field(s, "rows")? as usize,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let checksum = u64::from_str_radix(
+        v.get("checksum")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow!("manifest missing checksum"))?,
+        16,
+    )
+    .map_err(|e| anyhow!("manifest checksum: {e}"))?;
+    Ok(Manifest {
+        epoch: u64_str_field(&v, "epoch")?,
+        width: f64_field(&v, "width")?,
+        height: f64_field(&v, "height")?,
+        shards,
+        checksum,
+    })
+}
+
+/// Write `text` to `dir/name` atomically: tmp file, fsync, rename,
+/// directory sync. After this returns the file is durably either the
+/// old content or the new, never a torn mix.
+fn write_atomic(dir: &Path, name: &str, text: &str) -> Result<()> {
+    let tmp = dir.join(format!("{name}.tmp"));
+    {
+        let mut f = File::create(&tmp)?;
+        std::io::Write::write_all(&mut f, text.as_bytes())?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, dir.join(name))?;
+    sync_dir(dir)?;
+    Ok(())
+}
+
+pub(crate) fn sync_dir(dir: &Path) -> Result<()> {
+    // On unix, renames become durable when the directory itself is
+    // synced; elsewhere File::open on a directory may fail — best
+    // effort there.
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+/// Write a checkpoint of `head`, rewriting only shards whose stamp
+/// changed since `prev` (or all of them when `prev` is `None`).
+/// Returns the new manifest; stale shard files and WAL segments are
+/// *not* removed here — the caller garbage-collects after it has cut
+/// over to the new segment.
+pub(crate) fn write_checkpoint(
+    dir: &Path,
+    head: &EpochStore,
+    checksum: u64,
+    prev: Option<&Manifest>,
+) -> Result<Manifest> {
+    let store = &head.store;
+    let mut shards = Vec::with_capacity(store.shards.len());
+    for (i, shard) in store.shards.iter().enumerate() {
+        let stamp = head.shard_epochs[i];
+        let reusable = prev.and_then(|p| p.shards.get(i)).filter(|ps| {
+            ps.epoch == stamp
+                && ps.key_lo == shard.key_lo
+                && ps.key_hi == shard.key_hi
+                && ps.rows == shard.sources.len()
+        });
+        let file = match reusable {
+            Some(ps) => ps.file.clone(),
+            None => {
+                let name = shard_file_for(i, stamp);
+                write_atomic(
+                    dir,
+                    &name,
+                    &snapshot::to_json(&shard.sources, store.width, store.height),
+                )?;
+                name
+            }
+        };
+        shards.push(ManifestShard {
+            file,
+            key_lo: shard.key_lo,
+            key_hi: shard.key_hi,
+            epoch: stamp,
+            rows: shard.sources.len(),
+        });
+    }
+    let manifest = Manifest {
+        epoch: head.epoch,
+        width: store.width,
+        height: store.height,
+        shards,
+        checksum,
+    };
+    write_atomic(dir, MANIFEST_FILE, &manifest_to_json(&manifest))?;
+    Ok(manifest)
+}
+
+/// Load the manifest, or `None` when the directory holds no checkpoint
+/// yet (fresh `--wal-dir`).
+pub(crate) fn load_manifest(dir: &Path) -> Result<Option<Manifest>> {
+    let path = dir.join(MANIFEST_FILE);
+    if !path.exists() {
+        return Ok(None);
+    }
+    manifest_from_json(&fs::read_to_string(&path)?).map(Some)
+}
+
+/// Rebuild the checkpointed `EpochStore` from a manifest: every shard
+/// file parsed, each shard re-indexed over its recorded key range.
+pub(crate) fn load_checkpoint(dir: &Path, m: &Manifest) -> Result<Arc<EpochStore>> {
+    let mut shards = Vec::with_capacity(m.shards.len());
+    let mut shard_epochs = Vec::with_capacity(m.shards.len());
+    for (i, ms) in m.shards.iter().enumerate() {
+        let snap = snapshot::load(&dir.join(&ms.file))
+            .map_err(|e| anyhow!("checkpoint shard {i} ({}): {e}", ms.file))?;
+        if snap.sources.len() != ms.rows {
+            bail!(
+                "checkpoint shard {i} ({}): {} rows on disk, manifest says {}",
+                ms.file,
+                snap.sources.len(),
+                ms.rows
+            );
+        }
+        shards.push(Arc::new(Shard::build(snap.sources, ms.key_lo, ms.key_hi)));
+        shard_epochs.push(ms.epoch);
+    }
+    let store = Arc::new(Store { shards, width: m.width, height: m.height });
+    let got = super::store_checksum(&store);
+    if got != m.checksum {
+        bail!(
+            "checkpoint checksum mismatch: manifest says {:016x}, shard files hash to {got:016x}",
+            m.checksum
+        );
+    }
+    Ok(Arc::new(EpochStore { epoch: m.epoch, shard_epochs, store }))
+}
+
+/// Remove shard files and WAL segments the manifest no longer
+/// references. Safe to call any time after the manifest rename: the
+/// live manifest never points at a deleted file.
+pub(crate) fn gc(dir: &Path, live: &Manifest) -> Result<()> {
+    let keep: BTreeSet<&str> = live.shards.iter().map(|s| s.file.as_str()).collect();
+    let live_wal = live.wal_file();
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let stale_shard = name.starts_with("shard-")
+            && name.ends_with(".json")
+            && !keep.contains(name.as_ref());
+        let stale_wal =
+            name.starts_with("wal-e") && name.ends_with(".log") && name != live_wal;
+        let stale_tmp = name.ends_with(".tmp");
+        if stale_shard || stale_wal || stale_tmp {
+            let _ = fs::remove_file(entry.path());
+        }
+    }
+    Ok(())
+}
+
+pub(crate) fn wal_path(dir: &Path, epoch: u64) -> PathBuf {
+    dir.join(wal_file_for(epoch))
+}

@@ -1,0 +1,381 @@
+//! Hilbert-range compaction: detect sustained ingestion skew in
+//! per-shard row counts and re-split the hot key ranges.
+//!
+//! Everything here is a deterministic function of `(store, threshold)`
+//! — the WAL logs a compaction as just those two values and replay
+//! re-derives the identical re-split.
+//!
+//! The shard *count* is conserved: every split of a hot range is paid
+//! for by absorbing an empty shard or merging the coldest adjacent
+//! pair. Keeping the count stable keeps `shard_epochs`, placement
+//! tables, and every consumer sized the same across a compaction.
+//! Untouched shards stay `Arc`-shared with the prior epoch (asserted
+//! in tests), so a compaction costs only the rows it actually moves.
+//!
+//! Placement identity is a range's `key_lo`, not its index:
+//! [`crate::serve::dist::Placement::rendezvous_keyed`] scores nodes
+//! per key. A split's lower half and a merge's surviving range keep
+//! their `key_lo` — and therefore their replica set — so rendezvous
+//! rebalancing moves only the re-split ranges (the minimal-movement
+//! property test pins this).
+
+use std::sync::Arc;
+
+use super::super::store::{ServedSource, Shard, Store};
+
+/// Row-count skew: max over non-empty shards divided by their mean.
+/// `0.0` when fewer than two shards are non-empty (nothing to split
+/// against).
+pub fn skew(store: &Store) -> f64 {
+    let rows: Vec<usize> =
+        store.shards.iter().map(|s| s.sources.len()).filter(|&n| n > 0).collect();
+    if rows.len() < 2 {
+        return 0.0;
+    }
+    let mean = rows.iter().sum::<usize>() as f64 / rows.len() as f64;
+    *rows.iter().max().unwrap() as f64 / mean
+}
+
+/// Sustained-skew detector: fires when [`skew`] exceeds `threshold`
+/// for `sustain` consecutive observations (one per publish), so a
+/// single skewed batch does not trigger a re-split.
+#[derive(Clone, Debug)]
+pub struct Compactor {
+    pub threshold: f64,
+    pub sustain: u32,
+    streak: u32,
+}
+
+impl Compactor {
+    pub fn new(threshold: f64, sustain: u32) -> Compactor {
+        Compactor { threshold, sustain: sustain.max(1), streak: 0 }
+    }
+
+    /// Observe the store after a publish; `true` means compact now.
+    /// The streak resets after firing and whenever skew drops back
+    /// under the threshold.
+    pub fn observe(&mut self, store: &Store) -> bool {
+        if skew(store) > self.threshold {
+            self.streak += 1;
+        } else {
+            self.streak = 0;
+        }
+        if self.streak >= self.sustain {
+            self.streak = 0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// What a compaction publish did (returned by
+/// [`crate::serve::Ingestor::compact`]).
+#[derive(Clone, Debug)]
+pub struct CompactionReport {
+    /// the epoch the re-split was published as
+    pub epoch: u64,
+    pub splits: usize,
+    pub merges: usize,
+    /// empty shards absorbed to pay for splits
+    pub absorbed: usize,
+    /// rows whose shard assignment was rewritten
+    pub rows_resharded: usize,
+    pub skew_before: f64,
+    pub skew_after: f64,
+}
+
+/// The planned new shard list plus accounting.
+pub struct Resplit {
+    pub shards: Vec<Arc<Shard>>,
+    /// per new shard: was it rebuilt (vs `Arc`-shared from the old store)?
+    pub rebuilt: Vec<bool>,
+    /// rows living in rebuilt ranges — the rows whose shard assignment
+    /// (and possibly placement) changed
+    pub rows_resharded: usize,
+    /// hot ranges split / cold pairs merged / empty shards absorbed
+    pub splits: usize,
+    pub merges: usize,
+    pub absorbed: usize,
+}
+
+/// Deterministically re-split hot Hilbert ranges. Returns `None` when
+/// nothing qualifies: no shard exceeds `threshold` x the mean row
+/// count, no hot shard is splittable (a single-key run cannot be cut),
+/// or no empty shard / cold adjacent pair can pay for a split.
+///
+/// Hot shards are processed hottest-first; each split cuts at the
+/// median row, nudged forward so identical-key runs are never divided
+/// (the invariant `Store::build` maintains).
+pub fn resplit_hot(store: &Store, threshold: f64) -> Option<Resplit> {
+    let n = store.shards.len();
+    if n < 2 {
+        return None;
+    }
+    let rows: Vec<usize> = store.shards.iter().map(|s| s.sources.len()).collect();
+    let nonempty: Vec<usize> = rows.iter().copied().filter(|&r| r > 0).collect();
+    if nonempty.len() < 2 {
+        return None;
+    }
+    let mean = nonempty.iter().sum::<usize>() as f64 / nonempty.len() as f64;
+
+    // a shard is splittable when it spans at least two distinct keys
+    let splittable = |i: usize| {
+        let sh = &store.shards[i];
+        sh.sources.len() >= 2
+            && store.sky_key(sh.sources[0].pos)
+                != store.sky_key(sh.sources[sh.sources.len() - 1].pos)
+    };
+    let mut hot: Vec<usize> = (0..n)
+        .filter(|&i| rows[i] as f64 > threshold * mean && splittable(i))
+        .collect();
+    if hot.is_empty() {
+        return None;
+    }
+    // hottest first; index ascending breaks ties deterministically
+    hot.sort_by_key(|&i| (usize::MAX - rows[i], i));
+    let hot_set: Vec<bool> = {
+        let mut v = vec![false; n];
+        for &i in &hot {
+            v[i] = true;
+        }
+        v
+    };
+
+    // budget: each split must absorb an empty shard or merge a cold pair
+    let empties: Vec<usize> = (0..n).filter(|&i| rows[i] == 0).collect();
+    let mut merge_pairs: Vec<(usize, usize)> = (0..n - 1)
+        .filter(|&i| !hot_set[i] && !hot_set[i + 1] && rows[i] > 0 && rows[i + 1] > 0)
+        .map(|i| (i, i + 1))
+        .collect();
+    // coldest combined pair first; leftmost breaks ties
+    merge_pairs.sort_by_key(|&(i, j)| (rows[i] + rows[j], i));
+    // greedily keep disjoint pairs
+    let mut taken = vec![false; n];
+    merge_pairs.retain(|&(i, j)| {
+        if taken[i] || taken[j] {
+            false
+        } else {
+            taken[i] = true;
+            taken[j] = true;
+            true
+        }
+    });
+
+    let splits = hot.len().min(empties.len() + merge_pairs.len());
+    if splits == 0 {
+        return None;
+    }
+    hot.truncate(splits);
+    let absorbed = splits.min(empties.len());
+    let merges = splits - absorbed;
+    merge_pairs.truncate(merges);
+
+    #[derive(Clone, Copy, PartialEq)]
+    enum Plan {
+        Keep,
+        Split,
+        /// first of a merged pair (absorbs its right neighbor)
+        MergeLeft,
+        /// dropped: absorbed into the left neighbor or as an empty
+        Drop,
+    }
+    let mut plan = vec![Plan::Keep; n];
+    for &i in &hot {
+        plan[i] = Plan::Split;
+    }
+    for &(i, j) in &merge_pairs {
+        plan[i] = Plan::MergeLeft;
+        plan[j] = Plan::Drop;
+    }
+    for &i in empties.iter().take(absorbed) {
+        plan[i] = Plan::Drop;
+    }
+
+    let rebuild = |mut sources: Vec<ServedSource>, fallback: (u64, u64)| {
+        sources.sort_by_cached_key(|s| (store.sky_key(s.pos), s.id));
+        let (lo, hi) = if sources.is_empty() {
+            fallback
+        } else {
+            (
+                store.sky_key(sources[0].pos),
+                store.sky_key(sources[sources.len() - 1].pos),
+            )
+        };
+        Arc::new(Shard::build(sources, lo, hi))
+    };
+
+    let mut shards = Vec::with_capacity(n);
+    let mut rebuilt = Vec::with_capacity(n);
+    let mut rows_resharded = 0usize;
+    for (i, sh) in store.shards.iter().enumerate() {
+        match plan[i] {
+            Plan::Drop => {}
+            Plan::Keep => {
+                shards.push(Arc::clone(sh));
+                rebuilt.push(false);
+            }
+            Plan::MergeLeft => {
+                let right = &store.shards[i + 1];
+                let mut sources = sh.sources.clone();
+                sources.extend(right.sources.iter().cloned());
+                rows_resharded += sources.len();
+                // the merged range keeps the left key_lo: its replica
+                // set under keyed rendezvous is unchanged
+                shards.push(rebuild(sources, (sh.key_lo, right.key_hi)));
+                rebuilt.push(true);
+            }
+            Plan::Split => {
+                let srcs = &sh.sources;
+                let keys: Vec<u64> = srcs.iter().map(|s| store.sky_key(s.pos)).collect();
+                // cut at the median, nudged past any identical-key run
+                // (forward first, backward if the run reaches the end)
+                let mut cut = srcs.len() / 2;
+                while cut < srcs.len() && keys[cut] == keys[cut - 1] {
+                    cut += 1;
+                }
+                if cut == srcs.len() {
+                    cut = srcs.len() / 2;
+                    while cut > 0 && keys[cut] == keys[cut - 1] {
+                        cut -= 1;
+                    }
+                }
+                if cut == 0 || cut == srcs.len() {
+                    // one giant key run after all: cannot split — keep
+                    shards.push(Arc::clone(sh));
+                    rebuilt.push(false);
+                    continue;
+                }
+                rows_resharded += srcs.len();
+                // lower half keeps key_lo (placement unchanged); the
+                // upper half is the new range that moves
+                shards.push(rebuild(srcs[..cut].to_vec(), (sh.key_lo, sh.key_lo)));
+                rebuilt.push(true);
+                shards.push(rebuild(srcs[cut..].to_vec(), (sh.key_hi, sh.key_hi)));
+                rebuilt.push(true);
+            }
+        }
+    }
+    // a degenerate split (unsplittable key run discovered late) can
+    // leave the count short of n; give up rather than resize consumers
+    if shards.len() != n {
+        return None;
+    }
+    Some(Resplit { shards, rebuilt, rows_resharded, splits, merges, absorbed })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn skewed_store(n: usize, shards: usize) -> Store {
+        // cluster 70% of sources into one corner so one shard runs hot
+        let mut sources = Vec::with_capacity(n);
+        let mut state = 0x9E37_79B9u64;
+        let mut next = || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state >> 11) as f64 / (1u64 << 53) as f64
+        };
+        for id in 0..n {
+            let (x, y) = if next() < 0.7 {
+                (next() * 10.0, next() * 10.0)
+            } else {
+                (next() * 100.0, next() * 100.0)
+            };
+            sources.push(ServedSource {
+                id,
+                pos: (x, y),
+                p_gal: 0.5,
+                flux_r: 100.0 + id as f64,
+                flux_logsd: 0.1,
+                colors: [0.0; 4],
+                converged: true,
+            });
+        }
+        Store::build(sources, 100.0, 100.0, shards)
+    }
+
+    #[test]
+    fn skew_is_zero_for_balanced_and_tiny_stores() {
+        let snap = crate::serve::snapshot::synthetic(400, 9);
+        let store = Store::build(snap.sources, snap.width, snap.height, 4);
+        assert!(skew(&store) < 1.5, "uniform synthetic stays near 1.0");
+        let one = Store::build(store.all_sources(), store.width, store.height, 1);
+        assert_eq!(skew(&one), 0.0);
+    }
+
+    #[test]
+    fn compactor_requires_sustained_skew() {
+        let store = skewed_store(600, 4);
+        assert!(skew(&store) > 1.3, "fixture must actually be skewed");
+        let mut c = Compactor::new(1.3, 3);
+        assert!(!c.observe(&store));
+        assert!(!c.observe(&store));
+        assert!(c.observe(&store), "third consecutive observation fires");
+        assert!(!c.observe(&store), "the streak resets after firing");
+    }
+
+    #[test]
+    fn resplit_conserves_count_rows_and_shares_cold_shards() {
+        let store = skewed_store(900, 6);
+        let before = skew(&store);
+        let re = resplit_hot(&store, 1.2).expect("skewed store must re-split");
+        assert_eq!(re.shards.len(), store.shards.len(), "shard count is conserved");
+        let total_before: usize = store.shards.iter().map(|s| s.sources.len()).sum();
+        let total_after: usize = re.shards.iter().map(|s| s.sources.len()).sum();
+        assert_eq!(total_before, total_after, "no row is lost or duplicated");
+        let after = Store {
+            shards: re.shards.clone(),
+            width: store.width,
+            height: store.height,
+        };
+        assert!(skew(&after) < before, "re-splitting must reduce skew ({before:.2} -> {:.2})", skew(&after));
+        // every shard not rebuilt is Arc-shared with the old store
+        let shared = re
+            .shards
+            .iter()
+            .zip(&re.rebuilt)
+            .filter(|(_, &r)| !r)
+            .filter(|(sh, _)| store.shards.iter().any(|old| Arc::ptr_eq(old, sh)))
+            .count();
+        assert_eq!(shared, re.rebuilt.iter().filter(|&&r| !r).count());
+        // rows are still sorted by (key, id) within each shard
+        for sh in &re.shards {
+            let keys: Vec<(u64, usize)> =
+                sh.sources.iter().map(|s| (after.sky_key(s.pos), s.id)).collect();
+            let mut sorted = keys.clone();
+            sorted.sort();
+            assert_eq!(keys, sorted);
+        }
+        assert_eq!(
+            re.rows_resharded,
+            re.shards
+                .iter()
+                .zip(&re.rebuilt)
+                .filter(|(_, &r)| r)
+                .map(|(s, _)| s.sources.len())
+                .sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn balanced_store_does_not_resplit() {
+        let snap = crate::serve::snapshot::synthetic(800, 17);
+        let store = Store::build(snap.sources, snap.width, snap.height, 8);
+        assert!(resplit_hot(&store, 2.0).is_none());
+    }
+
+    #[test]
+    fn resplit_is_deterministic() {
+        let store = skewed_store(700, 5);
+        let a = resplit_hot(&store, 1.2).expect("resplit");
+        let b = resplit_hot(&store, 1.2).expect("resplit");
+        for (x, y) in a.shards.iter().zip(&b.shards) {
+            assert_eq!(x.key_lo, y.key_lo);
+            assert_eq!(x.key_hi, y.key_hi);
+            assert_eq!(x.sources, y.sources);
+        }
+    }
+}

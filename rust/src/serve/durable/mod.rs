@@ -1,0 +1,524 @@
+//! Durable publish log: WAL + periodic checkpoints + crash recovery +
+//! Hilbert-range compaction.
+//!
+//! The serving tier's store is epoch-stamped copy-on-write
+//! ([`crate::serve::ingest`]): every publish installs a new immutable
+//! [`EpochStore`]. This module makes those publishes survive a crash:
+//!
+//! * **WAL** ([`wal`]): before an epoch becomes visible,
+//!   [`crate::serve::VersionedStore::publish_logged`] appends a
+//!   CRC-framed record of its delta rows and `fsync`s it — under the
+//!   same lock that flips the head pointer, so the log order *is* the
+//!   publish order and an acked epoch is a durable epoch.
+//! * **Checkpoints** ([`checkpoint`]): every `checkpoint_every` epochs
+//!   the head is materialized as one jsonlite snapshot per shard plus
+//!   an atomically-renamed manifest; only shards touched since the
+//!   previous checkpoint rewrite. The WAL is then cut over to a fresh
+//!   segment and old files are garbage-collected.
+//! * **Recovery** ([`DurableLog::recover`]): load the checkpoint,
+//!   replay the WAL tail through a real [`Ingestor`] (so replay
+//!   exercises the exact production publish path), truncate any torn
+//!   tail a `kill -9` left behind. The two phases are timed separately
+//!   — the RTO split `celeste recover-bench` reports.
+//! * **Compaction** ([`compact`]): sustained row-count skew re-splits
+//!   hot key ranges, logged as a `(threshold)` record and re-derived
+//!   deterministically on replay.
+//!
+//! Byte parity is the contract throughout: WAL payloads use the wire
+//! codec (f64s as IEEE-754 bits), checkpoints use the lossless
+//! snapshot codec, and [`catalog_checksum`] hashes the wire encoding
+//! of the id-sorted catalog so two processes can compare entire
+//! catalogs with one u64.
+
+pub mod compact;
+mod checkpoint;
+mod wal;
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::metrics::Stopwatch;
+
+use super::ingest::{EpochStore, Ingestor, VersionedStore};
+use super::net::wire;
+use super::obs::Registry;
+use super::store::{ServedSource, Store};
+
+pub use compact::{resplit_hot, skew, CompactionReport, Compactor, Resplit};
+pub use wal::WalRecord;
+
+/// What a publish wants logged. Borrowed: the WAL encodes straight
+/// from the ingestor's delta buffer, no copy.
+pub enum WalOp<'a> {
+    /// Last-write-wins delta rows of the epoch being published.
+    Publish { rows: &'a [ServedSource] },
+    /// The epoch re-split shard ranges at this skew threshold; replay
+    /// re-derives the identical re-split from the prior epoch's store.
+    Compact { threshold: f64 },
+}
+
+/// FNV-1a 64 over the wire encoding of the id-sorted rows: the
+/// catalog-wide byte-parity check. Two stores with equal checksums
+/// hold bit-identical rows (every f64 hashed as its IEEE-754 bits),
+/// regardless of how either is sharded.
+pub fn catalog_checksum(rows: &[ServedSource]) -> u64 {
+    let mut sorted = rows.to_vec();
+    sorted.sort_by_key(|s| s.id);
+    fnv1a(&wire::encode_sources(&sorted))
+}
+
+/// [`catalog_checksum`] of a store's flat view.
+pub fn store_checksum(store: &Store) -> u64 {
+    catalog_checksum(&store.all_sources())
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// How a recovery went: what was loaded, what was replayed, how long
+/// each phase took (the RTO split), and what the catalog looks like at
+/// the recovered epoch.
+#[derive(Clone, Debug)]
+pub struct RecoveryReport {
+    pub checkpoint_epoch: u64,
+    pub recovered_epoch: u64,
+    pub records_replayed: usize,
+    /// bytes of torn tail truncated (0 on a clean shutdown)
+    pub truncated_bytes: u64,
+    pub checkpoint_load_s: f64,
+    pub replay_s: f64,
+    /// catalog size and checksum at the recovered epoch
+    pub rows: usize,
+    pub checksum: u64,
+}
+
+/// A recovered store: head at the last durably published epoch, with
+/// the log re-attached so the next publish appends where the old
+/// process left off.
+pub struct Recovered {
+    pub versioned: Arc<VersionedStore>,
+    pub log: Arc<DurableLog>,
+    pub report: RecoveryReport,
+}
+
+struct LogState {
+    file: File,
+    manifest: checkpoint::Manifest,
+    last_epoch: u64,
+}
+
+/// The durable publish log over one `--wal-dir`.
+///
+/// Thread safety: `append` is only ever called under the
+/// [`VersionedStore`] head lock (see `publish_logged`), which also
+/// serializes checkpoints; the internal mutex exists so metrics
+/// scrapes never race an append.
+pub struct DurableLog {
+    dir: PathBuf,
+    checkpoint_every: u64,
+    state: Mutex<LogState>,
+    obs: Registry,
+}
+
+impl DurableLog {
+    /// Does `dir` hold a recoverable log (a checkpoint manifest)?
+    pub fn exists(dir: &Path) -> bool {
+        dir.join(checkpoint::MANIFEST_FILE).exists()
+    }
+
+    /// Create a fresh log in `dir` and write checkpoint 0 of `initial`
+    /// immediately — the directory is self-contained from the first
+    /// byte, so a restart needs `--wal-dir` and nothing else.
+    /// `checkpoint_every = 0` disables periodic checkpoints (the WAL
+    /// then grows until a manual [`DurableLog::checkpoint_now`]).
+    pub fn create(dir: &Path, checkpoint_every: u64, initial: &EpochStore) -> Result<DurableLog> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating --wal-dir {}", dir.display()))?;
+        if Self::exists(dir) {
+            bail!(
+                "--wal-dir {} already holds a checkpoint; recover from it instead of re-creating",
+                dir.display()
+            );
+        }
+        let checksum = store_checksum(&initial.store);
+        let manifest = checkpoint::write_checkpoint(dir, initial, checksum, None)?;
+        let file = OpenOptions::new()
+            .append(true)
+            .create(true)
+            .open(checkpoint::wal_path(dir, manifest.epoch))?;
+        file.sync_all()?;
+        checkpoint::sync_dir(dir)?;
+        let obs = Registry::new();
+        obs.counter("wal_checkpoints").inc();
+        Ok(DurableLog {
+            dir: dir.to_path_buf(),
+            checkpoint_every,
+            state: Mutex::new(LogState { file, manifest, last_epoch: initial.epoch }),
+            obs,
+        })
+    }
+
+    /// Recover from `dir`: checkpoint-load + WAL tail-replay, with the
+    /// torn tail (if any) truncated. Replay drives a real [`Ingestor`]
+    /// so the recovered epochs are built by the same code that built
+    /// them originally — recovery parity is production parity.
+    pub fn recover(dir: &Path, checkpoint_every: u64) -> Result<Recovered> {
+        let sw = Stopwatch::start();
+        let manifest = checkpoint::load_manifest(dir)?
+            .ok_or_else(|| anyhow!("no checkpoint manifest in {}", dir.display()))?;
+        let head = checkpoint::load_checkpoint(dir, &manifest)?;
+        let checkpoint_load_s = sw.elapsed_secs();
+
+        let sw = Stopwatch::start();
+        let wal_path = checkpoint::wal_path(dir, manifest.epoch);
+        let scan = match File::open(&wal_path) {
+            Ok(mut f) => wal::scan_segment(&mut f)?,
+            // crash after the manifest rename, before the new segment:
+            // the checkpoint alone is the recovered state
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                wal::WalScan { records: Vec::new(), valid_bytes: 0, torn: false }
+            }
+            Err(e) => return Err(e.into()),
+        };
+        let mut truncated_bytes = 0u64;
+        if scan.torn {
+            let f = OpenOptions::new().write(true).open(&wal_path)?;
+            truncated_bytes = f.metadata()?.len().saturating_sub(scan.valid_bytes);
+            f.set_len(scan.valid_bytes)?;
+            f.sync_all()?;
+        }
+        let checkpoint_epoch = manifest.epoch;
+        let versioned = Arc::new(VersionedStore::from_head(head));
+        let mut ingestor = Ingestor::new(Arc::clone(&versioned));
+        let mut records_replayed = 0usize;
+        for rec in &scan.records {
+            let want = versioned.epoch() + 1;
+            if rec.epoch() != want {
+                bail!(
+                    "WAL replay gap in {}: expected epoch {want}, record says {}",
+                    dir.display(),
+                    rec.epoch()
+                );
+            }
+            match rec {
+                WalRecord::Publish { rows, .. } => {
+                    ingestor.apply(rows);
+                }
+                WalRecord::Compact { threshold, .. } => {
+                    ingestor.compact(*threshold).ok_or_else(|| {
+                        anyhow!(
+                            "WAL replay: compact record at epoch {want} did not re-derive \
+                             (threshold {threshold})"
+                        )
+                    })?;
+                }
+            }
+            records_replayed += 1;
+        }
+        let replay_s = sw.elapsed_secs();
+
+        let recovered = versioned.load();
+        let flat = recovered.store.all_sources();
+        let report = RecoveryReport {
+            checkpoint_epoch,
+            recovered_epoch: recovered.epoch,
+            records_replayed,
+            truncated_bytes,
+            checkpoint_load_s,
+            replay_s,
+            rows: flat.len(),
+            checksum: catalog_checksum(&flat),
+        };
+        let file = OpenOptions::new().append(true).create(true).open(&wal_path)?;
+        let obs = Registry::new();
+        obs.gauge_set("recovered_epoch", recovered.epoch as f64);
+        obs.gauge_set("recovery_checkpoint_load_ms", checkpoint_load_s * 1e3);
+        obs.gauge_set("recovery_replay_ms", replay_s * 1e3);
+        obs.counter("wal_replayed_records").add(records_replayed as u64);
+        let log = Arc::new(DurableLog {
+            dir: dir.to_path_buf(),
+            checkpoint_every,
+            state: Mutex::new(LogState {
+                file,
+                manifest,
+                last_epoch: recovered.epoch,
+            }),
+            obs,
+        });
+        versioned.attach_wal(Arc::clone(&log));
+        Ok(Recovered { versioned, log, report })
+    }
+
+    /// Append one publish record and `fsync` it. Called under the
+    /// [`VersionedStore`] head lock *before* the pointer flips: when
+    /// this returns, the epoch is durable, so the caller may ack it.
+    /// Triggers a checkpoint every `checkpoint_every` epochs.
+    pub(crate) fn append(&self, next: &EpochStore, op: &WalOp) -> Result<()> {
+        let rec = match op {
+            WalOp::Publish { rows } => WalRecord::Publish { epoch: next.epoch, rows: rows.to_vec() },
+            WalOp::Compact { threshold } => {
+                WalRecord::Compact { epoch: next.epoch, threshold: *threshold }
+            }
+        };
+        let bytes = wal::encode_record(&rec);
+        let mut st = self.state.lock().unwrap();
+        assert_eq!(
+            next.epoch,
+            st.last_epoch + 1,
+            "WAL appends must be contiguous (the head lock serializes publishes)"
+        );
+        st.file.write_all(&bytes)?;
+        let sw = Stopwatch::start();
+        st.file.sync_data()?;
+        self.obs.histogram("wal_fsync_s").record(sw.elapsed_secs());
+        self.obs.counter("wal_appends").inc();
+        self.obs.counter("wal_bytes").add(bytes.len() as u64);
+        st.last_epoch = next.epoch;
+        if self.checkpoint_every > 0 && next.epoch - st.manifest.epoch >= self.checkpoint_every {
+            self.checkpoint_locked(&mut st, next)?;
+        }
+        Ok(())
+    }
+
+    /// Force a checkpoint of `head` now (tests, shutdown hooks).
+    pub fn checkpoint_now(&self, head: &EpochStore) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        assert_eq!(head.epoch, st.last_epoch, "checkpoint must capture the logged head");
+        self.checkpoint_locked(&mut st, head)
+    }
+
+    fn checkpoint_locked(&self, st: &mut LogState, head: &EpochStore) -> Result<()> {
+        let checksum = store_checksum(&head.store);
+        let manifest = checkpoint::write_checkpoint(&self.dir, head, checksum, Some(&st.manifest))?;
+        // cut over to a fresh segment, then drop files only the old
+        // manifest referenced — a crash anywhere in between recovers
+        // from whichever manifest is on disk, both of which are intact
+        let file = OpenOptions::new()
+            .append(true)
+            .create(true)
+            .open(checkpoint::wal_path(&self.dir, manifest.epoch))?;
+        file.sync_all()?;
+        checkpoint::sync_dir(&self.dir)?;
+        checkpoint::gc(&self.dir, &manifest)?;
+        st.file = file;
+        st.manifest = manifest;
+        self.obs.counter("wal_checkpoints").inc();
+        Ok(())
+    }
+
+    /// The log's own metrics registry (`wal_appends`, `wal_bytes`,
+    /// `wal_checkpoints`, the `wal_fsync_s` histogram, and after a
+    /// recovery the `recovered_epoch` / `recovery_*_ms` gauges). Merge
+    /// its snapshot into a scrape with [`super::obs::Snapshot::merge_all`].
+    pub fn obs(&self) -> &Registry {
+        &self.obs
+    }
+
+    /// Epoch of the last record durably on disk.
+    pub fn last_epoch(&self) -> u64 {
+        self.state.lock().unwrap().last_epoch
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::ingest::{DriftConfig, DriftGen};
+    use crate::serve::snapshot;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("celeste-durable-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn seed(n: usize, shards: usize, s: u64) -> Arc<VersionedStore> {
+        let snap = snapshot::synthetic(n, s);
+        let store = Arc::new(Store::build(snap.sources, snap.width, snap.height, shards));
+        Arc::new(VersionedStore::new(store))
+    }
+
+    /// Publish through a WAL-attached store, drop everything, recover:
+    /// the recovered catalog is byte-identical to the last-write-wins
+    /// mirror at the recovered epoch.
+    #[test]
+    fn wal_recovery_is_byte_identical_to_the_mirror() {
+        let dir = tmpdir("roundtrip");
+        let vs = seed(500, 6, 11);
+        let head0 = vs.load();
+        let log = Arc::new(DurableLog::create(&dir, 4, &head0).expect("create"));
+        vs.attach_wal(Arc::clone(&log));
+        let mut ing = Ingestor::new(Arc::clone(&vs));
+        let mut drift = DriftGen::new(
+            &head0.store.all_sources(),
+            head0.store.width,
+            head0.store.height,
+            DriftConfig { batch: 24, seed: 3, ..Default::default() },
+        );
+        for _ in 0..10 {
+            ing.apply(&drift.next_batch());
+        }
+        let want = drift.mirror_sorted();
+        let want_sum = catalog_checksum(&want);
+        drop((ing, vs, log));
+
+        let rec = DurableLog::recover(&dir, 4).expect("recover");
+        assert_eq!(rec.report.recovered_epoch, 10);
+        assert_eq!(rec.report.checkpoint_epoch, 8, "checkpoint every 4 epochs");
+        assert_eq!(rec.report.records_replayed, 2, "only the tail replays");
+        assert_eq!(rec.report.truncated_bytes, 0, "clean shutdown has no tear");
+        let got = rec.versioned.load().store.all_sources();
+        assert_eq!(got, want, "recovered rows are byte-identical to the mirror");
+        assert_eq!(rec.report.checksum, want_sum);
+        assert!(rec.report.checkpoint_load_s >= 0.0 && rec.report.replay_s >= 0.0);
+
+        // the recovered log accepts the next publish where the old one
+        // stopped — and a second recovery sees it
+        let mut ing = Ingestor::new(Arc::clone(&rec.versioned));
+        let rep = ing.apply(&drift.next_batch());
+        assert_eq!(rep.epoch, 11);
+        drop((ing, rec));
+        let rec2 = DurableLog::recover(&dir, 4).expect("re-recover");
+        assert_eq!(rec2.report.recovered_epoch, 11);
+        assert_eq!(rec2.versioned.load().store.all_sources(), drift.mirror_sorted());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A torn tail (partial record, as kill -9 mid-append leaves) is
+    /// truncated; recovery lands on the last *complete* epoch.
+    #[test]
+    fn torn_tail_is_truncated_to_the_last_durable_epoch() {
+        let dir = tmpdir("torn");
+        let vs = seed(300, 4, 7);
+        let head0 = vs.load();
+        let log = Arc::new(DurableLog::create(&dir, 0, &head0).expect("create"));
+        vs.attach_wal(Arc::clone(&log));
+        let mut ing = Ingestor::new(Arc::clone(&vs));
+        let mut drift = DriftGen::new(
+            &head0.store.all_sources(),
+            head0.store.width,
+            head0.store.height,
+            DriftConfig { batch: 10, seed: 9, ..Default::default() },
+        );
+        for _ in 0..3 {
+            ing.apply(&drift.next_batch());
+        }
+        let mirror_at_3 = drift.mirror_sorted();
+        drop((ing, vs, log));
+        // shear 7 bytes off the tail: epoch 3's record is now torn
+        let wal = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .find(|e| e.file_name().to_string_lossy().starts_with("wal-e"))
+            .expect("segment")
+            .path();
+        let len = std::fs::metadata(&wal).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&wal).unwrap();
+        f.set_len(len - 7).unwrap();
+        drop(f);
+
+        let rec = DurableLog::recover(&dir, 0).expect("recover");
+        assert_eq!(rec.report.recovered_epoch, 2, "epoch 3 was torn away");
+        assert!(rec.report.truncated_bytes > 0, "the tear was truncated");
+        assert_ne!(
+            rec.versioned.load().store.all_sources(),
+            mirror_at_3,
+            "epoch 3 must not half-apply"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Incremental checkpoints: shards untouched since the previous
+    /// checkpoint keep their file (same name, not rewritten).
+    #[test]
+    fn untouched_shards_are_not_rewritten_by_a_checkpoint() {
+        let dir = tmpdir("incr");
+        let vs = seed(600, 8, 23);
+        let head0 = vs.load();
+        let log = Arc::new(DurableLog::create(&dir, 0, &head0).expect("create"));
+        vs.attach_wal(Arc::clone(&log));
+        let mut ing = Ingestor::new(Arc::clone(&vs));
+        // touch exactly one shard: update one existing row in place
+        let one = head0.store.shards.iter().find(|s| !s.sources.is_empty()).unwrap().sources[0]
+            .clone();
+        let rep = ing.apply(&[ServedSource { flux_r: one.flux_r * 2.0, ..one }]);
+        assert_eq!(rep.touched.len(), 1, "one shard touched");
+        let head1 = vs.load();
+        log.checkpoint_now(&head1).expect("checkpoint");
+
+        let m = checkpoint::load_manifest(&dir).unwrap().unwrap();
+        assert_eq!(m.epoch, 1);
+        let rewritten: Vec<usize> = m
+            .shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.epoch == 1)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(rewritten, vec![rep.touched[0].0], "only the touched shard re-stamped");
+        // recovery from the incremental checkpoint is exact, no replay
+        drop((ing, vs, log));
+        let rec = DurableLog::recover(&dir, 0).expect("recover");
+        assert_eq!(rec.report.records_replayed, 0);
+        assert_eq!(rec.report.recovered_epoch, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A compaction epoch replays from its `(threshold)` record: the
+    /// recovered store re-derives the identical re-split.
+    #[test]
+    fn compaction_replays_deterministically_from_the_log() {
+        let dir = tmpdir("compact-replay");
+        // skewed seed: most rows in one corner
+        let mut sources = snapshot::synthetic(400, 5).sources;
+        for (i, s) in sources.iter_mut().enumerate() {
+            if i % 4 != 0 {
+                s.pos = (s.pos.0 * 0.08, s.pos.1 * 0.08);
+            }
+        }
+        let store = Arc::new(Store::build(sources, 100.0, 100.0, 4));
+        let vs = Arc::new(VersionedStore::new(store));
+        let head0 = vs.load();
+        let log = Arc::new(DurableLog::create(&dir, 0, &head0).expect("create"));
+        vs.attach_wal(Arc::clone(&log));
+        let mut ing = Ingestor::new(Arc::clone(&vs));
+        let rep = ing.compact(1.2).expect("skewed store compacts");
+        assert_eq!(rep.epoch, 1);
+        let head = vs.load();
+        let want: Vec<(u64, u64, usize)> = head
+            .store
+            .shards
+            .iter()
+            .map(|s| (s.key_lo, s.key_hi, s.sources.len()))
+            .collect();
+        drop((ing, vs, log));
+
+        let rec = DurableLog::recover(&dir, 0).expect("recover");
+        assert_eq!(rec.report.recovered_epoch, 1);
+        let got: Vec<(u64, u64, usize)> = rec
+            .versioned
+            .load()
+            .store
+            .shards
+            .iter()
+            .map(|s| (s.key_lo, s.key_hi, s.sources.len()))
+            .collect();
+        assert_eq!(got, want, "replayed re-split matches the original layout exactly");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

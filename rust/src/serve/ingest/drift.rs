@@ -29,6 +29,10 @@ pub struct DriftConfig {
     pub pos_jitter: f64,
     /// relative flux jitter SD applied by a re-estimate
     pub flux_jitter: f64,
+    /// fraction of fresh detections drawn from a tight hotspot blob
+    /// instead of uniformly (0.0 = uniform sky). Sustained values near
+    /// 1.0 skew per-shard row counts — the compaction trigger's diet.
+    pub hotspot: f64,
     pub seed: u64,
 }
 
@@ -39,6 +43,7 @@ impl Default for DriftConfig {
             update_fraction: 0.5,
             pos_jitter: 1.5,
             flux_jitter: 0.05,
+            hotspot: 0.0,
             seed: 42,
         }
     }
@@ -88,12 +93,24 @@ impl DriftGen {
     fn fresh_detection(&mut self) -> ServedSource {
         let id = self.next_id;
         self.next_id += 1;
-        ServedSource {
-            id,
-            pos: (
+        // a transient alert region: a fixed blob at quarter-sky whose
+        // spread is ~2% of the extent, hit by `hotspot` of detections
+        let pos = if self.cfg.hotspot > 0.0 && self.rng.uniform() < self.cfg.hotspot {
+            (
+                (self.width * 0.25 + self.rng.normal() * self.width * 0.02)
+                    .clamp(0.0, self.width),
+                (self.height * 0.25 + self.rng.normal() * self.height * 0.02)
+                    .clamp(0.0, self.height),
+            )
+        } else {
+            (
                 self.rng.uniform_in(0.0, self.width),
                 self.rng.uniform_in(0.0, self.height),
-            ),
+            )
+        };
+        ServedSource {
+            id,
+            pos,
             p_gal: self.rng.uniform(),
             flux_r: self.rng.lognormal(4.0, 1.2),
             flux_logsd: self.rng.uniform_in(0.05, 0.5),
@@ -152,6 +169,9 @@ pub struct IngestDriver {
     pub publishes: u64,
     /// upsert rows applied so far
     pub rows: u64,
+    /// when tracking: (epoch, catalog checksum of the mirror at that
+    /// epoch) — what a crashed replica must hash to after recovery
+    epoch_checksums: Option<Vec<(u64, u64)>>,
 }
 
 impl IngestDriver {
@@ -169,7 +189,28 @@ impl IngestDriver {
             next_at: first,
             publishes: 0,
             rows: 0,
+            epoch_checksums: None,
         }
+    }
+
+    /// Record the mirror's [`catalog_checksum`] after every publish
+    /// (and for the seed epoch now), so crash recovery can verify
+    /// byte parity at *whatever* epoch a replica recovered to.
+    ///
+    /// [`catalog_checksum`]: crate::serve::durable::catalog_checksum
+    pub fn track_checksums(&mut self) {
+        let seed_sum = crate::serve::durable::catalog_checksum(self.drift.mirror());
+        let start = self.ingestor.versioned().epoch();
+        self.epoch_checksums = Some(vec![(start, seed_sum)]);
+    }
+
+    /// The mirror's checksum at `epoch`, when tracked.
+    pub fn checksum_at(&self, epoch: u64) -> Option<u64> {
+        self.epoch_checksums
+            .as_ref()?
+            .iter()
+            .find(|(e, _)| *e == epoch)
+            .map(|(_, sum)| *sum)
     }
 
     /// Apply every publish due at or before `now`; returns their
@@ -181,6 +222,12 @@ impl IngestDriver {
             let rep = self.ingestor.apply(&batch);
             self.publishes += 1;
             self.rows += rep.upserts as u64;
+            if let Some(sums) = self.epoch_checksums.as_mut() {
+                sums.push((
+                    rep.epoch,
+                    crate::serve::durable::catalog_checksum(self.drift.mirror()),
+                ));
+            }
             out.push(rep);
             self.next_at += -self.rng.uniform().max(1e-12).ln() / self.rate;
         }
@@ -194,6 +241,12 @@ impl IngestDriver {
 
     pub fn ingestor(&self) -> &Ingestor {
         &self.ingestor
+    }
+
+    /// Mutable access for maintenance operations that publish through
+    /// the same single-writer seam (compaction).
+    pub fn ingestor_mut(&mut self) -> &mut Ingestor {
+        &mut self.ingestor
     }
 }
 

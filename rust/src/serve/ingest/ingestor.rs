@@ -11,6 +11,7 @@
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 
+use crate::serve::durable::{compact, CompactionReport, WalOp};
 use crate::serve::store::{ServedSource, Shard, Store};
 
 use super::versioned::{EpochStore, VersionedStore};
@@ -144,17 +145,74 @@ impl Ingestor {
             shard_epochs,
             store: Arc::new(Store { shards, width: store.width, height: store.height }),
         });
-        self.versioned.publish(Arc::clone(&published));
+        // the deduped delta rows are both the report's replication
+        // payload and the WAL record: one definition of "what this
+        // epoch changed", byte-identical on disk and on the wire
+        let deltas: Vec<ServedSource> = batch.into_values().collect();
+        self.versioned
+            .publish_logged(Arc::clone(&published), WalOp::Publish { rows: &deltas });
         IngestReport {
             epoch,
             touched: touched.into_iter().collect(),
-            upserts: batch.len(),
+            upserts: deltas.len(),
             inserted,
             updated,
             moved,
             published,
-            deltas: batch.into_values().collect(),
+            deltas,
         }
+    }
+
+    /// Re-split hot Hilbert ranges when row counts have skewed (see
+    /// [`crate::serve::durable::compact`]) and publish the new layout
+    /// as the next epoch. Returns `None` when nothing qualifies.
+    ///
+    /// The WAL records only `(epoch, threshold)`: the re-split is a
+    /// deterministic function of the prior epoch's store, so replay
+    /// re-derives the identical layout.
+    pub fn compact(&mut self, threshold: f64) -> Option<CompactionReport> {
+        let cur = self.versioned.load();
+        let store = &cur.store;
+        let skew_before = compact::skew(store);
+        let re = compact::resplit_hot(store, threshold)?;
+        let epoch = cur.epoch + 1;
+        // stamp conservatively: a shard keeps its cache stamp only if
+        // the same index still holds the same (Arc-shared) content —
+        // an index shift would otherwise let stale cache entries match
+        let shard_epochs: Vec<u64> = re
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, sh)| {
+                if Arc::ptr_eq(sh, &store.shards[i]) {
+                    cur.shard_epochs[i]
+                } else {
+                    epoch
+                }
+            })
+            .collect();
+        let next_store =
+            Arc::new(Store { shards: re.shards, width: store.width, height: store.height });
+        let skew_after = compact::skew(&next_store);
+        let published = Arc::new(EpochStore { epoch, shard_epochs, store: next_store });
+        self.versioned
+            .publish_logged(Arc::clone(&published), WalOp::Compact { threshold });
+        // ranges moved wholesale: rebuild the id routing table
+        self.id_to_shard.clear();
+        for (idx, sh) in published.store.shards.iter().enumerate() {
+            for s in &sh.sources {
+                self.id_to_shard.insert(s.id, idx);
+            }
+        }
+        Some(CompactionReport {
+            epoch,
+            splits: re.splits,
+            merges: re.merges,
+            absorbed: re.absorbed,
+            rows_resharded: re.rows_resharded,
+            skew_before,
+            skew_after,
+        })
     }
 }
 

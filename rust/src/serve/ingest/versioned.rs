@@ -9,6 +9,7 @@
 
 use std::sync::{Arc, Mutex};
 
+use super::super::durable::{DurableLog, WalOp};
 use super::super::store::Store;
 
 /// One immutable published version of the catalog.
@@ -42,13 +43,38 @@ impl EpochStore {
 /// `load` is the whole read-side protocol: clone the current `Arc` and
 /// query it for as long as you like. `publish` is the whole write-side
 /// protocol: flip the pointer to a strictly newer epoch.
+///
+/// With a [`DurableLog`] attached, the publish protocol tightens: the
+/// WAL record is appended and fsynced *under the head lock, before the
+/// pointer flips* — no reader (and no Publish ack) ever observes an
+/// epoch that is not already durable, and the log order is exactly the
+/// publish order.
 pub struct VersionedStore {
     current: Mutex<Arc<EpochStore>>,
+    wal: Mutex<Option<Arc<DurableLog>>>,
 }
 
 impl VersionedStore {
     pub fn new(store: Arc<Store>) -> VersionedStore {
-        VersionedStore { current: Mutex::new(Arc::new(EpochStore::initial(store))) }
+        Self::from_head(Arc::new(EpochStore::initial(store)))
+    }
+
+    /// Resume from an already-built head (crash recovery installs the
+    /// checkpoint-plus-replay result here, at its recovered epoch).
+    pub fn from_head(head: Arc<EpochStore>) -> VersionedStore {
+        VersionedStore { current: Mutex::new(head), wal: Mutex::new(None) }
+    }
+
+    /// Make every subsequent publish durable: appended to `log` and
+    /// fsynced before it becomes visible. Publishers must then use
+    /// [`VersionedStore::publish_logged`] (the ingest path does).
+    pub fn attach_wal(&self, log: Arc<DurableLog>) {
+        *self.wal.lock().unwrap() = Some(log);
+    }
+
+    /// The attached durable log, if any.
+    pub fn wal(&self) -> Option<Arc<DurableLog>> {
+        self.wal.lock().unwrap().clone()
     }
 
     /// Pin the current epoch (cheap: one lock for one pointer clone).
@@ -58,7 +84,22 @@ impl VersionedStore {
 
     /// Atomically install a newer epoch. Concurrent readers keep the
     /// epochs they already pinned; new loads see `next`.
+    ///
+    /// Only for stores without a WAL (mirrors, replicas, tests): a
+    /// durable store must describe what it publishes, so the log can
+    /// replay it — use [`VersionedStore::publish_logged`].
     pub fn publish(&self, next: Arc<EpochStore>) {
+        self.publish_inner(next, None);
+    }
+
+    /// Install a newer epoch durably: append `op` to the attached WAL
+    /// and fsync before the flip. Without an attached log this is
+    /// exactly [`VersionedStore::publish`].
+    pub fn publish_logged(&self, next: Arc<EpochStore>, op: WalOp<'_>) {
+        self.publish_inner(next, Some(op));
+    }
+
+    fn publish_inner(&self, next: Arc<EpochStore>, op: Option<WalOp<'_>>) {
         let mut cur = self.current.lock().unwrap();
         assert!(
             next.epoch > cur.epoch,
@@ -66,6 +107,16 @@ impl VersionedStore {
             cur.epoch,
             next.epoch
         );
+        if let Some(log) = self.wal.lock().unwrap().as_ref() {
+            let op = op.expect(
+                "a WAL-attached store must publish through publish_logged \
+                 so the epoch can be replayed",
+            );
+            // a WAL the store cannot append to is a store that must not
+            // accept publishes: fail loudly rather than diverge from
+            // what recovery will reconstruct
+            log.append(&next, &op).expect("WAL append+fsync failed");
+        }
         *cur = next;
     }
 

@@ -27,6 +27,12 @@
 //!   mix and Zipf-skewed sky hotspots.
 //! * [`snapshot`] — jsonlite snapshot format bridging `infer` output to
 //!   serving across process boundaries.
+//! * [`durable`] — the durability layer: a CRC-framed write-ahead log
+//!   fsynced before every publish becomes visible, incremental
+//!   per-shard checkpoints, checkpoint-load + tail-replay crash
+//!   recovery with a measured RTO (`celeste recover-bench`), and
+//!   skew-triggered Hilbert-range compaction with minimal-movement
+//!   rendezvous rebalancing.
 //! * [`dist`] — the multi-node tier: replicated shard placement, fabric-
 //!   backed remote shard clients, a load-balanced scatter-gather router
 //!   with replica hedging, and failure injection — in simulated time.
@@ -42,6 +48,7 @@
 //! Entry points: `celeste serve-bench` (CLI) and `benches/bench_serve`.
 
 pub mod dist;
+pub mod durable;
 pub mod engine;
 pub mod ingest;
 pub mod loadgen;
@@ -58,6 +65,10 @@ pub use engine::{
     Clock, Consistency, Consistent, DirectEngine, DriveReport, Hedged, LayerSpec, Outcome,
     QueryEngine, Request, Response, ResultCache, RouterEngine, ScanEngine, ServerEngine, SimClock,
     Submitted, Trace, WallClock,
+};
+pub use durable::{
+    catalog_checksum, store_checksum, CompactionReport, Compactor, DurableLog, Recovered,
+    RecoveryReport, WalOp,
 };
 pub use ingest::{
     DriftConfig, DriftGen, EpochStore, IngestDriver, IngestReport, Ingestor, StoreSource,

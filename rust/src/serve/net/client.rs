@@ -10,10 +10,27 @@
 //! frames, bytes, encode/decode nanoseconds). All requests to one
 //! server share the connection — that is what turns a whole scheduler
 //! batch into a single framed request.
+//!
+//! ## Pipelining
+//!
+//! A connection admits up to `depth` concurrent requests
+//! ([`NetConn::with_pipeline`]; the default depth is 1, which degrades
+//! to the classic strict request/reply lockstep). Writers push their
+//! frame as soon as a flight slot frees up, then park on a condvar;
+//! replies are matched back to their writer by `req_id`, so the server
+//! may answer out of order. Exactly one parked waiter at a time holds
+//! the read half of the socket (a `try_clone`), reads one frame off
+//! the lock, and routes it: its own reply, or another waiter's, or a
+//! typed `Error` frame (which only fails the request it names — the
+//! connection survives, preserving the refusal semantics of depth 1).
+//! Any I/O error, timeout, or protocol violation tears the whole
+//! session down: every in-flight request errors out and the next
+//! round trip redials.
 
-use std::net::TcpStream;
+use std::collections::{HashMap, HashSet};
+use std::net::{Shutdown, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use crate::ga::Fabric;
@@ -32,12 +49,36 @@ const BACKOFF_BASE: Duration = Duration::from_millis(10);
 const BACKOFF_CAP: Duration = Duration::from_millis(200);
 const CONNECT_ATTEMPTS: u32 = 5;
 
+/// Everything guarded by the connection lock. `stream` is the write
+/// half; `reader` is a `try_clone` of the same socket, *taken out* of
+/// the state by whichever waiter is currently reading (so at most one
+/// thread blocks in `read` while the lock stays free for writers).
+struct PipeState {
+    stream: Option<TcpStream>,
+    reader: Option<TcpStream>,
+    /// decoded replies parked for their waiter, keyed by req_id,
+    /// carrying the reader-measured decode seconds
+    ready: HashMap<u64, (Msg, f64)>,
+    /// req_ids sent and not yet answered (a reply outside this set is
+    /// a protocol violation)
+    pending: HashSet<u64>,
+    in_flight: usize,
+    /// bumped on every teardown; a waiter whose generation is stale
+    /// knows its request died with the session
+    generation: u64,
+    /// why the last teardown happened (what stale waiters report)
+    last_error: WireError,
+}
+
 /// One framed connection to one shard server. Cheap to share
 /// (`Arc<NetConn>`): the socket is behind a mutex, the counters are
 /// atomics.
 pub struct NetConn {
     addr: String,
-    stream: Mutex<Option<TcpStream>>,
+    /// max requests in flight on this connection (>= 1)
+    depth: usize,
+    state: Mutex<PipeState>,
+    wakeup: Condvar,
     next_req: AtomicU64,
     had_session: AtomicU64,
     /// first successful connects (0 or 1)
@@ -61,8 +102,9 @@ pub struct NetConn {
 
 /// Wall-clock stage timing of one traced round trip, measured on the
 /// client: encode and decode are direct measurements, `rtt_s` is the
-/// residual (write syscall + network + server time + read syscalls),
-/// so the three sum to the call's wall time by construction.
+/// residual (write syscall + network + server time + read syscalls —
+/// and, pipelined, any wait behind other in-flight replies), so the
+/// three sum to the call's wall time by construction.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct WireTimes {
     /// request-frame encode time, seconds
@@ -75,11 +117,38 @@ pub struct WireTimes {
     pub total_s: f64,
 }
 
+/// The req_id a reply frame answers, if it is a reply at all.
+fn msg_req_id(msg: &Msg) -> Option<u64> {
+    match msg {
+        Msg::Reply { req_id, .. }
+        | Msg::PublishAck { req_id, .. }
+        | Msg::StatsReply { req_id, .. }
+        | Msg::Error { req_id, .. } => Some(*req_id),
+        _ => None,
+    }
+}
+
 impl NetConn {
     pub fn new(addr: String) -> NetConn {
+        NetConn::with_pipeline(addr, 1)
+    }
+
+    /// A connection admitting up to `depth` concurrent requests
+    /// (clamped to at least 1; 1 = strict request/reply lockstep).
+    pub fn with_pipeline(addr: String, depth: usize) -> NetConn {
         NetConn {
             addr,
-            stream: Mutex::new(None),
+            depth: depth.max(1),
+            state: Mutex::new(PipeState {
+                stream: None,
+                reader: None,
+                ready: HashMap::new(),
+                pending: HashSet::new(),
+                in_flight: 0,
+                generation: 0,
+                last_error: WireError::Io(std::io::ErrorKind::NotConnected),
+            }),
+            wakeup: Condvar::new(),
             next_req: AtomicU64::new(1),
             had_session: AtomicU64::new(0),
             connects: AtomicU64::new(0),
@@ -99,8 +168,13 @@ impl NetConn {
         &self.addr
     }
 
+    /// The configured pipelining depth.
+    pub fn pipeline_depth(&self) -> usize {
+        self.depth
+    }
+
     /// Connect + handshake with exponential backoff. Called with the
-    /// stream lock held (via `ensure`).
+    /// state lock held (no reader can be active without a stream).
     fn dial(&self) -> Result<TcpStream, WireError> {
         let mut last = WireError::Io(std::io::ErrorKind::NotConnected);
         for attempt in 0..CONNECT_ATTEMPTS {
@@ -137,57 +211,195 @@ impl NetConn {
         Err(last)
     }
 
-    /// One framed round trip: encode, send, read the correlated reply.
-    /// On any failure the connection is dropped so the next round trip
-    /// redials (reconnect-with-backoff); the caller decides whether to
-    /// fail over.
+    /// Count a failed round trip on the right counter (typed remote
+    /// refusals are not connection failures and are not counted here).
+    fn count_err(&self, e: &WireError) {
+        match e {
+            WireError::Remote(_) => {}
+            e if wire::is_timeout(e) => {
+                self.timeouts.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {
+                self.io_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Tear the session down: every in-flight request errors out with
+    /// `err`, the next round trip redials. Shutting the socket down
+    /// (not just dropping our handle) also wakes a reader blocked on
+    /// the cloned read half.
+    fn fail_conn(&self, st: &mut PipeState, err: WireError) {
+        if let Some(s) = st.stream.take() {
+            s.shutdown(Shutdown::Both).ok();
+        }
+        st.reader = None;
+        st.ready.clear();
+        st.pending.clear();
+        st.in_flight = 0;
+        st.generation += 1;
+        st.last_error = err;
+        self.wakeup.notify_all();
+    }
+
+    /// Kill the connection from outside the round-trip path (a caller
+    /// saw a structurally wrong reply).
+    fn drop_conn(&self) {
+        let mut st = self.state.lock().expect("conn lock");
+        self.fail_conn(&mut st, WireError::Malformed);
+    }
+
+    /// Read one frame off the lock and route it. Takes the guard,
+    /// returns it re-acquired. `gen` is the session generation the
+    /// caller observed; if it moved while we were reading, the frame
+    /// (or error) belongs to a dead session and is discarded.
+    fn read_one<'a>(
+        &self,
+        st: MutexGuard<'a, PipeState>,
+        mut reader: TcpStream,
+        gen: u64,
+        budget: Duration,
+    ) -> MutexGuard<'a, PipeState> {
+        drop(st);
+        reader.set_read_timeout(Some(budget.max(Duration::from_millis(1)))).ok();
+        let t_read = Instant::now();
+        let result = read_frame_timed(&mut reader);
+        let mut st = self.state.lock().expect("conn lock");
+        if st.generation != gen {
+            return st;
+        }
+        match result {
+            Ok((reply, decode_s)) => {
+                self.decode_ns.fetch_add(t_read.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                let recv = (wire::HEADER_LEN + frame_payload_hint(&reply)) as u64;
+                self.bytes_recv.fetch_add(recv, Ordering::Relaxed);
+                match msg_req_id(&reply) {
+                    Some(rid) if st.pending.contains(&rid) => {
+                        st.reader = Some(reader);
+                        st.ready.insert(rid, (reply, decode_s));
+                        self.wakeup.notify_all();
+                    }
+                    // a reply nobody asked for: the stream is
+                    // desynchronized. A typed Error that names no live
+                    // request still reports its code to the waiters.
+                    _ => {
+                        let err = match &reply {
+                            Msg::Error { code, .. } => WireError::Remote(*code),
+                            _ => WireError::Malformed,
+                        };
+                        self.fail_conn(&mut st, err);
+                    }
+                }
+            }
+            Err(e) => self.fail_conn(&mut st, e),
+        }
+        st
+    }
+
+    /// One framed round trip: send the frame as soon as a flight slot
+    /// is free, then wait for the reply correlated by `req_id` (which
+    /// must be the id inside `msg`). On any session failure the
+    /// connection is dropped so the next round trip redials; a typed
+    /// `Error` reply fails only this request.
     fn round_trip(
         &self,
+        req_id: u64,
         msg: &Msg,
         deadline: Option<Duration>,
     ) -> Result<(Msg, WireTimes), WireError> {
-        let mut guard = self.stream.lock().expect("conn lock");
-        if guard.is_none() {
-            *guard = Some(self.dial()?);
-        }
-        let stream = guard.as_mut().expect("just ensured");
         let timeout = deadline.unwrap_or(DEFAULT_TIMEOUT).max(Duration::from_millis(1));
-        stream.set_read_timeout(Some(timeout)).ok();
-        let result = (|| {
-            let t_start = Instant::now();
-            let frame = wire::encode_frame(msg);
-            let encode_s = t_start.elapsed().as_secs_f64();
-            self.encode_ns.fetch_add((encode_s * 1e9) as u64, Ordering::Relaxed);
-            use std::io::Write;
-            stream.write_all(&frame).map_err(|e| WireError::Io(e.kind()))?;
-            self.frames.fetch_add(1, Ordering::Relaxed);
-            self.bytes_sent.fetch_add(frame.len() as u64, Ordering::Relaxed);
-            let t1 = Instant::now();
-            let (reply, decode_s) = read_frame_timed(stream)?;
-            self.decode_ns.fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
-            let recv = (wire::HEADER_LEN + frame_payload_hint(&reply)) as u64;
-            self.bytes_recv.fetch_add(recv, Ordering::Relaxed);
-            let total_s = t_start.elapsed().as_secs_f64();
-            let rtt_s = (total_s - encode_s - decode_s).max(0.0);
-            Ok((reply, WireTimes { encode_s, decode_s, rtt_s, total_s }))
-        })();
-        match result {
-            Ok((Msg::Error { code, .. }, _)) => {
-                // typed remote refusal: the connection itself is fine
-                if code == ErrorCode::Stale {
-                    self.stale_refusals.fetch_add(1, Ordering::Relaxed);
-                }
-                Err(WireError::Remote(code))
+        let expires = Instant::now() + timeout;
+        let t_start = Instant::now();
+        let frame = wire::encode_frame(msg);
+        let encode_s = t_start.elapsed().as_secs_f64();
+        self.encode_ns.fetch_add((encode_s * 1e9) as u64, Ordering::Relaxed);
+
+        let mut st = self.state.lock().expect("conn lock");
+        // admission: at most `depth` requests in flight per connection
+        while st.stream.is_some() && st.in_flight >= self.depth {
+            let left = expires.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                let e = WireError::Io(std::io::ErrorKind::TimedOut);
+                self.count_err(&e);
+                self.fail_conn(&mut st, e.clone());
+                return Err(e);
             }
-            Ok(reply) => Ok(reply),
-            Err(e) => {
-                if wire::is_timeout(&e) {
-                    self.timeouts.fetch_add(1, Ordering::Relaxed);
-                } else {
-                    self.io_errors.fetch_add(1, Ordering::Relaxed);
+            st = self.wakeup.wait_timeout(st, left).expect("conn lock").0;
+        }
+        if st.stream.is_none() {
+            let s = match self.dial() {
+                Ok(s) => s,
+                Err(e) => {
+                    self.count_err(&e);
+                    return Err(e);
                 }
-                *guard = None;
-                Err(e)
+            };
+            let r = match s.try_clone() {
+                Ok(r) => r,
+                Err(e) => {
+                    let e = WireError::Io(e.kind());
+                    self.count_err(&e);
+                    return Err(e);
+                }
+            };
+            st.stream = Some(s);
+            st.reader = Some(r);
+            st.ready.clear();
+            st.pending.clear();
+            st.in_flight = 0;
+        }
+        let gen = st.generation;
+        {
+            use std::io::Write;
+            let stream = st.stream.as_mut().expect("just ensured");
+            if let Err(e) = stream.write_all(&frame) {
+                let e = WireError::Io(e.kind());
+                self.count_err(&e);
+                self.fail_conn(&mut st, e.clone());
+                return Err(e);
+            }
+        }
+        self.frames.fetch_add(1, Ordering::Relaxed);
+        self.bytes_sent.fetch_add(frame.len() as u64, Ordering::Relaxed);
+        st.in_flight += 1;
+        st.pending.insert(req_id);
+
+        loop {
+            if let Some((reply, decode_s)) = st.ready.remove(&req_id) {
+                st.pending.remove(&req_id);
+                st.in_flight -= 1;
+                self.wakeup.notify_all();
+                drop(st);
+                if let Msg::Error { code, .. } = &reply {
+                    // typed remote refusal: the connection itself is
+                    // fine, only this request is refused
+                    if *code == ErrorCode::Stale {
+                        self.stale_refusals.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return Err(WireError::Remote(*code));
+                }
+                let total_s = t_start.elapsed().as_secs_f64();
+                let rtt_s = (total_s - encode_s - decode_s).max(0.0);
+                return Ok((reply, WireTimes { encode_s, decode_s, rtt_s, total_s }));
+            }
+            if st.generation != gen {
+                // the session died under us (reader error or a peer's
+                // expired deadline): our request went with it
+                let e = st.last_error.clone();
+                self.count_err(&e);
+                return Err(e);
+            }
+            let left = expires.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                let e = WireError::Io(std::io::ErrorKind::TimedOut);
+                self.count_err(&e);
+                self.fail_conn(&mut st, e.clone());
+                return Err(e);
+            }
+            if let Some(reader) = st.reader.take() {
+                st = self.read_one(st, reader, gen, left);
+            } else {
+                st = self.wakeup.wait_timeout(st, left).expect("conn lock").0;
             }
         }
     }
@@ -215,8 +427,11 @@ impl NetConn {
     ) -> Result<(Vec<Vec<ShardReply>>, WireTimes, SpanSet), WireError> {
         let req_id = self.next_req.fetch_add(1, Ordering::Relaxed);
         let n = entries.len();
-        let (reply, times) =
-            self.round_trip(&Msg::Execute { req_id, min_epoch, trace_id, entries }, deadline)?;
+        let (reply, times) = self.round_trip(
+            req_id,
+            &Msg::Execute { req_id, min_epoch, trace_id, entries },
+            deadline,
+        )?;
         match reply {
             Msg::Reply { req_id: rid, trace_id: tid, server_spans, entries }
                 if rid == req_id && tid == trace_id && entries.len() == n =>
@@ -225,7 +440,7 @@ impl NetConn {
             }
             _ => {
                 self.io_errors.fetch_add(1, Ordering::Relaxed);
-                *self.stream.lock().expect("conn lock") = None;
+                self.drop_conn();
                 Err(WireError::Malformed)
             }
         }
@@ -234,7 +449,7 @@ impl NetConn {
     /// Scrape the server's metrics-registry snapshot (`StatsReq`).
     pub fn scrape(&self, deadline: Option<Duration>) -> Result<obs::Snapshot, WireError> {
         let req_id = self.next_req.fetch_add(1, Ordering::Relaxed);
-        let (reply, _) = self.round_trip(&Msg::StatsReq { req_id }, deadline)?;
+        let (reply, _) = self.round_trip(req_id, &Msg::StatsReq { req_id }, deadline)?;
         match reply {
             Msg::StatsReply { req_id: rid, counters, gauges, histograms } if rid == req_id => {
                 let mut snap = obs::Snapshot::default();
@@ -245,13 +460,14 @@ impl NetConn {
             }
             _ => {
                 self.io_errors.fetch_add(1, Ordering::Relaxed);
-                *self.stream.lock().expect("conn lock") = None;
+                self.drop_conn();
                 Err(WireError::Malformed)
             }
         }
     }
 
-    /// Ship one epoch publish and await its ack.
+    /// Ship one epoch publish and await its ack. With a durable
+    /// server, the ack means the epoch is fsynced in that server's WAL.
     pub fn publish(
         &self,
         epoch: u64,
@@ -260,11 +476,11 @@ impl NetConn {
     ) -> Result<(), WireError> {
         let req_id = self.next_req.fetch_add(1, Ordering::Relaxed);
         let msg = Msg::Publish { req_id, epoch, rows: rows.to_vec() };
-        match self.round_trip(&msg, deadline)?.0 {
+        match self.round_trip(req_id, &msg, deadline)?.0 {
             Msg::PublishAck { req_id: rid, epoch: e } if rid == req_id && e == epoch => Ok(()),
             _ => {
                 self.io_errors.fetch_add(1, Ordering::Relaxed);
-                *self.stream.lock().expect("conn lock") = None;
+                self.drop_conn();
                 Err(WireError::Malformed)
             }
         }

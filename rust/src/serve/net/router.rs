@@ -81,19 +81,35 @@ impl NetRouterEngine {
         addrs: &[String],
         replicas: usize,
     ) -> Result<NetRouterEngine, WireError> {
+        NetRouterEngine::connect_pipelined(store, addrs, replicas, 1)
+    }
+
+    /// [`NetRouterEngine::connect`] with per-connection pipelining:
+    /// each server connection keeps up to `pipeline` Execute frames in
+    /// flight, replies matched by req_id (1 = strict lockstep).
+    pub fn connect_pipelined(
+        store: Arc<Store>,
+        addrs: &[String],
+        replicas: usize,
+        pipeline: usize,
+    ) -> Result<NetRouterEngine, WireError> {
+        let pipeline = pipeline.max(1);
         let n_servers = addrs.len().max(1);
         let placement = Placement::rendezvous(store.shards.len(), n_servers, replicas);
-        let conns: Vec<Arc<NetConn>> =
-            addrs.iter().map(|a| Arc::new(NetConn::new(a.clone()))).collect();
+        let conns: Vec<Arc<NetConn>> = addrs
+            .iter()
+            .map(|a| Arc::new(NetConn::with_pipeline(a.clone(), pipeline)))
+            .collect();
         for conn in &conns {
             // handshake + empty execute: fail fast if a server is down
             conn.execute(Vec::new(), 0, Some(Duration::from_secs(5)))?;
         }
         let desc = format!(
-            "net-router(tcp, {} server(s) x{} replicas, {} shards)",
+            "net-router(tcp, {} server(s) x{} replicas, {} shards, pipeline {})",
             n_servers,
             placement.replicas,
-            store.shards.len()
+            store.shards.len(),
+            pipeline
         );
         let mirror = Arc::new(VersionedStore::new(store));
         Ok(NetRouterEngine {

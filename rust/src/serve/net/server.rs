@@ -22,8 +22,9 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::serve::durable::DurableLog;
 use crate::serve::ingest::{Ingestor, VersionedStore};
-use crate::serve::obs::{Registry, SpanSet, Stage};
+use crate::serve::obs::{self, Registry, SpanSet, Stage};
 use crate::serve::query::execute_on_shard;
 use crate::serve::store::Store;
 
@@ -38,6 +39,10 @@ pub struct ShardServer {
     versioned: Arc<VersionedStore>,
     ingest: Arc<Mutex<Ingestor>>,
     registry: Arc<Registry>,
+    /// attached durable log, if this server fsyncs publishes; its own
+    /// registry (wal_appends, fsync latency, recovery gauges) is merged
+    /// into every `StatsReq` scrape
+    log: Option<Arc<DurableLog>>,
     stop: Arc<AtomicBool>,
 }
 
@@ -56,14 +61,27 @@ impl ShardServer {
     ///
     /// [`local_addr`]: ShardServer::local_addr
     pub fn bind(store: Arc<Store>, addr: &str) -> std::io::Result<ShardServer> {
+        ShardServer::bind_durable(Arc::new(VersionedStore::new(store)), None, addr)
+    }
+
+    /// Bind over an existing versioned head (crash recovery hands the
+    /// recovered store in here) with an optional durable log. When the
+    /// log is attached to `versioned`, every `Publish` is appended and
+    /// fsynced *before* its ack leaves this process — an acked epoch
+    /// survives kill -9.
+    pub fn bind_durable(
+        versioned: Arc<VersionedStore>,
+        log: Option<Arc<DurableLog>>,
+        addr: &str,
+    ) -> std::io::Result<ShardServer> {
         let listener = TcpListener::bind(addr)?;
-        let versioned = Arc::new(VersionedStore::new(store));
         let ingest = Arc::new(Mutex::new(Ingestor::new(Arc::clone(&versioned))));
         Ok(ShardServer {
             listener,
             versioned,
             ingest,
             registry: Arc::new(Registry::new()),
+            log,
             stop: Arc::new(AtomicBool::new(false)),
         })
     }
@@ -93,9 +111,10 @@ impl ShardServer {
             let versioned = Arc::clone(&self.versioned);
             let ingest = Arc::clone(&self.ingest);
             let registry = Arc::clone(&self.registry);
+            let log = self.log.clone();
             std::thread::spawn(move || {
                 // per-connection failures only ever end that connection
-                let _ = serve_conn(stream, &versioned, &ingest, &registry);
+                let _ = serve_conn(stream, &versioned, &ingest, &registry, log.as_ref());
             });
         }
     }
@@ -143,6 +162,7 @@ fn serve_conn(
     versioned: &Arc<VersionedStore>,
     ingest: &Arc<Mutex<Ingestor>>,
     registry: &Arc<Registry>,
+    log: Option<&Arc<DurableLog>>,
 ) -> Result<(), WireError> {
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(Some(IDLE_TIMEOUT)).ok();
@@ -264,7 +284,14 @@ fn serve_conn(
                 }
             }
             Msg::StatsReq { req_id } => {
-                let snap = registry.snapshot();
+                // a durable server's scrape carries its WAL accounting
+                // (wal_appends, wal_fsync_s, recovery gauges) merged in
+                let snap = match log {
+                    Some(l) => {
+                        obs::Snapshot::merge_all([&registry.snapshot(), &l.obs().snapshot()])
+                    }
+                    None => registry.snapshot(),
+                };
                 write_frame(
                     &mut stream,
                     &Msg::StatsReply {

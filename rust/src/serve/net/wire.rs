@@ -495,6 +495,25 @@ fn get_sources(r: &mut R) -> Result<Vec<ServedSource>, WireError> {
     Ok(out)
 }
 
+/// Encode a row batch with the wire codec (count-prefixed rows, every
+/// f64 as its IEEE-754 bits). Shared with the durable WAL
+/// ([`crate::serve::durable`]) so a logged publish payload is
+/// byte-identical to the `Publish` frame that carried it.
+pub(crate) fn encode_sources(rows: &[ServedSource]) -> Vec<u8> {
+    let mut w = W(Vec::with_capacity(4 + rows.len() * MIN_SOURCE));
+    put_sources(&mut w, rows);
+    w.0
+}
+
+/// Decode a batch produced by [`encode_sources`]; every payload byte
+/// must be consumed (trailing garbage is [`WireError::Malformed`]).
+pub(crate) fn decode_sources(bytes: &[u8]) -> Result<Vec<ServedSource>, WireError> {
+    let mut r = R::new(bytes);
+    let rows = get_sources(&mut r)?;
+    r.done()?;
+    Ok(rows)
+}
+
 fn put_reply(w: &mut W, reply: &ShardReply) {
     match reply {
         ShardReply::Sources(v) => {

@@ -1,0 +1,394 @@
+//! Acceptance tests for the durable publish log (`serve::durable`):
+//!
+//! * a real shard-server *process* killed with SIGKILL mid-publish
+//!   restarts from its WAL alone and answers queries byte-identically
+//!   to the last-write-wins mirror at whatever epoch it durably acked;
+//! * compaction's re-split moves only re-keyed ranges through the
+//!   keyed rendezvous placement (the minimal-movement property), and
+//!   shards the re-split never touched stay Arc-shared;
+//! * snapshot edge cases — an empty store, a single-row shard, a shard
+//!   whose key range was widened by ingestion — round-trip losslessly
+//!   through both `snapshot.rs` and a WAL checkpoint.
+
+use std::sync::Arc;
+
+use celeste::prng::Rng;
+use celeste::serve::dist::Placement;
+use celeste::serve::durable::skew;
+use celeste::serve::net::NetConn;
+use celeste::serve::{
+    self, catalog_checksum, execute_on_shard, fuzz_query, Compactor, DriftConfig, DriftGen,
+    DurableLog, Ingestor, ServedSource, Store, VersionedStore,
+};
+
+fn test_store(n: usize, shards: usize, seed: u64) -> Arc<Store> {
+    let snap = serve::snapshot::synthetic(n, seed);
+    Arc::new(Store::build(snap.sources, snap.width, snap.height, shards))
+}
+
+/// Kills children on drop so a failing test cannot leak shard-server
+/// processes past the test run.
+struct Reap(Vec<std::process::Child>);
+
+impl Drop for Reap {
+    fn drop(&mut self) {
+        for c in &mut self.0 {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// Read a shard-server child's announce lines: the optional
+/// 'shard-server recovered ...' report, then the listening line.
+fn read_announce(stdout: std::process::ChildStdout) -> (String, Option<String>) {
+    use std::io::BufRead;
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut recovered = None;
+    for _ in 0..16 {
+        let mut line = String::new();
+        if reader.read_line(&mut line).expect("read announce") == 0 {
+            break;
+        }
+        let line = line.trim();
+        if line.contains("listening on") {
+            let addr = line.rsplit(' ').next().expect("addr token").to_string();
+            assert!(addr.contains(':'), "bad announce line: {line:?}");
+            return (addr, recovered);
+        }
+        if line.starts_with("shard-server recovered") {
+            recovered = Some(line.to_string());
+        }
+    }
+    panic!("shard-server exited before announcing a listening address");
+}
+
+fn announce_field(line: &str, key: &str) -> String {
+    line.split_whitespace()
+        .find_map(|w| w.strip_prefix(&format!("{key}=")))
+        .unwrap_or_else(|| panic!("recovery line missing {key}=: {line:?}"))
+        .to_string()
+}
+
+/// Tentpole acceptance: kill -9 a durable shard-server mid-publish,
+/// restart it with the same --wal-dir, and the recovered catalog is
+/// byte-identical to the last-write-wins mirror at the recovered epoch
+/// — proven twice, by checksum and by per-shard query parity.
+#[test]
+fn kill_nine_mid_publish_recovers_byte_identical_to_the_mirror() {
+    let shards = 6usize;
+    let store = test_store(600, shards, 4071);
+    let (w, h) = (store.width, store.height);
+    let tag = format!("celeste-durable-test-{}", std::process::id());
+    let snap_path = std::env::temp_dir().join(format!("{tag}.json"));
+    let wal_dir = std::env::temp_dir().join(format!("{tag}-wal"));
+    std::fs::remove_dir_all(&wal_dir).ok();
+    serve::snapshot::save(&snap_path, &store).expect("write snapshot");
+
+    // the whole drift stream is generated up front so the mirror's
+    // checksum at *every* epoch is known before the crash happens
+    let mut drift = DriftGen::new(
+        &store.all_sources(),
+        w,
+        h,
+        DriftConfig { batch: 24, seed: 17, ..Default::default() },
+    );
+    let total_epochs = 14u64;
+    let mut batches: Vec<Vec<ServedSource>> = Vec::new();
+    let mut sums = vec![catalog_checksum(drift.mirror())]; // epoch 0
+    for _ in 0..total_epochs {
+        batches.push(drift.next_batch());
+        sums.push(catalog_checksum(drift.mirror()));
+    }
+
+    let exe = env!("CARGO_BIN_EXE_celeste");
+    let mut reap = Reap(Vec::new());
+    let mut child = std::process::Command::new(exe)
+        .arg("shard-server")
+        .arg("--snapshot")
+        .arg(&snap_path)
+        .arg("--wal-dir")
+        .arg(&wal_dir)
+        .args(["--checkpoint-every", "4"])
+        .args(["--shards", &shards.to_string(), "--listen", "127.0.0.1:0"])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn durable shard-server");
+    let stdout = child.stdout.take().expect("piped");
+    reap.0.push(child);
+    let (addr, recovered) = read_announce(stdout);
+    assert!(recovered.is_none(), "a fresh WAL dir must not report a recovery");
+
+    // phase 1: six epochs acked — each ack means fsynced, so all six
+    // MUST survive the kill
+    let conn = NetConn::new(addr);
+    let acked = 6u64;
+    for e in 1..=acked {
+        conn.publish(e, &batches[(e - 1) as usize], None)
+            .unwrap_or_else(|err| panic!("publish epoch {e}: {err}"));
+    }
+    // phase 2: keep publishing from another thread while the main
+    // thread SIGKILLs the process — the canonical mid-publish crash.
+    // Failures here are expected and ignored; acks past `acked` are
+    // durable too, so any recovered epoch in [acked, total] is legal.
+    let publisher = {
+        let batches = batches.clone();
+        let conn = NetConn::new(conn.addr().to_string());
+        std::thread::spawn(move || {
+            for e in (acked + 1)..=total_epochs {
+                if conn
+                    .publish(e, &batches[(e - 1) as usize], Some(std::time::Duration::from_secs(2)))
+                    .is_err()
+                {
+                    break;
+                }
+            }
+        })
+    };
+    std::thread::sleep(std::time::Duration::from_millis(25));
+    reap.0[0].kill().expect("SIGKILL the shard-server");
+    let _ = reap.0[0].wait();
+    publisher.join().expect("publisher thread");
+
+    // restart from the WAL alone: no --snapshot
+    let mut child = std::process::Command::new(exe)
+        .arg("shard-server")
+        .arg("--wal-dir")
+        .arg(&wal_dir)
+        .args(["--checkpoint-every", "4"])
+        .args(["--shards", &shards.to_string(), "--listen", "127.0.0.1:0"])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .expect("restart shard-server");
+    let stdout = child.stdout.take().expect("piped");
+    reap.0.push(child);
+    let (addr, recovered) = read_announce(stdout);
+    let line = recovered.expect("restart must report a WAL recovery");
+    let epoch: u64 = announce_field(&line, "epoch").parse().expect("epoch");
+    let checksum = u64::from_str_radix(&announce_field(&line, "checksum"), 16).expect("checksum");
+    assert!(
+        epoch >= acked && epoch <= total_epochs,
+        "recovered epoch {epoch} must cover every acked epoch (>= {acked})"
+    );
+    assert_eq!(
+        checksum, sums[epoch as usize],
+        "recovered catalog must hash exactly like the mirror at epoch {epoch}"
+    );
+
+    // byte parity the long way: rebuild the reference store by applying
+    // the same deltas in-process, then compare per-shard query replies
+    let versioned = Arc::new(VersionedStore::new(Arc::clone(&store)));
+    let mut ing = Ingestor::new(Arc::clone(&versioned));
+    for b in &batches[..epoch as usize] {
+        ing.apply(b);
+    }
+    let want_head = versioned.load();
+    assert_eq!(want_head.epoch, epoch);
+    let conn = NetConn::new(addr);
+    let mut rng = Rng::new(92);
+    for i in 0..20usize {
+        let q = fuzz_query(&mut rng, w, h, i);
+        for shard in 0..shards {
+            let want = execute_on_shard(&want_head.store.shards[shard], &q);
+            let replies = conn
+                .execute(vec![(shard as u32, vec![q.clone()])], epoch, None)
+                .unwrap_or_else(|e| panic!("query {i} shard {shard}: {e}"));
+            assert_eq!(replies[0][0], want, "query {i} shard {shard}: {q:?}");
+        }
+    }
+    std::fs::remove_file(&snap_path).ok();
+    std::fs::remove_dir_all(&wal_dir).ok();
+}
+
+/// Tentpole acceptance (minimal movement): under sustained hotspot
+/// ingestion the compactor re-splits hot ranges, and the keyed
+/// rendezvous placement moves ONLY ranges whose identifying key
+/// changed — every surviving key keeps its exact replica set. Shards
+/// the re-split never rebuilt stay Arc-shared with the prior epoch.
+#[test]
+fn compaction_moves_only_resplit_ranges_under_keyed_rendezvous() {
+    let store = test_store(500, 8, 1213);
+    let (w, h) = (store.width, store.height);
+    let versioned = Arc::new(VersionedStore::new(Arc::clone(&store)));
+    let mut ing = Ingestor::new(Arc::clone(&versioned));
+    let mut drift = DriftGen::new(
+        &store.all_sources(),
+        w,
+        h,
+        DriftConfig {
+            batch: 60,
+            update_fraction: 0.1,
+            hotspot: 0.95,
+            seed: 31,
+            ..Default::default()
+        },
+    );
+    let threshold = 1.6;
+    let mut compactor = Compactor::new(threshold, 3);
+    let mut fired = false;
+    for _ in 0..60 {
+        ing.apply(&drift.next_batch());
+        if compactor.observe(&versioned.load().store) {
+            fired = true;
+            break;
+        }
+    }
+    assert!(fired, "hotspot ingestion must eventually trip the compactor");
+
+    let before = versioned.load();
+    let skew_before = skew(&before.store);
+    assert!(skew_before > threshold, "trigger implies skew, got {skew_before:.2}");
+    let keys_before: Vec<u64> = before.store.shards.iter().map(|s| s.key_lo).collect();
+
+    let rep = ing.compact(threshold).expect("skewed store must produce a re-split");
+    let after = versioned.load();
+    assert_eq!(after.epoch, before.epoch + 1, "compaction publishes one epoch");
+    assert!(rep.splits >= 1, "at least one hot range splits");
+    assert!(rep.skew_after < rep.skew_before, "compaction must reduce skew");
+    assert_eq!(
+        after.store.all_sources(),
+        before.store.all_sources(),
+        "compaction moves rows between shards, never changes the catalog"
+    );
+    let keys_after: Vec<u64> = after.store.shards.iter().map(|s| s.key_lo).collect();
+    assert_eq!(keys_after.len(), keys_before.len(), "shard count is conserved");
+
+    // the minimal-movement property, across several cluster shapes:
+    // a key present on both sides keeps its exact replica set
+    for (n_nodes, replicas) in [(5usize, 2usize), (7, 3), (9, 2)] {
+        let nodes: Vec<usize> = (0..n_nodes).collect();
+        let p_before = Placement::rendezvous_keyed(&keys_before, n_nodes, &nodes, replicas);
+        let p_after = Placement::rendezvous_keyed(&keys_after, n_nodes, &nodes, replicas);
+        let mut moved = 0usize;
+        for (i, k) in keys_after.iter().enumerate() {
+            match keys_before.iter().position(|kb| kb == k) {
+                Some(j) => assert_eq!(
+                    p_after.replicas_of(i),
+                    p_before.replicas_of(j),
+                    "surviving key {k:#x} must keep its replica set ({n_nodes} nodes)"
+                ),
+                None => moved += 1,
+            }
+        }
+        assert!(moved >= 1, "a re-split mints at least one new key");
+        assert!(
+            moved <= 2 * (rep.splits + rep.merges + rep.absorbed),
+            "moved {moved} ranges, but only {} split(s) {} merge(s) {} absorb(s) happened",
+            rep.splits,
+            rep.merges,
+            rep.absorbed
+        );
+    }
+
+    // copy-on-write discipline: shards the re-split never rebuilt are
+    // the same allocation in both epochs
+    let shared = after
+        .store
+        .shards
+        .iter()
+        .filter(|sa| before.store.shards.iter().any(|sb| Arc::ptr_eq(sa, sb)))
+        .count();
+    assert!(
+        shared >= 1,
+        "a partial re-split must share untouched shards with the prior epoch"
+    );
+}
+
+/// Round-trip one store through `snapshot.rs` (flat jsonlite) and
+/// assert the reloaded catalog is byte-identical.
+fn assert_snapshot_roundtrip(store: &Store, shards: usize, tag: &str) {
+    let path = std::env::temp_dir().join(format!(
+        "celeste-snap-edge-{}-{tag}.json",
+        std::process::id()
+    ));
+    serve::snapshot::save(&path, store).expect("save snapshot");
+    let back = serve::snapshot::load(&path).expect("load snapshot").into_store(shards);
+    assert_eq!(back.all_sources(), store.all_sources(), "{tag}: snapshot must be lossless");
+    assert_eq!(back.width, store.width, "{tag}");
+    assert_eq!(back.height, store.height, "{tag}");
+    std::fs::remove_file(&path).ok();
+}
+
+/// Round-trip a versioned head through a WAL checkpoint (create →
+/// recover) and assert catalog bytes AND per-shard layout survive.
+fn assert_checkpoint_roundtrip(versioned: &Arc<VersionedStore>, tag: &str) {
+    let dir = std::env::temp_dir().join(format!(
+        "celeste-ckpt-edge-{}-{tag}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    let head = versioned.load();
+    {
+        let _log = DurableLog::create(&dir, 0, &head).expect("create checkpoint");
+    }
+    let rec = DurableLog::recover(&dir, 0).expect("recover checkpoint");
+    let back = rec.versioned.load();
+    assert_eq!(back.epoch, head.epoch, "{tag}: checkpoint preserves the epoch");
+    assert_eq!(
+        back.store.all_sources(),
+        head.store.all_sources(),
+        "{tag}: checkpoint must be lossless"
+    );
+    let layout = |s: &Store| -> Vec<(u64, u64, usize)> {
+        s.shards.iter().map(|sh| (sh.key_lo, sh.key_hi, sh.sources.len())).collect()
+    };
+    assert_eq!(
+        layout(&back.store),
+        layout(&head.store),
+        "{tag}: checkpoint preserves the exact shard layout"
+    );
+    assert_eq!(rec.report.records_replayed, 0, "{tag}: a pure checkpoint replays nothing");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Satellite acceptance: the snapshot codec and the WAL checkpoint
+/// both survive the shapes that break naive splitters — an empty
+/// store, a single-row shard, and a shard whose key range ingestion
+/// widened past its original bounds.
+#[test]
+fn snapshot_edge_cases_round_trip_through_snapshot_and_checkpoint() {
+    // empty store: zero sources over several degenerate shards
+    let empty = Store::build(Vec::new(), 64.0, 64.0, 4);
+    assert_eq!(empty.len(), 0);
+    assert_snapshot_roundtrip(&empty, 4, "empty");
+    let v_empty = Arc::new(VersionedStore::new(Arc::new(empty)));
+    assert_checkpoint_roundtrip(&v_empty, "empty");
+
+    // single-row shard: one source, many shards — every shard but one
+    // carries a degenerate key range
+    let snap = serve::snapshot::synthetic(1, 77);
+    let single = Store::build(snap.sources, snap.width, snap.height, 4);
+    assert_eq!(single.len(), 1);
+    assert!(single.shards.iter().any(|s| s.sources.len() == 1));
+    assert_snapshot_roundtrip(&single, 4, "single");
+    let v_single = Arc::new(VersionedStore::new(Arc::new(single)));
+    assert_checkpoint_roundtrip(&v_single, "single");
+
+    // widened key range: ingest fresh detections whose Hilbert keys
+    // fall past the last shard's original key_hi — the edge shard must
+    // absorb them by widening its range
+    let store = test_store(300, 4, 909);
+    let (w, h) = (store.width, store.height);
+    let last = store.shards.len() - 1;
+    let hi_before = store.shards[last].key_hi;
+    let versioned = Arc::new(VersionedStore::new(Arc::clone(&store)));
+    let mut ing = Ingestor::new(Arc::clone(&versioned));
+    let mut drift = DriftGen::new(
+        &store.all_sources(),
+        w,
+        h,
+        DriftConfig { batch: 40, update_fraction: 0.0, seed: 5, ..Default::default() },
+    );
+    for _ in 0..6 {
+        ing.apply(&drift.next_batch());
+    }
+    let head = versioned.load();
+    assert!(
+        head.store.shards[last].key_hi > hi_before
+            || head.store.shards[0].key_lo < store.shards[0].key_lo,
+        "uniform fresh detections must widen an edge shard's key range"
+    );
+    assert_eq!(head.store.all_sources(), drift.mirror_sorted());
+    assert_snapshot_roundtrip(&head.store, 4, "widened");
+    assert_checkpoint_roundtrip(&versioned, "widened");
+}

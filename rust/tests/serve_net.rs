@@ -477,6 +477,77 @@ fn stats_scrape_reports_server_side_counters_and_stages() {
     assert_eq!(snap.gauges.get("applied_epoch"), Some(&0.0));
 }
 
+/// Satellite acceptance: with `--pipeline 2` replies are matched to
+/// their callers by `req_id`, not by arrival order. The mock server
+/// withholds its replies until BOTH in-flight Execute frames have
+/// arrived — a lockstep (depth-1) client would deadlock here — then
+/// answers them in reverse order. Each reply echoes its request's
+/// outer entry count, so a caller that got the other caller's reply
+/// fails the arity assertion immediately.
+#[test]
+fn pipelined_replies_are_matched_by_req_id_not_arrival_order() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().expect("accept");
+        let _ = wire::read_frame(&mut s); // Hello
+        wire::write_frame(
+            &mut s,
+            &Msg::HelloAck { version: wire::VERSION, epoch: 0, n_shards: 4 },
+        )
+        .expect("hello ack");
+        // hold both pipelined requests before answering either
+        let mut held = Vec::new();
+        while held.len() < 2 {
+            match wire::read_frame(&mut s).expect("read execute") {
+                Msg::Execute { req_id, trace_id, entries, .. } => {
+                    held.push((req_id, trace_id, entries));
+                }
+                other => panic!("want Execute, got {other:?}"),
+            }
+        }
+        // answer in REVERSE arrival order: only req_id matching can
+        // route these back to the right callers
+        for (req_id, trace_id, entries) in held.into_iter().rev() {
+            let replies: Vec<Vec<celeste::serve::ShardReply>> =
+                entries.iter().map(|_| Vec::new()).collect();
+            wire::write_frame(
+                &mut s,
+                &Msg::Reply { req_id, trace_id, server_spans: Vec::new(), entries: replies },
+            )
+            .expect("write reply");
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    });
+    let conn = Arc::new(NetConn::with_pipeline(addr.to_string(), 2));
+    assert_eq!(conn.pipeline_depth(), 2);
+    let q = Query::BrightestN { n: 1, filter: SourceFilter::Any };
+    let a = {
+        let conn = Arc::clone(&conn);
+        let q = q.clone();
+        std::thread::spawn(move || {
+            conn.execute(vec![(0, vec![q])], 0, Some(Duration::from_secs(5)))
+        })
+    };
+    let b = {
+        let conn = Arc::clone(&conn);
+        std::thread::spawn(move || {
+            conn.execute(
+                vec![(0, vec![q.clone()]), (1, vec![q])],
+                0,
+                Some(Duration::from_secs(5)),
+            )
+        })
+    };
+    let ra = a.join().expect("caller A").expect("caller A served");
+    let rb = b.join().expect("caller B").expect("caller B served");
+    // the arity fingerprint: A sent 1 shard entry, B sent 2 — swapped
+    // replies would invert these counts (or fail the client's own
+    // shape check and surface as Malformed)
+    assert_eq!(ra.len(), 1, "caller A must get the 1-entry reply");
+    assert_eq!(rb.len(), 2, "caller B must get the 2-entry reply");
+}
+
 /// The `ShardClient` trait adapter: a real socket standing where the
 /// simulated `LocalShard`/`FabricShard` replicas do, returning the
 /// same replies `execute_on_shard` computes.
