@@ -7,7 +7,10 @@
 //! p999 vs p2c-alone, router-tier cache hit rate vs fabric bytes
 //! saved, a failover drill, and live ingestion (read p99 + hit rate
 //! during delta publishes vs quiesced, plus the fresh-read propagation
-//! cost) — all driven through the unified `QueryEngine` stack. Results
+//! cost) — all driven through the unified `QueryEngine` stack. A
+//! windowed-collector pass over the p2c run splits the latency story
+//! into steady-state p99 (median window) vs the worst single window.
+//! Results
 //! are also written to `BENCH_serve.json` so the perf trajectory
 //! accumulates across PRs.
 
@@ -435,6 +438,68 @@ fn main() {
         fo_max_ms
     );
 
+    // --- continuous telemetry: the p2c tier driven with the windowed
+    //     collector sampling the registry + every node each window.
+    //     The full-run aggregate can hide a bad stretch; the gate reads
+    //     steady-state p99 (median window) vs the worst single window,
+    //     so a latency story that only holds on average fails here ---
+    const TL_WINDOWS: f64 = 8.0;
+    let tl_engine = RouterEngine::new(dist_router(&store, Routing::PowerOfTwo));
+    let tl_names: Vec<String> = std::iter::once("local".to_string())
+        .chain((0..DIST_NODES).map(|n| format!("node-{n}")))
+        .collect();
+    let mut tl = serve::Collector::new(
+        serve::CollectorConfig { window_s: DIST_SECS / TL_WINDOWS, ..Default::default() },
+        tl_names,
+    );
+    let tl_drive = {
+        let cfg = LoadGenConfig::scenario("hotspot", 4242).unwrap();
+        let mut gen = LoadGen::new(cfg, w, h);
+        let mut clock = SimClock::new();
+        let scraper = tl_engine.clone();
+        drive_open_loop_with(&tl_engine, &mut clock, &mut gen, DIST_QPS, DIST_SECS, |at| {
+            let mut src = |t: f64| {
+                let mut v = vec![Some(scraper.registry().snapshot())];
+                v.extend(scraper.node_samples(t));
+                v
+            };
+            tl.tick(at, &mut src);
+        })
+    };
+    tl_engine.registry().absorb_drive(&tl_drive);
+    {
+        let scraper = tl_engine.clone();
+        let mut src = |t: f64| {
+            let mut v = vec![Some(scraper.registry().snapshot())];
+            v.extend(scraper.node_samples(t));
+            v
+        };
+        tl.finish(DIST_SECS, &mut src);
+    }
+    let mut tl_p99: Vec<f64> = Vec::new();
+    let mut tl_gapped = 0usize;
+    for win in tl.cluster().windows() {
+        if win.gapped {
+            tl_gapped += 1;
+            continue;
+        }
+        if let Some(h) = win.hists.get("request_latency") {
+            if h.n > 0 {
+                tl_p99.push(h.p99);
+            }
+        }
+    }
+    tl_p99.sort_by(|a, b| a.total_cmp(b));
+    let steady_p99 = pctl(&tl_p99, 0.50);
+    let worst_p99 = tl_p99.last().copied().unwrap_or(0.0);
+    println!(
+        "timeline (p2c, {} window(s)): steady p99={:.3}ms worst-window p99={:.3}ms ({} gapped)",
+        tl.cluster().windows().count(),
+        steady_p99 * 1e3,
+        worst_p99 * 1e3,
+        tl_gapped
+    );
+
     // --- real-socket transport: the identical hotspot query stream
     //     through in-process planning (sim) vs framed TCP to local
     //     shard-server threads, at 1/4/8 servers, wall clock; parity
@@ -506,7 +571,7 @@ fn main() {
         .map(|r| (r.name.as_str(), Value::Num(r.ns_per_iter)))
         .collect();
     let json = obj_pub(vec![
-        ("schema", Value::Str("celeste-bench-serve-v6".to_string())),
+        ("schema", Value::Str("celeste-bench-serve-v7".to_string())),
         ("single_query_ns", obj_pub(single_fields)),
         (
             "scheduler",
@@ -610,6 +675,18 @@ fn main() {
                     "fresh_catchup_stalls",
                     Value::Num(f_rep.stale_waits.n as f64),
                 ),
+            ]),
+        ),
+        (
+            "timeline",
+            obj_pub(vec![
+                ("tier", Value::Str("dist-sim-p2c".to_string())),
+                ("window_ms", Value::Num(DIST_SECS / TL_WINDOWS * 1e3)),
+                ("windows", Value::Num(tl_p99.len() as f64)),
+                ("gapped", Value::Num(tl_gapped as f64)),
+                ("steady_p99_ms", Value::Num(steady_p99 * 1e3)),
+                ("worst_p99_ms", Value::Num(worst_p99 * 1e3)),
+                ("worst_over_steady", Value::Num(worst_p99 / steady_p99.max(1e-12))),
             ]),
         ),
         (

@@ -38,7 +38,7 @@ struct Gate {
     label: &'static str,
 }
 
-const GATES: [Gate; 11] = [
+const GATES: [Gate; 13] = [
     Gate { path: "dist.random_p99_ms", label: "dist hotspot p99 (random routing)" },
     Gate { path: "dist.rr_p99_ms", label: "dist hotspot p99 (round-robin)" },
     Gate { path: "dist.p2c_p99_ms", label: "dist hotspot p99 (p2c)" },
@@ -56,6 +56,12 @@ const GATES: [Gate; 11] = [
         label: "stage p99: shard execute (sim p2c)",
     },
     Gate { path: "stages.per_stage.net_rtt.p99_ms", label: "stage p99: net rtt (sim p2c)" },
+    // Windowed-collector rollup of the same simulated p2c run (schema
+    // v7): the median window pins steady-state p99, the worst window
+    // catches a tail that only shows up in a bad stretch the full-run
+    // aggregate would average away.
+    Gate { path: "timeline.steady_p99_ms", label: "timeline steady-state p99 (median window)" },
+    Gate { path: "timeline.worst_p99_ms", label: "timeline worst-window p99" },
 ];
 
 /// Acceptance booleans that must be true in the fresh run.
@@ -176,6 +182,38 @@ fn check_transport(fresh: &Value, md: &mut String, failures: &mut Vec<String>) {
     }
 }
 
+/// Minimum collector windows the timeline section must close on the
+/// simulated run — fewer means the collector barely ticked and the
+/// steady/worst split is meaningless.
+const TIMELINE_MIN_WINDOWS: f64 = 4.0;
+
+/// Structural checks on the windowed-collector section: enough closed
+/// windows, and zero gaps (nothing is killed in the simulated p2c run,
+/// so any gap means the collector lost a sample it should have had).
+fn check_timeline_section(fresh: &Value, md: &mut String, failures: &mut Vec<String>) {
+    let windows = lookup(fresh, "timeline.windows").and_then(Value::as_f64);
+    let gapped = lookup(fresh, "timeline.gapped").and_then(Value::as_f64);
+    match (windows, gapped) {
+        (Some(w), Some(g)) => {
+            let ok = w >= TIMELINE_MIN_WINDOWS && g == 0.0;
+            if !ok {
+                failures.push(format!(
+                    "timeline closed {w:.0} window(s) with {g:.0} gap(s); want at least \
+                     {TIMELINE_MIN_WINDOWS:.0} windows and zero gaps on the simulated run"
+                ));
+            }
+            md.push_str(&format!(
+                "| timeline windows (gaps) | — | {w:.0} ({g:.0} gapped) | — | {} |\n",
+                if ok { "✅" } else { "❌" }
+            ));
+        }
+        _ => {
+            failures.push("timeline.windows / timeline.gapped missing".to_string());
+            md.push_str("| timeline windows (gaps) | — | **missing** | — | ❌ |\n");
+        }
+    }
+}
+
 fn lookup<'a>(root: &'a Value, path: &str) -> Option<&'a Value> {
     let mut cur = root;
     for part in path.split('.') {
@@ -283,6 +321,7 @@ fn main() -> Result<()> {
     }
     check_scheduler_8w(&fresh, SCHED_8W_SLACK_PCT, &mut md, &mut failures);
     check_transport(&fresh, &mut md, &mut failures);
+    check_timeline_section(&fresh, &mut md, &mut failures);
     for (path, label) in &INFORMATIONAL {
         let got = lookup(&fresh, path).and_then(Value::as_bool);
         md.push_str(&format!(

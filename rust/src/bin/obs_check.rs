@@ -17,7 +17,22 @@
 //!   shard_execute, joined by a non-zero trace id;
 //! * every trace's client spans sum to its end-to-end latency within
 //!   5% — the partition-by-construction invariant the unit tests pin,
-//!   re-checked here on a real multi-process run.
+//!   re-checked here on a real multi-process run;
+//! * with `--timeline`, the continuous-telemetry section exists and
+//!   every row (each node and the cluster fold) *conserves*: evicted
+//!   counter deltas + the per-window deltas sum exactly to the row's
+//!   final counters — a windowed rollup that loses or invents events
+//!   fails here;
+//! * with `--min-windows N` / `--nodes N`, the cluster timeline closed
+//!   at least `N` non-empty windows and exactly `N` node rows exist;
+//! * with `--killed NAME`, that node's row gapped and its health
+//!   verdict flipped to unhealthy — and *no other* node gained a gap
+//!   (the kill was attributed precisely);
+//! * with `--expect-recovered`, the killed node restarted: a
+//!   `recovered` window, `restarts >= 1`, and a flip back to healthy;
+//! * with `--expect-recovery`, the dump carries the WAL recovery
+//!   gauges (`recovered_epoch`, `recovery_replay_ms`) somewhere — the
+//!   recover-bench / restarted-server visibility gate.
 //!
 //! Exit 0 when every asserted condition holds, 1 otherwise (each
 //! failure on stderr).
@@ -28,7 +43,7 @@ use celeste::jsonlite::{self, Value};
 
 /// The dump schema this checker understands (must match
 /// `serve::obs::write_dump`).
-const SCHEMA: &str = "celeste-obs-dump-v1";
+const SCHEMA: &str = "celeste-obs-dump-v2";
 
 /// Client span sums must reproduce end-to-end latency within this
 /// fraction (the acceptance-criteria tolerance).
@@ -44,6 +59,204 @@ fn counter(snapshot: &Value, name: &str) -> f64 {
         .and_then(|c| c.get(name))
         .and_then(Value::as_f64)
         .unwrap_or(0.0)
+}
+
+fn gauge(snapshot: &Value, name: &str) -> Option<f64> {
+    snapshot.get("gauges").and_then(|g| g.get(name)).and_then(Value::as_f64)
+}
+
+/// Sum an object of numeric counters into `acc`.
+fn accumulate(acc: &mut std::collections::BTreeMap<String, u64>, obj: Option<&Value>) {
+    if let Some(map) = obj.and_then(Value::as_obj) {
+        for (k, v) in map {
+            if let Some(n) = v.as_f64() {
+                *acc.entry(k.clone()).or_insert(0) += n as u64;
+            }
+        }
+    }
+}
+
+/// The windowed-rollup conservation invariant on one timeline row:
+/// evicted deltas + every window's deltas == the row's final counters,
+/// key for key, exactly.
+fn check_conservation(row: &Value, failures: &mut Vec<String>) {
+    let name = row.get("node").and_then(Value::as_str).unwrap_or("?");
+    let mut total = std::collections::BTreeMap::new();
+    accumulate(&mut total, row.get("evicted"));
+    if let Some(windows) = row.get("windows").and_then(Value::as_arr) {
+        for w in windows {
+            accumulate(&mut total, w.get("counters"));
+        }
+    }
+    let mut fin = std::collections::BTreeMap::new();
+    accumulate(&mut fin, row.get("final"));
+    if total != fin {
+        let diff: Vec<String> = fin
+            .keys()
+            .chain(total.keys())
+            .filter(|k| total.get(*k) != fin.get(*k))
+            .map(|k| {
+                format!(
+                    "{k}: windows+evicted {} vs final {}",
+                    total.get(k).copied().unwrap_or(0),
+                    fin.get(k).copied().unwrap_or(0)
+                )
+            })
+            .collect();
+        failures.push(format!(
+            "timeline row {name:?} does not conserve: {}",
+            diff.join(", ")
+        ));
+    }
+}
+
+/// A window that carries actual telemetry (not a gap, not empty).
+fn window_is_live(w: &Value) -> bool {
+    let gapped = w.get("gapped").and_then(Value::as_bool).unwrap_or(false);
+    let has = |k: &str| w.get(k).and_then(Value::as_obj).is_some_and(|m| !m.is_empty());
+    !gapped && (has("counters") || has("gauges") || has("hists"))
+}
+
+fn node_row<'a>(timeline: &'a Value, name: &str) -> Option<&'a Value> {
+    timeline
+        .get("nodes")
+        .and_then(Value::as_arr)?
+        .iter()
+        .find(|r| r.get("node").and_then(Value::as_str) == Some(name))
+}
+
+/// Health transitions for `node` that landed on verdict `to`.
+fn health_flips(timeline: &Value, node: &str, to: &str) -> usize {
+    timeline
+        .get("health")
+        .and_then(Value::as_arr)
+        .map(|h| {
+            h.iter()
+                .filter(|t| t.get("node").and_then(Value::as_str) == Some(node))
+                .filter(|t| t.get("to").and_then(Value::as_str) == Some(to))
+                .count()
+        })
+        .unwrap_or(0)
+}
+
+fn check_timeline(
+    dump: &Value,
+    min_windows: usize,
+    nodes: Option<usize>,
+    killed: Option<&str>,
+    expect_recovered: bool,
+    failures: &mut Vec<String>,
+) {
+    let Some(timeline) = dump.get("timeline") else {
+        failures.push(
+            "dump has no `timeline` section; run serve-bench with --collect-ms N".to_string(),
+        );
+        return;
+    };
+    let rows = timeline.get("nodes").and_then(Value::as_arr).unwrap_or(&[]);
+    if rows.is_empty() {
+        failures.push("timeline has no node rows".to_string());
+    }
+    if let Some(n) = nodes {
+        if rows.len() != n {
+            failures.push(format!("timeline has {} node row(s), want {n}", rows.len()));
+        }
+    }
+    for row in rows {
+        check_conservation(row, failures);
+    }
+    match timeline.get("cluster") {
+        Some(cluster) => {
+            check_conservation(cluster, failures);
+            let live = cluster
+                .get("windows")
+                .and_then(Value::as_arr)
+                .map(|ws| ws.iter().filter(|w| window_is_live(w)).count())
+                .unwrap_or(0);
+            if live < min_windows {
+                failures.push(format!(
+                    "cluster timeline has {live} non-empty window(s), want at least \
+                     {min_windows}"
+                ));
+            }
+        }
+        None => failures.push("timeline has no cluster row".to_string()),
+    }
+    if let Some(victim) = killed {
+        match node_row(timeline, victim) {
+            Some(row) => {
+                let gaps = row.get("gaps").and_then(Value::as_f64).unwrap_or(0.0);
+                if gaps <= 0.0 {
+                    failures.push(format!(
+                        "killed node {victim:?} shows no gapped windows; its death was \
+                         invisible to the collector"
+                    ));
+                }
+                if health_flips(timeline, victim, "unhealthy") == 0 {
+                    failures.push(format!(
+                        "killed node {victim:?} never flipped to unhealthy"
+                    ));
+                }
+            }
+            None => failures.push(format!("timeline has no row for killed node {victim:?}")),
+        }
+        for row in rows {
+            let name = row.get("node").and_then(Value::as_str).unwrap_or("?");
+            if name == victim {
+                continue;
+            }
+            let gaps = row.get("gaps").and_then(Value::as_f64).unwrap_or(0.0);
+            if gaps > 0.0 {
+                failures.push(format!(
+                    "node {name:?} gained {gaps:.0} gap(s) but only {victim:?} was killed; \
+                     the kill was misattributed"
+                ));
+            }
+        }
+        if expect_recovered {
+            if let Some(row) = node_row(timeline, victim) {
+                let restarts = row.get("restarts").and_then(Value::as_f64).unwrap_or(0.0);
+                let has_recovered_window = row
+                    .get("windows")
+                    .and_then(Value::as_arr)
+                    .is_some_and(|ws| {
+                        ws.iter().any(|w| {
+                            w.get("recovered").and_then(Value::as_bool).unwrap_or(false)
+                        })
+                    });
+                if restarts <= 0.0 || !has_recovered_window {
+                    failures.push(format!(
+                        "killed node {victim:?} shows no recovered window \
+                         (restarts={restarts:.0}); the restart drill did not fold back in"
+                    ));
+                }
+                if health_flips(timeline, victim, "healthy") == 0 {
+                    failures.push(format!(
+                        "killed node {victim:?} never flipped back to healthy after recovery"
+                    ));
+                }
+            }
+        }
+    } else if expect_recovered {
+        failures.push("--expect-recovered needs --killed NODE to name the victim".to_string());
+    }
+}
+
+/// The recover-bench / restarted-server gate: the WAL recovery gauges
+/// must be reachable somewhere in the dump (front-end metrics or a
+/// scraped server snapshot).
+fn check_recovery_gauges(dump: &Value, failures: &mut Vec<String>) {
+    let metrics = dump.get("metrics");
+    let servers = dump.get("servers").and_then(Value::as_arr).unwrap_or(&[]);
+    let snapshots: Vec<&Value> = metrics.into_iter().chain(servers.iter()).collect();
+    for g in ["recovered_epoch", "recovery_replay_ms"] {
+        if !snapshots.iter().any(|s| gauge(s, g).is_some()) {
+            failures.push(format!(
+                "no snapshot in the dump carries the {g} gauge; the recovery registry \
+                 is not reachable from --obs-dump"
+            ));
+        }
+    }
 }
 
 fn span_sum_ms(spans: &Value) -> f64 {
@@ -121,6 +334,12 @@ fn main() -> Result<()> {
     let mut expect_net = false;
     let mut expect_stale = false;
     let mut min_traces = 0usize;
+    let mut timeline = false;
+    let mut min_windows = 0usize;
+    let mut nodes: Option<usize> = None;
+    let mut killed: Option<String> = None;
+    let mut expect_recovered = false;
+    let mut expect_recovery = false;
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         match a.as_str() {
@@ -134,14 +353,35 @@ fn main() -> Result<()> {
                 Some(Ok(n)) => min_traces = n,
                 _ => bail!("--min-traces needs a non-negative integer"),
             },
+            "--timeline" => timeline = true,
+            "--min-windows" => match args.next().map(|v| v.parse::<usize>()) {
+                Some(Ok(n)) => min_windows = n,
+                _ => bail!("--min-windows needs a non-negative integer"),
+            },
+            "--nodes" => match args.next().map(|v| v.parse::<usize>()) {
+                Some(Ok(n)) => nodes = Some(n),
+                _ => bail!("--nodes needs a non-negative integer"),
+            },
+            "--killed" => match args.next() {
+                Some(v) => killed = Some(v),
+                None => bail!("--killed needs a node name"),
+            },
+            "--expect-recovered" => expect_recovered = true,
+            "--expect-recovery" => expect_recovery = true,
             other => bail!(
                 "unknown argument {other:?} \
-                 (want --dump FILE [--expect-net] [--expect-stale] [--min-traces N])"
+                 (want --dump FILE [--expect-net] [--expect-stale] [--min-traces N] \
+                 [--timeline] [--min-windows N] [--nodes N] [--killed NODE] \
+                 [--expect-recovered] [--expect-recovery])"
             ),
         }
     }
     let Some(dump_path) = dump_path else {
-        bail!("usage: obs_check --dump FILE [--expect-net] [--expect-stale] [--min-traces N]");
+        bail!(
+            "usage: obs_check --dump FILE [--expect-net] [--expect-stale] [--min-traces N] \
+             [--timeline] [--min-windows N] [--nodes N] [--killed NODE] \
+             [--expect-recovered] [--expect-recovery]"
+        );
     };
 
     let text = match std::fs::read_to_string(&dump_path) {
@@ -197,13 +437,33 @@ fn main() -> Result<()> {
         }
     }
     check_traces(&dump, min_traces, &mut failures);
+    if timeline || min_windows > 0 || nodes.is_some() || killed.is_some() || expect_recovered {
+        check_timeline(
+            &dump,
+            min_windows,
+            nodes,
+            killed.as_deref(),
+            expect_recovered,
+            &mut failures,
+        );
+    }
+    if expect_recovery {
+        check_recovery_gauges(&dump, &mut failures);
+    }
 
     let n_traces = dump.get("traces").and_then(Value::as_arr).map_or(0, <[Value]>::len);
+    let n_windows = dump
+        .get("timeline")
+        .and_then(|t| t.get("cluster"))
+        .and_then(|c| c.get("windows"))
+        .and_then(Value::as_arr)
+        .map_or(0, <[Value]>::len);
     println!(
-        "obs_check: {dump_path}: {} server snapshot(s), {} trace(s), \
+        "obs_check: {dump_path}: {} server snapshot(s), {} trace(s), {} cluster window(s), \
          net_frames={:.0}, stale_refusals={:.0}",
         servers.len(),
         n_traces,
+        n_windows,
         counter(metrics, "net_frames"),
         counter(metrics, "net_stale_refusals"),
     );

@@ -143,11 +143,22 @@ USAGE: celeste <command> [flags]
                            overlaps request transmit with server work
            Observability (docs/OBSERVABILITY.md):
            [--obs-dump F]  write a jsonlite metrics + trace dump at
-                           exit (schema celeste-obs-dump-v1). On the
+                           exit (schema celeste-obs-dump-v2). On the
                            tcp transport this also scrapes every live
                            shard server's registry over the wire
                            (StatsReq) and runs a stale-consistency
                            probe whose refusal must round-trip
+           [--collect-ms N] continuous telemetry: close a rollup
+                           window every N ms (per-window counter
+                           deltas, gauge folds, exact p50/p99),
+                           scraping every node each window — live
+                           servers over the wire on tcp, modeled
+                           nodes on sim. Adds per-node + cluster
+                           timelines, health verdicts with
+                           hysteresis, and SLO burn-rate events to
+                           the dump's 'timeline' section; a node
+                           killed by --kill-node shows up as gapped
+                           windows and an unhealthy transition
            [--trace-sample N] keep every Nth request's per-stage span
                            breakdown (distributed tiers; requires
                            --dist-nodes)
@@ -163,6 +174,10 @@ USAGE: celeste <command> [flags]
            [--compact-threshold T] also exercise compaction records
            [--wal-dir D]   log under D (default: a temp dir, removed
                            on success); must be empty
+           [--obs-dump F]  write the write-side WAL registry merged
+                           with the recovery registry (recovered_epoch
+                           and recovery_*_ms gauges, wal_fsync_s) as a
+                           celeste-obs-dump-v2 file
            Ingests P epochs through a durable log, drops the store,
            recovers from disk, and prints the RTO split into
            checkpoint-load vs tail-replay plus 'parity: ok' when the
@@ -180,6 +195,9 @@ USAGE: celeste <command> [flags]
                            'shard-server recovered epoch=E ...' before
                            the listening line
            [--checkpoint-every N] checkpoint cadence      (default 8)
+           On SIGTERM the server exits gracefully: it flushes a final
+           fsynced checkpoint (when --wal-dir is set) and prints a
+           'shard-server terminated ...' status line before exiting
   experiment NAME [--quick]        regenerate a paper table/figure:
            fig1 fig3 fig4 fig5 fig6 ablations table1 newton-vs-lbfgs all
 ";
@@ -397,6 +415,8 @@ fn make_ingest_driver(
 
 /// The observability knobs shared by every serve-bench tier.
 struct ObsOpts {
+    /// `--collect-ms N` converted to seconds (0 = continuous collection off)
+    collect_s: f64,
     /// `--obs-dump FILE`: jsonlite metrics + trace dump path
     dump: Option<String>,
     /// `--trace-sample N`: keep every Nth request's spans (0 = off)
@@ -414,11 +434,63 @@ fn parse_obs(cli: &Cli) -> Result<ObsOpts> {
             cli.flag("slow-ms").unwrap()
         );
     }
+    let collect_ms = cli.flag_parse("collect-ms", 0.0f64);
+    if cli.flag("collect-ms").is_some() && collect_ms <= 0.0 {
+        bail!(
+            "--collect-ms is the telemetry window width and must be a positive number of \
+             milliseconds, got {:?}",
+            cli.flag("collect-ms").unwrap()
+        );
+    }
     Ok(ObsOpts {
+        collect_s: collect_ms * 1e-3,
         dump: cli.flag("obs-dump").map(str::to_string),
         trace_every,
         slow_s: slow_ms * 1e-3,
     })
+}
+
+/// Build the continuous-telemetry collector for one run: `names[0]` is
+/// always the front end ("local"), the rest are the per-node rows.
+fn make_collector(window_s: f64, names: Vec<String>) -> serve::Collector {
+    let cfg = serve::CollectorConfig { window_s, ..Default::default() };
+    serve::Collector::new(cfg, names)
+}
+
+/// Print the collector's end-of-run summary: window count, gaps,
+/// health transitions (the kill-node visibility lines CI greps), and
+/// any SLO burn events.
+fn print_collector_summary(c: &serve::Collector) {
+    let gaps: u64 = (0..c.names().len()).map(|i| c.node_timeline(i).gaps()).sum();
+    println!(
+        "timeline: {} window(s) of {:.0} ms, {} gap(s), {} health transition(s), \
+         {} slo event(s)",
+        c.cluster().len(),
+        c.window_s() * 1e3,
+        gaps,
+        c.transitions().len(),
+        c.slo_events().len()
+    );
+    for t in c.transitions() {
+        println!(
+            "health: {} {} -> {} at window {} (score {:.2})",
+            t.node,
+            t.from.name(),
+            t.to.name(),
+            t.window,
+            t.score
+        );
+    }
+    for e in c.slo_events() {
+        println!(
+            "slo burn: {} window {} fast {:.2}x slow {:.2}x{}",
+            e.series,
+            e.window,
+            e.fast_burn,
+            e.slow_burn,
+            if e.exact { "" } else { " (approx)" }
+        );
+    }
 }
 
 /// One-line per-stage p99 breakdown from a registry snapshot's
@@ -612,6 +684,14 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
     // the single-host tier's unified metrics view: drive + worker-pool
     // reports absorbed per phase, dumped at exit with --obs-dump
     let obs_reg = serve::Registry::new();
+    // continuous telemetry (--collect-ms): one "local" node sampled
+    // from obs_reg each window. Counters land at phase boundaries (the
+    // reports are absorbed at shutdown) but the queue-depth gauge is
+    // live; the finish() window picks up the final counter totals so
+    // the timeline conserves against the dumped registry exactly.
+    let mut collector =
+        (obs.collect_s > 0.0).then(|| make_collector(obs.collect_s, vec!["local".to_string()]));
+    let collect_t0 = std::time::Instant::now();
 
     // --- phase 1: open loop (latency + admission control at --qps).
     //     Admission is a middleware layer now; the server's own queue
@@ -697,6 +777,14 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
                         }
                     }
                 }
+            }
+            if let Some(c) = collector.as_mut() {
+                let mut src = |_t: f64| {
+                    let mut s = obs_reg.snapshot();
+                    s.gauges.insert("queue_depth".to_string(), server.queue_len() as f64);
+                    vec![Some(s)]
+                };
+                c.tick(collect_t0.elapsed().as_secs_f64(), &mut src);
             }
         });
         let report = server.shutdown();
@@ -787,8 +875,16 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
     if let Some(line) = stage_p99_line(&snap) {
         println!("{line}");
     }
+    if let Some(c) = collector.as_mut() {
+        // final partial window: the closed-loop phases' absorbed
+        // counters (and the WAL registry, if one ran) land here, so
+        // the timeline's conservation total equals the dumped metrics
+        let mut src = |_t: f64| vec![Some(snap.clone())];
+        c.finish(collect_t0.elapsed().as_secs_f64(), &mut src);
+        print_collector_summary(c);
+    }
     if let Some(path) = &obs.dump {
-        serve::obs::write_dump(path, &snap, &[], &[])?;
+        serve::obs::write_dump(path, &snap, &[], &[], collector.as_ref())?;
         println!("wrote obs dump {path}");
     }
     Ok(())
@@ -856,6 +952,10 @@ fn cmd_serve_bench_dist(
     let mut obs_snaps: Vec<serve::obs::Snapshot> = Vec::new();
     let mut obs_traces: Vec<serve::TraceRecord> = Vec::new();
     let mut obs_seen = 0u64;
+    // each phase builds a fresh router (fresh registries), so the
+    // timeline restarts with it: the dump carries the last phase's
+    // collector, whose windows conserve against that phase's registry
+    let mut collected: Option<serve::Collector> = None;
     for ingesting in [false, true] {
         if ingesting && ingest_qps <= 0.0 {
             continue;
@@ -889,6 +989,13 @@ fn cmd_serve_bench_dist(
             None
         };
         let publisher = rengine.clone();
+        let mut collector = (obs.collect_s > 0.0).then(|| {
+            let mut names = vec!["local".to_string()];
+            names.extend((0..nodes).map(|n| format!("node-{n}")));
+            make_collector(obs.collect_s, names)
+        });
+        let scraper = rengine.clone();
+        let mut t_last = 0.0f64;
         let mut gen = serve::LoadGen::new(gen_cfg.clone(), store.width, store.height);
         let mut clock = serve::SimClock::new();
         let drive =
@@ -897,6 +1004,15 @@ fn cmd_serve_bench_dist(
                     for rep in d.tick(at) {
                         publisher.publish(at, &rep);
                     }
+                }
+                if let Some(c) = collector.as_mut() {
+                    t_last = at;
+                    let mut src = |t: f64| {
+                        let mut v = vec![Some(scraper.registry().snapshot())];
+                        v.extend(scraper.node_samples(t));
+                        v
+                    };
+                    c.tick(at, &mut src);
                 }
             });
         let report = rengine.dist_report(&drive);
@@ -945,6 +1061,18 @@ fn cmd_serve_bench_dist(
         rengine.registry().absorb_drive(&drive);
         rengine.registry().absorb_metrics(&engine.metrics());
         let snap = rengine.registry().snapshot();
+        if let Some(mut c) = collector.take() {
+            // final partial window after the absorbs, so the timeline
+            // total equals this phase's dumped registry counters
+            let mut src = |t: f64| {
+                let mut v = vec![Some(snap.clone())];
+                v.extend(scraper.node_samples(t));
+                v
+            };
+            c.finish(t_last, &mut src);
+            print_collector_summary(&c);
+            collected = Some(c);
+        }
         if let Some(line) = stage_p99_line(&snap) {
             println!("{line} (simulated)");
         }
@@ -969,7 +1097,7 @@ fn cmd_serve_bench_dist(
     }
     if let Some(path) = &obs.dump {
         let merged = serve::obs::Snapshot::merge_all(&obs_snaps);
-        serve::obs::write_dump(path, &merged, &[], &obs_traces)?;
+        serve::obs::write_dump(path, &merged, &[], &obs_traces, collected.as_ref())?;
         println!("wrote obs dump {path} ({} trace(s))", obs_traces.len());
     }
     Ok(())
@@ -1081,6 +1209,7 @@ fn drive_serve_tcp(
     // --wal-dir each server fsyncs its publishes under its own node dir
     let exe = std::env::current_exe()?;
     let mut addrs: Vec<String> = Vec::new();
+    let mut readers: Vec<std::io::BufReader<std::process::ChildStdout>> = Vec::new();
     for node in 0..nodes {
         let mut cmd = std::process::Command::new(&exe);
         cmd.arg("shard-server")
@@ -1094,8 +1223,9 @@ fn drive_serve_tcp(
         let mut child = cmd.stdout(std::process::Stdio::piped()).spawn()?;
         let stdout = child.stdout.take().expect("stdout is piped");
         children.push(child);
-        let (addr, _) = read_shard_server_announce(stdout)?;
+        let (addr, _, reader) = read_shard_server_announce(stdout)?;
         addrs.push(addr);
+        readers.push(reader);
     }
 
     let net = serve::NetRouterEngine::connect_pipelined(
@@ -1132,6 +1262,17 @@ fn drive_serve_tcp(
         schedule.map(|s| s.events().to_vec()).unwrap_or_default();
     let mut next_event = 0;
     let publisher = net.clone();
+    // continuous telemetry (--collect-ms): the front end is node
+    // "local", each shard server a "server-N" row scraped over the
+    // wire every window. A dead server's failed scrape marks its
+    // connection suspected, so later windows gap instantly.
+    let mut collector = (obs.collect_s > 0.0).then(|| {
+        let mut names = vec!["local".to_string()];
+        names.extend((0..nodes).map(|n| format!("server-{n}")));
+        make_collector(obs.collect_s, names)
+    });
+    let scraper = net.clone();
+    let mut t_last = 0.0f64;
     let mut gen = serve::LoadGen::new(gen_cfg, store.width, store.height);
     let mut clock = serve::WallClock::start();
     let drive = serve::drive_open_loop_with(&engine, &mut clock, &mut gen, qps, secs, |at| {
@@ -1147,6 +1288,15 @@ fn drive_serve_tcp(
             for rep in d.tick(at) {
                 publisher.publish(&rep);
             }
+        }
+        if let Some(c) = collector.as_mut() {
+            t_last = at;
+            let mut src = |_t: f64| {
+                let mut v = vec![Some(scraper.obs_snapshot())];
+                v.extend(scraper.scrape_nodes(std::time::Duration::from_millis(300)));
+                v
+            };
+            c.tick(at, &mut src);
         }
     });
 
@@ -1192,27 +1342,23 @@ fn drive_serve_tcp(
     for line in net.sampler().slow_log() {
         println!("{line}");
     }
-    if let Some(path) = &obs.dump {
-        // the probe proves the stale-refusal path end to end: the
-        // server must refuse a bound one past the head, incrementing
-        // its counter and ours, both of which land in the dump below
-        let refused = net.probe_stale();
-        println!("stale probe: refused={refused}");
-        net.registry().absorb_drive(&drive);
-        let metrics = net.obs_snapshot();
-        let servers = net.scrape();
-        let traces = net.sampler().records();
-        serve::obs::write_dump(path, &metrics, &servers, &traces)?;
-        println!(
-            "wrote obs dump {path} ({} server snapshot(s), {} trace(s))",
-            servers.len(),
-            traces.len()
-        );
+    // fold the drive's disposition counters in before the collector's
+    // final window, so the timeline's conservation total matches the
+    // dumped registry exactly
+    net.registry().absorb_drive(&drive);
+    if let Some(c) = collector.as_mut() {
+        let mut src = |_t: f64| {
+            let mut v = vec![Some(scraper.obs_snapshot())];
+            v.extend(scraper.scrape_nodes(std::time::Duration::from_millis(300)));
+            v
+        };
+        c.finish(t_last, &mut src);
     }
     // crash-recovery drill: when the run was durable and --kill-node
     // took a server down mid-publish, restart it from its WAL alone
     // (no --snapshot) and check byte parity at whatever epoch it
     // durably acked. The CI smoke greps 'recovered_epoch=.* parity=ok'.
+    let mut recovered_snaps: Vec<serve::obs::Snapshot> = Vec::new();
     if let (Some(dir), Some(ev)) = (&wal_dir, events.first()) {
         let node_dir = dir.join(format!("node-{}", ev.node));
         let mut cmd = std::process::Command::new(&exe);
@@ -1223,7 +1369,8 @@ fn drive_serve_tcp(
         let mut child = cmd.stdout(std::process::Stdio::piped()).spawn()?;
         let stdout = child.stdout.take().expect("stdout is piped");
         children.push(child);
-        let (_, recovered) = read_shard_server_announce(stdout)?;
+        let (addr, recovered, reader) = read_shard_server_announce(stdout)?;
+        readers.push(reader);
         let line = recovered.ok_or_else(|| {
             anyhow::anyhow!("restarted shard-server did not report a WAL recovery")
         })?;
@@ -1246,6 +1393,70 @@ fn drive_serve_tcp(
                 want.map(|w| format!("{w:016x}"))
             );
         }
+        // fold the restarted server back into the telemetry: its
+        // scrape (registry + WAL recovery gauges: recovered_epoch,
+        // recovery_*_ms) opens a `recovered` window on its timeline
+        // and flips the health verdict back without hysteresis
+        match serve::net::scrape_addr(&addr, std::time::Duration::from_millis(500)) {
+            Ok(s) => {
+                if let Some(c) = collector.as_mut() {
+                    c.record_recovery(ev.node + 1, s.clone());
+                }
+                recovered_snaps.push(s);
+            }
+            Err(e) => println!("restarted shard-server scrape failed: {e}"),
+        }
+    }
+    if let Some(c) = &collector {
+        print_collector_summary(c);
+    }
+    if let Some(path) = &obs.dump {
+        // the probe proves the stale-refusal path end to end: the
+        // server must refuse a bound one past the head, incrementing
+        // its counter and ours, both of which land in the dump below
+        let refused = net.probe_stale();
+        println!("stale probe: refused={refused}");
+        let metrics = net.obs_snapshot();
+        let mut servers = net.scrape();
+        servers.extend(recovered_snaps);
+        let traces = net.sampler().records();
+        serve::obs::write_dump(path, &metrics, &servers, &traces, collector.as_ref())?;
+        println!(
+            "wrote obs dump {path} ({} server snapshot(s), {} trace(s))",
+            servers.len(),
+            traces.len()
+        );
+    }
+    // graceful-shutdown drill: SIGTERM every surviving server. Each
+    // polls the flag in its accept loop, flushes (a final fsynced
+    // checkpoint under --wal-dir), prints its terminal status line —
+    // forwarded here, CI greps 'shard-server terminated' — and exits.
+    let mut terminated = 0usize;
+    for (child, reader) in children.iter_mut().zip(readers.iter_mut()) {
+        if child.try_wait()?.is_some() {
+            continue; // killed by --kill-node, already reaped below
+        }
+        if !serve::net::signal::send_term(child.id()) {
+            continue; // undeliverable: the hard-kill backstop reaps it
+        }
+        use std::io::BufRead;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 {
+                break;
+            }
+            let trimmed = line.trim();
+            if trimmed.starts_with("shard-server terminated") {
+                println!("{trimmed}");
+                terminated += 1;
+                break;
+            }
+        }
+        let _ = child.wait();
+    }
+    if terminated > 0 {
+        println!("graceful shutdown: {terminated} server(s) flushed and exited");
     }
     // the CI smoke greps this exact line: replication must absorb the
     // scheduled kills with nothing lost
@@ -1255,11 +1466,14 @@ fn drive_serve_tcp(
 
 /// Read a freshly spawned shard-server's announce lines: an optional
 /// 'shard-server recovered ...' report, then
-/// 'shard-server listening on ADDR'. Returns the address and the
-/// recovery line, if one was printed.
+/// 'shard-server listening on ADDR'. Returns the address, the
+/// recovery line (if one was printed), and the reader itself — the
+/// parent keeps it open so the child's terminal status line after a
+/// graceful SIGTERM can be read back (and so the child's stdout pipe
+/// never closes under it mid-print).
 fn read_shard_server_announce(
     stdout: std::process::ChildStdout,
-) -> Result<(String, Option<String>)> {
+) -> Result<(String, Option<String>, std::io::BufReader<std::process::ChildStdout>)> {
     use std::io::BufRead;
     let mut reader = std::io::BufReader::new(stdout);
     let mut recovered = None;
@@ -1273,7 +1487,7 @@ fn read_shard_server_announce(
             let addr = line.rsplit(' ').next().filter(|a| a.contains(':')).ok_or_else(|| {
                 anyhow::anyhow!("shard-server announced no address (got {line:?})")
             })?;
-            return Ok((addr.to_string(), recovered));
+            return Ok((addr.to_string(), recovered, reader));
         }
         if line.starts_with("shard-server recovered") {
             recovered = Some(line.to_string());
@@ -1342,7 +1556,17 @@ fn cmd_shard_server(cli: &Cli) -> Result<()> {
     println!("shard-server listening on {}", server.local_addr());
     use std::io::Write;
     std::io::stdout().flush().ok();
-    server.run();
+    // graceful SIGTERM: the accept loop polls the flag, flushes a
+    // final fsynced checkpoint (when a WAL is attached), and reports
+    // what it flushed before exiting — the parent forwards this line
+    serve::net::signal::install_term_handler();
+    if let Some(rep) = server.run_graceful(serve::net::signal::term_requested) {
+        println!(
+            "shard-server terminated epoch={} frames={} stale_refusals={} wal_synced={}",
+            rep.epoch, rep.frames, rep.stale_refusals, rep.wal_synced
+        );
+        std::io::stdout().flush().ok();
+    }
     Ok(())
 }
 
@@ -1468,6 +1692,15 @@ fn cmd_recover_bench(cli: &Cli) -> Result<()> {
     );
     let ok = r.recovered_epoch == final_epoch && r.checksum == want;
     println!("parity: {}", if ok { "ok" } else { "MISMATCH" });
+    if let Some(path) = cli.flag("obs-dump") {
+        // the write-side WAL accounting (wal_appends, wal_fsync_s)
+        // merged with the recovery registry's gauges (recovered_epoch,
+        // recovery_checkpoint_load_ms, recovery_replay_ms) — the same
+        // v2 schema obs_check validates
+        let merged = serve::obs::Snapshot::merge_all([&ws, &rec.log.obs().snapshot()]);
+        serve::obs::write_dump(path, &merged, &[], &[], None)?;
+        println!("wrote obs dump {path}");
+    }
     if ephemeral {
         std::fs::remove_dir_all(&wal_dir).ok();
     }

@@ -246,6 +246,19 @@ impl Router {
         Arc::clone(self.history.last().expect("history is never empty"))
     }
 
+    /// Is `node` alive as of the last applied failure-schedule step?
+    /// (The schedule advances with traffic — a scheduled kill is
+    /// reflected here from the first request at or after its time.)
+    pub fn node_alive(&self, node: usize) -> bool {
+        self.alive[node]
+    }
+
+    /// Telemetry view of the replication watermark: the newest epoch
+    /// `node` has applied by simulated time `t`.
+    pub fn node_applied_epoch(&self, node: usize, t: f64) -> u64 {
+        self.applied_epoch(node, t)
+    }
+
     /// Ship a freshly published epoch to the replica tier at simulated
     /// time `now`. `touched` is the ingest report's (shard, delta rows)
     /// list: every node hosting a touched replica receives that shard's

@@ -15,8 +15,8 @@ use std::time::Instant;
 
 use crate::serve::dist::{DistReport, Router};
 use crate::serve::ingest::{EpochStore, IngestReport, StoreSource, VersionedStore};
-use crate::serve::obs::{Registry, TraceRecord, TraceSampler};
-use crate::serve::query::{execute, execute_scan};
+use crate::serve::obs::{self, Histogram, Registry, TraceRecord, TraceSampler};
+use crate::serve::query::{execute, execute_scan, N_QUERY_CLASSES, QUERY_CLASSES};
 use crate::serve::server::Server;
 use crate::serve::store::{ServedSource, Store};
 
@@ -160,6 +160,10 @@ pub struct RouterEngine {
     router: Arc<Mutex<Router>>,
     registry: Arc<Registry>,
     sampler: Arc<TraceSampler>,
+    /// End-to-end latency histograms fed per request (merged + per
+    /// class) — the continuous collector's windowed p50/p99 source.
+    lat_all: Histogram,
+    lat_class: [Histogram; N_QUERY_CLASSES],
     desc: String,
 }
 
@@ -172,10 +176,16 @@ impl RouterEngine {
             router.placement.replicas,
             router.placement.n_shards()
         );
+        let registry = Arc::new(Registry::new());
+        let lat_all = registry.histogram("request_latency");
+        let lat_class = QUERY_CLASSES
+            .map(|c| registry.histogram(&format!("request_latency_{}", c.name())));
         RouterEngine {
             router: Arc::new(Mutex::new(router)),
-            registry: Arc::new(Registry::new()),
+            registry,
             sampler: Arc::new(TraceSampler::new()),
+            lat_all,
+            lat_class,
             desc,
         }
     }
@@ -213,6 +223,30 @@ impl RouterEngine {
     pub fn dist_report(&self, drive: &DriveReport) -> DistReport {
         self.router.lock().unwrap().report(drive)
     }
+
+    /// One telemetry snapshot per simulated node at simulated time
+    /// `now`, for the continuous collector: cumulative served count,
+    /// busy seconds, and the applied epoch. A node the router knows to
+    /// be dead samples `None` (→ gapped window); liveness advances
+    /// with traffic, so a scheduled kill becomes visible at the first
+    /// request after it.
+    pub fn node_samples(&self, now: f64) -> Vec<Option<obs::Snapshot>> {
+        self.with_router(|r| {
+            (0..r.n_nodes())
+                .map(|n| {
+                    if !r.node_alive(n) {
+                        return None;
+                    }
+                    let mut s = obs::Snapshot::default();
+                    s.counters.insert("node_served".to_string(), r.served_per_node[n]);
+                    s.gauges.insert("node_busy_s".to_string(), r.busy_per_node[n]);
+                    s.gauges
+                        .insert("applied_epoch".to_string(), r.node_applied_epoch(n, now) as f64);
+                    Some(s)
+                })
+                .collect()
+        })
+    }
 }
 
 impl QueryEngine for RouterEngine {
@@ -240,6 +274,9 @@ impl QueryEngine for RouterEngine {
         };
         drop(r);
         self.registry.record_spans(&spans);
+        let total = done - req.at;
+        self.lat_all.record(total);
+        self.lat_class[req.query.class().index()].record(total);
         if self.sampler.enabled() {
             self.sampler.observe(TraceRecord {
                 trace_id: req.trace_id,

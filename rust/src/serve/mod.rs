@@ -76,7 +76,10 @@ pub use ingest::{
 };
 pub use loadgen::{fuzz_query, LoadGen, LoadGenConfig, QueryMix};
 pub use net::{NetRouterEngine, NetShardClient, ShardServer};
-pub use obs::{Registry, SpanSet, Stage, TraceRecord, TraceSampler};
+pub use obs::{
+    Collector, CollectorConfig, GaugeKind, HealthConfig, Registry, SloTarget, SpanSet, Stage,
+    Timeline, TraceRecord, TraceSampler, Verdict,
+};
 pub use query::{
     cross_match_catalog, execute, execute_on_shard, execute_scan, merge_replies, plan_shards,
     MatchResult, Query, QueryClass, QueryResult, ShardReply, SourceFilter, N_QUERY_CLASSES,

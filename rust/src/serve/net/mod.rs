@@ -24,14 +24,32 @@
 //! child processes and drives this tier wall-clock; `--transport sim`
 //! (the default) keeps the simulated fabric. See `docs/WIRE.md` for the
 //! wire layout and `README.md` for the flag matrix.
+//!
+//! Shutdown is graceful: [`signal`] flips a flag on SIGTERM and
+//! [`ShardServer::run_graceful`] flushes a final checkpoint + terminal
+//! stats line before the process exits, so the last acked epoch is on
+//! disk even when the parent tears the fleet down.
 
 pub mod client;
 pub mod server;
+pub mod signal;
 pub mod wire;
 
 mod router;
 
 pub use client::{NetConn, NetShardClient, WireTimes};
 pub use router::NetRouterEngine;
-pub use server::{ShardServer, ShardServerHandle};
+pub use server::{ShardServer, ShardServerHandle, TermReport};
 pub use wire::{ErrorCode, Msg, WireError};
+
+use std::time::Duration;
+
+use crate::serve::obs;
+
+/// One-shot stats scrape of a shard server at `addr`: fresh
+/// connection, `StatsReq`, snapshot back. The collector uses this to
+/// fold a restarted server (whose long-lived [`NetConn`] died with the
+/// old process) back into its timeline.
+pub fn scrape_addr(addr: &str, timeout: Duration) -> Result<obs::Snapshot, WireError> {
+    NetConn::new(addr.to_string()).scrape(Some(timeout))
+}

@@ -175,6 +175,53 @@ impl NetRouterEngine {
             .collect()
     }
 
+    /// Per-node scrape for the continuous collector: one entry per
+    /// server, in node order, `None` for a server that is suspected or
+    /// fails the scrape (a failed scrape is a failed round trip, so it
+    /// marks the server suspected like any other). Successful samples
+    /// are augmented with this side's per-connection wire counters
+    /// (`conn_io_errors` / `conn_timeouts` / `conn_reconnects`) — the
+    /// health model's error and reconnect signals — and the bytes this
+    /// front end moved to that server.
+    pub fn scrape_nodes(&self, deadline: Duration) -> Vec<Option<obs::Snapshot>> {
+        let inner = &*self.inner;
+        inner
+            .conns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                if inner.suspected[i].load(Ordering::SeqCst) {
+                    return None;
+                }
+                match c.scrape(Some(deadline)) {
+                    Ok(mut snap) => {
+                        snap.counters.insert(
+                            "conn_io_errors".to_string(),
+                            c.io_errors.load(Ordering::Relaxed),
+                        );
+                        snap.counters.insert(
+                            "conn_timeouts".to_string(),
+                            c.timeouts.load(Ordering::Relaxed),
+                        );
+                        snap.counters.insert(
+                            "conn_reconnects".to_string(),
+                            c.reconnects.load(Ordering::Relaxed),
+                        );
+                        snap.counters.insert(
+                            "conn_bytes_sent".to_string(),
+                            c.bytes_sent.load(Ordering::Relaxed),
+                        );
+                        Some(snap)
+                    }
+                    Err(_) => {
+                        inner.suspected[i].store(true, Ordering::SeqCst);
+                        None
+                    }
+                }
+            })
+            .collect()
+    }
+
     /// Send one deliberately-too-fresh execute (consistency bound one
     /// past the mirror's head) to the first live server. The server
     /// must refuse it as `Stale`, which increments both its
@@ -417,6 +464,11 @@ impl QueryEngine for NetRouterEngine {
                 spans.add(Stage::NetRtt, seg - spans.get(Stage::Encode) - spans.get(Stage::Decode));
                 spans.add(Stage::Merge, total_s - scatter_end_s);
                 self.inner.registry.record_spans(&spans);
+                self.inner.registry.histogram("request_latency").record(total_s);
+                self.inner
+                    .registry
+                    .histogram(&format!("request_latency_{}", req.query.class().name()))
+                    .record(total_s);
                 if self.inner.sampler.enabled() {
                     self.inner.sampler.observe(TraceRecord {
                         trace_id: req.trace_id,

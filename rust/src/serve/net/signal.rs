@@ -1,0 +1,99 @@
+//! SIGTERM plumbing for shard-server processes — graceful shutdown
+//! without a libc dependency.
+//!
+//! The handler is the only async-signal-safe thing a handler can be: a
+//! relaxed store to a process-global atomic flag. The graceful accept
+//! loop ([`super::ShardServer::run_graceful`]) polls the flag between
+//! accepts and, once set, flushes a final checkpoint + stats frame
+//! before the process exits. The parent sends the signal through
+//! [`send_term`], so the whole drill works on a stock container: no
+//! external crates, just the three POSIX calls declared here.
+//!
+//! On non-unix targets everything degrades to a no-op: [`send_term`]
+//! reports failure and the caller falls back to a hard kill.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// POSIX `SIGTERM` — the polite "finish up and exit" signal.
+pub const SIGTERM: i32 = 15;
+
+static TERM_REQUESTED: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" {
+    fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    fn kill(pid: i32, sig: i32) -> i32;
+    fn raise(sig: i32) -> i32;
+}
+
+#[cfg(unix)]
+extern "C" fn on_term(_sig: i32) {
+    // async-signal-safe: nothing but an atomic store
+    TERM_REQUESTED.store(true, Ordering::Relaxed);
+}
+
+/// Install the process-global SIGTERM handler. Call once, early, from
+/// the shard-server entry point; later calls are harmless (they
+/// re-install the same handler).
+pub fn install_term_handler() {
+    #[cfg(unix)]
+    unsafe {
+        signal(SIGTERM, on_term);
+    }
+}
+
+/// Has a SIGTERM arrived since [`install_term_handler`]? Sticky until
+/// [`reset_term`].
+pub fn term_requested() -> bool {
+    TERM_REQUESTED.load(Ordering::Relaxed)
+}
+
+/// Clear the termination flag (tests share one process, so each
+/// graceful-shutdown test resets before raising).
+pub fn reset_term() {
+    TERM_REQUESTED.store(false, Ordering::Relaxed);
+}
+
+/// Send SIGTERM to another process. Returns `false` if the signal
+/// could not be delivered (dead pid, or a non-unix host) — callers
+/// fall back to a hard kill.
+pub fn send_term(pid: u32) -> bool {
+    #[cfg(unix)]
+    {
+        unsafe { kill(pid as i32, SIGTERM) == 0 }
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = pid;
+        false
+    }
+}
+
+/// Deliver SIGTERM to this process (exercises the installed handler
+/// in-process; used by the graceful-shutdown tests).
+pub fn raise_term() -> bool {
+    #[cfg(unix)]
+    {
+        unsafe { raise(SIGTERM) == 0 }
+    }
+    #[cfg(not(unix))]
+    {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handler_flips_the_flag_on_raise() {
+        install_term_handler();
+        reset_term();
+        assert!(!term_requested());
+        assert!(raise_term(), "raise(SIGTERM) should succeed on unix");
+        assert!(term_requested(), "handler must set the flag");
+        reset_term();
+        assert!(!term_requested());
+    }
+}

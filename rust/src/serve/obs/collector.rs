@@ -1,0 +1,498 @@
+//! The continuous collection loop: per-node cumulative snapshots in,
+//! per-node + cluster [`Timeline`]s, health transitions, and SLO burn
+//! events out.
+//!
+//! A [`Collector`] owns one [`Timeline`] per node plus a cluster fold.
+//! The *driver* ticks it — from the open-loop driver's
+//! `before_arrival` hook on both tiers, so collection runs on the same
+//! [`Clock`](crate::serve::engine::Clock) as the load: simulated time
+//! on the sim tier (byte-identical timelines across fixed-seed runs),
+//! wall time over real sockets. Each tick closes every window the
+//! clock has passed; a window close pulls one sample per node from the
+//! [`StatsSource`] — the local registry snapshot, a wire `StatsReq`
+//! scrape per shard server, or the sim router's per-node view. A node
+//! that fails to sample (dead, restarting, suspected) yields `None`
+//! and its window is marked **gapped** — the collection loop never
+//! fails because a node did.
+//!
+//! The cluster fold sums counters and merges histograms over each
+//! node's *last known* cumulative snapshot (a dead node's contribution
+//! is frozen, not dropped — cluster counters stay monotone through a
+//! kill), and folds gauges under the explicit per-name
+//! [`GaugeKind`](super::timeseries::GaugeKind) rule: applied epochs
+//! take the min, queue depths the sum.
+
+use std::collections::BTreeMap;
+
+use crate::jsonlite::Value;
+use crate::metrics::Stats;
+
+use super::health::{score, HealthConfig, HealthInputs, HealthTracker, Verdict};
+use super::slo::{SliSample, SloEvaluator, SloEvent, SloKind, SloTarget};
+use super::timeseries::{fold_gauges, Timeline, Window};
+use super::Snapshot;
+
+/// Counters that count as request failures for the error-rate SLO.
+const ERROR_COUNTERS: [&str; 5] =
+    ["conn_io_errors", "conn_timeouts", "net_failed", "router_failed", "drive_failed"];
+
+/// One sample per node per window close. `None` = the node could not
+/// be sampled (dead / restarting / suspected) → gapped window.
+pub trait StatsSource {
+    fn sample(&mut self, now: f64) -> Vec<Option<Snapshot>>;
+}
+
+impl<F: FnMut(f64) -> Vec<Option<Snapshot>>> StatsSource for F {
+    fn sample(&mut self, now: f64) -> Vec<Option<Snapshot>> {
+        self(now)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct CollectorConfig {
+    /// Window width, in the driving clock's seconds.
+    pub window_s: f64,
+    /// Ring bound per timeline (evicted counter deltas are folded into
+    /// the conservation total, never lost).
+    pub max_windows: usize,
+    pub health: HealthConfig,
+    pub targets: Vec<SloTarget>,
+    /// Trailing windows pooled into the slow burn rate.
+    pub slow_windows: usize,
+}
+
+impl Default for CollectorConfig {
+    fn default() -> CollectorConfig {
+        CollectorConfig {
+            window_s: 0.25,
+            max_windows: 512,
+            health: HealthConfig::default(),
+            targets: SloTarget::defaults(),
+            slow_windows: 6,
+        }
+    }
+}
+
+/// A recorded verdict flip.
+#[derive(Clone, Debug)]
+pub struct HealthTransition {
+    pub node: String,
+    pub window: u64,
+    pub from: Verdict,
+    pub to: Verdict,
+    pub score: f64,
+}
+
+impl HealthTransition {
+    pub fn to_json(&self) -> Value {
+        let mut o = BTreeMap::new();
+        o.insert("node".to_string(), Value::Str(self.node.clone()));
+        o.insert("window".to_string(), Value::Num(self.window as f64));
+        o.insert("from".to_string(), Value::Str(self.from.name().to_string()));
+        o.insert("to".to_string(), Value::Str(self.to.name().to_string()));
+        o.insert("score".to_string(), Value::Num(self.score));
+        Value::Obj(o)
+    }
+}
+
+pub struct Collector {
+    cfg: CollectorConfig,
+    names: Vec<String>,
+    nodes: Vec<Timeline>,
+    cluster: Timeline,
+    /// Last known cumulative snapshot per node — the cluster fold's
+    /// input, frozen (not dropped) while a node is down.
+    carried: Vec<Option<Snapshot>>,
+    prev_busy: Vec<Option<f64>>,
+    trackers: Vec<HealthTracker>,
+    transitions: Vec<HealthTransition>,
+    slo: SloEvaluator,
+    next_window: u64,
+}
+
+impl Collector {
+    pub fn new(cfg: CollectorConfig, names: Vec<String>) -> Collector {
+        let n = names.len();
+        let slo = SloEvaluator::new(cfg.targets.clone(), cfg.slow_windows);
+        Collector {
+            nodes: (0..n).map(|_| Timeline::new(cfg.max_windows)).collect(),
+            cluster: Timeline::new(cfg.max_windows),
+            carried: vec![None; n],
+            prev_busy: vec![None; n],
+            trackers: vec![HealthTracker::new(); n],
+            transitions: Vec::new(),
+            slo,
+            next_window: 0,
+            cfg,
+            names,
+        }
+    }
+
+    pub fn window_s(&self) -> f64 {
+        self.cfg.window_s
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn windows_closed(&self) -> u64 {
+        self.next_window
+    }
+
+    pub fn node_timeline(&self, i: usize) -> &Timeline {
+        &self.nodes[i]
+    }
+
+    pub fn cluster(&self) -> &Timeline {
+        &self.cluster
+    }
+
+    pub fn transitions(&self) -> &[HealthTransition] {
+        &self.transitions
+    }
+
+    pub fn slo_events(&self) -> &[SloEvent] {
+        self.slo.events()
+    }
+
+    pub fn verdict(&self, node: usize) -> Verdict {
+        self.trackers[node].verdict()
+    }
+
+    /// Close every window the clock has fully passed. Call from the
+    /// driver's `before_arrival` hook (or any periodic point on the
+    /// driving clock).
+    pub fn tick(&mut self, now: f64, source: &mut dyn StatsSource) {
+        while ((self.next_window + 1) as f64) * self.cfg.window_s <= now {
+            let samples = source.sample(now);
+            self.close_window(samples);
+        }
+    }
+
+    /// Close any remaining due windows plus one final (possibly
+    /// partial) window, so counters absorbed right up to the end of
+    /// the run land in the timeline and conservation against the final
+    /// registry totals is exact.
+    pub fn finish(&mut self, now: f64, source: &mut dyn StatsSource) {
+        self.tick(now, source);
+        let samples = source.sample(now);
+        self.close_window(samples);
+    }
+
+    /// A killed node answered a scrape after being restarted: append a
+    /// `recovered` window from its fresh registry (its previous
+    /// incarnation's totals are retired into the conservation base)
+    /// and flip its verdict back to healthy, bypassing hysteresis.
+    pub fn record_recovery(&mut self, node: usize, snap: Snapshot) {
+        let index = self.next_window;
+        self.nodes[node].observe_recovered(index, snap);
+        let win = self.nodes[node].latest().cloned().unwrap_or_default();
+        let inputs = self.health_inputs(node, &win, f64::NEG_INFINITY);
+        let s = score(&self.cfg.health, &inputs);
+        if let Some((from, to)) = self.trackers[node].recover() {
+            self.transitions.push(HealthTransition {
+                node: self.names[node].clone(),
+                window: index,
+                from,
+                to,
+                score: s,
+            });
+        }
+    }
+
+    fn close_window(&mut self, samples: Vec<Option<Snapshot>>) {
+        assert_eq!(samples.len(), self.names.len(), "source must sample every node");
+        let index = self.next_window;
+        self.next_window += 1;
+
+        // freshest applied epoch this tick — per-node lag is measured
+        // against it, not against an absolute the collector can't know
+        let max_applied = samples
+            .iter()
+            .flatten()
+            .filter_map(|s| s.gauges.get("applied_epoch"))
+            .fold(f64::NEG_INFINITY, |a, &b| a.max(b));
+
+        for (n, sample) in samples.into_iter().enumerate() {
+            if let Some(s) = &sample {
+                self.carried[n] = Some(s.clone());
+            }
+            self.nodes[n].observe(index, sample);
+            let win = self.nodes[n].latest().cloned().unwrap_or_default();
+            let inputs = self.health_inputs(n, &win, max_applied);
+            let s = score(&self.cfg.health, &inputs);
+            if let Some((from, to)) = self.trackers[n].observe(&self.cfg.health, s) {
+                self.transitions.push(HealthTransition {
+                    node: self.names[n].clone(),
+                    window: index,
+                    from,
+                    to,
+                    score: s,
+                });
+            }
+        }
+
+        // cluster fold over last-known cumulative snapshots
+        let parts: Vec<&Snapshot> = self.carried.iter().flatten().collect();
+        if parts.is_empty() {
+            self.cluster.observe(index, None);
+            return;
+        }
+        let mut cum = Snapshot::merge_all(parts.iter().copied());
+        cum.gauges = fold_gauges(parts.iter().copied());
+        // SLI measurement needs the previous cluster cumulative —
+        // compute before the fold is committed to the timeline
+        let slis = self.measure_slis(&cum);
+        self.cluster.observe(index, Some(cum));
+        self.slo.observe(index, &slis);
+    }
+
+    fn health_inputs(&mut self, n: usize, win: &Window, max_applied: f64) -> HealthInputs {
+        if win.gapped {
+            return HealthInputs { gapped: true, ..Default::default() };
+        }
+        let g = |k: &str| win.gauges.get(k).copied();
+        let c = |k: &str| win.counters.get(k).copied().unwrap_or(0) as f64;
+        let busy_now = g("node_busy_s");
+        let busy_frac = match (busy_now, self.prev_busy[n]) {
+            (Some(b), Some(p)) => ((b - p) / self.cfg.window_s).clamp(0.0, 1.0),
+            _ => 0.0,
+        };
+        if busy_now.is_some() {
+            self.prev_busy[n] = busy_now;
+        }
+        let epoch_lag = match g("applied_epoch") {
+            Some(a) if max_applied.is_finite() => (max_applied - a).max(0.0),
+            _ => 0.0,
+        };
+        let total = c("net_frames").max(c("node_served")).max(1.0);
+        HealthInputs {
+            gapped: false,
+            queue_depth: g("queue_depth").unwrap_or(0.0),
+            busy_frac,
+            epoch_lag,
+            error_rate: (c("conn_io_errors") + c("conn_timeouts")) / total,
+            stale_rate: c("stale_refusals") / total,
+            reconnects: c("conn_reconnects"),
+        }
+    }
+
+    fn measure_slis(&self, cum: &Snapshot) -> Vec<SliSample> {
+        let prev = self.cluster.last_snapshot();
+        let mut out = Vec::new();
+        for (ti, t) in self.slo.targets().iter().enumerate() {
+            match &t.kind {
+                SloKind::LatencyOver { threshold_s } => {
+                    let class_prefix = format!("{}_", t.hist);
+                    for (h, st) in &cum.histograms {
+                        let series = if *h == t.hist {
+                            t.name.clone()
+                        } else if let Some(cls) = h.strip_prefix(&class_prefix) {
+                            format!("{}:{}", t.name, cls)
+                        } else {
+                            continue;
+                        };
+                        let prev_st = prev.and_then(|p| p.histograms.get(h));
+                        let (bad, total, exact) = count_over(st, prev_st, *threshold_s);
+                        out.push(SliSample { target: ti, series, bad, total, exact });
+                    }
+                }
+                SloKind::ErrorRate => {
+                    let prev_c =
+                        |k: &str| prev.and_then(|p| p.counters.get(k)).copied().unwrap_or(0);
+                    let bad: u64 = ERROR_COUNTERS
+                        .iter()
+                        .map(|k| cum.counter(k).saturating_sub(prev_c(k)))
+                        .sum();
+                    let prev_n = prev.and_then(|p| p.histograms.get(&t.hist)).map_or(0, |st| st.n);
+                    let total =
+                        cum.histograms.get(&t.hist).map_or(0, |st| st.n).saturating_sub(prev_n);
+                    out.push(SliSample {
+                        target: ti,
+                        series: t.name.clone(),
+                        bad,
+                        total,
+                        exact: true,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// The dump-v2 `timeline` section.
+    pub fn to_json(&self) -> Value {
+        let mut o = BTreeMap::new();
+        o.insert("window_ms".to_string(), Value::Num(self.cfg.window_s * 1e3));
+        o.insert("windows_closed".to_string(), Value::Num(self.next_window as f64));
+        let nodes = self
+            .names
+            .iter()
+            .zip(&self.nodes)
+            .map(|(name, t)| t.to_json(name))
+            .collect::<Vec<_>>();
+        o.insert("nodes".to_string(), Value::Arr(nodes));
+        o.insert("cluster".to_string(), self.cluster.to_json("cluster"));
+        o.insert(
+            "health".to_string(),
+            Value::Arr(self.transitions.iter().map(|t| t.to_json()).collect()),
+        );
+        o.insert(
+            "slo".to_string(),
+            Value::Arr(self.slo.events().iter().map(|e| e.to_json()).collect()),
+        );
+        Value::Obj(o)
+    }
+}
+
+/// Count the window's samples over `thr` in `cur`'s new reservoir
+/// tail. Exact while both snapshots' reservoirs held every sample;
+/// past saturation the count degrades to a flagged p99-vs-threshold
+/// estimate (`~1%` of the window when the cumulative p99 is over).
+fn count_over(cur: &Stats, prev: Option<&Stats>, thr: f64) -> (u64, u64, bool) {
+    let prev_n = prev.map_or(0, |p| p.n);
+    let dn = cur.n.saturating_sub(prev_n);
+    if dn == 0 {
+        return (0, 0, true);
+    }
+    let cur_exact = cur.samples().len() as u64 == cur.n;
+    let prev_exact = prev.is_none_or(|p| p.samples().len() as u64 == p.n);
+    if cur_exact && prev_exact && (prev_n as usize) <= cur.samples().len() {
+        let tail = &cur.samples()[prev_n as usize..];
+        (tail.iter().filter(|&&x| x > thr).count() as u64, dn, true)
+    } else {
+        let bad = if cur.quantile(0.99) > thr { (dn / 100).max(1) } else { 0 };
+        (bad, dn, false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(served: u64, applied: f64, lat: &[f64]) -> Snapshot {
+        let mut s = Snapshot::default();
+        s.counters.insert("node_served".to_string(), served);
+        s.gauges.insert("applied_epoch".to_string(), applied);
+        if !lat.is_empty() {
+            let mut st = Stats::new();
+            for &x in lat {
+                st.push(x);
+            }
+            s.histograms.insert("request_latency".to_string(), st);
+        }
+        s
+    }
+
+    fn cfg() -> CollectorConfig {
+        CollectorConfig { window_s: 0.25, ..Default::default() }
+    }
+
+    #[test]
+    fn ticks_close_only_fully_passed_windows() {
+        let mut c = Collector::new(cfg(), vec!["a".to_string()]);
+        let mut calls = 0u64;
+        let mut src = |_now: f64| {
+            calls += 1;
+            vec![Some(snap(calls * 10, 1.0, &[]))]
+        };
+        c.tick(0.1, &mut src);
+        assert_eq!(c.windows_closed(), 0, "window 0 not past yet");
+        c.tick(0.26, &mut src);
+        assert_eq!(c.windows_closed(), 1);
+        c.tick(1.01, &mut src);
+        assert_eq!(c.windows_closed(), 4, "catches up one window per due boundary");
+        c.finish(1.1, &mut src);
+        assert_eq!(c.windows_closed(), 5, "finish closes the partial window");
+        // conservation: node and cluster
+        let t = c.node_timeline(0);
+        assert_eq!(t.delta_total(), t.final_counters());
+        assert_eq!(c.cluster().delta_total(), c.cluster().final_counters());
+    }
+
+    #[test]
+    fn dead_node_gaps_and_goes_unhealthy_within_two_windows() {
+        let mut c = Collector::new(cfg(), vec!["a".to_string(), "b".to_string()]);
+        let mut tick_n = 0u64;
+        let mut src = |_now: f64| {
+            tick_n += 1;
+            let a = Some(snap(tick_n * 10, tick_n as f64, &[]));
+            // node b dies after the second sample
+            let b = if tick_n <= 2 { Some(snap(tick_n * 7, tick_n as f64, &[])) } else { None };
+            vec![a, b]
+        };
+        for w in 1..=6 {
+            c.tick(0.25 * w as f64 + 0.01, &mut src);
+        }
+        assert_eq!(c.verdict(0), Verdict::Healthy);
+        assert_eq!(c.verdict(1), Verdict::Unhealthy);
+        let flips = c.transitions();
+        assert_eq!(flips.len(), 1);
+        assert_eq!(flips[0].node, "b");
+        assert_eq!(
+            flips[0].window, 3,
+            "gaps start at window 2; two consecutive flip the verdict at window 3"
+        );
+        assert_eq!(c.node_timeline(0).gaps(), 0, "the healthy node gains no gap");
+        assert!(c.node_timeline(1).gaps() >= 2);
+        // cluster counters froze node b's contribution, never regressed
+        assert_eq!(c.cluster().delta_total(), c.cluster().final_counters());
+        // cluster applied epoch folds as min over *sampled* nodes: b's
+        // carried gauge keeps the min at its last applied epoch
+        let last = c.cluster().latest().unwrap();
+        assert_eq!(last.gauges.get("applied_epoch"), Some(&2.0));
+    }
+
+    #[test]
+    fn recovery_appends_recovered_window_and_flips_back() {
+        let mut c = Collector::new(cfg(), vec!["a".to_string()]);
+        let mut alive = |_now: f64| vec![Some(snap(10, 1.0, &[]))];
+        c.tick(0.26, &mut alive);
+        let mut dead = |_now: f64| -> Vec<Option<Snapshot>> { vec![None] };
+        c.tick(0.80, &mut dead);
+        c.finish(1.0, &mut dead);
+        assert_eq!(c.verdict(0), Verdict::Unhealthy);
+        c.record_recovery(0, snap(3, 2.0, &[]));
+        assert_eq!(c.verdict(0), Verdict::Healthy);
+        let t = c.node_timeline(0);
+        assert_eq!(t.restarts(), 1);
+        let last = t.latest().unwrap();
+        assert!(last.recovered && !last.gapped);
+        // conservation across the restart: 10 from the first life + 3 after
+        assert_eq!(t.delta_total(), t.final_counters());
+        assert_eq!(t.final_counters().get("node_served"), Some(&13));
+        let recov = c.transitions().iter().find(|t| t.to == Verdict::Healthy);
+        assert!(recov.is_some(), "recovery must be recorded as a transition");
+    }
+
+    #[test]
+    fn latency_slis_are_measured_per_class_series() {
+        let mut cfg = cfg();
+        cfg.targets = vec![SloTarget {
+            name: "latency".to_string(),
+            hist: "request_latency".to_string(),
+            kind: SloKind::LatencyOver { threshold_s: 0.010 },
+            objective: 0.99,
+            burn_threshold: 1.0,
+        }];
+        cfg.slow_windows = 1;
+        let mut c = Collector::new(cfg, vec!["a".to_string()]);
+        let mut src = |_now: f64| {
+            let mut s = snap(100, 1.0, &[0.001; 1]);
+            let mut slow = Stats::new();
+            for _ in 0..10 {
+                slow.push(0.5); // every cone request blows the threshold
+            }
+            s.histograms.insert("request_latency_cone".to_string(), slow);
+            vec![Some(s)]
+        };
+        c.tick(0.26, &mut src);
+        let events = c.slo_events();
+        assert!(
+            events.iter().any(|e| e.series == "latency:cone"),
+            "per-class breach must fire under its class series, got {events:?}"
+        );
+        assert!(events.iter().all(|e| e.series != "latency"), "base series stayed compliant");
+    }
+}

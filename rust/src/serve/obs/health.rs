@@ -1,0 +1,247 @@
+//! Per-node health scoring with hysteresis.
+//!
+//! Each closed window yields a [`HealthInputs`] for every node —
+//! queue depth, busy fraction, applied-epoch lag, error / stale-refusal
+//! rate, reconnect count, all *window-local* — which [`score`] folds
+//! into one number in `[0, 1]`. A [`HealthTracker`] then turns the
+//! score stream into a [`Verdict`] with hysteresis: the verdict flips
+//! only after [`HealthConfig::flip_windows`] *consecutive* windows on
+//! the far side of the threshold band, so a single bad (or good)
+//! window cannot flap it. A gapped window (node unreachable) scores
+//! 0.0 — two consecutive gaps take a healthy node to unhealthy, which
+//! is what the kill-node acceptance bound ("unhealthy within 2 windows
+//! of the kill") pins.
+//!
+//! Scoring is a pure function of its inputs: no clocks, no atomics —
+//! the sim-tier timeline stays byte-identical across runs.
+
+/// Normalization + thresholds for [`score`] and [`HealthTracker`].
+#[derive(Clone, Debug)]
+pub struct HealthConfig {
+    /// Scores strictly below this count toward an unhealthy flip.
+    pub unhealthy_below: f64,
+    /// Scores strictly above this count toward a healthy flip. The
+    /// band between the two thresholds counts toward neither — that
+    /// dead zone is the hysteresis.
+    pub healthy_above: f64,
+    /// Consecutive qualifying windows required to flip the verdict.
+    pub flip_windows: u32,
+    /// Queue depth at which the queue term saturates.
+    pub queue_capacity: f64,
+    /// Applied-epoch lag (epochs behind the freshest node) at which
+    /// the lag term saturates.
+    pub epoch_lag_tolerance: f64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> HealthConfig {
+        HealthConfig {
+            unhealthy_below: 0.45,
+            healthy_above: 0.70,
+            flip_windows: 2,
+            queue_capacity: 512.0,
+            epoch_lag_tolerance: 4.0,
+        }
+    }
+}
+
+/// Window-local signals for one node. All rates are per-window
+/// fractions (errors / requests in the window), not cumulative.
+#[derive(Clone, Debug, Default)]
+pub struct HealthInputs {
+    /// The window's scrape failed: the node is unreachable.
+    pub gapped: bool,
+    /// Request queue depth at the window close.
+    pub queue_depth: f64,
+    /// Fraction of the window the node spent busy.
+    pub busy_frac: f64,
+    /// Epochs behind the freshest node at the window close.
+    pub epoch_lag: f64,
+    /// Errors (io + timeout) per request in the window.
+    pub error_rate: f64,
+    /// Stale-consistency refusals per request in the window.
+    pub stale_rate: f64,
+    /// Transport reconnects in the window.
+    pub reconnects: f64,
+}
+
+/// Fold one window's signals into a health score in `[0, 1]`.
+/// An unreachable node scores 0.0 outright; otherwise each signal
+/// subtracts a weighted, saturating penalty from 1.0. Weights sum
+/// past 1.0 on purpose: several moderately bad signals should be able
+/// to take a reachable node below [`HealthConfig::unhealthy_below`].
+pub fn score(cfg: &HealthConfig, inp: &HealthInputs) -> f64 {
+    if inp.gapped {
+        return 0.0;
+    }
+    let sat = |x: f64, scale: f64| (x / scale.max(1e-9)).clamp(0.0, 1.0);
+    let s = 1.0
+        - 0.25 * sat(inp.queue_depth, cfg.queue_capacity)
+        - 0.10 * inp.busy_frac.clamp(0.0, 1.0)
+        - 0.25 * sat(inp.epoch_lag, cfg.epoch_lag_tolerance)
+        - 0.50 * inp.error_rate.clamp(0.0, 1.0)
+        - 0.25 * inp.stale_rate.clamp(0.0, 1.0)
+        - 0.25 * sat(inp.reconnects, 4.0);
+    s.max(0.0)
+}
+
+/// The hysteresis verdict.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    Healthy,
+    Unhealthy,
+}
+
+impl Verdict {
+    pub fn name(self) -> &'static str {
+        match self {
+            Verdict::Healthy => "healthy",
+            Verdict::Unhealthy => "unhealthy",
+        }
+    }
+}
+
+/// Per-node verdict state machine. Starts `Healthy` (a node that has
+/// never produced a bad window has given no evidence against itself).
+#[derive(Clone, Debug)]
+pub struct HealthTracker {
+    verdict: Verdict,
+    bad_streak: u32,
+    good_streak: u32,
+}
+
+impl Default for HealthTracker {
+    fn default() -> HealthTracker {
+        HealthTracker::new()
+    }
+}
+
+impl HealthTracker {
+    pub fn new() -> HealthTracker {
+        HealthTracker { verdict: Verdict::Healthy, bad_streak: 0, good_streak: 0 }
+    }
+
+    pub fn verdict(&self) -> Verdict {
+        self.verdict
+    }
+
+    /// Feed one window's score; returns `Some((from, to))` when the
+    /// verdict flips on this window.
+    pub fn observe(&mut self, cfg: &HealthConfig, score: f64) -> Option<(Verdict, Verdict)> {
+        if score < cfg.unhealthy_below {
+            self.bad_streak += 1;
+            self.good_streak = 0;
+        } else if score > cfg.healthy_above {
+            self.good_streak += 1;
+            self.bad_streak = 0;
+        } else {
+            // hysteresis band: evidence for neither side
+            self.bad_streak = 0;
+            self.good_streak = 0;
+        }
+        let flip = match self.verdict {
+            Verdict::Healthy if self.bad_streak >= cfg.flip_windows => Verdict::Unhealthy,
+            Verdict::Unhealthy if self.good_streak >= cfg.flip_windows => Verdict::Healthy,
+            _ => return None,
+        };
+        let from = self.verdict;
+        self.verdict = flip;
+        self.bad_streak = 0;
+        self.good_streak = 0;
+        Some((from, flip))
+    }
+
+    /// An out-of-band recovery signal (the process was restarted and
+    /// answered a scrape): flips an unhealthy verdict back to healthy
+    /// immediately, bypassing hysteresis — a successful restart is
+    /// explicit evidence, not one ambiguous window.
+    pub fn recover(&mut self) -> Option<(Verdict, Verdict)> {
+        if self.verdict == Verdict::Unhealthy {
+            self.verdict = Verdict::Healthy;
+            self.bad_streak = 0;
+            self.good_streak = 0;
+            Some((Verdict::Unhealthy, Verdict::Healthy))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gap_scores_zero_and_clean_node_scores_one() {
+        let cfg = HealthConfig::default();
+        assert_eq!(score(&cfg, &HealthInputs { gapped: true, ..Default::default() }), 0.0);
+        assert_eq!(score(&cfg, &HealthInputs::default()), 1.0);
+    }
+
+    #[test]
+    fn score_penalizes_each_signal_monotonically() {
+        let cfg = HealthConfig::default();
+        let base = score(&cfg, &HealthInputs::default());
+        let worse = [
+            HealthInputs { queue_depth: 600.0, ..Default::default() },
+            HealthInputs { busy_frac: 0.9, ..Default::default() },
+            HealthInputs { epoch_lag: 8.0, ..Default::default() },
+            HealthInputs { error_rate: 0.5, ..Default::default() },
+            HealthInputs { stale_rate: 0.5, ..Default::default() },
+            HealthInputs { reconnects: 3.0, ..Default::default() },
+        ];
+        for inp in &worse {
+            assert!(score(&cfg, inp) < base, "{inp:?} must lower the score");
+        }
+        // a saturated everything still floors at 0
+        let awful = HealthInputs {
+            queue_depth: 1e9,
+            busy_frac: 1.0,
+            epoch_lag: 1e9,
+            error_rate: 1.0,
+            stale_rate: 1.0,
+            reconnects: 1e9,
+            ..Default::default()
+        };
+        assert_eq!(score(&cfg, &awful), 0.0);
+    }
+
+    #[test]
+    fn one_bad_window_does_not_flap_two_do() {
+        let cfg = HealthConfig::default();
+        let mut t = HealthTracker::new();
+        assert_eq!(t.observe(&cfg, 0.0), None, "first bad window must not flip");
+        assert_eq!(t.verdict(), Verdict::Healthy);
+        assert_eq!(t.observe(&cfg, 1.0), None, "recovery resets the streak");
+        assert_eq!(t.observe(&cfg, 0.0), None);
+        let flipped = t.observe(&cfg, 0.0);
+        assert_eq!(flipped, Some((Verdict::Healthy, Verdict::Unhealthy)));
+        assert_eq!(t.verdict(), Verdict::Unhealthy);
+        // and back: two good windows required
+        assert_eq!(t.observe(&cfg, 1.0), None);
+        assert_eq!(t.observe(&cfg, 1.0), Some((Verdict::Unhealthy, Verdict::Healthy)));
+    }
+
+    #[test]
+    fn band_scores_count_for_neither_side() {
+        let cfg = HealthConfig::default();
+        let mut t = HealthTracker::new();
+        t.observe(&cfg, 0.1);
+        // a band score breaks the bad streak: no flip on the next bad
+        t.observe(&cfg, 0.55);
+        assert_eq!(t.observe(&cfg, 0.1), None);
+        assert_eq!(t.verdict(), Verdict::Healthy);
+    }
+
+    #[test]
+    fn explicit_recovery_bypasses_hysteresis() {
+        let cfg = HealthConfig::default();
+        let mut t = HealthTracker::new();
+        t.observe(&cfg, 0.0);
+        t.observe(&cfg, 0.0);
+        assert_eq!(t.verdict(), Verdict::Unhealthy);
+        assert_eq!(t.recover(), Some((Verdict::Unhealthy, Verdict::Healthy)));
+        assert_eq!(t.verdict(), Verdict::Healthy);
+        assert_eq!(t.recover(), None, "recovering a healthy node is a no-op");
+    }
+}

@@ -29,6 +29,24 @@
 //! and decode; sim: fabric transfer plus remote node queueing). That
 //! makes "stage sums equal end-to-end latency" hold by construction,
 //! which the acceptance tests pin to within 5%.
+//!
+//! On top of the point-in-time registry sit the continuous-telemetry
+//! submodules: [`timeseries`] (fixed-width windowed rollups with an
+//! exact counter-conservation invariant), [`collector`] (the per-node
+//! + cluster collection loop, gap-tolerant across node death),
+//! [`health`] (hysteresis health verdicts), and [`slo`] (multi-window
+//! burn-rate gates). `serve-bench --collect-ms N` drives them on every
+//! tier and exports the `timeline` section of the dump-v2 schema.
+
+pub mod collector;
+pub mod health;
+pub mod slo;
+pub mod timeseries;
+
+pub use collector::{Collector, CollectorConfig, HealthTransition, StatsSource};
+pub use health::{HealthConfig, HealthInputs, HealthTracker, Verdict};
+pub use slo::{SloEvaluator, SloEvent, SloKind, SloTarget};
+pub use timeseries::{fold_gauges, gauge_kind, GaugeKind, Timeline, Window, WindowHist};
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -378,9 +396,19 @@ impl Snapshot {
     }
 
     /// Merge snapshots from several processes/registries into one view:
-    /// counters sum, gauges sum, histograms fold through the
+    /// counters sum, gauges **sum**, histograms fold through the
     /// deterministic [`Stats::merge_all`] — so the merged quantiles do
     /// not depend on the order snapshots arrive in.
+    ///
+    /// The gauge rule is deliberate and pinned by test: `merge_all`
+    /// joins the *disjoint* registries of one logical process (drive +
+    /// server + WAL), where each gauge has exactly one writer and
+    /// summing is the identity on the only non-zero value. Folding the
+    /// *same* gauge across many nodes is a different operation with a
+    /// per-name rule — use
+    /// [`fold_gauges`](timeseries::fold_gauges) /
+    /// [`GaugeKind`](timeseries::GaugeKind) for cluster rollups
+    /// (applied epochs take the min, queue depths the sum).
     pub fn merge_all<'a, I>(parts: I) -> Snapshot
     where
         I: IntoIterator<Item = &'a Snapshot>,
@@ -503,7 +531,8 @@ impl TraceSampler {
     }
 
     /// Enable sampling: keep every `every`th request (0 = off) and all
-    /// requests slower than `slow_s` seconds (<= 0 = off).
+    /// requests at least `slow_s` seconds slow (<= 0 = off; the
+    /// threshold is inclusive, so a latency exactly at it is logged).
     pub fn configure(&self, every: u64, slow_s: f64) {
         self.every.store(every, Ordering::Relaxed);
         self.slow_bits
@@ -526,7 +555,7 @@ impl TraceSampler {
     /// it. Cheap when disabled (two relaxed loads).
     pub fn observe(&self, mut rec: TraceRecord) {
         let every = self.every.load(Ordering::Relaxed);
-        let slow = self.slow_threshold().is_some_and(|t| rec.total_s > t);
+        let slow = self.slow_threshold().is_some_and(|t| rec.total_s >= t);
         let seen = self.seen.fetch_add(1, Ordering::Relaxed) + 1;
         let sampled = every > 0 && seen % every == 0;
         if !sampled && !slow {
@@ -584,18 +613,28 @@ impl TraceSampler {
     }
 }
 
+/// The `--obs-dump` schema tag. v2 added the optional `timeline`
+/// section (windowed rollups + health transitions + SLO burn events,
+/// present when the run collected with `--collect-ms`).
+pub const DUMP_SCHEMA: &str = "celeste-obs-dump-v2";
+
 /// Write the observability dump `serve-bench --obs-dump` produces: the
 /// front end's merged metrics snapshot, each shard server's scraped
-/// snapshot, and the sampled trace records.
+/// snapshot, the sampled trace records, and — when a collector ran —
+/// the `timeline` section.
 pub fn write_dump(
     path: &str,
     metrics: &Snapshot,
     servers: &[Snapshot],
     traces: &[TraceRecord],
+    timeline: Option<&Collector>,
 ) -> std::io::Result<()> {
     let mut obj = BTreeMap::new();
-    obj.insert("schema".to_string(), Value::Str("celeste-obs-dump-v1".to_string()));
+    obj.insert("schema".to_string(), Value::Str(DUMP_SCHEMA.to_string()));
     obj.insert("metrics".to_string(), metrics.to_json());
+    if let Some(c) = timeline {
+        obj.insert("timeline".to_string(), c.to_json());
+    }
     obj.insert(
         "servers".to_string(),
         Value::Arr(servers.iter().map(|s| s.to_json()).collect()),
@@ -763,6 +802,107 @@ mod tests {
         assert_eq!(recs.len(), TRACE_CAP);
         // oldest evicted first
         assert_eq!(recs[0].trace_id, 501);
+    }
+
+    fn rec(trace_id: u64, total_s: f64) -> TraceRecord {
+        TraceRecord {
+            trace_id,
+            total_s,
+            spans: SpanSet::new(),
+            server_spans: SpanSet::new(),
+            slow: false,
+        }
+    }
+
+    #[test]
+    fn sampler_cap_eviction_spares_slow_records_deterministically() {
+        let s = TraceSampler::new();
+        s.configure(1, 1e-3);
+        // fill the cap with alternating slow / fast records
+        for i in 0..TRACE_CAP as u64 {
+            s.observe(rec(i + 1, if i % 2 == 0 { 5e-3 } else { 1e-5 }));
+        }
+        // each overflow evicts the oldest *non-slow* record, so after
+        // N more fast records the retained set is exactly: all original
+        // slow records, the original fast tail shifted, the new tail —
+        // byte-for-byte reproducible
+        for i in 0..100u64 {
+            s.observe(rec(TRACE_CAP as u64 + i + 1, 1e-5));
+        }
+        let recs = s.records();
+        assert_eq!(recs.len(), TRACE_CAP);
+        let slow_ids: Vec<u64> = recs.iter().filter(|r| r.slow).map(|r| r.trace_id).collect();
+        let want: Vec<u64> = (0..TRACE_CAP as u64 / 2).map(|k| 2 * k + 1).collect();
+        assert_eq!(slow_ids, want, "every slow record survives eviction, in order");
+        let first_fast = recs.iter().find(|r| !r.slow).unwrap().trace_id;
+        assert_eq!(first_fast, 202, "the 100 oldest fast records (2,4,..,200) were evicted");
+        // when everything retained is slow, eviction degrades to
+        // oldest-first instead of scanning forever
+        let s2 = TraceSampler::new();
+        s2.configure(0, 1e-9);
+        for i in 0..(TRACE_CAP as u64 + 3) {
+            s2.observe(rec(i + 1, 1.0));
+        }
+        let recs2 = s2.records();
+        assert_eq!(recs2.len(), TRACE_CAP);
+        assert_eq!(recs2[0].trace_id, 4, "all-slow cap drops the oldest slow records");
+    }
+
+    #[test]
+    fn slow_threshold_fires_on_exactly_at_threshold_latency() {
+        let s = TraceSampler::new();
+        s.configure(0, 2e-3);
+        s.observe(rec(1, 2e-3)); // exactly at the threshold
+        s.observe(rec(2, 2e-3 - 1e-9)); // just under
+        let recs = s.records();
+        assert_eq!(recs.len(), 1, "the inclusive threshold keeps the boundary latency");
+        assert_eq!(recs[0].trace_id, 1);
+        assert!(recs[0].slow);
+    }
+
+    #[test]
+    fn sample_every_request_with_slow_log_off_records_once() {
+        // `--trace-sample 1` + slow log disarmed (`configure(1, 0.0)`):
+        // every request must appear exactly once — the sample path and
+        // the slow path must not double-record
+        let s = TraceSampler::new();
+        s.configure(1, 0.0);
+        for i in 0..50u64 {
+            s.observe(rec(i + 1, 10.0)); // huge latency, but slow log is off
+        }
+        let recs = s.records();
+        assert_eq!(recs.len(), 50);
+        let mut ids: Vec<u64> = recs.iter().map(|r| r.trace_id).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), 50, "no trace id recorded twice");
+        assert!(recs.iter().all(|r| !r.slow), "slow log off: nothing marked slow");
+        // and both armed: a record that is sampled *and* slow is still
+        // recorded once (marked slow)
+        let s2 = TraceSampler::new();
+        s2.configure(1, 1e-3);
+        s2.observe(rec(7, 5e-3));
+        let recs2 = s2.records();
+        assert_eq!(recs2.len(), 1);
+        assert!(recs2[0].slow);
+    }
+
+    #[test]
+    fn gauge_merge_is_sum_across_disjoint_registries() {
+        // the pinned rule (see `Snapshot::merge_all` docs): gauges SUM
+        // under merge_all — each gauge has one writer per registry, so
+        // the sum is the identity on the only non-zero value. Cluster
+        // folds of the *same* gauge use `timeseries::fold_gauges`.
+        let mut a = Snapshot::default();
+        a.gauges.insert("applied_epoch".to_string(), 9.0);
+        let mut b = Snapshot::default();
+        b.gauges.insert("recovered_epoch".to_string(), 4.0);
+        let merged = Snapshot::merge_all([&a, &b]);
+        assert_eq!(merged.gauges["applied_epoch"], 9.0);
+        assert_eq!(merged.gauges["recovered_epoch"], 4.0);
+        // same-name gauges from two registries do sum — the documented
+        // sharp edge that fold_gauges exists to avoid
+        let merged2 = Snapshot::merge_all([&a, &a]);
+        assert_eq!(merged2.gauges["applied_epoch"], 18.0);
     }
 
     #[test]

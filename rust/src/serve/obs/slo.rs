@@ -1,0 +1,251 @@
+//! Declarative SLO targets evaluated as multi-window burn rates.
+//!
+//! A target states an objective as a *good fraction* (e.g. "99% of
+//! requests under 50 ms", "99.9% of requests error-free"). Each closed
+//! window contributes a bad/total pair per tracked series; the
+//! evaluator reports the **burn rate** — the window's bad fraction
+//! divided by the objective's error budget `(1 - objective)`:
+//!
+//! ```text
+//! burn = (bad / total) / (1 - objective)
+//! ```
+//!
+//! Burn 1.0 spends the budget exactly as fast as the objective allows;
+//! burn 2.0 spends it twice as fast. One noisy window is not an
+//! incident, and a long slow bleed should not need a full compliance
+//! period to surface — so, following the standard multi-window
+//! pattern, an event fires only when **both** the fast burn (the
+//! current window) and the slow burn (the trailing
+//! [`SloEvaluator::slow_windows`] windows, pooled) clear the target's
+//! threshold. The fast window gates on "is it still happening", the
+//! slow window on "has it been happening long enough to matter".
+//!
+//! Latency targets are counted against exact per-window reservoir
+//! tails when available (see
+//! [`timeseries`](super::timeseries::WindowHist)); once a reservoir
+//! saturates the collector falls back to a p99-vs-threshold estimate
+//! and says so in the event.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::jsonlite::Value;
+
+/// What a window's bad/total pair measures.
+#[derive(Clone, Debug)]
+pub enum SloKind {
+    /// Bad = requests whose latency exceeded `threshold_s` (seconds —
+    /// registry histograms are in seconds).
+    LatencyOver { threshold_s: f64 },
+    /// Bad = errored requests (the collector decides which counters
+    /// count as errors).
+    ErrorRate,
+}
+
+/// One declarative objective.
+#[derive(Clone, Debug)]
+pub struct SloTarget {
+    /// Report name, e.g. `"latency_p99"`.
+    pub name: String,
+    /// Histogram the SLI reads (latency kinds) and whose per-window
+    /// `n` is the request total (both kinds). Series whose histogram
+    /// name extends this with a `_<class>` suffix are tracked per
+    /// class automatically.
+    pub hist: String,
+    pub kind: SloKind,
+    /// Target good fraction, e.g. `0.99`.
+    pub objective: f64,
+    /// Fire when both fast and slow burn reach this, e.g. `1.0`.
+    pub burn_threshold: f64,
+}
+
+impl SloTarget {
+    /// The default target set: p99-style latency at 50 ms / 99%, and
+    /// an error-rate objective at 99.9%, both over the engines'
+    /// end-to-end `request_latency` histogram (per class via the
+    /// `request_latency_<class>` series).
+    pub fn defaults() -> Vec<SloTarget> {
+        vec![
+            SloTarget {
+                name: "latency".to_string(),
+                hist: "request_latency".to_string(),
+                kind: SloKind::LatencyOver { threshold_s: 0.050 },
+                objective: 0.99,
+                burn_threshold: 1.0,
+            },
+            SloTarget {
+                name: "errors".to_string(),
+                hist: "request_latency".to_string(),
+                kind: SloKind::ErrorRate,
+                objective: 0.999,
+                burn_threshold: 1.0,
+            },
+        ]
+    }
+}
+
+/// One window's SLI measurement for one series.
+#[derive(Clone, Debug)]
+pub struct SliSample {
+    /// Target index into the evaluator's target list.
+    pub target: usize,
+    /// Series label: the target name, suffixed per class
+    /// (`latency:cone`) when measured from a per-class histogram.
+    pub series: String,
+    pub bad: u64,
+    pub total: u64,
+    /// False when `bad` came from a saturated-reservoir estimate.
+    pub exact: bool,
+}
+
+/// A fired burn-rate gate.
+#[derive(Clone, Debug)]
+pub struct SloEvent {
+    pub target: String,
+    pub series: String,
+    pub window: u64,
+    pub fast_burn: f64,
+    pub slow_burn: f64,
+    pub exact: bool,
+}
+
+impl SloEvent {
+    pub fn to_json(&self) -> Value {
+        let mut o = BTreeMap::new();
+        o.insert("target".to_string(), Value::Str(self.target.clone()));
+        o.insert("series".to_string(), Value::Str(self.series.clone()));
+        o.insert("window".to_string(), Value::Num(self.window as f64));
+        o.insert("fast_burn".to_string(), Value::Num(self.fast_burn));
+        o.insert("slow_burn".to_string(), Value::Num(self.slow_burn));
+        o.insert("exact".to_string(), Value::Bool(self.exact));
+        Value::Obj(o)
+    }
+}
+
+/// Per-series trailing bad/total ring + event log.
+pub struct SloEvaluator {
+    targets: Vec<SloTarget>,
+    slow_windows: usize,
+    rings: BTreeMap<String, VecDeque<(u64, u64)>>,
+    events: Vec<SloEvent>,
+}
+
+impl SloEvaluator {
+    pub fn new(targets: Vec<SloTarget>, slow_windows: usize) -> SloEvaluator {
+        SloEvaluator {
+            targets,
+            slow_windows: slow_windows.max(1),
+            rings: BTreeMap::new(),
+            events: Vec::new(),
+        }
+    }
+
+    pub fn targets(&self) -> &[SloTarget] {
+        &self.targets
+    }
+
+    pub fn events(&self) -> &[SloEvent] {
+        &self.events
+    }
+
+    /// Feed one closed window's measurements; appends any events that
+    /// fire on this window to the log and returns how many did.
+    pub fn observe(&mut self, window: u64, samples: &[SliSample]) -> usize {
+        let mut fired = 0;
+        for s in samples {
+            let Some(target) = self.targets.get(s.target) else { continue };
+            let budget = (1.0 - target.objective).max(1e-9);
+            let ring = self.rings.entry(s.series.clone()).or_default();
+            ring.push_back((s.bad, s.total));
+            while ring.len() > self.slow_windows {
+                ring.pop_front();
+            }
+            let frac = |bad: u64, total: u64| {
+                if total == 0 {
+                    0.0
+                } else {
+                    bad as f64 / total as f64
+                }
+            };
+            let fast_burn = frac(s.bad, s.total) / budget;
+            let (slow_bad, slow_total) =
+                ring.iter().fold((0u64, 0u64), |(b, t), &(wb, wt)| (b + wb, t + wt));
+            let slow_burn = frac(slow_bad, slow_total) / budget;
+            if fast_burn >= target.burn_threshold && slow_burn >= target.burn_threshold {
+                self.events.push(SloEvent {
+                    target: target.name.clone(),
+                    series: s.series.clone(),
+                    window,
+                    fast_burn,
+                    slow_burn,
+                    exact: s.exact,
+                });
+                fired += 1;
+            }
+        }
+        fired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_target() -> Vec<SloTarget> {
+        vec![SloTarget {
+            name: "latency".to_string(),
+            hist: "request_latency".to_string(),
+            kind: SloKind::LatencyOver { threshold_s: 0.050 },
+            objective: 0.99,
+            burn_threshold: 2.0,
+        }]
+    }
+
+    fn sli(bad: u64, total: u64) -> SliSample {
+        SliSample { target: 0, series: "latency".to_string(), bad, total, exact: true }
+    }
+
+    #[test]
+    fn single_breach_window_does_not_fire_sustained_does() {
+        let mut ev = SloEvaluator::new(one_target(), 4);
+        // budget = 1%, threshold = 2x burn → needs >= 2% bad fast AND slow.
+        // one hot window pooled against three clean ones stays under
+        // the slow gate:
+        for w in 0..3 {
+            assert_eq!(ev.observe(w, &[sli(0, 100)]), 0);
+        }
+        // fast burn is 5x but the slow pool (5/400 = 1.25x) dilutes it
+        assert_eq!(ev.observe(3, &[sli(5, 100)]), 0, "slow burn still diluted");
+        // second hot window: slow pool is now 10/400 = 2.5x — sustained
+        let fired = ev.observe(4, &[sli(5, 100)]);
+        assert_eq!(fired, 1, "two hot windows of 5% must burn a 1% budget at 2x");
+        assert_eq!(ev.events().len(), 1);
+        let e = &ev.events()[0];
+        assert_eq!(e.window, 4);
+        assert!(e.fast_burn >= 2.0 && e.slow_burn >= 2.0);
+    }
+
+    #[test]
+    fn empty_windows_are_compliant() {
+        let mut ev = SloEvaluator::new(one_target(), 4);
+        assert_eq!(ev.observe(0, &[sli(0, 0)]), 0);
+        assert!(ev.events().is_empty());
+    }
+
+    #[test]
+    fn series_are_tracked_independently() {
+        let mut ev = SloEvaluator::new(one_target(), 2);
+        let hot = |series: &str, bad| SliSample {
+            target: 0,
+            series: series.to_string(),
+            bad,
+            total: 100,
+            exact: true,
+        };
+        // only the cone series burns; the box series must not fire
+        for w in 0..3 {
+            ev.observe(w, &[hot("latency:cone", 10), hot("latency:box", 0)]);
+        }
+        assert!(!ev.events().is_empty());
+        assert!(ev.events().iter().all(|e| e.series == "latency:cone"));
+    }
+}

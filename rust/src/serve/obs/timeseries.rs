@@ -1,0 +1,497 @@
+//! Fixed-width windowed rollups over registry snapshots.
+//!
+//! A [`Timeline`] turns a sequence of *cumulative* [`Snapshot`]s into
+//! per-window rows: counter **deltas** (what happened in the window),
+//! gauge **last-values** (state at the window close), and per-window
+//! p50/p99 computed from the reservoir sample deltas of each histogram
+//! (exact while the reservoir is below its cap, flagged approximate
+//! once it saturates). Rows live in a bounded ring — memory is
+//! O(`max_windows`) — and counter deltas evicted off the ring are
+//! folded into a running `evicted` total so the conservation invariant
+//! survives eviction:
+//!
+//! ```text
+//! evicted + Σ window counter deltas  ==  final cumulative counters
+//! ```
+//!
+//! (`final` accumulates across process restarts via `base`, so the
+//! invariant also holds for a node that was killed and recovered —
+//! see [`Timeline::observe_recovered`].)
+//!
+//! Windows are indexed, not timestamped: the collector closes window
+//! `i` when its driving [`Clock`](crate::serve::engine::Clock) passes
+//! `(i + 1) * width`, which is what makes sim-tier timelines byte-
+//! identical across runs — no wall time enters the row.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::jsonlite::Value;
+use crate::metrics::Stats;
+
+use super::Snapshot;
+
+/// How per-node gauges fold into a cluster rollup. Counters always
+/// sum; gauges do not have one right answer — an applied epoch wants
+/// the *minimum* over nodes (the cluster is only as fresh as its
+/// stalest replica), a queue depth wants the *sum*, a lag wants the
+/// *max* — so the fold is explicit per gauge name ([`gauge_kind`])
+/// instead of an implicit convention.
+///
+/// Note this is deliberately different from [`Snapshot::merge_all`],
+/// which **sums** gauges: `merge_all` joins disjoint registries of one
+/// logical process (drive + server + WAL), where each gauge has one
+/// writer and summing is the identity; the cluster fold joins the
+/// *same* gauge from many nodes, where summing an epoch number would
+/// be nonsense.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GaugeKind {
+    /// Last writer wins (node order; deterministic). The default for
+    /// gauges with no meaningful cross-node fold.
+    Last,
+    /// Sum over nodes: capacities and depths (queue depth, busy time).
+    Sum,
+    /// Minimum over nodes: progress watermarks (applied/recovered
+    /// epoch — the cluster has applied an epoch only when every node
+    /// has).
+    Min,
+    /// Maximum over nodes: lags and worst-cases.
+    Max,
+}
+
+/// The cluster-fold kind for a gauge name. Names not listed fold as
+/// [`GaugeKind::Last`].
+pub fn gauge_kind(name: &str) -> GaugeKind {
+    match name {
+        "applied_epoch" | "recovered_epoch" => GaugeKind::Min,
+        "queue_depth" | "node_busy_s" => GaugeKind::Sum,
+        "epoch_lag" => GaugeKind::Max,
+        _ => GaugeKind::Last,
+    }
+}
+
+/// Fold per-node gauge maps into one cluster gauge map under
+/// [`gauge_kind`]. Nodes are visited in slice order, so `Last` is
+/// deterministic.
+pub fn fold_gauges<'a>(parts: impl IntoIterator<Item = &'a Snapshot>) -> BTreeMap<String, f64> {
+    let mut out: BTreeMap<String, f64> = BTreeMap::new();
+    for part in parts {
+        for (name, &v) in &part.gauges {
+            match out.entry(name.clone()) {
+                std::collections::btree_map::Entry::Vacant(e) => {
+                    e.insert(v);
+                }
+                std::collections::btree_map::Entry::Occupied(mut e) => {
+                    let cur = *e.get();
+                    *e.get_mut() = match gauge_kind(name) {
+                        GaugeKind::Last => v,
+                        GaugeKind::Sum => cur + v,
+                        GaugeKind::Min => cur.min(v),
+                        GaugeKind::Max => cur.max(v),
+                    };
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Per-window view of one histogram: sample count in the window and
+/// window-local quantiles. `exact` is true while the underlying
+/// reservoir held every sample (below its cap) for both the opening
+/// and closing snapshot, i.e. the window's samples are literally the
+/// cumulative sample vector's new tail; past saturation the quantiles
+/// fall back to the *cumulative* distribution and are flagged.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WindowHist {
+    pub n: u64,
+    pub p50: f64,
+    pub p99: f64,
+    pub exact: bool,
+}
+
+/// One closed window of a [`Timeline`].
+#[derive(Clone, Debug, Default)]
+pub struct Window {
+    pub index: u64,
+    /// The sample for this window failed (dead node / scrape error):
+    /// no deltas, gauges carry nothing. Gaps never contribute to the
+    /// conservation sum.
+    pub gapped: bool,
+    /// First successful sample after a process restart
+    /// ([`Timeline::observe_recovered`]).
+    pub recovered: bool,
+    /// Counter deltas vs the previous successful sample (zero deltas
+    /// omitted).
+    pub counters: BTreeMap<String, u64>,
+    /// Gauge values at the window close.
+    pub gauges: BTreeMap<String, f64>,
+    /// Per-window histogram rollups (histograms with no new samples
+    /// omitted).
+    pub hists: BTreeMap<String, WindowHist>,
+}
+
+impl Window {
+    /// A window that carries no signal at all (not even a gap marker).
+    pub fn is_empty(&self) -> bool {
+        !self.gapped
+            && !self.recovered
+            && self.counters.is_empty()
+            && self.gauges.is_empty()
+            && self.hists.is_empty()
+    }
+}
+
+/// Index-based quantile over an already-sorted slice.
+fn sorted_quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let i = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[i.min(sorted.len() - 1)]
+}
+
+/// A bounded ring of [`Window`]s for one node (or the cluster fold),
+/// plus the bookkeeping that keeps the conservation invariant exact:
+/// the last successful cumulative snapshot, counters retired across
+/// restarts (`base`), and counter deltas evicted off the ring.
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    max_windows: usize,
+    windows: VecDeque<Window>,
+    /// Cumulative snapshot at the last successful observation.
+    last: Option<Snapshot>,
+    /// Counters accumulated by incarnations that have since restarted.
+    base: BTreeMap<String, u64>,
+    /// Counter deltas of windows evicted off the ring.
+    evicted: BTreeMap<String, u64>,
+    evicted_windows: u64,
+    gaps: u64,
+    restarts: u64,
+}
+
+impl Timeline {
+    pub fn new(max_windows: usize) -> Timeline {
+        Timeline {
+            max_windows: max_windows.max(1),
+            windows: VecDeque::new(),
+            last: None,
+            base: BTreeMap::new(),
+            evicted: BTreeMap::new(),
+            evicted_windows: 0,
+            gaps: 0,
+            restarts: 0,
+        }
+    }
+
+    /// Close window `index` against `sample` (the node's *cumulative*
+    /// snapshot at the close, or `None` for a failed scrape → gap).
+    pub fn observe(&mut self, index: u64, sample: Option<Snapshot>) {
+        match sample {
+            None => {
+                self.gaps += 1;
+                self.push(Window { index, gapped: true, ..Window::default() });
+            }
+            Some(snap) => {
+                let win = self.delta_window(index, &snap, false);
+                self.last = Some(snap);
+                self.push(win);
+            }
+        }
+    }
+
+    /// Close window `index` against the first successful sample of a
+    /// *restarted* process: the previous incarnation's cumulative
+    /// counters are retired into `base` (its registry is gone — its
+    /// totals are not), and deltas restart from zero, so conservation
+    /// (`delta_total == final_counters`) holds across the restart.
+    pub fn observe_recovered(&mut self, index: u64, sample: Snapshot) {
+        if let Some(prev) = self.last.take() {
+            for (k, v) in &prev.counters {
+                *self.base.entry(k.clone()).or_insert(0) += v;
+            }
+        }
+        self.restarts += 1;
+        let win = self.delta_window(index, &sample, true);
+        self.last = Some(sample);
+        self.push(win);
+    }
+
+    fn delta_window(&self, index: u64, snap: &Snapshot, recovered: bool) -> Window {
+        // `recovered` retires `last` before calling, so prev is None
+        let prev = if recovered { None } else { self.last.as_ref() };
+        let mut counters = BTreeMap::new();
+        for (k, &v) in &snap.counters {
+            let p = prev.and_then(|s| s.counters.get(k)).copied().unwrap_or(0);
+            let d = v.saturating_sub(p);
+            if d > 0 {
+                counters.insert(k.clone(), d);
+            }
+        }
+        let mut hists = BTreeMap::new();
+        for (k, s) in &snap.histograms {
+            let prev_s = prev.and_then(|p| p.histograms.get(k));
+            let prev_n = prev_s.map_or(0, |p| p.n);
+            let dn = s.n.saturating_sub(prev_n);
+            if dn == 0 {
+                continue;
+            }
+            hists.insert(k.clone(), Self::window_hist(s, prev_s, dn));
+        }
+        Window { index, gapped: false, recovered, counters, gauges: snap.gauges.clone(), hists }
+    }
+
+    fn window_hist(cur: &Stats, prev: Option<&Stats>, dn: u64) -> WindowHist {
+        let prev_n = prev.map_or(0, |p| p.n);
+        let cur_exact = cur.samples().len() as u64 == cur.n;
+        let prev_exact = prev.is_none_or(|p| p.samples().len() as u64 == p.n);
+        if cur_exact && prev_exact && prev_n as usize <= cur.samples().len() {
+            // below the reservoir cap the sample vector is the whole
+            // insertion-ordered population: the window's samples are
+            // its new tail, and the quantiles are exact
+            let mut tail: Vec<f64> = cur.samples()[prev_n as usize..].to_vec();
+            tail.sort_by(f64::total_cmp);
+            WindowHist {
+                n: dn,
+                p50: sorted_quantile(&tail, 0.50),
+                p99: sorted_quantile(&tail, 0.99),
+                exact: true,
+            }
+        } else {
+            // reservoir saturated: window-local samples are no longer
+            // recoverable — report the cumulative distribution, flagged
+            WindowHist { n: dn, p50: cur.quantile(0.50), p99: cur.quantile(0.99), exact: false }
+        }
+    }
+
+    fn push(&mut self, win: Window) {
+        if self.windows.len() == self.max_windows {
+            if let Some(old) = self.windows.pop_front() {
+                self.evicted_windows += 1;
+                for (k, v) in old.counters {
+                    *self.evicted.entry(k).or_insert(0) += v;
+                }
+            }
+        }
+        self.windows.push_back(win);
+    }
+
+    pub fn windows(&self) -> impl Iterator<Item = &Window> {
+        self.windows.iter()
+    }
+
+    /// The most recently closed window.
+    pub fn latest(&self) -> Option<&Window> {
+        self.windows.back()
+    }
+
+    pub fn len(&self) -> usize {
+        self.windows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    pub fn gaps(&self) -> u64 {
+        self.gaps
+    }
+
+    pub fn restarts(&self) -> u64 {
+        self.restarts
+    }
+
+    /// Cumulative snapshot at the last successful observation.
+    pub fn last_snapshot(&self) -> Option<&Snapshot> {
+        self.last.as_ref()
+    }
+
+    /// Final cumulative counters: the last successful snapshot plus
+    /// counters retired by restarts. The right-hand side of the
+    /// conservation invariant.
+    pub fn final_counters(&self) -> BTreeMap<String, u64> {
+        let mut out = self.base.clone();
+        if let Some(last) = &self.last {
+            for (k, &v) in &last.counters {
+                *out.entry(k.clone()).or_insert(0) += v;
+            }
+        }
+        out.retain(|_, v| *v > 0);
+        out
+    }
+
+    /// Evicted counter deltas plus the deltas of every retained
+    /// window. The left-hand side of the conservation invariant:
+    /// equals [`Timeline::final_counters`] exactly, always.
+    pub fn delta_total(&self) -> BTreeMap<String, u64> {
+        let mut out = self.evicted.clone();
+        for w in &self.windows {
+            for (k, &v) in &w.counters {
+                *out.entry(k.clone()).or_insert(0) += v;
+            }
+        }
+        out.retain(|_, v| *v > 0);
+        out
+    }
+
+    /// Render as the dump-v2 per-node timeline object.
+    pub fn to_json(&self, node: &str) -> Value {
+        let mut o = BTreeMap::new();
+        o.insert("node".to_string(), Value::Str(node.to_string()));
+        o.insert("gaps".to_string(), Value::Num(self.gaps as f64));
+        o.insert("restarts".to_string(), Value::Num(self.restarts as f64));
+        o.insert("evicted_windows".to_string(), Value::Num(self.evicted_windows as f64));
+        let windows = self
+            .windows
+            .iter()
+            .map(|w| {
+                let mut wo = BTreeMap::new();
+                wo.insert("index".to_string(), Value::Num(w.index as f64));
+                wo.insert("gapped".to_string(), Value::Bool(w.gapped));
+                wo.insert("recovered".to_string(), Value::Bool(w.recovered));
+                wo.insert(
+                    "counters".to_string(),
+                    Value::Obj(
+                        w.counters
+                            .iter()
+                            .map(|(k, &v)| (k.clone(), Value::Num(v as f64)))
+                            .collect(),
+                    ),
+                );
+                wo.insert(
+                    "gauges".to_string(),
+                    Value::Obj(
+                        w.gauges.iter().map(|(k, &v)| (k.clone(), Value::Num(v))).collect(),
+                    ),
+                );
+                wo.insert(
+                    "hists".to_string(),
+                    Value::Obj(
+                        w.hists
+                            .iter()
+                            .map(|(k, h)| {
+                                let mut ho = BTreeMap::new();
+                                ho.insert("n".to_string(), Value::Num(h.n as f64));
+                                ho.insert("p50".to_string(), Value::Num(h.p50));
+                                ho.insert("p99".to_string(), Value::Num(h.p99));
+                                ho.insert("exact".to_string(), Value::Bool(h.exact));
+                                (k.clone(), Value::Obj(ho))
+                            })
+                            .collect(),
+                    ),
+                );
+                Value::Obj(wo)
+            })
+            .collect();
+        o.insert("windows".to_string(), Value::Arr(windows));
+        o.insert(
+            "final".to_string(),
+            Value::Obj(
+                self.final_counters()
+                    .iter()
+                    .map(|(k, &v)| (k.clone(), Value::Num(v as f64)))
+                    .collect(),
+            ),
+        );
+        o.insert(
+            "evicted".to_string(),
+            Value::Obj(
+                self.evicted.iter().map(|(k, &v)| (k.clone(), Value::Num(v as f64))).collect(),
+            ),
+        );
+        Value::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(counters: &[(&str, u64)], lat: &[f64]) -> Snapshot {
+        let mut s = Snapshot::default();
+        for (k, v) in counters {
+            s.counters.insert(k.to_string(), *v);
+        }
+        if !lat.is_empty() {
+            let mut st = Stats::new();
+            for &x in lat {
+                st.push(x);
+            }
+            s.histograms.insert("lat".to_string(), st);
+        }
+        s
+    }
+
+    #[test]
+    fn window_deltas_conserve_counters() {
+        let mut t = Timeline::new(64);
+        t.observe(0, Some(snap(&[("served", 10)], &[])));
+        t.observe(1, Some(snap(&[("served", 25), ("failed", 1)], &[])));
+        t.observe(2, None); // gap
+        t.observe(3, Some(snap(&[("served", 40), ("failed", 1)], &[])));
+        assert_eq!(t.delta_total(), t.final_counters());
+        assert_eq!(t.final_counters().get("served"), Some(&40));
+        assert_eq!(t.gaps(), 1);
+        let deltas: Vec<u64> =
+            t.windows().map(|w| w.counters.get("served").copied().unwrap_or(0)).collect();
+        assert_eq!(deltas, vec![10, 15, 0, 15]);
+    }
+
+    #[test]
+    fn conservation_survives_ring_eviction() {
+        let mut t = Timeline::new(4);
+        for i in 0..32u64 {
+            t.observe(i, Some(snap(&[("served", (i + 1) * 3)], &[])));
+        }
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.delta_total(), t.final_counters());
+        assert_eq!(t.final_counters().get("served"), Some(&96));
+    }
+
+    #[test]
+    fn conservation_survives_restart() {
+        let mut t = Timeline::new(64);
+        t.observe(0, Some(snap(&[("served", 100)], &[])));
+        t.observe(1, None); // killed
+        t.observe_recovered(2, snap(&[("served", 7)], &[])); // fresh registry
+        assert_eq!(t.restarts(), 1);
+        assert_eq!(t.delta_total(), t.final_counters());
+        assert_eq!(t.final_counters().get("served"), Some(&107));
+        let last = t.windows().last().unwrap();
+        assert!(last.recovered);
+        assert_eq!(last.counters.get("served"), Some(&7));
+    }
+
+    #[test]
+    fn window_quantiles_are_exact_below_the_cap() {
+        let mut t = Timeline::new(8);
+        t.observe(0, Some(snap(&[], &[1.0, 2.0, 3.0])));
+        // window 1 adds a clearly separated batch; its quantiles must
+        // come from the new tail only, not the cumulative distribution
+        t.observe(1, Some(snap(&[], &[1.0, 2.0, 3.0, 100.0, 101.0, 102.0, 103.0])));
+        let w1 = t.windows().nth(1).unwrap();
+        let h = &w1.hists["lat"];
+        assert_eq!(h.n, 4);
+        assert!(h.exact);
+        assert!(h.p50 >= 100.0, "window p50 {} must ignore older samples", h.p50);
+        assert_eq!(h.p99, 103.0);
+    }
+
+    #[test]
+    fn gauges_fold_by_explicit_kind() {
+        let mut a = Snapshot::default();
+        a.gauges.insert("applied_epoch".to_string(), 7.0);
+        a.gauges.insert("queue_depth".to_string(), 4.0);
+        a.gauges.insert("epoch_lag".to_string(), 1.0);
+        a.gauges.insert("whatever".to_string(), 1.0);
+        let mut b = Snapshot::default();
+        b.gauges.insert("applied_epoch".to_string(), 5.0);
+        b.gauges.insert("queue_depth".to_string(), 9.0);
+        b.gauges.insert("epoch_lag".to_string(), 3.0);
+        b.gauges.insert("whatever".to_string(), 2.0);
+        let folded = fold_gauges([&a, &b]);
+        assert_eq!(folded["applied_epoch"], 5.0); // min: stalest replica
+        assert_eq!(folded["queue_depth"], 13.0); // sum
+        assert_eq!(folded["epoch_lag"], 3.0); // max
+        assert_eq!(folded["whatever"], 2.0); // last writer (node order)
+    }
+}

@@ -7,15 +7,22 @@
 //! * on the simulated distributed tier the per-stage spans of every
 //!   sampled request sum to its end-to-end latency within 5% (they
 //!   partition it by construction), with shard service always
-//!   individually attributed.
+//!   individually attributed;
+//! * the continuous collector on the same tier: fixed seed in, a
+//!   byte-identical timeline out; every per-node row and the cluster
+//!   fold conserve (evicted + Σ window deltas == final counters); a
+//!   node killed mid-run gaps, flips unhealthy within two windows of
+//!   its death, and no other node gains a gap.
 
 use std::sync::Arc;
 
+use celeste::jsonlite;
 use celeste::prng::Rng;
-use celeste::serve::dist::{Router, RouterConfig};
+use celeste::serve::dist::{FailureSchedule, Router, RouterConfig, Routing};
 use celeste::serve::{
-    self, drive_open_loop, fuzz_query, LoadGen, LoadGenConfig, Outcome, Registry, Request,
-    RouterEngine, SchedConfig, SchedKind, Server, ServerConfig, SimClock, Stage, Store,
+    self, drive_open_loop, drive_open_loop_with, fuzz_query, Collector, CollectorConfig, LoadGen,
+    LoadGenConfig, Outcome, Registry, Request, RouterEngine, SchedConfig, SchedKind, Server,
+    ServerConfig, SimClock, Stage, Store, Verdict,
 };
 
 fn test_store(n: usize, shards: usize, seed: u64) -> Arc<Store> {
@@ -130,4 +137,121 @@ fn sim_tier_spans_partition_end_to_end_latency() {
     );
     let snap = rengine.registry().snapshot();
     assert_eq!(snap.histograms["stage_shard_execute"].n, 30);
+}
+
+const COLLECT_NODES: usize = 4;
+const COLLECT_SECS: f64 = 0.25;
+const COLLECT_WINDOW_S: f64 = 0.025;
+
+/// Drive the simulated p2c tier under the hotspot mix with the
+/// continuous collector sampling the front-end registry plus every
+/// node each window (the `serve-bench --collect-ms` wiring, inlined);
+/// `kill` optionally schedules a mid-run node death (`"NODE@T"`).
+fn collect_run(store: &Arc<Store>, kill: Option<&str>) -> Collector {
+    let mut router = Router::new(
+        Arc::clone(store),
+        COLLECT_NODES,
+        2,
+        RouterConfig { routing: Routing::PowerOfTwo, seed: 4242, ..Default::default() },
+    );
+    if let Some(spec) = kill {
+        router = router.with_schedule(FailureSchedule::parse(spec).expect("valid kill spec"));
+    }
+    let rengine = RouterEngine::new(router);
+    let names: Vec<String> = std::iter::once("local".to_string())
+        .chain((0..COLLECT_NODES).map(|n| format!("node-{n}")))
+        .collect();
+    let mut c =
+        Collector::new(CollectorConfig { window_s: COLLECT_WINDOW_S, ..Default::default() }, names);
+    let cfg = LoadGenConfig::scenario("hotspot", 4242).expect("known scenario");
+    let mut gen = LoadGen::new(cfg, store.width, store.height);
+    let mut clock = SimClock::new();
+    let scraper = rengine.clone();
+    let drive =
+        drive_open_loop_with(&rengine, &mut clock, &mut gen, 20_000.0, COLLECT_SECS, |at| {
+            let mut src = |t: f64| {
+                let mut v = vec![Some(scraper.registry().snapshot())];
+                v.extend(scraper.node_samples(t));
+                v
+            };
+            c.tick(at, &mut src);
+        });
+    rengine.registry().absorb_drive(&drive);
+    let mut src = |t: f64| {
+        let mut v = vec![Some(rengine.registry().snapshot())];
+        v.extend(rengine.node_samples(t));
+        v
+    };
+    c.finish(COLLECT_SECS, &mut src);
+    c
+}
+
+/// Acceptance: a fixed seed yields a byte-identical timeline — the
+/// sim-tier collection path is fully deterministic, so any diff in the
+/// rendered JSON across reruns is a code change, never noise.
+#[test]
+fn collected_timeline_is_byte_identical_across_fixed_seed_reruns() {
+    let store = test_store(600, 6, 31);
+    let a = jsonlite::to_string(&collect_run(&store, None).to_json());
+    let b = jsonlite::to_string(&collect_run(&store, None).to_json());
+    assert!(a.contains("\"window_ms\""), "rendered timeline missing its window_ms field");
+    assert_eq!(a, b, "same seed, same store: the collected timeline must not drift");
+}
+
+/// Acceptance: every row conserves — evicted counter deltas plus the
+/// per-window deltas reproduce the final cumulative counters exactly —
+/// and the cluster fold carries windowed latency rollups, not just an
+/// end-of-run aggregate.
+#[test]
+fn collected_windows_conserve_and_carry_latency_rollups() {
+    let store = test_store(600, 6, 31);
+    let c = collect_run(&store, None);
+    for (i, name) in c.names().iter().enumerate() {
+        let t = c.node_timeline(i);
+        assert_eq!(t.delta_total(), t.final_counters(), "node {name:?} row must conserve");
+        assert_eq!(t.gaps(), 0, "node {name:?} gapped with nothing killed");
+    }
+    let cl = c.cluster();
+    assert_eq!(cl.delta_total(), cl.final_counters(), "cluster fold must conserve");
+    let live = cl
+        .windows()
+        .filter(|w| !w.gapped && w.hists.get("request_latency").is_some_and(|h| h.n > 0))
+        .count();
+    assert!(live >= 4, "want >= 4 windows with request_latency rollups, got {live}");
+}
+
+/// Acceptance: a node killed mid-run becomes visible as gapped windows
+/// on its own row only, its health verdict flips to unhealthy within
+/// two windows of the death, and conservation survives the gap.
+#[test]
+fn killed_node_gaps_and_flips_unhealthy_within_two_windows() {
+    let store = test_store(600, 6, 31);
+    let kill_t = 0.1;
+    let c = collect_run(&store, Some("1@0.1"));
+    let victim = "node-1";
+    let vi = c.names().iter().position(|n| n == victim).expect("victim row exists");
+    let row = c.node_timeline(vi);
+    assert!(row.gaps() > 0, "killed node shows no gapped windows");
+    assert_eq!(row.delta_total(), row.final_counters(), "gapped row must still conserve");
+    for (i, name) in c.names().iter().enumerate() {
+        if i != vi {
+            assert_eq!(
+                c.node_timeline(i).gaps(),
+                0,
+                "node {name:?} gained a gap but only {victim:?} was killed"
+            );
+        }
+    }
+    let kill_window = (kill_t / COLLECT_WINDOW_S) as u64;
+    let flip = c
+        .transitions()
+        .iter()
+        .find(|t| t.node == victim && t.to == Verdict::Unhealthy)
+        .expect("killed node must flip to unhealthy");
+    assert!(
+        flip.window <= kill_window + 2,
+        "unhealthy flip at window {} but the kill landed in window {kill_window}",
+        flip.window
+    );
+    assert_eq!(c.verdict(vi), Verdict::Unhealthy, "victim verdict at end of run");
 }
