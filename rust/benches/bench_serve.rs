@@ -10,6 +10,9 @@
 //! cost) — all driven through the unified `QueryEngine` stack. A
 //! windowed-collector pass over the p2c run splits the latency story
 //! into steady-state p99 (median window) vs the worst single window.
+//! A control-plane pass drives a placement-derived moving hotspot
+//! through a static vs rebalancing-controlled router and records both
+//! sides' load imbalance and p99 (the `control` section).
 //! Results
 //! are also written to `BENCH_serve.json` so the perf trajectory
 //! accumulates across PRs.
@@ -19,7 +22,7 @@ use std::sync::Arc;
 use celeste::benchkit::{bench, black_box, BenchResult};
 use celeste::experiments::obj_pub;
 use celeste::jsonlite::{self, Value};
-use celeste::serve::dist::{DistReport, FailureSchedule, Router, RouterConfig, Routing};
+use celeste::serve::dist::{CostModel, DistReport, FailureSchedule, Router, RouterConfig, Routing};
 use celeste::serve::{
     self, drive_closed_loop, drive_open_loop, drive_open_loop_with, metric, Cached, Consistency,
     Consistent, DirectEngine, DriftConfig, DriftGen, DriveReport, Hedged, IngestDriver, Ingestor,
@@ -565,13 +568,109 @@ fn main() {
         if transport_parity { "YES" } else { "NO" }
     );
 
+    // --- adaptive control plane: a moving hotspot at equal offered
+    //     load, static placement vs the rebalancing controller. The
+    //     workload is derived from the actual placement (every cone
+    //     lands on a shard hosted by the initially most-crowded node,
+    //     ~3.2x one node's service capacity), so the margin is
+    //     structural, not statistical; bench_check requires the
+    //     controller to beat static on BOTH load imbalance and p99 ---
+    println!("== control: moving hotspot, static vs rebalanced placement ==");
+    let ctl_store = {
+        let snap = celeste::serve::snapshot::synthetic(3200, 77);
+        Arc::new(Store::build(snap.sources, snap.width, snap.height, 32))
+    };
+    let ctl_rcfg = RouterConfig {
+        cost: CostModel { base_service: 400e-6, ..Default::default() },
+        ..Default::default()
+    };
+    let ctl_router = || Router::new(Arc::clone(&ctl_store), 8, 1, ctl_rcfg.clone());
+    let ctl_placement0 = ctl_router().placement.clone();
+    let ctl_counts = ctl_placement0.counts_per_node();
+    let ctl_crowded = (0..8).max_by_key(|&n| ctl_counts[n]).expect("eight nodes");
+    let ctl_hot: Vec<usize> = (0..32)
+        .filter(|&s| {
+            ctl_placement0.shard_nodes[s].contains(&ctl_crowded)
+                && !ctl_store.shards[s].sources.is_empty()
+        })
+        .take(4)
+        .collect();
+    assert!(ctl_hot.len() >= 2, "the crowded node must host >= 2 populated shards");
+    let ctl_pairs = [
+        [ctl_hot[0], ctl_hot[1 % ctl_hot.len()]],
+        [ctl_hot[2 % ctl_hot.len()], ctl_hot[3 % ctl_hot.len()]],
+    ];
+    let ctl_dt = 125e-6; // 8000 qps across a 0.5s run, hotspot moving at 0.25s
+    let ctl_queries: Vec<Query> = (0..4000usize)
+        .map(|i| {
+            let phase = if (i as f64 * ctl_dt) < 0.25 { 0 } else { 1 };
+            let shard = ctl_pairs[phase][i % 2];
+            Query::Cone {
+                center: ctl_store.shards[shard].sources[0].pos,
+                radius: 2.0,
+                filter: SourceFilter::Any,
+            }
+        })
+        .collect();
+    let ctl_run = |controlled: bool| {
+        let mut router = ctl_router();
+        let mut ctl = serve::Controller::new(
+            serve::ControlConfig {
+                period_s: 0.05,
+                cooldown_periods: 0,
+                min_window_subqueries: 16,
+                ..Default::default()
+            },
+            8,
+            &(0..8).collect::<Vec<usize>>(),
+        );
+        let mut lat = Vec::with_capacity(ctl_queries.len());
+        for (i, q) in ctl_queries.iter().enumerate() {
+            let at = i as f64 * ctl_dt;
+            if controlled {
+                let nodes: Vec<serve::NodeLoad> = (0..8)
+                    .map(|n| serve::NodeLoad {
+                        alive: router.node_alive(n),
+                        served: router.served_per_node[n],
+                        busy_s: router.busy_per_node[n],
+                    })
+                    .collect();
+                let shard_served = router.served_per_shard.clone();
+                if let Some(target) = ctl.tick(at, &nodes, &shard_served, &router.placement) {
+                    router.rebalance_to(at, &target);
+                }
+            }
+            let (res, done) = router.execute(at, q);
+            assert!(res.is_some(), "control query {i} failed");
+            lat.push(done - at);
+        }
+        lat.sort_by(|a, b| a.total_cmp(b));
+        let max = router.served_per_node.iter().copied().max().unwrap_or(0) as f64;
+        let mean = router.served_per_node.iter().sum::<u64>() as f64
+            / router.served_per_node.len() as f64;
+        let imb = max / mean.max(1e-9);
+        (imb, pctl(&lat, 0.99), router.migrations, router.failed, ctl.log().clone())
+    };
+    let (static_imb, static_hot_p99, _, static_ctl_failed, _) = ctl_run(false);
+    let (reb_imb, reb_p99, ctl_migrations, reb_failed, ctl_log) = ctl_run(true);
+    println!(
+        "  static:     imbalance={static_imb:.2} p99={:.3}ms failed={static_ctl_failed}",
+        static_hot_p99 * 1e3
+    );
+    println!(
+        "  rebalanced: imbalance={reb_imb:.2} p99={:.3}ms failed={reb_failed} \
+         migrations={ctl_migrations} decisions={}",
+        reb_p99 * 1e3,
+        ctl_log.events.len()
+    );
+
     // --- machine-readable results ---
     let single_fields: Vec<(&str, Value)> = singles
         .iter()
         .map(|r| (r.name.as_str(), Value::Num(r.ns_per_iter)))
         .collect();
     let json = obj_pub(vec![
-        ("schema", Value::Str("celeste-bench-serve-v7".to_string())),
+        ("schema", Value::Str("celeste-bench-serve-v8".to_string())),
         ("single_query_ns", obj_pub(single_fields)),
         (
             "scheduler",
@@ -707,6 +806,33 @@ fn main() {
                 ("events", Value::Num(rep_kill.failover.n as f64)),
                 ("mean_ms", Value::Num(rep_kill.failover.mean() * 1e3)),
                 ("max_ms", Value::Num(fo_max_ms)),
+            ]),
+        ),
+        (
+            "control",
+            obj_pub(vec![
+                ("mix", Value::Str("moving-hotspot".to_string())),
+                ("nodes", Value::Num(8.0)),
+                ("shards", Value::Num(32.0)),
+                ("qps", Value::Num(8000.0)),
+                ("static_imbalance", Value::Num(static_imb)),
+                ("rebalanced_imbalance", Value::Num(reb_imb)),
+                ("static_p99_ms", Value::Num(static_hot_p99 * 1e3)),
+                ("rebalanced_p99_ms", Value::Num(reb_p99 * 1e3)),
+                ("migrations", Value::Num(ctl_migrations as f64)),
+                ("decisions", Value::Num(ctl_log.events.len() as f64)),
+                (
+                    "failed_queries",
+                    Value::Num((static_ctl_failed + reb_failed) as f64),
+                ),
+                (
+                    "rebalance_beats_static_imbalance",
+                    Value::Bool(reb_imb < static_imb),
+                ),
+                (
+                    "rebalance_beats_static_p99",
+                    Value::Bool(reb_p99 < static_hot_p99),
+                ),
             ]),
         ),
     ]);

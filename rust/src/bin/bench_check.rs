@@ -38,7 +38,7 @@ struct Gate {
     label: &'static str,
 }
 
-const GATES: [Gate; 13] = [
+const GATES: [Gate; 14] = [
     Gate { path: "dist.random_p99_ms", label: "dist hotspot p99 (random routing)" },
     Gate { path: "dist.rr_p99_ms", label: "dist hotspot p99 (round-robin)" },
     Gate { path: "dist.p2c_p99_ms", label: "dist hotspot p99 (p2c)" },
@@ -62,13 +62,25 @@ const GATES: [Gate; 13] = [
     // aggregate would average away.
     Gate { path: "timeline.steady_p99_ms", label: "timeline steady-state p99 (median window)" },
     Gate { path: "timeline.worst_p99_ms", label: "timeline worst-window p99" },
+    // Control-plane pass (schema v8): the rebalanced side of the
+    // moving-hotspot run is simulated-time deterministic, so its tail
+    // is gated like the other dist metrics.
+    Gate { path: "control.rebalanced_p99_ms", label: "control moving-hotspot p99 (rebalanced)" },
 ];
 
 /// Acceptance booleans that must be true in the fresh run.
-const REQUIRED_TRUE: [(&str, &str); 3] = [
+const REQUIRED_TRUE: [(&str, &str); 5] = [
     ("dist.p2c_beats_random", "p2c beats random routing on hotspot p99"),
     ("failover.zero_failed", "zero failed queries through a replica kill"),
     ("transport.parity", "tcp transport byte-identical to in-process execution"),
+    (
+        "control.rebalance_beats_static_imbalance",
+        "rebalancing beats static placement on load imbalance (moving hotspot)",
+    ),
+    (
+        "control.rebalance_beats_static_p99",
+        "rebalancing beats static placement on request p99 (moving hotspot)",
+    ),
 ];
 
 /// Reported (never gated) booleans — wall-clock, runner-dependent.
@@ -214,6 +226,38 @@ fn check_timeline_section(fresh: &Value, md: &mut String, failures: &mut Vec<Str
     }
 }
 
+/// Structural checks on the control-plane section: the controller must
+/// have actually migrated at least one replica range, logged its
+/// decisions, and failed zero queries while doing so (in-flight
+/// queries keep succeeding during migration).
+fn check_control_section(fresh: &Value, md: &mut String, failures: &mut Vec<String>) {
+    let migrations = lookup(fresh, "control.migrations").and_then(Value::as_f64);
+    let decisions = lookup(fresh, "control.decisions").and_then(Value::as_f64);
+    let failed = lookup(fresh, "control.failed_queries").and_then(Value::as_f64);
+    match (migrations, decisions, failed) {
+        (Some(m), Some(d), Some(f)) => {
+            let ok = m >= 1.0 && d >= 1.0 && f == 0.0;
+            if !ok {
+                failures.push(format!(
+                    "control section shows {m:.0} migration(s), {d:.0} decision(s), \
+                     {f:.0} failed quer(ies); want >= 1 migration, >= 1 decision, 0 failed"
+                ));
+            }
+            md.push_str(&format!(
+                "| control migrations (decisions, failed) | — | {m:.0} ({d:.0}, {f:.0}) | — | {} |\n",
+                if ok { "✅" } else { "❌" }
+            ));
+        }
+        _ => {
+            failures.push(
+                "control.migrations / control.decisions / control.failed_queries missing"
+                    .to_string(),
+            );
+            md.push_str("| control migrations (decisions, failed) | — | **missing** | — | ❌ |\n");
+        }
+    }
+}
+
 fn lookup<'a>(root: &'a Value, path: &str) -> Option<&'a Value> {
     let mut cur = root;
     for part in path.split('.') {
@@ -322,6 +366,7 @@ fn main() -> Result<()> {
     check_scheduler_8w(&fresh, SCHED_8W_SLACK_PCT, &mut md, &mut failures);
     check_transport(&fresh, &mut md, &mut failures);
     check_timeline_section(&fresh, &mut md, &mut failures);
+    check_control_section(&fresh, &mut md, &mut failures);
     for (path, label) in &INFORMATIONAL {
         let got = lookup(&fresh, path).and_then(Value::as_bool);
         md.push_str(&format!(

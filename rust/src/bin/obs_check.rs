@@ -32,7 +32,11 @@
 //!   `recovered` window, `restarts >= 1`, and a flip back to healthy;
 //! * with `--expect-recovery`, the dump carries the WAL recovery
 //!   gauges (`recovered_epoch`, `recovery_replay_ms`) somewhere — the
-//!   recover-bench / restarted-server visibility gate.
+//!   recover-bench / restarted-server visibility gate;
+//! * with `--expect-migrations`, the control plane's decision log is
+//!   present (`control` section, v3) and recorded at least one
+//!   rebalance decision — the moving-hotspot smoke's proof that the
+//!   controller actually acted, not just ran.
 //!
 //! Exit 0 when every asserted condition holds, 1 otherwise (each
 //! failure on stderr).
@@ -43,7 +47,7 @@ use celeste::jsonlite::{self, Value};
 
 /// The dump schema this checker understands (must match
 /// `serve::obs::write_dump`).
-const SCHEMA: &str = "celeste-obs-dump-v2";
+const SCHEMA: &str = "celeste-obs-dump-v3";
 
 /// Client span sums must reproduce end-to-end latency within this
 /// fraction (the acceptance-criteria tolerance).
@@ -259,6 +263,43 @@ fn check_recovery_gauges(dump: &Value, failures: &mut Vec<String>) {
     }
 }
 
+/// The control-plane gate: the dump's `control` section must exist
+/// (the run passed --rebalance) and its decision log must hold at
+/// least one rebalance whose event record names the hot node — a
+/// controller that ran but never acted fails here.
+fn check_control(dump: &Value, failures: &mut Vec<String>) {
+    let Some(control) = dump.get("control") else {
+        failures.push(
+            "dump has no `control` section; run serve-bench with --rebalance MS".to_string(),
+        );
+        return;
+    };
+    let rebalances =
+        control.get("rebalances").and_then(Value::as_f64).unwrap_or(0.0);
+    if rebalances < 1.0 {
+        failures.push(format!(
+            "control log shows {rebalances:.0} rebalance decision(s); the moving hotspot \
+             should have triggered at least one"
+        ));
+    }
+    let decisions = control.get("decisions").and_then(Value::as_arr).unwrap_or(&[]);
+    if decisions.is_empty() {
+        failures.push("control section has an empty `decisions` array".to_string());
+        return;
+    }
+    let named = decisions.iter().any(|d| {
+        d.get("event").and_then(Value::as_str) == Some("rebalance")
+            && d.get("hot_node").and_then(Value::as_f64).is_some()
+    });
+    if !named {
+        failures.push(
+            "no rebalance decision names its hot_node; the trigger measurement was \
+             not recorded"
+                .to_string(),
+        );
+    }
+}
+
 fn span_sum_ms(spans: &Value) -> f64 {
     spans
         .as_obj()
@@ -340,6 +381,7 @@ fn main() -> Result<()> {
     let mut killed: Option<String> = None;
     let mut expect_recovered = false;
     let mut expect_recovery = false;
+    let mut expect_migrations = false;
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         match a.as_str() {
@@ -368,11 +410,12 @@ fn main() -> Result<()> {
             },
             "--expect-recovered" => expect_recovered = true,
             "--expect-recovery" => expect_recovery = true,
+            "--expect-migrations" => expect_migrations = true,
             other => bail!(
                 "unknown argument {other:?} \
                  (want --dump FILE [--expect-net] [--expect-stale] [--min-traces N] \
                  [--timeline] [--min-windows N] [--nodes N] [--killed NODE] \
-                 [--expect-recovered] [--expect-recovery])"
+                 [--expect-recovered] [--expect-recovery] [--expect-migrations])"
             ),
         }
     }
@@ -380,7 +423,7 @@ fn main() -> Result<()> {
         bail!(
             "usage: obs_check --dump FILE [--expect-net] [--expect-stale] [--min-traces N] \
              [--timeline] [--min-windows N] [--nodes N] [--killed NODE] \
-             [--expect-recovered] [--expect-recovery]"
+             [--expect-recovered] [--expect-recovery] [--expect-migrations]"
         );
     };
 
@@ -449,6 +492,9 @@ fn main() -> Result<()> {
     }
     if expect_recovery {
         check_recovery_gauges(&dump, &mut failures);
+    }
+    if expect_migrations {
+        check_control(&dump, &mut failures);
     }
 
     let n_traces = dump.get("traces").and_then(Value::as_arr).map_or(0, <[Value]>::len);

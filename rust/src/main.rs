@@ -120,6 +120,29 @@ USAGE: celeste <command> [flags]
            [--routing P]    random | rr | p2c            (default p2c)
            [--kill-node S]  fault spec 'NODE@T' (kill) or 'NODE@T1:T2'
                             (kill+revive), comma-separated, sim seconds
+           Adaptive control plane (docs/CONTROL.md):
+           [--rebalance MS] run a controller that closes a decision
+                            window every MS ms: detect the hottest node
+                            from windowed per-node load and migrate its
+                            hottest shard replicas to the coolest
+                            members (minimal-move rendezvous target);
+                            in-flight queries keep succeeding during
+                            migration. Works on both distributed tiers
+                            (sim and tcp); decisions land in the
+                            --obs-dump 'control' section
+           [--autoscale L..H] let the controller grow/retire membership
+                            inside the band (sim tier only; requires
+                            --rebalance; the band must bracket
+                            --dist-nodes and hold --replicas)
+           [--priority-mix L:N:H] stamp each request Low/Normal/High by
+                            these weights and grade admission by
+                            (priority, cost): under overload the
+                            cheap+urgent survive, expensive+background
+                            shed first (any tier)
+           [--load-curve P:K] swell the offered rate by a raised-cosine
+                            curve with period P seconds peaking at K x
+                            the base --qps — the diurnal/spiky shape
+                            the autoscaler reacts to (any tier)
            --qps/--secs then drive a simulated-time open loop through
            the fabric-attached router; prints per-class p50/p99,
            per-node load imbalance, bytes moved, failover record,
@@ -143,7 +166,7 @@ USAGE: celeste <command> [flags]
                            overlaps request transmit with server work
            Observability (docs/OBSERVABILITY.md):
            [--obs-dump F]  write a jsonlite metrics + trace dump at
-                           exit (schema celeste-obs-dump-v2). On the
+                           exit (schema celeste-obs-dump-v3). On the
                            tcp transport this also scrapes every live
                            shard server's registry over the wire
                            (StatsReq) and runs a stale-consistency
@@ -177,7 +200,7 @@ USAGE: celeste <command> [flags]
            [--obs-dump F]  write the write-side WAL registry merged
                            with the recovery registry (recovered_epoch
                            and recovery_*_ms gauges, wal_fsync_s) as a
-                           celeste-obs-dump-v2 file
+                           celeste-obs-dump-v3 file
            Ingests P epochs through a durable log, drops the store,
            recovers from disk, and prints the RTO split into
            checkpoint-load vs tail-replay plus 'parity: ok' when the
@@ -512,148 +535,31 @@ fn stage_p99_line(snap: &serve::obs::Snapshot) -> Option<String> {
 }
 
 fn cmd_serve_bench(cli: &Cli) -> Result<()> {
-    // --threads sizes the single-host worker pool; --dist-nodes replaces
-    // that pool with the simulated multi-node tier. Naming both is a
-    // contradiction we refuse rather than guess about (--dist-nodes 0
-    // keeps its historical meaning: distributed tier off).
-    let transport = cli.flag_str("transport", "sim");
-    if !matches!(transport, "sim" | "tcp") {
-        bail!("bad --transport {transport:?}: want sim|tcp");
-    }
-    let tcp = transport == "tcp";
-    let dist = cli.flag_count("dist-nodes", 0, 0).map_err(|e| anyhow::anyhow!(e))? > 0;
-    if tcp && !dist {
-        bail!(
-            "--transport tcp spawns real shard-server processes; say how many with \
-             --dist-nodes N (N >= 1)"
-        );
-    }
-    if tcp {
-        for key in ["routing", "hedge-ms", "hedge-budget"] {
-            if cli.flag(key).is_some() {
-                bail!(
-                    "--{key} configures the simulated fabric tier; the tcp transport \
-                     measures real sockets and does not take it"
-                );
-            }
-        }
-    }
-    if dist && cli.flag("threads").is_some() {
-        bail!(
-            "--threads and --dist-nodes contradict: --threads sizes the single-host worker \
-             pool, --dist-nodes replaces it with the simulated multi-node tier. Pass exactly \
-             one of them (plain serve-bench = single-host)."
-        );
-    }
-    if !dist {
-        for key in ["replicas", "routing", "kill-node", "hedge-ms", "hedge-budget"] {
-            if cli.flag(key).is_some() {
-                bail!("--{key} only applies to the distributed tier; add --dist-nodes N");
-            }
-        }
-        for key in ["trace-sample", "slow-ms"] {
-            if cli.flag(key).is_some() {
-                bail!(
-                    "--{key} samples per-request span traces, which live on the distributed \
-                     tiers; add --dist-nodes N (the single-host tier still supports --obs-dump)"
-                );
-            }
-        }
-    } else {
-        if cli.flag("queue-depth").is_some() {
-            bail!(
-                "--queue-depth only applies to the single-host tier (the simulated tier models \
-                 backlog as latency, not sheds); drop it or drop --dist-nodes"
-            );
-        }
-        for key in ["sched", "batch"] {
-            if cli.flag(key).is_some() {
-                bail!(
-                    "--{key} configures the single-host worker pool's request scheduler; \
-                     the simulated tier has no worker pool. Drop it or drop --dist-nodes."
-                );
-            }
-        }
-    }
-    if cli.flag("ingest-batch").is_some() && cli.flag("ingest-qps").is_none() {
-        bail!("--ingest-batch sizes ingestion publishes; add --ingest-qps R to enable them");
-    }
-    if cli.flag("hedge-budget").is_some() && cli.flag("hedge-ms").is_none() {
-        bail!("--hedge-budget caps the hedge layer; add --hedge-ms B to enable hedging");
-    }
-    // durability flag matrix: the WAL logs ingestion publishes, so it
-    // needs an ingest stream; the simulated tier has nothing real to
-    // fsync; compaction rides the single-host ingest loop for now
-    if cli.flag("wal-dir").is_some() && cli.flag("ingest-qps").is_none() {
-        bail!("--wal-dir logs ingestion publishes; add --ingest-qps R to generate them");
-    }
-    if cli.flag("wal-dir").is_some() && dist && !tcp {
-        bail!(
-            "--wal-dir appends and fsyncs a real on-disk log; the simulated fabric tier \
-             has nothing durable to protect. Use the single-host tier or --transport tcp."
-        );
-    }
-    if cli.flag("checkpoint-every").is_some() && cli.flag("wal-dir").is_none() {
-        bail!("--checkpoint-every sets the WAL checkpoint cadence; add --wal-dir DIR");
-    }
-    if cli.flag("compact-threshold").is_some() && dist {
-        bail!(
-            "--compact-threshold runs the single-host Hilbert-range compactor; \
-             distributed compaction is not wired yet. Drop --dist-nodes."
-        );
-    }
-    if cli.flag("compact-threshold").is_some() && cli.flag("ingest-qps").is_none() {
-        bail!(
-            "--compact-threshold watches shard skew produced by live ingestion; \
-             add --ingest-qps R"
-        );
-    }
-    if cli.flag("pipeline").is_some() && !tcp {
-        bail!(
-            "--pipeline sets per-connection request pipelining on real sockets; \
-             add --transport tcp"
-        );
-    }
-    // counts are validated, not silently clamped: `--threads 0` (or a
-    // negative / non-numeric value the old parser defaulted away) is a
-    // misconfiguration the user should hear about
+    // every flag is parsed and cross-validated in one place — the full
+    // contradiction matrix lives (and is unit-tested) in serve::config
+    let cfg = serve::ServeConfig::from_cli(cli).map_err(anyhow::Error::msg)?;
     let count = |key, default, min| cli.flag_count(key, default, min).map_err(anyhow::Error::msg);
-    let threads = count("threads", 4, 1)?;
-    let shards = count("shards", 8, 1)?;
-    let qps = cli.flag_parse("qps", 2000.0f64);
-    let secs = cli.flag_parse("secs", 3.0f64).max(0.1);
-    let mix = cli.flag_str("mix", "uniform");
-    let seed = cli.flag_u64("seed", 42);
-    let n_sources = count("sources", 5000, 1)?;
-    let sched_s = cli.flag_str("sched", "condvar");
-    let Some(sched_kind) = serve::SchedKind::parse(sched_s) else {
-        bail!("bad --sched {sched_s:?}: want condvar|steal");
-    };
-    let sched = serve::SchedConfig { kind: sched_kind, batch: count("batch", 1, 1)? };
-    let burst = count("burst", 1, 1)?;
-    let spec = serve::LayerSpec {
-        admit_depth: cli.flag_usize("queue-depth", 1024),
-        cache_entries: cli.flag_usize("cache", 512),
-        hedge_budget: cli.flag_parse("hedge-ms", 0.0f64).max(0.0) * 1e-3,
-        hedge_cap: cli.flag_parse("hedge-budget", 0.05f64).max(0.0),
-    };
+    let (shards, qps, secs, seed) = (cfg.shards, cfg.qps, cfg.secs, cfg.seed);
+    let (threads, sched) = (cfg.threads, cfg.sched);
+    let (spec, mix) = (cfg.spec.clone(), cfg.mix.as_str());
 
     let snap = match cli.flag("snapshot") {
         Some(path) => serve::snapshot::load(std::path::Path::new(path))?,
-        None => serve::snapshot::synthetic(n_sources, seed),
+        None => serve::snapshot::synthetic(cfg.n_sources, seed),
     };
     let (width, height) = (snap.width, snap.height);
     let store = std::sync::Arc::new(snap.into_store(shards));
     println!("{}", store.summary());
-    let gen_cfg = serve::LoadGenConfig { burst, ..loadgen_config(mix, seed)? };
+    let mut gen_cfg = loadgen_config(&cfg.mix, seed)?;
+    cfg.apply_to_loadgen(&mut gen_cfg);
 
     // --- distributed tier when --dist-nodes is set: simulated fabric
     //     by default, real shard-server processes with --transport tcp ---
-    if dist {
-        return if tcp {
-            cmd_serve_bench_tcp(cli, store, gen_cfg, &spec, shards, qps, secs, seed)
+    if cfg.dist() {
+        return if cfg.tcp {
+            cmd_serve_bench_tcp(cli, &cfg, store, gen_cfg)
         } else {
-            cmd_serve_bench_dist(cli, store, gen_cfg, &spec, qps, secs, seed)
+            cmd_serve_bench_dist(cli, &cfg, store, gen_cfg)
         };
     }
     let consistency = parse_consistency(cli)?;
@@ -884,7 +790,7 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
         print_collector_summary(c);
     }
     if let Some(path) = &obs.dump {
-        serve::obs::write_dump(path, &snap, &[], &[], collector.as_ref())?;
+        serve::obs::write_dump(path, &snap, &[], &[], collector.as_ref(), None)?;
         println!("wrote obs dump {path}");
     }
     Ok(())
@@ -900,15 +806,14 @@ fn cmd_serve_bench(cli: &Cli) -> Result<()> {
 /// cache behavior.
 fn cmd_serve_bench_dist(
     cli: &Cli,
+    cfg: &serve::ServeConfig,
     store: std::sync::Arc<serve::Store>,
     gen_cfg: serve::LoadGenConfig,
-    spec: &serve::LayerSpec,
-    qps: f64,
-    secs: f64,
-    seed: u64,
 ) -> Result<()> {
-    let nodes = cli.flag_count("dist-nodes", 4, 1).map_err(anyhow::Error::msg)?;
-    let replicas = cli.flag_count("replicas", 2, 1).map_err(anyhow::Error::msg)?;
+    let (qps, secs, seed) = (cfg.qps, cfg.secs, cfg.seed);
+    let spec = &cfg.spec;
+    let nodes = cfg.dist_nodes.max(1);
+    let replicas = cfg.replicas;
     if replicas > nodes {
         bail!(
             "--replicas {replicas} exceeds --dist-nodes {nodes}: a shard cannot have more \
@@ -943,10 +848,14 @@ fn cmd_serve_bench_dist(
     let obs = parse_obs(cli)?;
     let ingest_qps = cli.flag_parse("ingest-qps", 0.0f64).max(0.0);
     let ingest_batch = cli.flag_count("ingest-batch", 32, 1).map_err(anyhow::Error::msg)?;
-    // the sim tier models backlog as latency; an admission layer on top
-    // would just re-shed what the queue model absorbs, so the dist
-    // stack is cache + hedge over the router
-    let dist_spec = serve::LayerSpec { admit_depth: 0, ..spec.clone() };
+    // the sim tier models backlog as latency, so a uniform admission
+    // bound would just re-shed what the queue model absorbs — but the
+    // graded bound (--priority-mix) sheds *selectively*, which is the
+    // point: keep it, modeling the backlog as outstanding completions
+    let dist_spec = serve::LayerSpec {
+        admit_depth: if spec.graded_admission { spec.admit_depth } else { 0 },
+        ..spec.clone()
+    };
 
     let mut phase_stats: Vec<(String, f64, f64)> = Vec::new();
     let mut obs_snaps: Vec<serve::obs::Snapshot> = Vec::new();
@@ -956,13 +865,21 @@ fn cmd_serve_bench_dist(
     // timeline restarts with it: the dump carries the last phase's
     // collector, whose windows conserve against that phase's registry
     let mut collected: Option<serve::Collector> = None;
+    // the last phase's control-plane decision log rides into the dump
+    let mut ctl_log: Option<serve::DecisionLog> = None;
+    // with --autoscale the fabric is built at the band ceiling but the
+    // placement starts on the first --dist-nodes members; the
+    // controller grows into (or retires from) the headroom
+    let capacity = cfg.capacity();
+    let members0: Vec<usize> = (0..nodes).collect();
     for ingesting in [false, true] {
         if ingesting && ingest_qps <= 0.0 {
             continue;
         }
-        let mut router = serve::dist::Router::new(
+        let mut router = serve::dist::Router::new_among(
             std::sync::Arc::clone(&store),
-            nodes,
+            capacity,
+            &members0,
             replicas,
             serve::dist::RouterConfig { routing, seed, ..Default::default() },
         );
@@ -991,10 +908,16 @@ fn cmd_serve_bench_dist(
         let publisher = rengine.clone();
         let mut collector = (obs.collect_s > 0.0).then(|| {
             let mut names = vec!["local".to_string()];
-            names.extend((0..nodes).map(|n| format!("node-{n}")));
+            // one timeline row per fabric slot: node_samples() reports
+            // the full capacity, including autoscale headroom
+            names.extend((0..capacity).map(|n| format!("node-{n}")));
             make_collector(obs.collect_s, names)
         });
         let scraper = rengine.clone();
+        let mut ctl = cfg
+            .controller_config()
+            .map(|c| serve::Controller::new(c, capacity, &members0));
+        let ctl_engine = rengine.clone();
         let mut t_last = 0.0f64;
         let mut gen = serve::LoadGen::new(gen_cfg.clone(), store.width, store.height);
         let mut clock = serve::SimClock::new();
@@ -1013,6 +936,24 @@ fn cmd_serve_bench_dist(
                         v
                     };
                     c.tick(at, &mut src);
+                }
+                // the control plane ticks between arrivals against the
+                // same router the drive executes on: read windowed
+                // load, maybe start live migrations toward its target
+                if let Some(c) = ctl.as_mut() {
+                    ctl_engine.with_router_mut(|r| {
+                        let loads: Vec<serve::NodeLoad> = (0..r.n_nodes())
+                            .map(|n| serve::NodeLoad {
+                                alive: r.node_alive(n),
+                                served: r.served_per_node[n],
+                                busy_s: r.busy_per_node[n],
+                            })
+                            .collect();
+                        let shard_served = r.served_per_shard.clone();
+                        if let Some(target) = c.tick(at, &loads, &shard_served, &r.placement) {
+                            r.rebalance_to(at, &target);
+                        }
+                    });
                 }
             });
         let report = rengine.dist_report(&drive);
@@ -1046,6 +987,14 @@ fn cmd_serve_bench_dist(
             if skipped > 0.0 {
                 println!("hedge budget: {skipped:.0} request(s) past the cap left unhedged");
             }
+        }
+        if let Some(c) = ctl.take() {
+            println!("{}", c.log().summary());
+            println!(
+                "migrations={}",
+                ctl_engine.with_router(|r| r.migrations)
+            );
+            ctl_log = Some(c.log().clone());
         }
         if let Some(d) = &driver {
             println!(
@@ -1097,7 +1046,14 @@ fn cmd_serve_bench_dist(
     }
     if let Some(path) = &obs.dump {
         let merged = serve::obs::Snapshot::merge_all(&obs_snaps);
-        serve::obs::write_dump(path, &merged, &[], &obs_traces, collected.as_ref())?;
+        serve::obs::write_dump(
+            path,
+            &merged,
+            &[],
+            &obs_traces,
+            collected.as_ref(),
+            ctl_log.as_ref(),
+        )?;
         println!("wrote obs dump {path} ({} trace(s))", obs_traces.len());
     }
     Ok(())
@@ -1113,20 +1069,15 @@ fn cmd_serve_bench_dist(
 /// reaps and removes them.
 fn cmd_serve_bench_tcp(
     cli: &Cli,
+    cfg: &serve::ServeConfig,
     store: std::sync::Arc<serve::Store>,
     gen_cfg: serve::LoadGenConfig,
-    spec: &serve::LayerSpec,
-    shards: usize,
-    qps: f64,
-    secs: f64,
-    seed: u64,
 ) -> Result<()> {
     let snap_path =
         std::env::temp_dir().join(format!("celeste-serve-{}.json", std::process::id()));
     serve::snapshot::save(&snap_path, &store)?;
     let mut children: Vec<std::process::Child> = Vec::new();
-    let result =
-        drive_serve_tcp(cli, store, gen_cfg, spec, shards, qps, secs, seed, &snap_path, &mut children);
+    let result = drive_serve_tcp(cli, cfg, store, gen_cfg, &snap_path, &mut children);
     // --kill-node may have killed some already; reap everything either way
     for child in &mut children {
         let _ = child.kill();
@@ -1136,21 +1087,18 @@ fn cmd_serve_bench_tcp(
     result
 }
 
-#[allow(clippy::too_many_arguments)]
 fn drive_serve_tcp(
     cli: &Cli,
+    cfg: &serve::ServeConfig,
     store: std::sync::Arc<serve::Store>,
     gen_cfg: serve::LoadGenConfig,
-    spec: &serve::LayerSpec,
-    shards: usize,
-    qps: f64,
-    secs: f64,
-    seed: u64,
     snap_path: &std::path::Path,
     children: &mut Vec<std::process::Child>,
 ) -> Result<()> {
-    let nodes = cli.flag_count("dist-nodes", 1, 1).map_err(anyhow::Error::msg)?;
-    let replicas = cli.flag_count("replicas", 2, 1).map_err(anyhow::Error::msg)?;
+    let (shards, qps, secs, seed) = (cfg.shards, cfg.qps, cfg.secs, cfg.seed);
+    let spec = &cfg.spec;
+    let nodes = cfg.dist_nodes.max(1);
+    let replicas = cfg.replicas;
     if replicas > nodes {
         bail!(
             "--replicas {replicas} exceeds --dist-nodes {nodes}: a shard cannot have more \
@@ -1201,8 +1149,13 @@ fn drive_serve_tcp(
     }
     let checkpoint_every = cli.flag_u64("checkpoint-every", 8);
     // same stack shape as the sim tier: cache + hedge-free layers over
-    // the router, no admission bound (the sockets backpressure instead)
-    let dist_spec = serve::LayerSpec { admit_depth: 0, ..spec.clone() };
+    // the router, no uniform admission bound (the sockets backpressure
+    // instead) — but --priority-mix keeps the graded bound, which sheds
+    // selectively by (priority, class) rather than re-shedding backlog
+    let dist_spec = serve::LayerSpec {
+        admit_depth: if spec.graded_admission { spec.admit_depth } else { 0 },
+        ..spec.clone()
+    };
 
     // every shard server loads the snapshot and builds an identical
     // store, so shard indices agree across the process boundary; with
@@ -1272,6 +1225,14 @@ fn drive_serve_tcp(
         make_collector(obs.collect_s, names)
     });
     let scraper = net.clone();
+    // the control plane on the tcp tier: same controller, but a
+    // migration is an instant routing swap (every server holds the
+    // full catalog) and membership is fixed (--autoscale is sim-only)
+    let members0: Vec<usize> = (0..nodes).collect();
+    let mut ctl = cfg
+        .controller_config()
+        .map(|c| serve::Controller::new(c, nodes, &members0));
+    let ctl_net = net.clone();
     let mut t_last = 0.0f64;
     let mut gen = serve::LoadGen::new(gen_cfg, store.width, store.height);
     let mut clock = serve::WallClock::start();
@@ -1297,6 +1258,19 @@ fn drive_serve_tcp(
                 v
             };
             c.tick(at, &mut src);
+        }
+        if let Some(c) = ctl.as_mut() {
+            let loads = ctl_net.node_loads();
+            let shard_served = ctl_net.served_per_shard();
+            let placement = ctl_net.placement();
+            if let Some(target) = c.tick(at, &loads, &shard_served, &placement) {
+                match ctl_net.rebalance_to(target) {
+                    Ok(moved) => {
+                        println!("rebalanced {moved} shard replica set(s) at t={at:.2}s")
+                    }
+                    Err(e) => println!("rebalance skipped at t={at:.2}s: {e}"),
+                }
+            }
         }
     });
 
@@ -1324,6 +1298,12 @@ fn drive_serve_tcp(
     );
     if let Some(line) = stage_p99_line(&net.registry().snapshot()) {
         println!("{line}");
+    }
+    let mut ctl_log: Option<serve::DecisionLog> = None;
+    if let Some(c) = ctl.take() {
+        println!("{}", c.log().summary());
+        println!("migrations={}", net.migrations());
+        ctl_log = Some(c.log().clone());
     }
     if let Some(d) = &driver {
         println!(
@@ -1420,7 +1400,14 @@ fn drive_serve_tcp(
         let mut servers = net.scrape();
         servers.extend(recovered_snaps);
         let traces = net.sampler().records();
-        serve::obs::write_dump(path, &metrics, &servers, &traces, collector.as_ref())?;
+        serve::obs::write_dump(
+            path,
+            &metrics,
+            &servers,
+            &traces,
+            collector.as_ref(),
+            ctl_log.as_ref(),
+        )?;
         println!(
             "wrote obs dump {path} ({} server snapshot(s), {} trace(s))",
             servers.len(),
@@ -1698,7 +1685,7 @@ fn cmd_recover_bench(cli: &Cli) -> Result<()> {
         // recovery_checkpoint_load_ms, recovery_replay_ms) — the same
         // v2 schema obs_check validates
         let merged = serve::obs::Snapshot::merge_all([&ws, &rec.log.obs().snapshot()]);
-        serve::obs::write_dump(path, &merged, &[], &[], None)?;
+        serve::obs::write_dump(path, &merged, &[], &[], None, None)?;
         println!("wrote obs dump {path}");
     }
     if ephemeral {

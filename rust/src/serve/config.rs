@@ -1,0 +1,589 @@
+//! `serve-bench`'s typed configuration: every flag parsed and
+//! cross-validated in one place.
+//!
+//! The bench grew one tier at a time, and so did its flag parsing —
+//! the contradiction matrix (which flags belong to which tier, which
+//! flags require which) was smeared through `cmd_serve_bench`.
+//! [`ServeConfig::from_cli`] centralizes it: parse once, validate every
+//! cross-flag rule with an error that names both sides, and hand the
+//! drivers a typed struct instead of a bag of strings. The conflict
+//! pairs are pinned by unit tests here, so a new flag that silently
+//! breaks an old rule fails in `cargo test`, not in a user's terminal.
+//!
+//! This is also where the control plane's flags live
+//! (`docs/CONTROL.md`):
+//!
+//! * `--rebalance MS` — run a [`crate::serve::control::Controller`]
+//!   with a decision window of `MS` milliseconds (distributed tiers,
+//!   sim and tcp);
+//! * `--autoscale MIN..MAX` — let the controller grow/retire membership
+//!   inside the band (simulated tier only: real shard-server processes
+//!   cannot be spawned on demand mid-run);
+//! * `--priority-mix L:N:H` — stamp each generated request's
+//!   [`crate::serve::engine::Priority`] from these weights;
+//! * `--load-curve PERIOD:PEAK` — swell the offered rate by a
+//!   raised-cosine curve, the diurnal shape an autoscaler reacts to.
+
+use crate::cli::Cli;
+use crate::serve::control::ControlConfig;
+use crate::serve::engine::LayerSpec;
+use crate::serve::loadgen::LoadGenConfig;
+use crate::serve::sched::{SchedConfig, SchedKind};
+
+macro_rules! fail {
+    ($($t:tt)*) => { return Err(format!($($t)*)) };
+}
+
+/// `"MIN..MAX"` as a pair of counts.
+fn parse_band(raw: &str) -> Option<(usize, usize)> {
+    let (lo, hi) = raw.split_once("..")?;
+    Some((lo.parse().ok()?, hi.parse().ok()?))
+}
+
+/// `"A:B"` as a pair of floats.
+fn parse_pair(raw: &str) -> Option<(f64, f64)> {
+    let (a, b) = raw.split_once(':')?;
+    Some((a.parse().ok()?, b.parse().ok()?))
+}
+
+/// Everything `serve-bench` needs to know, parsed and cross-validated.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// `--transport tcp` (real shard-server processes, wall clock)
+    pub tcp: bool,
+    /// `--dist-nodes N` (0 = single-host tier)
+    pub dist_nodes: usize,
+    /// `--replicas R` (distributed tiers; parsed here so the autoscale
+    /// band can be validated against it)
+    pub replicas: usize,
+    /// `--threads N` (single-host worker pool)
+    pub threads: usize,
+    pub shards: usize,
+    pub qps: f64,
+    pub secs: f64,
+    pub mix: String,
+    pub seed: u64,
+    pub n_sources: usize,
+    pub sched: SchedConfig,
+    pub burst: usize,
+    /// the middleware layer stack (admission bound, cache, hedging)
+    pub spec: LayerSpec,
+    /// `--rebalance MS` as seconds (0 = controller off)
+    pub rebalance_s: f64,
+    /// `--autoscale MIN..MAX` membership band (requires `--rebalance`)
+    pub autoscale: Option<(usize, usize)>,
+    /// `--priority-mix L:N:H` draw weights
+    pub priority_mix: Option<[f64; 3]>,
+    /// `--load-curve PERIOD:PEAK` as `(period_s, peak)`
+    pub rate_curve: Option<(f64, f64)>,
+}
+
+impl ServeConfig {
+    /// Parse and cross-validate the full `serve-bench` flag set. Every
+    /// rule produces an error naming the flags in conflict and what to
+    /// change; the first violated rule wins (matching the historical
+    /// in-line validation order).
+    pub fn from_cli(cli: &Cli) -> Result<ServeConfig, String> {
+        // --threads sizes the single-host worker pool; --dist-nodes
+        // replaces that pool with the simulated multi-node tier. Naming
+        // both is a contradiction we refuse rather than guess about
+        // (--dist-nodes 0 keeps its historical meaning: tier off).
+        let transport = cli.flag_str("transport", "sim");
+        if !matches!(transport, "sim" | "tcp") {
+            fail!("bad --transport {transport:?}: want sim|tcp");
+        }
+        let tcp = transport == "tcp";
+        let dist_nodes = cli.flag_count("dist-nodes", 0, 0)?;
+        let dist = dist_nodes > 0;
+        if tcp && !dist {
+            fail!(
+                "--transport tcp spawns real shard-server processes; say how many with \
+                 --dist-nodes N (N >= 1)"
+            );
+        }
+        if tcp {
+            for key in ["routing", "hedge-ms", "hedge-budget"] {
+                if cli.flag(key).is_some() {
+                    fail!(
+                        "--{key} configures the simulated fabric tier; the tcp transport \
+                         measures real sockets and does not take it"
+                    );
+                }
+            }
+        }
+        if dist && cli.flag("threads").is_some() {
+            fail!(
+                "--threads and --dist-nodes contradict: --threads sizes the single-host \
+                 worker pool, --dist-nodes replaces it with the simulated multi-node tier. \
+                 Pass exactly one of them (plain serve-bench = single-host)."
+            );
+        }
+        if !dist {
+            for key in ["replicas", "routing", "kill-node", "hedge-ms", "hedge-budget"] {
+                if cli.flag(key).is_some() {
+                    fail!("--{key} only applies to the distributed tier; add --dist-nodes N");
+                }
+            }
+            for key in ["trace-sample", "slow-ms"] {
+                if cli.flag(key).is_some() {
+                    fail!(
+                        "--{key} samples per-request span traces, which live on the \
+                         distributed tiers; add --dist-nodes N (the single-host tier still \
+                         supports --obs-dump)"
+                    );
+                }
+            }
+        } else {
+            if cli.flag("queue-depth").is_some() {
+                fail!(
+                    "--queue-depth only applies to the single-host tier (the simulated tier \
+                     models backlog as latency, not sheds); drop it or drop --dist-nodes"
+                );
+            }
+            for key in ["sched", "batch"] {
+                if cli.flag(key).is_some() {
+                    fail!(
+                        "--{key} configures the single-host worker pool's request scheduler; \
+                         the simulated tier has no worker pool. Drop it or drop --dist-nodes."
+                    );
+                }
+            }
+        }
+        if cli.flag("ingest-batch").is_some() && cli.flag("ingest-qps").is_none() {
+            fail!("--ingest-batch sizes ingestion publishes; add --ingest-qps R to enable them");
+        }
+        if cli.flag("hedge-budget").is_some() && cli.flag("hedge-ms").is_none() {
+            fail!("--hedge-budget caps the hedge layer; add --hedge-ms B to enable hedging");
+        }
+        // durability flag matrix: the WAL logs ingestion publishes, so
+        // it needs an ingest stream; the simulated tier has nothing
+        // real to fsync; compaction rides the single-host ingest loop
+        if cli.flag("wal-dir").is_some() && cli.flag("ingest-qps").is_none() {
+            fail!("--wal-dir logs ingestion publishes; add --ingest-qps R to generate them");
+        }
+        if cli.flag("wal-dir").is_some() && dist && !tcp {
+            fail!(
+                "--wal-dir appends and fsyncs a real on-disk log; the simulated fabric tier \
+                 has nothing durable to protect. Use the single-host tier or --transport tcp."
+            );
+        }
+        if cli.flag("checkpoint-every").is_some() && cli.flag("wal-dir").is_none() {
+            fail!("--checkpoint-every sets the WAL checkpoint cadence; add --wal-dir DIR");
+        }
+        if cli.flag("compact-threshold").is_some() && dist {
+            fail!(
+                "--compact-threshold runs the single-host Hilbert-range compactor; \
+                 distributed compaction is not wired yet. Drop --dist-nodes."
+            );
+        }
+        if cli.flag("compact-threshold").is_some() && cli.flag("ingest-qps").is_none() {
+            fail!(
+                "--compact-threshold watches shard skew produced by live ingestion; \
+                 add --ingest-qps R"
+            );
+        }
+        if cli.flag("pipeline").is_some() && !tcp {
+            fail!(
+                "--pipeline sets per-connection request pipelining on real sockets; \
+                 add --transport tcp"
+            );
+        }
+
+        // counts are validated, not silently clamped: `--threads 0` (or
+        // a negative / non-numeric value the old parser defaulted away)
+        // is a misconfiguration the user should hear about
+        let threads = cli.flag_count("threads", 4, 1)?;
+        let shards = cli.flag_count("shards", 8, 1)?;
+        let replicas = cli.flag_count("replicas", 2, 1)?;
+        let qps = cli.flag_parse("qps", 2000.0f64);
+        let secs = cli.flag_parse("secs", 3.0f64).max(0.1);
+        let mix = cli.flag_str("mix", "uniform").to_string();
+        let seed = cli.flag_u64("seed", 42);
+        let n_sources = cli.flag_count("sources", 5000, 1)?;
+        let sched_s = cli.flag_str("sched", "condvar");
+        let Some(sched_kind) = SchedKind::parse(sched_s) else {
+            fail!("bad --sched {sched_s:?}: want condvar|steal");
+        };
+        let sched = SchedConfig { kind: sched_kind, batch: cli.flag_count("batch", 1, 1)? };
+        let burst = cli.flag_count("burst", 1, 1)?;
+        let mut spec = LayerSpec {
+            admit_depth: cli.flag_usize("queue-depth", 1024),
+            cache_entries: cli.flag_usize("cache", 512),
+            hedge_budget: cli.flag_parse("hedge-ms", 0.0f64).max(0.0) * 1e-3,
+            hedge_cap: cli.flag_parse("hedge-budget", 0.05f64).max(0.0),
+            ..Default::default()
+        };
+
+        // --- the control plane (docs/CONTROL.md) ---
+        let rebalance_s = match cli.flag("rebalance") {
+            None => 0.0,
+            Some(raw) => {
+                if !dist {
+                    fail!(
+                        "--rebalance runs the distributed control plane's decision loop; \
+                         add --dist-nodes N"
+                    );
+                }
+                match raw.parse::<f64>() {
+                    Ok(ms) if ms.is_finite() && ms > 0.0 => ms * 1e-3,
+                    _ => fail!(
+                        "--rebalance is the controller's decision window in milliseconds \
+                         and must be positive, got {raw:?}"
+                    ),
+                }
+            }
+        };
+        let autoscale = match cli.flag("autoscale") {
+            None => None,
+            Some(raw) => {
+                if cli.flag("rebalance").is_none() {
+                    fail!(
+                        "--autoscale scales membership from the controller's decision loop; \
+                         add --rebalance MS to run one"
+                    );
+                }
+                if tcp {
+                    fail!(
+                        "--autoscale grows and retires modeled nodes mid-run; real \
+                         shard-server processes cannot be spawned on demand. Drop \
+                         --transport tcp (the tcp tier still takes --rebalance)."
+                    );
+                }
+                let Some((lo, hi)) = parse_band(raw) else {
+                    fail!("bad --autoscale {raw:?}: want MIN..MAX (e.g. 2..6)");
+                };
+                if lo < 1 || hi < lo {
+                    fail!("bad --autoscale {raw:?}: want 1 <= MIN <= MAX");
+                }
+                if lo < replicas {
+                    fail!(
+                        "--autoscale floor {lo} is below --replicas {replicas}: every shard \
+                         needs that many distinct members even at the floor"
+                    );
+                }
+                if dist_nodes < lo || dist_nodes > hi {
+                    fail!(
+                        "--autoscale {lo}..{hi} must bracket --dist-nodes {dist_nodes}: the \
+                         band scales the starting membership"
+                    );
+                }
+                Some((lo, hi))
+            }
+        };
+        let priority_mix = match cli.flag("priority-mix") {
+            None => None,
+            Some(raw) => {
+                let parts: Vec<f64> =
+                    raw.split(':').filter_map(|p| p.parse::<f64>().ok()).collect();
+                let ok = parts.len() == 3
+                    && raw.split(':').count() == 3
+                    && parts.iter().all(|w| w.is_finite() && *w >= 0.0)
+                    && parts.iter().sum::<f64>() > 0.0;
+                if !ok {
+                    fail!(
+                        "bad --priority-mix {raw:?}: want three non-negative weights \
+                         LOW:NORMAL:HIGH with a positive sum, e.g. 6:3:1"
+                    );
+                }
+                Some([parts[0], parts[1], parts[2]])
+            }
+        };
+        // a mixed-priority stream is what graded admission exists to
+        // triage: shed the low-priority expensive classes first instead
+        // of uniformly at the depth (see engine::admit_fraction)
+        spec.graded_admission = priority_mix.is_some();
+        let rate_curve = match cli.flag("load-curve") {
+            None => None,
+            Some(raw) => {
+                let Some((period, peak)) = parse_pair(raw) else {
+                    fail!(
+                        "bad --load-curve {raw:?}: want PERIOD_S:PEAK \
+                         (e.g. 4:3 = a 4-second period swelling to 3x the base rate)"
+                    );
+                };
+                if !(period.is_finite() && period > 0.0 && peak.is_finite() && peak >= 1.0) {
+                    fail!(
+                        "bad --load-curve {raw:?}: PERIOD_S must be positive and PEAK \
+                         at least 1.0"
+                    );
+                }
+                Some((period, peak))
+            }
+        };
+
+        Ok(ServeConfig {
+            tcp,
+            dist_nodes,
+            replicas,
+            threads,
+            shards,
+            qps,
+            secs,
+            mix,
+            seed,
+            n_sources,
+            sched,
+            burst,
+            spec,
+            rebalance_s,
+            autoscale,
+            priority_mix,
+            rate_curve,
+        })
+    }
+
+    /// Any distributed tier selected (`--dist-nodes N` with N > 0).
+    pub fn dist(&self) -> bool {
+        self.dist_nodes > 0
+    }
+
+    /// Node capacity the tier is constructed with: the autoscale
+    /// ceiling when a band is set (headroom allocated up front,
+    /// placement confined to the starting members), else the node
+    /// count itself.
+    pub fn capacity(&self) -> usize {
+        self.autoscale.map(|(_, hi)| hi).unwrap_or(self.dist_nodes).max(1)
+    }
+
+    /// The controller to run, when `--rebalance` asked for one.
+    pub fn controller_config(&self) -> Option<ControlConfig> {
+        if self.rebalance_s <= 0.0 {
+            return None;
+        }
+        Some(ControlConfig {
+            period_s: self.rebalance_s,
+            autoscale: self.autoscale,
+            ..Default::default()
+        })
+    }
+
+    /// Overlay the load-shape flags onto a scenario-derived generator
+    /// config (flags win; absent flags leave the scenario's values).
+    pub fn apply_to_loadgen(&self, gen: &mut LoadGenConfig) {
+        gen.burst = self.burst;
+        if let Some(mix) = self.priority_mix {
+            gen.priority_mix = Some(mix);
+        }
+        if let Some(curve) = self.rate_curve {
+            gen.rate_curve = Some(curve);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli(s: &str) -> Cli {
+        Cli::parse(s.split_whitespace().map(String::from))
+    }
+
+    fn err(s: &str) -> String {
+        ServeConfig::from_cli(&cli(s)).expect_err("flag set should be rejected")
+    }
+
+    fn ok(s: &str) -> ServeConfig {
+        match ServeConfig::from_cli(&cli(s)) {
+            Ok(c) => c,
+            Err(e) => panic!("flag set {s:?} should parse, got: {e}"),
+        }
+    }
+
+    #[test]
+    fn defaults_parse_to_the_single_host_tier() {
+        let c = ok("serve-bench");
+        assert!(!c.tcp && !c.dist());
+        assert_eq!((c.threads, c.shards, c.burst), (4, 8, 1));
+        assert_eq!(c.spec.admit_depth, 1024);
+        assert_eq!(c.spec.cache_entries, 512);
+        assert!(!c.spec.graded_admission, "graded admission rides --priority-mix");
+        assert_eq!(c.rebalance_s, 0.0);
+        assert!(c.autoscale.is_none() && c.priority_mix.is_none() && c.rate_curve.is_none());
+        assert!(c.controller_config().is_none());
+    }
+
+    #[test]
+    fn transport_must_be_sim_or_tcp_and_tcp_needs_nodes() {
+        assert!(err("serve-bench --transport quic").contains("--transport"));
+        let e = err("serve-bench --transport tcp");
+        assert!(e.contains("--dist-nodes"), "{e}");
+    }
+
+    #[test]
+    fn tcp_rejects_each_sim_only_flag() {
+        for pair in ["--routing p2c", "--hedge-ms 1", "--hedge-budget 0.1"] {
+            let e = err(&format!("serve-bench --transport tcp --dist-nodes 2 {pair}"));
+            let flag = pair.split_whitespace().next().unwrap();
+            assert!(e.contains(flag) && e.contains("tcp"), "{pair}: {e}");
+        }
+    }
+
+    #[test]
+    fn threads_and_dist_nodes_contradict() {
+        let e = err("serve-bench --threads 4 --dist-nodes 4");
+        assert!(e.contains("--threads") && e.contains("--dist-nodes"), "{e}");
+    }
+
+    #[test]
+    fn single_host_rejects_each_dist_only_flag() {
+        for pair in [
+            "--replicas 2",
+            "--routing p2c",
+            "--kill-node 1@0.5",
+            "--hedge-ms 1",
+            "--hedge-budget 0.1",
+            "--trace-sample 10",
+            "--slow-ms 5",
+        ] {
+            let e = err(&format!("serve-bench {pair}"));
+            let flag = pair.split_whitespace().next().unwrap();
+            assert!(e.contains(flag) && e.contains("--dist-nodes"), "{pair}: {e}");
+        }
+    }
+
+    #[test]
+    fn dist_rejects_each_single_host_flag() {
+        for pair in ["--queue-depth 64", "--sched steal", "--batch 8"] {
+            let e = err(&format!("serve-bench --dist-nodes 4 {pair}"));
+            let flag = pair.split_whitespace().next().unwrap();
+            assert!(e.contains(flag), "{pair}: {e}");
+        }
+    }
+
+    #[test]
+    fn dependent_flags_name_their_prerequisite() {
+        for (flags, want) in [
+            ("--ingest-batch 16", "--ingest-qps"),
+            ("--hedge-ms 1 --hedge-budget 0.1 --dist-nodes 2", ""), // valid: both present
+            ("--checkpoint-every 4", "--wal-dir"),
+            ("--pipeline 4", "--transport tcp"),
+            ("--wal-dir d", "--ingest-qps"),
+            ("--compact-threshold 1.5", "--ingest-qps"),
+        ] {
+            let line = format!("serve-bench {flags}");
+            if want.is_empty() {
+                ok(&line);
+            } else {
+                let e = err(&line);
+                assert!(e.contains(want), "{flags}: {e}");
+            }
+        }
+        // a hedge cap without a hedge budget is the orphan
+        let e = err("serve-bench --dist-nodes 2 --hedge-budget 0.1");
+        assert!(e.contains("--hedge-ms"), "{e}");
+        // the WAL is refused on the simulated fabric tier specifically
+        let e = err("serve-bench --dist-nodes 2 --ingest-qps 10 --wal-dir d");
+        assert!(e.contains("simulated"), "{e}");
+        ok("serve-bench --transport tcp --dist-nodes 2 --ingest-qps 10 --wal-dir d");
+        // distributed compaction is not wired
+        let e = err("serve-bench --dist-nodes 2 --ingest-qps 10 --compact-threshold 1.5");
+        assert!(e.contains("--compact-threshold"), "{e}");
+    }
+
+    #[test]
+    fn rebalance_requires_the_distributed_tier_and_a_positive_window() {
+        let e = err("serve-bench --rebalance 250");
+        assert!(e.contains("--rebalance") && e.contains("--dist-nodes"), "{e}");
+        for bad in ["0", "-5", "x"] {
+            let e = err(&format!("serve-bench --dist-nodes 4 --rebalance {bad}"));
+            assert!(e.contains("--rebalance") && e.contains("positive"), "{bad}: {e}");
+        }
+        let c = ok("serve-bench --dist-nodes 4 --rebalance 250");
+        assert!((c.rebalance_s - 0.25).abs() < 1e-12);
+        let ctl = c.controller_config().expect("controller requested");
+        assert!((ctl.period_s - 0.25).abs() < 1e-12);
+        assert!(ctl.autoscale.is_none());
+        // the tcp tier takes --rebalance too (routing-only migration)
+        ok("serve-bench --transport tcp --dist-nodes 3 --rebalance 250");
+    }
+
+    #[test]
+    fn autoscale_requires_rebalance_and_the_simulated_tier() {
+        let e = err("serve-bench --dist-nodes 4 --autoscale 2..6");
+        assert!(e.contains("--rebalance"), "{e}");
+        let e = err(
+            "serve-bench --transport tcp --dist-nodes 4 --rebalance 250 --autoscale 2..6",
+        );
+        assert!(e.contains("--transport tcp"), "{e}");
+    }
+
+    #[test]
+    fn autoscale_band_is_validated_against_replicas_and_nodes() {
+        for bad in ["2", "2..", "..4", "4..2", "0..4", "a..b"] {
+            let e = err(&format!("serve-bench --dist-nodes 4 --rebalance 250 --autoscale {bad}"));
+            assert!(e.contains("--autoscale"), "{bad}: {e}");
+        }
+        // the floor must hold --replicas distinct members
+        let e = err("serve-bench --dist-nodes 4 --replicas 3 --rebalance 250 --autoscale 2..6");
+        assert!(e.contains("--replicas"), "{e}");
+        // the band must bracket the starting membership
+        for nodes in [1, 7] {
+            let e = err(&format!(
+                "serve-bench --dist-nodes {nodes} --rebalance 250 --autoscale 2..6"
+            ));
+            assert!(e.contains("bracket"), "{nodes}: {e}");
+        }
+        let c = ok("serve-bench --dist-nodes 4 --rebalance 250 --autoscale 2..6");
+        assert_eq!(c.autoscale, Some((2, 6)));
+        assert_eq!(c.capacity(), 6, "capacity is the band ceiling");
+        assert_eq!(c.controller_config().unwrap().autoscale, Some((2, 6)));
+        let plain = ok("serve-bench --dist-nodes 4");
+        assert_eq!(plain.capacity(), 4, "no band: capacity is the node count");
+    }
+
+    #[test]
+    fn priority_mix_parses_three_weights_or_rejects() {
+        for bad in ["1:2", "1:2:3:4", "1:x:3", "-1:2:3", "0:0:0"] {
+            let e = err(&format!("serve-bench --priority-mix {bad}"));
+            assert!(e.contains("--priority-mix"), "{bad}: {e}");
+        }
+        let c = ok("serve-bench --priority-mix 6:3:1");
+        assert_eq!(c.priority_mix, Some([6.0, 3.0, 1.0]));
+        assert!(c.spec.graded_admission, "--priority-mix turns on graded admission");
+        let mut gen = LoadGenConfig::default();
+        c.apply_to_loadgen(&mut gen);
+        assert_eq!(gen.priority_mix, Some([6.0, 3.0, 1.0]));
+    }
+
+    #[test]
+    fn load_curve_parses_period_and_peak_or_rejects() {
+        for bad in ["4", "0:3", "4:0.5", "x:3", "4:y"] {
+            let e = err(&format!("serve-bench --load-curve {bad}"));
+            assert!(e.contains("--load-curve"), "{bad}: {e}");
+        }
+        let c = ok("serve-bench --load-curve 4:3");
+        assert_eq!(c.rate_curve, Some((4.0, 3.0)));
+        let mut gen = LoadGenConfig::default();
+        c.apply_to_loadgen(&mut gen);
+        assert_eq!(gen.rate_curve, Some((4.0, 3.0)));
+    }
+
+    #[test]
+    fn loadgen_overlay_leaves_scenario_values_when_flags_are_absent() {
+        let c = ok("serve-bench --burst 4");
+        let mut gen = LoadGenConfig {
+            priority_mix: Some([1.0, 1.0, 1.0]),
+            rate_curve: Some((9.0, 2.0)),
+            ..Default::default()
+        };
+        c.apply_to_loadgen(&mut gen);
+        assert_eq!(gen.burst, 4);
+        assert_eq!(gen.priority_mix, Some([1.0, 1.0, 1.0]), "absent flag leaves the preset");
+        assert_eq!(gen.rate_curve, Some((9.0, 2.0)));
+    }
+
+    #[test]
+    fn full_control_plane_line_parses() {
+        let c = ok(
+            "serve-bench --dist-nodes 3 --replicas 2 --rebalance 100 --autoscale 2..8 \
+             --priority-mix 2:5:3 --load-curve 2:4 --mix moving --qps 9000 --secs 2",
+        );
+        assert!(c.dist() && !c.tcp);
+        assert_eq!(c.dist_nodes, 3);
+        assert_eq!(c.capacity(), 8);
+        assert_eq!(c.mix, "moving");
+        let ctl = c.controller_config().unwrap();
+        assert!((ctl.period_s - 0.1).abs() < 1e-12);
+        assert_eq!(ctl.autoscale, Some((2, 8)));
+    }
+}

@@ -21,6 +21,23 @@
 //! the budget past its dispatch, the same sub-query is speculatively
 //! issued to the best alternate replica and the earlier reply wins —
 //! extra replica load and fabric bytes traded for a shorter p999 tail.
+//! The *loser* of a hedge race is cancelled the moment the winning
+//! reply lands at the front-end: its remaining service is reclaimed
+//! from the replica's serial queue (bounded by the full service cost —
+//! cancel-signal propagation is folded into the reply time), its
+//! in-flight entry is truncated to the winner's completion, and the
+//! cancellation is counted (`hedge_cancels`, seconds reclaimed in
+//! `hedge_cancel_saved_s`) — speculation buys tail latency without
+//! doubling steady-state replica work.
+//!
+//! The router is also the control plane's mechanism for *live range
+//! migration* ([`Router::rebalance_to`]): diffing the current placement
+//! against a target, it moves only the replica-set difference per shard
+//! (the minimal-move property rendezvous placements are chosen for),
+//! ships each moving replica's shard snapshot over the fabric, and
+//! swaps the slot to its destination only when the transfer lands —
+//! the outgoing replica keeps serving until then, so queries issued
+//! during a move succeed against the old copy.
 //!
 //! With live ingestion ([`crate::serve::ingest`]) the router is also
 //! the tier's replication protocol: [`Router::publish`] ships each
@@ -110,6 +127,18 @@ impl Default for RouterConfig {
 /// One boxed replica client per (shard, replica) slot.
 type ShardClients = Vec<Vec<Box<dyn ShardClient>>>;
 
+/// One in-flight replica move: `(shard, slot)` re-homes to node `to`
+/// once the snapshot transfer lands at `ready_at`. `epoch` is the head
+/// epoch the shipped snapshot carries — the destination's applied
+/// watermark once the move completes.
+struct PendingMove {
+    shard: usize,
+    slot: usize,
+    to: usize,
+    ready_at: f64,
+    epoch: u64,
+}
+
 /// The distributed serving front-end (simulated time). Node 0 hosts the
 /// router itself, so replicas placed there are served by [`LocalShard`]
 /// and everything else by [`FabricShard`]. Killing node 0 models the
@@ -148,10 +177,25 @@ pub struct Router {
     pub failover: Stats,
     /// queries lost because no replica of a needed range survived
     pub failed: u64,
+    /// primary sub-queries dispatched per shard — the control plane's
+    /// hot-range demand signal (hedges excluded: they are replica load,
+    /// not shard demand)
+    pub served_per_shard: Vec<u64>,
     /// speculative second sub-queries issued past a hedge budget
     pub hedges: u64,
     /// hedges whose reply beat the primary replica's
     pub hedge_wins: u64,
+    /// hedge losers cancelled when the winning reply landed
+    pub hedge_cancels: u64,
+    /// replica service seconds reclaimed by those cancellations
+    pub hedge_cancel_saved_s: f64,
+    /// replica moves initiated by [`Router::rebalance_to`]
+    pub migrations: u64,
+    /// shard snapshot bytes shipped by migrations (also on the fabric)
+    pub migrated_bytes: f64,
+    /// moves whose snapshot is still in flight: each slot swaps to its
+    /// destination when `ready_at` passes (the old replica serves on)
+    pending: Vec<PendingMove>,
     /// epochs shipped to the tier via [`Router::publish`]
     pub epochs_published: u64,
     /// delta bytes shipped to replicas (also charged to the fabric)
@@ -173,7 +217,29 @@ pub struct Router {
 impl Router {
     pub fn new(store: Arc<Store>, n_nodes: usize, replicas: usize, cfg: RouterConfig) -> Router {
         let n_nodes = n_nodes.max(1);
-        let placement = Placement::rendezvous(store.shards.len(), n_nodes, replicas);
+        let members: Vec<usize> = (0..n_nodes).collect();
+        Router::new_among(store, n_nodes, &members, replicas, cfg)
+    }
+
+    /// [`Router::new`] with `capacity` nodes allocated (fabric and
+    /// per-node accounting) but the initial placement restricted to
+    /// `members`. This is how an autoscaled tier starts at its floor:
+    /// the idle headroom nodes exist from construction, and the control
+    /// plane grows into them by rebalancing replicas onto them (node
+    /// count in use = distinct nodes in the placement, not capacity).
+    pub fn new_among(
+        store: Arc<Store>,
+        capacity: usize,
+        members: &[usize],
+        replicas: usize,
+        cfg: RouterConfig,
+    ) -> Router {
+        let n_nodes = capacity.max(1);
+        let members: Vec<usize> =
+            members.iter().copied().filter(|&n| n < n_nodes).collect();
+        let members = if members.is_empty() { vec![0usize] } else { members };
+        let placement =
+            Placement::rendezvous_among(store.shards.len(), n_nodes, &members, replicas);
         let origin = 0usize;
         let clients: ShardClients = placement
             .shard_nodes
@@ -213,10 +279,16 @@ impl Router {
             node_applied: vec![Vec::new(); n_nodes],
             served_per_node: vec![0; n_nodes],
             busy_per_node: vec![0.0; n_nodes],
+            served_per_shard: vec![0; n_shards],
             failover: Stats::new(),
             failed: 0,
             hedges: 0,
             hedge_wins: 0,
+            hedge_cancels: 0,
+            hedge_cancel_saved_s: 0.0,
+            migrations: 0,
+            migrated_bytes: 0.0,
+            pending: Vec::new(),
             epochs_published: 0,
             delta_bytes: 0.0,
             stale_refusals: 0,
@@ -266,6 +338,7 @@ impl Router {
     /// transfer lands; nodes with no touched replica apply immediately
     /// (the epoch announcement itself is metadata-sized).
     pub fn publish(&mut self, now: f64, next: Arc<EpochStore>, touched: &[(usize, usize)]) {
+        self.complete_moves(now);
         let head_epoch = self.history.last().unwrap().epoch;
         assert_eq!(
             next.epoch,
@@ -307,6 +380,104 @@ impl Router {
         let n_drop = (min_applied.saturating_sub(base) as usize).min(self.history.len() - 1);
         if n_drop > 0 {
             self.history.drain(..n_drop);
+        }
+    }
+
+    /// Initiate live migration toward `target` at simulated time `now`:
+    /// per shard, diff the current replica *set* against the target's
+    /// and move only the difference — slots whose node keeps hosting
+    /// the shard stay put, so a rendezvous-derived target moves the
+    /// minimum. Each move ships the shard's snapshot over the fabric
+    /// from a live current replica to the destination; the slot keeps
+    /// serving from the outgoing node until the transfer lands, so
+    /// queries issued during the move succeed against the old copy.
+    /// Shards with a move already in flight are skipped (the mechanism-
+    /// level backstop under the control plane's cooldown). Returns the
+    /// number of moves initiated.
+    pub fn rebalance_to(&mut self, now: f64, target: &Placement) -> usize {
+        assert_eq!(
+            target.n_shards(),
+            self.placement.n_shards(),
+            "a rebalance target must keep the shard count"
+        );
+        let head = self.head();
+        let mut started = 0usize;
+        for shard in 0..self.placement.n_shards() {
+            if self.pending.iter().any(|m| m.shard == shard) {
+                continue;
+            }
+            let cur = self.placement.shard_nodes[shard].clone();
+            let tgt = &target.shard_nodes[shard];
+            let adds: Vec<usize> =
+                tgt.iter().copied().filter(|n| !cur.contains(n)).collect();
+            let slots: Vec<usize> =
+                (0..cur.len()).filter(|&s| !tgt.contains(&cur[s])).collect();
+            let rows = head.store.shards[shard].sources.len();
+            let bytes = self.cfg.cost.delta_bytes(rows);
+            for (&to, &slot) in adds.iter().zip(slots.iter()) {
+                if to >= self.n_nodes() {
+                    continue;
+                }
+                // ship from the outgoing replica if it is alive, else
+                // any live replica, else the head at the origin
+                let from = if self.alive[cur[slot]] {
+                    cur[slot]
+                } else {
+                    cur.iter().copied().find(|&n| self.alive[n]).unwrap_or(self.origin)
+                };
+                let ready_at = self.fabric.get(now, bytes, from, to);
+                self.migrated_bytes += bytes;
+                self.migrations += 1;
+                self.pending.push(PendingMove {
+                    shard,
+                    slot,
+                    to,
+                    ready_at,
+                    epoch: head.epoch,
+                });
+                started += 1;
+            }
+        }
+        started
+    }
+
+    /// Complete every move whose snapshot transfer has landed by `now`:
+    /// swap the slot's client and placement entry to the destination
+    /// and record the destination's applied watermark (the shipped
+    /// snapshot carries the head as of initiation; co-hosted replicas
+    /// on the destination are deemed caught up to that epoch — the
+    /// snapshot transfer dominates any delta they still owed). The
+    /// node's apply log stays monotone in both time and epoch.
+    fn complete_moves(&mut self, now: f64) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].ready_at > now {
+                i += 1;
+                continue;
+            }
+            let m = self.pending.swap_remove(i);
+            self.placement.shard_nodes[m.shard][m.slot] = m.to;
+            self.clients[m.shard][m.slot] = if m.to == self.origin {
+                Box::new(LocalShard::new(m.to, self.cfg.cost.clone()))
+            } else {
+                Box::new(FabricShard::new(m.to, self.cfg.cost.clone()))
+            };
+            let log = &mut self.node_applied[m.to];
+            match log.last() {
+                Some(&(t_last, e_last)) => {
+                    if m.epoch > e_last {
+                        log.push((m.ready_at.max(t_last), m.epoch));
+                    }
+                }
+                None => {
+                    if m.epoch > self.base_epoch {
+                        log.push((m.ready_at, m.epoch));
+                    }
+                }
+            }
         }
     }
 
@@ -544,8 +715,26 @@ impl Router {
             debug_assert_eq!(reply2.rows(), rows, "content-matched replicas must agree");
             self.inflight[node2].push(t2);
             self.served_per_node[node2] += 1;
-            self.busy_per_node[node2] += self.cfg.cost.service_secs(reply2.rows());
+            let service = self.cfg.cost.service_secs(reply2.rows());
+            self.busy_per_node[node2] += service;
             self.hedges += 1;
+            // the race resolves when the earlier reply lands at the
+            // front-end; the loser is cancelled then, reclaiming the
+            // service it would still have run (bounded by the full
+            // service cost — content-matched replicas charge the same)
+            let (t_win, loser, t_lose) = if t2 < t_primary {
+                (t2, primary_node, t_primary)
+            } else {
+                (t_primary, node2, t2)
+            };
+            let saved = (t_lose - t_win).min(service).max(0.0);
+            self.busy_per_node[loser] -= saved;
+            self.node_free[loser] -= saved;
+            if let Some(e) = self.inflight[loser].iter_mut().rfind(|e| **e == t_lose) {
+                *e = t_win;
+            }
+            self.hedge_cancels += 1;
+            self.hedge_cancel_saved_s += saved;
             return if t2 < t_primary {
                 self.hedge_wins += 1;
                 t2
@@ -594,6 +783,7 @@ impl Router {
         consistency: Consistency,
     ) -> (Option<QueryResult>, f64, SpanSet) {
         self.queries += 1;
+        self.complete_moves(now);
         self.schedule.apply(now, &mut self.alive, &mut self.suspected);
         for fl in &mut self.inflight {
             fl.retain(|&t| t > now);
@@ -658,6 +848,7 @@ impl Router {
                 );
                 self.inflight[node].push(t);
                 self.served_per_node[node] += 1;
+                self.served_per_shard[shard] += 1;
                 let service = self.cfg.cost.service_secs(reply.rows());
                 self.busy_per_node[node] += service;
                 let t_reply = match hedge {
@@ -740,6 +931,14 @@ pub struct DistReport {
     pub stale_refusals: u64,
     /// catch-up stalls of fresh/bounded sub-queries
     pub stale_waits: Stats,
+    /// hedge losers cancelled when the winning reply landed
+    pub hedge_cancels: u64,
+    /// replica service seconds reclaimed by those cancellations
+    pub hedge_cancel_saved_s: f64,
+    /// live replica moves initiated by the control plane
+    pub migrations: u64,
+    /// shard snapshot bytes shipped by migrations
+    pub migrated_bytes: f64,
 }
 
 impl DistReport {
@@ -808,6 +1007,20 @@ impl DistReport {
                 self.failover.max * 1e3
             ));
         }
+        if self.hedge_cancels > 0 {
+            out.push_str(&format!(
+                "\n  hedges: {} loser(s) cancelled, {:.3}ms service reclaimed",
+                self.hedge_cancels,
+                self.hedge_cancel_saved_s * 1e3
+            ));
+        }
+        if self.migrations > 0 {
+            out.push_str(&format!(
+                "\n  control: {} migration(s), {:.2} MB shipped",
+                self.migrations,
+                self.migrated_bytes / 1e6
+            ));
+        }
         if self.epochs_published > 0 {
             out.push_str(&format!(
                 "\n  ingest: {} epoch(s) shipped ({:.2} MB delta), {} stale replica(s) refused",
@@ -863,6 +1076,10 @@ impl Router {
             delta_bytes: self.delta_bytes,
             stale_refusals: self.stale_refusals,
             stale_waits: self.stale_waits.clone(),
+            hedge_cancels: self.hedge_cancels,
+            hedge_cancel_saved_s: self.hedge_cancel_saved_s,
+            migrations: self.migrations,
+            migrated_bytes: self.migrated_bytes,
         }
     }
 }
@@ -1042,6 +1259,124 @@ mod tests {
         let (res2, _) = plain.execute(0.0, &q);
         assert_eq!(res2.unwrap(), want);
         assert_eq!(plain.hedges, 0);
+        assert_eq!(plain.hedge_cancels, 0);
+    }
+
+    /// Every hedge race cancels its loser, and the cancellation gives
+    /// the loser's remaining service time back: total busy seconds are
+    /// exactly the doubled per-shard service minus what was reclaimed.
+    #[test]
+    fn hedge_loser_is_cancelled_and_stops_consuming_service() {
+        let store = test_store(1200, 8, 21);
+        let q = Query::BrightestN { n: 30, filter: SourceFilter::Any };
+        let mut plain = Router::new(Arc::clone(&store), 4, 2, RouterConfig::default());
+        let (res0, _) = plain.execute(0.0, &q);
+        assert!(res0.is_some());
+        let plain_busy: f64 = plain.busy_per_node.iter().sum();
+        let mut hedged = Router::new(Arc::clone(&store), 4, 2, RouterConfig::default());
+        // zero budget: a hedge fires for every shard (2 distinct
+        // replicas each, no failures, no replication lag)
+        let (res, _) = hedged.execute_with(0.0, &q, Some(0.0), Consistency::CachedOk);
+        assert_eq!(res.unwrap(), execute(&store, &q));
+        assert!(hedged.hedges > 0);
+        assert_eq!(
+            hedged.hedge_cancels, hedged.hedges,
+            "every hedge race resolves with exactly one cancelled loser"
+        );
+        assert!(
+            hedged.hedge_cancel_saved_s > 0.0,
+            "cancellation must reclaim service time"
+        );
+        assert!(hedged.busy_per_node.iter().all(|&b| b >= -1e-12));
+        // service cost depends only on result rows, so the hedged run
+        // charged exactly twice the plain run before reclamation
+        let hedged_busy: f64 = hedged.busy_per_node.iter().sum();
+        assert!(
+            (hedged_busy + hedged.hedge_cancel_saved_s - 2.0 * plain_busy).abs() < 1e-9,
+            "busy accounting drifted: {hedged_busy} + {} vs 2 * {plain_busy}",
+            hedged.hedge_cancel_saved_s
+        );
+        assert!(hedged_busy < 2.0 * plain_busy, "no service was reclaimed");
+    }
+
+    /// Draining a node via a rendezvous target moves only the replicas
+    /// that lived on it, serves every query issued mid-migration from
+    /// the outgoing copies, and stops routing to the node afterwards.
+    #[test]
+    fn rebalance_migrates_minimal_ranges_and_serves_throughout() {
+        let store = test_store(1500, 10, 5);
+        let mut router = Router::new(Arc::clone(&store), 6, 2, RouterConfig::default());
+        let before = router.placement.shard_nodes.clone();
+        let members: Vec<usize> = (0..5).collect();
+        let target =
+            Placement::rendezvous_among(store.shards.len(), 6, &members, 2);
+        let expected_moves: usize = before
+            .iter()
+            .map(|nodes| nodes.iter().filter(|&&n| n == 5).count())
+            .sum();
+        assert!(expected_moves > 0, "node 5 hosted nothing; grow the tier");
+        let started = router.rebalance_to(0.0, &target);
+        assert_eq!(started, expected_moves, "only replicas on the drained node move");
+        assert_eq!(router.migrations as usize, started);
+        assert!(router.migrated_bytes > 0.0);
+        // a second rebalance to the same target while moves are in
+        // flight initiates nothing (per-shard backstop)
+        assert_eq!(router.rebalance_to(0.0, &target), 0);
+        // mid-flight: the outgoing replicas still serve, answers exact
+        let q = Query::BrightestN { n: 25, filter: SourceFilter::Any };
+        let want = execute(&store, &q);
+        let (res, _) = router.execute(1e-9, &q);
+        assert_eq!(res.expect("served during migration"), want);
+        // long after every transfer lands, the placement matches the
+        // target and the drained node takes no new traffic
+        let (res2, _) = router.execute(1e9, &q);
+        assert_eq!(res2.expect("served after migration"), want);
+        // moved slots swap in place, so compare replica *sets*
+        for (s, (got, tgt)) in
+            router.placement.shard_nodes.iter().zip(&target.shard_nodes).enumerate()
+        {
+            let mut a = got.clone();
+            let mut b = tgt.clone();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "shard {s}: migrated replica set differs from target");
+        }
+        let served5 = router.served_per_node[5];
+        for _ in 0..50 {
+            let (r, _) = router.execute(1e9 + 1.0, &q);
+            assert!(r.is_some());
+        }
+        assert_eq!(router.served_per_node[5], served5, "drained node kept serving");
+        assert_eq!(router.failed, 0);
+    }
+
+    /// A tier constructed over a member subset places replicas only on
+    /// members while accounting for the full capacity, and tracks the
+    /// per-shard demand signal the control plane keys off.
+    #[test]
+    fn new_among_restricts_placement_to_members() {
+        let store = test_store(800, 8, 9);
+        let members = [0usize, 2, 4];
+        let mut router = Router::new_among(
+            Arc::clone(&store),
+            6,
+            &members,
+            2,
+            RouterConfig::default(),
+        );
+        assert_eq!(router.n_nodes(), 6);
+        for nodes in &router.placement.shard_nodes {
+            assert_eq!(nodes.len(), 2);
+            for &n in nodes {
+                assert!(members.contains(&n), "replica on non-member node {n}");
+            }
+        }
+        let q = Query::BrightestN { n: 10, filter: SourceFilter::Any };
+        let (res, _) = router.execute(0.0, &q);
+        assert_eq!(res.expect("served"), execute(&store, &q));
+        assert_eq!(router.served_per_node[1], 0);
+        assert_eq!(router.served_per_node[5], 0);
+        assert!(router.served_per_shard.iter().sum::<u64>() > 0);
     }
 
     /// One publish through a replicated router: Fresh reads observe the

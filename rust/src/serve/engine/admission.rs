@@ -13,6 +13,20 @@
 //! [`crate::serve::sched`]), so switching schedulers or batch sizes
 //! does not quietly widen the effective admission depth.
 //!
+//! Two shed policies share the backlog probe:
+//!
+//! * **Uniform** ([`Admission::new`], the historical behavior): every
+//!   request sheds once the backlog reaches the depth, regardless of
+//!   priority or class.
+//! * **Graded** ([`Admission::graded`]): each `(priority, class)` pair
+//!   may only use [`admit_fraction`] of the depth, so as the backlog
+//!   climbs, low-priority expensive requests (cross-matches) are
+//!   refused first and high-priority cheap ones (cone lookups) last —
+//!   the overload response the control plane's priority classes exist
+//!   for. The fraction ordering itself is pinned by
+//!   `admit_fractions_pin_the_shed_order` in [`super`]; this module's
+//!   tests pin that the *layer* actually sheds in that order.
+//!
 //! The bound is exact under a single submitting thread (both drivers'
 //! open loops). Under concurrent submitters the probe and the submit
 //! are separate steps, so the depth can transiently overshoot by up to
@@ -24,28 +38,46 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::serve::ingest::EpochStore;
+use crate::serve::query::{QueryClass, N_QUERY_CLASSES, QUERY_CLASSES};
 
-use super::{QueryEngine, Request, Response, Submitted};
+use super::{admit_fraction, Priority, QueryEngine, Request, Response, Submitted, PRIORITIES};
 
 /// Middleware: shed requests beyond an in-flight bound.
 pub struct Admission<E> {
     inner: E,
     depth: usize,
+    /// grade the bound by `(priority, class)` instead of uniformly
+    graded: bool,
     /// completion times of synchronous responses still pending at the
     /// engine clock (unused when the inner engine exposes a real queue)
     outstanding: Mutex<Vec<f64>>,
     admitted: AtomicU64,
     shed: AtomicU64,
+    /// sheds by `[priority][class]` — the attribution the graded
+    /// policy's acceptance is judged on (counted in uniform mode too)
+    shed_by: [[AtomicU64; N_QUERY_CLASSES]; 3],
 }
 
 impl<E: QueryEngine> Admission<E> {
+    /// Uniform admission: every request sheds at the same depth.
     pub fn new(inner: E, depth: usize) -> Admission<E> {
         Admission {
             inner,
             depth: depth.max(1),
+            graded: false,
             outstanding: Mutex::new(Vec::new()),
             admitted: AtomicU64::new(0),
             shed: AtomicU64::new(0),
+            shed_by: Default::default(),
+        }
+    }
+
+    /// Graded admission: each `(priority, class)` pair keeps only
+    /// [`admit_fraction`] of the depth, so overload sheds cheap-last.
+    pub fn graded(inner: E, depth: usize) -> Admission<E> {
+        Admission {
+            graded: true,
+            ..Admission::new(inner, depth)
         }
     }
 
@@ -57,13 +89,34 @@ impl<E: QueryEngine> Admission<E> {
         self.shed.load(Ordering::Relaxed)
     }
 
-    fn over_limit(&self, now: f64) -> bool {
+    /// Sheds attributed to one `(priority, class)` pair.
+    pub fn shed_for(&self, priority: Priority, class: QueryClass) -> u64 {
+        self.shed_by[priority.index()][class.index()].load(Ordering::Relaxed)
+    }
+
+    fn backlog(&self, now: f64) -> usize {
         if let Some(queued) = self.inner.in_flight() {
-            return queued >= self.depth;
+            return queued;
         }
         let mut out = self.outstanding.lock().unwrap();
         out.retain(|&done| done > now);
-        out.len() >= self.depth
+        out.len()
+    }
+
+    fn over_limit(&self, req: &Request) -> bool {
+        let bound = if self.graded {
+            // ceil keeps small depths from rounding a fraction to zero
+            let b = (self.depth as f64 * admit_fraction(req.priority, req.class)).ceil();
+            (b as usize).max(1)
+        } else {
+            self.depth
+        };
+        self.backlog(req.at) >= bound
+    }
+
+    fn count_shed(&self, req: &Request) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        self.shed_by[req.priority.index()][req.class.index()].fetch_add(1, Ordering::Relaxed);
     }
 
     fn record(&self, at: f64, resp: &Response) {
@@ -76,8 +129,8 @@ impl<E: QueryEngine> Admission<E> {
 impl<E: QueryEngine> QueryEngine for Admission<E> {
     fn call(&self, req: Request) -> Response {
         let at = req.at;
-        if self.over_limit(at) {
-            self.shed.fetch_add(1, Ordering::Relaxed);
+        if self.over_limit(&req) {
+            self.count_shed(&req);
             return Response::shed(at);
         }
         self.admitted.fetch_add(1, Ordering::Relaxed);
@@ -88,8 +141,8 @@ impl<E: QueryEngine> QueryEngine for Admission<E> {
 
     fn submit(&self, req: Request) -> Submitted {
         let at = req.at;
-        if self.over_limit(at) {
-            self.shed.fetch_add(1, Ordering::Relaxed);
+        if self.over_limit(&req) {
+            self.count_shed(&req);
             return Submitted::Shed;
         }
         self.admitted.fetch_add(1, Ordering::Relaxed);
@@ -103,7 +156,11 @@ impl<E: QueryEngine> QueryEngine for Admission<E> {
     }
 
     fn describe(&self) -> String {
-        format!("admit({}) -> {}", self.depth, self.inner.describe())
+        if self.graded {
+            format!("admit({}, graded) -> {}", self.depth, self.inner.describe())
+        } else {
+            format!("admit({}) -> {}", self.depth, self.inner.describe())
+        }
     }
 
     fn in_flight(&self) -> Option<usize> {
@@ -115,11 +172,177 @@ impl<E: QueryEngine> QueryEngine for Admission<E> {
             ("admitted".to_string(), self.admitted() as f64),
             ("admission_shed".to_string(), self.shed() as f64),
         ];
+        for p in PRIORITIES {
+            for c in QUERY_CLASSES {
+                let n = self.shed_by[p.index()][c.index()].load(Ordering::Relaxed);
+                if n > 0 {
+                    m.push((format!("admission_shed_{}_{}", p.name(), c.name()), n as f64));
+                }
+            }
+        }
         m.extend(self.inner.metrics());
         m
     }
 
     fn epoch_view(&self) -> Option<Arc<EpochStore>> {
         self.inner.epoch_view()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::query::{Query, QueryResult, SourceFilter};
+
+    /// Synchronous stub: every request takes `svc` seconds.
+    struct Slow {
+        svc: f64,
+    }
+
+    impl QueryEngine for Slow {
+        fn call(&self, req: Request) -> Response {
+            Response::served(QueryResult::Sources(Vec::new()), req.at + self.svc)
+        }
+
+        fn describe(&self) -> String {
+            "slow".to_string()
+        }
+    }
+
+    fn cone() -> Query {
+        Query::Cone {
+            center: (1.0, 1.0),
+            radius: 2.0,
+            filter: SourceFilter::Any,
+        }
+    }
+
+    fn xmatch() -> Query {
+        Query::CrossMatch {
+            pos: (1.0, 1.0),
+            radius: 1.0,
+        }
+    }
+
+    /// Fill the backlog to exactly 70% of depth, then probe one request
+    /// per (priority, class) pair: the graded layer must shed exactly
+    /// the pairs whose admit fraction is at or below the fill level.
+    #[test]
+    fn graded_admission_sheds_in_fraction_order() {
+        let depth = 100usize;
+        let engine = Admission::graded(Slow { svc: 1.0 }, depth);
+        for i in 0..70 {
+            let r = Request::new(cone())
+                .with_priority(Priority::High)
+                .arriving_at(i as f64 * 1e-6);
+            assert!(matches!(engine.submit(r), Submitted::Done(_)), "warm-up shed at {i}");
+        }
+        let probe = |q: Query, p: Priority| {
+            let req = Request::new(q).with_priority(p).arriving_at(1e-4);
+            matches!(engine.submit(req), Submitted::Shed)
+        };
+        // low priority sheds everything (its best fraction is 0.50)
+        assert!(probe(xmatch(), Priority::Low));
+        assert!(probe(cone(), Priority::Low));
+        // normal spans 0.60..0.75: the cross-match (0.60) sheds, the
+        // cone (0.75) still gets through at a 0.70 fill
+        assert!(probe(xmatch(), Priority::Normal));
+        assert!(!probe(cone(), Priority::Normal));
+        // high priority (0.85..1.0) is untouched
+        assert!(!probe(xmatch(), Priority::High));
+        assert!(!probe(cone(), Priority::High));
+        // attribution lands on the refused pairs, nowhere else
+        assert_eq!(engine.shed_for(Priority::Low, QueryClass::CrossMatch), 1);
+        assert_eq!(engine.shed_for(Priority::Low, QueryClass::Cone), 1);
+        assert_eq!(engine.shed_for(Priority::Normal, QueryClass::CrossMatch), 1);
+        assert_eq!(engine.shed_for(Priority::Normal, QueryClass::Cone), 0);
+        assert_eq!(engine.shed_for(Priority::High, QueryClass::Cone), 0);
+        assert_eq!(engine.shed(), 3);
+        let m = engine.metrics();
+        assert!(m.iter().any(|(n, v)| n == "admission_shed_low_xmatch" && *v == 1.0));
+        assert!(
+            !m.iter().any(|(n, _)| n == "admission_shed_high_cone"),
+            "zero counters stay out of the metric list"
+        );
+    }
+
+    /// Under sustained 2x overload with a mixed-priority stream, sheds
+    /// must concentrate on low-priority cross-matches while admitted
+    /// high-priority cones complete within the service budget — the
+    /// acceptance shape for the control plane's priority classes.
+    #[test]
+    fn two_x_overload_sheds_cheap_last() {
+        let svc = 10e-3;
+        let depth = 10usize; // capacity ~ depth / svc = 1000 qps
+        let engine = Admission::graded(Slow { svc }, depth);
+        let mut shed = [[0u64; 2]; 3]; // [priority][cone=0 | xmatch=1]
+        let mut served = [[0u64; 2]; 3];
+        let mut rng = crate::prng::Rng::new(0xca11);
+        let qps = 2000.0; // 2x overload
+        let mut at = 0.0;
+        let mut high_cone_worst = 0.0f64;
+        for _ in 0..4000 {
+            let (q, ci) = if rng.uniform() < 0.5 { (cone(), 0) } else { (xmatch(), 1) };
+            let p = match rng.below(3) {
+                0 => Priority::Low,
+                1 => Priority::Normal,
+                _ => Priority::High,
+            };
+            let req = Request::new(q).with_priority(p).arriving_at(at);
+            match engine.submit(req) {
+                Submitted::Shed => shed[p.index()][ci] += 1,
+                Submitted::Done(resp) => {
+                    served[p.index()][ci] += 1;
+                    if p == Priority::High && ci == 0 {
+                        high_cone_worst = high_cone_worst.max(resp.done - at);
+                    }
+                }
+                Submitted::Queued => unreachable!("synchronous stub"),
+            }
+            at += rng.uniform().max(1e-9).ln() * (-1.0 / qps);
+        }
+        let shed_rate = |p: Priority, ci: usize| {
+            let (s, v) = (shed[p.index()][ci], served[p.index()][ci]);
+            s as f64 / (s + v).max(1) as f64
+        };
+        // sheds concentrate on low-priority cross-matches...
+        assert!(
+            shed_rate(Priority::Low, 1) > 0.9,
+            "low/xmatch shed rate {:.2} should be near 1 under 2x overload",
+            shed_rate(Priority::Low, 1)
+        );
+        // ...the ordering holds pairwise...
+        assert!(shed_rate(Priority::Low, 1) >= shed_rate(Priority::Low, 0));
+        assert!(shed_rate(Priority::Low, 0) > shed_rate(Priority::Normal, 0));
+        assert!(shed_rate(Priority::Normal, 1) > shed_rate(Priority::High, 1));
+        assert!(shed_rate(Priority::High, 1) >= shed_rate(Priority::High, 0));
+        // ...and high-priority cones barely shed and stay in budget
+        assert!(
+            shed_rate(Priority::High, 0) < 0.35,
+            "high/cone shed rate {:.2} must stay lowest",
+            shed_rate(Priority::High, 0)
+        );
+        assert!(served[Priority::High.index()][0] > 100);
+        assert!(
+            high_cone_worst <= svc + 1e-9,
+            "admitted high/cone latency {high_cone_worst} must stay at the service budget"
+        );
+    }
+
+    #[test]
+    fn uniform_admission_ignores_priorities() {
+        let engine = Admission::new(Slow { svc: 1.0 }, 4);
+        for i in 0..4 {
+            let r = Request::new(xmatch())
+                .with_priority(Priority::Low)
+                .arriving_at(i as f64 * 1e-6);
+            assert!(matches!(engine.submit(r), Submitted::Done(_)));
+        }
+        let r = Request::new(cone()).with_priority(Priority::High).arriving_at(1e-5);
+        assert!(
+            matches!(engine.submit(r), Submitted::Shed),
+            "the legacy uniform bound is priority-blind"
+        );
+        assert_eq!(engine.shed_for(Priority::High, QueryClass::Cone), 1);
     }
 }

@@ -232,7 +232,9 @@ impl<E: QueryEngine> Cached<E> {
         if req.consistency == Consistency::Fresh {
             return None;
         }
-        let class = req.query.class().index();
+        // key off the typed envelope field (stamped once at
+        // construction), not a per-layer re-derivation from the query
+        let class = req.class.index();
         let key = req.query.cache_key();
         let probe = self.caches[class].lock().unwrap().get(
             key,

@@ -25,7 +25,7 @@ use crate::serve::loadgen::LoadGen;
 use crate::serve::query::{N_QUERY_CLASSES, QUERY_CLASSES};
 use crate::serve::server::ServerReport;
 
-use super::{Outcome, QueryEngine, Request, Submitted};
+use super::{Outcome, QueryEngine, Request, Submitted, N_PRIORITIES, PRIORITIES};
 
 /// The driver's notion of time, seconds since the run began.
 pub trait Clock {
@@ -107,6 +107,13 @@ pub struct DriveReport {
     /// arrival -> completion latency per query class (synchronous
     /// completions only)
     pub latency: [Stats; N_QUERY_CLASSES],
+    /// the same latencies split by request priority — the lane view the
+    /// graded-admission acceptance is judged on (all `Normal` unless
+    /// the generator draws a priority mix)
+    pub latency_pri: [Stats; N_PRIORITIES],
+    /// sheds attributed per request priority (both the engine's typed
+    /// shed responses and queue-refusal sheds)
+    pub shed_pri: [u64; N_PRIORITIES],
     /// scheduler accounting folded in from the worker-pool server's
     /// report (see [`DriveReport::absorb_server`]): jobs executed from
     /// the owning worker's queue vs stolen from another worker's deque,
@@ -153,6 +160,12 @@ impl DriveReport {
         for (dst, src) in self.latency.iter_mut().zip(&o.latency) {
             dst.merge(src);
         }
+        for (dst, src) in self.latency_pri.iter_mut().zip(&o.latency_pri) {
+            dst.merge(src);
+        }
+        for (dst, src) in self.shed_pri.iter_mut().zip(&o.shed_pri) {
+            *dst += src;
+        }
     }
 
     /// Fold the worker-pool server's scheduler accounting (local hits,
@@ -168,7 +181,7 @@ impl DriveReport {
     }
 
     /// Account one synchronously completed response.
-    fn absorb(&mut self, class: usize, at: f64, resp: &super::Response) {
+    fn absorb(&mut self, class: usize, prio: usize, at: f64, resp: &super::Response) {
         self.horizon = self.horizon.max(resp.done);
         self.cache_hits += resp.trace.cache_hit as u64;
         self.hedges += resp.trace.hedges as u64;
@@ -177,11 +190,26 @@ impl DriveReport {
             Outcome::Served => {
                 self.completed += 1;
                 self.latency[class].push(resp.done - at);
+                self.latency_pri[prio].push(resp.done - at);
             }
-            Outcome::Shed => self.shed += 1,
+            Outcome::Shed => {
+                self.shed += 1;
+                self.shed_pri[prio] += 1;
+            }
             Outcome::Failed => self.failed += 1,
             Outcome::DeadlineExceeded => self.deadline_exceeded += 1,
         }
+    }
+
+    /// Did any request run outside the default `Normal` lane? (If not,
+    /// the per-priority breakdown is just a copy of the totals and the
+    /// summary omits it.)
+    fn priorities_in_play(&self) -> bool {
+        let normal = super::Priority::Normal.index();
+        PRIORITIES.iter().any(|p| {
+            p.index() != normal
+                && (self.latency_pri[p.index()].n > 0 || self.shed_pri[p.index()] > 0)
+        })
     }
 
     /// Multi-line human summary with per-class quantiles.
@@ -219,6 +247,28 @@ impl DriveReport {
                 q[0] * 1e3,
                 q[1] * 1e3
             ));
+        }
+        if self.priorities_in_play() {
+            for p in PRIORITIES {
+                let s = &self.latency_pri[p.index()];
+                let shed = self.shed_pri[p.index()];
+                if s.n == 0 && shed == 0 {
+                    continue;
+                }
+                if s.n > 0 {
+                    let q = s.quantiles(&[0.50, 0.99]);
+                    out.push_str(&format!(
+                        "\n  pri {:<6} n={} p50={:.3}ms p99={:.3}ms shed={}",
+                        p.name(),
+                        s.n,
+                        q[0] * 1e3,
+                        q[1] * 1e3,
+                        shed
+                    ));
+                } else {
+                    out.push_str(&format!("\n  pri {:<6} n=0 shed={}", p.name(), shed));
+                }
+            }
         }
         if self.cache_hits > 0 {
             out.push_str(&format!("\n  cache hits: {}", self.cache_hits));
@@ -278,14 +328,21 @@ pub fn drive_open_loop_with<E: QueryEngine + ?Sized>(
         // a wall clock may wake late; arrivals burst to catch up, as a
         // true open-loop source does
         let at = clock.now().max(next_at);
+        // generator time follows the clock: moving hotspots and the
+        // rate curve react to where the run actually is
+        gen.advance_to(at);
         before_arrival(at);
         let q = gen.next_query();
         let class = q.class().index();
+        let prio = gen.next_priority();
         report.offered += 1;
-        match engine.submit(Request::new(q).arriving_at(at)) {
+        match engine.submit(Request::new(q).with_priority(prio).arriving_at(at)) {
             Submitted::Queued => report.queued += 1,
-            Submitted::Shed => report.shed += 1,
-            Submitted::Done(resp) => report.absorb(class, at, &resp),
+            Submitted::Shed => {
+                report.shed += 1;
+                report.shed_pri[prio.index()] += 1;
+            }
+            Submitted::Done(resp) => report.absorb(class, prio.index(), at, &resp),
         }
         next_at += gen.next_interarrival(qps);
     }
@@ -315,11 +372,13 @@ pub fn drive_closed_loop<E: QueryEngine + ?Sized>(
                 while epoch.elapsed() < deadline {
                     let q = cgen.next_query();
                     let class = q.class().index();
+                    let prio = cgen.next_priority();
                     let at = epoch.elapsed().as_secs_f64();
                     local.offered += 1;
-                    let resp = engine.call(Request::new(q).arriving_at(at));
+                    let resp =
+                        engine.call(Request::new(q).with_priority(prio).arriving_at(at));
                     let was_shed = resp.trace.outcome == Outcome::Shed;
-                    local.absorb(class, at, &resp);
+                    local.absorb(class, prio.index(), at, &resp);
                     if was_shed {
                         std::thread::sleep(Duration::from_micros(200));
                     }
@@ -411,16 +470,64 @@ mod tests {
     fn absorb_routes_outcomes() {
         let mut r = DriveReport::default();
         let served = Response::served(QueryResult::Sources(Vec::new()), 1.0);
-        r.absorb(0, 0.25, &served);
+        r.absorb(0, 2, 0.25, &served);
         assert_eq!(r.completed, 1);
         assert!((r.latency[0].max - 0.75).abs() < 1e-12);
+        assert_eq!(r.latency_pri[2].n, 1, "served latency lands in its priority lane");
         let mut hit = served.clone();
         hit.trace = Trace { cache_hit: true, ..Trace::default() };
-        r.absorb(1, 1.0, &hit);
+        r.absorb(1, 1, 1.0, &hit);
         assert_eq!(r.cache_hits, 1);
-        r.absorb(0, 0.0, &Response::shed(0.0));
+        r.absorb(0, 0, 0.0, &Response::shed(0.0));
         assert_eq!(r.shed, 1);
-        r.absorb(0, 0.0, &Response::failed(0.0));
+        assert_eq!(r.shed_pri, [1, 0, 0], "sheds attribute to the request's lane");
+        r.absorb(0, 0, 0.0, &Response::failed(0.0));
         assert_eq!(r.failed, 1);
+    }
+
+    /// The control plane's overload acceptance, at the drive level:
+    /// a mixed-priority stream at 2x an engine's sustainable rate must
+    /// shed the low lane hardest while every admitted high-priority
+    /// request completes at the bare service budget.
+    #[test]
+    fn two_x_overload_with_priority_mix_sheds_low_lane_first() {
+        use crate::serve::engine::{Admission, Priority};
+        let svc = 5e-3;
+        // sustainable ~ depth / svc = 2000 qps; offer 4000
+        let engine = Admission::graded(FixedEngine { svc }, 10);
+        let cfg = LoadGenConfig {
+            priority_mix: Some([1.0, 1.0, 1.0]),
+            seed: 31,
+            ..Default::default()
+        };
+        let mut gen = LoadGen::new(cfg, 500.0, 500.0);
+        let mut clock = SimClock::new();
+        let r = drive_open_loop(&engine, &mut clock, &mut gen, 4000.0, 0.5);
+        assert!(r.offered > 1000, "offered {}", r.offered);
+        assert!(r.shed > 0, "2x overload must shed");
+        assert_eq!(
+            r.shed,
+            r.shed_pri.iter().sum::<u64>(),
+            "every shed is attributed to a priority lane"
+        );
+        assert_eq!(r.completed, r.latency_pri.iter().map(|s| s.n).sum::<u64>());
+        let (low, high) = (Priority::Low.index(), Priority::High.index());
+        assert!(
+            r.shed_pri[low] > r.shed_pri[high],
+            "sheds must concentrate on the low lane: {:?}",
+            r.shed_pri
+        );
+        let high_lane = &r.latency_pri[high];
+        assert!(high_lane.n > 100, "high lane starved: n={}", high_lane.n);
+        // FixedEngine is queueless, so every admitted request finishes
+        // in exactly `svc` — the high lane's p99 sits at the budget
+        assert!(
+            high_lane.quantiles(&[0.99])[0] <= svc + 1e-9,
+            "high-priority p99 {} blew the service budget",
+            high_lane.quantiles(&[0.99])[0]
+        );
+        let s = r.summary();
+        assert!(s.contains("pri low"), "summary must break out lanes:\n{s}");
+        assert!(s.contains("pri high"), "summary must break out lanes:\n{s}");
     }
 }

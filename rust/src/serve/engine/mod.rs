@@ -45,7 +45,76 @@ pub use tiers::{DirectEngine, RouterEngine, ScanEngine, ServerEngine};
 use std::sync::Arc;
 
 use super::ingest::EpochStore;
-use super::query::{Query, QueryResult};
+use super::query::{Query, QueryClass, QueryResult};
+
+/// Request priority — the admission-control tier of a request, distinct
+/// from its [`QueryClass`] (what the query *costs*). Under overload the
+/// graded [`Admission`] layer sheds low-priority expensive requests
+/// first and high-priority cheap ones last (see [`admit_fraction`]);
+/// the worker-pool scheduler drains higher priorities first.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    /// best-effort: bulk validation scans, backfills
+    Low,
+    /// the envelope default; every pre-priority constructor maps here
+    #[default]
+    Normal,
+    /// interactive / latency-budgeted traffic
+    High,
+}
+
+pub const N_PRIORITIES: usize = 3;
+
+pub const PRIORITIES: [Priority; N_PRIORITIES] =
+    [Priority::Low, Priority::Normal, Priority::High];
+
+impl Priority {
+    pub fn index(self) -> usize {
+        match self {
+            Priority::Low => 0,
+            Priority::Normal => 1,
+            Priority::High => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "low" => Some(Priority::Low),
+            "normal" => Some(Priority::Normal),
+            "high" => Some(Priority::High),
+            _ => None,
+        }
+    }
+}
+
+/// The fraction of the admission depth available to a `(priority,
+/// class)` combination — the class-ordering contract the graded
+/// [`Admission`] layer enforces under overload. The total order is
+/// pinned by tests, not assumed: for a fixed priority the fraction
+/// strictly falls with [`QueryClass::cost_rank`] (expensive sheds
+/// first), for a fixed class it strictly rises with priority, high-
+/// priority cones keep the full depth, and low-priority cross-matches
+/// are globally first to shed. Priorities dominate: every `High`
+/// fraction exceeds every `Normal` one, which exceeds every `Low` one.
+pub fn admit_fraction(priority: Priority, class: QueryClass) -> f64 {
+    let base = match priority {
+        Priority::Low => 0.35,
+        Priority::Normal => 0.60,
+        Priority::High => 0.85,
+    };
+    // class span (0.15 across the four cost ranks) stays inside one
+    // priority band (0.25 between bases), so priority strictly
+    // dominates; high-priority cones land exactly at the full depth
+    base + 0.05 * (3 - class.cost_rank()) as f64
+}
 
 /// How stale a response the caller tolerates, in catalog epochs (see
 /// [`crate::serve::ingest`]): live ingestion publishes new epochs while
@@ -89,6 +158,14 @@ impl Consistency {
 pub struct Request {
     /// the typed query to answer
     pub query: Query,
+    /// the query's class, stamped at construction from the query shape.
+    /// First-class on the envelope so middleware ([`Admission`]'s
+    /// graded shed, [`Cached`]'s per-class maps) and the scheduler key
+    /// off a typed field instead of re-deriving it per layer.
+    pub class: QueryClass,
+    /// admission/scheduling priority (default [`Priority::Normal`], so
+    /// pre-priority constructors behave unchanged)
+    pub priority: Priority,
     /// arrival time on the engine's clock, seconds (simulated or wall)
     pub at: f64,
     /// latency budget, seconds; responses completing later are marked
@@ -106,10 +183,14 @@ pub struct Request {
 }
 
 impl Request {
-    /// A plain request: no deadline, cached results acceptable.
+    /// A plain request: no deadline, cached results acceptable, normal
+    /// priority. The typed class is stamped from the query here, once.
     pub fn new(query: Query) -> Request {
+        let class = query.class();
         Request {
             query,
+            class,
+            priority: Priority::Normal,
             at: 0.0,
             deadline: None,
             consistency: Consistency::CachedOk,
@@ -139,6 +220,12 @@ impl Request {
     /// Tolerate at most `k` epochs of staleness (cache and replicas).
     pub fn at_most(mut self, epochs: u32) -> Request {
         self.consistency = Consistency::AtMost(epochs);
+        self
+    }
+
+    /// Set the admission/scheduling priority.
+    pub fn with_priority(mut self, priority: Priority) -> Request {
+        self.priority = priority;
         self
     }
 }
@@ -389,6 +476,10 @@ impl<E: QueryEngine> QueryEngine for Consistent<E> {
 pub struct LayerSpec {
     /// [`Admission`] in-flight bound (0 = no admission layer)
     pub admit_depth: usize,
+    /// grade the admission bound by `(priority, class)` (see
+    /// [`admit_fraction`]) instead of shedding uniformly at the depth.
+    /// Off by default: the plain bound is the historical behavior.
+    pub graded_admission: bool,
     /// [`Cached`] entries per query class (0 = no cache layer)
     pub cache_entries: usize,
     /// [`Hedged`] replica budget, seconds (<= 0 = no hedge layer)
@@ -408,7 +499,11 @@ pub fn layered(base: Box<dyn QueryEngine>, spec: &LayerSpec) -> Box<dyn QueryEng
         engine = Box::new(Cached::new(engine, spec.cache_entries));
     }
     if spec.admit_depth > 0 {
-        engine = Box::new(Admission::new(engine, spec.admit_depth));
+        engine = Box::new(if spec.graded_admission {
+            Admission::graded(engine, spec.admit_depth)
+        } else {
+            Admission::new(engine, spec.admit_depth)
+        });
     }
     engine
 }
@@ -416,4 +511,79 @@ pub fn layered(base: Box<dyn QueryEngine>, spec: &LayerSpec) -> Box<dyn QueryEng
 /// Look up one cumulative counter from an engine stack by name.
 pub fn metric(engine: &dyn QueryEngine, name: &str) -> Option<f64> {
     engine.metrics().into_iter().find(|(n, _)| n == name).map(|(_, v)| v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::query::{SourceFilter, QUERY_CLASSES};
+
+    #[test]
+    fn request_stamps_typed_class_and_default_priority() {
+        let q = Query::CrossMatch { pos: (1.0, 2.0), radius: 0.5 };
+        let req = Request::new(q);
+        assert_eq!(req.class, QueryClass::CrossMatch);
+        assert_eq!(req.class, req.query.class(), "envelope class mirrors the query");
+        assert_eq!(req.priority, Priority::Normal, "old constructors stay Normal");
+        let req = req.with_priority(Priority::High);
+        assert_eq!(req.priority, Priority::High);
+    }
+
+    /// The class-ordering contract, asserted rather than assumed: shed
+    /// order under overload is exactly the `admit_fraction` total order.
+    #[test]
+    fn admit_fractions_pin_the_shed_order() {
+        // (a) for a fixed priority, fractions strictly fall with cost:
+        // expensive classes shed before cheap ones
+        for p in PRIORITIES {
+            for w in QUERY_CLASSES.windows(2) {
+                assert!(
+                    admit_fraction(p, w[0]) > admit_fraction(p, w[1]),
+                    "{:?}: {:?} must outlast {:?}",
+                    p,
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+        // (b) for a fixed class, fractions strictly rise with priority
+        for c in QUERY_CLASSES {
+            assert!(admit_fraction(Priority::Low, c) < admit_fraction(Priority::Normal, c));
+            assert!(admit_fraction(Priority::Normal, c) < admit_fraction(Priority::High, c));
+        }
+        // (c) priority dominates class: the cheapest low-priority query
+        // still sheds before the costliest normal-priority one, etc.
+        assert!(
+            admit_fraction(Priority::Low, QueryClass::Cone)
+                < admit_fraction(Priority::Normal, QueryClass::CrossMatch)
+        );
+        assert!(
+            admit_fraction(Priority::Normal, QueryClass::Cone)
+                < admit_fraction(Priority::High, QueryClass::CrossMatch)
+        );
+        // (d) the extremes: high-priority cones keep the full depth,
+        // low-priority cross-matches are globally first to shed
+        assert_eq!(admit_fraction(Priority::High, QueryClass::Cone), 1.0);
+        let min = admit_fraction(Priority::Low, QueryClass::CrossMatch);
+        for p in PRIORITIES {
+            for c in QUERY_CLASSES {
+                let f = admit_fraction(p, c);
+                assert!(f >= min && f <= 1.0, "{p:?}/{c:?} fraction {f} out of range");
+            }
+        }
+    }
+
+    #[test]
+    fn priority_parse_and_order() {
+        assert_eq!(Priority::parse("low"), Some(Priority::Low));
+        assert_eq!(Priority::parse("normal"), Some(Priority::Normal));
+        assert_eq!(Priority::parse("high"), Some(Priority::High));
+        assert_eq!(Priority::parse("urgent"), None);
+        assert!(Priority::Low < Priority::Normal && Priority::Normal < Priority::High);
+        for (i, p) in PRIORITIES.iter().enumerate() {
+            assert_eq!(p.index(), i);
+        }
+        let q = Query::BrightestN { n: 1, filter: SourceFilter::Any };
+        assert_eq!(Request::new(q).priority, Priority::default());
+    }
 }

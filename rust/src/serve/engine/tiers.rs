@@ -121,7 +121,7 @@ impl ServerEngine {
 impl QueryEngine for ServerEngine {
     fn call(&self, req: Request) -> Response {
         let t = Instant::now();
-        match self.server.call(req.query.clone()) {
+        match self.server.call_with(req.query.clone(), req.priority) {
             Some(result) => {
                 let resp = Response::served(result, req.at + t.elapsed().as_secs_f64());
                 enforce_deadline(req.at, req.deadline, resp)
@@ -131,7 +131,7 @@ impl QueryEngine for ServerEngine {
     }
 
     fn submit(&self, req: Request) -> Submitted {
-        if self.server.try_submit(req.query) {
+        if self.server.try_submit_with(req.query, req.priority) {
             Submitted::Queued
         } else {
             Submitted::Shed
@@ -206,6 +206,15 @@ impl RouterEngine {
         f(&self.router.lock().unwrap())
     }
 
+    /// Mutable access to the shared router — the control plane's seam:
+    /// a controller ticking between arrivals reads per-node/per-shard
+    /// load through it and initiates live migration
+    /// ([`Router::rebalance_to`]) against the same router the drive is
+    /// executing on.
+    pub fn with_router_mut<T>(&self, f: impl FnOnce(&mut Router) -> T) -> T {
+        f(&mut self.router.lock().unwrap())
+    }
+
     /// Ship an ingestion publish to the replica tier at simulated time
     /// `now`: delta rows ride the fabric to every touched replica and
     /// each node applies the epoch when its transfer lands.
@@ -276,7 +285,7 @@ impl QueryEngine for RouterEngine {
         self.registry.record_spans(&spans);
         let total = done - req.at;
         self.lat_all.record(total);
-        self.lat_class[req.query.class().index()].record(total);
+        self.lat_class[req.class.index()].record(total);
         if self.sampler.enabled() {
             self.sampler.observe(TraceRecord {
                 trace_id: req.trace_id,
@@ -300,6 +309,10 @@ impl QueryEngine for RouterEngine {
             ("router_failovers".to_string(), r.failover.n as f64),
             ("router_hedges".to_string(), r.hedges as f64),
             ("router_hedge_wins".to_string(), r.hedge_wins as f64),
+            ("router_hedge_cancels".to_string(), r.hedge_cancels as f64),
+            ("router_hedge_cancel_saved_s".to_string(), r.hedge_cancel_saved_s),
+            ("router_migrations".to_string(), r.migrations as f64),
+            ("router_migrated_bytes".to_string(), r.migrated_bytes),
             ("router_fabric_bytes".to_string(), r.fabric.bytes_moved),
             ("router_epochs_published".to_string(), r.epochs_published as f64),
             ("router_delta_bytes".to_string(), r.delta_bytes),

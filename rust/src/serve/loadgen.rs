@@ -11,9 +11,27 @@
 //! result caches are exercised); the rest are uniform over the sky.
 //! Mix presets cover the scenario axes: uniform scan, hotspot, and
 //! cross-match-heavy.
+//!
+//! Three time-varying axes exercise the adaptive control plane:
+//!
+//! * **Moving hotspots** ([`LoadGenConfig::hotspot_move_s`]): the hot
+//!   sky regions are re-derived every interval, so demand migrates
+//!   between shard ranges mid-run — the workload a rebalancer earns its
+//!   keep under. Phase 0 is byte-identical to the static derivation.
+//! * **Rate curve** ([`LoadGenConfig::rate_curve`]): a raised-cosine
+//!   diurnal swell multiplies the offered rate between 1x and the peak
+//!   factor — what autoscaling reacts to.
+//! * **Priority mix** ([`LoadGenConfig::priority_mix`]): each request
+//!   draws a [`Priority`] from the configured weights, off a dedicated
+//!   rng stream so the query sequence itself is unperturbed.
+//!
+//! The open-loop drivers feed generator time via [`LoadGen::advance_to`]
+//! as arrivals are placed; a generator that is never advanced behaves
+//! exactly as before these axes existed.
 
 use crate::prng::Rng;
 
+use super::engine::Priority;
 use super::query::{Query, SourceFilter};
 
 /// Relative weights of the four query classes.
@@ -93,6 +111,16 @@ pub struct LoadGenConfig {
     /// rate unchanged — the arrival shape under which batched request
     /// scheduling earns its keep.
     pub burst: usize,
+    /// re-derive the hotspot centers every this many seconds of
+    /// generator time (0 = static hotspots, the historical behavior)
+    pub hotspot_move_s: f64,
+    /// `Some((period_s, peak))`: modulate the offered rate by a
+    /// raised-cosine curve from 1x (trough) to `peak`x over each period
+    /// — the diurnal swell an autoscaler reacts to
+    pub rate_curve: Option<(f64, f64)>,
+    /// `Some([low, normal, high])` draws each request's priority from
+    /// these weights; `None` leaves every request at `Normal`
+    pub priority_mix: Option<[f64; 3]>,
     pub seed: u64,
 }
 
@@ -107,6 +135,9 @@ impl Default for LoadGenConfig {
             box_edge: (8.0, 120.0),
             brightest_max: 100,
             burst: 1,
+            hotspot_move_s: 0.0,
+            rate_curve: None,
+            priority_mix: None,
             seed: 42,
         }
     }
@@ -114,7 +145,7 @@ impl Default for LoadGenConfig {
 
 impl LoadGenConfig {
     /// Preset for a named scenario
-    /// (`uniform` | `hotspot` | `xmatch` | `drift`).
+    /// (`uniform` | `hotspot` | `xmatch` | `drift` | `moving`).
     pub fn scenario(name: &str, seed: u64) -> Option<LoadGenConfig> {
         let base = LoadGenConfig { seed, ..Default::default() };
         match name {
@@ -142,6 +173,17 @@ impl LoadGenConfig {
                 hotspot_fraction: 0.7,
                 ..base
             }),
+            // a few intense hotspots that jump to fresh sky every
+            // second: sustained per-range skew whose location keeps
+            // moving — the rebalancing controller's scenario
+            "moving" => Some(LoadGenConfig {
+                mix: QueryMix::hotspot(),
+                hotspot_fraction: 0.95,
+                n_hotspots: 4,
+                zipf_s: 1.5,
+                hotspot_move_s: 1.0,
+                ..base
+            }),
             _ => None,
         }
     }
@@ -160,17 +202,19 @@ pub struct LoadGen {
     mix_cdf: [f64; 4],
     /// arrivals remaining in the current burst (see `LoadGenConfig::burst`)
     burst_left: usize,
+    /// generator time (advanced by the open-loop drivers); drives the
+    /// hotspot phase and the rate curve
+    now: f64,
+    /// current hotspot phase (`floor(now / hotspot_move_s)`)
+    phase: u64,
+    /// dedicated stream for priority draws, so enabling a priority mix
+    /// never perturbs the query sequence
+    pri_rng: Rng,
 }
 
 impl LoadGen {
     pub fn new(cfg: LoadGenConfig, width: f64, height: f64) -> LoadGen {
-        // hotspot placement is seed-stable but independent of the
-        // per-query stream, so differently-seeded generators share the
-        // same hot sky regions (as real traffic would)
-        let mut hot_rng = Rng::new(0x5eed ^ cfg.n_hotspots as u64);
-        let hotspots: Vec<(f64, f64)> = (0..cfg.n_hotspots.max(1))
-            .map(|_| (hot_rng.uniform_in(0.0, width), hot_rng.uniform_in(0.0, height)))
-            .collect();
+        let hotspots = LoadGen::derive_hotspots(&cfg, width, height, 0);
         let mut zipf_cdf = Vec::with_capacity(hotspots.len());
         let mut acc = 0.0;
         for rank in 1..=hotspots.len() {
@@ -189,7 +233,85 @@ impl LoadGen {
             1.0,
         ];
         let rng = Rng::new(cfg.seed);
-        LoadGen { cfg, rng, width, height, hotspots, zipf_cdf, mix_cdf, burst_left: 0 }
+        let pri_rng = Rng::new(cfg.seed ^ 0x70f1);
+        LoadGen {
+            cfg,
+            rng,
+            width,
+            height,
+            hotspots,
+            zipf_cdf,
+            mix_cdf,
+            burst_left: 0,
+            now: 0.0,
+            phase: 0,
+            pri_rng,
+        }
+    }
+
+    /// Hotspot placement is seed-stable but independent of the
+    /// per-query stream, so differently-seeded generators share the
+    /// same hot sky regions (as real traffic would). Phase 0 is the
+    /// historical static derivation; each later phase re-rolls the
+    /// centers, modelling interest moving across the sky.
+    fn derive_hotspots(
+        cfg: &LoadGenConfig,
+        width: f64,
+        height: f64,
+        phase: u64,
+    ) -> Vec<(f64, f64)> {
+        let seed =
+            0x5eed ^ cfg.n_hotspots as u64 ^ phase.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let mut hot_rng = Rng::new(seed);
+        (0..cfg.n_hotspots.max(1))
+            .map(|_| (hot_rng.uniform_in(0.0, width), hot_rng.uniform_in(0.0, height)))
+            .collect()
+    }
+
+    /// Advance generator time to `now` (monotone). The open-loop
+    /// drivers call this as each arrival is placed; moving hotspots
+    /// and the rate curve key off it. Never advancing keeps the stream
+    /// identical to the pre-time-varying generator.
+    pub fn advance_to(&mut self, now: f64) {
+        self.now = self.now.max(now);
+        if self.cfg.hotspot_move_s > 0.0 {
+            let phase = (self.now / self.cfg.hotspot_move_s) as u64;
+            if phase != self.phase {
+                self.phase = phase;
+                self.hotspots =
+                    LoadGen::derive_hotspots(&self.cfg, self.width, self.height, phase);
+            }
+        }
+    }
+
+    /// The rate curve's multiplier at the current generator time
+    /// (1.0 without a curve; peaks mid-period with one).
+    pub fn rate_factor(&self) -> f64 {
+        match self.cfg.rate_curve {
+            Some((period, peak)) if period > 0.0 => {
+                let swell = 0.5 * (1.0 - (std::f64::consts::TAU * self.now / period).cos());
+                1.0 + (peak - 1.0) * swell
+            }
+            _ => 1.0,
+        }
+    }
+
+    /// The next request's priority: `Normal` unless a priority mix is
+    /// configured, in which case it is drawn from the mix weights on a
+    /// stream independent of the query sequence.
+    pub fn next_priority(&mut self) -> Priority {
+        let Some(w) = self.cfg.priority_mix else {
+            return Priority::Normal;
+        };
+        let total = (w[0] + w[1] + w[2]).max(1e-12);
+        let u = self.pri_rng.uniform() * total;
+        if u < w[0] {
+            Priority::Low
+        } else if u < w[0] + w[1] {
+            Priority::Normal
+        } else {
+            Priority::High
+        }
     }
 
     /// A derived stream for another client thread.
@@ -244,7 +366,8 @@ impl LoadGen {
     /// (one exponential gap per arrival, draw-for-draw identical to the
     /// pre-burst generator); with `burst > 1`, `burst` arrivals land
     /// back to back and the gap between bursts is scaled by `burst` so
-    /// the offered rate is unchanged.
+    /// the offered rate is unchanged. A configured rate curve
+    /// multiplies the instantaneous rate by [`LoadGen::rate_factor`].
     pub fn next_interarrival(&mut self, qps: f64) -> f64 {
         let burst = self.cfg.burst.max(1);
         if burst > 1 {
@@ -255,7 +378,7 @@ impl LoadGen {
             self.burst_left = burst - 1;
         }
         let u = self.rng.uniform().max(1e-12);
-        -u.ln() * burst as f64 / qps.max(1e-3)
+        -u.ln() * burst as f64 / (qps.max(1e-3) * self.rate_factor())
     }
 
     /// Draw the next query from the configured mix.
@@ -457,6 +580,100 @@ mod tests {
             "mean gap {mean} vs expected {}",
             1.0 / qps
         );
+    }
+
+    #[test]
+    fn moving_hotspots_relocate_per_phase_and_phase_zero_is_static() {
+        let moving = LoadGenConfig {
+            hotspot_fraction: 1.0,
+            n_hotspots: 4,
+            hotspot_move_s: 1.0,
+            seed: 11,
+            ..Default::default()
+        };
+        let static_cfg = LoadGenConfig { hotspot_move_s: 0.0, ..moving.clone() };
+        let mut m = LoadGen::new(moving, 1000.0, 1000.0);
+        let s = LoadGen::new(static_cfg, 1000.0, 1000.0);
+        // before any time passes, the moving generator IS the static one
+        assert_eq!(m.hotspots, s.hotspots);
+        m.advance_to(0.5); // same phase
+        assert_eq!(m.hotspots, s.hotspots);
+        let phase0 = m.hotspots.clone();
+        m.advance_to(1.25); // phase 1: fresh sky
+        assert_ne!(m.hotspots, phase0, "hotspots did not move");
+        let phase1 = m.hotspots.clone();
+        m.advance_to(2.0); // phase 2 differs from both
+        assert_ne!(m.hotspots, phase0);
+        assert_ne!(m.hotspots, phase1);
+        // time is monotone: a stale timestamp cannot rewind the phase
+        let phase2 = m.hotspots.clone();
+        m.advance_to(1.0);
+        assert_eq!(m.hotspots, phase2);
+    }
+
+    #[test]
+    fn rate_curve_swells_the_offered_rate_mid_period() {
+        let cfg = LoadGenConfig { rate_curve: Some((10.0, 3.0)), ..Default::default() };
+        let mut g = LoadGen::new(cfg, 100.0, 100.0);
+        let qps = 200.0;
+        // trough: factor 1
+        assert!((g.rate_factor() - 1.0).abs() < 1e-12);
+        let n = 8000;
+        let mut trough = 0.0;
+        for _ in 0..n {
+            trough += g.next_interarrival(qps);
+        }
+        // peak: factor = the full configured swell
+        g.advance_to(5.0);
+        assert!((g.rate_factor() - 3.0).abs() < 1e-9);
+        let mut peak = 0.0;
+        for _ in 0..n {
+            peak += g.next_interarrival(qps);
+        }
+        let (trough_mean, peak_mean) = (trough / n as f64, peak / n as f64);
+        assert!(
+            (trough_mean - 1.0 / qps).abs() < 0.2 / qps,
+            "trough mean {trough_mean}"
+        );
+        assert!(
+            (peak_mean - 1.0 / (3.0 * qps)).abs() < 0.2 / (3.0 * qps),
+            "peak mean {peak_mean}"
+        );
+    }
+
+    #[test]
+    fn priority_mix_is_deterministic_and_leaves_the_query_stream_alone() {
+        let base = LoadGenConfig { seed: 23, ..Default::default() };
+        let mixed = LoadGenConfig {
+            priority_mix: Some([6.0, 3.0, 1.0]),
+            ..base.clone()
+        };
+        let mut plain = LoadGen::new(base, 800.0, 800.0);
+        let mut a = LoadGen::new(mixed.clone(), 800.0, 800.0);
+        let mut b = LoadGen::new(mixed, 800.0, 800.0);
+        let mut counts = [0usize; 3];
+        for _ in 0..3000 {
+            // the priority draw rides its own rng stream: the query
+            // sequence with a mix is identical to the one without
+            let q = a.next_query();
+            assert_eq!(q, plain.next_query());
+            assert_eq!(plain.next_priority(), Priority::Normal);
+            let pa = a.next_priority();
+            assert_eq!(pa, b.next_priority());
+            b.next_query();
+            counts[pa.index()] += 1;
+        }
+        // 60/30/10 weights show up as ordered frequencies
+        assert!(counts[0] > counts[1] && counts[1] > counts[2], "{counts:?}");
+        assert!(counts[2] > 100, "high priority starved: {counts:?}");
+    }
+
+    #[test]
+    fn moving_scenario_preset_moves_and_skews() {
+        let cfg = LoadGenConfig::scenario("moving", 9).unwrap();
+        assert!(cfg.hotspot_move_s > 0.0);
+        assert!(cfg.hotspot_fraction > 0.9);
+        assert!(LoadGenConfig::scenario("nope", 9).is_none());
     }
 
     #[test]

@@ -33,6 +33,13 @@
 //!   recovery with a measured RTO (`celeste recover-bench`), and
 //!   skew-triggered Hilbert-range compaction with minimal-movement
 //!   rendezvous rebalancing.
+//! * [`config`] — `serve-bench`'s typed configuration: every flag
+//!   parsed and cross-validated in one place ([`ServeConfig`]), with
+//!   the conflict matrix pinned by unit tests.
+//! * [`control`] — the adaptive control plane: a mechanism-free
+//!   controller over windowed per-node/per-shard load that decides
+//!   hot-shard relief migrations and membership scaling, recording
+//!   every decision in a dump-able log.
 //! * [`dist`] — the multi-node tier: replicated shard placement, fabric-
 //!   backed remote shard clients, a load-balanced scatter-gather router
 //!   with replica hedging, and failure injection — in simulated time.
@@ -47,6 +54,8 @@
 //!
 //! Entry points: `celeste serve-bench` (CLI) and `benches/bench_serve`.
 
+pub mod config;
+pub mod control;
 pub mod dist;
 pub mod durable;
 pub mod engine;
@@ -60,11 +69,13 @@ pub mod server;
 pub mod snapshot;
 pub mod store;
 
+pub use config::ServeConfig;
+pub use control::{ControlConfig, ControlEvent, Controller, DecisionLog, NodeLoad};
 pub use engine::{
-    drive_closed_loop, drive_open_loop, drive_open_loop_with, layered, metric, Admission, Cached,
-    Clock, Consistency, Consistent, DirectEngine, DriveReport, Hedged, LayerSpec, Outcome,
-    QueryEngine, Request, Response, ResultCache, RouterEngine, ScanEngine, ServerEngine, SimClock,
-    Submitted, Trace, WallClock,
+    admit_fraction, drive_closed_loop, drive_open_loop, drive_open_loop_with, layered, metric,
+    Admission, Cached, Clock, Consistency, Consistent, DirectEngine, DriveReport, Hedged,
+    LayerSpec, Outcome, Priority, QueryEngine, Request, Response, ResultCache, RouterEngine,
+    ScanEngine, ServerEngine, SimClock, Submitted, Trace, WallClock, N_PRIORITIES, PRIORITIES,
 };
 pub use durable::{
     catalog_checksum, store_checksum, CompactionReport, Compactor, DurableLog, Recovered,

@@ -466,6 +466,45 @@ impl NetConn {
         }
     }
 
+    /// Fire-and-forget cancellation (wire v3): tell the server to drop
+    /// any not-yet-executed work of `trace_id` before a shard runs it.
+    /// No reply is expected and no flight slot is consumed, so a
+    /// hedge's winner path can cancel the loser without waiting behind
+    /// it. Best-effort by design: a dead session is redialed once so a
+    /// cancel racing ahead of its execute still lands, but a server
+    /// that stays unreachable just misses the hint — the cancelled
+    /// request's own round trip will fail on its usual path.
+    pub fn cancel(&self, trace_id: u64) {
+        if trace_id == 0 {
+            return;
+        }
+        let frame = wire::encode_frame(&Msg::Cancel { trace_id });
+        let mut st = self.state.lock().expect("conn lock");
+        if st.stream.is_none() {
+            let Ok(s) = self.dial() else { return };
+            let Ok(r) = s.try_clone() else { return };
+            st.stream = Some(s);
+            st.reader = Some(r);
+            st.ready.clear();
+            st.pending.clear();
+            st.in_flight = 0;
+        }
+        use std::io::Write;
+        let stream = st.stream.as_mut().expect("just ensured");
+        match stream.write_all(&frame) {
+            Ok(()) => {
+                // not counted in `frames`: that counter is the
+                // coalescing contract's request-frame observable
+                self.bytes_sent.fetch_add(frame.len() as u64, Ordering::Relaxed);
+            }
+            Err(e) => {
+                let e = WireError::Io(e.kind());
+                self.count_err(&e);
+                self.fail_conn(&mut st, e);
+            }
+        }
+    }
+
     /// Ship one epoch publish and await its ack. With a durable
     /// server, the ack means the epoch is fsynced in that server's WAL.
     pub fn publish(

@@ -25,6 +25,13 @@
 //! (the default) keeps the simulated fabric. See `docs/WIRE.md` for the
 //! wire layout and `README.md` for the flag matrix.
 //!
+//! The control plane reaches this tier too (wire v3): a fire-and-forget
+//! `Cancel` frame drops a resolved hedge race's loser before any shard
+//! work runs (counted in the server's `hedge_cancels`), and
+//! [`NetRouterEngine::rebalance_to`] swaps the routing placement live —
+//! every server loads the full catalog, so a tcp-tier "migration" is an
+//! instant routing change with parity preserved throughout.
+//!
 //! Shutdown is graceful: [`signal`] flips a flag on SIGTERM and
 //! [`ShardServer::run_graceful`] flushes a final checkpoint + terminal
 //! stats line before the process exits, so the last acked epoch is on

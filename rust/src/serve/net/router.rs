@@ -30,6 +30,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::serve::control::NodeLoad;
 use crate::serve::dist::Placement;
 use crate::serve::engine::{enforce_deadline, Consistency, QueryEngine, Request, Response};
 use crate::serve::ingest::{EpochStore, IngestReport, VersionedStore};
@@ -44,12 +45,25 @@ use super::wire::WireError;
 struct Inner {
     /// front-end planning mirror; advanced only after every server acks
     mirror: Arc<VersionedStore>,
-    placement: Placement,
+    /// routing placement — mutable because the control plane swaps it
+    /// live ([`NetRouterEngine::rebalance_to`]); every server loads the
+    /// full catalog, so a swap is purely a routing change
+    placement: Mutex<Placement>,
     conns: Vec<Arc<NetConn>>,
     /// replica rotation cursor (round-robin over live replicas)
     rr: AtomicUsize,
     /// sticky per-server death marks fed by failed round trips
     suspected: Vec<AtomicBool>,
+    /// cumulative sub-queries dispatched per shard — the controller's
+    /// per-shard demand signal
+    served_per_shard: Vec<AtomicU64>,
+    /// cumulative sub-queries answered per server
+    served_per_server: Vec<AtomicU64>,
+    /// wall-clock nanoseconds this front end spent waiting on each
+    /// server's round trips (the tcp tier's busy proxy)
+    busy_ns_per_server: Vec<AtomicU64>,
+    /// shards whose replica set changed across every placement swap
+    migrations: AtomicU64,
     failovers: AtomicU64,
     failed: AtomicU64,
     epochs_published: AtomicU64,
@@ -111,14 +125,19 @@ impl NetRouterEngine {
             store.shards.len(),
             pipeline
         );
+        let n_shards = store.shards.len();
         let mirror = Arc::new(VersionedStore::new(store));
         Ok(NetRouterEngine {
             inner: Arc::new(Inner {
                 mirror,
-                placement,
+                placement: Mutex::new(placement),
                 conns,
                 rr: AtomicUsize::new(0),
                 suspected: (0..n_servers).map(|_| AtomicBool::new(false)).collect(),
+                served_per_shard: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
+                served_per_server: (0..n_servers).map(|_| AtomicU64::new(0)).collect(),
+                busy_ns_per_server: (0..n_servers).map(|_| AtomicU64::new(0)).collect(),
+                migrations: AtomicU64::new(0),
                 failovers: AtomicU64::new(0),
                 failed: AtomicU64::new(0),
                 epochs_published: AtomicU64::new(0),
@@ -241,8 +260,88 @@ impl NetRouterEngine {
         false
     }
 
-    pub fn placement(&self) -> &Placement {
-        &self.inner.placement
+    /// A clone of the current routing placement (the control plane
+    /// swaps the live one via [`NetRouterEngine::rebalance_to`]).
+    pub fn placement(&self) -> Placement {
+        self.inner.placement.lock().expect("placement lock").clone()
+    }
+
+    /// Swap the routing placement for `target`. Every shard server
+    /// loads the full catalog, so a shard "migration" on the tcp tier
+    /// is purely a routing change — the swap is instant, nothing
+    /// ships, and scatters already planned finish against the
+    /// placement they picked replicas under. Shards whose replica set
+    /// changed are counted as migrations (`net_migrations`). Returns
+    /// the number of shards moved; errors when the target's shape does
+    /// not match this tier.
+    pub fn rebalance_to(&self, target: Placement) -> Result<u64, String> {
+        let inner = &*self.inner;
+        if target.n_nodes != inner.conns.len() {
+            return Err(format!(
+                "target places over {} nodes but this tier has {} servers",
+                target.n_nodes,
+                inner.conns.len()
+            ));
+        }
+        let mut p = inner.placement.lock().expect("placement lock");
+        if target.n_shards() != p.n_shards() {
+            return Err(format!(
+                "target has {} shards but the store has {}",
+                target.n_shards(),
+                p.n_shards()
+            ));
+        }
+        let mut moved = 0u64;
+        for s in 0..p.n_shards() {
+            let mut a = p.shard_nodes[s].clone();
+            let mut b = target.shard_nodes[s].clone();
+            a.sort_unstable();
+            b.sort_unstable();
+            if a != b {
+                moved += 1;
+            }
+        }
+        *p = target;
+        inner.migrations.fetch_add(moved, Ordering::Relaxed);
+        Ok(moved)
+    }
+
+    /// One [`NodeLoad`] per server for the controller: liveness from
+    /// the suspicion marks, cumulative sub-queries served, and the
+    /// wall-clock seconds spent waiting on that server's round trips.
+    pub fn node_loads(&self) -> Vec<NodeLoad> {
+        let inner = &*self.inner;
+        (0..inner.conns.len())
+            .map(|i| NodeLoad {
+                alive: !inner.suspected[i].load(Ordering::SeqCst),
+                served: inner.served_per_server[i].load(Ordering::Relaxed),
+                busy_s: inner.busy_ns_per_server[i].load(Ordering::Relaxed) as f64 * 1e-9,
+            })
+            .collect()
+    }
+
+    /// Cumulative sub-query dispatches per shard — the controller's
+    /// per-shard demand signal.
+    pub fn served_per_shard(&self) -> Vec<u64> {
+        self.inner.served_per_shard.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Shards whose replica set changed across every placement swap.
+    pub fn migrations(&self) -> u64 {
+        self.inner.migrations.load(Ordering::Relaxed)
+    }
+
+    /// Propagate a cancellation to every live server (fire-and-forget
+    /// `Cancel` frames, wire v3): any not-yet-executed sub-query of
+    /// this trace is dropped server-side before a shard runs it and
+    /// counted in that server's `hedge_cancels`.
+    pub fn cancel(&self, trace_id: u64) {
+        let inner = &*self.inner;
+        for (i, conn) in inner.conns.iter().enumerate() {
+            if !inner.suspected[i].load(Ordering::SeqCst) {
+                conn.cancel(trace_id);
+            }
+        }
     }
 
     pub fn n_servers(&self) -> usize {
@@ -354,10 +453,15 @@ impl NetRouterEngine {
         let mut crit_spans = SpanSet::new();
         let mut remaining = groups;
         while !remaining.is_empty() {
-            // pick a live replica per shard, rotating the start slot
+            // pick a live replica per shard, rotating the start slot;
+            // the placement is read under its lock so a concurrent
+            // control-plane swap is seen atomically per shard
             let mut per_server: BTreeMap<usize, Vec<(u32, Vec<Query>)>> = BTreeMap::new();
             for (shard, queries) in remaining.drain(..) {
-                let reps = inner.placement.replicas_of(shard as usize);
+                let reps: Vec<usize> = {
+                    let p = inner.placement.lock().expect("placement lock");
+                    p.replicas_of(shard as usize).to_vec()
+                };
                 let offset = inner.rr.fetch_add(1, Ordering::Relaxed);
                 let pick = (0..reps.len())
                     .map(|i| reps[(offset + i) % reps.len()])
@@ -402,6 +506,15 @@ impl NetRouterEngine {
                             crit = times;
                             crit_spans = server_spans;
                         }
+                        let mut subs = 0u64;
+                        for (shard, queries) in &entries {
+                            inner.served_per_shard[*shard as usize]
+                                .fetch_add(queries.len() as u64, Ordering::Relaxed);
+                            subs += queries.len() as u64;
+                        }
+                        inner.served_per_server[server].fetch_add(subs, Ordering::Relaxed);
+                        inner.busy_ns_per_server[server]
+                            .fetch_add((times.total_s * 1e9) as u64, Ordering::Relaxed);
                         for ((shard, _), reps) in entries.into_iter().zip(replies) {
                             results.insert(shard, reps);
                         }
@@ -512,6 +625,10 @@ impl QueryEngine for NetRouterEngine {
             ("net_stale_refusals".to_string(), sum(|c| &c.stale_refusals)),
             ("net_encode_us_per_frame".to_string(), sum(|c| &c.encode_ns) * 1e-3 / frames),
             ("net_decode_us_per_frame".to_string(), sum(|c| &c.decode_ns) * 1e-3 / frames),
+            (
+                "net_migrations".to_string(),
+                inner.migrations.load(Ordering::Relaxed) as f64,
+            ),
             (
                 "net_failovers".to_string(),
                 inner.failovers.load(Ordering::Relaxed) as f64,

@@ -16,7 +16,15 @@
 //! publish ack can never observe the older epoch. Decode failures are
 //! answered with a typed [`Msg::Error`] and a close — a hostile peer
 //! can end its own connection, never the server.
+//!
+//! Cancellation (wire v3): a fire-and-forget [`Msg::Cancel`] marks a
+//! trace id in a set shared across every connection; the next
+//! `Execute` carrying that id is answered with empty replies and
+//! *zero* shard work, counted in the `hedge_cancels` counter. The
+//! in-order pipe makes the race well-defined per connection: a cancel
+//! written before the loser's execute always lands first.
 
+use std::collections::HashSet;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -25,7 +33,7 @@ use std::time::{Duration, Instant};
 use crate::serve::durable::DurableLog;
 use crate::serve::ingest::{Ingestor, VersionedStore};
 use crate::serve::obs::{self, Registry, SpanSet, Stage};
-use crate::serve::query::execute_on_shard;
+use crate::serve::query::{execute_on_shard, ShardReply};
 use crate::serve::store::Store;
 
 use super::wire::{read_frame, read_frame_timed, write_frame, ErrorCode, Msg, WireError, VERSION};
@@ -34,11 +42,20 @@ use super::wire::{read_frame, read_frame_timed, write_frame, ErrorCode, Msg, Wir
 /// dropped so its handler thread can exit.
 const IDLE_TIMEOUT: Duration = Duration::from_secs(120);
 
+/// Bound on the cancelled-trace set: cancels that never meet their
+/// execute (the common race resolution — the work already finished)
+/// must not accumulate forever, so the set is cleared when it grows
+/// past this many stale ids.
+const CANCEL_SET_CAP: usize = 1024;
+
 pub struct ShardServer {
     listener: TcpListener,
     versioned: Arc<VersionedStore>,
     ingest: Arc<Mutex<Ingestor>>,
     registry: Arc<Registry>,
+    /// trace ids cancelled by `Msg::Cancel`, shared across connections
+    /// (a hedge's cancel and its execute may ride different sockets)
+    cancelled: Arc<Mutex<HashSet<u64>>>,
     /// attached durable log, if this server fsyncs publishes; its own
     /// registry (wal_appends, fsync latency, recovery gauges) is merged
     /// into every `StatsReq` scrape
@@ -97,6 +114,7 @@ impl ShardServer {
             versioned,
             ingest,
             registry: Arc::new(Registry::new()),
+            cancelled: Arc::new(Mutex::new(HashSet::new())),
             log,
             stop: Arc::new(AtomicBool::new(false)),
         })
@@ -151,11 +169,19 @@ impl ShardServer {
                     let versioned = Arc::clone(&self.versioned);
                     let ingest = Arc::clone(&self.ingest);
                     let registry = Arc::clone(&self.registry);
+                    let cancelled = Arc::clone(&self.cancelled);
                     let log = self.log.clone();
                     std::thread::spawn(move || {
                         // per-connection failures only ever end that
                         // connection
-                        let _ = serve_conn(stream, &versioned, &ingest, &registry, log.as_ref());
+                        let _ = serve_conn(
+                            stream,
+                            &versioned,
+                            &ingest,
+                            &registry,
+                            &cancelled,
+                            log.as_ref(),
+                        );
                     });
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -228,6 +254,7 @@ fn serve_conn(
     versioned: &Arc<VersionedStore>,
     ingest: &Arc<Mutex<Ingestor>>,
     registry: &Arc<Registry>,
+    cancelled: &Arc<Mutex<HashSet<u64>>>,
     log: Option<&Arc<DurableLog>>,
 ) -> Result<(), WireError> {
     stream.set_nodelay(true).ok();
@@ -275,6 +302,7 @@ fn serve_conn(
 
     let frames = registry.counter("net_frames");
     let stale = registry.counter("stale_refusals");
+    let cancels = registry.counter("hedge_cancels");
     let h_decode = registry.histogram("stage_decode");
     let h_execute = registry.histogram("stage_shard_execute");
     let h_encode = registry.histogram("stage_encode");
@@ -293,6 +321,34 @@ fn serve_conn(
         match msg {
             Msg::Execute { req_id, min_epoch, trace_id, entries } => {
                 h_decode.record(decode_s);
+                // a cancelled trace is dropped before any shard runs:
+                // the reply mirrors the request's shape (correlation is
+                // undisturbed) but carries empty replies and consumed
+                // zero execution work. One-shot: the id is removed, so
+                // a later request reusing it executes normally.
+                let drop_work = trace_id != 0
+                    && cancelled.lock().expect("cancel set").remove(&trace_id);
+                if drop_work {
+                    cancels.inc();
+                    let out: Vec<Vec<ShardReply>> = entries
+                        .iter()
+                        .map(|(_, qs)| {
+                            qs.iter().map(|_| ShardReply::Sources(Vec::new())).collect()
+                        })
+                        .collect();
+                    let mut spans = SpanSet::new();
+                    spans.add(Stage::Decode, decode_s);
+                    write_frame(
+                        &mut stream,
+                        &Msg::Reply {
+                            req_id,
+                            trace_id,
+                            server_spans: spans.entries(),
+                            entries: out,
+                        },
+                    )?;
+                    continue;
+                }
                 let head = versioned.load();
                 registry.gauge_set("applied_epoch", head.epoch as f64);
                 if head.epoch < min_epoch {
@@ -391,6 +447,19 @@ fn serve_conn(
                         ErrorCode::EpochGap,
                         format!("publish skips from epoch {cur} to {epoch}"),
                     );
+                }
+            }
+            Msg::Cancel { trace_id } => {
+                // fire-and-forget: mark the trace so its next Execute
+                // is dropped before any shard work. The set is bounded
+                // — ids whose work already finished never get matched,
+                // so past the cap the stale ones are discarded.
+                if trace_id != 0 {
+                    let mut c = cancelled.lock().expect("cancel set");
+                    if c.len() >= CANCEL_SET_CAP {
+                        c.clear();
+                    }
+                    c.insert(trace_id);
                 }
             }
             Msg::Hello { .. } => {

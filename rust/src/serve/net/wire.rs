@@ -5,17 +5,21 @@
 //! ```text
 //! offset  size  field
 //!      0     2  magic 0xCE57, little-endian
-//!      2     1  protocol version (currently 2)
+//!      2     1  protocol version (currently 3)
 //!      3     1  message tag (see below)
 //!      4     4  payload length, little-endian u32
 //! ```
 //!
-//! Version 2 (this build) extends version 1 with request telemetry:
-//! `Execute` carries the originating trace id, `Reply` echoes it back
-//! alongside the server-side per-stage span timings, and the
+//! Version 2 extended version 1 with request telemetry: `Execute`
+//! carries the originating trace id, `Reply` echoes it back alongside
+//! the server-side per-stage span timings, and the
 //! `StatsReq`/`StatsReply` pair (tags 8/9) lets a front end scrape a
-//! shard server's metrics-registry snapshot. v1 and v2 peers do not
-//! interoperate; the mismatch surfaces as the actionable
+//! shard server's metrics-registry snapshot. Version 3 (this build)
+//! adds cooperative cancellation: the fire-and-forget [`Msg::Cancel`]
+//! frame (tag 10) marks a trace id whose not-yet-executed work the
+//! server drops before any shard runs — how a resolved hedge race
+//! stops its loser from consuming server-side work. Mixed-version
+//! peers do not interoperate; the mismatch surfaces as the actionable
 //! [`WireError::PeerVersion`] rather than a generic decode failure.
 //!
 //! The header is validated *before* the payload is touched: a bad
@@ -43,7 +47,7 @@ use crate::serve::store::ServedSource;
 /// Frame magic (little-endian on the wire).
 pub const MAGIC: u16 = 0xCE57;
 /// Protocol version spoken by this build.
-pub const VERSION: u8 = 2;
+pub const VERSION: u8 = 3;
 /// Header size in bytes.
 pub const HEADER_LEN: usize = 8;
 /// Largest payload a peer may announce (checked before allocation).
@@ -230,6 +234,12 @@ pub enum Msg {
         /// named histograms as full reservoir state
         histograms: Vec<(String, Stats)>,
     },
+    /// client -> server, fire-and-forget (wire v3): drop any
+    /// not-yet-executed work of this trace before a shard runs it.
+    /// The server sends no reply; the dropped `Execute` (if one
+    /// arrives) is still answered — with empty replies and zero shard
+    /// work — so request/response correlation is undisturbed.
+    Cancel { trace_id: u64 },
 }
 
 impl Msg {
@@ -244,6 +254,7 @@ impl Msg {
             Msg::Error { .. } => 7,
             Msg::StatsReq { .. } => 8,
             Msg::StatsReply { .. } => 9,
+            Msg::Cancel { .. } => 10,
         }
     }
 }
@@ -621,6 +632,7 @@ fn encode_payload(msg: &Msg) -> Vec<u8> {
                 put_stats(&mut w, s);
             }
         }
+        Msg::Cancel { trace_id } => w.u64(*trace_id),
     }
     w.0
 }
@@ -700,6 +712,7 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<Msg, WireError> {
             }
             Msg::StatsReply { req_id, counters, gauges, histograms }
         }
+        10 => Msg::Cancel { trace_id: r.u64()? },
         t => return Err(WireError::BadTag(t)),
     };
     r.done()?;
@@ -761,7 +774,7 @@ pub fn read_frame_timed(r: &mut impl Read) -> Result<(Msg, f64), WireError> {
         return Err(WireError::Version(version));
     }
     let tag = header[3];
-    if !(1..=9).contains(&tag) {
+    if !(1..=10).contains(&tag) {
         return Err(WireError::BadTag(tag));
     }
     let len = u32::from_le_bytes([header[4], header[5], header[6], header[7]]);
@@ -871,6 +884,7 @@ mod tests {
                     s
                 })],
             },
+            Msg::Cancel { trace_id: 0xFEED },
         ]
     }
 

@@ -615,25 +615,38 @@ impl TraceSampler {
 
 /// The `--obs-dump` schema tag. v2 added the optional `timeline`
 /// section (windowed rollups + health transitions + SLO burn events,
-/// present when the run collected with `--collect-ms`).
-pub const DUMP_SCHEMA: &str = "celeste-obs-dump-v2";
+/// present when the run collected with `--collect-ms`). v3 added the
+/// optional `control` section: the control plane's decision log
+/// (every rebalance and scale event with its trigger measurement),
+/// present when the run passed `--rebalance`.
+pub const DUMP_SCHEMA: &str = "celeste-obs-dump-v3";
 
 /// Write the observability dump `serve-bench --obs-dump` produces: the
 /// front end's merged metrics snapshot, each shard server's scraped
-/// snapshot, the sampled trace records, and — when a collector ran —
-/// the `timeline` section.
+/// snapshot, the sampled trace records, and — when a collector or a
+/// controller ran — the `timeline` and `control` sections.
 pub fn write_dump(
     path: &str,
     metrics: &Snapshot,
     servers: &[Snapshot],
     traces: &[TraceRecord],
     timeline: Option<&Collector>,
+    control: Option<&crate::serve::control::DecisionLog>,
 ) -> std::io::Result<()> {
     let mut obj = BTreeMap::new();
     obj.insert("schema".to_string(), Value::Str(DUMP_SCHEMA.to_string()));
     obj.insert("metrics".to_string(), metrics.to_json());
     if let Some(c) = timeline {
         obj.insert("timeline".to_string(), c.to_json());
+    }
+    if let Some(log) = control {
+        let mut c = BTreeMap::new();
+        let decisions = crate::jsonlite::parse(&log.to_json())
+            .unwrap_or(Value::Arr(Vec::new()));
+        c.insert("decisions".to_string(), decisions);
+        c.insert("rebalances".to_string(), Value::Num(log.rebalances() as f64));
+        c.insert("scale_events".to_string(), Value::Num(log.scale_events() as f64));
+        obj.insert("control".to_string(), Value::Obj(c));
     }
     obj.insert(
         "servers".to_string(),

@@ -98,6 +98,21 @@ impl QueryClass {
             QueryClass::CrossMatch => "xmatch",
         }
     }
+
+    /// Relative execution cost of this class, 0 = cheapest. The shed
+    /// order under overload keys off this (see
+    /// [`crate::serve::engine::admit_fraction`]): a cone probe touches
+    /// one grid neighborhood, a box scans a bounded region, brightest-N
+    /// walks every shard for its top-k, and a cross-match runs the
+    /// uncertainty-weighted candidate search — the most expensive.
+    pub fn cost_rank(self) -> usize {
+        match self {
+            QueryClass::Cone => 0,
+            QueryClass::Box => 1,
+            QueryClass::Brightest => 2,
+            QueryClass::CrossMatch => 3,
+        }
+    }
 }
 
 impl Query {

@@ -16,6 +16,16 @@
 //!   every path — under sustained overload no request is starved the
 //!   way a newest-first (LIFO) pop would starve the queue head.
 //!
+//! Both queues are **priority-banded** ([`Bands`]): one FIFO per
+//! [`Priority`], drained highest band first and oldest-first within a
+//! band — on local drains *and* steals, so a stolen batch preserves the
+//! same service order the owner would have used. Pre-priority callers
+//! land in the `Normal` band and see exactly the old FIFO behavior.
+//! Under sustained high-priority load lower bands wait; bounding how
+//! much total work queues at all is admission's job (the graded
+//! [`Admission`](crate::serve::engine::Admission) sheds low-priority
+//! work first, so the bands drain, not starve).
+//!
 //! On top of either queue, workers drain up to `batch` jobs per wake-up
 //! and execute them through [`execute_batch`], which answers same-shard
 //! queries in one pass over the shard list (one store/epoch load and one
@@ -45,6 +55,7 @@ use std::time::{Duration, Instant};
 
 use crate::prng::Rng;
 
+use super::engine::{Priority, N_PRIORITIES};
 use super::query::{Query, QueryResult};
 
 /// Which request scheduler the worker pool runs on.
@@ -101,12 +112,60 @@ impl SchedConfig {
     }
 }
 
-/// One queued request: the query, its enqueue time (queue-entry → reply
-/// latency accounting), and the optional closed-loop reply channel.
+/// One queued request: the query, its scheduling priority (picks the
+/// band), its enqueue time (queue-entry → reply latency accounting),
+/// and the optional closed-loop reply channel.
 pub(crate) struct Job {
     pub query: Query,
+    pub priority: Priority,
     pub enqueued: Instant,
     pub reply: Option<mpsc::Sender<QueryResult>>,
+}
+
+/// Priority-banded job queue: one FIFO per [`Priority`], drained
+/// highest band first, oldest-first within a band. Shared by both
+/// schedulers so the drain order is a property of the queue, not of
+/// which scheduler happens to hold it.
+pub(crate) struct Bands {
+    bands: [VecDeque<Job>; N_PRIORITIES],
+    len: usize,
+}
+
+impl Bands {
+    fn new() -> Bands {
+        Bands { bands: std::array::from_fn(|_| VecDeque::new()), len: 0 }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn push_back(&mut self, job: Job) {
+        self.bands[job.priority.index()].push_back(job);
+        self.len += 1;
+    }
+
+    /// Move up to `k` jobs into `out`: highest band first, FIFO within.
+    fn drain_into(&mut self, k: usize, out: &mut Vec<Job>) -> usize {
+        let mut moved = 0;
+        for band in self.bands.iter_mut().rev() {
+            while moved < k {
+                match band.pop_front() {
+                    Some(job) => {
+                        out.push(job);
+                        moved += 1;
+                    }
+                    None => break,
+                }
+            }
+        }
+        self.len -= moved;
+        moved
+    }
 }
 
 /// The queue between admission and the worker pool, in either flavor.
@@ -121,14 +180,14 @@ impl SchedQueue {
     pub fn new(kind: SchedKind, workers: usize, depth: usize) -> SchedQueue {
         match kind {
             SchedKind::Condvar => SchedQueue::Condvar(CondvarQueue {
-                state: Mutex::new(CondvarState { jobs: VecDeque::new(), shutdown: false }),
+                state: Mutex::new(CondvarState { jobs: Bands::new(), shutdown: false }),
                 not_empty: Condvar::new(),
                 pending: AtomicUsize::new(0),
                 accepted: AtomicU64::new(0),
                 depth,
             }),
             SchedKind::Steal => SchedQueue::Steal(StealQueue {
-                queues: (0..workers.max(1)).map(|_| Mutex::new(VecDeque::new())).collect(),
+                queues: (0..workers.max(1)).map(|_| Mutex::new(Bands::new())).collect(),
                 pending: AtomicUsize::new(0),
                 queued: AtomicUsize::new(0),
                 accepted: AtomicU64::new(0),
@@ -216,7 +275,7 @@ impl SchedQueue {
 }
 
 struct CondvarState {
-    jobs: VecDeque<Job>,
+    jobs: Bands,
     shutdown: bool,
 }
 
@@ -250,7 +309,7 @@ impl CondvarQueue {
         loop {
             if !st.jobs.is_empty() {
                 let k = st.jobs.len().min(batch.max(1));
-                out.extend(st.jobs.drain(..k));
+                st.jobs.drain_into(k, out);
                 return Some(false);
             }
             if st.shutdown {
@@ -263,7 +322,7 @@ impl CondvarQueue {
 
 /// The work-stealing scheduler: one deque per worker.
 pub(crate) struct StealQueue {
-    queues: Vec<Mutex<VecDeque<Job>>>,
+    queues: Vec<Mutex<Bands>>,
     /// accepted jobs not yet executing (admission bound)
     pending: AtomicUsize,
     /// jobs physically sitting in deques (park / exit decisions only;
@@ -331,13 +390,14 @@ impl StealQueue {
         true
     }
 
-    /// Pop up to `batch` jobs from this worker's own deque, oldest
-    /// first — per-deque FIFO, so a continuously-refilled deque still
-    /// serves its head and no request waits unboundedly.
+    /// Pop up to `batch` jobs from this worker's own deque: highest
+    /// band first, oldest-first within a band, so a continuously-
+    /// refilled deque still serves each band's head and no same-band
+    /// request waits behind a newer one.
     fn drain_local(&self, worker: usize, batch: usize, out: &mut Vec<Job>) -> usize {
         let mut q = self.queues[worker].lock().unwrap();
         let k = q.len().min(batch);
-        out.extend(q.drain(..k));
+        q.drain_into(k, out);
         drop(q);
         if k > 0 {
             self.queued.fetch_sub(k, Ordering::SeqCst);
@@ -346,8 +406,9 @@ impl StealQueue {
     }
 
     /// Steal from a randomized victim: up to half the victim's backlog
-    /// (capped at `batch`), oldest first, so a straggler's queue head
-    /// is exactly what the fleet drains for it.
+    /// (capped at `batch`), in the victim's own drain order (highest
+    /// band first, oldest within), so a straggler's queue head is
+    /// exactly what the fleet drains for it.
     fn steal(&self, worker: usize, batch: usize, rng: &mut Rng, out: &mut Vec<Job>) -> usize {
         let n = self.queues.len();
         if n <= 1 {
@@ -361,9 +422,7 @@ impl StealQueue {
             }
             let mut q = self.queues[v].lock().unwrap();
             let k = q.len().div_ceil(2).min(batch);
-            for _ in 0..k {
-                out.push(q.pop_front().expect("len-checked steal"));
-            }
+            q.drain_into(k, out);
             drop(q);
             if k > 0 {
                 self.queued.fetch_sub(k, Ordering::SeqCst);
@@ -429,11 +488,25 @@ mod tests {
     use crate::serve::query::SourceFilter;
 
     fn job(n: usize) -> Job {
+        job_at(n, Priority::Normal)
+    }
+
+    fn job_at(n: usize, priority: Priority) -> Job {
         Job {
             query: Query::BrightestN { n, filter: SourceFilter::Any },
+            priority,
             enqueued: Instant::now(),
             reply: None,
         }
+    }
+
+    fn drained_ns(out: &[Job]) -> Vec<usize> {
+        out.iter()
+            .map(|j| match j.query {
+                Query::BrightestN { n, .. } => n,
+                _ => unreachable!(),
+            })
+            .collect()
     }
 
     #[test]
@@ -537,5 +610,65 @@ mod tests {
         assert_eq!(q.pending(), 10);
         q.begin_execute(out.len());
         assert_eq!(q.pending(), 6);
+    }
+
+    /// Both schedulers drain highest priority band first, FIFO within a
+    /// band — the drain-order half of the priority-class contract (the
+    /// shed-order half lives in the graded `Admission` tests).
+    #[test]
+    fn drain_order_is_priority_banded_fifo() {
+        for kind in [SchedKind::Condvar, SchedKind::Steal] {
+            // single worker so the steal spray lands on one deque
+            let q = SchedQueue::new(kind, 1, 1024);
+            let arrivals = [
+                (0, Priority::Low),
+                (1, Priority::Normal),
+                (2, Priority::High),
+                (3, Priority::Normal),
+                (4, Priority::High),
+                (5, Priority::Low),
+            ];
+            for (n, p) in arrivals {
+                assert!(q.try_push(job_at(n, p)));
+            }
+            let mut rng = Rng::new(5);
+            let mut out = Vec::new();
+            q.next_batch(0, 16, &mut rng, &mut out).unwrap();
+            assert_eq!(
+                drained_ns(&out),
+                vec![2, 4, 1, 3, 0, 5],
+                "{kind:?}: high first, then normal, then low; FIFO within each"
+            );
+            q.begin_execute(out.len());
+        }
+    }
+
+    /// A stolen batch preserves the victim's drain order: the thief
+    /// takes the high-priority head, not the low-priority tail.
+    #[test]
+    fn steals_respect_priority_order() {
+        let q = SchedQueue::new(SchedKind::Steal, 2, 1024);
+        // round-robin spray: jobs 0, 2 land on deque 0; 1, 3 on deque 1
+        for (n, p) in [
+            (0, Priority::Low),
+            (1, Priority::Low),
+            (2, Priority::High),
+            (3, Priority::High),
+        ] {
+            assert!(q.try_push(job_at(n, p)));
+        }
+        let mut rng = Rng::new(11);
+        let mut out = Vec::new();
+        // drain worker 0's own deque first so its next call must steal
+        let stolen = q.next_batch(0, 8, &mut rng, &mut out).unwrap();
+        assert!(!stolen);
+        assert_eq!(drained_ns(&out), vec![2, 0], "own deque: high before low");
+        q.begin_execute(out.len());
+        out.clear();
+        // steal-half from deque 1 takes its high-priority head
+        let stolen = q.next_batch(0, 1, &mut rng, &mut out).unwrap();
+        assert!(stolen);
+        assert_eq!(drained_ns(&out), vec![3], "steal takes the high-priority head");
+        q.begin_execute(out.len());
     }
 }

@@ -39,6 +39,7 @@ use std::time::Instant;
 use crate::metrics::Stats;
 use crate::prng::Rng;
 
+use super::engine::Priority;
 use super::ingest::{EpochStore, StoreSource, VersionedStore};
 use super::query::{Query, QueryResult, N_QUERY_CLASSES, QUERY_CLASSES};
 use super::sched::{execute_batch, Job, SchedConfig, SchedQueue};
@@ -237,8 +238,13 @@ impl Server {
         self.shared.source.view()
     }
 
-    fn submit(&self, query: Query, reply: Option<mpsc::Sender<QueryResult>>) -> bool {
-        let job = Job { query, enqueued: Instant::now(), reply };
+    fn submit(
+        &self,
+        query: Query,
+        priority: Priority,
+        reply: Option<mpsc::Sender<QueryResult>>,
+    ) -> bool {
+        let job = Job { query, priority, enqueued: Instant::now(), reply };
         // acceptance is counted by the queue itself, under the same
         // lock that makes the job visible to workers (so a racing
         // shutdown's report can never under-count accepted work)
@@ -252,13 +258,24 @@ impl Server {
 
     /// Open-loop submission (fire and forget). Returns false if shed.
     pub fn try_submit(&self, query: Query) -> bool {
-        self.submit(query, None)
+        self.submit(query, Priority::Normal, None)
+    }
+
+    /// Open-loop submission at an explicit scheduling priority: the job
+    /// lands in the matching queue band (see [`crate::serve::sched`]).
+    pub fn try_submit_with(&self, query: Query, priority: Priority) -> bool {
+        self.submit(query, priority, None)
     }
 
     /// Closed-loop call: submit and wait for the result. `None` = shed.
     pub fn call(&self, query: Query) -> Option<QueryResult> {
+        self.call_with(query, Priority::Normal)
+    }
+
+    /// Closed-loop call at an explicit scheduling priority.
+    pub fn call_with(&self, query: Query, priority: Priority) -> Option<QueryResult> {
         let (tx, rx) = mpsc::channel();
-        if !self.submit(query, Some(tx)) {
+        if !self.submit(query, priority, Some(tx)) {
             return None;
         }
         rx.recv().ok()

@@ -645,6 +645,104 @@ fn tcp_collector_scrapes_live_servers_and_conserves() {
     }
 }
 
+/// Satellite acceptance (tcp tier): a cancelled hedge stops consuming
+/// server-side work and is counted. The in-order frame pipe makes the
+/// probe exact — the Cancel is written before the loser's Execute, so
+/// the server drops the batch before any shard runs:
+/// `stage_shard_execute` counts only the real executions and
+/// `hedge_cancels` counts the drop.
+#[test]
+fn tcp_cancelled_hedge_consumes_no_server_work_and_is_counted() {
+    let store = test_store(300, 4, 19);
+    let server = ShardServer::bind(Arc::clone(&store), "127.0.0.1:0").expect("bind");
+    let addr = server.local_addr();
+    let _handle = server.spawn();
+    let conn = NetConn::new(addr.to_string());
+    let q = Query::BrightestN { n: 3, filter: SourceFilter::Any };
+    // three real executions: the baseline server-side work
+    for i in 0..3 {
+        conn.execute(vec![(0, vec![q.clone()])], 0, None)
+            .unwrap_or_else(|e| panic!("warm execute {i}: {e}"));
+    }
+    // the hedge race resolved: the winner's reply landed elsewhere, so
+    // the loser (trace 42) is cancelled before its Execute is sent
+    conn.cancel(42);
+    let (replies, _, _) = conn
+        .execute_traced(vec![(0, vec![q.clone()]), (2, vec![q.clone()])], 0, 42, None)
+        .expect("a cancelled batch still answers — the reply is discarded, not errored");
+    assert_eq!(replies.len(), 2, "the drop's reply mirrors the request shape");
+    let snap = conn.scrape(None).expect("scrape");
+    assert_eq!(snap.counter("hedge_cancels"), 1, "the drop is counted");
+    assert_eq!(
+        snap.histograms["stage_shard_execute"].n,
+        3,
+        "the cancelled batch consumed zero shard-execution work"
+    );
+    // cancellation is one-shot: the same trace id executes normally next
+    let (replies, _, _) = conn
+        .execute_traced(vec![(0, vec![q.clone()])], 0, 42, None)
+        .expect("post-cancel execute");
+    assert_eq!(replies[0][0], execute_on_shard(&store.shards[0], &q));
+    let snap = conn.scrape(None).expect("scrape");
+    assert_eq!(snap.counter("hedge_cancels"), 1, "no double count");
+    assert_eq!(snap.histograms["stage_shard_execute"].n, 4, "the reused id ran for real");
+}
+
+/// Tentpole acceptance (tcp tier): the control plane swaps the routing
+/// placement live. Every server loads the full catalog, so migration
+/// is a pure routing change — instant, byte-parity preserved, counted
+/// in `net_migrations` — and after the swap new work concentrates on
+/// the target server while the drained server sees none.
+#[test]
+fn tcp_rebalance_swaps_routing_live_with_parity() {
+    use celeste::serve::dist::Placement;
+    let store = test_store(600, 16, 83);
+    let (w, h) = (store.width, store.height);
+    let (_handles, addrs) = spawn_servers(&store, 2);
+    let net = NetRouterEngine::connect(Arc::clone(&store), &addrs, 1).expect("connect");
+    let mut rng = Rng::new(9);
+    for i in 0..20usize {
+        let q = fuzz_query(&mut rng, w, h, i);
+        let resp = net.call(Request::new(q));
+        assert_eq!(resp.trace.outcome, Outcome::Served, "warm query {i}");
+    }
+    let loads0 = net.node_loads();
+    assert!(loads0.iter().all(|l| l.alive), "both servers live");
+    assert!(loads0.iter().map(|l| l.served).sum::<u64>() > 0, "warm traffic was counted");
+    assert!(net.served_per_shard().iter().sum::<u64>() > 0, "per-shard demand was counted");
+    // drain whichever server hosts fewer shards onto the other one
+    let p0 = net.placement();
+    let counts = p0.counts_per_node();
+    let dst = if counts[0] >= counts[1] { 0usize } else { 1 };
+    let src = 1 - dst;
+    assert!(counts[src] > 0, "rendezvous left server {src} empty — pick different shards");
+    let target = Placement {
+        n_nodes: 2,
+        replicas: 1,
+        shard_nodes: vec![vec![dst]; store.shards.len()],
+    };
+    let moved = net.rebalance_to(target).expect("shape matches");
+    assert_eq!(moved, counts[src] as u64, "exactly the drained server's shards moved");
+    assert_eq!(net.migrations(), moved);
+    // parity holds across the swap and the drained server goes quiet
+    let src_before = net.node_loads()[src].served;
+    for i in 20..60usize {
+        let q = fuzz_query(&mut rng, w, h, i);
+        let want = execute(&store, &q);
+        let resp = net.call(Request::new(q.clone()));
+        assert_eq!(resp.trace.outcome, Outcome::Served, "post-swap query {i}");
+        assert_eq!(resp.result.expect("served"), want, "post-swap query {i}: {q:?}");
+    }
+    let loads1 = net.node_loads();
+    assert_eq!(loads1[src].served, src_before, "all post-swap work routes to server {dst}");
+    assert!(loads1[dst].served > loads0[dst].served, "the target server absorbed it");
+    // a mis-shapen target is refused, not applied
+    assert!(net.rebalance_to(Placement::rendezvous(store.shards.len(), 3, 1)).is_err());
+    let m: std::collections::BTreeMap<String, f64> = net.metrics().into_iter().collect();
+    assert_eq!(m["net_migrations"], moved as f64);
+    assert_eq!(m["net_failed"], 0.0, "the swap failed nothing");
+}
+
 /// The `ShardClient` trait adapter: a real socket standing where the
 /// simulated `LocalShard`/`FabricShard` replicas do, returning the
 /// same replies `execute_on_shard` computes.
